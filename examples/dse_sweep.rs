@@ -1,0 +1,65 @@
+//! Design-space exploration: the paper's three questions answered in one
+//! sweep — is the program CiM-favorable, which cache level should host the
+//! CiM arrays, and which technology wins?  Exercises the coordinator's
+//! worker pool + PJRT batching on 17 benchmarks × 12 configurations.
+//!
+//! Run: `cargo run --release --example dse_sweep`
+
+use eva_cim::analyzer::LocalityRule;
+use eva_cim::config::{CimLevels, SystemConfig, Technology};
+use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
+use eva_cim::runtime::{best_backend, PjrtRuntime};
+use eva_cim::util::TextTable;
+use eva_cim::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let mut configs = Vec::new();
+    for preset in ["c1", "c3"] {
+        for tech in Technology::all() {
+            for cim in [CimLevels::L1Only, CimLevels::Both] {
+                let mut c = SystemConfig::preset(preset).unwrap()
+                    .with_tech(tech)
+                    .with_cim(cim);
+                c.name = format!("{preset}-{}-{}", tech.name(), cim.name());
+                configs.push(c);
+            }
+        }
+    }
+    let benches: Vec<&str> = workloads::NAMES.to_vec();
+    let points = cross(&benches, &configs, LocalityRule::AnyCache);
+    println!("sweeping {} design points...", points.len());
+
+    let mut backend = best_backend(&PjrtRuntime::default_dir());
+    let t0 = std::time::Instant::now();
+    let rows = Coordinator::new(SweepOptions::default())
+        .run_sweep(&points, backend.as_mut())?;
+    println!(
+        "{} points in {:.1}s on backend '{}'",
+        rows.len(),
+        t0.elapsed().as_secs_f64(),
+        backend.name()
+    );
+
+    // best configuration per benchmark (max energy improvement)
+    let mut t = TextTable::new(
+        "best design point per benchmark",
+        &["bench", "config", "E-impr", "speedup", "MACR"],
+    );
+    for b in &benches {
+        if let Some(best) = rows
+            .iter()
+            .filter(|r| r.bench == *b)
+            .max_by(|x, y| x.result.improvement.total_cmp(&y.result.improvement))
+        {
+            t.row(vec![
+                workloads::display_name(b).into(),
+                best.config_name.clone(),
+                format!("{:.2}", best.result.improvement),
+                format!("{:.2}", best.result.speedup),
+                format!("{:.0}%", best.macr.ratio() * 100.0),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}

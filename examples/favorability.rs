@@ -1,0 +1,48 @@
+//! CiM-favorability analysis (paper §VI-C): which programs benefit, and
+//! why — MACR vs energy improvement, with the L1/L2 locality breakdown and
+//! the Jain-et-al. [23] baseline classifier for comparison.
+//!
+//! Run: `cargo run --release --example favorability`
+
+use eva_cim::analyzer::{analyze, baseline, LocalityRule};
+use eva_cim::config::SystemConfig;
+use eva_cim::profiler::{evaluate_native, ProfileInputs};
+use eva_cim::reshape::reshape;
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::util::TextTable;
+use eva_cim::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let mut t = TextTable::new(
+        "CiM favorability (config c1, SRAM)",
+        &["bench", "MACR", "L1 share", "Jain CC%", "E-impr", "verdict"],
+    );
+    for bench in workloads::NAMES {
+        let prog = workloads::build(bench, 0, 42).unwrap();
+        let trace = simulate(&prog, &cfg, Limits::default())?;
+        let an = analyze(&trace, &cfg, LocalityRule::AnyCache);
+        let jain = baseline::classify(&trace.ciq);
+        let reshaped = reshape(&trace, &an.selection, &cfg);
+        let res = evaluate_native(&ProfileInputs::new(&cfg, &reshaped));
+        let verdict = if an.macr.ratio() > 0.5 && res.improvement > 1.15 {
+            "CiM-favorable"
+        } else if res.improvement < 1.05 {
+            "CiM-unfavorable"
+        } else {
+            "marginal"
+        };
+        t.row(vec![
+            workloads::display_name(bench).into(),
+            format!("{:.1}%", an.macr.ratio() * 100.0),
+            format!("{:.1}%", an.macr.l1_share() * 100.0),
+            format!("{:.1}%", jain.cim_fraction() * 100.0),
+            format!("{:.2}", res.improvement),
+            verdict.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("note: a high MACR (>50%) marks a program as CiM-favorable —");
+    println!("data-intensive alone is not sufficient (paper finding ii).");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""AOT compile path: lower the L2 graph to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; Rust (`rust/src/runtime/`) loads the text,
+compiles it on the PJRT CPU client, and executes it on the request path —
+Python never runs at evaluation time.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import constants as K
+from .kernels.cim_energy import energy_latency
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points(batch: int):
+    """(name, fn, example-arg specs) for every artifact we ship."""
+    cfg = _spec(batch, K.NCFG)
+    tech = _spec(K.NTECH, K.NTECH_PARAMS)
+    unit = _spec(K.NC)
+    group = _spec(K.NC, K.NCOMP)
+    counters = _spec(batch, K.NC)
+    perf = _spec(batch, K.NPERF)
+
+    def energy_model(c, t):
+        return energy_latency(c, t)
+
+    return [
+        ("energy_model", energy_model, (cfg, tech)),
+        ("profiler", model.evaluate_system,
+         (cfg, cfg, tech, unit, group, counters, counters, perf)),
+        ("sensitivity", model.sensitivity,
+         (cfg, cfg, tech, unit, group, counters, counters, perf)),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--batch", type=int, default=K.AOT_BATCH,
+                    help="design-point batch size baked into the artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"batch": args.batch, "ncfg": K.NCFG, "nops": K.NOPS,
+                "nc": K.NC, "ncomp": K.NCOMP, "nperf": K.NPERF,
+                "ntech": K.NTECH, "ntech_params": K.NTECH_PARAMS,
+                "counter_names": K.COUNTER_NAMES, "comp_names": K.COMP_NAMES,
+                "op_names": K.OP_NAMES, "artifacts": {}}
+
+    for name, fn, specs in entry_points(args.batch):
+        # keep_unused pins the full parameter list into the HLO signature so
+        # the Rust runtime can pass a uniform argument set to every artifact
+        # (jit would otherwise DCE e.g. counters_base out of `sensitivity`).
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(jax.tree_util.tree_leaves(
+            jax.eval_shape(fn, *specs)))
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "num_inputs": len(specs),
+            "num_outputs": n_out,
+            "input_shapes": [list(s.shape) for s in specs],
+        }
+        print(f"wrote {path}: {len(text)} chars, "
+              f"{len(specs)} inputs -> {n_out} outputs")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for Eva-CiM's compute hot-spots (design-space
+# evaluation).  See constants.py for the shared schema and ref.py for the
+# pure-jnp correctness oracles.

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: batched DESTINY-lite per-op energy/latency model.
+
+Grid: design-point batch tiled in blocks of ``BLOCK_B`` rows; each grid step
+holds one ``[BLOCK_B, NCFG]`` config tile plus the full ``[NTECH, 4*NOPS]``
+anchor table in VMEM and emits ``[BLOCK_B, NOPS]`` energy and latency tiles.
+
+VMEM footprint per step (f32):
+    cfg   128 × 6   = 3.0 kB
+    tech    2 × 24  = 0.2 kB
+    out   2 × 128×6 = 6.0 kB      → ≈ 9.2 kB  (target ≤ 16 kB, see DESIGN §8)
+
+All math is element-wise VPU work except the one-hot tech gather, which is
+expressed as a ``[BLOCK_B, NTECH] @ [NTECH, 4*NOPS]`` matmul so a real TPU
+would issue it to the MXU.  ``interpret=True`` everywhere: the CPU PJRT
+client cannot run Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import constants as K
+
+BLOCK_B = 128
+
+
+def _kernel(cfg_ref, tech_ref, energy_ref, lat_ref):
+    cfg = cfg_ref[...]          # [BLOCK_B, NCFG]
+    tech_table = tech_ref[...]  # [NTECH, 4*NOPS]
+    dtype = cfg.dtype
+
+    cap = cfg[:, K.CFG_CAPACITY]
+    assoc = cfg[:, K.CFG_ASSOC]
+    banks = cfg[:, K.CFG_BANKS]
+    tech = cfg[:, K.CFG_TECH]
+
+    # One-hot gather of per-tech anchors as a small matmul (MXU on real TPU).
+    iota = jax.lax.broadcasted_iota(dtype, (1, K.NTECH), 1)
+    onehot = (tech[:, None] == iota).astype(dtype)      # [B, NTECH]
+    params = onehot @ tech_table                        # [B, 4*NOPS]
+
+    e1 = params[:, K.TP_E_L1:K.TP_E_L1 + K.NOPS]
+    e2 = params[:, K.TP_E_L2:K.TP_E_L2 + K.NOPS]
+    l1 = params[:, K.TP_LAT_L1:K.TP_LAT_L1 + K.NOPS]
+    l2 = params[:, K.TP_LAT_L2:K.TP_LAT_L2 + K.NOPS]
+
+    ln4 = jnp.log(jnp.asarray(4.0, dtype))
+    ln2 = jnp.log(jnp.asarray(2.0, dtype))
+
+    cap_eff = cap * (K.ANCHOR_BANKS / jnp.maximum(banks, 1.0))
+    cap_n = jnp.log(cap_eff / K.ANCHOR_L1_CAP)[:, None]
+
+    b_e = (jnp.log(e2 / e1) - K.ASSOC_EXP * ln2) / ln4
+    assoc_f = jnp.exp(
+        K.ASSOC_EXP * jnp.log(jnp.maximum(assoc, 1.0) / K.ANCHOR_ASSOC)
+    )[:, None]
+    energy_ref[...] = e1 * jnp.exp(b_e * cap_n) * assoc_f
+
+    b_l = jnp.log(l2 / l1) / ln4
+    lat_ref[...] = l1 * jnp.exp(b_l * cap_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def energy_latency(cfg: jnp.ndarray, tech_table: jnp.ndarray,
+                   block_b: int = BLOCK_B):
+    """Pallas entry point matching :func:`ref.energy_latency_ref`.
+
+    ``cfg.shape[0]`` must be a multiple of ``block_b`` (the Rust coordinator
+    pads partial batches; tests use exact multiples or pad here).
+    """
+    b = cfg.shape[0]
+    if b % block_b:
+        pad = block_b - b % block_b
+        # pad rows with a harmless anchor config so log() stays finite
+        filler = jnp.broadcast_to(
+            jnp.asarray(
+                [K.ANCHOR_L1_CAP, K.ANCHOR_ASSOC, 64.0, K.ANCHOR_BANKS, 0.0, 1.0],
+                cfg.dtype,
+            ),
+            (pad, K.NCFG),
+        )
+        cfg = jnp.concatenate([cfg, filler], axis=0)
+    nb = cfg.shape[0] // block_b
+
+    energy, lat = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, K.NCFG), lambda i: (i, 0)),
+            pl.BlockSpec((K.NTECH, K.NTECH_PARAMS), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, K.NOPS), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, K.NOPS), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cfg.shape[0], K.NOPS), cfg.dtype),
+            jax.ShapeDtypeStruct((cfg.shape[0], K.NOPS), cfg.dtype),
+        ],
+        interpret=True,
+    )(cfg, tech_table)
+    return energy[:b], lat[:b]

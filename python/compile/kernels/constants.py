@@ -1,0 +1,167 @@
+"""Canonical constants shared by the L1 Pallas kernels, the L2 model graph,
+the pure-jnp reference oracle, and (by mirrored definition) the Rust side
+(`rust/src/energy/calib.rs`).
+
+Everything here is a *schema* plus the published Table III / Fig 11 anchors of
+the Eva-CiM paper.  Runtime calibration values (core event energies, DRAM
+energies, leakage) are passed into the AOT graph as inputs by the Rust
+coordinator, so nothing below needs to be retuned when calibrating Table VI.
+"""
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Operation axis (columns of the per-op energy/latency tables)
+# ---------------------------------------------------------------------------
+OP_READ = 0   # non-CiM read (regular cache access)
+OP_WRITE = 1  # non-CiM write
+OP_OR = 2     # CiM-OR
+OP_AND = 3    # CiM-AND
+OP_XOR = 4    # CiM-XOR
+OP_ADD = 5    # CiM-ADDW32 (word add in the sense-amp adder)
+NOPS = 6
+OP_NAMES = ["read", "write", "cim_or", "cim_and", "cim_xor", "cim_add"]
+
+# ---------------------------------------------------------------------------
+# Design-point configuration row (one cache level)
+# ---------------------------------------------------------------------------
+CFG_CAPACITY = 0  # bytes
+CFG_ASSOC = 1     # ways
+CFG_LINE = 2      # bytes
+CFG_BANKS = 3     # sub-banks (anchor configs use 4)
+CFG_TECH = 4      # 0 = SRAM, 1 = FeFET
+CFG_LEVEL = 5     # 1 = L1, 2 = L2 (metadata for grouping)
+NCFG = 6
+
+TECH_SRAM = 0
+TECH_FEFET = 1
+NTECH = 2
+TECH_NAMES = ["sram", "fefet"]
+
+# Anchor geometry of Table III: L1 = 64 kB / 4-way, L2 = 256 kB / 8-way.
+ANCHOR_L1_CAP = 64 * 1024.0
+ANCHOR_L2_CAP = 256 * 1024.0
+ANCHOR_ASSOC = 4.0
+ANCHOR_BANKS = 4.0
+ASSOC_EXP = 0.15  # associativity factor exponent: (assoc/4)^0.15
+# H-tree/bus transport multiplier for hierarchy accesses (CiM ops compute
+# in-array and skip it) — mirrored by rust/src/energy/calib.rs XBUS_FACTOR.
+XBUS_FACTOR = 4.0
+
+# ---------------------------------------------------------------------------
+# Technology parameter table: [NTECH, 4*NOPS] =
+#   [ E_L1(6) | E_L2(6) | LAT_L1(6) | LAT_L2(6) ]
+# Energies in pJ straight from Table III (write column interpolated — the
+# paper's table omits writes; we use read*1.15 for SRAM and the FeFET write
+# numbers consistent with [24]'s low-write-energy claim).
+# Latencies in cycles at 1 GHz from Fig 11: SRAM logic ops ≈ read, CiM-ADD
+# ≈ read + 4 cycles; FeFET ops are faster across the board.
+# ---------------------------------------------------------------------------
+TP_E_L1 = 0
+TP_E_L2 = NOPS
+TP_LAT_L1 = 2 * NOPS
+TP_LAT_L2 = 3 * NOPS
+NTECH_PARAMS = 4 * NOPS
+
+DEFAULT_TECH_TABLE = np.array(
+    [
+        # SRAM:      read   write  or     and    xor    add
+        [61.0, 70.0, 71.0, 72.0, 79.0, 79.0,          # E_L1 (pJ)
+         314.0, 360.0, 341.0, 344.0, 365.0, 365.0,    # E_L2 (pJ)
+         2.0, 2.0, 2.0, 2.0, 2.0, 6.0,                # LAT_L1 (cycles)
+         8.0, 8.0, 8.0, 8.0, 8.0, 12.0],              # LAT_L2 (cycles)
+        # FeFET
+        [34.0, 44.0, 35.0, 88.0, 105.0, 105.0,
+         70.0, 91.0, 72.0, 146.0, 205.0, 205.0,
+         1.0, 1.0, 1.0, 1.0, 1.0, 4.0,
+         5.0, 5.0, 5.0, 5.0, 5.0, 9.0],
+    ],
+    dtype=np.float32,
+)
+
+# ---------------------------------------------------------------------------
+# Performance-counter axis (rows the McPAT-lite profiler consumes).
+# Mirrored by rust/src/profiler/counters.rs — keep the order in sync.
+# ---------------------------------------------------------------------------
+COUNTER_NAMES = [
+    # core events (unit energy = static per-event pJ, index 0..21)
+    "fetch_insts", "decode_insts", "rename_ops",
+    "iq_reads", "iq_writes", "rob_reads", "rob_writes",
+    "int_rf_reads", "int_rf_writes", "fp_rf_reads", "fp_rf_writes",
+    "int_alu_ops", "int_mul_ops", "int_div_ops",
+    "fp_alu_ops", "fp_mul_ops", "fp_div_ops",
+    "branch_ops", "bpred_lookups", "bpred_mispredicts",
+    "lsq_reads", "lsq_writes",
+    # cache events (unit energy from the array model, index 22..33)
+    "l1i_hits", "l1i_misses",
+    "l1d_read_hits", "l1d_read_misses",
+    "l1d_write_hits", "l1d_write_misses",
+    "l2_read_hits", "l2_read_misses",
+    "l2_write_hits", "l2_write_misses",
+    "dram_reads", "dram_writes",
+    # CiM events (unit energy from the array model, index 34..41)
+    "cim_l1_or", "cim_l1_and", "cim_l1_xor", "cim_l1_add",
+    "cim_l2_or", "cim_l2_and", "cim_l2_xor", "cim_l2_add",
+    # time (unit energy = leakage pJ/cycle, index 42)
+    "cycles",
+]
+NC = len(COUNTER_NAMES)  # 43
+C_CORE_BEGIN, C_CORE_END = 0, 22          # [0, 22)
+C_CACHE_BEGIN, C_CACHE_END = 22, 34       # [22, 34)
+C_CIM_BEGIN, C_CIM_END = 34, 42           # [34, 42)
+C_CYCLES = 42
+
+# ---------------------------------------------------------------------------
+# Component axis (outputs of the aggregation kernel)
+# ---------------------------------------------------------------------------
+COMP_NAMES = ["core", "l1i", "l1d", "l2", "dram", "cim_l1", "cim_l2", "leak"]
+NCOMP = len(COMP_NAMES)
+COMP_CORE, COMP_L1I, COMP_L1D, COMP_L2, COMP_DRAM = 0, 1, 2, 3, 4
+COMP_CIM_L1, COMP_CIM_L2, COMP_LEAK = 5, 6, 7
+
+# counter index -> component index
+_COUNTER_COMP = (
+    [COMP_CORE] * 22
+    + [COMP_L1I] * 2
+    + [COMP_L1D] * 4
+    + [COMP_L2] * 4
+    + [COMP_DRAM] * 2
+    + [COMP_CIM_L1] * 4
+    + [COMP_CIM_L2] * 4
+    + [COMP_LEAK]
+)
+assert len(_COUNTER_COMP) == NC
+
+def group_matrix() -> np.ndarray:
+    """Static [NC, NCOMP] one-hot grouping matrix for the aggregation matmul."""
+    g = np.zeros((NC, NCOMP), dtype=np.float32)
+    for i, c in enumerate(_COUNTER_COMP):
+        g[i, c] = 1.0
+    return g
+
+# ---------------------------------------------------------------------------
+# Perf vector (inputs to the constant-CPI speedup model, §V-C2)
+# ---------------------------------------------------------------------------
+PERF_CYCLES_BASE = 0      # baseline (non-CiM) cycle count
+PERF_COMMITTED_BASE = 1   # baseline committed instruction count
+PERF_REMOVED = 2          # instructions removed from the CPU stream by offloading
+PERF_CIM_ADD_L1 = 3       # CiM-ADD ops executed in L1 (pay extra access cycles)
+PERF_CIM_ADD_L2 = 4       # CiM-ADD ops executed in L2
+PERF_CLOCK_GHZ = 5
+NPERF = 6
+
+# Default per-event core energies (pJ, 45 nm Cortex-A9 class) used by the
+# python tests; the Rust coordinator passes its calibrated values at runtime.
+DEFAULT_STATIC_UNIT = np.zeros(NC, dtype=np.float32)
+DEFAULT_STATIC_UNIT[:22] = np.array(
+    [50.0, 19.0, 25.0, 13.0, 15.0, 13.0, 15.0, 8.0, 10.0, 11.0, 14.0,
+     63.0, 155.0, 375.0, 113.0, 188.0, 500.0, 25.0, 9.0, 125.0, 19.0,
+     23.0],
+    dtype=np.float32,
+)
+DEFAULT_STATIC_UNIT[32] = 6000.0  # dram_reads
+DEFAULT_STATIC_UNIT[33] = 6500.0  # dram_writes
+DEFAULT_STATIC_UNIT[C_CYCLES] = 25.0  # leakage pJ/cycle (core + caches)
+
+# Batch size baked into the AOT artifacts; the Rust side pads partial batches.
+AOT_BATCH = 256

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: McPAT-lite counter→component energy aggregation.
+
+Computes ``comp[B, NCOMP] = (counters[B, NC] ⊙ unit[B, NC]) @ group[NC, NCOMP]``
+tiled over the design-point batch.  The reduction over the counter axis is a
+``[BLOCK_B, NC] × [NC, NCOMP]`` matmul — MXU work on a real TPU (NC=43 and
+NCOMP=8 would be padded to the 128-lane tile; at AOT_BATCH=256 the padding
+overhead is irrelevant next to the HBM→VMEM streaming of the counter tiles).
+
+VMEM per step (f32): 2 × 128×43 + 43×8 + 128×8 ≈ 48 kB — under the 64 kB
+budget of DESIGN §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import constants as K
+
+BLOCK_B = 128
+
+
+def _kernel(counters_ref, unit_ref, group_ref, out_ref):
+    weighted = counters_ref[...] * unit_ref[...]        # [BLOCK_B, NC]
+    out_ref[...] = weighted @ group_ref[...]            # [BLOCK_B, NCOMP]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def profile_agg(counters: jnp.ndarray, unit_energy: jnp.ndarray,
+                group: jnp.ndarray, block_b: int = BLOCK_B) -> jnp.ndarray:
+    """Pallas entry point matching :func:`ref.profile_agg_ref`."""
+    b = counters.shape[0]
+    if b % block_b:
+        pad = block_b - b % block_b
+        counters = jnp.pad(counters, ((0, pad), (0, 0)))
+        unit_energy = jnp.pad(unit_energy, ((0, pad), (0, 0)))
+    nb = counters.shape[0] // block_b
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, K.NC), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, K.NC), lambda i: (i, 0)),
+            pl.BlockSpec((K.NC, K.NCOMP), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, K.NCOMP), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((counters.shape[0], K.NCOMP),
+                                       counters.dtype),
+        interpret=True,
+    )(counters, unit_energy, group)
+    return out[:b]

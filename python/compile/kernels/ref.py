@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *correctness ground truth*: `cim_energy.py` and
+`profile_agg.py` must agree with the functions here to float32 tolerance
+(checked by pytest + hypothesis in python/tests/).  The Rust native model
+(`rust/src/energy/array.rs`) mirrors the same math.
+"""
+
+import jax.numpy as jnp
+
+from . import constants as K
+
+
+def energy_latency_ref(cfg: jnp.ndarray, tech_table: jnp.ndarray):
+    """Analytic DESTINY-lite array model, batched over design points.
+
+    Power-law interpolation anchored at the published Table III points:
+
+        E(cap, assoc) = E_L1 * (cap_eff / 64kB)^b * (assoc / 4)^0.15
+        b = (ln(E_L2 / E_L1) - 0.15 * ln 2) / ln 4
+
+    where ``cap_eff = cap * 4 / banks`` normalizes to the anchor's 4 sub-banks
+    (a bank twice as big has longer bitlines → more energy) and the
+    ``0.15 * ln 2`` term removes the associativity difference between the two
+    anchors (4-way L1, 8-way L2).  Latency uses the same law without the
+    associativity factor (Fig 11 anchors).
+
+    Args:
+      cfg:        f32[B, NCFG] design points (see constants.CFG_*).
+      tech_table: f32[NTECH, 4*NOPS] anchor table (constants.DEFAULT_TECH_TABLE).
+
+    Returns:
+      (energy, latency): f32[B, NOPS] each — pJ per op, cycles per op.
+    """
+    cap = cfg[:, K.CFG_CAPACITY]
+    assoc = cfg[:, K.CFG_ASSOC]
+    banks = cfg[:, K.CFG_BANKS]
+    tech = cfg[:, K.CFG_TECH]
+
+    # one-hot select of the per-tech anchor rows (MXU-shaped in the kernel)
+    onehot = (tech[:, None] == jnp.arange(K.NTECH, dtype=cfg.dtype)[None, :])
+    params = onehot.astype(cfg.dtype) @ tech_table  # [B, 4*NOPS]
+
+    e1 = params[:, K.TP_E_L1:K.TP_E_L1 + K.NOPS]
+    e2 = params[:, K.TP_E_L2:K.TP_E_L2 + K.NOPS]
+    l1 = params[:, K.TP_LAT_L1:K.TP_LAT_L1 + K.NOPS]
+    l2 = params[:, K.TP_LAT_L2:K.TP_LAT_L2 + K.NOPS]
+
+    ln4 = jnp.log(jnp.asarray(4.0, cfg.dtype))
+    ln2 = jnp.log(jnp.asarray(2.0, cfg.dtype))
+
+    cap_eff = cap * (K.ANCHOR_BANKS / jnp.maximum(banks, 1.0))
+    cap_n = jnp.log(cap_eff / K.ANCHOR_L1_CAP)[:, None]  # [B, 1]
+
+    b_e = (jnp.log(e2 / e1) - K.ASSOC_EXP * ln2) / ln4   # [B, NOPS]
+    assoc_f = jnp.exp(
+        K.ASSOC_EXP * jnp.log(jnp.maximum(assoc, 1.0) / K.ANCHOR_ASSOC)
+    )[:, None]
+    energy = e1 * jnp.exp(b_e * cap_n) * assoc_f
+
+    b_l = jnp.log(l2 / l1) / ln4
+    latency = l1 * jnp.exp(b_l * cap_n)
+
+    return energy, latency
+
+
+def profile_agg_ref(counters: jnp.ndarray, unit_energy: jnp.ndarray,
+                    group: jnp.ndarray) -> jnp.ndarray:
+    """McPAT-lite aggregation: component energy = (counters ⊙ unit) @ group.
+
+    Args:
+      counters:    f32[B, NC] performance-counter values.
+      unit_energy: f32[B, NC] pJ per counter event.
+      group:       f32[NC, NCOMP] one-hot counter→component matrix.
+
+    Returns:
+      f32[B, NCOMP] component energies (pJ).
+    """
+    return (counters * unit_energy) @ group

@@ -1,0 +1,166 @@
+"""L2 JAX model: the full Eva-CiM profiling graph (build-time only).
+
+Composes the two L1 Pallas kernels into the system-level evaluation the
+paper's modified McPAT performs:
+
+    per-op array energies/latencies  (cim_energy kernel, Table III / Fig 11)
+      → per-counter unit energies    (hierarchy assembly, §V-C1)
+      → component energies           (profile_agg kernel, Fig 10)
+      → totals, energy improvement, constant-CPI speedup (§V-C2),
+        processor/cache improvement breakdown (Table VI rows 4–5)
+
+Everything is batched over B design points so the Rust coordinator can
+evaluate a whole design-space sweep with a handful of PJRT executions.
+
+`sensitivity` additionally exports the gradient of mean CiM-system energy
+w.r.t. the (continuous) cache configuration columns for DSE guidance; it
+uses the pure-jnp reference model because pallas_call(interpret=True) is
+not differentiable — the math is identical (tested in python/tests/).
+
+NOTE: the counter→component `group` matrix is a *runtime argument*, not a
+captured constant — HLO text printing elides constants larger than a few
+elements (`constant({...})`), which the text parser reads back as zeros and
+would silently break the Rust AOT path (caught by test_aot.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import constants as K
+from .kernels import ref
+from .kernels.cim_energy import energy_latency
+from .kernels.profile_agg import profile_agg
+
+
+def _unit_energy(static_unit, e_l1, e_l2):
+    """Assemble the [B, NC] per-counter unit-energy matrix.
+
+    Core events (0..21) and DRAM/leakage come from the calibrated static
+    vector; cache and CiM columns come from the array model.  Unit energies
+    are *per access to that structure*: hierarchy effects (an L1 miss causing
+    an L2 access causing a DRAM access) are carried by the counters, which
+    the simulator increments at every level the request touches.
+    """
+    b = e_l1.shape[0]
+    stat = jnp.broadcast_to(static_unit[None, :], (b, K.NC))
+
+    # hierarchy accesses pay the H-tree/bus transport on top of the array
+    # access; CiM ops do not (they compute in-array) — constants.XBUS_FACTOR
+    rd1 = e_l1[:, K.OP_READ] * K.XBUS_FACTOR
+    wr1 = e_l1[:, K.OP_WRITE] * K.XBUS_FACTOR
+    rd2 = e_l2[:, K.OP_READ] * K.XBUS_FACTOR
+    wr2 = e_l2[:, K.OP_WRITE] * K.XBUS_FACTOR
+    fill1 = rd1 + wr1  # miss: tag probe + line refill write
+    fill2 = rd2 + wr2
+
+    dyn_cache = jnp.stack(
+        [
+            rd1, fill1,          # l1i hit / miss
+            rd1, fill1,          # l1d read hit / miss
+            wr1, fill1,          # l1d write hit / miss
+            rd2, fill2,          # l2 read hit / miss
+            wr2, fill2,          # l2 write hit / miss
+        ],
+        axis=1,
+    )  # [B, 10]
+    dyn_cim = jnp.concatenate(
+        [e_l1[:, K.OP_OR:K.OP_ADD + 1], e_l2[:, K.OP_OR:K.OP_ADD + 1]], axis=1
+    )  # [B, 8]
+
+    return jnp.concatenate(
+        [
+            stat[:, :K.C_CACHE_BEGIN],          # core events (22 cols)
+            dyn_cache,                          # l1i/l1d/l2 (10 cols)
+            stat[:, 32:34],                     # dram read/write
+            dyn_cim,                            # CiM ops (8 cols)
+            stat[:, K.C_CYCLES:K.C_CYCLES + 1], # leakage per cycle
+        ],
+        axis=1,
+    )
+
+
+def _evaluate(cfg_l1, cfg_l2, tech_table, static_unit, group,
+              counters_base, counters_cim, perf,
+              energy_fn, agg_fn):
+    e_l1, lat_l1 = energy_fn(cfg_l1, tech_table)
+    e_l2, lat_l2 = energy_fn(cfg_l2, tech_table)
+
+    unit = _unit_energy(static_unit, e_l1, e_l2)
+    comps_base = agg_fn(counters_base, unit, group)    # [B, NCOMP]
+    comps_cim = agg_fn(counters_cim, unit, group)
+
+    # the paper's "total energy including both host CPU and cache" (§VI-B)
+    # excludes main memory: DRAM traffic is reported but not part of the
+    # improvement ratio.
+    total_base = comps_base.sum(axis=1) - comps_base[:, K.COMP_DRAM]
+    total_cim = comps_cim.sum(axis=1) - comps_cim[:, K.COMP_DRAM]
+    eps = jnp.asarray(1e-9, total_cim.dtype)
+    improvement = total_base / jnp.maximum(total_cim, eps)
+
+    # ---- constant-CPI speedup model (§V-C2) -------------------------------
+    cycles = perf[:, K.PERF_CYCLES_BASE]
+    committed = jnp.maximum(perf[:, K.PERF_COMMITTED_BASE], 1.0)
+    removed = perf[:, K.PERF_REMOVED]
+    add_l1 = perf[:, K.PERF_CIM_ADD_L1]
+    add_l2 = perf[:, K.PERF_CIM_ADD_L2]
+    cpi = cycles / committed
+    extra_l1 = jnp.maximum(lat_l1[:, K.OP_ADD] - lat_l1[:, K.OP_READ], 0.0)
+    extra_l2 = jnp.maximum(lat_l2[:, K.OP_ADD] - lat_l2[:, K.OP_READ], 0.0)
+    cycles_cim = cycles - removed * cpi + add_l1 * extra_l1 + add_l2 * extra_l2
+    speedup = cycles / jnp.maximum(cycles_cim, 1.0)
+
+    # ---- processor vs cache improvement breakdown (Table VI) --------------
+    proc_base = comps_base[:, K.COMP_CORE] + comps_base[:, K.COMP_LEAK]
+    proc_cim = comps_cim[:, K.COMP_CORE] + comps_cim[:, K.COMP_LEAK]
+    delta_total = total_base - total_cim
+    tiny = jnp.abs(delta_total) < eps
+    safe = jnp.where(tiny, 1.0, delta_total)
+    ratio_proc = jnp.where(tiny, 0.0, (proc_base - proc_cim) / safe)
+    ratio_cache = jnp.where(tiny, 0.0, 1.0 - ratio_proc)
+
+    return (comps_base, comps_cim, total_base, total_cim,
+            improvement, speedup, ratio_proc, ratio_cache,
+            e_l1, lat_l1, e_l2, lat_l2)
+
+
+def evaluate_system(cfg_l1, cfg_l2, tech_table, static_unit, group,
+                    counters_base, counters_cim, perf):
+    """Full profiler graph using the Pallas kernels (the AOT'd entry point).
+
+    Args:
+      cfg_l1, cfg_l2: f32[B, NCFG]   per-design-point L1/L2 geometries.
+      tech_table:     f32[NTECH, 4*NOPS] Table III / Fig 11 anchors.
+      static_unit:    f32[NC]        calibrated core/DRAM/leakage unit pJ.
+      group:          f32[NC, NCOMP] one-hot counter→component matrix.
+      counters_base:  f32[B, NC]     baseline (non-CiM) counters.
+      counters_cim:   f32[B, NC]     reshaped (CiM) counters.
+      perf:           f32[B, NPERF]  speedup-model inputs.
+
+    Returns the 12-tuple documented in `_evaluate`.
+    """
+    return _evaluate(cfg_l1, cfg_l2, tech_table, static_unit, group,
+                     counters_base, counters_cim, perf,
+                     energy_latency, profile_agg)
+
+
+def evaluate_system_ref(cfg_l1, cfg_l2, tech_table, static_unit, group,
+                        counters_base, counters_cim, perf):
+    """Same graph on the pure-jnp oracles (test cross-check + grad path)."""
+    return _evaluate(cfg_l1, cfg_l2, tech_table, static_unit, group,
+                     counters_base, counters_cim, perf,
+                     ref.energy_latency_ref, ref.profile_agg_ref)
+
+
+def sensitivity(cfg_l1, cfg_l2, tech_table, static_unit, group,
+                counters_base, counters_cim, perf):
+    """d(mean total CiM-system energy)/d(cfg) — DSE guidance vector field.
+
+    Returns (g_l1, g_l2): f32[B, NCFG] gradients.  Discrete columns (tech id,
+    level) get gradients too; the Rust side masks them out.
+    """
+    def total_cim_mean(c1, c2):
+        out = evaluate_system_ref(c1, c2, tech_table, static_unit, group,
+                                  counters_base, counters_cim, perf)
+        return out[3].mean()
+
+    return jax.grad(total_cim_mean, argnums=(0, 1))(cfg_l1, cfg_l2)

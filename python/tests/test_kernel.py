@@ -1,0 +1,121 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps batch sizes (including non-multiples of the 128-row block),
+geometries and dtypes; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import constants as K
+from compile.kernels import ref
+from compile.kernels.cim_energy import energy_latency
+from compile.kernels.profile_agg import profile_agg
+
+
+def make_cfg(rng: np.random.Generator, b: int) -> np.ndarray:
+    cap = 2.0 ** rng.integers(12, 22, size=b)          # 4 kB .. 4 MB
+    assoc = 2.0 ** rng.integers(0, 5, size=b)          # 1 .. 16 way
+    line = np.full(b, 64.0)
+    banks = 2.0 ** rng.integers(0, 4, size=b)          # 1 .. 8
+    tech = rng.integers(0, K.NTECH, size=b).astype(np.float64)
+    level = rng.integers(1, 3, size=b).astype(np.float64)
+    return np.stack([cap, assoc, line, banks, tech, level], axis=1).astype(
+        np.float32)
+
+
+@pytest.fixture(scope="module")
+def tech_table():
+    return jnp.asarray(K.DEFAULT_TECH_TABLE)
+
+
+class TestEnergyKernel:
+    def test_matches_ref_exact_block(self, tech_table):
+        rng = np.random.default_rng(0)
+        cfg = jnp.asarray(make_cfg(rng, 256))
+        e_k, l_k = energy_latency(cfg, tech_table)
+        e_r, l_r = ref.energy_latency_ref(cfg, tech_table)
+        assert_allclose(np.asarray(e_k), np.asarray(e_r), rtol=1e-5)
+        assert_allclose(np.asarray(l_k), np.asarray(l_r), rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_any_batch(self, tech_table, b, seed):
+        rng = np.random.default_rng(seed)
+        cfg = jnp.asarray(make_cfg(rng, b))
+        e_k, l_k = energy_latency(cfg, tech_table)
+        e_r, l_r = ref.energy_latency_ref(cfg, tech_table)
+        assert e_k.shape == (b, K.NOPS) and l_k.shape == (b, K.NOPS)
+        assert_allclose(np.asarray(e_k), np.asarray(e_r), rtol=1e-5)
+        assert_allclose(np.asarray(l_k), np.asarray(l_r), rtol=1e-5)
+
+    def test_reproduces_table3_anchors(self, tech_table):
+        """At the published geometries the model must return Table III."""
+        cfg = jnp.asarray(np.array([
+            # cap,            assoc, line, banks, tech, level
+            [64 * 1024.0, 4.0, 64.0, 4.0, K.TECH_SRAM, 1.0],
+            [256 * 1024.0, 8.0, 64.0, 4.0, K.TECH_SRAM, 2.0],
+            [64 * 1024.0, 4.0, 64.0, 4.0, K.TECH_FEFET, 1.0],
+            [256 * 1024.0, 8.0, 64.0, 4.0, K.TECH_FEFET, 2.0],
+        ], dtype=np.float32))
+        e, lat = energy_latency(cfg, tech_table)
+        e, lat = np.asarray(e), np.asarray(lat)
+        table = np.asarray(K.DEFAULT_TECH_TABLE)
+        for i, (t, row) in enumerate([(0, 0), (0, 1), (1, 0), (1, 1)]):
+            want_e = table[t, row * K.NOPS:(row + 1) * K.NOPS]
+            want_l = table[t, (2 + row) * K.NOPS:(3 + row) * K.NOPS]
+            assert_allclose(e[i], want_e, rtol=1e-4)
+            assert_allclose(lat[i], want_l, rtol=1e-4)
+
+    def test_energy_monotone_in_capacity(self, tech_table):
+        """Bigger arrays must cost more per op (paper finding iii)."""
+        caps = [16 * 1024.0, 64 * 1024.0, 256 * 1024.0, 2 * 1024 * 1024.0]
+        cfg = jnp.asarray(np.array(
+            [[c, 4.0, 64.0, 4.0, K.TECH_SRAM, 1.0] for c in caps],
+            dtype=np.float32))
+        e, _ = energy_latency(cfg, tech_table)
+        e = np.asarray(e)
+        assert (np.diff(e, axis=0) > 0).all()
+
+    def test_outputs_finite_and_positive(self, tech_table):
+        rng = np.random.default_rng(7)
+        cfg = jnp.asarray(make_cfg(rng, 128))
+        e, lat = energy_latency(cfg, tech_table)
+        assert np.isfinite(np.asarray(e)).all() and (np.asarray(e) > 0).all()
+        assert np.isfinite(np.asarray(lat)).all() and (np.asarray(lat) > 0).all()
+
+
+class TestProfileAggKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, b, seed):
+        rng = np.random.default_rng(seed)
+        counters = jnp.asarray(
+            rng.uniform(0, 1e6, size=(b, K.NC)).astype(np.float32))
+        unit = jnp.asarray(
+            rng.uniform(0.1, 500.0, size=(b, K.NC)).astype(np.float32))
+        group = jnp.asarray(K.group_matrix())
+        out_k = profile_agg(counters, unit, group)
+        out_r = ref.profile_agg_ref(counters, unit, group)
+        assert out_k.shape == (b, K.NCOMP)
+        assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5)
+
+    def test_group_matrix_partitions_counters(self):
+        g = K.group_matrix()
+        assert g.shape == (K.NC, K.NCOMP)
+        # every counter belongs to exactly one component
+        assert_allclose(g.sum(axis=1), np.ones(K.NC))
+
+    def test_total_energy_is_weighted_sum(self):
+        rng = np.random.default_rng(3)
+        counters = rng.uniform(0, 1e5, size=(8, K.NC)).astype(np.float32)
+        unit = rng.uniform(0.1, 100.0, size=(8, K.NC)).astype(np.float32)
+        out = np.asarray(profile_agg(
+            jnp.asarray(counters), jnp.asarray(unit),
+            jnp.asarray(K.group_matrix())))
+        assert_allclose(out.sum(axis=1), (counters * unit).sum(axis=1),
+                        rtol=1e-4)

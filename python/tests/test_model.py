@@ -1,0 +1,126 @@
+"""L2 model graph: kernel-path vs ref-path equivalence + invariants."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import constants as K
+
+
+def make_inputs(b=16, seed=0, cim_fraction=0.3):
+    """Synthetic but self-consistent profiler inputs.
+
+    counters_cim mimics reshaping: fewer core events and memory accesses,
+    some CiM ops added; perf vector consistent with the removal count.
+    """
+    rng = np.random.default_rng(seed)
+    caps = 2.0 ** rng.integers(14, 18, size=b)
+    cfg_l1 = np.stack([
+        caps, np.full(b, 4.0), np.full(b, 64.0), np.full(b, 4.0),
+        rng.integers(0, 2, size=b).astype(float), np.full(b, 1.0)
+    ], axis=1).astype(np.float32)
+    cfg_l2 = cfg_l1.copy()
+    cfg_l2[:, K.CFG_CAPACITY] = caps * 8
+    cfg_l2[:, K.CFG_ASSOC] = 8.0
+    cfg_l2[:, K.CFG_LEVEL] = 2.0
+
+    counters_base = rng.uniform(1e3, 1e6, size=(b, K.NC)).astype(np.float32)
+    counters_base[:, K.C_CIM_BEGIN:K.C_CIM_END] = 0.0
+    counters_cim = counters_base.copy()
+    counters_cim[:, :K.C_CACHE_BEGIN] *= (1.0 - cim_fraction)
+    counters_cim[:, K.C_CACHE_BEGIN:K.C_CIM_BEGIN] *= (1.0 - cim_fraction / 2)
+    # each CiM op replaces ~3 offloaded instructions; spread over 8 op kinds
+    committed = counters_base[:, 0]
+    removed = committed * cim_fraction
+    share = rng.dirichlet(np.ones(8), size=b).astype(np.float32)
+    counters_cim[:, K.C_CIM_BEGIN:K.C_CIM_END] = (
+        share * (removed / 3.0)[:, None])
+    perf = np.stack([
+        committed * 1.4,                       # cycles (CPI 1.4)
+        committed,                             # committed
+        removed,                               # removed
+        counters_cim[:, 37], counters_cim[:, 41],  # cim add l1/l2
+        np.full(b, 1.0),                       # GHz
+    ], axis=1).astype(np.float32)
+
+    return (jnp.asarray(cfg_l1), jnp.asarray(cfg_l2),
+            jnp.asarray(K.DEFAULT_TECH_TABLE),
+            jnp.asarray(K.DEFAULT_STATIC_UNIT),
+            jnp.asarray(K.group_matrix()),
+            jnp.asarray(counters_base), jnp.asarray(counters_cim),
+            jnp.asarray(perf))
+
+
+@pytest.fixture(scope="module")
+def inputs():
+    return make_inputs()
+
+
+def test_kernel_path_matches_ref_path(inputs):
+    out_k = model.evaluate_system(*inputs)
+    out_r = model.evaluate_system_ref(*inputs)
+    assert len(out_k) == 12
+    for a, b in zip(out_k, out_r):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5)
+
+
+def test_improvement_positive_and_sane(inputs):
+    out = model.evaluate_system(*inputs)
+    improvement, speedup = np.asarray(out[4]), np.asarray(out[5])
+    assert (improvement > 0).all()
+    assert (improvement > 1.0).all()   # counters_cim strictly cheaper here
+    assert (speedup > 0.9).all()
+
+
+def test_breakdown_ratios_sum_to_one(inputs):
+    out = model.evaluate_system(*inputs)
+    rp, rc = np.asarray(out[6]), np.asarray(out[7])
+    assert_allclose(rp + rc, np.ones_like(rp), rtol=1e-4)
+
+
+def test_components_nonnegative(inputs):
+    out = model.evaluate_system(*inputs)
+    assert (np.asarray(out[0]) >= 0).all()
+    assert (np.asarray(out[1]) >= 0).all()
+
+
+def test_total_is_component_sum_excluding_dram(inputs):
+    out = model.evaluate_system(*inputs)
+    comps = np.asarray(out[0])
+    want = comps.sum(axis=1) - comps[:, K.COMP_DRAM]
+    assert_allclose(want, np.asarray(out[2]), rtol=1e-5)
+
+
+def test_identical_counters_give_unity(inputs):
+    cfg_l1, cfg_l2, tech, unit, group, cb, _, perf = inputs
+    perf0 = np.asarray(perf).copy()
+    perf0[:, K.PERF_REMOVED] = 0.0
+    perf0[:, K.PERF_CIM_ADD_L1] = 0.0
+    perf0[:, K.PERF_CIM_ADD_L2] = 0.0
+    out = model.evaluate_system(cfg_l1, cfg_l2, tech, unit, group, cb, cb,
+                                jnp.asarray(perf0))
+    assert_allclose(np.asarray(out[4]), 1.0, rtol=1e-5)   # improvement
+    assert_allclose(np.asarray(out[5]), 1.0, rtol=1e-5)   # speedup
+
+
+def test_sensitivity_finite_and_capacity_positive(inputs):
+    g1, g2 = model.sensitivity(*inputs)
+    g1, g2 = np.asarray(g1), np.asarray(g2)
+    assert np.isfinite(g1).all() and np.isfinite(g2).all()
+    # bigger caches -> more energy per op -> positive capacity gradient
+    assert (g1[:, K.CFG_CAPACITY] > 0).all()
+    assert (g2[:, K.CFG_CAPACITY] > 0).all()
+
+
+def test_cim_add_latency_hurts_speedup(inputs):
+    cfg_l1, cfg_l2, tech, unit, group, cb, cc, perf = inputs
+    hi = np.asarray(perf).copy()
+    hi[:, K.PERF_CIM_ADD_L1] *= 100.0
+    out_lo = model.evaluate_system(cfg_l1, cfg_l2, tech, unit, group, cb, cc,
+                                   perf)
+    out_hi = model.evaluate_system(cfg_l1, cfg_l2, tech, unit, group, cb, cc,
+                                   jnp.asarray(hi))
+    assert (np.asarray(out_hi[5]) <= np.asarray(out_lo[5]) + 1e-6).all()

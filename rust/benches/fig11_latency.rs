@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 11 (access latency of non-CiM and CiM ops).
+//! Paper shape: SRAM logic ≈ read latency; CiM-ADD ≈ read + 4 cycles;
+//! FeFET faster across the board.
+
+use eva_cim::experiments;
+use eva_cim::util::stats::time_it;
+
+fn main() {
+    let table = experiments::fig11();
+    println!("{}", table.render());
+    let (iters, ns) = time_it(|| { let _ = experiments::fig11(); }, 10, 200);
+    println!("[bench] fig11: {:.1} us/iter over {} iters", ns / 1e3, iters);
+}

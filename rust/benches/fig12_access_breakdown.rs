@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 12 (CiM-supported accesses, Eva-CiM vs Jain [23],
+//! LCS x20 random inputs). Paper: Eva-CiM ~65% vs [23] ~58% — the IDG finds
+//! more convertible accesses than the compile-time pairing. Shape check:
+//! Eva-CiM > Jain.
+
+use eva_cim::experiments;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig12(20, 0).expect("fig12");
+    println!("{}", table.render());
+    println!("[bench] fig12: {:.2}s for 20 runs", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 13 (MACR per benchmark + L1/other breakdown).
+//! Paper shape: MACR varies widely across benchmarks; data-intensive is not
+//! necessarily CiM-convertible (finding ii); most convertible data sits in L1.
+
+use eva_cim::coordinator::SweepOptions;
+use eva_cim::experiments;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig13(SweepOptions::default()).expect("fig13");
+    println!("{}", table.render());
+    println!("[bench] fig13: {:.2}s for 17 benchmarks", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig 14 (energy improvement across cache configs
+//! c1=32k/256k, c2=64k/256k, c3=64k/2M). Paper shape: larger caches help
+//! many applications, but the higher per-op CiM energy erodes the benefit
+//! (finding iii).
+
+use eva_cim::coordinator::SweepOptions;
+use eva_cim::experiments;
+use eva_cim::runtime::{best_backend, PjrtRuntime};
+
+fn main() {
+    let mut backend = best_backend(&PjrtRuntime::default_dir());
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig14(SweepOptions::default(), backend.as_mut())
+        .expect("fig14");
+    println!("{}", table.render());
+    println!("[bench] fig14: {:.2}s (51 design points, backend={})",
+             t0.elapsed().as_secs_f64(), backend.name());
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 15 (CiM in L1 only / L2 only / both).
+//! Paper shape: L2-only trails because L1 soaks up most accesses and L2
+//! CiM ops cost more; both-levels wins.
+
+use eva_cim::coordinator::SweepOptions;
+use eva_cim::experiments;
+use eva_cim::runtime::{best_backend, PjrtRuntime};
+
+fn main() {
+    let mut backend = best_backend(&PjrtRuntime::default_dir());
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig15(SweepOptions::default(), backend.as_mut())
+        .expect("fig15");
+    println!("{}", table.render());
+    println!("[bench] fig15: {:.2}s (backend={})",
+             t0.elapsed().as_secs_f64(), backend.name());
+}

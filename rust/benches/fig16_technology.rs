@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 16 (CMOS SRAM vs FeFET-RAM energy + performance).
+//! Paper shape: FeFET improvements ~50-70% above SRAM, consistent across
+//! benchmarks; FeFET also faster thanks to lower CiM op latency.
+
+use eva_cim::coordinator::SweepOptions;
+use eva_cim::experiments;
+use eva_cim::runtime::{best_backend, PjrtRuntime};
+
+fn main() {
+    let mut backend = best_backend(&PjrtRuntime::default_dir());
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig16(SweepOptions::default(), backend.as_mut())
+        .expect("fig16");
+    println!("{}", table.render());
+    println!("[bench] fig16: {:.2}s (backend={})",
+             t0.elapsed().as_secs_f64(), backend.name());
+}

@@ -1,0 +1,98 @@
+//! Perf bench (§Perf of EXPERIMENTS.md): hot-path throughputs of the three
+//! L3 stages plus PJRT-vs-native backend latency per batched evaluation.
+//!
+//! Targets (DESIGN.md §8): simulator ≥ 2 M instr/s, analyzer ≥ 5 M nodes/s,
+//! PJRT amortized by 256-point batching.
+
+use std::time::Instant;
+
+use eva_cim::analyzer::{analyze, LocalityRule};
+use eva_cim::config::SystemConfig;
+use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
+use eva_cim::reshape::reshape;
+use eva_cim::runtime::PjrtRuntime;
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::workloads;
+
+fn main() {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let prog = workloads::build("lcs", 4, 3).unwrap();
+
+    // --- simulator throughput -------------------------------------------
+    let t0 = Instant::now();
+    let mut committed = 0u64;
+    let mut runs = 0u32;
+    while t0.elapsed().as_secs_f64() < 2.0 {
+        let t = simulate(&prog, &cfg, Limits::default()).unwrap();
+        committed += t.committed;
+        runs += 1;
+    }
+    let sim_rate = committed as f64 / t0.elapsed().as_secs_f64();
+    println!("[perf] simulator: {:.2} M instr/s ({runs} runs)", sim_rate / 1e6);
+
+    // --- analyzer throughput ---------------------------------------------
+    let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+    let t1 = Instant::now();
+    let mut nodes = 0u64;
+    let mut aruns = 0u32;
+    while t1.elapsed().as_secs_f64() < 2.0 {
+        let an = analyze(&trace, &cfg, LocalityRule::AnyCache);
+        nodes += an.idg_nodes.0;
+        aruns += 1;
+    }
+    let an_rate = nodes as f64 / t1.elapsed().as_secs_f64();
+    println!("[perf] analyzer: {:.2} M IDG nodes/s ({aruns} runs)", an_rate / 1e6);
+
+    // --- reshaping + native profile ---------------------------------------
+    let analysis = analyze(&trace, &cfg, LocalityRule::AnyCache);
+    let t2 = Instant::now();
+    let mut rruns = 0u32;
+    while t2.elapsed().as_secs_f64() < 1.0 {
+        let r = reshape(&trace, &analysis.selection, &cfg);
+        let _ = evaluate_native_batch(&[ProfileInputs::new(&cfg, &r)]);
+        rruns += 1;
+    }
+    println!(
+        "[perf] reshape+native-profile: {:.1} us/design-point",
+        t2.elapsed().as_micros() as f64 / rruns as f64
+    );
+
+    // --- backend latency: PJRT batched vs native ---------------------------
+    let reshaped = reshape(&trace, &analysis.selection, &cfg);
+    let one = ProfileInputs::new(&cfg, &reshaped);
+    match PjrtRuntime::load(&PjrtRuntime::default_dir()) {
+        Err(e) => println!("[perf] pjrt: skipped ({e:#})"),
+        Ok(mut rt) => {
+            let full: Vec<ProfileInputs> =
+                (0..rt.batch).map(|_| one.clone()).collect();
+            // warm-up compile/execute
+            rt.evaluate_profile(&full[..1].to_vec()).unwrap();
+            let t3 = Instant::now();
+            let mut eruns = 0u32;
+            while t3.elapsed().as_secs_f64() < 2.0 {
+                rt.evaluate_profile(&full).unwrap();
+                eruns += 1;
+            }
+            let per_batch = t3.elapsed().as_secs_f64() / eruns as f64;
+            println!(
+                "[perf] pjrt: {:.2} ms/execute for {} points -> {:.1} us/point",
+                per_batch * 1e3,
+                rt.batch,
+                per_batch * 1e6 / rt.batch as f64
+            );
+            let t4 = Instant::now();
+            let mut nruns = 0u32;
+            while t4.elapsed().as_secs_f64() < 1.0 {
+                let _ = evaluate_native_batch(&full);
+                nruns += 1;
+            }
+            let native_batch = t4.elapsed().as_secs_f64() / nruns as f64;
+            println!(
+                "[perf] native: {:.2} ms/batch of {} -> {:.1} us/point",
+                native_batch * 1e3,
+                rt.batch,
+                native_batch * 1e6 / rt.batch as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Table III (cache energy per op, SRAM vs FeFET).
+//! Paper anchors: SRAM L1 read 61 pJ … FeFET L2 ADD 205 pJ — reproduced
+//! exactly by construction (power-law anchored model).
+
+use eva_cim::experiments;
+use eva_cim::util::stats::time_it;
+
+fn main() {
+    let table = experiments::table3();
+    println!("{}", table.render());
+    let (iters, ns) = time_it(|| { let _ = experiments::table3(); }, 10, 200);
+    println!("[bench] table3: {:.1} us/iter over {} iters", ns / 1e3, iters);
+}

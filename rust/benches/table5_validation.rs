@@ -1,0 +1,15 @@
+//! Bench: regenerate Table V (Eva-CiM vs array-only/DESTINY energy on LCS).
+//! Paper: ~24% deviation for both CiM and non-CiM instructions — Eva-CiM
+//! sits above the array-only estimate because it adds hierarchy effects.
+
+use eva_cim::experiments;
+use eva_cim::runtime::{best_backend, PjrtRuntime};
+
+fn main() {
+    let mut backend = best_backend(&PjrtRuntime::default_dir());
+    let t0 = std::time::Instant::now();
+    let table = experiments::table5(backend.as_mut(), 0).expect("table5");
+    println!("{}", table.render());
+    println!("[bench] table5: {:.2}s end-to-end (backend={})",
+             t0.elapsed().as_secs_f64(), backend.name());
+}

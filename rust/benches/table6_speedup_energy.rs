@@ -1,0 +1,20 @@
+//! Bench: regenerate Table VI (speedup, energy improvement, breakdown).
+//! Paper bands: speedup 1.0-1.5x (BC ~0.99), energy improvement 1.3-6.0x,
+//! improvement dominated by the processor side with some negative cache
+//! contributions. Our reproduction preserves the shape (who wins, the
+//! processor-dominated breakdown, sub-unity stragglers); absolute factors
+//! are compressed by hand-compiled codegen (see EXPERIMENTS.md).
+
+use eva_cim::coordinator::SweepOptions;
+use eva_cim::experiments;
+use eva_cim::runtime::{best_backend, PjrtRuntime};
+
+fn main() {
+    let mut backend = best_backend(&PjrtRuntime::default_dir());
+    let t0 = std::time::Instant::now();
+    let table = experiments::table6(SweepOptions::default(), backend.as_mut())
+        .expect("table6");
+    println!("{}", table.render());
+    println!("[bench] table6: {:.2}s (backend={})",
+             t0.elapsed().as_secs_f64(), backend.name());
+}

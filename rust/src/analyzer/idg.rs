@@ -1,0 +1,374 @@
+//! Instruction Dependency Graph construction — paper Algorithm 2.
+//!
+//! A node is created for every committed instruction whose opcode the CiM
+//! module supports (the `CiMSet`).  Children are the producers of its source
+//! operands, resolved in O(1) through the RUT/IHT; a child is a *leaf* when
+//! it is a load (LEAF_TRUE in the paper) or an immediate.  Producers that
+//! are neither loads nor CiM-supported ops break offloadability for that
+//! operand (`Child::External`), as do operands holding pre-trace register
+//! values (`Child::Init`).
+
+use crate::isa::Opcode;
+use crate::probes::IState;
+
+use super::rut::{build as build_tables, Iht, Rut};
+
+/// CiM-supported operation kinds (Table III columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CimOp {
+    Or,
+    And,
+    Xor,
+    Add,
+}
+
+impl CimOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CimOp::Or => "or",
+            CimOp::And => "and",
+            CimOp::Xor => "xor",
+            CimOp::Add => "add",
+        }
+    }
+}
+
+/// The CiM-supported instruction set: which opcodes can become in-memory
+/// operations.  Immediate variants are included (Fig 4(b)).  As in the
+/// STT-CiM design of [23] and the compute caches of [20]:
+/// * subtraction runs on the sense-amp adder → ADD energy/latency class;
+/// * comparison is a bitwise SA operation (no carry chain) → XOR class,
+///   i.e. read-like latency per Fig 11.
+pub fn cim_op_of(op: Opcode) -> Option<CimOp> {
+    use Opcode::*;
+    match op {
+        Or | Ori => Some(CimOp::Or),
+        And | Andi => Some(CimOp::And),
+        Xor | Xori => Some(CimOp::Xor),
+        Slt | Slti | Sltu => Some(CimOp::Xor),
+        Add | Addi | Sub => Some(CimOp::Add),
+        _ => None,
+    }
+}
+
+/// One operand edge in the IDG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Child {
+    /// no operand in this slot
+    None,
+    /// immediate operand
+    Imm,
+    /// initial (pre-trace) register value — not offloadable
+    Init,
+    /// produced by a non-CiM, non-load instruction (seq) — not offloadable
+    External(u64),
+    /// leaf load (LEAF_TRUE): seq of the load instruction
+    Load(u64),
+    /// another CiM-supported node (index into the forest arena)
+    Node(usize),
+}
+
+/// IDG node: one CiM-supported committed instruction.
+#[derive(Clone, Debug)]
+pub struct IdgNode {
+    pub seq: u64,
+    pub op: CimOp,
+    pub children: [Child; 2],
+    /// every child is Imm / Load / eligible Node — the node can execute
+    /// entirely in memory
+    pub eligible: bool,
+    /// number of load leaves in this node's eligible subtree
+    pub subtree_loads: u32,
+}
+
+pub const NO_NODE: u32 = u32::MAX;
+
+/// The whole forest plus consumer cross-references.
+///
+/// All cross-references are dense seq-indexed vectors, not hash maps: the
+/// analyzer walks millions of committed instructions per sweep and hashing
+/// dominated its profile (see EXPERIMENTS.md §Perf).
+pub struct IdgForest {
+    pub nodes: Vec<IdgNode>,
+    /// seq -> node index (NO_NODE when the instruction is not a CiM op)
+    pub node_idx: Vec<u32>,
+    /// CSR consumer lists: consumers of seq s are
+    /// `consumer_data[consumer_ptr[s]..consumer_ptr[s+1]]`
+    consumer_ptr: Vec<u32>,
+    consumer_data: Vec<u64>,
+    pub rut: Rut,
+    pub iht: Iht,
+}
+
+impl IdgForest {
+    /// Node index for a CiM-op instruction seq (panics otherwise).
+    pub fn node_of_seq(&self, seq: u64) -> usize {
+        let i = self.node_idx[seq as usize];
+        debug_assert_ne!(i, NO_NODE);
+        i as usize
+    }
+
+    /// Consumer seqs of the value produced at `seq`.
+    pub fn consumers(&self, seq: u64) -> &[u64] {
+        let s = seq as usize;
+        &self.consumer_data
+            [self.consumer_ptr[s] as usize..self.consumer_ptr[s + 1] as usize]
+    }
+}
+
+/// Build the IDG forest for a committed instruction queue (Algorithm 2).
+///
+/// Single forward pass: because producers always precede consumers in the
+/// CIQ, child nodes already exist when a node is created, and eligibility
+/// and subtree load counts fold bottom-up without recursion.
+pub fn build_forest(ciq: &[IState]) -> IdgForest {
+    let (rut, iht) = build_tables(ciq);
+    let mut nodes: Vec<IdgNode> = Vec::new();
+    let mut node_idx: Vec<u32> = vec![NO_NODE; ciq.len()];
+
+    // consumer cross-reference in CSR form: count, prefix-sum, fill —
+    // two flat allocations instead of one Vec per instruction
+    let mut consumer_ptr = vec![0u32; ciq.len() + 1];
+    for (k, _) in ciq.iter().enumerate() {
+        for src in iht.entries[k].sources.iter().flatten() {
+            if let Some(p) = rut.producer(src.0, src.1) {
+                consumer_ptr[p as usize + 1] += 1;
+            }
+        }
+    }
+    for i in 0..ciq.len() {
+        consumer_ptr[i + 1] += consumer_ptr[i];
+    }
+    let mut consumer_data = vec![0u64; *consumer_ptr.last().unwrap() as usize];
+    let mut fill = consumer_ptr.clone();
+    for (k, is) in ciq.iter().enumerate() {
+        for src in iht.entries[k].sources.iter().flatten() {
+            if let Some(p) = rut.producer(src.0, src.1) {
+                consumer_data[fill[p as usize] as usize] = is.seq;
+                fill[p as usize] += 1;
+            }
+        }
+    }
+
+    for (k, is) in ciq.iter().enumerate() {
+
+        let Some(op) = cim_op_of(is.instr.op) else { continue };
+
+        let mut children = [Child::None, Child::None];
+        let mut eligible = true;
+        let mut loads = 0u32;
+        for slot in 0..2 {
+            children[slot] = match iht.entries[k].sources[slot] {
+                None => {
+                    // reg-imm ops carry the immediate in slot 1; reads of r0
+                    // are constants too
+                    if slot == 1 || is.instr.op.has_imm() {
+                        Child::Imm
+                    } else {
+                        Child::Imm // r0 source ≡ constant zero
+                    }
+                }
+                Some((r, n)) => match rut.producer(r, n) {
+                    None => {
+                        eligible = false;
+                        Child::Init
+                    }
+                    Some(p) => {
+                        let pis = &ciq[p as usize];
+                        if pis.instr.op.is_load() {
+                            loads += 1;
+                            Child::Load(p)
+                        } else if node_idx[p as usize] != NO_NODE {
+                            let ni = node_idx[p as usize] as usize;
+                            let n: &IdgNode = &nodes[ni];
+                            if n.eligible {
+                                loads += n.subtree_loads;
+                            } else {
+                                eligible = false;
+                            }
+                            Child::Node(ni)
+                        } else {
+                            eligible = false;
+                            Child::External(p)
+                        }
+                    }
+                },
+            };
+        }
+        node_idx[k] = nodes.len() as u32;
+        nodes.push(IdgNode { seq: is.seq, op, children, eligible, subtree_loads: loads });
+    }
+
+    IdgForest { nodes, node_idx, consumer_ptr, consumer_data, rut, iht }
+}
+
+impl IdgForest {
+    /// Collect the eligible subtree rooted at `idx`: member node indices
+    /// (including the root) and leaf load seqs.
+    pub fn subtree(&self, idx: usize) -> (Vec<usize>, Vec<u64>) {
+        debug_assert!(self.nodes[idx].eligible);
+        let mut members = Vec::new();
+        let mut loads = Vec::new();
+        let mut stack = vec![idx];
+        while let Some(i) = stack.pop() {
+            members.push(i);
+            for c in self.nodes[i].children {
+                match c {
+                    Child::Load(seq) => loads.push(seq),
+                    Child::Node(ci) if self.nodes[ci].eligible => stack.push(ci),
+                    _ => {}
+                }
+            }
+        }
+        (members, loads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::config::SystemConfig;
+    use crate::sim::{simulate, Limits};
+
+    fn trace(asm: Asm) -> Vec<IState> {
+        let prog = asm.assemble();
+        simulate(&prog, &SystemConfig::default(), Limits::default())
+            .unwrap()
+            .ciq
+    }
+
+    /// The canonical Load-Load-OP-Store pattern of Fig 3/4(a).
+    #[test]
+    fn load_load_op_store_pattern() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3, 4, 0]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.sw(4, 1, 8);
+        a.halt();
+        let ciq = trace(a);
+        let f = build_forest(&ciq);
+        // nodes: the li (addi) and the add
+        assert_eq!(f.nodes.len(), 2);
+        let add = f.nodes.iter().find(|n| n.op == CimOp::Add && n.subtree_loads == 2)
+            .expect("add node with two load leaves");
+        assert!(add.eligible);
+        assert!(matches!(add.children[0], Child::Load(_)));
+        assert!(matches!(add.children[1], Child::Load(_)));
+        // the add's consumer is the store
+        let consumers = f.consumers(add.seq);
+        assert_eq!(consumers.len(), 1);
+        assert_eq!(ciq[consumers[0] as usize].instr.op, Opcode::Sw);
+    }
+
+    /// Fig 4(b): one operand replaced by an immediate.
+    #[test]
+    fn load_imm_variant() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0);
+        a.addi(3, 2, 7);
+        a.sw(3, 1, 0);
+        a.halt();
+        let ciq = trace(a);
+        let f = build_forest(&ciq);
+        let node = f.nodes.iter().find(|n| n.subtree_loads == 1).unwrap();
+        assert!(node.eligible);
+        assert!(matches!(node.children[0], Child::Load(_)));
+        assert_eq!(node.children[1], Child::Imm);
+    }
+
+    /// Fig 4(c)/Fig 5: chained ops form one connected multi-node tree.
+    #[test]
+    fn chained_ops_fold_subtree_loads() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3); // node A: 2 loads
+        a.lw(5, 1, 8);
+        a.add(6, 4, 5); // node B: A + 1 load = 3 loads
+        a.sw(6, 1, 12);
+        a.halt();
+        let ciq = trace(a);
+        let f = build_forest(&ciq);
+        let b = f.nodes.iter().find(|n| n.subtree_loads == 3).expect("root");
+        assert!(b.eligible);
+        let bi = f.node_of_seq(b.seq);
+        let (members, loads) = f.subtree(bi);
+        assert_eq!(members.len(), 2);
+        assert_eq!(loads.len(), 3);
+    }
+
+    /// A mul in the dataflow breaks eligibility (External child).
+    #[test]
+    fn external_producer_breaks_eligibility() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3, 4]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.mul(4, 2, 3); // not in CiMSet
+        a.add(5, 4, 2); // add with External child
+        a.sw(5, 1, 0);
+        a.halt();
+        let ciq = trace(a);
+        let f = build_forest(&ciq);
+        let add = f
+            .nodes
+            .iter()
+            .find(|n| matches!(n.children[0], Child::External(_)))
+            .expect("add with external child");
+        assert!(!add.eligible);
+    }
+
+    /// Values live before the trace (Init) are not offloadable.
+    #[test]
+    fn init_value_not_offloadable() {
+        let mut a = Asm::new("t");
+        // r9 never written: initial value
+        a.add(4, 9, 9);
+        a.halt();
+        let ciq = trace(a);
+        let f = build_forest(&ciq);
+        assert_eq!(f.nodes.len(), 1);
+        assert!(!f.nodes[0].eligible);
+        assert_eq!(f.nodes[0].children[0], Child::Init);
+    }
+
+    /// Edges only point backwards in commit order.
+    #[test]
+    fn edges_point_backwards() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        a.li(1, buf as i32);
+        let top = a.label("top");
+        a.li(2, 0);
+        a.li(5, 0);
+        a.bind(top);
+        a.lw(3, 1, 0);
+        a.lw(4, 1, 4);
+        a.add(3, 3, 4);
+        a.sw(3, 1, 8);
+        a.addi(2, 2, 1);
+        a.li(6, 4);
+        a.bne(2, 6, top);
+        a.halt();
+        let ciq = trace(a);
+        let f = build_forest(&ciq);
+        for n in &f.nodes {
+            for c in n.children {
+                match c {
+                    Child::Load(s) | Child::External(s) => assert!(s < n.seq),
+                    Child::Node(i) => assert!(f.nodes[i].seq < n.seq),
+                    _ => {}
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Memory Access Conversion Ratio (MACR) — paper §VI-C / Fig 13.
+//!
+//! MACR = (memory accesses with proper locality that CiM operations can
+//! replace) / (all regular memory accesses).  The breakdown splits the
+//! convertible accesses by the cache level that owned the data (Fig 13
+//! bottom: L1 accesses vs other accesses).
+
+use crate::probes::{IState, MemLevel};
+
+use super::select::Selection;
+
+/// MACR metrics for one program/config.
+#[derive(Clone, Debug, Default)]
+pub struct Macr {
+    /// total data-side memory accesses (loads + stores) in the trace
+    pub total_accesses: u64,
+    /// accesses replaced by CiM ops (claimed loads + absorbed stores)
+    pub convertible: u64,
+    /// convertible accesses whose data was in L1
+    pub convertible_l1: u64,
+    /// convertible accesses whose data was in L2 (or moved)
+    pub convertible_other: u64,
+    /// number of CiM operations that replace them
+    pub cim_ops: u64,
+}
+
+impl Macr {
+    pub fn ratio(&self) -> f64 {
+        if self.total_accesses == 0 {
+            0.0
+        } else {
+            self.convertible as f64 / self.total_accesses as f64
+        }
+    }
+
+    pub fn l1_share(&self) -> f64 {
+        if self.convertible == 0 {
+            0.0
+        } else {
+            self.convertible_l1 as f64 / self.convertible as f64
+        }
+    }
+}
+
+/// Compute MACR from a selection over a trace.
+pub fn compute(ciq: &[IState], sel: &Selection) -> Macr {
+    let mut m = Macr {
+        total_accesses: ciq.iter().filter(|i| i.mem.is_some()).count() as u64,
+        ..Default::default()
+    };
+    for c in &sel.candidates {
+        m.cim_ops += c.members.len() as u64;
+        for &ls in &c.loads {
+            m.convertible += 1;
+            match ciq[ls as usize].mem.unwrap().level {
+                MemLevel::L1 => m.convertible_l1 += 1,
+                _ => m.convertible_other += 1,
+            }
+        }
+        if let Some(ss) = c.absorbed_store {
+            m.convertible += 1;
+            match ciq[ss as usize].mem.unwrap().level {
+                MemLevel::L1 => m.convertible_l1 += 1,
+                _ => m.convertible_other += 1,
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::idg::build_forest;
+    use crate::analyzer::select::{select, LocalityRule};
+    use crate::asm::Asm;
+    use crate::config::{CimLevels, SystemConfig};
+    use crate::sim::{simulate, Limits};
+
+    #[test]
+    fn macr_in_unit_interval_and_counts_consistent() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0);
+        // 4 convertible patterns + some non-convertible traffic
+        for k in 0..4 {
+            a.lw(2, 1, 0);
+            a.lw(3, 1, 4);
+            a.add(4, 2, 3);
+            a.sw(4, 1, 8 + 4 * k);
+        }
+        a.lw(5, 1, 12);
+        a.mul(6, 5, 5);
+        a.sw(6, 1, 16);
+        a.halt();
+        let prog = a.assemble();
+        let t = simulate(&prog, &SystemConfig::default(), Limits::default()).unwrap();
+        let f = build_forest(&t.ciq);
+        let sel = select(&f, &t.ciq, CimLevels::Both, LocalityRule::AnyCache);
+        let m = compute(&t.ciq, &sel);
+        assert!(m.ratio() > 0.0 && m.ratio() <= 1.0, "macr {}", m.ratio());
+        assert_eq!(m.convertible, m.convertible_l1 + m.convertible_other);
+        assert!(m.convertible <= m.total_accesses);
+        assert!(m.cim_ops > 0);
+    }
+
+    #[test]
+    fn zero_when_nothing_selected() {
+        let mut a = Asm::new("t");
+        a.li(1, 1);
+        a.mul(2, 1, 1);
+        a.halt();
+        let prog = a.assemble();
+        let t = simulate(&prog, &SystemConfig::default(), Limits::default()).unwrap();
+        let f = build_forest(&t.ciq);
+        let sel = select(&f, &t.ciq, CimLevels::Both, LocalityRule::AnyCache);
+        let m = compute(&t.ciq, &sel);
+        assert_eq!(m.ratio(), 0.0);
+    }
+}

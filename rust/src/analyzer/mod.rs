@@ -1,0 +1,66 @@
+//! The analysis stage — the cornerstone of Eva-CiM (paper §IV).
+//!
+//! * [`rut`] — Register Usage Table + Index Hash Table (Algorithm 1 step 1)
+//! * [`idg`] — Instruction Dependency Graph construction (Algorithm 2)
+//! * [`select`] — offloading-candidate partition + locality (Alg. 1 step 3)
+//! * [`macr`] — memory-access conversion ratio (Fig 13 metric)
+//! * [`baseline`] — the compile-time classifier of [23] (Fig 12 comparator)
+
+pub mod baseline;
+pub mod idg;
+pub mod macr;
+pub mod rut;
+pub mod select;
+
+pub use idg::{build_forest, CimOp, IdgForest};
+pub use macr::Macr;
+pub use select::{select, Candidate, LocalityRule, Selection};
+
+use crate::config::SystemConfig;
+use crate::probes::Trace;
+
+/// Full analysis result for one trace.
+pub struct Analysis {
+    pub selection: Selection,
+    pub macr: Macr,
+    /// IDG statistics: (total nodes, eligible nodes)
+    pub idg_nodes: (u64, u64),
+}
+
+/// Run the complete analysis stage on a trace under `cfg`'s CiM placement.
+pub fn analyze(trace: &Trace, cfg: &SystemConfig, rule: LocalityRule) -> Analysis {
+    let forest = build_forest(&trace.ciq);
+    let eligible = forest.nodes.iter().filter(|n| n.eligible).count() as u64;
+    let total = forest.nodes.len() as u64;
+    let selection = select(&forest, &trace.ciq, cfg.cim_levels, rule);
+    let macr = macr::compute(&trace.ciq, &selection);
+    Analysis { selection, macr, idg_nodes: (total, eligible) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::sim::{simulate, Limits};
+
+    #[test]
+    fn analyze_end_to_end() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0);
+        for _ in 0..3 {
+            a.lw(2, 1, 0);
+            a.lw(3, 1, 4);
+            a.add(4, 2, 3);
+            a.sw(4, 1, 8);
+        }
+        a.halt();
+        let cfg = SystemConfig::default();
+        let t = simulate(&a.assemble(), &cfg, Limits::default()).unwrap();
+        let an = analyze(&t, &cfg, LocalityRule::AnyCache);
+        assert!(!an.selection.candidates.is_empty());
+        assert!(an.macr.ratio() > 0.3);
+        assert!(an.idg_nodes.1 <= an.idg_nodes.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Register Usage Table (RUT) and Index Hash Table (IHT) — paper §IV-B.
+//!
+//! The RUT keeps, per architectural register, the list of CIQ sequence
+//! indices of instructions that wrote it.  The IHT records, per committed
+//! instruction, its source registers together with the *position* (`n_i`)
+//! each register's write-list had when the instruction committed.  Together
+//! they let the IDG builder find the producer of any operand in O(1),
+//! avoiding the recursive search Algorithm 2 warns about.
+
+use crate::isa::{NUM_REGS, RegId};
+use crate::probes::IState;
+
+/// Per-register commit history of destination writes.
+pub struct Rut {
+    /// `writes[r]` = CIQ seq indices of instructions with destination `r`
+    pub writes: Vec<Vec<u64>>,
+}
+
+/// Per-instruction source bookkeeping: `(register, n_i)` pairs, where `n_i`
+/// is the number of writes to `register` committed *before* this
+/// instruction — so `writes[r][n_i - 1]` is the producer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IhtEntry {
+    pub sources: [Option<(RegId, u32)>; 2],
+}
+
+pub struct Iht {
+    pub entries: Vec<IhtEntry>,
+}
+
+/// Build RUT and IHT from the committed instruction queue in one pass
+/// (Algorithm 1 step 1).
+pub fn build(ciq: &[IState]) -> (Rut, Iht) {
+    let mut writes: Vec<Vec<u64>> = vec![Vec::new(); NUM_REGS as usize];
+    let mut entries = Vec::with_capacity(ciq.len());
+
+    for is in ciq {
+        let mut sources = [None, None];
+        for (slot, src) in is.instr.sources().into_iter().enumerate() {
+            if let Some(r) = src {
+                sources[slot] = Some((r, writes[r as usize].len() as u32));
+            }
+        }
+        entries.push(IhtEntry { sources });
+        if let Some(rd) = is.instr.dest() {
+            writes[rd as usize].push(is.seq);
+        }
+    }
+    (Rut { writes }, Iht { entries })
+}
+
+impl Rut {
+    /// Sequence index of the instruction that produced the value `r` held
+    /// when position `n` was recorded; `None` = initial register value.
+    pub fn producer(&self, r: RegId, n: u32) -> Option<u64> {
+        if n == 0 {
+            None
+        } else {
+            self.writes[r as usize].get(n as usize - 1).copied()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{FuncUnit, Instruction, Opcode};
+    use crate::probes::IState;
+
+    fn istate(seq: u64, instr: Instruction) -> IState {
+        IState {
+            seq,
+            pc: seq as u32,
+            instr,
+            fu: FuncUnit::IntAlu,
+            tick_fetch: 0,
+            tick_decode: 0,
+            tick_rename: 0,
+            tick_dispatch: 0,
+            tick_issue: 0,
+            tick_complete: 0,
+            tick_commit: 0,
+            mem: None,
+        }
+    }
+
+    #[test]
+    fn tracks_producers_through_rewrites() {
+        // 0: addi r1, r0, 5
+        // 1: addi r1, r1, 1     (reads r1 written by 0)
+        // 2: add  r2, r1, r1    (reads r1 written by 1, twice)
+        let ciq = vec![
+            istate(0, Instruction::new(Opcode::Addi, 1, 0, 0, 5)),
+            istate(1, Instruction::new(Opcode::Addi, 1, 1, 0, 1)),
+            istate(2, Instruction::new(Opcode::Add, 2, 1, 1, 0)),
+        ];
+        let (rut, iht) = build(&ciq);
+        assert_eq!(rut.writes[1], vec![0, 1]);
+        assert_eq!(rut.writes[2], vec![2]);
+
+        // instruction 1 read r1 when it had 1 write -> producer = seq 0
+        let (r, n) = iht.entries[1].sources[0].unwrap();
+        assert_eq!(r, 1);
+        assert_eq!(rut.producer(r, n), Some(0));
+
+        // instruction 2 read r1 when it had 2 writes -> producer = seq 1
+        let (r, n) = iht.entries[2].sources[0].unwrap();
+        assert_eq!(rut.producer(r, n), Some(1));
+        let (r2, n2) = iht.entries[2].sources[1].unwrap();
+        assert_eq!(rut.producer(r2, n2), Some(1));
+    }
+
+    #[test]
+    fn initial_values_have_no_producer() {
+        let ciq = vec![istate(0, Instruction::new(Opcode::Add, 2, 3, 4, 0))];
+        let (rut, iht) = build(&ciq);
+        let (r, n) = iht.entries[0].sources[0].unwrap();
+        assert_eq!(r, 3);
+        assert_eq!(n, 0);
+        assert_eq!(rut.producer(r, n), None);
+    }
+
+    #[test]
+    fn r0_never_tracked() {
+        let ciq = vec![
+            istate(0, Instruction::new(Opcode::Addi, 0, 0, 0, 5)), // writes r0
+            istate(1, Instruction::new(Opcode::Add, 1, 0, 0, 0)),
+        ];
+        let (rut, iht) = build(&ciq);
+        assert!(rut.writes[0].is_empty());
+        assert_eq!(iht.entries[1].sources, [None, None]);
+    }
+
+    #[test]
+    fn store_sources_recorded() {
+        // sw r7, 4(r2): reads base r2 (slot 0) and data r7 (slot 1)
+        let ciq = vec![
+            istate(0, Instruction::new(Opcode::Addi, 7, 0, 0, 1)),
+            istate(1, Instruction::new(Opcode::Sw, 0, 2, 7, 4)),
+        ];
+        let (rut, iht) = build(&ciq);
+        let (rdata, n) = iht.entries[1].sources[1].unwrap();
+        assert_eq!(rdata, 7);
+        assert_eq!(rut.producer(rdata, n), Some(0));
+    }
+}

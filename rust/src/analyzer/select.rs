@@ -1,0 +1,378 @@
+//! Offloading-candidate selection — paper Algorithm 1 step 3.
+//!
+//! Partitions the IDG forest into maximal eligible subtrees, then applies
+//! the data-locality and CiM-placement constraints: every leaf operand must
+//! reside in a CiM-capable cache level; operands split across levels incur
+//! an operand *move* (the paper's §IV-C write-back-and-forward), and the
+//! op executes at the deepest involved level.
+
+use crate::config::CimLevels;
+use crate::probes::{IState, MemLevel};
+
+use super::idg::{CimOp, IdgForest};
+
+/// How strictly operand locality is enforced (DESIGN.md ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalityRule {
+    /// operands may live in different cache levels; cross-level operands
+    /// are moved to the deepest level first (paper §IV-C, the default)
+    AnyCache,
+    /// all operands must already sit in the same cache level
+    SameLevel,
+    /// all operands must sit in the same level *and* the same bank
+    SameBank,
+}
+
+/// One offloading candidate: a connected group of CiM-suitable nodes.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub root_seq: u64,
+    /// CiM-op instruction seqs removed from the CPU stream (root first)
+    pub members: Vec<u64>,
+    /// load seqs newly claimed (removed) by this candidate
+    pub loads: Vec<u64>,
+    /// loads shared with an earlier candidate (data reread in memory; the
+    /// instruction was already removed there)
+    pub shared_loads: Vec<u64>,
+    /// store absorbed by the CiM op (result written in place)
+    pub absorbed_store: Option<u64>,
+    /// member results still consumed by the CPU → must be read back
+    pub readbacks: u32,
+    /// cross-level operand movements (write-back + forward)
+    pub moves: u32,
+    /// cache level the CiM ops execute in
+    pub level: MemLevel,
+    /// op kind per member (same order as `members`)
+    pub ops: Vec<CimOp>,
+}
+
+impl Candidate {
+    /// Instructions eliminated from the CPU pipeline.
+    pub fn removed_count(&self) -> u64 {
+        (self.members.len() + self.loads.len()) as u64
+            + self.absorbed_store.is_some() as u64
+    }
+}
+
+/// Selection output.
+#[derive(Debug, Default)]
+pub struct Selection {
+    pub candidates: Vec<Candidate>,
+    /// eligible subtrees rejected by locality / placement constraints
+    pub rejected_locality: u64,
+    /// eligible subtrees rejected for having no load operands at all
+    pub rejected_no_loads: u64,
+    /// eligible subtrees rejected because an operand lived in DRAM
+    pub rejected_dram: u64,
+}
+
+/// Select offloading candidates from the forest.
+///
+/// Roots are visited in descending commit order so the outermost consumer
+/// claims the largest connected region first (Fig 5's partition).
+pub fn select(
+    forest: &IdgForest,
+    ciq: &[IState],
+    cim_levels: CimLevels,
+    rule: LocalityRule,
+) -> Selection {
+    let mut sel = Selection::default();
+    if matches!(cim_levels, CimLevels::None) {
+        return sel;
+    }
+    // dense seq-indexed claim bitmaps (hashing dominated the profile)
+    let mut claimed_nodes = vec![false; ciq.len()];
+    let mut claimed_loads = vec![false; ciq.len()];
+
+    // candidate roots: eligible nodes, deepest-seq first
+    let mut order: Vec<usize> = (0..forest.nodes.len())
+        .filter(|&i| forest.nodes[i].eligible)
+        .collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(forest.nodes[i].seq));
+
+    for root in order {
+        if claimed_nodes[forest.nodes[root].seq as usize] {
+            continue;
+        }
+        let (member_idxs, all_loads) = forest.subtree(root);
+        // skip members already claimed by a larger tree (shouldn't happen
+        // with descending order, but a node can be shared by two parents)
+        let members: Vec<u64> = member_idxs
+            .iter()
+            .map(|&i| forest.nodes[i].seq)
+            .filter(|s| !claimed_nodes[*s as usize])
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        if all_loads.is_empty() {
+            sel.rejected_no_loads += 1;
+            continue;
+        }
+
+        // ---- locality: where do the leaf operands live? -------------------
+        let mut levels: Vec<MemLevel> = Vec::with_capacity(all_loads.len());
+        let mut banks: Vec<u32> = Vec::new();
+        let mut dram = false;
+        for &ls in &all_loads {
+            let mem = ciq[ls as usize].mem.expect("load without access info");
+            if mem.level == MemLevel::Dram {
+                dram = true;
+            }
+            levels.push(mem.level);
+            banks.push(mem.bank);
+        }
+        if dram {
+            sel.rejected_dram += 1;
+            continue;
+        }
+        let deepest = if levels.iter().any(|&l| l == MemLevel::L2) {
+            MemLevel::L2
+        } else {
+            MemLevel::L1
+        };
+        let same_level = levels.iter().all(|&l| l == levels[0]);
+        let same_bank = same_level && banks.iter().all(|&b| b == banks[0]);
+        let ok = match rule {
+            LocalityRule::AnyCache => true,
+            LocalityRule::SameLevel => same_level,
+            LocalityRule::SameBank => same_bank,
+        };
+        if !ok {
+            sel.rejected_locality += 1;
+            continue;
+        }
+
+        // ---- placement: is a CiM array available at that level? -----------
+        let level = if match deepest {
+            MemLevel::L1 => cim_levels.l1(),
+            MemLevel::L2 => cim_levels.l2(),
+            MemLevel::Dram => false,
+        } {
+            deepest
+        } else if deepest == MemLevel::L2 && cim_levels.l1() {
+            // operands bubble up into L1 on access; run the op there
+            MemLevel::L1
+        } else {
+            // L1-resident data with CiM only in L2: wholesale relocation
+            // would cost more than it saves — the access stays regular
+            // (this is why L2-only trails in Fig 15: L1 soaks up most
+            // accesses in a complete hierarchy)
+            sel.rejected_locality += 1;
+            continue;
+        };
+        // operand moves: leaves not already at the execution level
+        let exec_is_l2 = level == MemLevel::L2;
+        let moves = levels
+            .iter()
+            .filter(|&&l| (l == MemLevel::L2) != exec_is_l2)
+            .count() as u32;
+
+        // ---- store absorption & readbacks ---------------------------------
+        // members are few; linear membership test beats hashing here
+        let is_member = |s: u64| members.contains(&s);
+        let mut absorbed_store = None;
+        let mut readbacks = 0u32;
+        for &m in &members {
+            let consumers = forest.consumers(m);
+            if consumers.is_empty() {
+                continue;
+            }
+            let outside: Vec<u64> = consumers
+                .iter()
+                .copied()
+                .filter(|c| !is_member(*c))
+                .collect();
+            if m == forest.nodes[root].seq
+                && outside.len() == 1
+                && ciq[outside[0] as usize].instr.op.is_store()
+                // the store's *data* operand must be this value (slot 1)
+                && forest.iht.entries[outside[0] as usize].sources[1]
+                    .map(|(r, n)| forest.rut.producer(r, n) == Some(m))
+                    .unwrap_or(false)
+                && absorbed_store.is_none()
+            {
+                absorbed_store = Some(outside[0]);
+            } else if !outside.is_empty() {
+                readbacks += 1;
+            }
+        }
+
+        // ---- claim ---------------------------------------------------------
+        let mut loads = Vec::new();
+        let mut shared = Vec::new();
+        for &ls in &all_loads {
+            if claimed_loads[ls as usize] {
+                shared.push(ls);
+            } else {
+                claimed_loads[ls as usize] = true;
+                loads.push(ls);
+            }
+        }
+        for &m in &members {
+            claimed_nodes[m as usize] = true;
+        }
+        let ops = members
+            .iter()
+            .map(|&m| forest.nodes[forest.node_of_seq(m)].op)
+            .collect();
+
+        sel.candidates.push(Candidate {
+            root_seq: forest.nodes[root].seq,
+            members,
+            loads,
+            shared_loads: shared,
+            absorbed_store,
+            readbacks,
+            moves,
+            level,
+            ops,
+        });
+    }
+    // report in program order
+    sel.candidates.sort_by_key(|c| c.root_seq);
+    sel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::idg::build_forest;
+    use crate::asm::Asm;
+    use crate::config::SystemConfig;
+    use crate::sim::{simulate, Limits};
+
+    fn run(asm: Asm) -> (Vec<IState>, IdgForest) {
+        let prog = asm.assemble();
+        let ciq = simulate(&prog, &SystemConfig::default(), Limits::default())
+            .unwrap()
+            .ciq;
+        let f = build_forest(&ciq);
+        (ciq, f)
+    }
+
+    fn lls_program() -> Asm {
+        // the canonical pattern, with data pre-touched so operands are in L1
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3, 4, 0]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0); // warm the line
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.sw(4, 1, 8);
+        a.halt();
+        a
+    }
+
+    #[test]
+    fn selects_load_load_op_store() {
+        let (ciq, f) = run(lls_program());
+        let sel = select(&f, &ciq, CimLevels::Both, LocalityRule::AnyCache);
+        assert_eq!(sel.candidates.len(), 1);
+        let c = &sel.candidates[0];
+        assert_eq!(c.members.len(), 1);
+        assert_eq!(c.ops, vec![CimOp::Add]);
+        assert_eq!(c.loads.len(), 2);
+        assert!(c.absorbed_store.is_some());
+        assert_eq!(c.readbacks, 0);
+        assert_eq!(c.level, MemLevel::L1);
+        assert_eq!(c.removed_count(), 4); // add + 2 loads + store
+    }
+
+    #[test]
+    fn cim_none_selects_nothing() {
+        let (ciq, f) = run(lls_program());
+        let sel = select(&f, &ciq, CimLevels::None, LocalityRule::AnyCache);
+        assert!(sel.candidates.is_empty());
+    }
+
+    #[test]
+    fn readback_when_result_reused() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3, 4]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.mul(5, 4, 4); // result consumed by a non-store
+        a.sw(5, 1, 0);
+        a.halt();
+        let (ciq, f) = run(a);
+        let sel = select(&f, &ciq, CimLevels::Both, LocalityRule::AnyCache);
+        assert_eq!(sel.candidates.len(), 1);
+        let c = &sel.candidates[0];
+        assert!(c.absorbed_store.is_none());
+        assert_eq!(c.readbacks, 1);
+    }
+
+    #[test]
+    fn pure_imm_trees_rejected() {
+        let mut a = Asm::new("t");
+        a.li(1, 5);
+        a.addi(2, 1, 3);
+        a.addi(3, 2, 4);
+        a.halt();
+        let (ciq, f) = run(a);
+        let sel = select(&f, &ciq, CimLevels::Both, LocalityRule::AnyCache);
+        assert!(sel.candidates.is_empty());
+        assert!(sel.rejected_no_loads >= 1);
+    }
+
+    #[test]
+    fn cold_loads_from_dram_rejected() {
+        // first-touch loads are serviced by DRAM -> candidate rejected
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3, 4, 0]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0); // cold: DRAM
+        a.addi(4, 2, 1);
+        a.sw(4, 1, 8);
+        a.halt();
+        let (ciq, f) = run(a);
+        let sel = select(&f, &ciq, CimLevels::Both, LocalityRule::AnyCache);
+        assert!(sel.candidates.is_empty());
+        assert_eq!(sel.rejected_dram, 1);
+    }
+
+    #[test]
+    fn chained_tree_claimed_once() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.lw(5, 1, 8);
+        a.add(6, 4, 5);
+        a.sw(6, 1, 12);
+        a.halt();
+        let (ciq, f) = run(a);
+        let sel = select(&f, &ciq, CimLevels::Both, LocalityRule::AnyCache);
+        assert_eq!(sel.candidates.len(), 1);
+        let c = &sel.candidates[0];
+        assert_eq!(c.members.len(), 2); // both adds in ONE candidate
+        assert_eq!(c.loads.len(), 3);
+        assert_eq!(c.removed_count(), 2 + 3 + 1);
+    }
+
+    #[test]
+    fn l2_resident_operand_with_l1_only_cim_runs_in_l1() {
+        let (ciq, f) = run(lls_program());
+        let sel = select(&f, &ciq, CimLevels::L1Only, LocalityRule::AnyCache);
+        assert_eq!(sel.candidates.len(), 1);
+        assert_eq!(sel.candidates[0].level, MemLevel::L1);
+    }
+
+    #[test]
+    fn l2_only_cim_rejects_l1_resident_candidates() {
+        // wholesale relocation of L1-resident operands into L2 costs more
+        // than it saves; the access stays regular (Fig 15's L2-only gap)
+        let (ciq, f) = run(lls_program());
+        let sel = select(&f, &ciq, CimLevels::L2Only, LocalityRule::AnyCache);
+        assert!(sel.candidates.is_empty());
+        assert!(sel.rejected_locality >= 1);
+    }
+}

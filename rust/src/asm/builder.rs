@@ -1,0 +1,322 @@
+//! Assembler eDSL: the front end the 17 workloads are written in.
+//!
+//! Labels are first-class: branch/jump targets may be bound after use and
+//! are resolved (as absolute instruction indices) at [`Asm::assemble`].
+
+use crate::isa::{freg, Instruction, Opcode, RegId, R0};
+
+use super::program::{DataBuilder, Program};
+
+/// Forward-referencable code label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Label(usize);
+
+#[derive(Debug)]
+pub struct Asm {
+    name: String,
+    instrs: Vec<Instruction>,
+    /// label -> bound instruction index
+    labels: Vec<Option<usize>>,
+    label_names: Vec<String>,
+    /// (instruction index, label) pairs whose imm awaits resolution
+    fixups: Vec<(usize, Label)>,
+    pub data: DataBuilder,
+}
+
+impl Asm {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            instrs: Vec::new(),
+            labels: Vec::new(),
+            label_names: Vec::new(),
+            fixups: Vec::new(),
+            data: DataBuilder::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Create an (unbound) label.
+    pub fn label(&mut self, name: &str) -> Label {
+        self.labels.push(None);
+        self.label_names.push(name.to_string());
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `label` to the next emitted instruction.
+    pub fn bind(&mut self, label: Label) {
+        assert!(
+            self.labels[label.0].is_none(),
+            "label '{}' bound twice",
+            self.label_names[label.0]
+        );
+        self.labels[label.0] = Some(self.instrs.len());
+    }
+
+    fn emit(&mut self, i: Instruction) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    fn emit_branch(&mut self, op: Opcode, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
+        self.fixups.push((self.instrs.len(), l));
+        self.emit(Instruction::new(op, R0, rs1, rs2, 0))
+    }
+
+    // ---- integer reg-reg ---------------------------------------------------
+    pub fn add(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Add, rd, rs1, rs2, 0))
+    }
+    pub fn sub(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Sub, rd, rs1, rs2, 0))
+    }
+    pub fn and(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::And, rd, rs1, rs2, 0))
+    }
+    pub fn or(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Or, rd, rs1, rs2, 0))
+    }
+    pub fn xor(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Xor, rd, rs1, rs2, 0))
+    }
+    pub fn sll(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Sll, rd, rs1, rs2, 0))
+    }
+    pub fn srl(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Srl, rd, rs1, rs2, 0))
+    }
+    pub fn sra(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Sra, rd, rs1, rs2, 0))
+    }
+    pub fn slt(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Slt, rd, rs1, rs2, 0))
+    }
+    pub fn sltu(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Sltu, rd, rs1, rs2, 0))
+    }
+    pub fn mul(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Mul, rd, rs1, rs2, 0))
+    }
+    pub fn div(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Div, rd, rs1, rs2, 0))
+    }
+    pub fn rem(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Rem, rd, rs1, rs2, 0))
+    }
+
+    // ---- integer reg-imm ---------------------------------------------------
+    pub fn addi(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Addi, rd, rs1, R0, imm))
+    }
+    pub fn andi(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Andi, rd, rs1, R0, imm))
+    }
+    pub fn ori(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Ori, rd, rs1, R0, imm))
+    }
+    pub fn xori(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Xori, rd, rs1, R0, imm))
+    }
+    pub fn slli(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Slli, rd, rs1, R0, imm))
+    }
+    pub fn srli(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Srli, rd, rs1, R0, imm))
+    }
+    pub fn srai(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Srai, rd, rs1, R0, imm))
+    }
+    pub fn slti(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Slti, rd, rs1, R0, imm))
+    }
+    pub fn lui(&mut self, rd: RegId, imm: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Lui, rd, R0, R0, imm))
+    }
+    /// Load a full 32-bit constant (lui+ori when it doesn't fit an imm).
+    pub fn li(&mut self, rd: RegId, value: i32) -> &mut Self {
+        self.addi(rd, R0, value)
+    }
+    pub fn mv(&mut self, rd: RegId, rs: RegId) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+
+    // ---- memory --------------------------------------------------------------
+    pub fn lw(&mut self, rd: RegId, base: RegId, off: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Lw, rd, base, R0, off))
+    }
+    pub fn sw(&mut self, value: RegId, base: RegId, off: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Sw, R0, base, value, off))
+    }
+    pub fn lb(&mut self, rd: RegId, base: RegId, off: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Lb, rd, base, R0, off))
+    }
+    pub fn sb(&mut self, value: RegId, base: RegId, off: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Sb, R0, base, value, off))
+    }
+    pub fn flw(&mut self, fd: u8, base: RegId, off: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Flw, freg(fd), base, R0, off))
+    }
+    pub fn fsw(&mut self, fs: u8, base: RegId, off: i32) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fsw, R0, base, freg(fs), off))
+    }
+
+    // ---- branches (label-based) ------------------------------------------
+    pub fn beq(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
+        self.emit_branch(Opcode::Beq, rs1, rs2, l)
+    }
+    pub fn bne(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
+        self.emit_branch(Opcode::Bne, rs1, rs2, l)
+    }
+    pub fn blt(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
+        self.emit_branch(Opcode::Blt, rs1, rs2, l)
+    }
+    pub fn bge(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
+        self.emit_branch(Opcode::Bge, rs1, rs2, l)
+    }
+    pub fn bltu(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
+        self.emit_branch(Opcode::Bltu, rs1, rs2, l)
+    }
+    pub fn bgeu(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
+        self.emit_branch(Opcode::Bgeu, rs1, rs2, l)
+    }
+    pub fn jump(&mut self, l: Label) -> &mut Self {
+        self.fixups.push((self.instrs.len(), l));
+        self.emit(Instruction::new(Opcode::Jal, R0, R0, R0, 0))
+    }
+    pub fn jal(&mut self, rd: RegId, l: Label) -> &mut Self {
+        self.fixups.push((self.instrs.len(), l));
+        self.emit(Instruction::new(Opcode::Jal, rd, R0, R0, 0))
+    }
+    pub fn jalr(&mut self, rd: RegId, rs1: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Jalr, rd, rs1, R0, 0))
+    }
+    /// Return through the conventional `ra` register.
+    pub fn ret(&mut self) -> &mut Self {
+        self.jalr(R0, crate::isa::RA)
+    }
+
+    // ---- floating point ----------------------------------------------------
+    pub fn fadd(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fadd, freg(fd), freg(fs1), freg(fs2), 0))
+    }
+    pub fn fsub(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fsub, freg(fd), freg(fs1), freg(fs2), 0))
+    }
+    pub fn fmul(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fmul, freg(fd), freg(fs1), freg(fs2), 0))
+    }
+    pub fn fdiv(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fdiv, freg(fd), freg(fs1), freg(fs2), 0))
+    }
+    pub fn fmin(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fmin, freg(fd), freg(fs1), freg(fs2), 0))
+    }
+    pub fn fmax(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fmax, freg(fd), freg(fs1), freg(fs2), 0))
+    }
+    pub fn feq(&mut self, rd: RegId, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Feq, rd, freg(fs1), freg(fs2), 0))
+    }
+    pub fn flt(&mut self, rd: RegId, fs1: u8, fs2: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Flt, rd, freg(fs1), freg(fs2), 0))
+    }
+    pub fn fcvt_w_s(&mut self, rd: RegId, fs1: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fcvtws, rd, freg(fs1), R0, 0))
+    }
+    pub fn fcvt_s_w(&mut self, fd: u8, rs1: RegId) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fcvtsw, freg(fd), rs1, R0, 0))
+    }
+    pub fn fmv(&mut self, fd: u8, fs1: u8) -> &mut Self {
+        self.emit(Instruction::new(Opcode::Fmv, freg(fd), freg(fs1), R0, 0))
+    }
+
+    // ---- misc ----------------------------------------------------------------
+    pub fn nop(&mut self) -> &mut Self {
+        self.emit(Instruction::nop())
+    }
+    pub fn halt(&mut self) -> &mut Self {
+        self.emit(Instruction::halt())
+    }
+
+    /// Resolve labels and produce the program.
+    pub fn assemble(mut self) -> Program {
+        for (idx, label) in &self.fixups {
+            let target = self.labels[label.0].unwrap_or_else(|| {
+                panic!(
+                    "unbound label '{}' used at instruction {idx}",
+                    self.label_names[label.0]
+                )
+            });
+            self.instrs[*idx].imm = target as i32;
+        }
+        let mut prog = Program::new(&self.name);
+        prog.instrs = std::mem::take(&mut self.instrs);
+        self.data.finish(&mut prog);
+        prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Opcode;
+
+    #[test]
+    fn forward_and_backward_labels_resolve() {
+        let mut a = Asm::new("t");
+        let top = a.label("top");
+        let done = a.label("done");
+        a.li(1, 0);
+        a.bind(top);
+        a.addi(1, 1, 1);
+        a.li(2, 10);
+        a.beq(1, 2, done); // forward
+        a.jump(top); // backward
+        a.bind(done);
+        a.halt();
+        let p = a.assemble();
+        assert_eq!(p.instrs[3].op, Opcode::Beq);
+        assert_eq!(p.instrs[3].imm, 5); // 'done' = index of halt
+        assert_eq!(p.instrs[4].op, Opcode::Jal);
+        assert_eq!(p.instrs[4].imm, 1); // 'top'
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound label")]
+    fn unbound_label_panics() {
+        let mut a = Asm::new("t");
+        let l = a.label("missing");
+        a.jump(l);
+        let _ = a.assemble();
+    }
+
+    #[test]
+    #[should_panic(expected = "bound twice")]
+    fn double_bind_panics() {
+        let mut a = Asm::new("t");
+        let l = a.label("l");
+        a.bind(l);
+        a.nop();
+        a.bind(l);
+    }
+
+    #[test]
+    fn data_and_code_together() {
+        let mut a = Asm::new("t");
+        let arr = a.data.alloc_i32("arr", &[7, 8, 9]);
+        a.li(1, arr as i32);
+        a.lw(2, 1, 4);
+        a.halt();
+        let p = a.assemble();
+        assert_eq!(p.symbol("arr"), Some(arr));
+        assert_eq!(p.instrs.len(), 3);
+        assert_eq!(p.data.len(), 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Assembly front ends: the builder eDSL (used by `workloads/`) and a text
+//! assembler for `.s` files (used by the CLI `run --asm`).
+
+pub mod builder;
+pub mod parser;
+pub mod program;
+
+pub use builder::{Asm, Label};
+pub use program::{DataBuilder, DataWord, Program};

@@ -1,0 +1,319 @@
+//! Text assembler: parses `.s`-style EVA32 assembly into a [`Program`].
+//!
+//! Grammar (one statement per line, `#` comments):
+//!
+//! ```text
+//! label:
+//!     addi r1, r0, 5
+//!     lw   r2, 8(r1)
+//!     beq  r1, r2, label
+//!     fadd f0, f1, f2
+//!     halt
+//! ```
+//!
+//! Branch targets may be labels or absolute instruction indices.
+
+use crate::isa::{Instruction, Opcode, RegId, NUM_FP_REGS, NUM_INT_REGS, R0};
+
+use super::program::Program;
+
+#[derive(Debug, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+fn parse_reg(tok: &str, line: usize) -> Result<RegId, ParseError> {
+    let tok = tok.trim();
+    if let Some(n) = tok.strip_prefix('r') {
+        let i: u8 = n.parse().map_err(|_| err(line, format!("bad register '{tok}'")))?;
+        if i >= NUM_INT_REGS {
+            return Err(err(line, format!("integer register out of range '{tok}'")));
+        }
+        Ok(i)
+    } else if let Some(n) = tok.strip_prefix('f') {
+        let i: u8 = n.parse().map_err(|_| err(line, format!("bad register '{tok}'")))?;
+        if i >= NUM_FP_REGS {
+            return Err(err(line, format!("float register out of range '{tok}'")));
+        }
+        Ok(NUM_INT_REGS + i)
+    } else {
+        Err(err(line, format!("expected register, got '{tok}'")))
+    }
+}
+
+fn parse_imm(tok: &str, line: usize) -> Result<i32, ParseError> {
+    let tok = tok.trim();
+    let (neg, body) = match tok.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, tok),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16)
+    } else {
+        body.parse::<i64>()
+    }
+    .map_err(|_| err(line, format!("bad immediate '{tok}'")))?;
+    let v = if neg { -v } else { v };
+    i32::try_from(v).map_err(|_| err(line, format!("immediate overflow '{tok}'")))
+}
+
+/// `8(r2)` → (offset, base-register)
+fn parse_mem_operand(tok: &str, line: usize) -> Result<(i32, RegId), ParseError> {
+    let tok = tok.trim();
+    let open = tok
+        .find('(')
+        .ok_or_else(|| err(line, format!("expected off(base), got '{tok}'")))?;
+    if !tok.ends_with(')') {
+        return Err(err(line, format!("expected off(base), got '{tok}'")));
+    }
+    let off = if open == 0 { 0 } else { parse_imm(&tok[..open], line)? };
+    let base = parse_reg(&tok[open + 1..tok.len() - 1], line)?;
+    Ok((off, base))
+}
+
+enum Target {
+    Label(String),
+    Abs(i32),
+}
+
+fn parse_target(tok: &str) -> Target {
+    let tok = tok.trim();
+    match tok.parse::<i32>() {
+        Ok(v) => Target::Abs(v),
+        Err(_) => Target::Label(tok.to_string()),
+    }
+}
+
+/// Parse assembly text into a program named `name`.
+pub fn parse(name: &str, text: &str) -> Result<Program, ParseError> {
+    use Opcode::*;
+    let mut instrs: Vec<Instruction> = Vec::new();
+    let mut labels: std::collections::HashMap<String, usize> =
+        std::collections::HashMap::new();
+    let mut fixups: Vec<(usize, String, usize)> = Vec::new(); // instr, label, line
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let mut src = raw;
+        if let Some(p) = src.find('#') {
+            src = &src[..p];
+        }
+        let mut src = src.trim();
+        // labels (possibly followed by an instruction on the same line)
+        while let Some(colon) = src.find(':') {
+            let lbl = src[..colon].trim();
+            if lbl.is_empty() || lbl.contains(char::is_whitespace) {
+                return Err(err(line, format!("bad label '{lbl}'")));
+            }
+            if labels.insert(lbl.to_string(), instrs.len()).is_some() {
+                return Err(err(line, format!("duplicate label '{lbl}'")));
+            }
+            src = src[colon + 1..].trim();
+        }
+        if src.is_empty() {
+            continue;
+        }
+
+        let (mn, rest) = match src.find(char::is_whitespace) {
+            Some(p) => (&src[..p], src[p..].trim()),
+            None => (src, ""),
+        };
+        let op = Opcode::from_mnemonic(mn)
+            .ok_or_else(|| err(line, format!("unknown mnemonic '{mn}'")))?;
+        let ops: Vec<&str> = if rest.is_empty() {
+            Vec::new()
+        } else {
+            rest.split(',').map(|s| s.trim()).collect()
+        };
+        let need = |n: usize| -> Result<(), ParseError> {
+            if ops.len() == n {
+                Ok(())
+            } else {
+                Err(err(line, format!("'{mn}' expects {n} operands, got {}", ops.len())))
+            }
+        };
+
+        let instr = match op {
+            Nop | Halt => {
+                need(0)?;
+                Instruction::new(op, R0, R0, R0, 0)
+            }
+            Lui => {
+                need(2)?;
+                Instruction::new(op, parse_reg(ops[0], line)?, R0, R0, parse_imm(ops[1], line)?)
+            }
+            Lw | Lb | Flw => {
+                need(2)?;
+                let rd = parse_reg(ops[0], line)?;
+                let (off, base) = parse_mem_operand(ops[1], line)?;
+                Instruction::new(op, rd, base, R0, off)
+            }
+            Sw | Sb | Fsw => {
+                need(2)?;
+                let val = parse_reg(ops[0], line)?;
+                let (off, base) = parse_mem_operand(ops[1], line)?;
+                Instruction::new(op, R0, base, val, off)
+            }
+            Beq | Bne | Blt | Bge | Bltu | Bgeu => {
+                need(3)?;
+                let rs1 = parse_reg(ops[0], line)?;
+                let rs2 = parse_reg(ops[1], line)?;
+                match parse_target(ops[2]) {
+                    Target::Abs(t) => Instruction::new(op, R0, rs1, rs2, t),
+                    Target::Label(l) => {
+                        fixups.push((instrs.len(), l, line));
+                        Instruction::new(op, R0, rs1, rs2, 0)
+                    }
+                }
+            }
+            Jal => {
+                need(2)?;
+                let rd = parse_reg(ops[0], line)?;
+                match parse_target(ops[1]) {
+                    Target::Abs(t) => Instruction::new(op, rd, R0, R0, t),
+                    Target::Label(l) => {
+                        fixups.push((instrs.len(), l, line));
+                        Instruction::new(op, rd, R0, R0, 0)
+                    }
+                }
+            }
+            Jalr => {
+                need(3)?;
+                Instruction::new(
+                    op,
+                    parse_reg(ops[0], line)?,
+                    parse_reg(ops[1], line)?,
+                    R0,
+                    parse_imm(ops[2], line)?,
+                )
+            }
+            Addi | Andi | Ori | Xori | Slli | Srli | Srai | Slti => {
+                need(3)?;
+                Instruction::new(
+                    op,
+                    parse_reg(ops[0], line)?,
+                    parse_reg(ops[1], line)?,
+                    R0,
+                    parse_imm(ops[2], line)?,
+                )
+            }
+            Fcvtws | Fcvtsw | Fmv => {
+                need(2)?;
+                Instruction::new(
+                    op,
+                    parse_reg(ops[0], line)?,
+                    parse_reg(ops[1], line)?,
+                    R0,
+                    0,
+                )
+            }
+            // three-register forms (int and fp)
+            _ => {
+                need(3)?;
+                Instruction::new(
+                    op,
+                    parse_reg(ops[0], line)?,
+                    parse_reg(ops[1], line)?,
+                    parse_reg(ops[2], line)?,
+                    0,
+                )
+            }
+        };
+        instrs.push(instr);
+    }
+
+    for (idx, label, line) in fixups {
+        let target = *labels
+            .get(&label)
+            .ok_or_else(|| err(line, format!("undefined label '{label}'")))?;
+        instrs[idx].imm = target as i32;
+    }
+
+    let mut prog = Program::new(name);
+    prog.instrs = instrs;
+    prog.dmem_size = 64 * 1024;
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::freg;
+
+    #[test]
+    fn parses_basic_program() {
+        let p = parse(
+            "t",
+            r#"
+            # simple loop
+            start:
+                addi r1, r0, 0
+                addi r2, r0, 10
+            loop:
+                addi r1, r1, 1
+                bne  r1, r2, loop
+                lw   r3, 8(r1)
+                sw   r3, -4(r2)
+                fadd f0, f1, f2
+                halt
+            "#,
+        )
+        .unwrap();
+        assert_eq!(p.instrs.len(), 8);
+        assert_eq!(p.instrs[3].op, Opcode::Bne);
+        assert_eq!(p.instrs[3].imm, 2); // 'loop'
+        assert_eq!(p.instrs[4].disasm(), "lw r3, 8(r1)");
+        assert_eq!(p.instrs[5].disasm(), "sw r3, -4(r2)");
+        assert_eq!(p.instrs[6].rd, freg(0));
+    }
+
+    #[test]
+    fn disasm_parse_roundtrip() {
+        // every parse-able disasm must re-parse to the same instruction
+        let p = parse(
+            "t",
+            "add r1, r2, r3\naddi r4, r1, -9\nlw r5, 0(r4)\n\
+             sw r5, 12(r2)\nbeq r1, r2, 0\njal r1, 3\njalr r0, r1, 0\n\
+             fmul f1, f2, f3\nfcvt.w.s r6, f1\nlui r7, 4096\nhalt",
+        )
+        .unwrap();
+        for i in &p.instrs {
+            let text = i.disasm();
+            let q = parse("r", &text).unwrap();
+            assert_eq!(&q.instrs[0], i, "roundtrip of '{text}'");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic_and_bad_reg() {
+        assert!(parse("t", "bogus r1, r2, r3").is_err());
+        assert!(parse("t", "add r1, r2, r99").is_err());
+        assert!(parse("t", "add r1, r2").is_err());
+        assert!(parse("t", "beq r1, r2, nowhere").is_err());
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        assert!(parse("t", "a:\nnop\na:\nnop").is_err());
+    }
+
+    #[test]
+    fn hex_and_negative_immediates() {
+        let p = parse("t", "addi r1, r0, 0x10\naddi r2, r0, -0x10").unwrap();
+        assert_eq!(p.instrs[0].imm, 16);
+        assert_eq!(p.instrs[1].imm, -16);
+    }
+}

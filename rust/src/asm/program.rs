@@ -1,0 +1,161 @@
+//! Program container: code + initial data image + symbol table.
+
+use crate::isa::Instruction;
+
+/// Word-aligned data-memory image entry.
+#[derive(Clone, Debug)]
+pub struct DataWord {
+    pub addr: u32,
+    pub value: u32,
+}
+
+/// A complete EVA32 program: the unit fed to the simulator.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub name: String,
+    pub instrs: Vec<Instruction>,
+    /// initial data-memory contents (word granularity)
+    pub data: Vec<DataWord>,
+    /// named data symbols: (name, base address, size in bytes)
+    pub symbols: Vec<(String, u32, u32)>,
+    /// total bytes of data memory the program requires
+    pub dmem_size: u32,
+}
+
+impl Program {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Encode the text segment into 64-bit words (the "binary").
+    pub fn encode_text(&self) -> Vec<u64> {
+        self.instrs.iter().map(|i| i.encode()).collect()
+    }
+
+    /// Decode a binary back into a program (no data/symbols).
+    pub fn decode_text(name: &str, words: &[u64]) -> Option<Self> {
+        let instrs: Option<Vec<_>> =
+            words.iter().map(|w| Instruction::decode(*w)).collect();
+        Some(Self {
+            name: name.to_string(),
+            instrs: instrs?,
+            ..Default::default()
+        })
+    }
+
+    pub fn symbol(&self, name: &str) -> Option<u32> {
+        self.symbols
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, addr, _)| *addr)
+    }
+
+    /// Full disassembly listing.
+    pub fn listing(&self) -> String {
+        let mut s = String::new();
+        for (i, instr) in self.instrs.iter().enumerate() {
+            s.push_str(&format!("{i:6}:  {}\n", instr.disasm()));
+        }
+        s
+    }
+}
+
+/// Bump allocator building the initial data image for a workload.
+#[derive(Debug, Default)]
+pub struct DataBuilder {
+    next: u32,
+    words: Vec<DataWord>,
+    symbols: Vec<(String, u32, u32)>,
+}
+
+impl DataBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve `bytes` (rounded up to a word) and name the region.
+    pub fn alloc(&mut self, name: &str, bytes: u32) -> u32 {
+        let base = self.next;
+        let rounded = (bytes + 3) & !3;
+        self.symbols.push((name.to_string(), base, rounded));
+        self.next += rounded;
+        base
+    }
+
+    /// Allocate and initialize an i32 array.
+    pub fn alloc_i32(&mut self, name: &str, values: &[i32]) -> u32 {
+        let base = self.alloc(name, (values.len() * 4) as u32);
+        for (i, v) in values.iter().enumerate() {
+            self.words.push(DataWord {
+                addr: base + (i * 4) as u32,
+                value: *v as u32,
+            });
+        }
+        base
+    }
+
+    /// Allocate and initialize an f32 array (bit-cast into words).
+    pub fn alloc_f32(&mut self, name: &str, values: &[f32]) -> u32 {
+        let base = self.alloc(name, (values.len() * 4) as u32);
+        for (i, v) in values.iter().enumerate() {
+            self.words.push(DataWord {
+                addr: base + (i * 4) as u32,
+                value: v.to_bits(),
+            });
+        }
+        base
+    }
+
+    /// Total bytes allocated so far.
+    pub fn size(&self) -> u32 {
+        self.next
+    }
+
+    /// Merge into a program (consumes the builder).
+    pub fn finish(self, prog: &mut Program) {
+        prog.data = self.words;
+        prog.symbols = self.symbols;
+        // leave headroom for stack (64 kB) above the data segment
+        prog.dmem_size = self.next + 64 * 1024;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instruction, Opcode};
+
+    #[test]
+    fn encode_decode_text() {
+        let mut p = Program::new("t");
+        p.instrs.push(Instruction::new(Opcode::Addi, 1, 0, 0, 5));
+        p.instrs.push(Instruction::halt());
+        let words = p.encode_text();
+        let q = Program::decode_text("t", &words).unwrap();
+        assert_eq!(q.instrs, p.instrs);
+    }
+
+    #[test]
+    fn data_builder_layout() {
+        let mut db = DataBuilder::new();
+        let a = db.alloc_i32("a", &[1, 2, 3]);
+        let b = db.alloc_f32("b", &[1.5]);
+        assert_eq!(a, 0);
+        assert_eq!(b, 12);
+        let mut p = Program::new("t");
+        db.finish(&mut p);
+        assert_eq!(p.symbol("a"), Some(0));
+        assert_eq!(p.symbol("b"), Some(12));
+        assert_eq!(p.data.len(), 4);
+        assert_eq!(p.data[3].value, 1.5f32.to_bits());
+        assert!(p.dmem_size >= 16 + 64 * 1024 - 4);
+    }
+
+    #[test]
+    fn alloc_rounds_to_words() {
+        let mut db = DataBuilder::new();
+        db.alloc("x", 5);
+        let y = db.alloc("y", 4);
+        assert_eq!(y, 8);
+    }
+}

@@ -1,0 +1,315 @@
+//! System configuration: core, memory hierarchy, CiM placement, technology.
+//!
+//! Mirrors the paper's experimental setup (§VI): ARM Cortex-A9-class
+//! out-of-order core at 1 GHz, 512 MB main memory, and the three cache
+//! configurations of Fig 14.  Presets are in [`SystemConfig::preset`];
+//! everything can be overridden via the TOML-subset files in `parse`.
+
+pub mod parse;
+
+/// Memory technology of the cache arrays (and their CiM peripherals).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Technology {
+    Sram,
+    Fefet,
+}
+
+impl Technology {
+    pub fn index(&self) -> usize {
+        match self {
+            Technology::Sram => 0,
+            Technology::Fefet => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Technology::Sram => "sram",
+            Technology::Fefet => "fefet",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sram" | "cmos" => Some(Technology::Sram),
+            "fefet" | "fefet-ram" => Some(Technology::Fefet),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Technology; 2] {
+        [Technology::Sram, Technology::Fefet]
+    }
+}
+
+/// Which cache levels have CiM-capable arrays (Fig 15 sweep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CimLevels {
+    None,
+    L1Only,
+    L2Only,
+    Both,
+}
+
+impl CimLevels {
+    pub fn l1(&self) -> bool {
+        matches!(self, CimLevels::L1Only | CimLevels::Both)
+    }
+
+    pub fn l2(&self) -> bool {
+        matches!(self, CimLevels::L2Only | CimLevels::Both)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CimLevels::None => "none",
+            CimLevels::L1Only => "l1",
+            CimLevels::L2Only => "l2",
+            CimLevels::Both => "l1+l2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(CimLevels::None),
+            "l1" => Some(CimLevels::L1Only),
+            "l2" => Some(CimLevels::L2Only),
+            "both" | "l1+l2" => Some(CimLevels::Both),
+            _ => None,
+        }
+    }
+}
+
+/// Out-of-order core parameters (Cortex-A9-class defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreConfig {
+    /// instructions fetched/decoded/committed per cycle
+    pub width: usize,
+    pub rob_entries: usize,
+    pub iq_entries: usize,
+    pub lsq_entries: usize,
+    /// branch mispredict pipeline refill penalty (cycles)
+    pub mispredict_penalty: u64,
+    /// number of parallel integer ALUs
+    pub int_alu_units: usize,
+    pub int_mul_units: usize,
+    pub fp_units: usize,
+    pub mem_ports: usize,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        Self {
+            width: 2,
+            rob_entries: 40,
+            iq_entries: 24,
+            lsq_entries: 16,
+            mispredict_penalty: 12,
+            int_alu_units: 2,
+            int_mul_units: 1,
+            fp_units: 1,
+            mem_ports: 1,
+        }
+    }
+}
+
+/// One cache level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    pub capacity: u32,
+    pub assoc: u32,
+    pub line: u32,
+    pub banks: u32,
+    /// hit latency (cycles)
+    pub latency: u64,
+    pub mshr_entries: usize,
+}
+
+impl CacheConfig {
+    pub fn new(capacity: u32, assoc: u32, latency: u64) -> Self {
+        Self { capacity, assoc, line: 64, banks: 4, latency, mshr_entries: 8 }
+    }
+
+    pub fn sets(&self) -> u32 {
+        self.capacity / (self.assoc * self.line)
+    }
+
+    /// Pretty string like "64kB/4-way".
+    pub fn pretty(&self) -> String {
+        let cap = self.capacity;
+        let s = if cap >= 1024 * 1024 {
+            format!("{}MB", cap / (1024 * 1024))
+        } else {
+            format!("{}kB", cap / 1024)
+        };
+        format!("{s}/{}-way", self.assoc)
+    }
+}
+
+/// Main-memory model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DramConfig {
+    pub size: u64,
+    /// access latency (cycles)
+    pub latency: u64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        Self { size: 512 * 1024 * 1024, latency: 100 }
+    }
+}
+
+/// Full system configuration: the design point of a sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub name: String,
+    pub core: CoreConfig,
+    pub l1i: CacheConfig,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub dram: DramConfig,
+    pub tech: Technology,
+    pub cim_levels: CimLevels,
+    pub clock_ghz: f64,
+}
+
+impl SystemConfig {
+    /// Named presets matching the paper:
+    /// * `c1` — 32 kB/4-way L1, 256 kB/8-way L2 (validation + Table VI)
+    /// * `c2` — 64 kB/4-way L1, 256 kB/8-way L2 (Table III anchor, Fig 14)
+    /// * `c3` — 64 kB/4-way L1, 2 MB/8-way L2 (Fig 14)
+    /// * `spm1mb` — 1 MB single-level config approximating [23]'s SPM (Fig 12)
+    pub fn preset(name: &str) -> Option<SystemConfig> {
+        let mut cfg = SystemConfig {
+            name: name.to_string(),
+            core: CoreConfig::default(),
+            l1i: CacheConfig::new(32 * 1024, 4, 3),
+            l1d: CacheConfig::new(32 * 1024, 4, 3),
+            l2: CacheConfig::new(256 * 1024, 8, 10),
+            dram: DramConfig::default(),
+            tech: Technology::Sram,
+            cim_levels: CimLevels::Both,
+            clock_ghz: 1.0,
+        };
+        match name {
+            "c1" => {}
+            "c2" => {
+                cfg.l1d.capacity = 64 * 1024;
+                cfg.l1i.capacity = 64 * 1024;
+            }
+            "c3" => {
+                cfg.l1d.capacity = 64 * 1024;
+                cfg.l1i.capacity = 64 * 1024;
+                cfg.l2.capacity = 2 * 1024 * 1024;
+                cfg.l2.latency = 14;
+            }
+            "spm1mb" => {
+                // one big low-latency level: L1 = 1 MB, L2 pass-through-sized
+                cfg.l1d = CacheConfig::new(1024 * 1024, 8, 3);
+                cfg.l1i = CacheConfig::new(64 * 1024, 4, 3);
+                cfg.l2 = CacheConfig::new(2 * 1024 * 1024, 8, 10);
+            }
+            _ => return None,
+        }
+        Some(cfg)
+    }
+
+    /// All preset names.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["c1", "c2", "c3", "spm1mb"]
+    }
+
+    pub fn with_tech(mut self, tech: Technology) -> Self {
+        self.tech = tech;
+        self
+    }
+
+    pub fn with_cim(mut self, cim: CimLevels) -> Self {
+        self.cim_levels = cim;
+        self
+    }
+
+    /// Validate invariants; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        for (name, c) in [("l1i", &self.l1i), ("l1d", &self.l1d), ("l2", &self.l2)]
+        {
+            if !c.capacity.is_power_of_two() {
+                problems.push(format!("{name}: capacity must be a power of two"));
+            }
+            if !c.line.is_power_of_two() || c.line < 4 {
+                problems.push(format!("{name}: bad line size {}", c.line));
+            }
+            if c.assoc == 0 || c.capacity % (c.assoc * c.line) != 0 {
+                problems.push(format!("{name}: capacity not divisible by assoc*line"));
+            }
+            if !c.banks.is_power_of_two() {
+                problems.push(format!("{name}: banks must be a power of two"));
+            }
+        }
+        if self.l2.capacity < self.l1d.capacity {
+            problems.push("l2 smaller than l1d (non-inclusive hierarchies unsupported)".into());
+        }
+        if self.core.width == 0 || self.core.rob_entries < self.core.width {
+            problems.push("core: width/rob mismatch".into());
+        }
+        if self.clock_ghz <= 0.0 {
+            problems.push("clock must be positive".into());
+        }
+        problems
+    }
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig::preset("c1").unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        for name in SystemConfig::preset_names() {
+            let cfg = SystemConfig::preset(name).unwrap();
+            assert!(cfg.validate().is_empty(), "{name}: {:?}", cfg.validate());
+        }
+        assert!(SystemConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn paper_configs() {
+        let c1 = SystemConfig::preset("c1").unwrap();
+        assert_eq!(c1.l1d.capacity, 32 * 1024);
+        assert_eq!(c1.l2.capacity, 256 * 1024);
+        let c3 = SystemConfig::preset("c3").unwrap();
+        assert_eq!(c3.l2.capacity, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn sets_computed() {
+        let c = CacheConfig::new(32 * 1024, 4, 2);
+        assert_eq!(c.sets(), 128);
+        assert_eq!(c.pretty(), "32kB/4-way");
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = SystemConfig::default();
+        cfg.l1d.capacity = 3000;
+        assert!(!cfg.validate().is_empty());
+        let mut cfg2 = SystemConfig::default();
+        cfg2.l2.capacity = 16 * 1024;
+        assert!(!cfg2.validate().is_empty());
+    }
+
+    #[test]
+    fn cim_levels_flags() {
+        assert!(CimLevels::Both.l1() && CimLevels::Both.l2());
+        assert!(CimLevels::L1Only.l1() && !CimLevels::L1Only.l2());
+        assert!(!CimLevels::None.l1() && !CimLevels::None.l2());
+    }
+}

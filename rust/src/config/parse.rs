@@ -1,0 +1,212 @@
+//! TOML-subset config file parser (serde/toml are unavailable offline).
+//!
+//! Supported grammar: `[section]` headers, `key = value` lines, `#` comments.
+//! Values: integers (decimal, `0x`, size suffixes `k`/`m`), floats, strings.
+//!
+//! ```toml
+//! # example
+//! preset = "c1"
+//! tech = "fefet"
+//! cim = "l1+l2"
+//!
+//! [l1d]
+//! capacity = 64k
+//! assoc = 4
+//!
+//! [core]
+//! rob_entries = 64
+//! ```
+
+use super::{CimLevels, SystemConfig, Technology};
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn parse_num(v: &str) -> Option<f64> {
+    let v = v.trim().to_ascii_lowercase();
+    let (body, mult) = if let Some(b) = v.strip_suffix('k') {
+        (b.to_string(), 1024.0)
+    } else if let Some(b) = v.strip_suffix('m') {
+        (b.to_string(), 1024.0 * 1024.0)
+    } else {
+        (v.clone(), 1.0)
+    };
+    if let Some(hex) = body.strip_prefix("0x") {
+        return u64::from_str_radix(hex, 16).ok().map(|x| x as f64 * mult);
+    }
+    body.parse::<f64>().ok().map(|x| x * mult)
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && (v.starts_with('"') && v.ends_with('"')) {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+/// Parse `text` on top of the given base configuration.
+pub fn parse_into(text: &str, mut cfg: SystemConfig) -> Result<SystemConfig, ConfigError> {
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let mut src = raw;
+        if let Some(p) = src.find('#') {
+            src = &src[..p];
+        }
+        let src = src.trim();
+        if src.is_empty() {
+            continue;
+        }
+        if src.starts_with('[') {
+            if !src.ends_with(']') {
+                return Err(ConfigError(format!("line {line}: bad section header")));
+            }
+            section = src[1..src.len() - 1].trim().to_string();
+            continue;
+        }
+        let eq = src
+            .find('=')
+            .ok_or_else(|| ConfigError(format!("line {line}: expected key = value")))?;
+        let key = src[..eq].trim();
+        let value = src[eq + 1..].trim();
+        let num = parse_num(value);
+        let need_num = || {
+            num.ok_or_else(|| ConfigError(format!("line {line}: '{key}' needs a number")))
+        };
+
+        match (section.as_str(), key) {
+            ("", "preset") => {
+                let p = unquote(value);
+                cfg = SystemConfig::preset(&p).ok_or_else(|| {
+                    ConfigError(format!("line {line}: unknown preset '{p}'"))
+                })?;
+            }
+            ("", "name") => cfg.name = unquote(value),
+            ("", "tech") => {
+                let t = unquote(value);
+                cfg.tech = Technology::from_name(&t).ok_or_else(|| {
+                    ConfigError(format!("line {line}: unknown tech '{t}'"))
+                })?;
+            }
+            ("", "cim") => {
+                let c = unquote(value);
+                cfg.cim_levels = CimLevels::from_name(&c).ok_or_else(|| {
+                    ConfigError(format!("line {line}: unknown cim levels '{c}'"))
+                })?;
+            }
+            ("", "clock_ghz") => cfg.clock_ghz = need_num()?,
+            ("core", "width") => cfg.core.width = need_num()? as usize,
+            ("core", "rob_entries") => cfg.core.rob_entries = need_num()? as usize,
+            ("core", "iq_entries") => cfg.core.iq_entries = need_num()? as usize,
+            ("core", "lsq_entries") => cfg.core.lsq_entries = need_num()? as usize,
+            ("core", "mispredict_penalty") => {
+                cfg.core.mispredict_penalty = need_num()? as u64
+            }
+            ("core", "int_alu_units") => cfg.core.int_alu_units = need_num()? as usize,
+            ("core", "int_mul_units") => cfg.core.int_mul_units = need_num()? as usize,
+            ("core", "fp_units") => cfg.core.fp_units = need_num()? as usize,
+            ("core", "mem_ports") => cfg.core.mem_ports = need_num()? as usize,
+            ("dram", "latency") => cfg.dram.latency = need_num()? as u64,
+            ("dram", "size") => cfg.dram.size = need_num()? as u64,
+            (lvl @ ("l1i" | "l1d" | "l2"), k) => {
+                let c = match lvl {
+                    "l1i" => &mut cfg.l1i,
+                    "l1d" => &mut cfg.l1d,
+                    _ => &mut cfg.l2,
+                };
+                match k {
+                    "capacity" => c.capacity = need_num()? as u32,
+                    "assoc" => c.assoc = need_num()? as u32,
+                    "line" => c.line = need_num()? as u32,
+                    "banks" => c.banks = need_num()? as u32,
+                    "latency" => c.latency = need_num()? as u64,
+                    "mshr_entries" => c.mshr_entries = need_num()? as usize,
+                    _ => {
+                        return Err(ConfigError(format!(
+                            "line {line}: unknown key '{lvl}.{k}'"
+                        )))
+                    }
+                }
+            }
+            (s, k) => {
+                return Err(ConfigError(format!(
+                    "line {line}: unknown key '{}{}{k}'",
+                    s,
+                    if s.is_empty() { "" } else { "." },
+                )))
+            }
+        }
+    }
+    let problems = cfg.validate();
+    if !problems.is_empty() {
+        return Err(ConfigError(format!("invalid config: {}", problems.join("; "))));
+    }
+    Ok(cfg)
+}
+
+/// Parse from scratch (defaults = preset c1).
+pub fn parse(text: &str) -> Result<SystemConfig, ConfigError> {
+    parse_into(text, SystemConfig::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = parse(
+            r#"
+            preset = "c1"
+            tech = "fefet"       # switch technology
+            cim = "l1"
+            clock_ghz = 2.0
+
+            [l1d]
+            capacity = 64k
+            assoc = 8
+
+            [core]
+            rob_entries = 64
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.tech, Technology::Fefet);
+        assert_eq!(cfg.cim_levels, CimLevels::L1Only);
+        assert_eq!(cfg.l1d.capacity, 64 * 1024);
+        assert_eq!(cfg.l1d.assoc, 8);
+        assert_eq!(cfg.core.rob_entries, 64);
+        assert_eq!(cfg.clock_ghz, 2.0);
+    }
+
+    #[test]
+    fn size_suffixes() {
+        let cfg = parse("[l2]\ncapacity = 2m\n").unwrap();
+        assert_eq!(cfg.l2.capacity, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_invalid_result() {
+        assert!(parse("bogus = 1").is_err());
+        assert!(parse("[l1d]\nwhat = 3").is_err());
+        // capacity not a power of two -> validation error
+        assert!(parse("[l1d]\ncapacity = 3000").is_err());
+    }
+
+    #[test]
+    fn preset_then_overrides() {
+        let cfg = parse("preset = \"c3\"\n[l2]\nlatency = 20").unwrap();
+        assert_eq!(cfg.l2.capacity, 2 * 1024 * 1024);
+        assert_eq!(cfg.l2.latency, 20);
+    }
+}

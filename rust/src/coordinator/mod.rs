@@ -1,0 +1,274 @@
+//! The L3 coordinator: design-space-exploration sweeps.
+//!
+//! The coordinator is the leader of a worker pool: simulation + analysis +
+//! reshaping jobs (CPU-bound, trace-heavy) fan out across `std::thread`
+//! workers, traces are memoized per (benchmark, cache geometry) — the same
+//! trace serves every technology and CiM-placement variant — and the
+//! resulting design points are *batched* into PJRT executions of the AOT'd
+//! profiler graph (256 points per call, padded).
+//!
+//! This is the paper's tool-chain glue (Fig 1) turned into a runtime: one
+//! `sweep` call regenerates any of Figs 13–16 / Table VI.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::analyzer::{analyze, LocalityRule, Macr};
+use crate::config::SystemConfig;
+use crate::probes::Trace;
+use crate::profiler::{ProfileInputs, ProfileResult};
+use crate::reshape::reshape;
+use crate::runtime::Backend;
+use crate::sim::{simulate, Limits};
+use crate::workloads;
+
+/// One design point of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub bench: String,
+    pub config: SystemConfig,
+    pub rule: LocalityRule,
+}
+
+/// Per-point sweep output.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub bench: String,
+    pub config_name: String,
+    pub tech: crate::config::Technology,
+    pub cim_levels: crate::config::CimLevels,
+    pub macr: Macr,
+    pub committed: u64,
+    pub cycles: u64,
+    pub removed: u64,
+    pub cim_ops: u64,
+    pub result: ProfileResult,
+}
+
+/// Workload sizing knobs for a sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    /// problem-size hint handed to the workload generators
+    pub scale: usize,
+    pub seed: u64,
+    pub max_instructions: u64,
+    pub workers: usize,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            scale: 0, // 0 = workload default
+            seed: 42,
+            max_instructions: 5_000_000,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(8),
+        }
+    }
+}
+
+/// Key for the trace memo: geometry fields that affect simulation.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct SimKey {
+    bench: String,
+    l1i: (u32, u32, u32, u64),
+    l1d: (u32, u32, u32, u64),
+    l2: (u32, u32, u32, u64),
+    dram_latency: u64,
+    scale: usize,
+    seed: u64,
+}
+
+impl SimKey {
+    fn new(bench: &str, cfg: &SystemConfig, opts: &SweepOptions) -> Self {
+        let k = |c: &crate::config::CacheConfig| (c.capacity, c.assoc, c.line, c.latency);
+        Self {
+            bench: bench.to_string(),
+            l1i: k(&cfg.l1i),
+            l1d: k(&cfg.l1d),
+            l2: k(&cfg.l2),
+            dram_latency: cfg.dram.latency,
+            scale: opts.scale,
+            seed: opts.seed,
+        }
+    }
+}
+
+/// The sweep driver.
+pub struct Coordinator {
+    pub opts: SweepOptions,
+}
+
+impl Coordinator {
+    pub fn new(opts: SweepOptions) -> Self {
+        Self { opts }
+    }
+
+    /// Simulate (with memoization), analyze and reshape every point, then
+    /// evaluate the whole batch through `backend`.
+    pub fn run_sweep(
+        &self,
+        points: &[SweepPoint],
+        backend: &mut dyn Backend,
+    ) -> Result<Vec<SweepRow>> {
+        let opts = self.opts;
+        let memo: Mutex<HashMap<SimKey, Arc<Trace>>> = Mutex::new(HashMap::new());
+        let next: Mutex<usize> = Mutex::new(0);
+        let staged: Mutex<Vec<Option<(SweepRow, ProfileInputs)>>> =
+            Mutex::new((0..points.len()).map(|_| None).collect());
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+        std::thread::scope(|scope| {
+            for _ in 0..opts.workers.max(1) {
+                scope.spawn(|| loop {
+                    let idx = {
+                        let mut n = next.lock().unwrap();
+                        if *n >= points.len() {
+                            return;
+                        }
+                        let i = *n;
+                        *n += 1;
+                        i
+                    };
+                    let p = &points[idx];
+                    match Self::stage_point(p, &opts, &memo) {
+                        Ok(pair) => {
+                            staged.lock().unwrap()[idx] = Some(pair);
+                        }
+                        Err(e) => {
+                            errors
+                                .lock()
+                                .unwrap()
+                                .push(format!("{}/{}: {e:#}", p.bench, p.config.name));
+                        }
+                    }
+                });
+            }
+        });
+
+        let errors = errors.into_inner().unwrap();
+        if !errors.is_empty() {
+            return Err(anyhow!("sweep failures: {}", errors.join("; ")));
+        }
+        let staged: Vec<(SweepRow, ProfileInputs)> = staged
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("staged point missing"))
+            .collect();
+
+        // batched profiler evaluation (one PJRT execute per 256 points)
+        let inputs: Vec<ProfileInputs> =
+            staged.iter().map(|(_, i)| i.clone()).collect();
+        let results = backend.evaluate_batch(&inputs)?;
+        Ok(staged
+            .into_iter()
+            .zip(results)
+            .map(|((mut row, _), res)| {
+                row.result = res;
+                row
+            })
+            .collect())
+    }
+
+    fn stage_point(
+        p: &SweepPoint,
+        opts: &SweepOptions,
+        memo: &Mutex<HashMap<SimKey, Arc<Trace>>>,
+    ) -> Result<(SweepRow, ProfileInputs)> {
+        let key = SimKey::new(&p.bench, &p.config, opts);
+        let cached = memo.lock().unwrap().get(&key).cloned();
+        let trace = match cached {
+            Some(t) => t,
+            None => {
+                let prog = workloads::build(&p.bench, opts.scale, opts.seed)
+                    .ok_or_else(|| anyhow!("unknown benchmark '{}'", p.bench))?;
+                let t = simulate(
+                    &prog,
+                    &p.config,
+                    Limits { max_instructions: opts.max_instructions },
+                )?;
+                let t = Arc::new(t);
+                memo.lock().unwrap().insert(key, t.clone());
+                t
+            }
+        };
+        let analysis = analyze(&trace, &p.config, p.rule);
+        let reshaped = reshape(&trace, &analysis.selection, &p.config);
+        let inputs = ProfileInputs::new(&p.config, &reshaped);
+        let row = SweepRow {
+            bench: p.bench.clone(),
+            config_name: p.config.name.clone(),
+            tech: p.config.tech,
+            cim_levels: p.config.cim_levels,
+            macr: analysis.macr,
+            committed: trace.committed,
+            cycles: trace.cycles,
+            removed: reshaped.removed,
+            cim_ops: reshaped.cim_op_count,
+            result: ProfileResult::default(),
+        };
+        Ok((row, inputs))
+    }
+}
+
+/// Cartesian-product helper: benches × configs, one point each.
+pub fn cross(
+    benches: &[&str],
+    configs: &[SystemConfig],
+    rule: LocalityRule,
+) -> Vec<SweepPoint> {
+    let mut points = Vec::new();
+    for b in benches {
+        for c in configs {
+            points.push(SweepPoint {
+                bench: b.to_string(),
+                config: c.clone(),
+                rule,
+            });
+        }
+    }
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn sweep_two_benches_two_configs_native() {
+        let cfgs = [
+            SystemConfig::preset("c1").unwrap(),
+            SystemConfig::preset("c2").unwrap(),
+        ];
+        let points = cross(&["lcs", "kmeans"], &cfgs, LocalityRule::AnyCache);
+        let coord = Coordinator::new(SweepOptions {
+            scale: 8,
+            workers: 2,
+            ..Default::default()
+        });
+        let rows = coord.run_sweep(&points, &mut NativeBackend).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in rows {
+            assert!(r.committed > 0);
+            assert!(r.result.total_base > 0.0);
+            assert!(r.result.improvement > 0.0);
+        }
+    }
+
+    #[test]
+    fn unknown_bench_errors() {
+        let points = cross(
+            &["no_such_bench"],
+            &[SystemConfig::default()],
+            LocalityRule::AnyCache,
+        );
+        let coord = Coordinator::new(SweepOptions { workers: 1, ..Default::default() });
+        assert!(coord.run_sweep(&points, &mut NativeBackend).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Native DESTINY-lite array model — the Rust mirror of the L1 Pallas
+//! kernel (`python/compile/kernels/cim_energy.py`, oracle in `ref.py`).
+//!
+//! Power-law interpolation anchored at the published Table III points:
+//!
+//! ```text
+//! E(cap, assoc) = E_L1 · (cap_eff / 64 kB)^bE · (assoc / 4)^0.15
+//! bE = (ln(E_L2 / E_L1) − 0.15·ln 2) / ln 4
+//! lat(cap)      = LAT_L1 · (cap_eff / 64 kB)^bL,   bL = ln(L2/L1)/ln 4
+//! cap_eff       = cap · 4 / banks
+//! ```
+//!
+//! Exactness at the anchors is tested below; the PJRT artifact is
+//! cross-checked against this mirror in `rust/tests/runtime_artifacts.rs`.
+
+use crate::config::{CacheConfig, SystemConfig, Technology};
+
+use super::calib::*;
+
+/// A design-point row (what the AOT graph calls `cfg[B, NCFG]`).
+pub type CfgRow = [f64; NCFG];
+
+/// Build a config row for one cache level of a system config.
+pub fn cfg_row(cache: &CacheConfig, tech: Technology, level: u32) -> CfgRow {
+    [
+        cache.capacity as f64,
+        cache.assoc as f64,
+        cache.line as f64,
+        cache.banks as f64,
+        tech.index() as f64,
+        level as f64,
+    ]
+}
+
+/// L1 and L2 rows for a system config.
+pub fn cfg_rows(cfg: &SystemConfig) -> (CfgRow, CfgRow) {
+    (cfg_row(&cfg.l1d, cfg.tech, 1), cfg_row(&cfg.l2, cfg.tech, 2))
+}
+
+/// Per-op energy (pJ) and latency (cycles) for one design point.
+pub fn energy_latency(row: &CfgRow) -> ([f64; NOPS], [f64; NOPS]) {
+    let cap = row[CFG_CAPACITY];
+    let assoc = row[CFG_ASSOC].max(1.0);
+    let banks = row[CFG_BANKS].max(1.0);
+    let tech = (row[CFG_TECH] as usize).min(NTECH - 1);
+    let t = &TECH_TABLE[tech];
+
+    let ln4 = 4.0f64.ln();
+    let ln2 = 2.0f64.ln();
+    let cap_eff = cap * (ANCHOR_BANKS / banks);
+    let cap_n = (cap_eff / ANCHOR_L1_CAP).ln();
+    let assoc_f = (assoc / ANCHOR_ASSOC).powf(ASSOC_EXP);
+
+    let mut energy = [0.0; NOPS];
+    let mut lat = [0.0; NOPS];
+    for j in 0..NOPS {
+        let e1 = t[TP_E_L1 + j];
+        let e2 = t[TP_E_L2 + j];
+        let be = ((e2 / e1).ln() - ASSOC_EXP * ln2) / ln4;
+        energy[j] = e1 * (be * cap_n).exp() * assoc_f;
+
+        let l1 = t[TP_LAT_L1 + j];
+        let l2 = t[TP_LAT_L2 + j];
+        let bl = (l2 / l1).ln() / ln4;
+        lat[j] = l1 * (bl * cap_n).exp();
+    }
+    (energy, lat)
+}
+
+/// Batched version matching the AOT `energy_model` artifact signature.
+pub fn energy_latency_batch(rows: &[CfgRow]) -> (Vec<[f64; NOPS]>, Vec<[f64; NOPS]>) {
+    let mut es = Vec::with_capacity(rows.len());
+    let mut ls = Vec::with_capacity(rows.len());
+    for r in rows {
+        let (e, l) = energy_latency(r);
+        es.push(e);
+        ls.push(l);
+    }
+    (es, ls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn anchor_row(cap_kb: f64, assoc: f64, tech: usize) -> CfgRow {
+        [cap_kb * 1024.0, assoc, 64.0, 4.0, tech as f64, 1.0]
+    }
+
+    #[test]
+    fn reproduces_table3_anchors_exactly() {
+        for tech in 0..NTECH {
+            let (e1, l1) = energy_latency(&anchor_row(64.0, 4.0, tech));
+            let (e2, l2) = energy_latency(&anchor_row(256.0, 8.0, tech));
+            for j in 0..NOPS {
+                let t = &TECH_TABLE[tech];
+                assert!((e1[j] - t[TP_E_L1 + j]).abs() / t[TP_E_L1 + j] < 1e-9,
+                    "tech {tech} op {j} L1: {} vs {}", e1[j], t[TP_E_L1 + j]);
+                assert!((e2[j] - t[TP_E_L2 + j]).abs() / t[TP_E_L2 + j] < 1e-9,
+                    "tech {tech} op {j} L2: {} vs {}", e2[j], t[TP_E_L2 + j]);
+                assert!((l1[j] - t[TP_LAT_L1 + j]).abs() < 1e-9);
+                assert!((l2[j] - t[TP_LAT_L2 + j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_monotone_in_capacity() {
+        let caps = [16.0, 32.0, 64.0, 256.0, 2048.0];
+        for tech in 0..NTECH {
+            let mut prev = 0.0;
+            for &c in &caps {
+                let (e, _) = energy_latency(&anchor_row(c, 4.0, tech));
+                assert!(e[OP_READ] > prev, "cap {c} tech {tech}");
+                prev = e[OP_READ];
+            }
+        }
+    }
+
+    #[test]
+    fn fefet_reads_cheaper_logic_pricier() {
+        // Table III structure: FeFET read ≪ SRAM read, FeFET XOR > FeFET OR
+        let (es, _) = energy_latency(&anchor_row(64.0, 4.0, 0));
+        let (ef, _) = energy_latency(&anchor_row(64.0, 4.0, 1));
+        assert!(ef[OP_READ] < es[OP_READ]);
+        assert!(ef[OP_XOR] > ef[OP_OR]);
+    }
+
+    #[test]
+    fn banks_reduce_effective_bitline_energy() {
+        let mut few = anchor_row(256.0, 4.0, 0);
+        few[CFG_BANKS] = 2.0;
+        let mut many = anchor_row(256.0, 4.0, 0);
+        many[CFG_BANKS] = 8.0;
+        let (ef, _) = energy_latency(&few);
+        let (em, _) = energy_latency(&many);
+        assert!(em[OP_READ] < ef[OP_READ]);
+    }
+
+    #[test]
+    fn cfg_rows_from_system() {
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let (r1, r2) = cfg_rows(&cfg);
+        assert_eq!(r1[CFG_CAPACITY], 32.0 * 1024.0);
+        assert_eq!(r2[CFG_CAPACITY], 256.0 * 1024.0);
+        assert_eq!(r1[CFG_LEVEL], 1.0);
+        assert_eq!(r2[CFG_LEVEL], 2.0);
+        assert_eq!(r1[CFG_TECH], 0.0);
+    }
+}

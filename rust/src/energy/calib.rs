@@ -1,0 +1,191 @@
+//! Calibration constants — single source of truth on the Rust side.
+//!
+//! MUST mirror `python/compile/kernels/constants.py`: the same Table III /
+//! Fig 11 anchors feed both the AOT'd Pallas kernels and the native Rust
+//! model, and `runtime_artifacts.rs` cross-validates the two paths.
+//!
+//! Table VI calibration (core event energies, DRAM, leakage) lives in
+//! [`static_unit_energy`]; DESIGN.md §5 explains how the values were set.
+
+/// Per-op table columns (Table III).
+pub const OP_READ: usize = 0;
+pub const OP_WRITE: usize = 1;
+pub const OP_OR: usize = 2;
+pub const OP_AND: usize = 3;
+pub const OP_XOR: usize = 4;
+pub const OP_ADD: usize = 5;
+pub const NOPS: usize = 6;
+pub const OP_NAMES: [&str; NOPS] = ["read", "write", "cim_or", "cim_and", "cim_xor", "cim_add"];
+
+/// Config row layout (one cache level).
+pub const CFG_CAPACITY: usize = 0;
+pub const CFG_ASSOC: usize = 1;
+pub const CFG_LINE: usize = 2;
+pub const CFG_BANKS: usize = 3;
+pub const CFG_TECH: usize = 4;
+pub const CFG_LEVEL: usize = 5;
+pub const NCFG: usize = 6;
+
+pub const NTECH: usize = 2;
+pub const NTECH_PARAMS: usize = 4 * NOPS;
+
+/// Anchor geometry of Table III: L1 = 64 kB/4-way, L2 = 256 kB/8-way, 4 banks.
+pub const ANCHOR_L1_CAP: f64 = 64.0 * 1024.0;
+pub const ANCHOR_ASSOC: f64 = 4.0;
+pub const ANCHOR_BANKS: f64 = 4.0;
+pub const ASSOC_EXP: f64 = 0.15;
+
+/// H-tree / bus transport multiplier for *hierarchy* accesses: a regular
+/// read moves the line from the array through the H-tree, output drivers
+/// and bus to the LSQ (McPAT counts ≈2–4× the array-access energy at L1);
+/// a CiM operation computes inside the array and never pays this — the
+/// very asymmetry that makes CiM attractive.
+pub const XBUS_FACTOR: f64 = 4.0;
+
+/// `[NTECH][E_L1(6) | E_L2(6) | LAT_L1(6) | LAT_L2(6)]`
+/// Energies in pJ (Table III; write column interpolated), latencies in
+/// cycles at 1 GHz (Fig 11).
+pub const TECH_TABLE: [[f64; NTECH_PARAMS]; NTECH] = [
+    // SRAM:  read   write  or     and    xor    add
+    [61.0, 70.0, 71.0, 72.0, 79.0, 79.0,
+     314.0, 360.0, 341.0, 344.0, 365.0, 365.0,
+     2.0, 2.0, 2.0, 2.0, 2.0, 6.0,
+     8.0, 8.0, 8.0, 8.0, 8.0, 12.0],
+    // FeFET
+    [34.0, 44.0, 35.0, 88.0, 105.0, 105.0,
+     70.0, 91.0, 72.0, 146.0, 205.0, 205.0,
+     1.0, 1.0, 1.0, 1.0, 1.0, 4.0,
+     5.0, 5.0, 5.0, 5.0, 5.0, 9.0],
+];
+
+pub const TP_E_L1: usize = 0;
+pub const TP_E_L2: usize = NOPS;
+pub const TP_LAT_L1: usize = 2 * NOPS;
+pub const TP_LAT_L2: usize = 3 * NOPS;
+
+/// Flattened tech table as f32 (the PJRT input literal).
+pub fn tech_table_f32() -> Vec<f32> {
+    TECH_TABLE.iter().flatten().map(|&x| x as f32).collect()
+}
+
+use crate::reshape::counters::*;
+
+/// Per-event static unit energies (pJ), 45 nm Cortex-A9-class core.
+///
+/// Cache/CiM columns (22..42) are placeholders — the profiler overwrites
+/// them from the array model; only core events, DRAM and leakage matter
+/// here.  These values set Table VI's absolute improvement band: a
+/// Cortex-A9 @45 nm burns ~0.25 W/core at 1 GHz ⇒ ≈230 pJ/instruction at
+/// CPI≈1.  The host-side share of an offloaded instruction (≈200 pJ) plus
+/// the H-tree/bus transport of the cache accesses it removes (XBUS_FACTOR ×
+/// Table III array energy) dominates the 35–365 pJ in-array CiM op that
+/// replaces them — reproducing the paper's "improvement mainly contributed
+/// by the host side" with small ± cache-side contributions.
+pub fn static_unit_energy() -> [f64; NC] {
+    let mut u = [0.0f64; NC];
+    u[C_FETCH] = 50.0;
+    u[C_DECODE] = 19.0;
+    u[C_RENAME] = 25.0;
+    u[C_IQ_READS] = 13.0;
+    u[C_IQ_WRITES] = 15.0;
+    u[C_ROB_READS] = 13.0;
+    u[C_ROB_WRITES] = 15.0;
+    u[C_INT_RF_READS] = 8.0;
+    u[C_INT_RF_WRITES] = 10.0;
+    u[C_FP_RF_READS] = 11.0;
+    u[C_FP_RF_WRITES] = 14.0;
+    u[C_INT_ALU] = 63.0;
+    u[C_INT_MUL] = 155.0;
+    u[C_INT_DIV] = 375.0;
+    u[C_FP_ALU] = 113.0;
+    u[C_FP_MUL] = 188.0;
+    u[C_FP_DIV] = 500.0;
+    u[C_BRANCH] = 25.0;
+    u[C_BPRED_LOOKUPS] = 9.0;
+    u[C_BPRED_MISPREDICTS] = 125.0;
+    u[C_LSQ_READS] = 19.0;
+    u[C_LSQ_WRITES] = 23.0;
+    u[C_DRAM_READS] = 6000.0;
+    u[C_DRAM_WRITES] = 6500.0;
+    u[C_CYCLES] = 25.0; // leakage pJ/cycle (core + caches)
+    u
+}
+
+pub fn static_unit_energy_f32() -> Vec<f32> {
+    static_unit_energy().iter().map(|&x| x as f32).collect()
+}
+
+/// Component axis.
+pub const NCOMP: usize = 8;
+pub const COMP_CORE: usize = 0;
+pub const COMP_L1I: usize = 1;
+pub const COMP_L1D: usize = 2;
+pub const COMP_L2: usize = 3;
+pub const COMP_DRAM: usize = 4;
+pub const COMP_CIM_L1: usize = 5;
+pub const COMP_CIM_L2: usize = 6;
+pub const COMP_LEAK: usize = 7;
+pub const COMP_NAMES: [&str; NCOMP] =
+    ["core", "l1i", "l1d", "l2", "dram", "cim_l1", "cim_l2", "leak"];
+
+/// counter index → component index (mirrors `constants.group_matrix`).
+pub fn comp_of_counter(i: usize) -> usize {
+    match i {
+        0..=21 => COMP_CORE,
+        22..=23 => COMP_L1I,
+        24..=27 => COMP_L1D,
+        28..=31 => COMP_L2,
+        32..=33 => COMP_DRAM,
+        34..=37 => COMP_CIM_L1,
+        38..=41 => COMP_CIM_L2,
+        42 => COMP_LEAK,
+        _ => panic!("counter index {i} out of range"),
+    }
+}
+
+/// The [NC][NCOMP] one-hot grouping matrix flattened to f32 (PJRT input).
+pub fn group_matrix_f32() -> Vec<f32> {
+    let mut g = vec![0f32; NC * NCOMP];
+    for i in 0..NC {
+        g[i * NCOMP + comp_of_counter(i)] = 1.0;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tech_table_shape_and_anchors() {
+        assert_eq!(TECH_TABLE[0][TP_E_L1 + OP_READ], 61.0); // Table III
+        assert_eq!(TECH_TABLE[0][TP_E_L2 + OP_ADD], 365.0);
+        assert_eq!(TECH_TABLE[1][TP_E_L1 + OP_READ], 34.0);
+        assert_eq!(TECH_TABLE[1][TP_E_L2 + OP_XOR], 205.0);
+        // Fig 11: SRAM CiM-ADD ≈ read + 4 cycles
+        assert_eq!(
+            TECH_TABLE[0][TP_LAT_L1 + OP_ADD] - TECH_TABLE[0][TP_LAT_L1 + OP_READ],
+            4.0
+        );
+    }
+
+    #[test]
+    fn group_matrix_partitions() {
+        let g = group_matrix_f32();
+        for i in 0..NC {
+            let row: f32 = g[i * NCOMP..(i + 1) * NCOMP].iter().sum();
+            assert_eq!(row, 1.0);
+        }
+    }
+
+    #[test]
+    fn static_units_populated() {
+        let u = static_unit_energy();
+        assert!(u[C_FETCH] > 0.0);
+        assert!(u[C_DRAM_READS] > 1000.0);
+        assert!(u[C_CYCLES] > 0.0);
+        // cache/CiM columns left to the array model
+        assert_eq!(u[C_L1D_READ_HITS], 0.0);
+        assert_eq!(u[C_CIM_L1_ADD], 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Device/array/core energy models — the modeling-stage "CiM module model"
+//! (paper §V-B) plus the McPAT-lite per-event core model (§V-C).
+//!
+//! Everything here is the *native mirror* of the AOT'd JAX graph; the
+//! PJRT path (`runtime/`) must agree with it to float32 tolerance
+//! (cross-checked in `rust/tests/runtime_artifacts.rs`).
+
+pub mod array;
+pub mod calib;
+pub mod mcpat;
+
+pub use array::{cfg_row, cfg_rows, energy_latency, CfgRow};
+pub use mcpat::{aggregate, destiny_only_estimate, unit_energy};

@@ -1,0 +1,361 @@
+//! Experiment harness: one function per table/figure of the paper's
+//! evaluation (§VI).  Shared by the CLI (`eva-cim table <id>`), the bench
+//! targets (`cargo bench`) and the examples — DESIGN.md §4 maps each
+//! experiment to its bench target.
+
+use anyhow::Result;
+
+use crate::analyzer::{self, baseline, LocalityRule};
+use crate::config::{CimLevels, SystemConfig, Technology};
+use crate::coordinator::{cross, Coordinator, SweepOptions, SweepPoint, SweepRow};
+use crate::energy::{self, calib::*};
+use crate::profiler::ProfileInputs;
+use crate::reshape;
+use crate::runtime::Backend;
+use crate::sim::{simulate, Limits};
+use crate::util::stats;
+use crate::util::table::{f, TextTable};
+use crate::workloads;
+
+/// The 17 paper benchmarks in Table VI order.
+pub fn paper_benches() -> Vec<&'static str> {
+    workloads::NAMES.to_vec()
+}
+
+/// Table III: cache energy (pJ) per operation, SRAM and FeFET, both levels.
+pub fn table3() -> TextTable {
+    let mut t = TextTable::new(
+        "Table III — cache energy (pJ) per operation",
+        &["tech", "level", "config", "non-CiM read", "CiM-OR", "CiM-AND", "CiM-XOR", "CiM-ADDW32"],
+    );
+    for tech in Technology::all() {
+        for (level, cap_kb, assoc) in [("L1", 64.0, 4.0), ("L2", 256.0, 8.0)] {
+            let row = [cap_kb * 1024.0, assoc, 64.0, 4.0, tech.index() as f64,
+                       if level == "L1" { 1.0 } else { 2.0 }];
+            let (e, _) = energy::energy_latency(&row);
+            t.row(vec![
+                tech.name().to_uppercase(),
+                level.into(),
+                format!("{}-way/{}kB", assoc as u32, cap_kb as u32),
+                f(e[OP_READ], 0),
+                f(e[OP_OR], 0),
+                f(e[OP_AND], 0),
+                f(e[OP_XOR], 0),
+                f(e[OP_ADD], 0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 11: access latency (cycles) of non-CiM and CiM operations.
+pub fn fig11() -> TextTable {
+    let mut t = TextTable::new(
+        "Fig 11 — access latency (cycles) of non-CiM and CiM operations @1GHz",
+        &["tech", "level", "read", "or", "and", "xor", "add"],
+    );
+    for tech in Technology::all() {
+        for (level, cap_kb, assoc, lv) in [("L1", 64.0, 4.0, 1.0), ("L2", 256.0, 8.0, 2.0)] {
+            let row = [cap_kb * 1024.0, assoc, 64.0, 4.0, tech.index() as f64, lv];
+            let (_, l) = energy::energy_latency(&row);
+            t.row(vec![
+                tech.name().to_uppercase(),
+                level.into(),
+                f(l[OP_READ], 1),
+                f(l[OP_OR], 1),
+                f(l[OP_AND], 1),
+                f(l[OP_XOR], 1),
+                f(l[OP_ADD], 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table V: Eva-CiM vs array-level-only (DESTINY) energy on an LCS trace.
+///
+/// The paper reports ≈24% deviation for both CiM and non-CiM instructions:
+/// Eva-CiM adds the multi-level-hierarchy effects (misses, refills, core
+/// interactions) that the array-only estimate omits.
+pub fn table5(backend: &mut dyn Backend, scale: usize) -> Result<TextTable> {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let prog = workloads::build("lcs", scale, 42).unwrap();
+    let trace = simulate(&prog, &cfg, Limits::default())?;
+    let analysis = analyzer::analyze(&trace, &cfg, LocalityRule::AnyCache);
+    let reshaped = reshape::reshape(&trace, &analysis.selection, &cfg);
+    let inputs = ProfileInputs::new(&cfg, &reshaped);
+    let res = backend.evaluate_batch(&[inputs.clone()])?.remove(0);
+
+    // Eva-CiM's memory-side energy split into CiM vs non-CiM portions.
+    // The CiM share includes the hierarchy's data-locality management:
+    // cross-level operand moves and result readbacks (§IV-C) — exactly the
+    // effects the array-only estimate cannot see.
+    let (e1, _) = energy::energy_latency(&inputs.cfg_l1);
+    let (e2, _) = energy::energy_latency(&inputs.cfg_l2);
+    let mut overhead = 0.0;
+    for c in &analysis.selection.candidates {
+        let (rd_src, wr_dst, rd_back) = match c.level {
+            crate::probes::MemLevel::L2 => (e1[OP_READ], e2[OP_WRITE], e2[OP_READ]),
+            _ => (e2[OP_READ], e1[OP_WRITE], e1[OP_READ]),
+        };
+        overhead += c.moves as f64 * (rd_src + wr_dst);
+        overhead += c.readbacks as f64 * rd_back;
+        // rereads of operands shared with earlier candidates
+        overhead += c.shared_loads.len() as f64 * rd_back;
+    }
+    let eva_cim = (res.comps_cim[COMP_CIM_L1] + res.comps_cim[COMP_CIM_L2]
+        + overhead) / 1000.0;
+    // compare at *array* level (÷ XBUS_FACTOR): DESTINY models the array
+    // only, so the H-tree/bus transport must be excluded on both sides —
+    // the remaining deviation is the hierarchy-event accounting (misses,
+    // refills, I-fetch traffic) that Eva-CiM adds on top of DESTINY.
+    let eva_non = (res.comps_cim[COMP_L1I] + res.comps_cim[COMP_L1D]
+        + res.comps_cim[COMP_L2]) / XBUS_FACTOR / 1000.0;
+    // array-only (DESTINY-style) estimate of the same reshaped activity
+    let (d_cim, d_non) = energy::destiny_only_estimate(
+        &inputs.counters_cim, &inputs.cfg_l1, &inputs.cfg_l2);
+    let (d_cim, d_non) = (d_cim / 1000.0, d_non / 1000.0);
+
+    let mut t = TextTable::new(
+        "Table V — energy (nJ) comparison: array-only (DESTINY) vs Eva-CiM (LCS trace)",
+        &["model", "CiM", "non-CiM"],
+    );
+    t.row(vec!["DESTINY (array-only)".into(), f(d_cim, 2), f(d_non, 2)]);
+    t.row(vec!["Eva-CiM".into(), f(eva_cim, 2), f(eva_non, 2)]);
+    t.row(vec![
+        "Deviation".into(),
+        format!("{:.1}%", stats::rel_dev(eva_cim, d_cim) * 100.0),
+        format!("{:.1}%", stats::rel_dev(eva_non, d_non) * 100.0),
+    ]);
+    Ok(t)
+}
+
+/// Fig 12: CiM-supported memory-access fraction, Eva-CiM vs Jain [23],
+/// LCS over `runs` random inputs on the 1 MB SPM-like config.
+pub fn fig12(runs: usize, scale: usize) -> Result<TextTable> {
+    let cfg = SystemConfig::preset("spm1mb").unwrap();
+    let mut eva = Vec::new();
+    let mut jain = Vec::new();
+    for r in 0..runs {
+        let prog = workloads::build("lcs", scale, 1000 + r as u64).unwrap();
+        let trace = simulate(&prog, &cfg, Limits::default())?;
+        let analysis = analyzer::analyze(&trace, &cfg, LocalityRule::AnyCache);
+        eva.push(analysis.macr.ratio());
+        jain.push(baseline::classify(&trace.ciq).cim_fraction());
+    }
+    let mut t = TextTable::new(
+        &format!("Fig 12 — CiM-supported memory accesses on LCS ({runs} runs, 1MB config)"),
+        &["method", "mean", "min", "max"],
+    );
+    for (name, xs) in [("Eva-CiM (IDG)", &eva), ("Jain et al. [23]", &jain)] {
+        t.row(vec![
+            name.into(),
+            format!("{:.1}%", stats::mean(xs) * 100.0),
+            format!("{:.1}%", stats::percentile(xs, 0.0) * 100.0),
+            format!("{:.1}%", stats::percentile(xs, 100.0) * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+fn run_paper_sweep(
+    configs: &[SystemConfig],
+    opts: SweepOptions,
+    backend: &mut dyn Backend,
+) -> Result<Vec<SweepRow>> {
+    let benches = paper_benches();
+    let points: Vec<SweepPoint> = cross(&benches, configs, LocalityRule::AnyCache);
+    Coordinator::new(opts).run_sweep(&points, backend)
+}
+
+/// Fig 13: MACR per benchmark with L1/other breakdown.
+pub fn fig13(opts: SweepOptions) -> Result<TextTable> {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let mut backend = crate::runtime::NativeBackend;
+    let rows = run_paper_sweep(&[cfg], opts, &mut backend)?;
+    let mut t = TextTable::new(
+        "Fig 13 — MACR per benchmark (top) and L1/other breakdown (bottom)",
+        &["bench", "MACR", "L1 share", "other share", "accesses", "convertible"],
+    );
+    for r in &rows {
+        t.row(vec![
+            workloads::display_name(&r.bench).into(),
+            format!("{:.1}%", r.macr.ratio() * 100.0),
+            format!("{:.1}%", r.macr.l1_share() * 100.0),
+            format!("{:.1}%", (1.0 - r.macr.l1_share()) * 100.0),
+            format!("{}", r.macr.total_accesses),
+            format!("{}", r.macr.convertible),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table VI: speedup, energy improvement, processor/cache breakdown.
+pub fn table6(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let rows = run_paper_sweep(&[cfg], opts, backend)?;
+    let mut t = TextTable::new(
+        "Table VI — speedup, energy improvement, improvement breakdown (CiM vs non-CiM)",
+        &["bench", "speedup", "energy impr.", "ratio proc", "ratio caches", "MACR"],
+    );
+    for r in &rows {
+        t.row(vec![
+            workloads::display_name(&r.bench).into(),
+            f(r.result.speedup, 2),
+            f(r.result.improvement, 2),
+            f(r.result.ratio_proc, 2),
+            f(r.result.ratio_cache, 2),
+            format!("{:.1}%", r.macr.ratio() * 100.0),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig 14: energy improvement across the three cache configurations.
+pub fn fig14(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
+    let configs = [
+        SystemConfig::preset("c1").unwrap(),
+        SystemConfig::preset("c2").unwrap(),
+        SystemConfig::preset("c3").unwrap(),
+    ];
+    let rows = run_paper_sweep(&configs, opts, backend)?;
+    let mut t = TextTable::new(
+        "Fig 14 — energy improvement for CiM with different cache configurations",
+        &["bench", "c1 (32k/256k)", "c2 (64k/256k)", "c3 (64k/2M)"],
+    );
+    for b in paper_benches() {
+        let get = |cn: &str| {
+            rows.iter()
+                .find(|r| r.bench == b && r.config_name == cn)
+                .map(|r| f(r.result.improvement, 2))
+                .unwrap_or_default()
+        };
+        t.row(vec![
+            workloads::display_name(b).into(),
+            get("c1"),
+            get("c2"),
+            get("c3"),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig 15: energy improvement with CiM in L1-only / L2-only / both.
+pub fn fig15(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
+    let base = SystemConfig::preset("c1").unwrap();
+    let configs: Vec<SystemConfig> = [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both]
+        .into_iter()
+        .map(|cl| {
+            let mut c = base.clone().with_cim(cl);
+            c.name = format!("c1-{}", cl.name());
+            c
+        })
+        .collect();
+    let rows = run_paper_sweep(&configs, opts, backend)?;
+    let mut t = TextTable::new(
+        "Fig 15 — energy improvement: CiM in L1 only, L2 only, both",
+        &["bench", "L1 only", "L2 only", "L1+L2"],
+    );
+    for b in paper_benches() {
+        let get = |cn: &str| {
+            rows.iter()
+                .find(|r| r.bench == b && r.config_name == cn)
+                .map(|r| f(r.result.improvement, 2))
+                .unwrap_or_default()
+        };
+        t.row(vec![
+            workloads::display_name(b).into(),
+            get("c1-l1"),
+            get("c1-l2"),
+            get("c1-l1+l2"),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig 16: SRAM vs FeFET — energy improvement and speedup.
+///
+/// As in the paper, FeFET improvements are normalized to the *SRAM*
+/// non-CiM baseline system.
+pub fn fig16(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
+    let configs: Vec<SystemConfig> = Technology::all()
+        .into_iter()
+        .map(|tech| {
+            let mut c = SystemConfig::preset("c1").unwrap().with_tech(tech);
+            c.name = format!("c1-{}", tech.name());
+            c
+        })
+        .collect();
+    let rows = run_paper_sweep(&configs, opts, backend)?;
+    let mut t = TextTable::new(
+        "Fig 16 — CMOS SRAM vs FeFET-RAM (energy improvement normalized to the SRAM baseline)",
+        &["bench", "E-impr SRAM", "E-impr FeFET", "FeFET/SRAM", "speedup SRAM", "speedup FeFET"],
+    );
+    for b in paper_benches() {
+        let sram = rows
+            .iter()
+            .find(|r| r.bench == b && r.tech == Technology::Sram);
+        let fefet = rows
+            .iter()
+            .find(|r| r.bench == b && r.tech == Technology::Fefet);
+        if let (Some(s), Some(fe)) = (sram, fefet) {
+            // normalize FeFET's CiM energy to the SRAM baseline
+            let fefet_norm = s.result.total_base / fe.result.total_cim.max(1e-9);
+            t.row(vec![
+                workloads::display_name(b).into(),
+                f(s.result.improvement, 2),
+                f(fefet_norm, 2),
+                f(fefet_norm / s.result.improvement.max(1e-9), 2),
+                f(s.result.speedup, 2),
+                f(fe.result.speedup, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn fast_opts() -> SweepOptions {
+        SweepOptions { scale: 2, workers: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn table3_matches_published_anchor_values() {
+        let t = table3();
+        let s = t.render();
+        // spot-check the exact Table III numbers
+        for v in ["61", "79", "314", "365", "34", "205"] {
+            assert!(s.contains(v), "missing {v} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn fig11_add_is_slower_than_read() {
+        let s = fig11().render();
+        assert!(s.contains("6.0")); // SRAM L1 CiM-ADD
+        assert!(s.contains("2.0")); // SRAM L1 read
+    }
+
+    #[test]
+    fn fig12_eva_finds_more_than_jain() {
+        let t = fig12(3, 2).unwrap();
+        let s = t.to_csv();
+        let lines: Vec<&str> = s.lines().collect();
+        let parse_pct = |row: &str| -> f64 {
+            row.split(',').nth(1).unwrap().trim_end_matches('%').parse().unwrap()
+        };
+        let eva = parse_pct(lines[1]);
+        let jain = parse_pct(lines[2]);
+        assert!(eva > jain, "eva {eva}% !> jain {jain}%");
+    }
+
+    #[test]
+    fn table6_produces_all_17_rows() {
+        let t = table6(fast_opts(), &mut NativeBackend).unwrap();
+        assert_eq!(t.num_rows(), 17);
+    }
+}

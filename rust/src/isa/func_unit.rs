@@ -1,0 +1,63 @@
+//! Functional-unit classification (PipeProbe events / McPAT counters).
+
+/// The functional units of the modelled out-of-order core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum FuncUnit {
+    IntAlu = 0,
+    IntMul,
+    IntDiv,
+    FpAlu,
+    FpMul,
+    FpDiv,
+    Branch,
+    MemRead,
+    MemWrite,
+}
+
+pub const NUM_FUNC_UNITS: usize = 9;
+
+impl FuncUnit {
+    pub fn all() -> [FuncUnit; NUM_FUNC_UNITS] {
+        use FuncUnit::*;
+        [IntAlu, IntMul, IntDiv, FpAlu, FpMul, FpDiv, Branch, MemRead, MemWrite]
+    }
+
+    pub fn name(&self) -> &'static str {
+        use FuncUnit::*;
+        match self {
+            IntAlu => "int_alu",
+            IntMul => "int_mul",
+            IntDiv => "int_div",
+            FpAlu => "fp_alu",
+            FpMul => "fp_mul",
+            FpDiv => "fp_div",
+            Branch => "branch",
+            MemRead => "mem_read",
+            MemWrite => "mem_write",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_dense() {
+        for (i, fu) in FuncUnit::all().iter().enumerate() {
+            assert_eq!(fu.index(), i);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: std::collections::HashSet<_> =
+            FuncUnit::all().iter().map(|f| f.name()).collect();
+        assert_eq!(names.len(), NUM_FUNC_UNITS);
+    }
+}

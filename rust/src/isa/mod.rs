@@ -1,0 +1,514 @@
+//! EVA32: the mini RISC ISA the simulated host CPU executes.
+//!
+//! The paper instruments an ARM Cortex-A9 under GEM5; the analysis stage,
+//! however, only consumes the committed-instruction stream (mnemonic, source
+//! and destination registers, memory request info — Table I).  EVA32 is a
+//! compact load/store ISA that produces the same interface: 32 integer
+//! registers, 16 float registers, word-addressed memory ops with
+//! base+offset addressing, and the usual Load-Load-OP-Store dataflow whose
+//! patterns (Fig 4) the IDG analyzer mines.
+//!
+//! Instructions encode into a fixed 64-bit word
+//! (`[op:8][rd:8][rs1:8][rs2:8][imm:32]`) — see [`Instruction::encode`].
+
+pub mod func_unit;
+
+pub use func_unit::FuncUnit;
+
+/// Unified register namespace: `r0`..`r31` are integer (r0 ≡ 0),
+/// `f0`..`f15` are float and live at ids 32..48.
+pub type RegId = u8;
+
+pub const NUM_INT_REGS: u8 = 32;
+pub const NUM_FP_REGS: u8 = 16;
+pub const NUM_REGS: u8 = NUM_INT_REGS + NUM_FP_REGS;
+
+/// Zero register (always reads 0; writes discarded).
+pub const R0: RegId = 0;
+/// Return-address register by convention.
+pub const RA: RegId = 1;
+/// Stack pointer by convention.
+pub const SP: RegId = 2;
+
+/// First float register id.
+pub const F0: RegId = NUM_INT_REGS;
+
+/// Make a float register id from its index (`freg(3)` == `f3`).
+pub const fn freg(i: u8) -> RegId {
+    debug_assert!(i < NUM_FP_REGS);
+    NUM_INT_REGS + i
+}
+
+pub fn reg_name(r: RegId) -> String {
+    if r < NUM_INT_REGS {
+        format!("r{r}")
+    } else {
+        format!("f{}", r - NUM_INT_REGS)
+    }
+}
+
+/// EVA32 opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    // integer register-register
+    Add = 0,
+    Sub,
+    And,
+    Or,
+    Xor,
+    Sll,
+    Srl,
+    Sra,
+    Slt,
+    Sltu,
+    Mul,
+    Div,
+    Rem,
+    // integer register-immediate
+    Addi,
+    Andi,
+    Ori,
+    Xori,
+    Slli,
+    Srli,
+    Srai,
+    Slti,
+    Lui,
+    // memory
+    Lw,
+    Sw,
+    Lb,
+    Sb,
+    Flw,
+    Fsw,
+    // control flow (branch targets are *instruction indices*, absolute)
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+    Jal,
+    Jalr,
+    // floating point (f32)
+    Fadd,
+    Fsub,
+    Fmul,
+    Fdiv,
+    Fmin,
+    Fmax,
+    Feq,  // rd(int) = (fs1 == fs2)
+    Flt,  // rd(int) = (fs1 < fs2)
+    Fcvtws, // rd(int) = (i32) fs1
+    Fcvtsw, // fd = (f32) rs1
+    Fmv,    // fd = fs1
+    // misc
+    Nop,
+    Halt,
+}
+
+pub const NUM_OPCODES: u8 = Opcode::Halt as u8 + 1;
+
+impl Opcode {
+    pub fn from_u8(x: u8) -> Option<Opcode> {
+        if x < NUM_OPCODES {
+            // SAFETY: repr(u8), contiguous discriminants 0..NUM_OPCODES
+            Some(unsafe { std::mem::transmute::<u8, Opcode>(x) })
+        } else {
+            None
+        }
+    }
+
+    pub fn mnemonic(&self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Add => "add",
+            Sub => "sub",
+            And => "and",
+            Or => "or",
+            Xor => "xor",
+            Sll => "sll",
+            Srl => "srl",
+            Sra => "sra",
+            Slt => "slt",
+            Sltu => "sltu",
+            Mul => "mul",
+            Div => "div",
+            Rem => "rem",
+            Addi => "addi",
+            Andi => "andi",
+            Ori => "ori",
+            Xori => "xori",
+            Slli => "slli",
+            Srli => "srli",
+            Srai => "srai",
+            Slti => "slti",
+            Lui => "lui",
+            Lw => "lw",
+            Sw => "sw",
+            Lb => "lb",
+            Sb => "sb",
+            Flw => "flw",
+            Fsw => "fsw",
+            Beq => "beq",
+            Bne => "bne",
+            Blt => "blt",
+            Bge => "bge",
+            Bltu => "bltu",
+            Bgeu => "bgeu",
+            Jal => "jal",
+            Jalr => "jalr",
+            Fadd => "fadd",
+            Fsub => "fsub",
+            Fmul => "fmul",
+            Fdiv => "fdiv",
+            Fmin => "fmin",
+            Fmax => "fmax",
+            Feq => "feq",
+            Flt => "flt",
+            Fcvtws => "fcvt.w.s",
+            Fcvtsw => "fcvt.s.w",
+            Fmv => "fmv",
+            Nop => "nop",
+            Halt => "halt",
+        }
+    }
+
+    pub fn from_mnemonic(s: &str) -> Option<Opcode> {
+        (0..NUM_OPCODES)
+            .filter_map(Opcode::from_u8)
+            .find(|op| op.mnemonic() == s)
+    }
+
+    pub fn is_load(&self) -> bool {
+        matches!(self, Opcode::Lw | Opcode::Lb | Opcode::Flw)
+    }
+
+    pub fn is_store(&self) -> bool {
+        matches!(self, Opcode::Sw | Opcode::Sb | Opcode::Fsw)
+    }
+
+    pub fn is_mem(&self) -> bool {
+        self.is_load() || self.is_store()
+    }
+
+    pub fn is_branch(&self) -> bool {
+        matches!(
+            self,
+            Opcode::Beq
+                | Opcode::Bne
+                | Opcode::Blt
+                | Opcode::Bge
+                | Opcode::Bltu
+                | Opcode::Bgeu
+                | Opcode::Jal
+                | Opcode::Jalr
+        )
+    }
+
+    /// Conditional branches only (predicted by the branch predictor).
+    pub fn is_cond_branch(&self) -> bool {
+        matches!(
+            self,
+            Opcode::Beq
+                | Opcode::Bne
+                | Opcode::Blt
+                | Opcode::Bge
+                | Opcode::Bltu
+                | Opcode::Bgeu
+        )
+    }
+
+    pub fn is_fp(&self) -> bool {
+        matches!(
+            self,
+            Opcode::Fadd
+                | Opcode::Fsub
+                | Opcode::Fmul
+                | Opcode::Fdiv
+                | Opcode::Fmin
+                | Opcode::Fmax
+                | Opcode::Feq
+                | Opcode::Flt
+                | Opcode::Fcvtws
+                | Opcode::Fcvtsw
+                | Opcode::Fmv
+                | Opcode::Flw
+                | Opcode::Fsw
+        )
+    }
+
+    /// Does this opcode use the immediate operand?
+    pub fn has_imm(&self) -> bool {
+        use Opcode::*;
+        matches!(
+            self,
+            Addi | Andi | Ori | Xori | Slli | Srli | Srai | Slti | Lui | Lw
+                | Sw | Lb | Sb | Flw | Fsw | Beq | Bne | Blt | Bge | Bltu
+                | Bgeu | Jal | Jalr
+        )
+    }
+
+    /// The functional unit that executes this opcode (PipeProbe events).
+    pub fn func_unit(&self) -> FuncUnit {
+        use Opcode::*;
+        match self {
+            Mul => FuncUnit::IntMul,
+            Div | Rem => FuncUnit::IntDiv,
+            Fadd | Fsub | Fmin | Fmax | Feq | Flt | Fcvtws | Fcvtsw | Fmv => {
+                FuncUnit::FpAlu
+            }
+            Fmul => FuncUnit::FpMul,
+            Fdiv => FuncUnit::FpDiv,
+            Lw | Lb | Flw => FuncUnit::MemRead,
+            Sw | Sb | Fsw => FuncUnit::MemWrite,
+            Beq | Bne | Blt | Bge | Bltu | Bgeu | Jal | Jalr => FuncUnit::Branch,
+            _ => FuncUnit::IntAlu,
+        }
+    }
+
+    /// Execution latency in cycles, excluding memory (A9-class pipeline).
+    pub fn exec_latency(&self) -> u64 {
+        use FuncUnit::*;
+        match self.func_unit() {
+            IntAlu | Branch | MemWrite => 1,
+            MemRead => 1, // address generation; cache latency added on top
+            IntMul => 3,
+            IntDiv => 12,
+            FpAlu => 3,
+            FpMul => 4,
+            FpDiv => 15,
+        }
+    }
+}
+
+/// One EVA32 instruction.
+///
+/// Field use by class:
+/// * ALU reg-reg:   `rd, rs1, rs2`
+/// * ALU reg-imm:   `rd, rs1, imm`
+/// * load:          `rd, rs1(base), imm(offset)`
+/// * store:         `rs2(value), rs1(base), imm(offset)`
+/// * branch:        `rs1, rs2, imm(absolute target index)`
+/// * jal:           `rd, imm(target)` — `jalr`: `rd, rs1, imm`
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Instruction {
+    pub op: Opcode,
+    pub rd: RegId,
+    pub rs1: RegId,
+    pub rs2: RegId,
+    pub imm: i32,
+}
+
+impl Instruction {
+    pub fn new(op: Opcode, rd: RegId, rs1: RegId, rs2: RegId, imm: i32) -> Self {
+        Self { op, rd, rs1, rs2, imm }
+    }
+
+    pub fn nop() -> Self {
+        Self::new(Opcode::Nop, R0, R0, R0, 0)
+    }
+
+    pub fn halt() -> Self {
+        Self::new(Opcode::Halt, R0, R0, R0, 0)
+    }
+
+    /// Destination register, if the instruction writes one.
+    pub fn dest(&self) -> Option<RegId> {
+        use Opcode::*;
+        match self.op {
+            Sw | Sb | Fsw | Beq | Bne | Blt | Bge | Bltu | Bgeu | Nop | Halt => {
+                None
+            }
+            Jal | Jalr => {
+                if self.rd == R0 {
+                    None
+                } else {
+                    Some(self.rd)
+                }
+            }
+            _ => {
+                if self.rd == R0 {
+                    None // writes to r0 are discarded
+                } else {
+                    Some(self.rd)
+                }
+            }
+        }
+    }
+
+    /// Source registers in operand order (left, right).
+    pub fn sources(&self) -> [Option<RegId>; 2] {
+        use Opcode::*;
+        let nz = |r: RegId| if r == R0 { None } else { Some(r) };
+        match self.op {
+            Nop | Halt | Lui | Jal => [None, None],
+            // loads read the base register only
+            Lw | Lb | Flw => [nz(self.rs1), None],
+            // stores read base (rs1) and data (rs2)
+            Sw | Sb | Fsw => [nz(self.rs1), nz(self.rs2)],
+            Jalr => [nz(self.rs1), None],
+            Addi | Andi | Ori | Xori | Slli | Srli | Srai | Slti | Fcvtsw => {
+                [nz(self.rs1), None]
+            }
+            Fcvtws | Fmv => [nz(self.rs1), None],
+            _ => [nz(self.rs1), nz(self.rs2)],
+        }
+    }
+
+    /// Encode into the fixed 64-bit word `[op:8][rd:8][rs1:8][rs2:8][imm:32]`.
+    pub fn encode(&self) -> u64 {
+        ((self.op as u64) << 56)
+            | ((self.rd as u64) << 48)
+            | ((self.rs1 as u64) << 40)
+            | ((self.rs2 as u64) << 32)
+            | (self.imm as u32 as u64)
+    }
+
+    /// Decode from the 64-bit word; `None` on an invalid opcode byte.
+    pub fn decode(word: u64) -> Option<Self> {
+        let op = Opcode::from_u8((word >> 56) as u8)?;
+        let rd = ((word >> 48) & 0xff) as u8;
+        let rs1 = ((word >> 40) & 0xff) as u8;
+        let rs2 = ((word >> 32) & 0xff) as u8;
+        if rd >= NUM_REGS || rs1 >= NUM_REGS || rs2 >= NUM_REGS {
+            return None;
+        }
+        Some(Self::new(op, rd, rs1, rs2, word as u32 as i32))
+    }
+
+    /// Human-readable assembly text.
+    pub fn disasm(&self) -> String {
+        use Opcode::*;
+        let m = self.op.mnemonic();
+        let r = reg_name;
+        match self.op {
+            Nop | Halt => m.to_string(),
+            Lui => format!("{m} {}, {}", r(self.rd), self.imm),
+            Jal => format!("{m} {}, {}", r(self.rd), self.imm),
+            Jalr => format!("{m} {}, {}, {}", r(self.rd), r(self.rs1), self.imm),
+            Lw | Lb | Flw => {
+                format!("{m} {}, {}({})", r(self.rd), self.imm, r(self.rs1))
+            }
+            Sw | Sb | Fsw => {
+                format!("{m} {}, {}({})", r(self.rs2), self.imm, r(self.rs1))
+            }
+            Beq | Bne | Blt | Bge | Bltu | Bgeu => {
+                format!("{m} {}, {}, {}", r(self.rs1), r(self.rs2), self.imm)
+            }
+            _ if self.op.has_imm() => {
+                format!("{m} {}, {}, {}", r(self.rd), r(self.rs1), self.imm)
+            }
+            Fmv | Fcvtws | Fcvtsw => {
+                format!("{m} {}, {}", r(self.rd), r(self.rs1))
+            }
+            _ => format!(
+                "{m} {}, {}, {}",
+                r(self.rd),
+                r(self.rs1),
+                r(self.rs2)
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_u8_roundtrip() {
+        for x in 0..NUM_OPCODES {
+            let op = Opcode::from_u8(x).unwrap();
+            assert_eq!(op as u8, x);
+        }
+        assert!(Opcode::from_u8(NUM_OPCODES).is_none());
+    }
+
+    #[test]
+    fn mnemonic_roundtrip() {
+        for x in 0..NUM_OPCODES {
+            let op = Opcode::from_u8(x).unwrap();
+            assert_eq!(Opcode::from_mnemonic(op.mnemonic()), Some(op));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let cases = [
+            Instruction::new(Opcode::Add, 3, 4, 5, 0),
+            Instruction::new(Opcode::Addi, 7, 3, 0, -42),
+            Instruction::new(Opcode::Lw, 9, SP, 0, 1024),
+            Instruction::new(Opcode::Sw, 0, SP, 9, -8),
+            Instruction::new(Opcode::Beq, 0, 4, 5, 12345),
+            Instruction::new(Opcode::Fadd, freg(1), freg(2), freg(3), 0),
+            Instruction::halt(),
+        ];
+        for i in cases {
+            assert_eq!(Instruction::decode(i.encode()), Some(i), "{}", i.disasm());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode_and_regs() {
+        assert!(Instruction::decode(0xff << 56).is_none());
+        // valid opcode, out-of-range register
+        let bad = ((Opcode::Add as u64) << 56) | (200u64 << 48);
+        assert!(Instruction::decode(bad).is_none());
+    }
+
+    #[test]
+    fn dest_and_sources() {
+        let add = Instruction::new(Opcode::Add, 3, 4, 5, 0);
+        assert_eq!(add.dest(), Some(3));
+        assert_eq!(add.sources(), [Some(4), Some(5)]);
+
+        let sw = Instruction::new(Opcode::Sw, 0, 2, 7, 4);
+        assert_eq!(sw.dest(), None);
+        assert_eq!(sw.sources(), [Some(2), Some(7)]);
+
+        let lw = Instruction::new(Opcode::Lw, 5, 2, 0, 8);
+        assert_eq!(lw.dest(), Some(5));
+        assert_eq!(lw.sources(), [Some(2), None]);
+
+        // r0 writes are discarded, r0 reads are not dependencies
+        let to_zero = Instruction::new(Opcode::Add, 0, 0, 5, 0);
+        assert_eq!(to_zero.dest(), None);
+        assert_eq!(to_zero.sources(), [None, Some(5)]);
+    }
+
+    #[test]
+    fn func_units_sensible() {
+        assert_eq!(Opcode::Add.func_unit(), FuncUnit::IntAlu);
+        assert_eq!(Opcode::Mul.func_unit(), FuncUnit::IntMul);
+        assert_eq!(Opcode::Lw.func_unit(), FuncUnit::MemRead);
+        assert_eq!(Opcode::Fsw.func_unit(), FuncUnit::MemWrite);
+        assert_eq!(Opcode::Fdiv.func_unit(), FuncUnit::FpDiv);
+        assert_eq!(Opcode::Beq.func_unit(), FuncUnit::Branch);
+    }
+
+    #[test]
+    fn disasm_formats() {
+        assert_eq!(
+            Instruction::new(Opcode::Lw, 5, 2, 0, 8).disasm(),
+            "lw r5, 8(r2)"
+        );
+        assert_eq!(
+            Instruction::new(Opcode::Sw, 0, 2, 7, -4).disasm(),
+            "sw r7, -4(r2)"
+        );
+        assert_eq!(
+            Instruction::new(Opcode::Fadd, freg(0), freg(1), freg(2), 0)
+                .disasm(),
+            "fadd f0, f1, f2"
+        );
+    }
+
+    #[test]
+    fn fp_classification() {
+        assert!(Opcode::Fadd.is_fp());
+        assert!(Opcode::Flw.is_fp());
+        assert!(!Opcode::Add.is_fp());
+    }
+}

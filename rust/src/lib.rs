@@ -1,0 +1,33 @@
+//! # Eva-CiM (reproduction)
+//!
+//! A system-level performance and energy evaluation framework for
+//! computing-in-memory (CiM) architectures, reproducing Gao, Reis, Hu &
+//! Zhuo, *Eva-CiM*, IEEE TCAD 2020 — built as a three-layer Rust + JAX +
+//! Pallas stack (AOT via the PJRT C API).
+//!
+//! Pipeline (paper Fig 1):
+//!
+//! ```text
+//!  workloads/ ──► sim/ (EVA32 OoO core + caches, probes) ──► probes::Trace
+//!        Trace ──► analyzer/ (IDG, RUT/IHT, candidate selection, MACR)
+//!   candidates ──► reshape/ (CiM trace + performance counters)
+//!     counters ──► profiler/ via runtime/ (AOT'd JAX graph on PJRT)
+//!                  or energy/ (native mirror) ──► report/
+//! ```
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod analyzer;
+pub mod asm;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod isa;
+pub mod probes;
+pub mod profiler;
+pub mod reshape;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,410 @@
+//! `eva-cim` — the Eva-CiM command-line launcher (L3 leader entrypoint).
+//!
+//! ```text
+//! eva-cim list                                   benchmarks + presets
+//! eva-cim run <bench> [--config c1] [--tech sram] [--cim both]
+//!                     [--scale N] [--seed N] [--rule any|level|bank]
+//!                     [--backend auto|native|pjrt]
+//! eva-cim asm <file.s> [--config c1]             run a text-assembly file
+//! eva-cim sweep [--benches a,b] [--configs c1,c2] [--techs sram,fefet]
+//!               [--scale N] [--workers N] [--csv out.csv]
+//! eva-cim table <table3|table5|table6|fig11|fig12|fig13|fig14|fig15|fig16>
+//! eva-cim validate                               Table V + Fig 12
+//! eva-cim sensitivity <bench> [--config c1]      DSE gradient (PJRT)
+//! eva-cim calib                                  print calibration constants
+//! ```
+//!
+//! (clap is unavailable in this offline environment; flags are parsed by
+//! the tiny matcher in [`cli`].)
+
+use std::process::ExitCode;
+
+use eva_cim::analyzer::{analyze, LocalityRule};
+use eva_cim::config::{CimLevels, SystemConfig, Technology};
+use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
+use eva_cim::energy::calib;
+use eva_cim::experiments;
+use eva_cim::profiler::ProfileInputs;
+use eva_cim::reshape::reshape;
+use eva_cim::runtime::{best_backend, Backend, NativeBackend, PjrtRuntime};
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::util::table::f as fnum;
+use eva_cim::util::TextTable;
+use eva_cim::workloads;
+
+mod cli {
+    /// Minimal flag parser: positionals + `--key value` pairs.
+    pub struct Args {
+        pub positional: Vec<String>,
+        flags: Vec<(String, String)>,
+    }
+
+    impl Args {
+        pub fn parse(argv: &[String]) -> Result<Self, String> {
+            let mut positional = Vec::new();
+            let mut flags = Vec::new();
+            let mut it = argv.iter().peekable();
+            while let Some(a) = it.next() {
+                if let Some(key) = a.strip_prefix("--") {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                    flags.push((key.to_string(), val.clone()));
+                } else {
+                    positional.push(a.clone());
+                }
+            }
+            Ok(Self { positional, flags })
+        }
+
+        pub fn flag(&self, key: &str) -> Option<&str> {
+            self.flags
+                .iter()
+                .rev()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v.as_str())
+        }
+
+        pub fn flag_or(&self, key: &str, default: &str) -> String {
+            self.flag(key).unwrap_or(default).to_string()
+        }
+
+        pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize, String> {
+            match self.flag(key) {
+                None => Ok(default),
+                Some(v) => v.parse().map_err(|_| format!("--{key} needs a number")),
+            }
+        }
+    }
+}
+
+fn parse_rule(s: &str) -> Result<LocalityRule, String> {
+    match s {
+        "any" | "anycache" => Ok(LocalityRule::AnyCache),
+        "level" | "samelevel" => Ok(LocalityRule::SameLevel),
+        "bank" | "samebank" => Ok(LocalityRule::SameBank),
+        _ => Err(format!("unknown locality rule '{s}'")),
+    }
+}
+
+fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
+    let mut cfg = if let Some(path) = args.flag("config-file") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        eva_cim::config::parse::parse(&text).map_err(|e| e.to_string())?
+    } else {
+        let preset = args.flag_or("config", "c1");
+        SystemConfig::preset(&preset)
+            .ok_or_else(|| format!("unknown preset '{preset}'"))?
+    };
+    if let Some(t) = args.flag("tech") {
+        cfg.tech = Technology::from_name(t).ok_or_else(|| format!("unknown tech '{t}'"))?;
+    }
+    if let Some(c) = args.flag("cim") {
+        cfg.cim_levels =
+            CimLevels::from_name(c).ok_or_else(|| format!("unknown cim levels '{c}'"))?;
+    }
+    Ok(cfg)
+}
+
+fn make_backend(kind: &str) -> Result<Box<dyn Backend>, String> {
+    match kind {
+        "native" => Ok(Box::new(NativeBackend)),
+        "pjrt" => PjrtRuntime::load(&PjrtRuntime::default_dir())
+            .map(|rt| Box::new(rt) as Box<dyn Backend>)
+            .map_err(|e| format!("{e:#}")),
+        "auto" => Ok(best_backend(&PjrtRuntime::default_dir())),
+        _ => Err(format!("unknown backend '{kind}'")),
+    }
+}
+
+fn cmd_list() -> Result<(), String> {
+    println!("benchmarks (Table IV):");
+    for n in workloads::NAMES {
+        println!("  {:10} {}", n, workloads::display_name(n));
+    }
+    println!("\nconfig presets:");
+    for p in SystemConfig::preset_names() {
+        let c = SystemConfig::preset(p).unwrap();
+        println!(
+            "  {:8} L1 {} / L2 {}",
+            p,
+            c.l1d.pretty(),
+            c.l2.pretty()
+        );
+    }
+    println!("\ntechnologies: sram, fefet   cim levels: none, l1, l2, both");
+    Ok(())
+}
+
+fn report_single(cfg: &SystemConfig, trace: &eva_cim::probes::Trace,
+                 rule: LocalityRule, backend: &mut dyn Backend) -> Result<(), String> {
+    let analysis = analyze(trace, cfg, rule);
+    let reshaped = reshape(trace, &analysis.selection, cfg);
+    let inputs = ProfileInputs::new(cfg, &reshaped);
+    let res = backend
+        .evaluate_batch(&[inputs])
+        .map_err(|e| format!("{e:#}"))?
+        .remove(0);
+
+    println!("program          : {}", trace.program);
+    println!("committed instrs : {}", trace.committed);
+    println!("cycles           : {}  (CPI {:.2})", trace.cycles, trace.cpi());
+    println!("IDG nodes        : {} ({} eligible)", analysis.idg_nodes.0, analysis.idg_nodes.1);
+    println!("candidates       : {}", analysis.selection.candidates.len());
+    println!("MACR             : {:.1}%  (L1 share {:.1}%)",
+             analysis.macr.ratio() * 100.0, analysis.macr.l1_share() * 100.0);
+    println!("offloaded instrs : {}  CiM ops: {}", reshaped.removed, reshaped.cim_op_count);
+    println!("backend          : {}", backend.name());
+    println!();
+    let mut t = TextTable::new("profile", &["metric", "baseline", "CiM", "ratio"]);
+    t.row(vec![
+        "energy (uJ)".into(),
+        fnum(res.total_base / 1e6, 2),
+        fnum(res.total_cim / 1e6, 2),
+        fnum(res.improvement, 2),
+    ]);
+    t.row(vec![
+        "speedup".into(),
+        "1.00".into(),
+        fnum(res.speedup, 2),
+        fnum(res.speedup, 2),
+    ]);
+    println!("{}", t.render());
+    let mut c = TextTable::new(
+        "energy breakdown (uJ)",
+        &["component", "baseline", "CiM"],
+    );
+    for i in 0..calib::NCOMP {
+        c.row(vec![
+            calib::COMP_NAMES[i].into(),
+            fnum(res.comps_base[i] / 1e6, 3),
+            fnum(res.comps_cim[i] / 1e6, 3),
+        ]);
+    }
+    println!("{}", c.render());
+    println!("improvement breakdown: processor {:.2}, caches {:.2}",
+             res.ratio_proc, res.ratio_cache);
+    Ok(())
+}
+
+fn cmd_run(args: &cli::Args) -> Result<(), String> {
+    let bench = args
+        .positional
+        .get(1)
+        .ok_or("usage: eva-cim run <bench> [flags]")?;
+    let cfg = build_config(args)?;
+    let scale = args.usize_flag("scale", 0)?;
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let rule = parse_rule(&args.flag_or("rule", "any"))?;
+    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+
+    let prog = workloads::build(bench, scale, seed)
+        .ok_or_else(|| format!("unknown benchmark '{bench}' (see `eva-cim list`)"))?;
+    let trace = simulate(&prog, &cfg, Limits::default()).map_err(|e| e.to_string())?;
+    report_single(&cfg, &trace, rule, backend.as_mut())
+}
+
+fn cmd_asm(args: &cli::Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or("usage: eva-cim asm <file.s> [flags]")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let prog = eva_cim::asm::parser::parse(path, &text).map_err(|e| e.to_string())?;
+    let cfg = build_config(args)?;
+    let rule = parse_rule(&args.flag_or("rule", "any"))?;
+    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let trace = simulate(&prog, &cfg, Limits::default()).map_err(|e| e.to_string())?;
+    report_single(&cfg, &trace, rule, backend.as_mut())
+}
+
+fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
+    let benches: Vec<String> = args
+        .flag_or("benches", &workloads::NAMES.join(","))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let bench_refs: Vec<&str> = benches.iter().map(|s| s.as_str()).collect();
+    let mut configs = Vec::new();
+    for preset in args.flag_or("configs", "c1").split(',') {
+        let base = SystemConfig::preset(preset.trim())
+            .ok_or_else(|| format!("unknown preset '{preset}'"))?;
+        for tech in args.flag_or("techs", "sram").split(',') {
+            let tech = Technology::from_name(tech.trim())
+                .ok_or_else(|| format!("unknown tech '{tech}'"))?;
+            let mut c = base.clone().with_tech(tech);
+            c.name = format!("{}-{}", preset.trim(), tech.name());
+            if let Some(cim) = args.flag("cim") {
+                c.cim_levels = CimLevels::from_name(cim)
+                    .ok_or_else(|| format!("unknown cim levels '{cim}'"))?;
+            }
+            configs.push(c);
+        }
+    }
+    let rule = parse_rule(&args.flag_or("rule", "any"))?;
+    let opts = SweepOptions {
+        scale: args.usize_flag("scale", 0)?,
+        seed: args.usize_flag("seed", 42)? as u64,
+        workers: args.usize_flag("workers", SweepOptions::default().workers)?,
+        ..Default::default()
+    };
+    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let points = cross(&bench_refs, &configs, rule);
+    eprintln!(
+        "sweep: {} points ({} benches x {} configs), backend={}",
+        points.len(),
+        bench_refs.len(),
+        configs.len(),
+        backend.name()
+    );
+    let t0 = std::time::Instant::now();
+    let rows = Coordinator::new(opts)
+        .run_sweep(&points, backend.as_mut())
+        .map_err(|e| format!("{e:#}"))?;
+    let dt = t0.elapsed();
+    let mut t = TextTable::new(
+        "sweep results",
+        &["bench", "config", "MACR", "speedup", "E-impr", "proc", "caches"],
+    );
+    for r in &rows {
+        t.row(vec![
+            workloads::display_name(&r.bench).into(),
+            r.config_name.clone(),
+            format!("{:.1}%", r.macr.ratio() * 100.0),
+            fnum(r.result.speedup, 2),
+            fnum(r.result.improvement, 2),
+            fnum(r.result.ratio_proc, 2),
+            fnum(r.result.ratio_cache, 2),
+        ]);
+    }
+    println!("{}", t.render());
+    eprintln!("{} design points in {:.2}s", rows.len(), dt.as_secs_f64());
+    if let Some(csv) = args.flag("csv") {
+        std::fs::write(csv, t.to_csv()).map_err(|e| e.to_string())?;
+        eprintln!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &cli::Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or("usage: eva-cim table <id> (table3|table5|table6|fig11..fig16|calib)")?;
+    let opts = SweepOptions {
+        scale: args.usize_flag("scale", 0)?,
+        workers: args.usize_flag("workers", SweepOptions::default().workers)?,
+        ..Default::default()
+    };
+    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let err = |e: anyhow::Error| format!("{e:#}");
+    let table = match id.as_str() {
+        "table3" => experiments::table3(),
+        "fig11" => experiments::fig11(),
+        "table5" => experiments::table5(backend.as_mut(), opts.scale).map_err(err)?,
+        "fig12" => experiments::fig12(20, opts.scale).map_err(err)?,
+        "fig13" => experiments::fig13(opts).map_err(err)?,
+        "table6" => experiments::table6(opts, backend.as_mut()).map_err(err)?,
+        "fig14" => experiments::fig14(opts, backend.as_mut()).map_err(err)?,
+        "fig15" => experiments::fig15(opts, backend.as_mut()).map_err(err)?,
+        "fig16" => experiments::fig16(opts, backend.as_mut()).map_err(err)?,
+        _ => return Err(format!("unknown table id '{id}'")),
+    };
+    println!("{}", table.render());
+    if let Some(csv) = args.flag("csv") {
+        std::fs::write(csv, table.to_csv()).map_err(|e| e.to_string())?;
+        eprintln!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &cli::Args) -> Result<(), String> {
+    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let t5 = experiments::table5(backend.as_mut(), 0).map_err(|e| format!("{e:#}"))?;
+    println!("{}", t5.render());
+    let t12 = experiments::fig12(20, 0).map_err(|e| format!("{e:#}"))?;
+    println!("{}", t12.render());
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &cli::Args) -> Result<(), String> {
+    let bench = args
+        .positional
+        .get(1)
+        .ok_or("usage: eva-cim sensitivity <bench> [flags]")?;
+    let cfg = build_config(args)?;
+    let scale = args.usize_flag("scale", 0)?;
+    let mut rt = PjrtRuntime::load(&PjrtRuntime::default_dir())
+        .map_err(|e| format!("sensitivity needs the PJRT artifacts: {e:#}"))?;
+    let prog = workloads::build(bench, scale, 42)
+        .ok_or_else(|| format!("unknown benchmark '{bench}'"))?;
+    let trace = simulate(&prog, &cfg, Limits::default()).map_err(|e| e.to_string())?;
+    let analysis = analyze(&trace, &cfg, LocalityRule::AnyCache);
+    let reshaped = reshape(&trace, &analysis.selection, &cfg);
+    let inputs = ProfileInputs::new(&cfg, &reshaped);
+    let (g1, g2) = rt.sensitivity(&[inputs]).map_err(|e| format!("{e:#}"))?;
+    println!("d(total CiM energy)/d(cfg) for {bench} on {}:", cfg.name);
+    let names = ["capacity(B)", "assoc", "line", "banks", "tech*", "level*"];
+    let mut t = TextTable::new("(* discrete — gradient not actionable)",
+                               &["param", "dE/dp (L1)", "dE/dp (L2)"]);
+    for i in 0..names.len() {
+        t.row(vec![names[i].into(), format!("{:+.3e}", g1[0][i]), format!("{:+.3e}", g2[0][i])]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_calib() -> Result<(), String> {
+    println!("{}", experiments::table3().render());
+    println!("{}", experiments::fig11().render());
+    let u = calib::static_unit_energy();
+    let mut t = TextTable::new(
+        "static per-event unit energies (pJ) — energy/calib.rs",
+        &["counter", "pJ/event"],
+    );
+    for (i, name) in eva_cim::reshape::counters::COUNTER_NAMES.iter().enumerate() {
+        if u[i] != 0.0 {
+            t.row(vec![name.to_string(), fnum(u[i], 1)]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+const USAGE: &str = "usage: eva-cim <list|run|asm|sweep|table|validate|sensitivity|calib> [flags]
+try: eva-cim list";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "list" => cmd_list(),
+        "run" => cmd_run(&args),
+        "asm" => cmd_asm(&args),
+        "sweep" => cmd_sweep(&args),
+        "table" => cmd_table(&args),
+        "validate" => cmd_validate(&args),
+        "sensitivity" => cmd_sensitivity(&args),
+        "calib" => cmd_calib(),
+        "" | "help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Probe records: the *I-state* of Table I and the probe streams of Table II.
+//!
+//! The simulator (`sim/`) plays the role of GEM5-with-probes (paper Fig 2):
+//! `InstProbe`/`PipeProbe` observe the pipeline, `RequestProbe`/`AccessProbe`
+//! observe the LSQ↔memory packets.  Everything the analysis stage consumes
+//! is collected here into a [`Trace`] — one record per *committed*
+//! instruction (wrong-path work never reaches the CIQ).
+
+use crate::isa::{FuncUnit, Instruction};
+
+/// Memory hierarchy level that serviced an access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemLevel {
+    L1,
+    L2,
+    Dram,
+}
+
+impl MemLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemLevel::L1 => "L1",
+            MemLevel::L2 => "L2",
+            MemLevel::Dram => "DRAM",
+        }
+    }
+}
+
+/// AccessProbe + RequestProbe record for one memory instruction
+/// (Table I rows: "Request from master", "Memory access",
+/// "Response from slave").
+#[derive(Clone, Copy, Debug)]
+pub struct MemAccessInfo {
+    /// request address (virtual = physical in this substrate)
+    pub addr: u32,
+    pub size: u8,
+    pub is_store: bool,
+    /// level whose array serviced the request (data residency)
+    pub level: MemLevel,
+    /// bank id within the servicing level's array
+    pub bank: u32,
+    pub l1_hit: bool,
+    pub l2_hit: bool,
+    /// request was merged into an outstanding MSHR for the same line
+    pub mshr_merged: bool,
+    /// total access latency in cycles (request issue → data)
+    pub latency: u64,
+    /// tick at which the LSQ issued the request
+    pub issue_tick: u64,
+}
+
+/// InstProbe record: one committed instruction with its pipeline timeline.
+#[derive(Clone, Debug)]
+pub struct IState {
+    /// sequence index in the committed instruction queue (CIQ)
+    pub seq: u64,
+    /// instruction index in the program text (the "PC")
+    pub pc: u32,
+    pub instr: Instruction,
+    pub fu: FuncUnit,
+    // pipeline stage ticks (Fig 7's seven stages, writeback folded into
+    // complete)
+    pub tick_fetch: u64,
+    pub tick_decode: u64,
+    pub tick_rename: u64,
+    pub tick_dispatch: u64,
+    pub tick_issue: u64,
+    pub tick_complete: u64,
+    pub tick_commit: u64,
+    /// memory access info for loads/stores
+    pub mem: Option<MemAccessInfo>,
+}
+
+/// PipeProbe aggregate: functional-unit and structure activity counters
+/// (the McPAT-facing half of the trace).
+#[derive(Clone, Debug, Default)]
+pub struct PipeStats {
+    pub fetched: u64,
+    pub decoded: u64,
+    pub renamed: u64,
+    pub iq_reads: u64,
+    pub iq_writes: u64,
+    pub rob_reads: u64,
+    pub rob_writes: u64,
+    pub int_rf_reads: u64,
+    pub int_rf_writes: u64,
+    pub fp_rf_reads: u64,
+    pub fp_rf_writes: u64,
+    pub fu_counts: [u64; crate::isa::func_unit::NUM_FUNC_UNITS],
+    pub bpred_lookups: u64,
+    pub bpred_mispredicts: u64,
+    pub lsq_reads: u64,
+    pub lsq_writes: u64,
+}
+
+/// AccessProbe aggregate: per-level hit/miss counters.
+#[derive(Clone, Debug, Default)]
+pub struct MemStats {
+    pub l1i_hits: u64,
+    pub l1i_misses: u64,
+    pub l1d_read_hits: u64,
+    pub l1d_read_misses: u64,
+    pub l1d_write_hits: u64,
+    pub l1d_write_misses: u64,
+    pub l2_read_hits: u64,
+    pub l2_read_misses: u64,
+    pub l2_write_hits: u64,
+    pub l2_write_misses: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    /// writebacks of dirty lines (counted as writes to the lower level)
+    pub writebacks: u64,
+    pub mshr_merges: u64,
+}
+
+/// Why the simulation stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    Halt,
+    MaxInstructions,
+    /// PC ran past the end of the text segment
+    RanOffEnd,
+}
+
+/// Full output of one simulation: the modeling-stage product.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub program: String,
+    /// the committed instruction queue with I-state per entry
+    pub ciq: Vec<IState>,
+    pub pipe: PipeStats,
+    pub mem: MemStats,
+    pub cycles: u64,
+    pub committed: u64,
+    pub stop: StopReason,
+}
+
+impl Trace {
+    pub fn cpi(&self) -> f64 {
+        if self.committed == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.committed as f64
+        }
+    }
+
+    /// Total data-side memory accesses (the MACR denominator).
+    pub fn data_accesses(&self) -> u64 {
+        self.ciq.iter().filter(|i| i.mem.is_some()).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_level_names() {
+        assert_eq!(MemLevel::L1.name(), "L1");
+        assert_eq!(MemLevel::Dram.name(), "DRAM");
+    }
+
+    #[test]
+    fn trace_cpi() {
+        let t = Trace {
+            program: "t".into(),
+            ciq: vec![],
+            pipe: PipeStats::default(),
+            mem: MemStats::default(),
+            cycles: 150,
+            committed: 100,
+            stop: StopReason::Halt,
+        };
+        assert!((t.cpi() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,185 @@
+//! The profiling stage (paper §V-C): system-level energy + performance.
+//!
+//! [`ProfileInputs`] is one design point (config rows + counter vectors +
+//! perf vector); [`evaluate_native`] mirrors the AOT'd graph exactly, and
+//! is both the fallback backend and the cross-validation reference for the
+//! PJRT path.
+
+use crate::config::SystemConfig;
+use crate::energy::calib::*;
+use crate::energy::{self, CfgRow};
+use crate::reshape::{CounterSet, Reshaped, NPERF, P_CIM_ADD_L1, P_CIM_ADD_L2,
+                     P_COMMITTED, P_CYCLES, P_REMOVED};
+
+/// One design point handed to the profiler backend.
+#[derive(Clone, Debug)]
+pub struct ProfileInputs {
+    pub cfg_l1: CfgRow,
+    pub cfg_l2: CfgRow,
+    pub counters_base: CounterSet,
+    pub counters_cim: CounterSet,
+    pub perf: [f64; NPERF],
+}
+
+impl ProfileInputs {
+    pub fn new(cfg: &SystemConfig, reshaped: &Reshaped) -> Self {
+        let (cfg_l1, cfg_l2) = energy::cfg_rows(cfg);
+        Self {
+            cfg_l1,
+            cfg_l2,
+            counters_base: reshaped.base.clone(),
+            counters_cim: reshaped.cim.clone(),
+            perf: reshaped.perf,
+        }
+    }
+}
+
+/// Full profiler output for one design point (the 12-tuple of the AOT
+/// graph, structured).
+#[derive(Clone, Debug, Default)]
+pub struct ProfileResult {
+    pub comps_base: [f64; NCOMP],
+    pub comps_cim: [f64; NCOMP],
+    pub total_base: f64,
+    pub total_cim: f64,
+    /// energy improvement = baseline / CiM (> 1 means CiM wins)
+    pub improvement: f64,
+    /// constant-CPI speedup (§V-C2)
+    pub speedup: f64,
+    /// share of the improvement contributed by the processor side
+    pub ratio_proc: f64,
+    pub ratio_cache: f64,
+    pub e_l1: [f64; NOPS],
+    pub lat_l1: [f64; NOPS],
+    pub e_l2: [f64; NOPS],
+    pub lat_l2: [f64; NOPS],
+}
+
+/// Evaluate one design point natively (mirror of `model._evaluate`).
+pub fn evaluate_native(inp: &ProfileInputs) -> ProfileResult {
+    let (e_l1, lat_l1) = energy::energy_latency(&inp.cfg_l1);
+    let (e_l2, lat_l2) = energy::energy_latency(&inp.cfg_l2);
+    let unit = energy::unit_energy(&inp.cfg_l1, &inp.cfg_l2);
+
+    let comps_base = energy::aggregate(&inp.counters_base, &unit);
+    let comps_cim = energy::aggregate(&inp.counters_cim, &unit);
+    // the paper's improvement metric covers "host CPU and cache" (§VI-B):
+    // DRAM traffic is reported as a component but excluded from the totals
+    let total_base: f64 = comps_base.iter().sum::<f64>() - comps_base[COMP_DRAM];
+    let total_cim: f64 = comps_cim.iter().sum::<f64>() - comps_cim[COMP_DRAM];
+    let improvement = total_base / total_cim.max(1e-9);
+
+    let cycles = inp.perf[P_CYCLES];
+    let committed = inp.perf[P_COMMITTED].max(1.0);
+    let removed = inp.perf[P_REMOVED];
+    let cpi = cycles / committed;
+    let extra_l1 = (lat_l1[OP_ADD] - lat_l1[OP_READ]).max(0.0);
+    let extra_l2 = (lat_l2[OP_ADD] - lat_l2[OP_READ]).max(0.0);
+    let cycles_cim = cycles - removed * cpi
+        + inp.perf[P_CIM_ADD_L1] * extra_l1
+        + inp.perf[P_CIM_ADD_L2] * extra_l2;
+    let speedup = cycles / cycles_cim.max(1.0);
+
+    let proc_base = comps_base[COMP_CORE] + comps_base[COMP_LEAK];
+    let proc_cim = comps_cim[COMP_CORE] + comps_cim[COMP_LEAK];
+    let delta_total = total_base - total_cim;
+    let (ratio_proc, ratio_cache) = if delta_total.abs() < 1e-9 {
+        (0.0, 0.0)
+    } else {
+        let rp = (proc_base - proc_cim) / delta_total;
+        (rp, 1.0 - rp)
+    };
+
+    ProfileResult {
+        comps_base,
+        comps_cim,
+        total_base,
+        total_cim,
+        improvement,
+        speedup,
+        ratio_proc,
+        ratio_cache,
+        e_l1,
+        lat_l1,
+        e_l2,
+        lat_l2,
+    }
+}
+
+/// Batched native evaluation (signature-compatible with the PJRT backend).
+pub fn evaluate_native_batch(inputs: &[ProfileInputs]) -> Vec<ProfileResult> {
+    inputs.iter().map(evaluate_native).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::{analyze, LocalityRule};
+    use crate::asm::Asm;
+    use crate::reshape::reshape;
+    use crate::sim::{simulate, Limits};
+
+    fn inputs() -> ProfileInputs {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0);
+        for _ in 0..10 {
+            a.lw(2, 1, 0);
+            a.lw(3, 1, 4);
+            a.add(4, 2, 3);
+            a.sw(4, 1, 8);
+        }
+        a.halt();
+        let cfg = SystemConfig::default();
+        let t = simulate(&a.assemble(), &cfg, Limits::default()).unwrap();
+        let an = analyze(&t, &cfg, LocalityRule::AnyCache);
+        let r = reshape(&t, &an.selection, &cfg);
+        ProfileInputs::new(&cfg, &r)
+    }
+
+    #[test]
+    fn improvement_and_speedup_sane_for_cim_friendly_kernel() {
+        let res = evaluate_native(&inputs());
+        assert!(res.total_base > 0.0);
+        assert!(res.total_cim > 0.0);
+        assert!(res.improvement > 1.0, "improvement {}", res.improvement);
+        assert!(res.speedup > 0.9, "speedup {}", res.speedup);
+        assert!((res.ratio_proc + res.ratio_cache - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_when_counters_equal() {
+        let mut inp = inputs();
+        inp.counters_cim = inp.counters_base.clone();
+        inp.perf[P_REMOVED] = 0.0;
+        inp.perf[P_CIM_ADD_L1] = 0.0;
+        inp.perf[P_CIM_ADD_L2] = 0.0;
+        let res = evaluate_native(&inp);
+        assert!((res.improvement - 1.0).abs() < 1e-12);
+        assert!((res.speedup - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn totals_are_component_sums_excluding_dram() {
+        let res = evaluate_native(&inputs());
+        let s: f64 = res.comps_base.iter().sum::<f64>() - res.comps_base[COMP_DRAM];
+        assert!((s - res.total_base).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fefet_improves_more_than_sram() {
+        // same workload, same counters; switch the technology column
+        let mut inp_sram = inputs();
+        let mut inp_fefet = inp_sram.clone();
+        inp_sram.cfg_l1[CFG_TECH] = 0.0;
+        inp_sram.cfg_l2[CFG_TECH] = 0.0;
+        inp_fefet.cfg_l1[CFG_TECH] = 1.0;
+        inp_fefet.cfg_l2[CFG_TECH] = 1.0;
+        let rs = evaluate_native(&inp_sram);
+        let rf = evaluate_native(&inp_fefet);
+        // FeFET's cheaper reads shrink the baseline too, but its CiM ops
+        // against tiny read energy gives bigger relative benefit (Fig 16)
+        assert!(rf.speedup >= rs.speedup);
+    }
+}

@@ -1,0 +1,204 @@
+//! Performance-counter schema — the McPAT-facing interface.
+//!
+//! MUST stay in sync with `python/compile/kernels/constants.py`
+//! (`COUNTER_NAMES`): the AOT'd profiler graph consumes counters in exactly
+//! this order.  `runtime_artifacts.rs` cross-checks the manifest.
+
+use crate::isa::FuncUnit;
+use crate::probes::Trace;
+
+pub const NC: usize = 43;
+
+// core events [0, 22)
+pub const C_FETCH: usize = 0;
+pub const C_DECODE: usize = 1;
+pub const C_RENAME: usize = 2;
+pub const C_IQ_READS: usize = 3;
+pub const C_IQ_WRITES: usize = 4;
+pub const C_ROB_READS: usize = 5;
+pub const C_ROB_WRITES: usize = 6;
+pub const C_INT_RF_READS: usize = 7;
+pub const C_INT_RF_WRITES: usize = 8;
+pub const C_FP_RF_READS: usize = 9;
+pub const C_FP_RF_WRITES: usize = 10;
+pub const C_INT_ALU: usize = 11;
+pub const C_INT_MUL: usize = 12;
+pub const C_INT_DIV: usize = 13;
+pub const C_FP_ALU: usize = 14;
+pub const C_FP_MUL: usize = 15;
+pub const C_FP_DIV: usize = 16;
+pub const C_BRANCH: usize = 17;
+pub const C_BPRED_LOOKUPS: usize = 18;
+pub const C_BPRED_MISPREDICTS: usize = 19;
+pub const C_LSQ_READS: usize = 20;
+pub const C_LSQ_WRITES: usize = 21;
+// cache events [22, 34)
+pub const C_L1I_HITS: usize = 22;
+pub const C_L1I_MISSES: usize = 23;
+pub const C_L1D_READ_HITS: usize = 24;
+pub const C_L1D_READ_MISSES: usize = 25;
+pub const C_L1D_WRITE_HITS: usize = 26;
+pub const C_L1D_WRITE_MISSES: usize = 27;
+pub const C_L2_READ_HITS: usize = 28;
+pub const C_L2_READ_MISSES: usize = 29;
+pub const C_L2_WRITE_HITS: usize = 30;
+pub const C_L2_WRITE_MISSES: usize = 31;
+pub const C_DRAM_READS: usize = 32;
+pub const C_DRAM_WRITES: usize = 33;
+// CiM events [34, 42)
+pub const C_CIM_L1_OR: usize = 34;
+pub const C_CIM_L1_AND: usize = 35;
+pub const C_CIM_L1_XOR: usize = 36;
+pub const C_CIM_L1_ADD: usize = 37;
+pub const C_CIM_L2_OR: usize = 38;
+pub const C_CIM_L2_AND: usize = 39;
+pub const C_CIM_L2_XOR: usize = 40;
+pub const C_CIM_L2_ADD: usize = 41;
+pub const C_CYCLES: usize = 42;
+
+pub const COUNTER_NAMES: [&str; NC] = [
+    "fetch_insts", "decode_insts", "rename_ops",
+    "iq_reads", "iq_writes", "rob_reads", "rob_writes",
+    "int_rf_reads", "int_rf_writes", "fp_rf_reads", "fp_rf_writes",
+    "int_alu_ops", "int_mul_ops", "int_div_ops",
+    "fp_alu_ops", "fp_mul_ops", "fp_div_ops",
+    "branch_ops", "bpred_lookups", "bpred_mispredicts",
+    "lsq_reads", "lsq_writes",
+    "l1i_hits", "l1i_misses",
+    "l1d_read_hits", "l1d_read_misses",
+    "l1d_write_hits", "l1d_write_misses",
+    "l2_read_hits", "l2_read_misses",
+    "l2_write_hits", "l2_write_misses",
+    "dram_reads", "dram_writes",
+    "cim_l1_or", "cim_l1_and", "cim_l1_xor", "cim_l1_add",
+    "cim_l2_or", "cim_l2_and", "cim_l2_xor", "cim_l2_add",
+    "cycles",
+];
+
+/// One row of the profiler input matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterSet(pub [f64; NC]);
+
+impl Default for CounterSet {
+    fn default() -> Self {
+        Self([0.0; NC])
+    }
+}
+
+impl std::ops::Index<usize> for CounterSet {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        &self.0[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for CounterSet {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.0[i]
+    }
+}
+
+impl CounterSet {
+    /// Extract the baseline (non-CiM) counter vector from a trace.
+    pub fn from_trace(t: &Trace) -> Self {
+        let mut c = CounterSet::default();
+        let p = &t.pipe;
+        c[C_FETCH] = p.fetched as f64;
+        c[C_DECODE] = p.decoded as f64;
+        c[C_RENAME] = p.renamed as f64;
+        c[C_IQ_READS] = p.iq_reads as f64;
+        c[C_IQ_WRITES] = p.iq_writes as f64;
+        c[C_ROB_READS] = p.rob_reads as f64;
+        c[C_ROB_WRITES] = p.rob_writes as f64;
+        c[C_INT_RF_READS] = p.int_rf_reads as f64;
+        c[C_INT_RF_WRITES] = p.int_rf_writes as f64;
+        c[C_FP_RF_READS] = p.fp_rf_reads as f64;
+        c[C_FP_RF_WRITES] = p.fp_rf_writes as f64;
+        c[C_INT_ALU] = p.fu_counts[FuncUnit::IntAlu.index()] as f64;
+        c[C_INT_MUL] = p.fu_counts[FuncUnit::IntMul.index()] as f64;
+        c[C_INT_DIV] = p.fu_counts[FuncUnit::IntDiv.index()] as f64;
+        c[C_FP_ALU] = p.fu_counts[FuncUnit::FpAlu.index()] as f64;
+        c[C_FP_MUL] = p.fu_counts[FuncUnit::FpMul.index()] as f64;
+        c[C_FP_DIV] = p.fu_counts[FuncUnit::FpDiv.index()] as f64;
+        c[C_BRANCH] = p.fu_counts[FuncUnit::Branch.index()] as f64;
+        c[C_BPRED_LOOKUPS] = p.bpred_lookups as f64;
+        c[C_BPRED_MISPREDICTS] = p.bpred_mispredicts as f64;
+        c[C_LSQ_READS] = p.lsq_reads as f64;
+        c[C_LSQ_WRITES] = p.lsq_writes as f64;
+        let m = &t.mem;
+        c[C_L1I_HITS] = m.l1i_hits as f64;
+        c[C_L1I_MISSES] = m.l1i_misses as f64;
+        c[C_L1D_READ_HITS] = m.l1d_read_hits as f64;
+        c[C_L1D_READ_MISSES] = m.l1d_read_misses as f64;
+        c[C_L1D_WRITE_HITS] = m.l1d_write_hits as f64;
+        c[C_L1D_WRITE_MISSES] = m.l1d_write_misses as f64;
+        c[C_L2_READ_HITS] = m.l2_read_hits as f64;
+        c[C_L2_READ_MISSES] = m.l2_read_misses as f64;
+        c[C_L2_WRITE_HITS] = m.l2_write_hits as f64;
+        c[C_L2_WRITE_MISSES] = m.l2_write_misses as f64;
+        c[C_DRAM_READS] = m.dram_reads as f64;
+        c[C_DRAM_WRITES] = m.dram_writes as f64;
+        c[C_CYCLES] = t.cycles as f64;
+        c
+    }
+
+    /// Subtract `amount` from counter `i`, clamping at zero.
+    pub fn dec(&mut self, i: usize, amount: f64) {
+        self.0[i] = (self.0[i] - amount).max(0.0);
+    }
+
+    pub fn as_f32(&self) -> [f32; NC] {
+        let mut out = [0f32; NC];
+        for (o, v) in out.iter_mut().zip(self.0.iter()) {
+            *o = *v as f32;
+        }
+        out
+    }
+
+    pub fn total_cim_ops(&self) -> f64 {
+        self.0[C_CIM_L1_OR..=C_CIM_L2_ADD].iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::config::SystemConfig;
+    use crate::sim::{simulate, Limits};
+
+    #[test]
+    fn names_match_python_schema_shape() {
+        assert_eq!(COUNTER_NAMES.len(), NC);
+        assert_eq!(COUNTER_NAMES[C_CYCLES], "cycles");
+        assert_eq!(COUNTER_NAMES[C_CIM_L1_ADD], "cim_l1_add");
+        assert_eq!(COUNTER_NAMES[C_DRAM_WRITES], "dram_writes");
+    }
+
+    #[test]
+    fn from_trace_populates_core_and_mem() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.sw(4, 1, 0);
+        a.halt();
+        let t = simulate(&a.assemble(), &SystemConfig::default(), Limits::default()).unwrap();
+        let c = CounterSet::from_trace(&t);
+        assert_eq!(c[C_FETCH], t.committed as f64);
+        assert_eq!(c[C_LSQ_READS], 2.0);
+        assert_eq!(c[C_LSQ_WRITES], 1.0);
+        assert!(c[C_CYCLES] > 0.0);
+        assert_eq!(c.total_cim_ops(), 0.0);
+    }
+
+    #[test]
+    fn dec_clamps_at_zero() {
+        let mut c = CounterSet::default();
+        c[C_FETCH] = 2.0;
+        c.dec(C_FETCH, 5.0);
+        assert_eq!(c[C_FETCH], 0.0);
+    }
+}

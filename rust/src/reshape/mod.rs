@@ -1,0 +1,308 @@
+//! Trace reshaping for system profiling — paper §IV-C.
+//!
+//! Given the offloading candidates, reshaping produces the CiM view of the
+//! execution: offloaded instructions leave the CPU pipeline (their fetch/
+//! decode/rename/issue/commit and functional-unit events disappear, their
+//! memory accesses disappear), CiM operations appear at the cache level that
+//! owns the data, operand moves and result readbacks add compensating
+//! accesses, and the speedup-model perf vector is assembled (§V-C2).
+//!
+//! Candidates extracted from the same IDG tree were already merged by the
+//! selection pass (post-order claim), matching the paper's combine step.
+
+pub mod counters;
+
+pub use counters::{CounterSet, NC};
+
+use crate::analyzer::{CimOp, Selection};
+use crate::isa::FuncUnit;
+use crate::probes::{IState, MemLevel, Trace};
+
+use counters::*;
+
+/// Perf-vector layout (mirrors `constants.py` PERF_*).
+pub const NPERF: usize = 6;
+pub const P_CYCLES: usize = 0;
+pub const P_COMMITTED: usize = 1;
+pub const P_REMOVED: usize = 2;
+pub const P_CIM_ADD_L1: usize = 3;
+pub const P_CIM_ADD_L2: usize = 4;
+pub const P_CLOCK_GHZ: usize = 5;
+
+/// The reshaped execution: both counter vectors plus the perf vector.
+#[derive(Clone, Debug)]
+pub struct Reshaped {
+    pub base: CounterSet,
+    pub cim: CounterSet,
+    pub perf: [f64; NPERF],
+    /// instructions removed from the CPU stream
+    pub removed: u64,
+    /// CiM ops added, by (level, op)
+    pub cim_op_count: u64,
+}
+
+fn remove_core_events(c: &mut CounterSet, is: &IState) {
+    c.dec(C_FETCH, 1.0);
+    c.dec(C_DECODE, 1.0);
+    c.dec(C_RENAME, 1.0);
+    c.dec(C_IQ_READS, 1.0);
+    c.dec(C_IQ_WRITES, 1.0);
+    c.dec(C_ROB_READS, 1.0);
+    c.dec(C_ROB_WRITES, 1.0);
+    for s in is.instr.sources().into_iter().flatten() {
+        if s < crate::isa::NUM_INT_REGS {
+            c.dec(C_INT_RF_READS, 1.0);
+        } else {
+            c.dec(C_FP_RF_READS, 1.0);
+        }
+    }
+    if let Some(rd) = is.instr.dest() {
+        if rd < crate::isa::NUM_INT_REGS {
+            c.dec(C_INT_RF_WRITES, 1.0);
+        } else {
+            c.dec(C_FP_RF_WRITES, 1.0);
+        }
+    }
+    let fu_counter = match is.fu {
+        FuncUnit::IntAlu => C_INT_ALU,
+        FuncUnit::IntMul => C_INT_MUL,
+        FuncUnit::IntDiv => C_INT_DIV,
+        FuncUnit::FpAlu => C_FP_ALU,
+        FuncUnit::FpMul => C_FP_MUL,
+        FuncUnit::FpDiv => C_FP_DIV,
+        FuncUnit::Branch => C_BRANCH,
+        FuncUnit::MemRead => {
+            c.dec(C_LSQ_READS, 1.0);
+            C_INT_ALU // address generation ALU op folded into mem path
+        }
+        FuncUnit::MemWrite => {
+            c.dec(C_LSQ_WRITES, 1.0);
+            C_INT_ALU
+        }
+    };
+    if !is.instr.op.is_mem() {
+        c.dec(fu_counter, 1.0);
+    }
+}
+
+fn remove_cache_events(c: &mut CounterSet, is: &IState) {
+    let Some(m) = is.mem else { return };
+    if m.is_store {
+        if m.l1_hit {
+            c.dec(C_L1D_WRITE_HITS, 1.0);
+        } else {
+            c.dec(C_L1D_WRITE_MISSES, 1.0);
+            if m.l2_hit {
+                c.dec(C_L2_READ_HITS, 1.0);
+            } else {
+                c.dec(C_L2_READ_MISSES, 1.0);
+                c.dec(C_DRAM_READS, 1.0);
+            }
+        }
+    } else if m.l1_hit {
+        c.dec(C_L1D_READ_HITS, 1.0);
+    } else {
+        c.dec(C_L1D_READ_MISSES, 1.0);
+        if m.l2_hit {
+            c.dec(C_L2_READ_HITS, 1.0);
+        } else {
+            c.dec(C_L2_READ_MISSES, 1.0);
+            c.dec(C_DRAM_READS, 1.0);
+        }
+    }
+}
+
+fn cim_counter(level: MemLevel, op: CimOp) -> usize {
+    match (level, op) {
+        (MemLevel::L1, CimOp::Or) => C_CIM_L1_OR,
+        (MemLevel::L1, CimOp::And) => C_CIM_L1_AND,
+        (MemLevel::L1, CimOp::Xor) => C_CIM_L1_XOR,
+        (MemLevel::L1, CimOp::Add) => C_CIM_L1_ADD,
+        (MemLevel::L2, CimOp::Or) => C_CIM_L2_OR,
+        (MemLevel::L2, CimOp::And) => C_CIM_L2_AND,
+        (MemLevel::L2, CimOp::Xor) => C_CIM_L2_XOR,
+        (MemLevel::L2, CimOp::Add) => C_CIM_L2_ADD,
+        (MemLevel::Dram, _) => unreachable!("CiM ops never execute in DRAM"),
+    }
+}
+
+/// Extra cycles a CiM-ADD pays over a plain read at each level, from the
+/// array latency model (Fig 11) — used to scale the CiM system's cycle
+/// count so leakage tracks execution time.
+fn add_latency_extra(cfg: &crate::config::SystemConfig) -> (f64, f64) {
+    let (r1, r2) = crate::energy::cfg_rows(cfg);
+    let (_, l1) = crate::energy::energy_latency(&r1);
+    let (_, l2) = crate::energy::energy_latency(&r2);
+    use crate::energy::calib::{OP_ADD, OP_READ};
+    (
+        (l1[OP_ADD] - l1[OP_READ]).max(0.0),
+        (l2[OP_ADD] - l2[OP_READ]).max(0.0),
+    )
+}
+
+/// Reshape `trace` according to `sel`, producing profiler inputs.
+pub fn reshape(trace: &Trace, sel: &Selection, cfg: &crate::config::SystemConfig) -> Reshaped {
+    let clock_ghz = cfg.clock_ghz;
+    let base = CounterSet::from_trace(trace);
+    let mut cim = base.clone();
+    let mut removed = 0u64;
+    let mut cim_op_count = 0u64;
+    let mut cim_add = [0u64; 2]; // L1, L2
+
+    for cand in &sel.candidates {
+        // offloaded CiM-op instructions leave the pipeline
+        for &m in &cand.members {
+            remove_core_events(&mut cim, &trace.ciq[m as usize]);
+        }
+        // claimed loads disappear (instruction + cache traffic)
+        for &l in &cand.loads {
+            let is = &trace.ciq[l as usize];
+            remove_core_events(&mut cim, is);
+            remove_cache_events(&mut cim, is);
+        }
+        // absorbed store disappears
+        if let Some(s) = cand.absorbed_store {
+            let is = &trace.ciq[s as usize];
+            remove_core_events(&mut cim, is);
+            remove_cache_events(&mut cim, is);
+        }
+        // CiM operations appear at the candidate's level
+        for &op in &cand.ops {
+            cim[cim_counter(cand.level, op)] += 1.0;
+            cim_op_count += 1;
+            if op == CimOp::Add {
+                cim_add[(cand.level == MemLevel::L2) as usize] += 1;
+            }
+        }
+        // operand moves: read at the source level + write at the exec level
+        for _ in 0..cand.moves {
+            match cand.level {
+                MemLevel::L2 => {
+                    cim[C_L1D_READ_HITS] += 1.0;
+                    cim[C_L2_WRITE_HITS] += 1.0;
+                }
+                _ => {
+                    cim[C_L2_READ_HITS] += 1.0;
+                    cim[C_L1D_WRITE_HITS] += 1.0;
+                }
+            }
+        }
+        // readbacks: the CPU still needs the result in a register
+        for _ in 0..cand.readbacks {
+            match cand.level {
+                MemLevel::L2 => cim[C_L2_READ_HITS] += 1.0,
+                _ => cim[C_L1D_READ_HITS] += 1.0,
+            }
+            cim[C_LSQ_READS] += 1.0;
+        }
+        removed += cand.removed_count();
+        // readbacks keep one CPU-side consumer access alive
+        removed = removed.saturating_sub(cand.readbacks as u64);
+    }
+
+    let perf = [
+        trace.cycles as f64,
+        trace.committed as f64,
+        removed as f64,
+        cim_add[0] as f64,
+        cim_add[1] as f64,
+        clock_ghz,
+    ];
+    // leakage tracks execution time: the CiM system's cycle counter uses
+    // the same constant-CPI estimate the speedup model applies (§V-C2)
+    let (extra_l1, extra_l2) = add_latency_extra(cfg);
+    let cpi = if trace.committed > 0 {
+        trace.cycles as f64 / trace.committed as f64
+    } else {
+        1.0
+    };
+    let cycles_cim = (trace.cycles as f64 - removed as f64 * cpi
+        + cim_add[0] as f64 * extra_l1
+        + cim_add[1] as f64 * extra_l2)
+        .max(1.0);
+    cim[counters::C_CYCLES] = cycles_cim;
+
+    Reshaped { base, cim, perf, removed, cim_op_count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::{analyze, LocalityRule};
+    use crate::asm::Asm;
+    use crate::config::SystemConfig;
+    use crate::sim::{simulate, Limits};
+
+    fn pattern_program(reps: usize) -> Asm {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0);
+        for _ in 0..reps {
+            a.lw(2, 1, 0);
+            a.lw(3, 1, 4);
+            a.add(4, 2, 3);
+            a.sw(4, 1, 8);
+        }
+        a.halt();
+        a
+    }
+
+    fn reshaped(reps: usize) -> (Trace, Reshaped) {
+        let cfg = SystemConfig::default();
+        let t = simulate(&pattern_program(reps).assemble(), &cfg, Limits::default()).unwrap();
+        let an = analyze(&t, &cfg, LocalityRule::AnyCache);
+        let r = reshape(&t, &an.selection, &cfg);
+        (t, r)
+    }
+
+    #[test]
+    fn conservation_of_instructions() {
+        let (t, r) = reshaped(5);
+        // removed + remaining fetches == original fetches
+        assert_eq!(r.base[C_FETCH], t.committed as f64);
+        assert!((r.cim[C_FETCH] + r.removed as f64 - r.base[C_FETCH]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cim_ops_appear_and_memory_traffic_drops() {
+        let (_, r) = reshaped(5);
+        assert!(r.cim_op_count >= 5);
+        assert!(r.cim.total_cim_ops() >= 5.0);
+        let base_mem: f64 = r.base.0[C_L1D_READ_HITS..=C_DRAM_WRITES].iter().sum();
+        let cim_mem: f64 = r.cim.0[C_L1D_READ_HITS..=C_DRAM_WRITES].iter().sum();
+        assert!(cim_mem < base_mem, "cim {cim_mem} !< base {base_mem}");
+    }
+
+    #[test]
+    fn counters_never_negative() {
+        let (_, r) = reshaped(8);
+        for (i, v) in r.cim.0.iter().enumerate() {
+            assert!(*v >= 0.0, "counter {i} negative: {v}");
+        }
+    }
+
+    #[test]
+    fn perf_vector_consistent() {
+        let (t, r) = reshaped(4);
+        assert_eq!(r.perf[P_CYCLES], t.cycles as f64);
+        assert_eq!(r.perf[P_COMMITTED], t.committed as f64);
+        assert_eq!(r.perf[P_REMOVED], r.removed as f64);
+        assert_eq!(r.perf[P_CIM_ADD_L1] + r.perf[P_CIM_ADD_L2], r.cim_op_count as f64);
+        assert_eq!(r.perf[P_CLOCK_GHZ], 1.0);
+    }
+
+    #[test]
+    fn no_candidates_means_identity() {
+        let mut a = Asm::new("t");
+        a.li(1, 3);
+        a.mul(2, 1, 1);
+        a.halt();
+        let cfg = SystemConfig::default();
+        let t = simulate(&a.assemble(), &cfg, Limits::default()).unwrap();
+        let an = analyze(&t, &cfg, LocalityRule::AnyCache);
+        let r = reshape(&t, &an.selection, &cfg);
+        assert_eq!(r.base, r.cim);
+        assert_eq!(r.removed, 0);
+    }
+}

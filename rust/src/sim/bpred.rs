@@ -1,0 +1,114 @@
+//! Branch predictor: gshare-style 2-bit counters + a direct-mapped BTB.
+
+/// 2-bit saturating counter predictor with global history.
+pub struct BranchPredictor {
+    counters: Vec<u8>,
+    history: u32,
+    history_bits: u32,
+    btb: Vec<(u32, u32)>, // (pc, target)
+    pub lookups: u64,
+    pub mispredicts: u64,
+}
+
+impl BranchPredictor {
+    pub fn new(table_bits: u32) -> Self {
+        Self {
+            counters: vec![1u8; 1 << table_bits], // weakly not-taken
+            history: 0,
+            history_bits: table_bits.min(12),
+            btb: vec![(u32::MAX, 0); 1 << table_bits],
+            lookups: 0,
+            mispredicts: 0,
+        }
+    }
+
+    #[inline]
+    fn index(&self, pc: u32) -> usize {
+        ((pc ^ (self.history & ((1 << self.history_bits) - 1))) as usize)
+            & (self.counters.len() - 1)
+    }
+
+    /// Predict direction and target for a conditional branch at `pc`.
+    pub fn predict(&mut self, pc: u32) -> (bool, Option<u32>) {
+        self.lookups += 1;
+        let taken = self.counters[self.index(pc)] >= 2;
+        let (bpc, target) = self.btb[pc as usize & (self.btb.len() - 1)];
+        let tgt = if bpc == pc { Some(target) } else { None };
+        (taken, tgt)
+    }
+
+    /// Update with the resolved outcome; returns `true` on mispredict.
+    pub fn update(&mut self, pc: u32, taken: bool, target: u32, predicted: (bool, Option<u32>)) -> bool {
+        let idx = self.index(pc);
+        let c = &mut self.counters[idx];
+        if taken {
+            *c = (*c + 1).min(3);
+        } else {
+            *c = c.saturating_sub(1);
+        }
+        self.history = (self.history << 1) | taken as u32;
+        let btb_idx = pc as usize & (self.btb.len() - 1);
+        self.btb[btb_idx] = (pc, target);
+
+        let (pred_taken, pred_target) = predicted;
+        let mispredicted = pred_taken != taken
+            || (taken && pred_target != Some(target));
+        if mispredicted {
+            self.mispredicts += 1;
+        }
+        mispredicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_always_taken_loop() {
+        let mut bp = BranchPredictor::new(10);
+        let pc = 7;
+        let mut wrong = 0;
+        for _ in 0..1000 {
+            let pred = bp.predict(pc);
+            if bp.update(pc, true, 3, pred) {
+                wrong += 1;
+            }
+        }
+        // gshare needs ~history_bits iterations to saturate its history,
+        // mispredicting once or twice per fresh index; then it locks in.
+        assert!(wrong <= 30, "mispredicts: {wrong}");
+        assert_eq!(bp.lookups, 1000);
+    }
+
+    #[test]
+    fn learns_not_taken() {
+        let mut bp = BranchPredictor::new(10);
+        let pc = 20;
+        // warm up
+        for _ in 0..10 {
+            let pred = bp.predict(pc);
+            bp.update(pc, false, 99, pred);
+        }
+        let pred = bp.predict(pc);
+        assert!(!pred.0);
+        assert!(!bp.update(pc, false, 99, pred));
+    }
+
+    #[test]
+    fn btb_miss_on_taken_counts_mispredict() {
+        let mut bp = BranchPredictor::new(4);
+        // force counter to predict taken but BTB is cold
+        let pc = 3;
+        for _ in 0..4 {
+            let pred = bp.predict(pc);
+            bp.update(pc, true, 42, pred);
+        }
+        // now alias another pc into the same BTB slot
+        let alias = 3 + 16;
+        let pred = bp.predict(alias);
+        // whether taken or not, a taken resolution with unknown target mispredicts
+        let mis = bp.update(alias, true, 55, pred);
+        assert!(mis || pred.1 == Some(55));
+    }
+}

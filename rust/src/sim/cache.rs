@@ -1,0 +1,386 @@
+//! Set-associative cache model with LRU replacement, write-back +
+//! write-allocate policy, MSHR merging, and bank mapping.
+//!
+//! This is the AccessProbe's view of the world: every access reports which
+//! level serviced it, the bank the line lives in, and whether the request
+//! merged into an outstanding miss — exactly the locality information the
+//! IDG analyzer needs (paper §IV-A: "the data of an offloading candidate
+//! need to be in the same memory bank").
+
+use crate::config::CacheConfig;
+use crate::probes::{MemAccessInfo, MemLevel, MemStats};
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Line {
+    tag: u32,
+    valid: bool,
+    dirty: bool,
+    /// last-use stamp for LRU
+    lru: u64,
+}
+
+/// One cache level.
+pub struct Cache {
+    sets: u32,
+    ways: u32,
+    line_shift: u32,
+    banks: u32,
+    pub latency: u64,
+    lines: Vec<Line>,
+    use_stamp: u64,
+    mshr: Vec<(u32, u64)>, // (line address, ready tick)
+    mshr_entries: usize,
+}
+
+/// Outcome of a single-level probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LevelOutcome {
+    pub hit: bool,
+    /// dirty line evicted (must be written back to the level below)
+    pub writeback: Option<u32>,
+    pub bank: u32,
+    pub mshr_merged: bool,
+}
+
+impl Cache {
+    pub fn new(cfg: &CacheConfig) -> Self {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        Self {
+            sets,
+            ways: cfg.assoc,
+            line_shift: cfg.line.trailing_zeros(),
+            banks: cfg.banks,
+            latency: cfg.latency,
+            lines: vec![Line::default(); (sets * cfg.assoc) as usize],
+            use_stamp: 0,
+            mshr: Vec::new(),
+            mshr_entries: cfg.mshr_entries,
+        }
+    }
+
+    #[inline]
+    pub fn line_addr(&self, addr: u32) -> u32 {
+        addr >> self.line_shift
+    }
+
+    #[inline]
+    fn set_of(&self, line_addr: u32) -> u32 {
+        line_addr & (self.sets - 1)
+    }
+
+    #[inline]
+    fn tag_of(&self, line_addr: u32) -> u32 {
+        line_addr >> self.sets.trailing_zeros()
+    }
+
+    /// Bank a line maps to (line interleaving across banks).
+    #[inline]
+    pub fn bank_of(&self, addr: u32) -> u32 {
+        self.line_addr(addr) & (self.banks - 1)
+    }
+
+    /// Probe and update on an access; fills the line on a miss.
+    pub fn access(&mut self, addr: u32, is_write: bool, now: u64) -> LevelOutcome {
+        let la = self.line_addr(addr);
+        let set = self.set_of(la);
+        let tag = self.tag_of(la);
+        let base = (set * self.ways) as usize;
+        self.use_stamp += 1;
+        let bank = self.bank_of(addr);
+
+        // hit?
+        for w in 0..self.ways as usize {
+            let l = &mut self.lines[base + w];
+            if l.valid && l.tag == tag {
+                l.lru = self.use_stamp;
+                if is_write {
+                    l.dirty = true;
+                }
+                return LevelOutcome { hit: true, writeback: None, bank, mshr_merged: false };
+            }
+        }
+
+        // miss: MSHR check (another outstanding miss on the same line?)
+        self.mshr.retain(|&(_, ready)| ready > now);
+        let merged = self.mshr.iter().any(|&(l, _)| l == la);
+        if !merged && self.mshr.len() < self.mshr_entries {
+            self.mshr.push((la, now + self.latency * 4));
+        }
+
+        // victim = invalid way or LRU
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for w in 0..self.ways as usize {
+            let l = &self.lines[base + w];
+            if !l.valid {
+                victim = w;
+                break;
+            }
+            if l.lru < best {
+                best = l.lru;
+                victim = w;
+            }
+        }
+        let v = &mut self.lines[base + victim];
+        let writeback = if v.valid && v.dirty {
+            // reconstruct victim line address: tag | set
+            Some((v.tag << self.sets.trailing_zeros() | set) << self.line_shift)
+        } else {
+            None
+        };
+        *v = Line { tag, valid: true, dirty: is_write, lru: self.use_stamp };
+        LevelOutcome { hit: false, writeback, bank, mshr_merged: merged }
+    }
+
+    /// Probe without side effects (used by the reshaper's locality check).
+    pub fn peek(&self, addr: u32) -> bool {
+        let la = self.line_addr(addr);
+        let set = self.set_of(la);
+        let tag = self.tag_of(la);
+        let base = (set * self.ways) as usize;
+        (0..self.ways as usize)
+            .any(|w| self.lines[base + w].valid && self.lines[base + w].tag == tag)
+    }
+
+    /// Number of valid lines (for capacity invariants in tests).
+    pub fn valid_lines(&self) -> usize {
+        self.lines.iter().filter(|l| l.valid).count()
+    }
+
+    pub fn capacity_lines(&self) -> usize {
+        self.lines.len()
+    }
+}
+
+/// The full data-side hierarchy: L1D + shared L2 + DRAM.
+pub struct MemHierarchy {
+    pub l1d: Cache,
+    pub l1i: Cache,
+    pub l2: Cache,
+    pub dram_latency: u64,
+    pub stats: MemStats,
+}
+
+impl MemHierarchy {
+    pub fn new(l1i: &CacheConfig, l1d: &CacheConfig, l2: &CacheConfig, dram_latency: u64) -> Self {
+        Self {
+            l1d: Cache::new(l1d),
+            l1i: Cache::new(l1i),
+            l2: Cache::new(l2),
+            dram_latency,
+            stats: MemStats::default(),
+        }
+    }
+
+    /// Data access through the hierarchy; updates stats and returns the
+    /// AccessProbe record.
+    pub fn access_data(&mut self, addr: u32, size: u8, is_store: bool, now: u64) -> MemAccessInfo {
+        let o1 = self.l1d.access(addr, is_store, now);
+        if o1.hit {
+            if is_store {
+                self.stats.l1d_write_hits += 1;
+            } else {
+                self.stats.l1d_read_hits += 1;
+            }
+            return MemAccessInfo {
+                addr,
+                size,
+                is_store,
+                level: MemLevel::L1,
+                bank: o1.bank,
+                l1_hit: true,
+                l2_hit: false,
+                mshr_merged: false,
+                latency: self.l1d.latency,
+                issue_tick: now,
+            };
+        }
+        if is_store {
+            self.stats.l1d_write_misses += 1;
+        } else {
+            self.stats.l1d_read_misses += 1;
+        }
+        if o1.mshr_merged {
+            self.stats.mshr_merges += 1;
+        }
+        if let Some(wb) = o1.writeback {
+            // dirty victim written back into L2
+            self.stats.writebacks += 1;
+            let o = self.l2.access(wb, true, now);
+            if o.hit {
+                self.stats.l2_write_hits += 1;
+            } else {
+                self.stats.l2_write_misses += 1;
+                self.stats.dram_writes += 1;
+            }
+        }
+
+        // L2: the refill read (a store miss still *reads* the line first
+        // under write-allocate)
+        let o2 = self.l2.access(addr, false, now);
+        if o2.hit {
+            self.stats.l2_read_hits += 1;
+            let lat = self.l1d.latency + self.l2.latency;
+            return MemAccessInfo {
+                addr,
+                size,
+                is_store,
+                level: MemLevel::L2,
+                bank: o2.bank,
+                l1_hit: false,
+                l2_hit: true,
+                mshr_merged: o1.mshr_merged,
+                latency: if o1.mshr_merged { self.l1d.latency + 1 } else { lat },
+                issue_tick: now,
+            };
+        }
+        self.stats.l2_read_misses += 1;
+        if let Some(wb) = o2.writeback {
+            self.stats.writebacks += 1;
+            self.stats.dram_writes += 1;
+            let _ = wb;
+        }
+        self.stats.dram_reads += 1;
+        let lat = self.l1d.latency + self.l2.latency + self.dram_latency;
+        MemAccessInfo {
+            addr,
+            size,
+            is_store,
+            level: MemLevel::Dram,
+            bank: 0,
+            l1_hit: false,
+            l2_hit: false,
+            mshr_merged: o1.mshr_merged,
+            latency: if o1.mshr_merged { self.l1d.latency + self.l2.latency } else { lat },
+            issue_tick: now,
+        }
+    }
+
+    /// Instruction fetch access (L1I + shared L2).
+    pub fn access_inst(&mut self, addr: u32, now: u64) -> u64 {
+        let o1 = self.l1i.access(addr, false, now);
+        if o1.hit {
+            self.stats.l1i_hits += 1;
+            return self.l1i.latency;
+        }
+        self.stats.l1i_misses += 1;
+        let o2 = self.l2.access(addr, false, now);
+        if o2.hit {
+            self.stats.l2_read_hits += 1;
+            self.l1i.latency + self.l2.latency
+        } else {
+            self.stats.l2_read_misses += 1;
+            self.stats.dram_reads += 1;
+            self.l1i.latency + self.l2.latency + self.dram_latency
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheConfig;
+
+    fn small() -> CacheConfig {
+        CacheConfig { capacity: 1024, assoc: 2, line: 64, banks: 4, latency: 2, mshr_entries: 4 }
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = Cache::new(&small());
+        assert!(!c.access(0x100, false, 0).hit);
+        assert!(c.access(0x100, false, 1).hit);
+        assert!(c.access(0x13c, false, 2).hit); // same 64B line
+        assert!(!c.access(0x140, false, 3).hit); // next line
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 1 kB, 2-way, 64 B lines -> 8 sets; set = line_addr % 8
+        let mut c = Cache::new(&small());
+        let set0 = |i: u32| i * 8 * 64; // addresses mapping to set 0
+        c.access(set0(0), false, 0);
+        c.access(set0(1), false, 1);
+        c.access(set0(0), false, 2); // touch 0 -> 1 is LRU
+        c.access(set0(2), false, 3); // evicts 1
+        assert!(c.peek(set0(0)));
+        assert!(!c.peek(set0(1)));
+        assert!(c.peek(set0(2)));
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = Cache::new(&small());
+        let set0 = |i: u32| i * 8 * 64;
+        c.access(set0(0), true, 0); // dirty
+        c.access(set0(1), false, 1);
+        let o = c.access(set0(2), false, 2); // evicts dirty line 0
+        assert_eq!(o.writeback, Some(set0(0)));
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut c = Cache::new(&small());
+        for i in 0..10_000u32 {
+            c.access(i * 64, (i % 3) == 0, i as u64);
+        }
+        assert!(c.valid_lines() <= c.capacity_lines());
+        assert_eq!(c.valid_lines(), c.capacity_lines()); // saturated
+    }
+
+    #[test]
+    fn bank_mapping_interleaves_lines() {
+        let c = Cache::new(&small());
+        assert_eq!(c.bank_of(0x000), 0);
+        assert_eq!(c.bank_of(0x040), 1);
+        assert_eq!(c.bank_of(0x080), 2);
+        assert_eq!(c.bank_of(0x0c0), 3);
+        assert_eq!(c.bank_of(0x100), 0);
+        // same line -> same bank regardless of offset
+        assert_eq!(c.bank_of(0x47), c.bank_of(0x40));
+    }
+
+    #[test]
+    fn hierarchy_levels_and_stats() {
+        let l1 = small();
+        let l2 = CacheConfig { capacity: 4096, assoc: 4, line: 64, banks: 4, latency: 8, mshr_entries: 8 };
+        let mut m = MemHierarchy::new(&l1, &l1, &l2, 100);
+        let a = m.access_data(0x1000, 4, false, 0);
+        assert_eq!(a.level, MemLevel::Dram);
+        assert_eq!(a.latency, 2 + 8 + 100);
+        let b = m.access_data(0x1000, 4, false, 10);
+        assert_eq!(b.level, MemLevel::L1);
+        assert_eq!(m.stats.l1d_read_hits, 1);
+        assert_eq!(m.stats.l1d_read_misses, 1);
+        assert_eq!(m.stats.dram_reads, 1);
+    }
+
+    #[test]
+    fn l2_hit_path() {
+        let l1 = small();
+        let l2 = CacheConfig { capacity: 64 * 1024, assoc: 4, line: 64, banks: 4, latency: 8, mshr_entries: 8 };
+        let mut m = MemHierarchy::new(&l1, &l1, &l2, 100);
+        // fill L1 set 0 beyond capacity so the first line falls back to L2 only
+        let set0 = |i: u32| i * 8 * 64;
+        m.access_data(set0(0), 4, false, 0);
+        m.access_data(set0(1), 4, false, 1);
+        m.access_data(set0(2), 4, false, 2); // evicts set0(0) from L1 (clean)
+        let a = m.access_data(set0(0), 4, false, 3);
+        assert_eq!(a.level, MemLevel::L2);
+        assert!(a.l2_hit && !a.l1_hit);
+    }
+
+    #[test]
+    fn store_markings() {
+        let l1 = small();
+        let l2 = CacheConfig { capacity: 4096, assoc: 4, line: 64, banks: 4, latency: 8, mshr_entries: 8 };
+        let mut m = MemHierarchy::new(&l1, &l1, &l2, 100);
+        let a = m.access_data(0x40, 4, true, 0);
+        assert!(a.is_store);
+        assert_eq!(m.stats.l1d_write_misses, 1);
+        let b = m.access_data(0x44, 4, true, 1);
+        assert!(b.l1_hit);
+        assert_eq!(m.stats.l1d_write_hits, 1);
+    }
+}

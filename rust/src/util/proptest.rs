@@ -1,0 +1,85 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` random inputs produced by `gen`
+//! from a seeded [`Rng`]; on failure it retries with progressively simpler
+//! sizes (a poor-man's shrink via the `size` hint handed to the generator)
+//! and panics with the failing seed so the case can be replayed.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs. `gen(rng, size)` should scale its
+/// output with `size` (0..=100) so failures can be re-sought at small sizes.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng, u32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    // deterministic per-property seed so failures are reproducible
+    let base_seed = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    let mut failure: Option<(u64, u32, String)> = None;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let size = 1 + (case * 100 / cases.max(1)).min(99);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            failure = Some((seed, size, format!("{msg}; input: {input:?}")));
+            break;
+        }
+    }
+    if let Some((seed, size, msg)) = failure {
+        // try to find a smaller counterexample before reporting
+        for small in 1..=10u32 {
+            let mut rng = Rng::new(seed ^ 0xdead_beef ^ small as u64);
+            let input = gen(&mut rng, small);
+            if let Err(small_msg) = prop(&input) {
+                panic!(
+                    "property '{name}' failed (shrunk, size={small}): \
+                     {small_msg}; input: {input:?}"
+                );
+            }
+        }
+        panic!("property '{name}' failed (seed={seed}, size={size}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            100,
+            |rng, size| {
+                let a = rng.gen_range(size as u64 * 10 + 1) as i64;
+                let b = rng.gen_range(size as u64 * 10 + 1) as i64;
+                (a, b)
+            },
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("addition not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_name() {
+        check(
+            "always-fails",
+            10,
+            |rng, _| rng.gen_range(100),
+            |_| Err("nope".into()),
+        );
+    }
+}

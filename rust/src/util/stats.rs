@@ -1,0 +1,112 @@
+//! Small statistics helpers used by the profiler, benches and reports.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean; 0.0 for an empty slice. Requires positive inputs.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Sample standard deviation; 0.0 for fewer than two samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Linear-interpolation percentile, `p` in `[0, 100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Relative deviation |a-b| / |b| (the paper's Table V metric).
+pub fn rel_dev(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        return if a == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    ((a - b) / b).abs()
+}
+
+/// Simple wall-clock measurement harness used by the custom benches
+/// (criterion is unavailable offline). Runs `f` for at least `min_iters`
+/// iterations and ~`min_time_ms`, returning (iters, ns/iter).
+pub fn time_it<F: FnMut()>(mut f: F, min_iters: u64, min_time_ms: u64) -> (u64, f64) {
+    // warm-up
+    f();
+    let start = std::time::Instant::now();
+    let mut iters = 0u64;
+    while iters < min_iters
+        || start.elapsed() < std::time::Duration::from_millis(min_time_ms)
+    {
+        f();
+        iters += 1;
+        if iters > 100_000_000 {
+            break;
+        }
+    }
+    let ns = start.elapsed().as_nanos() as f64 / iters as f64;
+    (iters, ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn rel_dev_basic() {
+        assert!((rel_dev(124.0, 100.0) - 0.24).abs() < 1e-12);
+        assert_eq!(rel_dev(0.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Plain-text and CSV table rendering for reports and benches.
+
+/// Column alignment.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: headers + rows of strings.
+pub struct TextTable {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    align: Vec<Align>,
+}
+
+impl TextTable {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            align: std::iter::once(Align::Left)
+                .chain(std::iter::repeat(Align::Right))
+                .take(headers.len())
+                .collect(),
+        }
+    }
+
+    pub fn align(mut self, align: &[Align]) -> Self {
+        assert_eq!(align.len(), self.headers.len());
+        self.align = align.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(cells.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned monospace table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut out = String::new();
+            for i in 0..ncol {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                out.push(' ');
+                match self.align[i] {
+                    Align::Left => {
+                        out.push_str(cell);
+                        out.push_str(&" ".repeat(pad));
+                    }
+                    Align::Right => {
+                        out.push_str(&" ".repeat(pad));
+                        out.push_str(cell);
+                    }
+                }
+                out.push(' ');
+                if i + 1 < ncol {
+                    out.push('|');
+                }
+            }
+            out
+        };
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            s.push_str(&self.title);
+            s.push('\n');
+        }
+        s.push_str(&fmt_row(&self.headers));
+        s.push('\n');
+        s.push_str(&sep);
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn f(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_csv() {
+        let mut t = TextTable::new("T", &["name", "val"]);
+        t.row_strs(&["a", "1.5"]);
+        t.row_strs(&["bb", "22"]);
+        let r = t.render();
+        assert!(r.contains("name"));
+        assert!(r.lines().count() == 5); // title, header, sep, 2 rows
+        let c = t.to_csv();
+        assert_eq!(c, "name,val\na,1.5\nbb,22\n");
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = TextTable::new("", &["x"]);
+        t.row_strs(&["a,b"]);
+        assert_eq!(t.to_csv(), "x\n\"a,b\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = TextTable::new("", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

@@ -1,0 +1,378 @@
+//! Machine-learning benchmarks (Table IV): naive bayes, decision tree,
+//! linear SVM, linear regression, k-means.
+//!
+//! These are the *inference/one-epoch kernels* the paper's accelerator
+//! workloads exercise: per-sample feature loops dominated by load-load-op
+//! chains (NB, SVM, KM are integer fixed-point; LiR uses the FPU).
+
+use crate::asm::{Asm, Program};
+use crate::util::Rng;
+
+/// Naive Bayes inference: per sample, per feature, accumulate the class
+/// log-likelihood from a per-(feature, value, class) table; pick argmax.
+pub fn naive_bayes(scale: usize, seed: u64) -> Program {
+    let samples = if scale == 0 { 400 } else { scale.max(2) * 40 };
+    let features = 16usize;
+    let mut rng = Rng::new(seed ^ 0x6e62);
+    let mut a = Asm::new("nb");
+
+    let x: Vec<i32> = (0..samples * features)
+        .map(|_| rng.gen_range(2) as i32)
+        .collect();
+    // log-prob table (scaled by 1024): [feature][value][class]
+    let table: Vec<i32> = (0..features * 2 * 2)
+        .map(|_| -(rng.gen_range(3000) as i32) - 16)
+        .collect();
+    let xb = a.data.alloc_i32("x", &x);
+    let tb = a.data.alloc_i32("table", &table);
+    let out = a.data.alloc_i32("pred", &vec![0i32; samples]);
+
+    // -O2-style codegen: the feature loop is fully unrolled with
+    // immediate-offset addressing (the per-(feature,value) table slot base
+    // is a compile-time constant), pointers bump across samples.
+    // r3=i, r4=&x[i*F], r6=tmp, r7=v, r20=score0, r21=score1, r8=acc
+    let (ri, rx, rt, rv, rs0, rs1, racc, rtmp) = (3, 4, 6, 7, 20, 21, 8, 9);
+    a.li(ri, 0);
+    a.li(rx, xb as i32);
+    let sample_loop = a.label("sample");
+    a.bind(sample_loop);
+    a.li(rs0, 0);
+    a.li(rs1, 0);
+    for j in 0..features {
+        a.lw(rv, rx, (j * 4) as i32); // v = x[i][j] in {0,1}
+        // &table[j][v][class] = tb + j*16 + v*8 + class*4
+        a.slli(rt, rv, 3);
+        a.lw(racc, rt, tb as i32 + (j * 16) as i32);
+        a.add(rs0, rs0, racc); // score0 += logp(class 0)
+        a.lw(racc, rt, tb as i32 + (j * 16) as i32 + 4);
+        a.add(rs1, rs1, racc); // score1 += logp(class 1)
+    }
+    // pred = score1 > score0
+    a.slt(racc, rs0, rs1);
+    a.slli(rtmp, ri, 2);
+    a.addi(rtmp, rtmp, out as i32);
+    a.sw(racc, rtmp, 0);
+    a.addi(rx, rx, features as i32 * 4);
+    a.addi(ri, ri, 1);
+    a.li(rtmp, samples as i32);
+    a.blt(ri, rtmp, sample_loop);
+    a.halt();
+    a.assemble()
+}
+
+/// Decision-tree inference: array-encoded complete binary tree; each sample
+/// walks `depth` levels comparing a feature against a threshold.
+pub fn decision_tree(scale: usize, seed: u64) -> Program {
+    let samples = if scale == 0 { 500 } else { scale.max(2) * 50 };
+    let depth = 10usize;
+    let features = 8usize;
+    let nodes = (1 << depth) - 1;
+    let mut rng = Rng::new(seed ^ 0x6474);
+    let mut a = Asm::new("dt");
+
+    let x: Vec<i32> = (0..samples * features)
+        .map(|_| rng.gen_range(1000) as i32)
+        .collect();
+    let feat_idx: Vec<i32> = (0..nodes)
+        .map(|_| rng.gen_range(features as u64) as i32)
+        .collect();
+    let thresh: Vec<i32> = (0..nodes).map(|_| rng.gen_range(1000) as i32).collect();
+    let xb = a.data.alloc_i32("x", &x);
+    let fb = a.data.alloc_i32("feat", &feat_idx);
+    let tb = a.data.alloc_i32("thresh", &thresh);
+    let out = a.data.alloc_i32("leaf", &vec![0i32; samples]);
+
+    let (ri, rx, rn, rl, rf, rt, rv, rtmp) = (3, 4, 5, 6, 7, 8, 9, 10);
+    a.li(ri, 0);
+    let sample = a.label("sample");
+    a.bind(sample);
+    a.li(rtmp, features as i32 * 4);
+    a.mul(rx, ri, rtmp);
+    a.addi(rx, rx, xb as i32);
+    a.li(rn, 0); // node index
+    a.li(rl, 0); // level
+    let walk = a.label("walk");
+    a.bind(walk);
+    // f = feat[n]; t = thresh[n]
+    a.slli(rtmp, rn, 2);
+    a.addi(rf, rtmp, fb as i32);
+    a.lw(rf, rf, 0);
+    a.addi(rt, rtmp, tb as i32);
+    a.lw(rt, rt, 0);
+    // v = x[i][f]
+    a.slli(rv, rf, 2);
+    a.add(rv, rv, rx);
+    a.lw(rv, rv, 0);
+    // n = 2n + 1 + (v > t)
+    a.slt(rtmp, rt, rv);
+    a.slli(rn, rn, 1);
+    a.addi(rn, rn, 1);
+    a.add(rn, rn, rtmp);
+    a.addi(rl, rl, 1);
+    a.li(rtmp, depth as i32 - 1);
+    a.blt(rl, rtmp, walk);
+    // store the reached pseudo-leaf id
+    a.slli(rtmp, ri, 2);
+    a.addi(rtmp, rtmp, out as i32);
+    a.sw(rn, rtmp, 0);
+    a.addi(ri, ri, 1);
+    a.li(rtmp, samples as i32);
+    a.blt(ri, rtmp, sample);
+    a.halt();
+    a.assemble()
+}
+
+/// Linear SVM inference over *binary* features (bag-of-words style, the
+/// text-processing setting of [20]): the dot product degenerates to a
+/// masked sum `acc += w[j] & m` with `m = -x[j]` — and/add chains over
+/// loaded values, i.e. CiM-AND + CiM-ADD patterns.
+pub fn svm(scale: usize, seed: u64) -> Program {
+    let samples = if scale == 0 { 300 } else { scale.max(2) * 30 };
+    let features = 32usize;
+    let mut rng = Rng::new(seed ^ 0x73766d);
+    let mut a = Asm::new("svm");
+
+    // store features pre-expanded as 0 / -1 masks (what a vectorizing
+    // compiler materializes for branch-free masked sums)
+    let x: Vec<i32> = (0..samples * features)
+        .map(|_| -(rng.gen_range(2) as i32))
+        .collect();
+    let w: Vec<i32> = (0..features)
+        .map(|_| rng.gen_range(256) as i32 - 128)
+        .collect();
+    let xb = a.data.alloc_i32("x", &x);
+    let wb = a.data.alloc_i32("w", &w);
+    let out = a.data.alloc_i32("pred", &vec![0i32; samples]);
+
+    let (ri, rx, racc, rxv, rwv, rtmp) = (3, 4, 6, 7, 8, 9);
+    a.li(ri, 0);
+    a.li(rx, xb as i32);
+    let sample = a.label("sample");
+    a.bind(sample);
+    a.li(racc, 0);
+    // fully unrolled masked sum: acc += w[j] & mask[j]
+    for j in 0..features {
+        a.lw(rxv, rx, (j * 4) as i32);
+        a.lw(rwv, 0, wb as i32 + (j * 4) as i32);
+        a.and(rwv, rwv, rxv);
+        a.add(racc, racc, rwv);
+    }
+    // pred = acc > 0
+    a.slt(rtmp, 0, racc);
+    a.slli(rxv, ri, 2);
+    a.addi(rxv, rxv, out as i32);
+    a.sw(rtmp, rxv, 0);
+    a.addi(rx, rx, features as i32 * 4);
+    a.addi(ri, ri, 1);
+    a.li(rtmp, samples as i32);
+    a.blt(ri, rtmp, sample);
+    a.halt();
+    a.assemble()
+}
+
+/// Linear regression, one SGD epoch (f32): w ← w + lr·(y − w·x)·x.
+pub fn linear_regression(scale: usize, seed: u64) -> Program {
+    let samples = if scale == 0 { 250 } else { scale.max(2) * 25 };
+    let features = 16usize;
+    let mut rng = Rng::new(seed ^ 0x6c6972);
+    let mut a = Asm::new("lir");
+
+    let x: Vec<f32> = (0..samples * features)
+        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+        .collect();
+    let y: Vec<f32> = (0..samples).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+    let w: Vec<f32> = vec![0.0; features];
+    let lr: Vec<f32> = vec![0.01];
+    let xb = a.data.alloc_f32("x", &x);
+    let yb = a.data.alloc_f32("y", &y);
+    let wb = a.data.alloc_f32("w", &w);
+    let lrb = a.data.alloc_f32("lr", &lr);
+
+    // int regs: r3=i, r4=&x[i], r5=j, r6=tmp/addr
+    // fp: f0=acc/pred, f1=xv, f2=wv, f3=err, f4=lr, f5=y
+    let (ri, rx, rj, rtmp) = (3, 4, 5, 6);
+    a.li(rtmp, lrb as i32);
+    a.flw(4, rtmp, 0);
+    a.li(ri, 0);
+    let sample = a.label("sample");
+    a.bind(sample);
+    a.li(rtmp, features as i32 * 4);
+    a.mul(rx, ri, rtmp);
+    a.addi(rx, rx, xb as i32);
+    // pred = w·x
+    a.fcvt_s_w(0, 0); // f0 = 0.0
+    a.li(rj, 0);
+    let dot = a.label("dot");
+    a.bind(dot);
+    a.slli(rtmp, rj, 2);
+    a.add(rtmp, rtmp, rx);
+    a.flw(1, rtmp, 0);
+    a.slli(rtmp, rj, 2);
+    a.addi(rtmp, rtmp, wb as i32);
+    a.flw(2, rtmp, 0);
+    a.fmul(1, 1, 2);
+    a.fadd(0, 0, 1);
+    a.addi(rj, rj, 1);
+    a.li(rtmp, features as i32);
+    a.blt(rj, rtmp, dot);
+    // err = lr * (y[i] - pred)
+    a.slli(rtmp, ri, 2);
+    a.addi(rtmp, rtmp, yb as i32);
+    a.flw(5, rtmp, 0);
+    a.fsub(3, 5, 0);
+    a.fmul(3, 3, 4);
+    // w[j] += err * x[i][j]
+    a.li(rj, 0);
+    let upd = a.label("upd");
+    a.bind(upd);
+    a.slli(rtmp, rj, 2);
+    a.add(rtmp, rtmp, rx);
+    a.flw(1, rtmp, 0);
+    a.fmul(1, 1, 3);
+    a.slli(rtmp, rj, 2);
+    a.addi(rtmp, rtmp, wb as i32);
+    a.flw(2, rtmp, 0);
+    a.fadd(2, 2, 1);
+    a.fsw(2, rtmp, 0);
+    a.addi(rj, rj, 1);
+    a.li(rtmp, features as i32);
+    a.blt(rj, rtmp, upd);
+    a.addi(ri, ri, 1);
+    a.li(rtmp, samples as i32);
+    a.blt(ri, rtmp, sample);
+    a.halt();
+    a.assemble()
+}
+
+/// K-means assignment + accumulation step (integer L2 distances).
+pub fn kmeans(scale: usize, seed: u64) -> Program {
+    let points = if scale == 0 { 300 } else { scale.max(2) * 30 };
+    let k = 4usize;
+    let dims = 8usize;
+    let mut rng = Rng::new(seed ^ 0x6b6d);
+    let mut a = Asm::new("km");
+
+    let x: Vec<i32> = (0..points * dims)
+        .map(|_| rng.gen_range(256) as i32)
+        .collect();
+    let c: Vec<i32> = (0..k * dims).map(|_| rng.gen_range(256) as i32).collect();
+    let xb = a.data.alloc_i32("x", &x);
+    let cb = a.data.alloc_i32("c", &c);
+    let assign = a.data.alloc_i32("assign", &vec![0i32; points]);
+    let sums = a.data.alloc_i32("sums", &vec![0i32; k * dims]);
+    let counts = a.data.alloc_i32("counts", &vec![0i32; k]);
+
+    let (ri, rx, rk, rd, rbest, rbdist, rdist, rdiff, rtmp, rc) =
+        (3, 4, 5, 6, 7, 8, 9, 10, 11, 12);
+    a.li(ri, 0);
+    let point = a.label("point");
+    a.bind(point);
+    a.li(rtmp, dims as i32 * 4);
+    a.mul(rx, ri, rtmp);
+    a.addi(rx, rx, xb as i32);
+    a.li(rbest, 0);
+    a.li(rbdist, 0x7fffffff);
+    a.li(rk, 0);
+    let cent = a.label("cent");
+    a.bind(cent);
+    a.li(rtmp, dims as i32 * 4);
+    a.mul(rc, rk, rtmp);
+    a.addi(rc, rc, cb as i32);
+    a.li(rdist, 0);
+    a.li(rd, 0);
+    let dim = a.label("dim");
+    a.bind(dim);
+    a.slli(rtmp, rd, 2);
+    a.add(rdiff, rtmp, rx);
+    a.lw(rdiff, rdiff, 0);
+    a.add(rtmp, rtmp, rc);
+    a.lw(rtmp, rtmp, 0);
+    a.sub(rdiff, rdiff, rtmp);
+    a.mul(rdiff, rdiff, rdiff);
+    a.add(rdist, rdist, rdiff);
+    a.addi(rd, rd, 1);
+    a.li(rtmp, dims as i32);
+    a.blt(rd, rtmp, dim);
+    // keep min
+    let skip = a.label("skip");
+    a.bge(rdist, rbdist, skip);
+    a.mv(rbdist, rdist);
+    a.mv(rbest, rk);
+    a.bind(skip);
+    a.addi(rk, rk, 1);
+    a.li(rtmp, k as i32);
+    a.blt(rk, rtmp, cent);
+    // assign[i] = best; counts[best]++; sums[best] += x[i]
+    a.slli(rtmp, ri, 2);
+    a.addi(rtmp, rtmp, assign as i32);
+    a.sw(rbest, rtmp, 0);
+    a.slli(rtmp, rbest, 2);
+    a.addi(rtmp, rtmp, counts as i32);
+    a.lw(rdist, rtmp, 0);
+    a.addi(rdist, rdist, 1);
+    a.sw(rdist, rtmp, 0);
+    a.li(rtmp, dims as i32 * 4);
+    a.mul(rc, rbest, rtmp);
+    a.addi(rc, rc, sums as i32);
+    a.li(rd, 0);
+    let acc = a.label("acc");
+    a.bind(acc);
+    a.slli(rtmp, rd, 2);
+    a.add(rdiff, rtmp, rx);
+    a.lw(rdiff, rdiff, 0);
+    a.add(rtmp, rtmp, rc);
+    a.lw(rdist, rtmp, 0);
+    a.add(rdist, rdist, rdiff);
+    a.sw(rdist, rtmp, 0);
+    a.addi(rd, rd, 1);
+    a.li(rtmp, dims as i32);
+    a.blt(rd, rtmp, acc);
+    a.addi(ri, ri, 1);
+    a.li(rtmp, points as i32);
+    a.blt(ri, rtmp, point);
+    a.halt();
+    a.assemble()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::sim::{simulate, Limits};
+
+    fn runs(p: Program) -> crate::probes::Trace {
+        simulate(&p, &SystemConfig::default(), Limits::default()).unwrap()
+    }
+
+    #[test]
+    fn all_ml_benchmarks_halt() {
+        for f in [naive_bayes, decision_tree, svm, linear_regression, kmeans] {
+            let t = runs(f(2, 7));
+            assert_eq!(t.stop, crate::probes::StopReason::Halt, "{}", t.program);
+            assert!(t.committed > 1000, "{}: {}", t.program, t.committed);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = runs(naive_bayes(2, 9));
+        let b = runs(naive_bayes(2, 9));
+        assert_eq!(a.committed, b.committed);
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn seed_changes_trace() {
+        let a = runs(decision_tree(2, 1));
+        let b = runs(decision_tree(2, 2));
+        // different thresholds -> different walk paths -> different counts
+        assert_ne!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn lir_uses_fpu() {
+        let t = runs(linear_regression(2, 3));
+        assert!(t.pipe.fp_rf_writes > 0);
+        assert!(t.pipe.fu_counts[crate::isa::FuncUnit::FpMul.index()] > 0);
+    }
+}

@@ -1,0 +1,363 @@
+//! SPEC 2006 kernel extracts (Table IV): astar, h264ref, hmmer, mcf.
+//!
+//! Full SPEC binaries are neither available nor runnable on EVA32; following
+//! the substitution rule (DESIGN.md §2) each benchmark is represented by its
+//! documented hot kernel with synthetic inputs:
+//! * astar   — grid path search: open-set scan + neighbor relaxation
+//! * h264ref — SAD motion estimation over candidate offsets
+//! * hmmer   — Viterbi profile-HMM dynamic program
+//! * mcf     — reduced-cost arc sweep of network simplex pricing
+
+use crate::asm::{Asm, Program};
+use crate::util::Rng;
+
+/// astar: repeated open-set minimum scan + neighbor relaxation on a grid.
+pub fn astar(scale: usize, seed: u64) -> Program {
+    let w = if scale == 0 { 24 } else { (scale * 6).max(8) };
+    let n = w * w;
+    let mut rng = Rng::new(seed ^ 0x617374);
+    let mut a = Asm::new("astar");
+
+    let cost: Vec<i32> = (0..n).map(|_| 1 + rng.gen_range(9) as i32).collect();
+    let cb = a.data.alloc_i32("cost", &cost);
+    let inf = 0x0fff_ffff;
+    let mut g0 = vec![inf; n];
+    g0[0] = 0;
+    let gsc = a.data.alloc_i32("g", &g0);
+    let mut open0 = vec![0i32; n];
+    open0[0] = 1;
+    let open = a.data.alloc_i32("open", &open0);
+    let hcost: Vec<i32> = (0..n)
+        .map(|i| {
+            let (x, y) = (i % w, i / w);
+            ((w - 1 - x) + (w - 1 - y)) as i32
+        })
+        .collect();
+    let hb = a.data.alloc_i32("h", &hcost);
+
+    // r3=iter, r4=i, r5=best, r6=bestf, r7..r13 scratch
+    let (rit, ri, rbest, rbf, rv, rtmp, rt2, rg, rnb) = (3, 4, 5, 6, 7, 9, 10, 11, 12);
+    let iters = (n / 2).max(8) as i32;
+    a.li(rit, 0);
+    let iter = a.label("iter");
+    let done = a.label("done");
+    a.bind(iter);
+    a.li(rtmp, iters);
+    a.bge(rit, rtmp, done);
+    // scan open set for min f = g + h
+    a.li(rbest, -1);
+    a.li(rbf, inf);
+    a.li(ri, 0);
+    let scan = a.label("scan");
+    let scan_next = a.label("scan_next");
+    a.bind(scan);
+    a.slli(rtmp, ri, 2);
+    a.addi(rt2, rtmp, open as i32);
+    a.lw(rt2, rt2, 0);
+    a.beq(rt2, 0, scan_next);
+    a.slli(rtmp, ri, 2);
+    a.addi(rt2, rtmp, gsc as i32);
+    a.lw(rg, rt2, 0);
+    a.addi(rt2, rtmp, hb as i32);
+    a.lw(rt2, rt2, 0);
+    a.add(rg, rg, rt2); // f = g + h
+    a.bge(rg, rbf, scan_next);
+    a.mv(rbf, rg);
+    a.mv(rbest, ri);
+    a.bind(scan_next);
+    a.addi(ri, ri, 1);
+    a.li(rtmp, n as i32);
+    a.blt(ri, rtmp, scan);
+    // nothing open -> done
+    a.blt(rbest, 0, done);
+    // close best
+    a.slli(rtmp, rbest, 2);
+    a.addi(rtmp, rtmp, open as i32);
+    a.sw(0, rtmp, 0);
+    // relax the 2 forward neighbors (x+1, y+1)
+    a.slli(rtmp, rbest, 2);
+    a.addi(rtmp, rtmp, gsc as i32);
+    a.lw(rg, rtmp, 0);
+    for (delta, guard) in [(1i32, true), (w as i32, false)] {
+        let skip = a.label(if guard { "skip_r" } else { "skip_d" });
+        a.addi(rnb, rbest, delta);
+        a.li(rtmp, n as i32);
+        a.bge(rnb, rtmp, skip);
+        // ng = g[best] + cost[nb]
+        a.slli(rtmp, rnb, 2);
+        a.addi(rt2, rtmp, cb as i32);
+        a.lw(rt2, rt2, 0);
+        a.add(rv, rg, rt2);
+        a.slli(rtmp, rnb, 2);
+        a.addi(rt2, rtmp, gsc as i32);
+        a.lw(rtmp, rt2, 0);
+        a.bge(rv, rtmp, skip);
+        a.sw(rv, rt2, 0);
+        a.slli(rtmp, rnb, 2);
+        a.addi(rtmp, rtmp, open as i32);
+        a.li(rt2, 1);
+        a.sw(rt2, rtmp, 0);
+        a.bind(skip);
+    }
+    a.addi(rit, rit, 1);
+    a.jump(iter);
+    a.bind(done);
+    a.halt();
+    a.assemble()
+}
+
+/// h264ref: SAD-based motion estimation — for each candidate offset, sum
+/// |cur[i] − ref[i+off]| over a 16×16 block; keep the argmin.
+pub fn h264ref(scale: usize, seed: u64) -> Program {
+    let blocks = if scale == 0 { 24 } else { (scale * 6).max(2) };
+    let bsz = 256usize; // 16x16
+    let noff = 9usize;
+    let mut rng = Rng::new(seed ^ 0x683264);
+    let mut a = Asm::new("h264ref");
+
+    let cur: Vec<i32> = (0..blocks * bsz).map(|_| rng.gen_range(256) as i32).collect();
+    let refs: Vec<i32> = (0..blocks * bsz + 64)
+        .map(|_| rng.gen_range(256) as i32)
+        .collect();
+    let offsets: Vec<i32> = (0..noff).map(|i| i as i32 * 4).collect();
+    let cb = a.data.alloc_i32("cur", &cur);
+    let rb = a.data.alloc_i32("ref", &refs);
+    let ob = a.data.alloc_i32("offs", &offsets);
+    let best = a.data.alloc_i32("best", &vec![0i32; blocks]);
+
+    let (rblk, rcb, roff, ri, rsad, ra0, ra1, rtmp, rt2, rbsad, rboff) =
+        (3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13);
+    a.li(rblk, 0);
+    let block = a.label("block");
+    a.bind(block);
+    a.li(rtmp, bsz as i32 * 4);
+    a.mul(rcb, rblk, rtmp);
+    a.addi(rcb, rcb, cb as i32);
+    a.li(rbsad, 0x0fffffff);
+    a.li(rboff, 0);
+    a.li(roff, 0);
+    let cand = a.label("cand");
+    a.bind(cand);
+    // off = offs[roff]; refbase = rb + blk*bsz*4 + off
+    a.slli(rtmp, roff, 2);
+    a.addi(rtmp, rtmp, ob as i32);
+    a.lw(rt2, rtmp, 0);
+    a.li(rtmp, bsz as i32 * 4);
+    a.mul(ra0, rblk, rtmp);
+    a.add(ra0, ra0, rt2);
+    a.addi(ra0, ra0, rb as i32); // ra0 = ref base
+    a.li(rsad, 0);
+    a.li(ri, 0);
+    let pix = a.label("pix");
+    a.bind(pix);
+    a.slli(rtmp, ri, 2);
+    a.add(rt2, rtmp, rcb);
+    a.lw(ra1, rt2, 0); // cur
+    a.add(rt2, rtmp, ra0);
+    a.lw(rt2, rt2, 0); // ref
+    a.sub(ra1, ra1, rt2);
+    // |d| = (d ^ (d >> 31)) - (d >> 31)
+    a.srai(rt2, ra1, 31);
+    a.xor(ra1, ra1, rt2);
+    a.sub(ra1, ra1, rt2);
+    a.add(rsad, rsad, ra1);
+    a.addi(ri, ri, 1);
+    a.li(rtmp, bsz as i32);
+    a.blt(ri, rtmp, pix);
+    // keep min
+    let keep = a.label("keep");
+    a.bge(rsad, rbsad, keep);
+    a.mv(rbsad, rsad);
+    a.mv(rboff, roff);
+    a.bind(keep);
+    a.addi(roff, roff, 1);
+    a.li(rtmp, noff as i32);
+    a.blt(roff, rtmp, cand);
+    a.slli(rtmp, rblk, 2);
+    a.addi(rtmp, rtmp, best as i32);
+    a.sw(rboff, rtmp, 0);
+    a.addi(rblk, rblk, 1);
+    a.li(rtmp, blocks as i32);
+    a.blt(rblk, rtmp, block);
+    a.halt();
+    a.assemble()
+}
+
+/// hmmer: Viterbi DP over a profile HMM (integer log-space scores):
+/// `V[t][j] = emit[j][obs[t]] + max(V[t-1][j] + stay, V[t-1][j-1] + move)`.
+pub fn hmmer(scale: usize, seed: u64) -> Program {
+    let states = 32usize;
+    let steps = if scale == 0 { 96 } else { (scale * 24).max(8) };
+    let alphabet = 4usize;
+    let mut rng = Rng::new(seed ^ 0x686d6d);
+    let mut a = Asm::new("hmmer");
+
+    let emit: Vec<i32> = (0..states * alphabet)
+        .map(|_| -(rng.gen_range(100) as i32))
+        .collect();
+    let obs: Vec<i32> = (0..steps).map(|_| rng.gen_range(alphabet as u64) as i32).collect();
+    let trans: Vec<i32> = vec![-3, -7]; // stay, move penalties
+    let eb = a.data.alloc_i32("emit", &emit);
+    let obsb = a.data.alloc_i32("obs", &obs);
+    let tb = a.data.alloc_i32("trans", &trans);
+    let v0 = a.data.alloc_i32("v0", &vec![0i32; states]);
+    let v1 = a.data.alloc_i32("v1", &vec![0i32; states]);
+
+    // r3=t, r4=j, r5=obs_t, r6=prev base, r7=cur base, r8..r13 scratch
+    let (rt_, rj, robs, rprev, rcur, rs1, rs2, rtmp, rt2, rstay, rmove) =
+        (3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13);
+    a.li(rtmp, tb as i32);
+    a.lw(rstay, rtmp, 0);
+    a.lw(rmove, rtmp, 4);
+    a.li(rprev, v0 as i32);
+    a.li(rcur, v1 as i32);
+    a.li(rt_, 0);
+    let step = a.label("step");
+    a.bind(step);
+    // obs_t
+    a.slli(rtmp, rt_, 2);
+    a.addi(rtmp, rtmp, obsb as i32);
+    a.lw(robs, rtmp, 0);
+    a.li(rj, 0);
+    let state = a.label("state");
+    a.bind(state);
+    // stay = V[t-1][j] + stay_penalty
+    a.slli(rtmp, rj, 2);
+    a.add(rt2, rtmp, rprev);
+    a.lw(rs1, rt2, 0);
+    a.add(rs1, rs1, rstay);
+    // move = V[t-1][j-1] + move_penalty (j=0: reuse stay)
+    let no_move = a.label("no_move");
+    a.beq(rj, 0, no_move);
+    a.lw(rs2, rt2, -4);
+    a.add(rs2, rs2, rmove);
+    let pick = a.label("pick");
+    a.bge(rs1, rs2, pick);
+    a.mv(rs1, rs2);
+    a.bind(pick);
+    a.bind(no_move);
+    // + emit[j][obs_t]: emit base + (j*alphabet + obs)*4
+    a.slli(rt2, rj, 2);
+    a.slli(rt2, rt2, 2); // j*16 = j*alphabet*4
+    a.slli(rtmp, robs, 2);
+    a.add(rt2, rt2, rtmp);
+    a.addi(rt2, rt2, eb as i32);
+    a.lw(rt2, rt2, 0);
+    a.add(rs1, rs1, rt2);
+    // V[t][j] = rs1
+    a.slli(rtmp, rj, 2);
+    a.add(rtmp, rtmp, rcur);
+    a.sw(rs1, rtmp, 0);
+    a.addi(rj, rj, 1);
+    a.li(rtmp, states as i32);
+    a.blt(rj, rtmp, state);
+    // swap prev/cur
+    a.mv(rt2, rprev);
+    a.mv(rprev, rcur);
+    a.mv(rcur, rt2);
+    a.addi(rt_, rt_, 1);
+    a.li(rtmp, steps as i32);
+    a.blt(rt_, rtmp, step);
+    a.halt();
+    a.assemble()
+}
+
+/// mcf: network-simplex pricing sweep — reduced cost per arc,
+/// `rc = cost[a] + pot[src[a]] − pot[dst[a]]`, flow bump on negative arcs.
+pub fn mcf(scale: usize, seed: u64) -> Program {
+    let nodes = if scale == 0 { 128 } else { (scale * 32).max(8) };
+    let arcs = nodes * 4;
+    let rounds = 4usize;
+    let mut rng = Rng::new(seed ^ 0x6d6366);
+    let mut a = Asm::new("mcf");
+
+    let src: Vec<i32> = (0..arcs).map(|_| rng.gen_range(nodes as u64) as i32).collect();
+    let dst: Vec<i32> = (0..arcs).map(|_| rng.gen_range(nodes as u64) as i32).collect();
+    let cost: Vec<i32> = (0..arcs).map(|_| rng.gen_range(40) as i32 - 20).collect();
+    let pot: Vec<i32> = (0..nodes).map(|_| rng.gen_range(30) as i32).collect();
+    let sb = a.data.alloc_i32("src", &src);
+    let db = a.data.alloc_i32("dst", &dst);
+    let cb = a.data.alloc_i32("cost", &cost);
+    let pb = a.data.alloc_i32("pot", &pot);
+    let fb = a.data.alloc_i32("flow", &vec![0i32; arcs]);
+    let cnt = a.data.alloc_i32("ncount", &[0]);
+
+    let (rr, ra_, ru, rv, rc, rtmp, rt2, rneg) = (3, 4, 5, 6, 7, 9, 10, 11);
+    a.li(rr, 0);
+    let round = a.label("round");
+    a.bind(round);
+    a.li(rneg, 0);
+    a.li(ra_, 0);
+    let arc = a.label("arc");
+    a.bind(arc);
+    a.slli(rtmp, ra_, 2);
+    a.addi(ru, rtmp, sb as i32);
+    a.lw(ru, ru, 0);
+    a.slli(rtmp, ra_, 2);
+    a.addi(rv, rtmp, db as i32);
+    a.lw(rv, rv, 0);
+    a.slli(rtmp, ra_, 2);
+    a.addi(rc, rtmp, cb as i32);
+    a.lw(rc, rc, 0);
+    // rc += pot[u]; rc -= pot[v]
+    a.slli(rtmp, ru, 2);
+    a.addi(rtmp, rtmp, pb as i32);
+    a.lw(rt2, rtmp, 0);
+    a.add(rc, rc, rt2);
+    a.slli(rtmp, rv, 2);
+    a.addi(rtmp, rtmp, pb as i32);
+    a.lw(rt2, rtmp, 0);
+    a.sub(rc, rc, rt2);
+    let skip = a.label("skip");
+    a.bge(rc, 0, skip);
+    // negative reduced cost: bump flow, count
+    a.slli(rtmp, ra_, 2);
+    a.addi(rtmp, rtmp, fb as i32);
+    a.lw(rt2, rtmp, 0);
+    a.addi(rt2, rt2, 1);
+    a.sw(rt2, rtmp, 0);
+    a.addi(rneg, rneg, 1);
+    a.bind(skip);
+    a.addi(ra_, ra_, 1);
+    a.li(rtmp, arcs as i32);
+    a.blt(ra_, rtmp, arc);
+    // store the round's negative-arc count
+    a.li(rtmp, cnt as i32);
+    a.sw(rneg, rtmp, 0);
+    a.addi(rr, rr, 1);
+    a.li(rtmp, rounds as i32);
+    a.blt(rr, rtmp, round);
+    a.halt();
+    a.assemble()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::probes::StopReason;
+    use crate::sim::{simulate, Limits};
+
+    #[test]
+    fn all_spec_kernels_halt() {
+        for (name, f) in [
+            ("astar", astar as fn(usize, u64) -> Program),
+            ("h264ref", h264ref),
+            ("hmmer", hmmer),
+            ("mcf", mcf),
+        ] {
+            let t = simulate(&f(1, 3), &SystemConfig::default(), Limits::default())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(t.stop, StopReason::Halt, "{name}");
+            assert!(t.committed > 5000, "{name}: {}", t.committed);
+        }
+    }
+
+    #[test]
+    fn h264_heavier_in_alu_than_loads() {
+        // SAD is compute-dense: ALU ops should outnumber loads
+        let t = simulate(&h264ref(1, 3), &SystemConfig::default(), Limits::default()).unwrap();
+        let alu = t.pipe.fu_counts[crate::isa::FuncUnit::IntAlu.index()];
+        assert!(alu > t.pipe.lsq_reads);
+    }
+}

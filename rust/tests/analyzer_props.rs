@@ -1,0 +1,215 @@
+//! Property-based tests over the analyzer (IDG, selection, reshaping) using
+//! randomly generated straight-line-plus-loop programs.
+
+use eva_cim::analyzer::{analyze, build_forest, LocalityRule};
+use eva_cim::asm::Asm;
+use eva_cim::config::SystemConfig;
+use eva_cim::reshape::{reshape, counters::*};
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::util::proptest::check;
+use eva_cim::util::Rng;
+
+/// Generate a random but always-terminating program mixing convertible
+/// patterns, scalar arithmetic and memory traffic.
+fn random_program(rng: &mut Rng, size: u32) -> Asm {
+    let mut a = Asm::new("prop");
+    let words = 64 + 8 * size;
+    let init: Vec<i32> = (0..words).map(|i| i as i32 * 3 + 1).collect();
+    let buf = a.data.alloc_i32("buf", &init);
+    a.li(1, buf as i32);
+    // warm a few lines so some operands live in L1
+    for k in 0..4 {
+        a.lw(9, 1, k * 64);
+    }
+    let blocks = 2 + size % 8;
+    for b in 0..blocks {
+        let off = ((b * 12) % (words - 8)) as i32 * 4;
+        match rng.gen_range(6) {
+            0 => {
+                // canonical load-load-op-store
+                a.lw(2, 1, off);
+                a.lw(3, 1, off + 4);
+                match rng.gen_range(4) {
+                    0 => a.add(4, 2, 3),
+                    1 => a.and(4, 2, 3),
+                    2 => a.or(4, 2, 3),
+                    _ => a.xor(4, 2, 3),
+                };
+                a.sw(4, 1, off + 8);
+            }
+            1 => {
+                // imm variant
+                a.lw(2, 1, off);
+                a.addi(4, 2, rng.gen_range(100) as i32);
+                a.sw(4, 1, off);
+            }
+            2 => {
+                // non-convertible mul chain
+                a.lw(2, 1, off);
+                a.mul(4, 2, 2);
+                a.sw(4, 1, off + 4);
+            }
+            3 => {
+                // chained reduction
+                a.lw(2, 1, off);
+                a.lw(3, 1, off + 4);
+                a.add(5, 2, 3);
+                a.lw(6, 1, off + 8);
+                a.add(5, 5, 6);
+                a.sw(5, 1, off + 12);
+            }
+            4 => {
+                // scalar-only block
+                a.addi(7, 7, 1);
+                a.slli(8, 7, 2);
+            }
+            _ => {
+                // store of a loaded value (copy, not convertible)
+                a.lw(2, 1, off);
+                a.sw(2, 1, off + 16);
+            }
+        }
+    }
+    a.halt();
+    a
+}
+
+fn run(rng: &mut Rng, size: u32) -> (eva_cim::probes::Trace, SystemConfig) {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let prog = random_program(rng, size).assemble();
+    let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+    (trace, cfg)
+}
+
+#[test]
+fn prop_idg_edges_point_backwards() {
+    check(
+        "idg-edges-backward",
+        60,
+        |rng, size| {
+            let (trace, _) = run(rng, size);
+            trace
+        },
+        |trace| {
+            let f = build_forest(&trace.ciq);
+            for n in &f.nodes {
+                for c in n.children {
+                    use eva_cim::analyzer::idg::Child;
+                    match c {
+                        Child::Load(s) | Child::External(s) => {
+                            if s >= n.seq {
+                                return Err(format!("edge {s} !< {}", n.seq));
+                            }
+                        }
+                        Child::Node(i) => {
+                            if f.nodes[i].seq >= n.seq {
+                                return Err("node edge forward".into());
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_macr_in_unit_interval_and_consistent() {
+    check(
+        "macr-unit-interval",
+        60,
+        |rng, size| {
+            let (trace, cfg) = run(rng, size);
+            analyze(&trace, &cfg, LocalityRule::AnyCache).macr
+        },
+        |m| {
+            if !(0.0..=1.0).contains(&m.ratio()) {
+                return Err(format!("macr {}", m.ratio()));
+            }
+            if m.convertible != m.convertible_l1 + m.convertible_other {
+                return Err("breakdown mismatch".into());
+            }
+            if m.convertible > m.total_accesses {
+                return Err("convertible > total".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_candidates_claim_disjoint_instructions() {
+    check(
+        "candidates-disjoint",
+        60,
+        |rng, size| {
+            let (trace, cfg) = run(rng, size);
+            analyze(&trace, &cfg, LocalityRule::AnyCache).selection
+        },
+        |sel| {
+            let mut seen = std::collections::HashSet::new();
+            for c in &sel.candidates {
+                for s in c
+                    .members
+                    .iter()
+                    .chain(c.loads.iter())
+                    .chain(c.absorbed_store.iter())
+                {
+                    if !seen.insert(*s) {
+                        return Err(format!("seq {s} claimed twice"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reshape_conserves_instructions_and_stays_nonnegative() {
+    check(
+        "reshape-conservation",
+        60,
+        |rng, size| {
+            let (trace, cfg) = run(rng, size);
+            let an = analyze(&trace, &cfg, LocalityRule::AnyCache);
+            let r = reshape(&trace, &an.selection, &cfg);
+            (trace.committed, r)
+        },
+        |(committed, r)| {
+            let diff = r.base[C_FETCH] - r.cim[C_FETCH] - r.removed as f64;
+            if diff.abs() > 1e-6 {
+                return Err(format!("fetch conservation off by {diff}"));
+            }
+            if r.base[C_FETCH] as u64 != *committed {
+                return Err("base fetch != committed".into());
+            }
+            for (i, v) in r.cim.0.iter().enumerate() {
+                if *v < 0.0 {
+                    return Err(format!("counter {i} negative"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_locality_rules_monotone() {
+    check(
+        "locality-monotone",
+        40,
+        |rng, size| run(rng, size),
+        |(trace, cfg)| {
+            let any = analyze(trace, cfg, LocalityRule::AnyCache).macr.convertible;
+            let lvl = analyze(trace, cfg, LocalityRule::SameLevel).macr.convertible;
+            let bank = analyze(trace, cfg, LocalityRule::SameBank).macr.convertible;
+            if lvl > any || bank > lvl {
+                return Err(format!("not monotone: {any} {lvl} {bank}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,111 @@
+//! End-to-end integration: workload → simulate → analyze → reshape →
+//! profile (native backend) for every benchmark in Table IV.
+
+use eva_cim::analyzer::{analyze, LocalityRule};
+use eva_cim::config::{CimLevels, SystemConfig, Technology};
+use eva_cim::profiler::{evaluate_native, ProfileInputs, ProfileResult};
+use eva_cim::probes::{StopReason, Trace};
+use eva_cim::reshape::reshape;
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::workloads;
+
+fn pipeline(bench: &str, cfg: &SystemConfig) -> (Trace, ProfileResult) {
+    let prog = workloads::build(bench, 2, 7).expect(bench);
+    let trace = simulate(&prog, cfg, Limits::default()).expect(bench);
+    let analysis = analyze(&trace, cfg, LocalityRule::AnyCache);
+    let reshaped = reshape(&trace, &analysis.selection, cfg);
+    let res = evaluate_native(&ProfileInputs::new(cfg, &reshaped));
+    (trace, res)
+}
+
+#[test]
+fn every_benchmark_profiles_end_to_end() {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    for bench in workloads::NAMES {
+        let (trace, res) = pipeline(bench, &cfg);
+        assert_eq!(trace.stop, StopReason::Halt, "{bench}");
+        assert!(res.total_base > 0.0, "{bench}");
+        assert!(res.total_cim > 0.0, "{bench}");
+        assert!(
+            res.improvement >= 0.99,
+            "{bench}: CiM made energy worse ({})",
+            res.improvement
+        );
+        assert!(
+            res.speedup > 0.5 && res.speedup < 3.0,
+            "{bench}: implausible speedup {}",
+            res.speedup
+        );
+        let ratios_ok = (res.ratio_proc + res.ratio_cache - 1.0).abs() < 1e-6
+            || (res.ratio_proc == 0.0 && res.ratio_cache == 0.0);
+        assert!(ratios_ok, "{bench}: ratios {} {}", res.ratio_proc, res.ratio_cache);
+    }
+}
+
+#[test]
+fn cim_none_is_identity() {
+    let cfg = SystemConfig::preset("c1").unwrap().with_cim(CimLevels::None);
+    let (_, res) = pipeline("lcs", &cfg);
+    assert!((res.improvement - 1.0).abs() < 1e-9);
+    assert!((res.speedup - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn fefet_beats_sram_on_energy_for_cim_friendly_bench() {
+    let sram = SystemConfig::preset("c1").unwrap().with_tech(Technology::Sram);
+    let fefet = SystemConfig::preset("c1").unwrap().with_tech(Technology::Fefet);
+    let (_, rs) = pipeline("m2d", &sram);
+    let (_, rf) = pipeline("m2d", &fefet);
+    // Fig 16: FeFET CiM energy normalized against the SRAM baseline
+    let fefet_norm = rs.total_base / rf.total_cim.max(1e-9);
+    assert!(
+        fefet_norm > rs.improvement,
+        "FeFET {fefet_norm} !> SRAM {}",
+        rs.improvement
+    );
+}
+
+#[test]
+fn larger_l2_raises_per_op_energy() {
+    // finding (iii): larger memories pay more per CiM operation
+    let c1 = SystemConfig::preset("c1").unwrap();
+    let c3 = SystemConfig::preset("c3").unwrap();
+    let (_, r1) = pipeline("sssp", &c1);
+    let (_, r3) = pipeline("sssp", &c3);
+    assert!(
+        r3.e_l2[eva_cim::energy::calib::OP_ADD] > r1.e_l2[eva_cim::energy::calib::OP_ADD]
+    );
+}
+
+#[test]
+fn stricter_locality_rules_select_fewer() {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let prog = workloads::build("lcs", 2, 7).unwrap();
+    let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+    let any = analyze(&trace, &cfg, LocalityRule::AnyCache);
+    let level = analyze(&trace, &cfg, LocalityRule::SameLevel);
+    let bank = analyze(&trace, &cfg, LocalityRule::SameBank);
+    assert!(level.macr.convertible <= any.macr.convertible);
+    assert!(bank.macr.convertible <= level.macr.convertible);
+}
+
+#[test]
+fn high_macr_benches_beat_low_macr_benches() {
+    // finding (ii) in reverse: CiM-favorable programs earn more energy
+    // improvement than CiM-unfavorable ones
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let (_, m2d) = pipeline("m2d", &cfg);
+    let (_, lir) = pipeline("lir", &cfg);
+    let (_, dfs) = pipeline("dfs", &cfg);
+    assert!(m2d.improvement > lir.improvement);
+    assert!(m2d.improvement > dfs.improvement);
+}
+
+#[test]
+fn deterministic_pipeline() {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let a = pipeline("nb", &cfg).1;
+    let b = pipeline("nb", &cfg).1;
+    assert_eq!(a.total_base, b.total_base);
+    assert_eq!(a.improvement, b.improvement);
+}

@@ -1,0 +1,134 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-validate against the native Rust mirror — the contract that makes
+//! the three-layer architecture trustworthy.
+//!
+//! Skipped (with a loud message) when `artifacts/` has not been built;
+//! `make artifacts && cargo test` exercises the real path.
+
+use eva_cim::analyzer::{analyze, LocalityRule};
+use eva_cim::config::{SystemConfig, Technology};
+use eva_cim::energy;
+use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
+use eva_cim::reshape::reshape;
+use eva_cim::runtime::PjrtRuntime;
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::workloads;
+
+fn runtime() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load(&PjrtRuntime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn sample_inputs() -> Vec<ProfileInputs> {
+    let mut out = Vec::new();
+    for (bench, tech) in [
+        ("lcs", Technology::Sram),
+        ("m2d", Technology::Fefet),
+        ("bfs", Technology::Sram),
+    ] {
+        let cfg = SystemConfig::preset("c1").unwrap().with_tech(tech);
+        let prog = workloads::build(bench, 2, 5).unwrap();
+        let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+        let analysis = analyze(&trace, &cfg, LocalityRule::AnyCache);
+        let reshaped = reshape(&trace, &analysis.selection, &cfg);
+        out.push(ProfileInputs::new(&cfg, &reshaped));
+    }
+    out
+}
+
+#[test]
+fn energy_model_artifact_matches_native_mirror() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rows = Vec::new();
+    for cap_kb in [16.0, 32.0, 64.0, 256.0, 2048.0] {
+        for tech in [0.0, 1.0] {
+            rows.push([cap_kb * 1024.0, 4.0, 64.0, 4.0, tech, 1.0]);
+        }
+    }
+    let (e_pjrt, l_pjrt) = rt.energy_latency(&rows).unwrap();
+    let (e_native, l_native) = energy::array::energy_latency_batch(&rows);
+    for i in 0..rows.len() {
+        for j in 0..energy::calib::NOPS {
+            let rel = |a: f64, b: f64| ((a - b) / b).abs();
+            assert!(
+                rel(e_pjrt[i][j], e_native[i][j]) < 1e-4,
+                "energy row {i} op {j}: pjrt {} native {}",
+                e_pjrt[i][j],
+                e_native[i][j]
+            );
+            assert!(rel(l_pjrt[i][j], l_native[i][j]) < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn profiler_artifact_matches_native_mirror() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = sample_inputs();
+    let pjrt = rt.evaluate_profile(&inputs).unwrap();
+    let native = evaluate_native_batch(&inputs);
+    assert_eq!(pjrt.len(), native.len());
+    for (i, (p, n)) in pjrt.iter().zip(&native).enumerate() {
+        // f32 kernel vs f64 mirror on ~1e7 pJ magnitudes: 1e-3 relative
+        let rel = |a: f64, b: f64| ((a - b) / b.abs().max(1e-9)).abs();
+        assert!(rel(p.total_base, n.total_base) < 1e-3, "{i}: total_base");
+        assert!(rel(p.total_cim, n.total_cim) < 1e-3, "{i}: total_cim");
+        assert!(rel(p.improvement, n.improvement) < 1e-3, "{i}: improvement");
+        assert!(rel(p.speedup, n.speedup) < 1e-3, "{i}: speedup");
+        for j in 0..energy::calib::NCOMP {
+            assert!(
+                rel(p.comps_base[j], n.comps_base[j]) < 2e-3
+                    || (p.comps_base[j] - n.comps_base[j]).abs() < 1.0,
+                "{i}: comp {j}: {} vs {}",
+                p.comps_base[j],
+                n.comps_base[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn batching_pads_and_preserves_order() {
+    let Some(mut rt) = runtime() else { return };
+    // more inputs than one artifact batch, none a multiple of it
+    let base = sample_inputs();
+    let mut inputs = Vec::new();
+    for i in 0..(rt.batch + 3) {
+        inputs.push(base[i % base.len()].clone());
+    }
+    let out = rt.evaluate_profile(&inputs).unwrap();
+    assert_eq!(out.len(), inputs.len());
+    // identical inputs must give identical outputs wherever they appear
+    let a = &out[0];
+    let b = &out[base.len()];
+    assert!((a.total_base - b.total_base).abs() < 1e-3);
+}
+
+#[test]
+fn sensitivity_artifact_produces_finite_capacity_gradients() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = sample_inputs();
+    let (g1, g2) = rt.sensitivity(&inputs).unwrap();
+    assert_eq!(g1.len(), inputs.len());
+    for (a, b) in g1.iter().zip(&g2) {
+        assert!(a.iter().all(|x| x.is_finite()));
+        assert!(b.iter().all(|x| x.is_finite()));
+        // bigger caches -> more energy per op (finding iii)
+        assert!(a[0] > 0.0, "L1 capacity gradient {}", a[0]);
+        assert!(b[0] > 0.0, "L2 capacity gradient {}", b[0]);
+    }
+}
+
+#[test]
+fn pjrt_execution_count_reflects_batching() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = sample_inputs();
+    let before = rt.executions;
+    rt.evaluate_profile(&inputs).unwrap();
+    assert_eq!(rt.executions, before + 1); // 3 points -> one batched call
+}

@@ -1,0 +1,182 @@
+//! Property-based tests over the simulator: functional correctness against
+//! a plain Rust interpreter-free oracle, timing sanity, cache invariants.
+
+use eva_cim::asm::Asm;
+use eva_cim::config::SystemConfig;
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::util::proptest::check;
+use eva_cim::util::Rng;
+
+/// Random arithmetic expression over loaded values; returns (program,
+/// expected final store value).  The oracle mirrors the arithmetic in Rust,
+/// and the program self-checks: three marker `nop`s execute only on a
+/// mismatch between the simulated and expected value.
+fn random_arith(rng: &mut Rng, size: u32) -> (eva_cim::asm::Program, i32) {
+    let n = 4 + (size as usize % 12);
+    let vals: Vec<i32> = (0..n).map(|_| rng.gen_range(1000) as i32 - 500).collect();
+    let mut a = Asm::new("prop-arith");
+    let buf = a.data.alloc_i32("buf", &vals);
+    let out = a.data.alloc_i32("out", &[0]);
+    a.li(1, buf as i32);
+    a.lw(2, 1, 0);
+    let mut acc = vals[0];
+    for (i, v) in vals.iter().enumerate().skip(1) {
+        a.lw(3, 1, (i * 4) as i32);
+        match rng.gen_range(5) {
+            0 => {
+                a.add(2, 2, 3);
+                acc = acc.wrapping_add(*v);
+            }
+            1 => {
+                a.sub(2, 2, 3);
+                acc = acc.wrapping_sub(*v);
+            }
+            2 => {
+                a.xor(2, 2, 3);
+                acc ^= *v;
+            }
+            3 => {
+                a.and(2, 2, 3);
+                acc &= *v;
+            }
+            _ => {
+                a.mul(2, 2, 3);
+                acc = acc.wrapping_mul(*v);
+            }
+        }
+    }
+    a.li(4, out as i32);
+    a.sw(2, 4, 0);
+    // reload and self-check: branch to a dead halt if mismatch
+    a.lw(5, 4, 0);
+    a.li(6, acc);
+    let ok = a.label("ok");
+    a.beq(5, 6, ok);
+    a.nop(); // mismatch marker: falls through to halt too, detected by test
+    a.nop();
+    a.nop();
+    a.bind(ok);
+    a.halt();
+    (a.assemble(), acc)
+}
+
+#[test]
+fn prop_functional_arithmetic_matches_oracle() {
+    check(
+        "functional-arith",
+        80,
+        |rng, size| random_arith(rng, size),
+        |(prog, _acc)| {
+            let cfg = SystemConfig::preset("c1").unwrap();
+            let t = simulate(prog, &cfg, Limits::default()).unwrap();
+            // the self-check branch skips the 3 nops iff the value matched
+            let nops = t
+                .ciq
+                .iter()
+                .filter(|i| i.instr.op == eva_cim::isa::Opcode::Nop)
+                .count();
+            if nops != 0 {
+                return Err("self-check nops executed: wrong arithmetic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_timing_monotone_and_cpi_bounded() {
+    check(
+        "timing-sane",
+        60,
+        |rng, size| {
+            let n = 8 + (size as usize % 40);
+            let vals: Vec<i32> = (0..n).map(|_| rng.gen_range(100) as i32).collect();
+            let mut a = Asm::new("t");
+            let buf = a.data.alloc_i32("buf", &vals);
+            a.li(1, buf as i32);
+            for i in 0..n {
+                a.lw(2, 1, ((i % n) * 4) as i32);
+                a.add(3, 3, 2);
+            }
+            a.halt();
+            let cfg = SystemConfig::preset("c1").unwrap();
+            simulate(&a.assemble(), &cfg, Limits::default()).unwrap()
+        },
+        |t| {
+            if t.cycles == 0 {
+                return Err("zero cycles".into());
+            }
+            let cpi = t.cpi();
+            if !(0.3..=80.0).contains(&cpi) {
+                return Err(format!("implausible CPI {cpi}"));
+            }
+            // commit ticks monotone
+            for w in t.ciq.windows(2) {
+                if w[0].tick_commit > w[1].tick_commit {
+                    return Err("commit order violated".into());
+                }
+            }
+            // stage ordering per instruction
+            for i in &t.ciq {
+                if !(i.tick_fetch <= i.tick_decode
+                    && i.tick_decode <= i.tick_rename
+                    && i.tick_rename <= i.tick_dispatch
+                    && i.tick_dispatch <= i.tick_issue
+                    && i.tick_issue <= i.tick_complete
+                    && i.tick_complete < i.tick_commit)
+                {
+                    return Err(format!("stage order broken at seq {}", i.seq));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_stats_consistent_with_accesses() {
+    check(
+        "cache-stats-consistent",
+        60,
+        |rng, size| {
+            let n = 16 + (size as usize % 64);
+            let mut a = Asm::new("t");
+            let buf = a.data.alloc_i32("buf", &vec![7i32; n.max(16)]);
+            a.li(1, buf as i32);
+            for _ in 0..n {
+                let off = (rng.gen_range(n as u64) as i32) * 4;
+                if rng.gen_bool(0.3) {
+                    a.sw(2, 1, off % 256);
+                } else {
+                    a.lw(2, 1, off % 256);
+                }
+            }
+            a.halt();
+            let cfg = SystemConfig::preset("c1").unwrap();
+            simulate(&a.assemble(), &cfg, Limits::default()).unwrap()
+        },
+        |t| {
+            let m = &t.mem;
+            let data_reads = m.l1d_read_hits + m.l1d_read_misses;
+            let data_writes = m.l1d_write_hits + m.l1d_write_misses;
+            if data_reads != t.pipe.lsq_reads {
+                return Err(format!(
+                    "reads {} != lsq {}",
+                    data_reads, t.pipe.lsq_reads
+                ));
+            }
+            if data_writes != t.pipe.lsq_writes {
+                return Err("writes != lsq writes".into());
+            }
+            // every CIQ mem record must agree with hit flags
+            for i in &t.ciq {
+                if let Some(mem) = i.mem {
+                    if mem.l1_hit && mem.level != eva_cim::probes::MemLevel::L1 {
+                        return Err("l1_hit but level != L1".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

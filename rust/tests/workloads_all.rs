@@ -1,0 +1,105 @@
+//! Every Table IV workload: terminates, is deterministic, scales with the
+//! `scale` knob, and produces analyzable traces on every preset config.
+
+use eva_cim::analyzer::{analyze, LocalityRule};
+use eva_cim::config::SystemConfig;
+use eva_cim::probes::StopReason;
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::workloads;
+
+#[test]
+fn all_workloads_halt_on_all_presets() {
+    for preset in ["c1", "c2", "c3"] {
+        let cfg = SystemConfig::preset(preset).unwrap();
+        for bench in workloads::NAMES {
+            let prog = workloads::build(bench, 1, 11).expect(bench);
+            let t = simulate(&prog, &cfg, Limits::default())
+                .unwrap_or_else(|e| panic!("{bench}@{preset}: {e}"));
+            assert_eq!(t.stop, StopReason::Halt, "{bench}@{preset}");
+            assert!(t.committed > 1000, "{bench}@{preset}: {}", t.committed);
+        }
+    }
+}
+
+#[test]
+fn scale_increases_work() {
+    for bench in ["lcs", "bfs", "nb", "mcf"] {
+        let small = simulate(
+            &workloads::build(bench, 1, 3).unwrap(),
+            &SystemConfig::default(),
+            Limits::default(),
+        )
+        .unwrap();
+        let big = simulate(
+            &workloads::build(bench, 8, 3).unwrap(),
+            &SystemConfig::default(),
+            Limits::default(),
+        )
+        .unwrap();
+        assert!(
+            big.committed > small.committed * 2,
+            "{bench}: {} !> 2x {}",
+            big.committed,
+            small.committed
+        );
+    }
+}
+
+#[test]
+fn workloads_are_deterministic() {
+    for bench in workloads::NAMES {
+        let cfg = SystemConfig::default();
+        let a = simulate(
+            &workloads::build(bench, 1, 17).unwrap(),
+            &cfg,
+            Limits::default(),
+        )
+        .unwrap();
+        let b = simulate(
+            &workloads::build(bench, 1, 17).unwrap(),
+            &cfg,
+            Limits::default(),
+        )
+        .unwrap();
+        assert_eq!(a.committed, b.committed, "{bench}");
+        assert_eq!(a.cycles, b.cycles, "{bench}");
+        assert_eq!(a.mem.l1d_read_hits, b.mem.l1d_read_hits, "{bench}");
+    }
+}
+
+#[test]
+fn macr_spans_a_wide_range_across_workloads() {
+    // finding (ii): data-intensive does not imply CiM-convertible — the
+    // suite must contain both CiM-favorable and CiM-unfavorable programs
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let mut ratios = Vec::new();
+    for bench in workloads::NAMES {
+        let prog = workloads::build(bench, 1, 7).unwrap();
+        let t = simulate(&prog, &cfg, Limits::default()).unwrap();
+        let an = analyze(&t, &cfg, LocalityRule::AnyCache);
+        ratios.push((bench, an.macr.ratio()));
+    }
+    let hi = ratios.iter().filter(|(_, r)| *r > 0.5).count();
+    let lo = ratios.iter().filter(|(_, r)| *r < 0.2).count();
+    assert!(hi >= 3, "need ≥3 CiM-favorable workloads: {ratios:?}");
+    assert!(lo >= 2, "need ≥2 CiM-unfavorable workloads: {ratios:?}");
+}
+
+#[test]
+fn spec_kernels_have_distinct_profiles() {
+    // sanity: the four SPEC kernels should not be near-identical traces
+    let cfg = SystemConfig::default();
+    let mut cpis = Vec::new();
+    for bench in ["astar", "h264ref", "hmmer", "mcf"] {
+        let t = simulate(
+            &workloads::build(bench, 1, 5).unwrap(),
+            &cfg,
+            Limits::default(),
+        )
+        .unwrap();
+        cpis.push(t.cpi());
+    }
+    let min = cpis.iter().cloned().fold(f64::MAX, f64::min);
+    let max = cpis.iter().cloned().fold(0.0, f64::max);
+    assert!(max / min > 1.05, "CPIs suspiciously uniform: {cpis:?}");
+}
