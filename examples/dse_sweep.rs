@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
     for preset in ["c1", "c3"] {
         for tech in Technology::all() {
             for cim in [CimLevels::L1Only, CimLevels::Both] {
-                let mut c = SystemConfig::preset(preset).unwrap()
+                let mut c = SystemConfig::preset(preset)
+                    .unwrap()
                     .with_tech(tech)
                     .with_cim(cim);
                 c.name = format!("{preset}-{}-{}", tech.name(), cim.name());

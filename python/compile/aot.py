@@ -27,12 +27,21 @@ from .kernels.cim_energy import energy_latency
 
 
 def to_hlo_text(lowered) -> str:
-    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    The text must be printed with ``print_large_constants``: the default
+    printer elides big literals as ``...``, which the HLO text parser then
+    reads back as *zeros* — the ``sensitivity`` (jax.grad) artifact carries
+    one such constant and silently produced all-zero gradients before this
+    was forced on (caught by test_aot.py::test_roundtrip_numerics).
+    """
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True
     )
-    return comp.as_hlo_text()
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    return comp.as_hlo_module().to_string(opts)
 
 
 def _spec(*shape):

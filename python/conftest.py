@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make the ``compile`` package and the ``tests``
+namespace importable when pytest is invoked from the repository root
+(``python -m pytest python/tests``) or from ``python/`` itself."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -40,8 +40,26 @@ def _example_args(name):
     return ins
 
 
+def _compile_hlo_text(backend, text):
+    """Compile parsed HLO text on `backend`, across jaxlib API versions.
+
+    Newer jaxlibs expose ``mlir.hlo_to_stablehlo`` + ``compile_and_load``;
+    older ones (e.g. 0.4.x) go HloModuleProto → XlaComputation → MLIR →
+    ``compile`` — which is also exactly the Rust runtime's path
+    (``XlaComputation::from_proto`` + ``client.compile``).
+    """
+    module = xc._xla.hlo_module_from_text(text)
+    proto = module.as_serialized_hlo_module_proto()
+    if hasattr(xc._xla.mlir, "hlo_to_stablehlo"):
+        mlir = xc._xla.mlir.hlo_to_stablehlo(proto)
+        return backend.compile_and_load(mlir, backend.devices())
+    comp = xc._xla.XlaComputation(proto)
+    mlir = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    return backend.compile(mlir)
+
+
 def test_roundtrip_numerics(entry):
-    """HLO text → HloModule → stablehlo → compile → execute == jit(fn).
+    """HLO text → HloModule → compile → execute == jit(fn).
 
     Mirrors what the Rust runtime does with HloModuleProto::from_text_file:
     the text parser reassigns instruction ids, then the module compiles and
@@ -50,11 +68,8 @@ def test_roundtrip_numerics(entry):
     name, fn, specs = entry
     text = aot.to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
 
-    module = xc._xla.hlo_module_from_text(text)
-    mlir = xc._xla.mlir.hlo_to_stablehlo(
-        module.as_serialized_hlo_module_proto())
     backend = jax.devices()[0].client
-    exe = backend.compile_and_load(mlir, backend.devices())
+    exe = _compile_hlo_text(backend, text)
 
     args = _example_args(name)
     want = jax.tree_util.tree_leaves(jax.jit(fn)(*args))

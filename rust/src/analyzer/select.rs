@@ -23,6 +23,28 @@ pub enum LocalityRule {
     SameBank,
 }
 
+impl LocalityRule {
+    /// Canonical name — the single source of truth shared by the CLI
+    /// parser and the sweep-cache key (coordinator/key.rs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LocalityRule::AnyCache => "any",
+            LocalityRule::SameLevel => "level",
+            LocalityRule::SameBank => "bank",
+        }
+    }
+
+    /// Parse a canonical name or CLI alias.
+    pub fn from_name(s: &str) -> Option<LocalityRule> {
+        match s.to_ascii_lowercase().as_str() {
+            "any" | "anycache" => Some(LocalityRule::AnyCache),
+            "level" | "samelevel" => Some(LocalityRule::SameLevel),
+            "bank" | "samebank" => Some(LocalityRule::SameBank),
+            _ => None,
+        }
+    }
+}
+
 /// One offloading candidate: a connected group of CiM-suitable nodes.
 #[derive(Clone, Debug)]
 pub struct Candidate {

@@ -1,0 +1,209 @@
+//! Append-only on-disk result cache for sweep design points.
+//!
+//! Layout under the cache directory:
+//!
+//! ```text
+//! <cache-dir>/
+//!   cache-meta.json    {"schema": 1}  — version gate
+//!   results.jsonl      one design point per line:
+//!                      {"key":"<16-hex fnv1a>","row":{...canonical row...}}
+//!   traces/            spilled simulation traces (trace_store.rs)
+//! ```
+//!
+//! Appends are the only mutation, so concurrent sweeps sharing a cache
+//! directory can only ever duplicate work, never corrupt results (the
+//! loader takes the last line per key).  A truncated final line — e.g.
+//! from a killed process — is skipped with a warning rather than failing
+//! the whole sweep.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::persist;
+use super::SweepRow;
+
+const RESULTS_FILE: &str = "results.jsonl";
+const META_FILE: &str = "cache-meta.json";
+const SCHEMA: u64 = 1;
+
+/// An open result cache rooted at a directory.
+pub struct ResultCache {
+    dir: PathBuf,
+    writer: Mutex<File>,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) the cache at `dir`, verifying the schema.
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {dir:?}"))?;
+        let meta_path = dir.join(META_FILE);
+        match std::fs::read_to_string(&meta_path) {
+            Ok(text) => {
+                let meta = json::parse(&text)
+                    .map_err(|e| anyhow!("parsing {meta_path:?}: {e}"))?;
+                let schema = meta.get("schema").and_then(|v| v.as_u64());
+                if schema != Some(SCHEMA) {
+                    bail!(
+                        "cache {dir:?} has schema {schema:?}, this build expects \
+                         {SCHEMA}; delete the directory to rebuild it"
+                    );
+                }
+            }
+            Err(_) => {
+                let meta = Json::obj(vec![("schema", SCHEMA.into())]).dump();
+                std::fs::write(&meta_path, meta)
+                    .with_context(|| format!("writing {meta_path:?}"))?;
+            }
+        }
+        let writer = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(RESULTS_FILE))
+            .with_context(|| format!("opening {RESULTS_FILE} in {dir:?}"))?;
+        Ok(Self { dir: dir.to_path_buf(), writer: Mutex::new(writer) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Read every cached row (last write per key wins). Malformed lines are
+    /// counted and skipped — an interrupted append must not poison resumes.
+    pub fn load(&self) -> Result<HashMap<String, SweepRow>> {
+        let path = self.dir.join(RESULTS_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => return Ok(HashMap::new()),
+        };
+        let mut rows = HashMap::new();
+        let mut skipped = 0usize;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_line(line) {
+                Ok((key, row)) => {
+                    rows.insert(key, row);
+                }
+                Err(_) => skipped += 1,
+            }
+        }
+        if skipped > 0 {
+            eprintln!(
+                "warning: skipped {skipped} malformed line(s) in {path:?} \
+                 (interrupted append?)"
+            );
+        }
+        Ok(rows)
+    }
+
+    /// Append one computed row. Flushed immediately so a crash loses at
+    /// most the in-flight line.
+    pub fn append(&self, key: &str, row: &SweepRow) -> Result<()> {
+        let line = Json::obj(vec![
+            ("key", key.into()),
+            ("row", persist::row_to_json(row)),
+        ])
+        .dump();
+        let mut f = self.writer.lock().unwrap();
+        writeln!(f, "{line}").context("appending to result cache")?;
+        f.flush().context("flushing result cache")?;
+        Ok(())
+    }
+}
+
+fn parse_line(line: &str) -> Result<(String, SweepRow), String> {
+    let v = json::parse(line)?;
+    let key = v
+        .req("key")?
+        .as_str()
+        .ok_or_else(|| "key is not a string".to_string())?
+        .to_string();
+    let row = persist::row_from_json(v.req("row")?)?;
+    Ok((key, row))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::Macr;
+    use crate::config::{CimLevels, Technology};
+    use crate::profiler::ProfileResult;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("eva-cim-cache-{tag}-{}", std::process::id()))
+    }
+
+    fn row(bench: &str) -> SweepRow {
+        SweepRow {
+            bench: bench.into(),
+            config_name: "c1".into(),
+            tech: Technology::Sram,
+            cim_levels: CimLevels::Both,
+            macr: Macr {
+                total_accesses: 10,
+                convertible: 5,
+                convertible_l1: 4,
+                convertible_other: 1,
+                cim_ops: 2,
+            },
+            committed: 100,
+            cycles: 150,
+            removed: 9,
+            cim_ops: 2,
+            result: ProfileResult { total_base: 1.5, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn append_then_load_roundtrips() {
+        let dir = tmp_dir("roundtrip");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = ResultCache::open(&dir).unwrap();
+        assert!(cache.load().unwrap().is_empty());
+        cache.append("k1", &row("lcs")).unwrap();
+        cache.append("k2", &row("km")).unwrap();
+        // reopen to prove persistence across instances
+        let cache2 = ResultCache::open(&dir).unwrap();
+        let rows = cache2.load().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows["k1"].bench, "lcs");
+        assert_eq!(rows["k2"].bench, "km");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_line_is_skipped_not_fatal() {
+        let dir = tmp_dir("truncated");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = ResultCache::open(&dir).unwrap();
+        cache.append("k1", &row("lcs")).unwrap();
+        // simulate a crash mid-append
+        let path = dir.join(RESULTS_FILE);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"key\":\"k2\",\"row\":{\"bench\"");
+        std::fs::write(&path, text).unwrap();
+        let rows = cache.load().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows.contains_key("k1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn schema_mismatch_is_an_error() {
+        let dir = tmp_dir("schema");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(META_FILE), "{\"schema\": 999}").unwrap();
+        assert!(ResultCache::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

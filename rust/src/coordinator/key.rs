@@ -1,0 +1,188 @@
+//! Stable content hashing for the sweep caches.
+//!
+//! Cache keys must be identical across processes, platforms and runs, so
+//! nothing here may depend on `std::collections::HashMap`'s randomized
+//! hasher or on struct memory layout.  Instead, the identity of a design
+//! point is its *canonical JSON serialization* (object keys sorted by the
+//! underlying `BTreeMap`), hashed with FNV-1a 64.  Any change to any field
+//! of the workload identity or the [`SystemConfig`] — including cosmetic
+//! ones like the config name — therefore produces a different key and a
+//! cache miss; stale reuse is impossible by construction.
+
+use crate::config::{CacheConfig, SystemConfig};
+use crate::util::json::Json;
+
+use super::{SweepOptions, SweepPoint};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0100_0000_01b3;
+
+/// FNV-1a over a byte string — stable, dependency-free, and fast enough
+/// for the handful of hashes a sweep needs.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn cache_to_json(c: &CacheConfig) -> Json {
+    Json::obj(vec![
+        ("capacity", c.capacity.into()),
+        ("assoc", c.assoc.into()),
+        ("line", c.line.into()),
+        ("banks", c.banks.into()),
+        ("latency", c.latency.into()),
+        ("mshr_entries", c.mshr_entries.into()),
+    ])
+}
+
+/// Canonical serialization of a full [`SystemConfig`] (every field).
+pub fn config_to_json(cfg: &SystemConfig) -> Json {
+    Json::obj(vec![
+        ("name", cfg.name.as_str().into()),
+        (
+            "core",
+            Json::obj(vec![
+                ("width", cfg.core.width.into()),
+                ("rob_entries", cfg.core.rob_entries.into()),
+                ("iq_entries", cfg.core.iq_entries.into()),
+                ("lsq_entries", cfg.core.lsq_entries.into()),
+                ("mispredict_penalty", cfg.core.mispredict_penalty.into()),
+                ("int_alu_units", cfg.core.int_alu_units.into()),
+                ("int_mul_units", cfg.core.int_mul_units.into()),
+                ("fp_units", cfg.core.fp_units.into()),
+                ("mem_ports", cfg.core.mem_ports.into()),
+            ]),
+        ),
+        ("l1i", cache_to_json(&cfg.l1i)),
+        ("l1d", cache_to_json(&cfg.l1d)),
+        ("l2", cache_to_json(&cfg.l2)),
+        (
+            "dram",
+            Json::obj(vec![
+                ("size", cfg.dram.size.into()),
+                ("latency", cfg.dram.latency.into()),
+            ]),
+        ),
+        ("tech", cfg.tech.name().into()),
+        ("cim_levels", cfg.cim_levels.name().into()),
+        ("clock_ghz", cfg.clock_ghz.into()),
+    ])
+}
+
+/// Key for the design-point result cache: content hash of
+/// `(bench, scale, seed, max_instructions, SystemConfig, LocalityRule,
+/// backend)`.  The evaluating backend is part of the identity because the
+/// PJRT artifacts compute in f32 while the native mirror uses f64 — rows
+/// from one must never satisfy a resume on the other.
+pub fn point_key(p: &SweepPoint, opts: &SweepOptions, backend: &str) -> String {
+    let payload = Json::obj(vec![
+        ("bench", p.bench.as_str().into()),
+        ("scale", opts.scale.into()),
+        ("seed", opts.seed.into()),
+        ("max_instructions", opts.max_instructions.into()),
+        ("rule", p.rule.name().into()),
+        ("backend", backend.into()),
+        ("config", config_to_json(&p.config)),
+    ])
+    .dump();
+    format!("{:016x}", fnv1a(payload.as_bytes()))
+}
+
+/// Key for the trace store: only what affects *simulation* — the workload
+/// identity plus core, cache-geometry, DRAM and clock parameters.  The
+/// technology and CiM-placement columns are deliberately excluded, so one
+/// spilled trace serves every tech/placement variant of a geometry.
+pub fn trace_key(bench: &str, cfg: &SystemConfig, opts: &SweepOptions) -> String {
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.name = String::new();
+    sim_cfg.tech = crate::config::Technology::Sram;
+    sim_cfg.cim_levels = crate::config::CimLevels::Both;
+    let payload = Json::obj(vec![
+        ("bench", bench.into()),
+        ("scale", opts.scale.into()),
+        ("seed", opts.seed.into()),
+        ("max_instructions", opts.max_instructions.into()),
+        ("config", config_to_json(&sim_cfg)),
+    ])
+    .dump();
+    format!("{:016x}", fnv1a(payload.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::LocalityRule;
+    use crate::config::Technology;
+
+    fn opts() -> SweepOptions {
+        SweepOptions { scale: 4, seed: 7, ..Default::default() }
+    }
+
+    fn point(cfg: SystemConfig) -> SweepPoint {
+        SweepPoint { bench: "lcs".into(), config: cfg, rule: LocalityRule::AnyCache }
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn point_key_is_deterministic() {
+        let p = point(SystemConfig::preset("c1").unwrap());
+        assert_eq!(
+            point_key(&p, &opts(), "native"),
+            point_key(&p, &opts(), "native")
+        );
+    }
+
+    #[test]
+    fn point_key_changes_with_every_identity_field() {
+        let base = point(SystemConfig::preset("c1").unwrap());
+        let k0 = point_key(&base, &opts(), "native");
+
+        let mut p = base.clone();
+        p.bench = "km".into();
+        assert_ne!(point_key(&p, &opts(), "native"), k0);
+
+        let mut p = base.clone();
+        p.rule = LocalityRule::SameBank;
+        assert_ne!(point_key(&p, &opts(), "native"), k0);
+
+        let mut p = base.clone();
+        p.config.tech = Technology::Fefet;
+        assert_ne!(point_key(&p, &opts(), "native"), k0);
+
+        let mut p = base.clone();
+        p.config.l1d.capacity *= 2;
+        assert_ne!(point_key(&p, &opts(), "native"), k0);
+
+        let mut o = opts();
+        o.seed = 8;
+        assert_ne!(point_key(&base, &o, "native"), k0);
+
+        let mut o = opts();
+        o.scale = 5;
+        assert_ne!(point_key(&base, &o, "native"), k0);
+
+        assert_ne!(point_key(&base, &opts(), "pjrt"), k0);
+    }
+
+    #[test]
+    fn trace_key_ignores_tech_and_placement() {
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let sram = trace_key("lcs", &cfg, &opts());
+        let fefet = trace_key("lcs", &cfg.clone().with_tech(Technology::Fefet), &opts());
+        assert_eq!(sram, fefet);
+        let mut bigger = cfg.clone();
+        bigger.l1d.capacity *= 2;
+        assert_ne!(trace_key("lcs", &bigger, &opts()), sram);
+    }
+}

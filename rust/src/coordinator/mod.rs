@@ -2,15 +2,32 @@
 //!
 //! The coordinator is the leader of a worker pool: simulation + analysis +
 //! reshaping jobs (CPU-bound, trace-heavy) fan out across `std::thread`
-//! workers, traces are memoized per (benchmark, cache geometry) — the same
-//! trace serves every technology and CiM-placement variant — and the
-//! resulting design points are *batched* into PJRT executions of the AOT'd
-//! profiler graph (256 points per call, padded).
+//! workers that pull deterministic point-chunks from a shared
+//! work-stealing queue ([`shard`]), traces are memoized per (benchmark,
+//! core/cache geometry) in memory and spilled to disk ([`trace_store`]) so
+//! the same trace serves every technology and CiM-placement variant across
+//! *processes*, and completed design points are persisted to an
+//! append-only JSONL result cache ([`cache`]) keyed by a stable content
+//! hash ([`key`]) of `(bench, scale, seed, SystemConfig, LocalityRule,
+//! backend)`.
+//! A resumed sweep — or any superset of a prior sweep — recomputes only
+//! the missing points and returns rows byte-identical to a cold run
+//! ([`persist`] keeps the serialization canonical).
 //!
-//! This is the paper's tool-chain glue (Fig 1) turned into a runtime: one
-//! `sweep` call regenerates any of Figs 13–16 / Table VI.
+//! Surviving design points are *batched* into PJRT executions of the
+//! AOT'd profiler graph (256 points per call, padded).  This is the
+//! paper's tool-chain glue (Fig 1) turned into a runtime: one `sweep`
+//! call regenerates any of Figs 13–16 / Table VI.
+
+pub mod cache;
+pub mod key;
+pub mod persist;
+pub mod shard;
+pub mod trace_store;
 
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
@@ -23,6 +40,10 @@ use crate::reshape::reshape;
 use crate::runtime::Backend;
 use crate::sim::{simulate, Limits};
 use crate::workloads;
+
+use cache::ResultCache;
+use shard::ChunkQueue;
+use trace_store::TraceStore;
 
 /// One design point of a sweep.
 #[derive(Clone, Debug)]
@@ -47,14 +68,22 @@ pub struct SweepRow {
     pub result: ProfileResult,
 }
 
-/// Workload sizing knobs for a sweep.
-#[derive(Clone, Copy, Debug)]
+/// Workload sizing + execution knobs for a sweep.
+#[derive(Clone, Debug)]
 pub struct SweepOptions {
     /// problem-size hint handed to the workload generators
     pub scale: usize,
     pub seed: u64,
     pub max_instructions: u64,
     pub workers: usize,
+    /// points per work-stealing chunk (0 = auto-size from queue length)
+    pub chunk: usize,
+    /// root of the on-disk design-point + trace cache; `None` disables
+    /// persistence entirely
+    pub cache_dir: Option<PathBuf>,
+    /// serve previously cached rows instead of recomputing them (writes
+    /// happen whenever `cache_dir` is set, regardless of this flag)
+    pub resume: bool,
 }
 
 impl Default for SweepOptions {
@@ -67,35 +96,38 @@ impl Default for SweepOptions {
                 .map(|n| n.get())
                 .unwrap_or(4)
                 .min(8),
+            chunk: 0,
+            cache_dir: None,
+            resume: false,
         }
     }
 }
 
-/// Key for the trace memo: geometry fields that affect simulation.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
-struct SimKey {
-    bench: String,
-    l1i: (u32, u32, u32, u64),
-    l1d: (u32, u32, u32, u64),
-    l2: (u32, u32, u32, u64),
-    dram_latency: u64,
-    scale: usize,
-    seed: u64,
+/// What a sweep actually did — the cache-effectiveness ledger.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepStats {
+    pub points: usize,
+    /// rows served from the on-disk result cache (no staging, no profiling)
+    pub rows_from_cache: usize,
+    /// rows staged + profiled in this run
+    pub rows_computed: usize,
+    /// actual cycle-level simulator invocations
+    pub simulator_runs: u64,
+    /// traces served from the in-process memo
+    pub trace_mem_hits: u64,
+    /// traces served from the on-disk spill store
+    pub trace_disk_hits: u64,
+    /// work-stealing chunks claimed by the worker pool
+    pub chunks_claimed: u64,
 }
 
-impl SimKey {
-    fn new(bench: &str, cfg: &SystemConfig, opts: &SweepOptions) -> Self {
-        let k = |c: &crate::config::CacheConfig| (c.capacity, c.assoc, c.line, c.latency);
-        Self {
-            bench: bench.to_string(),
-            l1i: k(&cfg.l1i),
-            l1d: k(&cfg.l1d),
-            l2: k(&cfg.l2),
-            dram_latency: cfg.dram.latency,
-            scale: opts.scale,
-            seed: opts.seed,
-        }
-    }
+/// Shared atomic counters the worker pool updates while staging.
+#[derive(Default)]
+struct StageCounters {
+    simulator_runs: AtomicU64,
+    trace_mem_hits: AtomicU64,
+    trace_disk_hits: AtomicU64,
+    chunks_claimed: AtomicU64,
 }
 
 /// The sweep driver.
@@ -108,92 +140,183 @@ impl Coordinator {
         Self { opts }
     }
 
-    /// Simulate (with memoization), analyze and reshape every point, then
-    /// evaluate the whole batch through `backend`.
+    /// [`Coordinator::run_sweep_with_stats`], discarding the stats.
     pub fn run_sweep(
         &self,
         points: &[SweepPoint],
         backend: &mut dyn Backend,
     ) -> Result<Vec<SweepRow>> {
-        let opts = self.opts;
-        let memo: Mutex<HashMap<SimKey, Arc<Trace>>> = Mutex::new(HashMap::new());
-        let next: Mutex<usize> = Mutex::new(0);
-        let staged: Mutex<Vec<Option<(SweepRow, ProfileInputs)>>> =
-            Mutex::new((0..points.len()).map(|_| None).collect());
-        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        Ok(self.run_sweep_with_stats(points, backend)?.0)
+    }
 
-        std::thread::scope(|scope| {
-            for _ in 0..opts.workers.max(1) {
-                scope.spawn(|| loop {
-                    let idx = {
-                        let mut n = next.lock().unwrap();
-                        if *n >= points.len() {
-                            return;
+    /// Resolve every point — from the result cache where possible, else by
+    /// simulate → analyze → reshape → batched profiler evaluation — and
+    /// report what was reused vs recomputed.
+    pub fn run_sweep_with_stats(
+        &self,
+        points: &[SweepPoint],
+        backend: &mut dyn Backend,
+    ) -> Result<(Vec<SweepRow>, SweepStats)> {
+        let opts = &self.opts;
+        let mut stats = SweepStats { points: points.len(), ..Default::default() };
+
+        let result_cache = match &opts.cache_dir {
+            Some(dir) => Some(ResultCache::open(dir)?),
+            None => None,
+        };
+        let traces = match &opts.cache_dir {
+            Some(dir) => Some(TraceStore::open(&dir.join("traces"))?),
+            None => None,
+        };
+
+        let keys: Vec<String> = points
+            .iter()
+            .map(|p| key::point_key(p, opts, backend.name()))
+            .collect();
+        let mut slots: Vec<Option<SweepRow>> = vec![None; points.len()];
+
+        if opts.resume {
+            if let Some(c) = &result_cache {
+                let existing = c.load()?;
+                for (slot, k) in slots.iter_mut().zip(&keys) {
+                    if let Some(row) = existing.get(k) {
+                        *slot = Some(row.clone());
+                        stats.rows_from_cache += 1;
+                    }
+                }
+            }
+        }
+
+        let todo: Vec<usize> =
+            (0..points.len()).filter(|&i| slots[i].is_none()).collect();
+        stats.rows_computed = todo.len();
+        let counters = StageCounters::default();
+
+        if !todo.is_empty() {
+            let queue = ChunkQueue::new(todo.len(), opts.chunk, opts.workers);
+            let memo: Mutex<HashMap<String, Arc<Trace>>> = Mutex::new(HashMap::new());
+            let staged: Mutex<Vec<Option<(SweepRow, ProfileInputs)>>> =
+                Mutex::new((0..todo.len()).map(|_| None).collect());
+            let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+            std::thread::scope(|scope| {
+                for _ in 0..opts.workers.max(1) {
+                    scope.spawn(|| {
+                        while let Some(range) = queue.claim() {
+                            counters.chunks_claimed.fetch_add(1, Ordering::Relaxed);
+                            for ti in range {
+                                let p = &points[todo[ti]];
+                                match Self::stage_point(
+                                    p,
+                                    opts,
+                                    &memo,
+                                    traces.as_ref(),
+                                    &counters,
+                                ) {
+                                    Ok(pair) => {
+                                        staged.lock().unwrap()[ti] = Some(pair);
+                                    }
+                                    Err(e) => {
+                                        errors.lock().unwrap().push(format!(
+                                            "{}/{}: {e:#}",
+                                            p.bench, p.config.name
+                                        ));
+                                    }
+                                }
+                            }
                         }
-                        let i = *n;
-                        *n += 1;
-                        i
-                    };
-                    let p = &points[idx];
-                    match Self::stage_point(p, &opts, &memo) {
-                        Ok(pair) => {
-                            staged.lock().unwrap()[idx] = Some(pair);
-                        }
-                        Err(e) => {
-                            errors
-                                .lock()
-                                .unwrap()
-                                .push(format!("{}/{}: {e:#}", p.bench, p.config.name));
+                    });
+                }
+            });
+
+            let errors = errors.into_inner().unwrap();
+            if !errors.is_empty() {
+                return Err(anyhow!("sweep failures: {}", errors.join("; ")));
+            }
+            let staged: Vec<(SweepRow, ProfileInputs)> = staged
+                .into_inner()
+                .unwrap()
+                .into_iter()
+                .map(|o| o.expect("staged point missing"))
+                .collect();
+
+            // batched profiler evaluation (one PJRT execute per 256 points)
+            let inputs: Vec<ProfileInputs> =
+                staged.iter().map(|(_, i)| i.clone()).collect();
+            let results = backend.evaluate_batch(&inputs)?;
+            let mut append_warned = false;
+            for ((ti, (mut row, _)), res) in
+                todo.iter().copied().zip(staged).zip(results)
+            {
+                row.result = res;
+                if let Some(c) = &result_cache {
+                    // best-effort, like the trace spill: a full disk must
+                    // not throw away rows that are already computed
+                    if let Err(e) = c.append(&keys[ti], &row) {
+                        if !append_warned {
+                            eprintln!("warning: result-cache append failed: {e:#}");
+                            append_warned = true;
                         }
                     }
-                });
+                }
+                slots[ti] = Some(row);
             }
-        });
-
-        let errors = errors.into_inner().unwrap();
-        if !errors.is_empty() {
-            return Err(anyhow!("sweep failures: {}", errors.join("; ")));
         }
-        let staged: Vec<(SweepRow, ProfileInputs)> = staged
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|o| o.expect("staged point missing"))
-            .collect();
 
-        // batched profiler evaluation (one PJRT execute per 256 points)
-        let inputs: Vec<ProfileInputs> =
-            staged.iter().map(|(_, i)| i.clone()).collect();
-        let results = backend.evaluate_batch(&inputs)?;
-        Ok(staged
+        stats.simulator_runs = counters.simulator_runs.load(Ordering::Relaxed);
+        stats.trace_mem_hits = counters.trace_mem_hits.load(Ordering::Relaxed);
+        stats.trace_disk_hits = counters.trace_disk_hits.load(Ordering::Relaxed);
+        stats.chunks_claimed = counters.chunks_claimed.load(Ordering::Relaxed);
+
+        let rows = slots
             .into_iter()
-            .zip(results)
-            .map(|((mut row, _), res)| {
-                row.result = res;
-                row
-            })
-            .collect())
+            .map(|o| o.expect("sweep slot missing"))
+            .collect();
+        Ok((rows, stats))
     }
 
     fn stage_point(
         p: &SweepPoint,
         opts: &SweepOptions,
-        memo: &Mutex<HashMap<SimKey, Arc<Trace>>>,
+        memo: &Mutex<HashMap<String, Arc<Trace>>>,
+        disk: Option<&TraceStore>,
+        counters: &StageCounters,
     ) -> Result<(SweepRow, ProfileInputs)> {
-        let key = SimKey::new(&p.bench, &p.config, opts);
-        let cached = memo.lock().unwrap().get(&key).cloned();
+        let tkey = key::trace_key(&p.bench, &p.config, opts);
+        let cached = memo.lock().unwrap().get(&tkey).cloned();
         let trace = match cached {
-            Some(t) => t,
+            Some(t) => {
+                counters.trace_mem_hits.fetch_add(1, Ordering::Relaxed);
+                t
+            }
             None => {
-                let prog = workloads::build(&p.bench, opts.scale, opts.seed)
-                    .ok_or_else(|| anyhow!("unknown benchmark '{}'", p.bench))?;
-                let t = simulate(
-                    &prog,
-                    &p.config,
-                    Limits { max_instructions: opts.max_instructions },
-                )?;
-                let t = Arc::new(t);
-                memo.lock().unwrap().insert(key, t.clone());
+                let t = match disk.and_then(|d| d.load(&tkey)) {
+                    Some(t) => {
+                        counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
+                        Arc::new(t)
+                    }
+                    None => {
+                        let prog = workloads::build(&p.bench, opts.scale, opts.seed)
+                            .ok_or_else(|| {
+                                anyhow!("unknown benchmark '{}'", p.bench)
+                            })?;
+                        counters.simulator_runs.fetch_add(1, Ordering::Relaxed);
+                        let t = simulate(
+                            &prog,
+                            &p.config,
+                            Limits { max_instructions: opts.max_instructions },
+                        )?;
+                        if let Some(d) = disk {
+                            // best-effort spill: a full disk must not fail
+                            // the sweep, only future reuse
+                            if let Err(e) = d.store(&tkey, &t) {
+                                eprintln!("warning: trace spill failed: {e:#}");
+                            }
+                        }
+                        Arc::new(t)
+                    }
+                };
+                memo.lock().unwrap().insert(tkey, t.clone());
                 t
             }
         };
@@ -252,13 +375,45 @@ mod tests {
             workers: 2,
             ..Default::default()
         });
-        let rows = coord.run_sweep(&points, &mut NativeBackend).unwrap();
+        let (rows, stats) = coord
+            .run_sweep_with_stats(&points, &mut NativeBackend)
+            .unwrap();
         assert_eq!(rows.len(), 4);
         for r in rows {
             assert!(r.committed > 0);
             assert!(r.result.total_base > 0.0);
             assert!(r.result.improvement > 0.0);
         }
+        // no cache dir: everything computed, nothing reused from disk
+        assert_eq!(stats.rows_from_cache, 0);
+        assert_eq!(stats.rows_computed, 4);
+        assert_eq!(stats.simulator_runs, 4);
+        assert_eq!(stats.trace_disk_hits, 0);
+        assert!(stats.chunks_claimed >= 1);
+    }
+
+    #[test]
+    fn trace_memo_dedups_same_geometry() {
+        // same bench + geometry, two tech variants -> one simulation
+        let mut fefet = SystemConfig::preset("c1").unwrap();
+        fefet.tech = crate::config::Technology::Fefet;
+        fefet.name = "c1-fefet".into();
+        let points = cross(
+            &["lcs"],
+            &[SystemConfig::preset("c1").unwrap(), fefet],
+            LocalityRule::AnyCache,
+        );
+        let coord = Coordinator::new(SweepOptions {
+            scale: 4,
+            workers: 1,
+            ..Default::default()
+        });
+        let (rows, stats) = coord
+            .run_sweep_with_stats(&points, &mut NativeBackend)
+            .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(stats.simulator_runs, 1);
+        assert_eq!(stats.trace_mem_hits, 1);
     }
 
     #[test]
@@ -268,7 +423,8 @@ mod tests {
             &[SystemConfig::default()],
             LocalityRule::AnyCache,
         );
-        let coord = Coordinator::new(SweepOptions { workers: 1, ..Default::default() });
+        let coord =
+            Coordinator::new(SweepOptions { workers: 1, ..Default::default() });
         assert!(coord.run_sweep(&points, &mut NativeBackend).is_err());
     }
 }

@@ -1,0 +1,200 @@
+//! Stable (de)serialization of [`SweepRow`] for the on-disk result cache.
+//!
+//! The serialization must be *canonical*: object keys come from a
+//! `BTreeMap` (sorted), and `util::json` prints `f64`s with Rust's
+//! shortest-roundtrip formatter, so `parse(dump(x)) == x` bit-for-bit.
+//! That property is what lets a resumed sweep return byte-identical rows
+//! to a cold sweep — `tests/sweep_cache.rs` asserts it.
+
+use crate::analyzer::Macr;
+use crate::config::{CimLevels, Technology};
+use crate::energy::calib::{NCOMP, NOPS};
+use crate::profiler::ProfileResult;
+use crate::util::json::Json;
+
+use super::SweepRow;
+
+fn arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn get_f64(o: &Json, key: &str) -> Result<f64, String> {
+    o.req(key)?
+        .as_f64()
+        .ok_or_else(|| format!("key '{key}' is not a number"))
+}
+
+fn get_u64(o: &Json, key: &str) -> Result<u64, String> {
+    Ok(get_f64(o, key)? as u64)
+}
+
+fn get_str<'a>(o: &'a Json, key: &str) -> Result<&'a str, String> {
+    o.req(key)?
+        .as_str()
+        .ok_or_else(|| format!("key '{key}' is not a string"))
+}
+
+fn get_f64_array<const N: usize>(o: &Json, key: &str) -> Result<[f64; N], String> {
+    let xs = o
+        .req(key)?
+        .as_arr()
+        .ok_or_else(|| format!("key '{key}' is not an array"))?;
+    if xs.len() != N {
+        return Err(format!("key '{key}': expected {N} elements, got {}", xs.len()));
+    }
+    let mut out = [0.0; N];
+    for (i, x) in xs.iter().enumerate() {
+        out[i] = x
+            .as_f64()
+            .ok_or_else(|| format!("key '{key}'[{i}] is not a number"))?;
+    }
+    Ok(out)
+}
+
+fn macr_to_json(m: &Macr) -> Json {
+    Json::obj(vec![
+        ("total_accesses", m.total_accesses.into()),
+        ("convertible", m.convertible.into()),
+        ("convertible_l1", m.convertible_l1.into()),
+        ("convertible_other", m.convertible_other.into()),
+        ("cim_ops", m.cim_ops.into()),
+    ])
+}
+
+fn macr_from_json(o: &Json) -> Result<Macr, String> {
+    Ok(Macr {
+        total_accesses: get_u64(o, "total_accesses")?,
+        convertible: get_u64(o, "convertible")?,
+        convertible_l1: get_u64(o, "convertible_l1")?,
+        convertible_other: get_u64(o, "convertible_other")?,
+        cim_ops: get_u64(o, "cim_ops")?,
+    })
+}
+
+fn result_to_json(r: &ProfileResult) -> Json {
+    Json::obj(vec![
+        ("comps_base", arr(&r.comps_base)),
+        ("comps_cim", arr(&r.comps_cim)),
+        ("total_base", r.total_base.into()),
+        ("total_cim", r.total_cim.into()),
+        ("improvement", r.improvement.into()),
+        ("speedup", r.speedup.into()),
+        ("ratio_proc", r.ratio_proc.into()),
+        ("ratio_cache", r.ratio_cache.into()),
+        ("e_l1", arr(&r.e_l1)),
+        ("lat_l1", arr(&r.lat_l1)),
+        ("e_l2", arr(&r.e_l2)),
+        ("lat_l2", arr(&r.lat_l2)),
+    ])
+}
+
+fn result_from_json(o: &Json) -> Result<ProfileResult, String> {
+    Ok(ProfileResult {
+        comps_base: get_f64_array::<NCOMP>(o, "comps_base")?,
+        comps_cim: get_f64_array::<NCOMP>(o, "comps_cim")?,
+        total_base: get_f64(o, "total_base")?,
+        total_cim: get_f64(o, "total_cim")?,
+        improvement: get_f64(o, "improvement")?,
+        speedup: get_f64(o, "speedup")?,
+        ratio_proc: get_f64(o, "ratio_proc")?,
+        ratio_cache: get_f64(o, "ratio_cache")?,
+        e_l1: get_f64_array::<NOPS>(o, "e_l1")?,
+        lat_l1: get_f64_array::<NOPS>(o, "lat_l1")?,
+        e_l2: get_f64_array::<NOPS>(o, "e_l2")?,
+        lat_l2: get_f64_array::<NOPS>(o, "lat_l2")?,
+    })
+}
+
+/// Canonical JSON form of a sweep row.
+pub fn row_to_json(row: &SweepRow) -> Json {
+    Json::obj(vec![
+        ("bench", row.bench.as_str().into()),
+        ("config_name", row.config_name.as_str().into()),
+        ("tech", row.tech.name().into()),
+        ("cim_levels", row.cim_levels.name().into()),
+        ("macr", macr_to_json(&row.macr)),
+        ("committed", row.committed.into()),
+        ("cycles", row.cycles.into()),
+        ("removed", row.removed.into()),
+        ("cim_ops", row.cim_ops.into()),
+        ("result", result_to_json(&row.result)),
+    ])
+}
+
+/// Parse a sweep row back from its canonical JSON form.
+pub fn row_from_json(o: &Json) -> Result<SweepRow, String> {
+    let tech_name = get_str(o, "tech")?;
+    let tech = Technology::from_name(tech_name)
+        .ok_or_else(|| format!("unknown tech '{tech_name}'"))?;
+    let cim_name = get_str(o, "cim_levels")?;
+    let cim_levels = CimLevels::from_name(cim_name)
+        .ok_or_else(|| format!("unknown cim levels '{cim_name}'"))?;
+    Ok(SweepRow {
+        bench: get_str(o, "bench")?.to_string(),
+        config_name: get_str(o, "config_name")?.to_string(),
+        tech,
+        cim_levels,
+        macr: macr_from_json(o.req("macr")?)?,
+        committed: get_u64(o, "committed")?,
+        cycles: get_u64(o, "cycles")?,
+        removed: get_u64(o, "removed")?,
+        cim_ops: get_u64(o, "cim_ops")?,
+        result: result_from_json(o.req("result")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_row() -> SweepRow {
+        let mut result = ProfileResult {
+            total_base: 1.25e7,
+            total_cim: 9.5e6,
+            improvement: 1.3157894736842106,
+            speedup: 1.08,
+            ratio_proc: 0.4,
+            ratio_cache: 0.6,
+            ..Default::default()
+        };
+        result.comps_base[0] = 123.456;
+        result.e_l1[1] = 61.0;
+        SweepRow {
+            bench: "lcs".into(),
+            config_name: "c1-sram".into(),
+            tech: Technology::Sram,
+            cim_levels: CimLevels::Both,
+            macr: Macr {
+                total_accesses: 1000,
+                convertible: 400,
+                convertible_l1: 300,
+                convertible_other: 100,
+                cim_ops: 150,
+            },
+            committed: 123_456,
+            cycles: 222_222,
+            removed: 900,
+            cim_ops: 150,
+            result,
+        }
+    }
+
+    #[test]
+    fn row_roundtrips_byte_identically() {
+        let row = sample_row();
+        let dumped = row_to_json(&row).dump();
+        let parsed = crate::util::json::parse(&dumped).unwrap();
+        let row2 = row_from_json(&parsed).unwrap();
+        assert_eq!(row_to_json(&row2).dump(), dumped);
+    }
+
+    #[test]
+    fn row_from_json_rejects_malformed() {
+        let mut o = row_to_json(&sample_row());
+        if let Json::Obj(m) = &mut o {
+            m.remove("cycles");
+        }
+        assert!(row_from_json(&o).is_err());
+        assert!(row_from_json(&Json::Null).is_err());
+    }
+}

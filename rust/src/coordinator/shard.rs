@@ -1,0 +1,89 @@
+//! Deterministic work-stealing shard queue for sweep staging.
+//!
+//! A sweep's pending point-indices are treated as one logical array; the
+//! queue hands out contiguous chunks via a single atomic cursor.  Workers
+//! that land on cheap points (memoized traces) immediately steal the next
+//! chunk, so load-balancing is automatic and — unlike static partitioning
+//! — no worker idles while another drains a queue of cold simulations.
+//! Chunking (rather than single-point claims) keeps cursor contention
+//! negligible for large sweeps.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A shared queue over `0..len` that hands out chunks of work.
+pub struct ChunkQueue {
+    len: usize,
+    chunk: usize,
+    cursor: AtomicUsize,
+}
+
+impl ChunkQueue {
+    /// `chunk == 0` picks an automatic size: enough chunks for ~4 claims
+    /// per worker, clamped to `[1, 64]` points.
+    pub fn new(len: usize, chunk: usize, workers: usize) -> Self {
+        let chunk = if chunk > 0 {
+            chunk
+        } else {
+            (len / (workers.max(1) * 4)).clamp(1, 64)
+        };
+        Self { len, chunk, cursor: AtomicUsize::new(0) }
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    /// Claim the next chunk; `None` once the queue is drained.
+    pub fn claim(&self) -> Option<Range<usize>> {
+        let start = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+        if start >= self.len {
+            None
+        } else {
+            Some(start..(start + self.chunk).min(self.len))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_every_index_exactly_once() {
+        let q = ChunkQueue::new(103, 10, 4);
+        let mut seen = vec![0u32; 103];
+        while let Some(r) = q.claim() {
+            for i in r {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn auto_chunk_is_clamped() {
+        assert_eq!(ChunkQueue::new(10, 0, 4).chunk_size(), 1);
+        assert_eq!(ChunkQueue::new(10_000, 0, 4).chunk_size(), 64);
+        assert_eq!(ChunkQueue::new(0, 0, 1).chunk_size(), 1);
+        assert!(ChunkQueue::new(0, 0, 1).claim().is_none());
+    }
+
+    #[test]
+    fn concurrent_claims_are_disjoint() {
+        let q = ChunkQueue::new(1000, 7, 8);
+        let counts: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    while let Some(r) = q.claim() {
+                        for i in r {
+                            counts[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,436 @@
+//! On-disk spill store for simulation traces.
+//!
+//! The simulator is the most expensive stage of a sweep, and its output
+//! depends only on (workload, core, cache geometry) — not on technology or
+//! CiM placement.  Spilling each trace to `traces/trace-<key>.bin` lets
+//! the same trace serve every tech/placement variant *across processes*,
+//! not just within one coordinator's in-memory memo.
+//!
+//! Format: a versioned little-endian binary stream (no third-party
+//! serialization crates exist in this environment).  Loads are
+//! best-effort: any corruption is treated as a cache miss and the trace is
+//! re-simulated and re-written.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::isa::{FuncUnit, Instruction};
+use crate::probes::{
+    IState, MemAccessInfo, MemLevel, MemStats, PipeStats, StopReason, Trace,
+};
+
+const MAGIC: u32 = 0x4543_5452; // "ECTR"
+const VERSION: u32 = 1;
+
+/// A directory of spilled traces, addressed by content-hash key.
+pub struct TraceStore {
+    dir: PathBuf,
+}
+
+impl TraceStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating trace store {dir:?}"))?;
+        Ok(Self { dir: dir.to_path_buf() })
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("trace-{key}.bin"))
+    }
+
+    /// Load a spilled trace; any missing/corrupt file is a miss.
+    pub fn load(&self, key: &str) -> Option<Trace> {
+        let bytes = std::fs::read(self.path_for(key)).ok()?;
+        decode(&bytes).ok()
+    }
+
+    /// Spill a trace. Written to a temp file and renamed, so concurrent
+    /// processes never observe a half-written trace.
+    pub fn store(&self, key: &str, trace: &Trace) -> Result<()> {
+        let bytes = encode(trace);
+        let tmp = self
+            .dir
+            .join(format!("trace-{key}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, self.path_for(key))
+            .with_context(|| format!("publishing trace {key}"))?;
+        Ok(())
+    }
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| format!("truncated trace at byte {}", self.i))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| "bad utf8".to_string())
+    }
+}
+
+fn level_to_u8(l: MemLevel) -> u8 {
+    match l {
+        MemLevel::L1 => 0,
+        MemLevel::L2 => 1,
+        MemLevel::Dram => 2,
+    }
+}
+
+fn level_from_u8(x: u8) -> Result<MemLevel, String> {
+    match x {
+        0 => Ok(MemLevel::L1),
+        1 => Ok(MemLevel::L2),
+        2 => Ok(MemLevel::Dram),
+        _ => Err(format!("bad mem level {x}")),
+    }
+}
+
+fn stop_to_u8(s: StopReason) -> u8 {
+    match s {
+        StopReason::Halt => 0,
+        StopReason::MaxInstructions => 1,
+        StopReason::RanOffEnd => 2,
+    }
+}
+
+fn stop_from_u8(x: u8) -> Result<StopReason, String> {
+    match x {
+        0 => Ok(StopReason::Halt),
+        1 => Ok(StopReason::MaxInstructions),
+        2 => Ok(StopReason::RanOffEnd),
+        _ => Err(format!("bad stop reason {x}")),
+    }
+}
+
+fn pipe_fields(p: &PipeStats) -> [u64; 16] {
+    [
+        p.fetched,
+        p.decoded,
+        p.renamed,
+        p.iq_reads,
+        p.iq_writes,
+        p.rob_reads,
+        p.rob_writes,
+        p.int_rf_reads,
+        p.int_rf_writes,
+        p.fp_rf_reads,
+        p.fp_rf_writes,
+        p.bpred_lookups,
+        p.bpred_mispredicts,
+        p.lsq_reads,
+        p.lsq_writes,
+        0, // reserved
+    ]
+}
+
+fn pipe_from_fields(
+    f: [u64; 16],
+    fu_counts: [u64; crate::isa::func_unit::NUM_FUNC_UNITS],
+) -> PipeStats {
+    PipeStats {
+        fetched: f[0],
+        decoded: f[1],
+        renamed: f[2],
+        iq_reads: f[3],
+        iq_writes: f[4],
+        rob_reads: f[5],
+        rob_writes: f[6],
+        int_rf_reads: f[7],
+        int_rf_writes: f[8],
+        fp_rf_reads: f[9],
+        fp_rf_writes: f[10],
+        fu_counts,
+        bpred_lookups: f[11],
+        bpred_mispredicts: f[12],
+        lsq_reads: f[13],
+        lsq_writes: f[14],
+    }
+}
+
+fn mem_fields(m: &MemStats) -> [u64; 14] {
+    [
+        m.l1i_hits,
+        m.l1i_misses,
+        m.l1d_read_hits,
+        m.l1d_read_misses,
+        m.l1d_write_hits,
+        m.l1d_write_misses,
+        m.l2_read_hits,
+        m.l2_read_misses,
+        m.l2_write_hits,
+        m.l2_write_misses,
+        m.dram_reads,
+        m.dram_writes,
+        m.writebacks,
+        m.mshr_merges,
+    ]
+}
+
+fn mem_from_fields(f: [u64; 14]) -> MemStats {
+    MemStats {
+        l1i_hits: f[0],
+        l1i_misses: f[1],
+        l1d_read_hits: f[2],
+        l1d_read_misses: f[3],
+        l1d_write_hits: f[4],
+        l1d_write_misses: f[5],
+        l2_read_hits: f[6],
+        l2_read_misses: f[7],
+        l2_write_hits: f[8],
+        l2_write_misses: f[9],
+        dram_reads: f[10],
+        dram_writes: f[11],
+        writebacks: f[12],
+        mshr_merges: f[13],
+    }
+}
+
+/// Serialize a trace to the versioned binary format.
+pub fn encode(t: &Trace) -> Vec<u8> {
+    let mut w = Writer { buf: Vec::with_capacity(64 + t.ciq.len() * 96) };
+    w.u32(MAGIC);
+    w.u32(VERSION);
+    w.str(&t.program);
+    w.u64(t.cycles);
+    w.u64(t.committed);
+    w.u8(stop_to_u8(t.stop));
+    for x in pipe_fields(&t.pipe) {
+        w.u64(x);
+    }
+    for x in t.pipe.fu_counts {
+        w.u64(x);
+    }
+    for x in mem_fields(&t.mem) {
+        w.u64(x);
+    }
+    w.u64(t.ciq.len() as u64);
+    for is in &t.ciq {
+        w.u64(is.seq);
+        w.u32(is.pc);
+        w.u64(is.instr.encode());
+        w.u8(is.fu as u8);
+        w.u64(is.tick_fetch);
+        w.u64(is.tick_decode);
+        w.u64(is.tick_rename);
+        w.u64(is.tick_dispatch);
+        w.u64(is.tick_issue);
+        w.u64(is.tick_complete);
+        w.u64(is.tick_commit);
+        match &is.mem {
+            None => w.u8(0),
+            Some(m) => {
+                w.u8(1);
+                w.u32(m.addr);
+                w.u8(m.size);
+                w.u8(m.is_store as u8);
+                w.u8(level_to_u8(m.level));
+                w.u32(m.bank);
+                w.u8(m.l1_hit as u8);
+                w.u8(m.l2_hit as u8);
+                w.u8(m.mshr_merged as u8);
+                w.u64(m.latency);
+                w.u64(m.issue_tick);
+            }
+        }
+    }
+    w.buf
+}
+
+/// Parse a trace from the binary format; errors on any inconsistency.
+pub fn decode(bytes: &[u8]) -> Result<Trace, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.u32()? != MAGIC {
+        return Err("bad magic".into());
+    }
+    if r.u32()? != VERSION {
+        return Err("unsupported trace version".into());
+    }
+    let program = r.str()?;
+    let cycles = r.u64()?;
+    let committed = r.u64()?;
+    let stop = stop_from_u8(r.u8()?)?;
+    let mut pf = [0u64; 16];
+    for x in pf.iter_mut() {
+        *x = r.u64()?;
+    }
+    let mut fu_counts = [0u64; crate::isa::func_unit::NUM_FUNC_UNITS];
+    for x in fu_counts.iter_mut() {
+        *x = r.u64()?;
+    }
+    let pipe = pipe_from_fields(pf, fu_counts);
+    let mut mf = [0u64; 14];
+    for x in mf.iter_mut() {
+        *x = r.u64()?;
+    }
+    let mem = mem_from_fields(mf);
+    let n = r.u64()? as usize;
+    let mut ciq = Vec::with_capacity(n.min(1 << 24));
+    for _ in 0..n {
+        let seq = r.u64()?;
+        let pc = r.u32()?;
+        let instr = Instruction::decode(r.u64()?).ok_or("bad instruction word")?;
+        let fu_idx = r.u8()? as usize;
+        let fu = *FuncUnit::all()
+            .get(fu_idx)
+            .ok_or_else(|| format!("bad func unit {fu_idx}"))?;
+        let tick_fetch = r.u64()?;
+        let tick_decode = r.u64()?;
+        let tick_rename = r.u64()?;
+        let tick_dispatch = r.u64()?;
+        let tick_issue = r.u64()?;
+        let tick_complete = r.u64()?;
+        let tick_commit = r.u64()?;
+        let mem_info = match r.u8()? {
+            0 => None,
+            1 => Some(MemAccessInfo {
+                addr: r.u32()?,
+                size: r.u8()?,
+                is_store: r.u8()? != 0,
+                level: level_from_u8(r.u8()?)?,
+                bank: r.u32()?,
+                l1_hit: r.u8()? != 0,
+                l2_hit: r.u8()? != 0,
+                mshr_merged: r.u8()? != 0,
+                latency: r.u64()?,
+                issue_tick: r.u64()?,
+            }),
+            x => return Err(format!("bad mem flag {x}")),
+        };
+        ciq.push(IState {
+            seq,
+            pc,
+            instr,
+            fu,
+            tick_fetch,
+            tick_decode,
+            tick_rename,
+            tick_dispatch,
+            tick_issue,
+            tick_complete,
+            tick_commit,
+            mem: mem_info,
+        });
+    }
+    if r.i != bytes.len() {
+        return Err(format!("trailing bytes at {}", r.i));
+    }
+    Ok(Trace { program, ciq, pipe, mem, cycles, committed, stop })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::sim::{simulate, Limits};
+    use crate::workloads;
+
+    fn sample_trace() -> Trace {
+        let prog = workloads::build("lcs", 2, 3).unwrap();
+        let cfg = SystemConfig::preset("c1").unwrap();
+        simulate(&prog, &cfg, Limits::default()).unwrap()
+    }
+
+    fn assert_traces_equal(a: &Trace, b: &Trace) {
+        assert_eq!(a.program, b.program);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.committed, b.committed);
+        assert_eq!(a.stop, b.stop);
+        assert_eq!(pipe_fields(&a.pipe), pipe_fields(&b.pipe));
+        assert_eq!(a.pipe.fu_counts, b.pipe.fu_counts);
+        assert_eq!(mem_fields(&a.mem), mem_fields(&b.mem));
+        assert_eq!(a.ciq.len(), b.ciq.len());
+        for (x, y) in a.ciq.iter().zip(&b.ciq) {
+            assert_eq!(x.seq, y.seq);
+            assert_eq!(x.instr, y.instr);
+            assert_eq!(x.fu, y.fu);
+            assert_eq!(x.tick_commit, y.tick_commit);
+            assert_eq!(x.mem.is_some(), y.mem.is_some());
+            if let (Some(m), Some(n)) = (&x.mem, &y.mem) {
+                assert_eq!(m.addr, n.addr);
+                assert_eq!(m.level, n.level);
+                assert_eq!(m.latency, n.latency);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = sample_trace();
+        let decoded = decode(&encode(&t)).unwrap();
+        assert_traces_equal(&t, &decoded);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let t = sample_trace();
+        let mut bytes = encode(&t);
+        assert!(decode(&bytes[..bytes.len() - 1]).is_err());
+        bytes[0] ^= 0xff;
+        assert!(decode(&bytes).is_err());
+        assert!(decode(b"").is_err());
+    }
+
+    #[test]
+    fn store_roundtrip_via_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "eva-cim-trace-store-test-{}",
+            std::process::id()
+        ));
+        let store = TraceStore::open(&dir).unwrap();
+        let t = sample_trace();
+        assert!(store.load("k1").is_none());
+        store.store("k1", &t).unwrap();
+        let back = store.load("k1").unwrap();
+        assert_traces_equal(&t, &back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -158,6 +158,10 @@ pub fn fig12(runs: usize, scale: usize) -> Result<TextTable> {
     Ok(t)
 }
 
+/// Shared sweep driver for Figs 13–16 / Table VI.  Every experiment goes
+/// through the coordinator's cached path: set `opts.cache_dir` (CLI:
+/// `--cache-dir`, with `--resume`) and regenerating one figure warms the
+/// result + trace caches for all the others that share design points.
 fn run_paper_sweep(
     configs: &[SystemConfig],
     opts: SweepOptions,
@@ -357,5 +361,21 @@ mod tests {
     fn table6_produces_all_17_rows() {
         let t = table6(fast_opts(), &mut NativeBackend).unwrap();
         assert_eq!(t.num_rows(), 17);
+    }
+
+    #[test]
+    fn table6_regenerates_identically_through_the_cache() {
+        let dir = std::env::temp_dir()
+            .join(format!("eva-cim-exp-cache-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = SweepOptions {
+            cache_dir: Some(dir.clone()),
+            resume: true,
+            ..fast_opts()
+        };
+        let cold = table6(opts.clone(), &mut NativeBackend).unwrap();
+        let warm = table6(opts, &mut NativeBackend).unwrap();
+        assert_eq!(cold.to_csv(), warm.to_csv());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,8 +7,10 @@
 //!                     [--backend auto|native|pjrt]
 //! eva-cim asm <file.s> [--config c1]             run a text-assembly file
 //! eva-cim sweep [--benches a,b] [--configs c1,c2] [--techs sram,fefet]
-//!               [--scale N] [--workers N] [--csv out.csv]
+//!               [--scale N] [--jobs N] [--chunk N] [--csv out.csv]
+//!               [--cache-dir DIR] [--resume]
 //! eva-cim table <table3|table5|table6|fig11|fig12|fig13|fig14|fig15|fig16>
+//!               [--cache-dir DIR] [--resume] [--jobs N]
 //! eva-cim validate                               Table V + Fig 12
 //! eva-cim sensitivity <bench> [--config c1]      DSE gradient (PJRT)
 //! eva-cim calib                                  print calibration constants
@@ -33,7 +35,16 @@ use eva_cim::util::TextTable;
 use eva_cim::workloads;
 
 mod cli {
-    /// Minimal flag parser: positionals + `--key value` pairs.
+    /// Boolean switches: take no value (`sweep --resume --jobs 4`), but an
+    /// explicit `--resume false` is still honored.  Every other flag
+    /// requires a value, and a missing one is a hard error — a trailing
+    /// `--csv` must not silently write to a file named "true".
+    const SWITCHES: &[&str] = &["resume"];
+
+    const BOOL_WORDS: &[&str] =
+        &["true", "false", "1", "0", "yes", "no", "on", "off"];
+
+    /// Minimal flag parser: positionals + `--key value` pairs + switches.
     pub struct Args {
         pub positional: Vec<String>,
         flags: Vec<(String, String)>,
@@ -46,10 +57,23 @@ mod cli {
             let mut it = argv.iter().peekable();
             while let Some(a) = it.next() {
                 if let Some(key) = a.strip_prefix("--") {
-                    let val = it
-                        .next()
-                        .ok_or_else(|| format!("flag --{key} needs a value"))?;
-                    flags.push((key.to_string(), val.clone()));
+                    let val = if SWITCHES.contains(&key) {
+                        match it.peek() {
+                            Some(v) if BOOL_WORDS.contains(&v.as_str()) => {
+                                it.next().unwrap().clone()
+                            }
+                            _ => "true".to_string(),
+                        }
+                    } else {
+                        let v = it
+                            .next()
+                            .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                        if v.starts_with("--") {
+                            return Err(format!("flag --{key} needs a value"));
+                        }
+                        v.clone()
+                    };
+                    flags.push((key.to_string(), val));
                 } else {
                     positional.push(a.clone());
                 }
@@ -75,16 +99,20 @@ mod cli {
                 Some(v) => v.parse().map_err(|_| format!("--{key} needs a number")),
             }
         }
+
+        pub fn bool_flag(&self, key: &str) -> Result<bool, String> {
+            match self.flag(key) {
+                None => Ok(false),
+                Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+                Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+                Some(v) => Err(format!("--{key}: expected a boolean, got '{v}'")),
+            }
+        }
     }
 }
 
 fn parse_rule(s: &str) -> Result<LocalityRule, String> {
-    match s {
-        "any" | "anycache" => Ok(LocalityRule::AnyCache),
-        "level" | "samelevel" => Ok(LocalityRule::SameLevel),
-        "bank" | "samebank" => Ok(LocalityRule::SameBank),
-        _ => Err(format!("unknown locality rule '{s}'")),
-    }
+    LocalityRule::from_name(s).ok_or_else(|| format!("unknown locality rule '{s}'"))
 }
 
 fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
@@ -105,6 +133,24 @@ fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
             CimLevels::from_name(c).ok_or_else(|| format!("unknown cim levels '{c}'"))?;
     }
     Ok(cfg)
+}
+
+/// Sweep options shared by `sweep` and `table`: sizing, the worker pool
+/// (`--jobs`, with `--workers` kept as an alias), and the on-disk cache
+/// (`--cache-dir`, `--resume`, `--chunk`).
+fn sweep_opts_from_args(args: &cli::Args) -> Result<SweepOptions, String> {
+    let defaults = SweepOptions::default();
+    let workers =
+        args.usize_flag("jobs", args.usize_flag("workers", defaults.workers)?)?;
+    Ok(SweepOptions {
+        scale: args.usize_flag("scale", 0)?,
+        seed: args.usize_flag("seed", 42)? as u64,
+        workers,
+        chunk: args.usize_flag("chunk", 0)?,
+        cache_dir: args.flag("cache-dir").map(std::path::PathBuf::from),
+        resume: args.bool_flag("resume")?,
+        ..defaults
+    })
 }
 
 fn make_backend(kind: &str) -> Result<Box<dyn Backend>, String> {
@@ -137,8 +183,12 @@ fn cmd_list() -> Result<(), String> {
     Ok(())
 }
 
-fn report_single(cfg: &SystemConfig, trace: &eva_cim::probes::Trace,
-                 rule: LocalityRule, backend: &mut dyn Backend) -> Result<(), String> {
+fn report_single(
+    cfg: &SystemConfig,
+    trace: &eva_cim::probes::Trace,
+    rule: LocalityRule,
+    backend: &mut dyn Backend,
+) -> Result<(), String> {
     let analysis = analyze(trace, cfg, rule);
     let reshaped = reshape(trace, &analysis.selection, cfg);
     let inputs = ProfileInputs::new(cfg, &reshaped);
@@ -243,24 +293,23 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
         }
     }
     let rule = parse_rule(&args.flag_or("rule", "any"))?;
-    let opts = SweepOptions {
-        scale: args.usize_flag("scale", 0)?,
-        seed: args.usize_flag("seed", 42)? as u64,
-        workers: args.usize_flag("workers", SweepOptions::default().workers)?,
-        ..Default::default()
-    };
+    let opts = sweep_opts_from_args(args)?;
     let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
     let points = cross(&bench_refs, &configs, rule);
     eprintln!(
-        "sweep: {} points ({} benches x {} configs), backend={}",
+        "sweep: {} points ({} benches x {} configs), backend={}, cache={}",
         points.len(),
         bench_refs.len(),
         configs.len(),
-        backend.name()
+        backend.name(),
+        opts.cache_dir
+            .as_deref()
+            .map(|d| d.display().to_string())
+            .unwrap_or_else(|| "off".into()),
     );
     let t0 = std::time::Instant::now();
-    let rows = Coordinator::new(opts)
-        .run_sweep(&points, backend.as_mut())
+    let (rows, stats) = Coordinator::new(opts)
+        .run_sweep_with_stats(&points, backend.as_mut())
         .map_err(|e| format!("{e:#}"))?;
     let dt = t0.elapsed();
     let mut t = TextTable::new(
@@ -279,7 +328,16 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
         ]);
     }
     println!("{}", t.render());
-    eprintln!("{} design points in {:.2}s", rows.len(), dt.as_secs_f64());
+    eprintln!(
+        "{} design points in {:.2}s ({} cached, {} computed, {} simulated, \
+         {} chunks)",
+        rows.len(),
+        dt.as_secs_f64(),
+        stats.rows_from_cache,
+        stats.rows_computed,
+        stats.simulator_runs,
+        stats.chunks_claimed,
+    );
     if let Some(csv) = args.flag("csv") {
         std::fs::write(csv, t.to_csv()).map_err(|e| e.to_string())?;
         eprintln!("wrote {csv}");
@@ -292,11 +350,7 @@ fn cmd_table(args: &cli::Args) -> Result<(), String> {
         .positional
         .get(1)
         .ok_or("usage: eva-cim table <id> (table3|table5|table6|fig11..fig16|calib)")?;
-    let opts = SweepOptions {
-        scale: args.usize_flag("scale", 0)?,
-        workers: args.usize_flag("workers", SweepOptions::default().workers)?,
-        ..Default::default()
-    };
+    let opts = sweep_opts_from_args(args)?;
     let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
     let err = |e: anyhow::Error| format!("{e:#}");
     let table = match id.as_str() {

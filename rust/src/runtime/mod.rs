@@ -6,18 +6,18 @@
 //! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The PJRT path needs the `xla` bindings, which the offline build image
+//! does not ship; it is therefore gated behind the off-by-default `pjrt`
+//! cargo feature.  Without it, [`PjrtRuntime`] is an API-compatible stub
+//! whose `load` always fails, and [`best_backend`] falls back to the
+//! native mirror — every caller keeps compiling either way.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::Result;
 
-use crate::energy::calib::{
-    group_matrix_f32, static_unit_energy_f32, tech_table_f32, NCFG, NCOMP,
-    NOPS, NTECH, NTECH_PARAMS,
-};
 use crate::profiler::{ProfileInputs, ProfileResult};
-use crate::reshape::{NC, NPERF};
-use crate::util::json;
 
 /// Abstraction over the two profiler backends.
 pub trait Backend {
@@ -38,272 +38,371 @@ impl Backend for NativeBackend {
     }
 }
 
-/// The PJRT-backed runtime.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    profiler: xla::PjRtLoadedExecutable,
-    energy_model: xla::PjRtLoadedExecutable,
-    sensitivity: Option<xla::PjRtLoadedExecutable>,
-    /// design-point batch the artifacts were lowered at
-    pub batch: usize,
-    /// total PJRT executions issued (perf accounting)
-    pub executions: u64,
+/// Default artifact directory: `$EVA_CIM_ARTIFACTS` or repo `artifacts/`.
+fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("EVA_CIM_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-    )
-    .with_context(|| format!("parsing HLO text {path:?}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compiling {path:?}"))
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::{Path, PathBuf};
 
-/// Build an f32 literal of shape `[rows, cols]` from flattened data.
-fn matrix_literal(rows: usize, cols: usize, data: &[f32]) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), rows * cols);
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-}
+    use anyhow::{anyhow, bail, Context, Result};
 
-/// Neutral padding rows (anchor geometry, zero counters, unit perf).
-const PAD_CFG_L1: [f32; NCFG] = [65536.0, 4.0, 64.0, 4.0, 0.0, 1.0];
-const PAD_CFG_L2: [f32; NCFG] = [262144.0, 8.0, 64.0, 4.0, 0.0, 2.0];
-const PAD_PERF: [f32; NPERF] = [1.0, 1.0, 0.0, 0.0, 0.0, 1.0];
-
-/// Flattened, padded input tensors for one profiler/sensitivity chunk.
-struct ChunkArgs {
-    cfg1: Vec<f32>,
-    cfg2: Vec<f32>,
-    cb: Vec<f32>,
-    cc: Vec<f32>,
-    pf: Vec<f32>,
-}
-
-fn pack_chunk(chunk: &[ProfileInputs], b: usize) -> ChunkArgs {
-    let mut a = ChunkArgs {
-        cfg1: Vec::with_capacity(b * NCFG),
-        cfg2: Vec::with_capacity(b * NCFG),
-        cb: Vec::with_capacity(b * NC),
-        cc: Vec::with_capacity(b * NC),
-        pf: Vec::with_capacity(b * NPERF),
+    use crate::energy::calib::{
+        group_matrix_f32, static_unit_energy_f32, tech_table_f32, NCFG, NCOMP,
+        NOPS, NTECH, NTECH_PARAMS,
     };
-    for inp in chunk {
-        a.cfg1.extend(inp.cfg_l1.iter().map(|&x| x as f32));
-        a.cfg2.extend(inp.cfg_l2.iter().map(|&x| x as f32));
-        a.cb.extend(inp.counters_base.as_f32());
-        a.cc.extend(inp.counters_cim.as_f32());
-        a.pf.extend(inp.perf.iter().map(|&x| x as f32));
-    }
-    for _ in chunk.len()..b {
-        a.cfg1.extend(PAD_CFG_L1);
-        a.cfg2.extend(PAD_CFG_L2);
-        a.cb.extend([0f32; NC]);
-        a.cc.extend([0f32; NC]);
-        a.pf.extend(PAD_PERF);
-    }
-    a
-}
+    use crate::profiler::{ProfileInputs, ProfileResult};
+    use crate::reshape::{NC, NPERF};
+    use crate::util::json;
 
-impl PjrtRuntime {
-    /// Default artifact directory: `$EVA_CIM_ARTIFACTS` or repo `artifacts/`.
-    pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("EVA_CIM_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    /// The PJRT-backed runtime.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        profiler: xla::PjRtLoadedExecutable,
+        energy_model: xla::PjRtLoadedExecutable,
+        sensitivity: Option<xla::PjRtLoadedExecutable>,
+        /// design-point batch the artifacts were lowered at
+        pub batch: usize,
+        /// total PJRT executions issued (perf accounting)
+        pub executions: u64,
     }
 
-    /// Load the artifacts and compile them on the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest_path = dir.join("manifest.json");
-        let manifest_text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
-        let manifest = json::parse(&manifest_text)
-            .map_err(|e| anyhow!("manifest parse error: {e}"))?;
-        let batch = manifest
-            .get("batch")
-            .and_then(|b| b.as_usize())
-            .ok_or_else(|| anyhow!("manifest missing batch"))?;
-
-        // schema cross-check: the Python and Rust constants must agree
-        for (key, want) in [
-            ("ncfg", NCFG),
-            ("nops", NOPS),
-            ("nc", NC),
-            ("ncomp", NCOMP),
-            ("nperf", NPERF),
-            ("ntech", NTECH),
-            ("ntech_params", NTECH_PARAMS),
-        ] {
-            let got = manifest.get(key).and_then(|v| v.as_usize());
-            if got != Some(want) {
-                bail!(
-                    "manifest {key}={got:?} but Rust expects {want} — \
-                     regenerate artifacts (make artifacts)"
-                );
-            }
-        }
-
-        let client = xla::PjRtClient::cpu()?;
-        let profiler = load_exe(&client, &dir.join("profiler.hlo.txt"))?;
-        let energy_model = load_exe(&client, &dir.join("energy_model.hlo.txt"))?;
-        let sensitivity = load_exe(&client, &dir.join("sensitivity.hlo.txt")).ok();
-        Ok(Self { client, profiler, energy_model, sensitivity, batch, executions: 0 })
+    fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Build an f32 literal of shape `[rows, cols]` from flattened data.
+    fn matrix_literal(rows: usize, cols: usize, data: &[f32]) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
     }
 
-    fn run(&mut self, exe_kind: u8, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = match exe_kind {
-            0 => &self.profiler,
-            1 => &self.energy_model,
-            _ => self
-                .sensitivity
-                .as_ref()
-                .ok_or_else(|| anyhow!("sensitivity artifact missing"))?,
+    /// Neutral padding rows (anchor geometry, zero counters, unit perf).
+    const PAD_CFG_L1: [f32; NCFG] = [65536.0, 4.0, 64.0, 4.0, 0.0, 1.0];
+    const PAD_CFG_L2: [f32; NCFG] = [262144.0, 8.0, 64.0, 4.0, 0.0, 2.0];
+    const PAD_PERF: [f32; NPERF] = [1.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+
+    /// Flattened, padded input tensors for one profiler/sensitivity chunk.
+    struct ChunkArgs {
+        cfg1: Vec<f32>,
+        cfg2: Vec<f32>,
+        cb: Vec<f32>,
+        cc: Vec<f32>,
+        pf: Vec<f32>,
+    }
+
+    fn pack_chunk(chunk: &[ProfileInputs], b: usize) -> ChunkArgs {
+        let mut a = ChunkArgs {
+            cfg1: Vec::with_capacity(b * NCFG),
+            cfg2: Vec::with_capacity(b * NCFG),
+            cb: Vec::with_capacity(b * NC),
+            cc: Vec::with_capacity(b * NC),
+            pf: Vec::with_capacity(b * NPERF),
         };
-        self.executions += 1;
-        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple()?)
+        for inp in chunk {
+            a.cfg1.extend(inp.cfg_l1.iter().map(|&x| x as f32));
+            a.cfg2.extend(inp.cfg_l2.iter().map(|&x| x as f32));
+            a.cb.extend(inp.counters_base.as_f32());
+            a.cc.extend(inp.counters_cim.as_f32());
+            a.pf.extend(inp.perf.iter().map(|&x| x as f32));
+        }
+        for _ in chunk.len()..b {
+            a.cfg1.extend(PAD_CFG_L1);
+            a.cfg2.extend(PAD_CFG_L2);
+            a.cb.extend([0f32; NC]);
+            a.cc.extend([0f32; NC]);
+            a.pf.extend(PAD_PERF);
+        }
+        a
     }
 
-    fn profile_args(&self, chunk: &[ProfileInputs]) -> Result<[xla::Literal; 8]> {
-        let b = self.batch;
-        let a = pack_chunk(chunk, b);
-        Ok([
-            matrix_literal(b, NCFG, &a.cfg1)?,
-            matrix_literal(b, NCFG, &a.cfg2)?,
-            matrix_literal(NTECH, NTECH_PARAMS, &tech_table_f32())?,
-            xla::Literal::vec1(&static_unit_energy_f32()),
-            matrix_literal(NC, NCOMP, &group_matrix_f32())?,
-            matrix_literal(b, NC, &a.cb)?,
-            matrix_literal(b, NC, &a.cc)?,
-            matrix_literal(b, NPERF, &a.pf)?,
-        ])
+    impl PjrtRuntime {
+        /// Default artifact directory: `$EVA_CIM_ARTIFACTS` or repo `artifacts/`.
+        pub fn default_dir() -> PathBuf {
+            super::default_artifacts_dir()
+        }
+
+        /// Load the artifacts and compile them on the PJRT CPU client.
+        pub fn load(dir: &Path) -> Result<Self> {
+            let manifest_path = dir.join("manifest.json");
+            let manifest_text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+            let manifest = json::parse(&manifest_text)
+                .map_err(|e| anyhow!("manifest parse error: {e}"))?;
+            let batch = manifest
+                .get("batch")
+                .and_then(|b| b.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing batch"))?;
+
+            // schema cross-check: the Python and Rust constants must agree
+            for (key, want) in [
+                ("ncfg", NCFG),
+                ("nops", NOPS),
+                ("nc", NC),
+                ("ncomp", NCOMP),
+                ("nperf", NPERF),
+                ("ntech", NTECH),
+                ("ntech_params", NTECH_PARAMS),
+            ] {
+                let got = manifest.get(key).and_then(|v| v.as_usize());
+                if got != Some(want) {
+                    bail!(
+                        "manifest {key}={got:?} but Rust expects {want} — \
+                         regenerate artifacts (make artifacts)"
+                    );
+                }
+            }
+
+            let client = xla::PjRtClient::cpu()?;
+            let profiler = load_exe(&client, &dir.join("profiler.hlo.txt"))?;
+            let energy_model = load_exe(&client, &dir.join("energy_model.hlo.txt"))?;
+            let sensitivity = load_exe(&client, &dir.join("sensitivity.hlo.txt")).ok();
+            Ok(Self { client, profiler, energy_model, sensitivity, batch, executions: 0 })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn run(&mut self, exe_kind: u8, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let exe = match exe_kind {
+                0 => &self.profiler,
+                1 => &self.energy_model,
+                _ => self
+                    .sensitivity
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("sensitivity artifact missing"))?,
+            };
+            self.executions += 1;
+            let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+            Ok(result.to_tuple()?)
+        }
+
+        fn profile_args(&self, chunk: &[ProfileInputs]) -> Result<[xla::Literal; 8]> {
+            let b = self.batch;
+            let a = pack_chunk(chunk, b);
+            Ok([
+                matrix_literal(b, NCFG, &a.cfg1)?,
+                matrix_literal(b, NCFG, &a.cfg2)?,
+                matrix_literal(NTECH, NTECH_PARAMS, &tech_table_f32())?,
+                xla::Literal::vec1(&static_unit_energy_f32()),
+                matrix_literal(NC, NCOMP, &group_matrix_f32())?,
+                matrix_literal(b, NC, &a.cb)?,
+                matrix_literal(b, NC, &a.cc)?,
+                matrix_literal(b, NPERF, &a.pf)?,
+            ])
+        }
+
+        /// Execute the `energy_model` artifact: per-op energies and latencies
+        /// for a batch of design-point rows.
+        pub fn energy_latency(
+            &mut self,
+            rows: &[[f64; NCFG]],
+        ) -> Result<(Vec<[f64; NOPS]>, Vec<[f64; NOPS]>)> {
+            let b = self.batch;
+            let mut energies = Vec::with_capacity(rows.len());
+            let mut lats = Vec::with_capacity(rows.len());
+            for chunk in rows.chunks(b) {
+                let mut flat = Vec::with_capacity(b * NCFG);
+                for r in chunk {
+                    flat.extend(r.iter().map(|&x| x as f32));
+                }
+                for _ in chunk.len()..b {
+                    flat.extend(PAD_CFG_L1);
+                }
+                let cfg = matrix_literal(b, NCFG, &flat)?;
+                let tech = matrix_literal(NTECH, NTECH_PARAMS, &tech_table_f32())?;
+                let outs = self.run(1, &[cfg, tech])?;
+                if outs.len() != 2 {
+                    bail!("energy_model returned {} outputs, want 2", outs.len());
+                }
+                let e: Vec<f32> = outs[0].to_vec()?;
+                let l: Vec<f32> = outs[1].to_vec()?;
+                for i in 0..chunk.len() {
+                    let mut er = [0.0; NOPS];
+                    let mut lr = [0.0; NOPS];
+                    for j in 0..NOPS {
+                        er[j] = e[i * NOPS + j] as f64;
+                        lr[j] = l[i * NOPS + j] as f64;
+                    }
+                    energies.push(er);
+                    lats.push(lr);
+                }
+            }
+            Ok((energies, lats))
+        }
+
+        /// Execute the `profiler` artifact over a set of design points.
+        pub fn evaluate_profile(
+            &mut self,
+            inputs: &[ProfileInputs],
+        ) -> Result<Vec<ProfileResult>> {
+            let mut results = Vec::with_capacity(inputs.len());
+            for chunk in inputs.chunks(self.batch) {
+                let args = self.profile_args(chunk)?;
+                let outs = self.run(0, &args)?;
+                if outs.len() != 12 {
+                    bail!("profiler returned {} outputs, want 12", outs.len());
+                }
+                let vecs: Vec<Vec<f32>> = outs
+                    .iter()
+                    .map(|l| l.to_vec::<f32>())
+                    .collect::<std::result::Result<_, _>>()?;
+                for i in 0..chunk.len() {
+                    let mut r = ProfileResult::default();
+                    for j in 0..NCOMP {
+                        r.comps_base[j] = vecs[0][i * NCOMP + j] as f64;
+                        r.comps_cim[j] = vecs[1][i * NCOMP + j] as f64;
+                    }
+                    r.total_base = vecs[2][i] as f64;
+                    r.total_cim = vecs[3][i] as f64;
+                    r.improvement = vecs[4][i] as f64;
+                    r.speedup = vecs[5][i] as f64;
+                    r.ratio_proc = vecs[6][i] as f64;
+                    r.ratio_cache = vecs[7][i] as f64;
+                    for j in 0..NOPS {
+                        r.e_l1[j] = vecs[8][i * NOPS + j] as f64;
+                        r.lat_l1[j] = vecs[9][i * NOPS + j] as f64;
+                        r.e_l2[j] = vecs[10][i * NOPS + j] as f64;
+                        r.lat_l2[j] = vecs[11][i * NOPS + j] as f64;
+                    }
+                    results.push(r);
+                }
+            }
+            Ok(results)
+        }
+
+        /// Execute the `sensitivity` artifact: d(mean CiM energy)/d(cfg).
+        pub fn sensitivity(
+            &mut self,
+            inputs: &[ProfileInputs],
+        ) -> Result<(Vec<[f64; NCFG]>, Vec<[f64; NCFG]>)> {
+            if self.sensitivity.is_none() {
+                bail!("sensitivity artifact missing");
+            }
+            let mut g1_all = Vec::new();
+            let mut g2_all = Vec::new();
+            for chunk in inputs.chunks(self.batch) {
+                let args = self.profile_args(chunk)?;
+                let outs = self.run(2, &args)?;
+                if outs.len() != 2 {
+                    bail!("sensitivity returned {} outputs, want 2", outs.len());
+                }
+                let g1: Vec<f32> = outs[0].to_vec()?;
+                let g2: Vec<f32> = outs[1].to_vec()?;
+                for i in 0..chunk.len() {
+                    let mut a = [0.0; NCFG];
+                    let mut bb = [0.0; NCFG];
+                    for j in 0..NCFG {
+                        a[j] = g1[i * NCFG + j] as f64;
+                        bb[j] = g2[i * NCFG + j] as f64;
+                    }
+                    g1_all.push(a);
+                    g2_all.push(bb);
+                }
+            }
+            Ok((g1_all, g2_all))
+        }
     }
 
-    /// Execute the `energy_model` artifact: per-op energies and latencies
-    /// for a batch of design-point rows.
-    pub fn energy_latency(
-        &mut self,
-        rows: &[[f64; NCFG]],
-    ) -> Result<(Vec<[f64; NOPS]>, Vec<[f64; NOPS]>)> {
-        let b = self.batch;
-        let mut energies = Vec::with_capacity(rows.len());
-        let mut lats = Vec::with_capacity(rows.len());
-        for chunk in rows.chunks(b) {
-            let mut flat = Vec::with_capacity(b * NCFG);
-            for r in chunk {
-                flat.extend(r.iter().map(|&x| x as f32));
-            }
-            for _ in chunk.len()..b {
-                flat.extend(PAD_CFG_L1);
-            }
-            let cfg = matrix_literal(b, NCFG, &flat)?;
-            let tech = matrix_literal(NTECH, NTECH_PARAMS, &tech_table_f32())?;
-            let outs = self.run(1, &[cfg, tech])?;
-            if outs.len() != 2 {
-                bail!("energy_model returned {} outputs, want 2", outs.len());
-            }
-            let e: Vec<f32> = outs[0].to_vec()?;
-            let l: Vec<f32> = outs[1].to_vec()?;
-            for i in 0..chunk.len() {
-                let mut er = [0.0; NOPS];
-                let mut lr = [0.0; NOPS];
-                for j in 0..NOPS {
-                    er[j] = e[i * NOPS + j] as f64;
-                    lr[j] = l[i * NOPS + j] as f64;
-                }
-                energies.push(er);
-                lats.push(lr);
-            }
+    impl super::Backend for PjrtRuntime {
+        fn evaluate_batch(&mut self, inputs: &[ProfileInputs]) -> Result<Vec<ProfileResult>> {
+            self.evaluate_profile(inputs)
         }
-        Ok((energies, lats))
-    }
 
-    /// Execute the `profiler` artifact over a set of design points.
-    pub fn evaluate_profile(&mut self, inputs: &[ProfileInputs]) -> Result<Vec<ProfileResult>> {
-        let mut results = Vec::with_capacity(inputs.len());
-        for chunk in inputs.chunks(self.batch) {
-            let args = self.profile_args(chunk)?;
-            let outs = self.run(0, &args)?;
-            if outs.len() != 12 {
-                bail!("profiler returned {} outputs, want 12", outs.len());
-            }
-            let vecs: Vec<Vec<f32>> = outs
-                .iter()
-                .map(|l| l.to_vec::<f32>())
-                .collect::<std::result::Result<_, _>>()?;
-            for i in 0..chunk.len() {
-                let mut r = ProfileResult::default();
-                for j in 0..NCOMP {
-                    r.comps_base[j] = vecs[0][i * NCOMP + j] as f64;
-                    r.comps_cim[j] = vecs[1][i * NCOMP + j] as f64;
-                }
-                r.total_base = vecs[2][i] as f64;
-                r.total_cim = vecs[3][i] as f64;
-                r.improvement = vecs[4][i] as f64;
-                r.speedup = vecs[5][i] as f64;
-                r.ratio_proc = vecs[6][i] as f64;
-                r.ratio_cache = vecs[7][i] as f64;
-                for j in 0..NOPS {
-                    r.e_l1[j] = vecs[8][i * NOPS + j] as f64;
-                    r.lat_l1[j] = vecs[9][i * NOPS + j] as f64;
-                    r.e_l2[j] = vecs[10][i * NOPS + j] as f64;
-                    r.lat_l2[j] = vecs[11][i * NOPS + j] as f64;
-                }
-                results.push(r);
-            }
+        fn name(&self) -> &'static str {
+            "pjrt"
         }
-        Ok(results)
-    }
-
-    /// Execute the `sensitivity` artifact: d(mean CiM energy)/d(cfg).
-    pub fn sensitivity(
-        &mut self,
-        inputs: &[ProfileInputs],
-    ) -> Result<(Vec<[f64; NCFG]>, Vec<[f64; NCFG]>)> {
-        if self.sensitivity.is_none() {
-            bail!("sensitivity artifact missing");
-        }
-        let mut g1_all = Vec::new();
-        let mut g2_all = Vec::new();
-        for chunk in inputs.chunks(self.batch) {
-            let args = self.profile_args(chunk)?;
-            let outs = self.run(2, &args)?;
-            if outs.len() != 2 {
-                bail!("sensitivity returned {} outputs, want 2", outs.len());
-            }
-            let g1: Vec<f32> = outs[0].to_vec()?;
-            let g2: Vec<f32> = outs[1].to_vec()?;
-            for i in 0..chunk.len() {
-                let mut a = [0.0; NCFG];
-                let mut bb = [0.0; NCFG];
-                for j in 0..NCFG {
-                    a[j] = g1[i * NCFG + j] as f64;
-                    bb[j] = g2[i * NCFG + j] as f64;
-                }
-                g1_all.push(a);
-                g2_all.push(bb);
-            }
-        }
-        Ok((g1_all, g2_all))
     }
 }
 
-impl Backend for PjrtRuntime {
-    fn evaluate_batch(&mut self, inputs: &[ProfileInputs]) -> Result<Vec<ProfileResult>> {
-        self.evaluate_profile(inputs)
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    use crate::energy::calib::{NCFG, NOPS};
+    use crate::profiler::{ProfileInputs, ProfileResult};
+
+    /// API-compatible stand-in for the PJRT runtime when the `pjrt` feature
+    /// (and its `xla` dependency) is absent. `load` always fails, so no
+    /// other method is reachable on a constructed value.
+    pub struct PjrtRuntime {
+        /// design-point batch the artifacts were lowered at
+        pub batch: usize,
+        /// total PJRT executions issued (perf accounting)
+        pub executions: u64,
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    impl PjrtRuntime {
+        /// Default artifact directory: `$EVA_CIM_ARTIFACTS` or repo `artifacts/`.
+        pub fn default_dir() -> PathBuf {
+            super::default_artifacts_dir()
+        }
+
+        /// Always fails: the binary was built without the `pjrt` feature.
+        pub fn load(_dir: &Path) -> Result<Self> {
+            bail!(
+                "eva-cim was built without the `pjrt` cargo feature; \
+                 rebuild with --features pjrt and an xla checkout to use PJRT"
+            );
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn energy_latency(
+            &mut self,
+            _rows: &[[f64; NCFG]],
+        ) -> Result<(Vec<[f64; NOPS]>, Vec<[f64; NOPS]>)> {
+            bail!("pjrt feature disabled");
+        }
+
+        pub fn evaluate_profile(
+            &mut self,
+            _inputs: &[ProfileInputs],
+        ) -> Result<Vec<ProfileResult>> {
+            bail!("pjrt feature disabled");
+        }
+
+        pub fn sensitivity(
+            &mut self,
+            _inputs: &[ProfileInputs],
+        ) -> Result<(Vec<[f64; NCFG]>, Vec<[f64; NCFG]>)> {
+            bail!("pjrt feature disabled");
+        }
+    }
+
+    impl super::Backend for PjrtRuntime {
+        fn evaluate_batch(&mut self, _inputs: &[ProfileInputs]) -> Result<Vec<ProfileResult>> {
+            bail!("pjrt feature disabled");
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::PjrtRuntime;
 
 /// Load the PJRT backend if artifacts exist, else fall back to native.
 pub fn best_backend(dir: &Path) -> Box<dyn Backend> {

@@ -57,6 +57,28 @@ impl Json {
         }
     }
 
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|x| x as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Build an object from `(key, value)` pairs (keys are sorted by the
+    /// underlying `BTreeMap`, which makes the serialization canonical).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Like [`Json::get`] but with a descriptive error for missing keys.
+    pub fn req(&self, key: &str) -> Result<&Json, String> {
+        self.get(key).ok_or_else(|| format!("missing key '{key}'"))
+    }
+
     /// Serialize compactly.
     pub fn dump(&self) -> String {
         let mut s = String::new();
@@ -99,6 +121,54 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<u32> for Json {
+    fn from(x: u32) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
     }
 }
 
@@ -345,6 +415,17 @@ mod tests {
         assert!(parse("{").is_err());
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
+    }
+
+    #[test]
+    fn obj_builder_is_canonical() {
+        let a = Json::obj(vec![("b", 2u64.into()), ("a", "x".into())]);
+        let b = Json::obj(vec![("a", "x".into()), ("b", 2u64.into())]);
+        assert_eq!(a.dump(), b.dump());
+        assert_eq!(a.dump(), r#"{"a":"x","b":2}"#);
+        assert_eq!(a.req("a").unwrap().as_str(), Some("x"));
+        assert!(a.req("c").is_err());
+        assert_eq!(a.get("b").unwrap().as_u64(), Some(2));
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the subset eva-cim uses: [`Error`] with a context
+//! chain, [`Result`], the [`anyhow!`]/[`bail!`] macros, and the
+//! [`Context`] extension trait.  Display semantics mirror the real crate:
+//! `{}` prints the outermost message, `{:#}` prints the full chain
+//! separated by `: `, and `{:?}` prints a `Caused by:` listing.
+
+use std::fmt;
+
+/// An error with an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: c.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut msgs = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        msgs
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            f.write_str("\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            out = Some(Error { msg, cause: out.map(Box::new) });
+        }
+        out.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("nope");
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+    }
+}
