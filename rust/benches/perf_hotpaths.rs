@@ -1,21 +1,27 @@
 //! Perf bench (§Perf of EXPERIMENTS.md): hot-path throughputs of the three
-//! L3 stages, PJRT-vs-native backend latency per batched evaluation, and
-//! the sweep result cache (warm resume must be ≥10x faster than cold).
+//! L3 stages, streaming-vs-batch pipeline wall-clock, PJRT-vs-native
+//! backend latency per batched evaluation, and the sweep result cache
+//! (warm resume must be ≥10x faster than cold).
 //!
 //! Targets (DESIGN.md §8): simulator ≥ 2 M instr/s, analyzer ≥ 5 M nodes/s,
+//! pipelined sim∥analyze beats sequential materialize-then-analyze,
 //! PJRT amortized by 256-point batching, warm-cache re-sweep ≥ 10x cold.
 //!
 //! `cargo bench --bench perf_hotpaths -- --test` runs every section once
-//! with tiny workloads — the CI smoke mode that keeps this target
-//! compiling and running without spending bench-grade time.
+//! with small workloads — the CI smoke mode.  The smoke includes a
+//! streaming run at an instruction count whose materialized CIQ + IDG
+//! forest would not fit a per-worker memory budget under the old batch
+//! path, asserting the analysis window stays O(loop body).
 
 use std::time::Instant;
 
-use eva_cim::analyzer::{analyze, LocalityRule};
+use eva_cim::analyzer::{analyze, analyze_batch, LocalityRule};
+use eva_cim::asm::Asm;
 use eva_cim::config::{SystemConfig, Technology};
 use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
+use eva_cim::pipeline::run_pipelined;
 use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
-use eva_cim::reshape::reshape;
+use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink};
 use eva_cim::runtime::{NativeBackend, PjrtRuntime};
 use eva_cim::sim::{simulate, Limits};
 use eva_cim::workloads;
@@ -33,6 +39,126 @@ fn repeat(quick: bool, secs: f64, mut body: impl FnMut()) -> (u32, f64) {
         }
     }
     (iters, t0.elapsed().as_secs_f64())
+}
+
+/// A tight convertible loop (memory-resident counter, registers rewritten
+/// every iteration): trace length scales freely, live window does not.
+fn stream_loop(iters: i32) -> eva_cim::asm::Program {
+    let mut a = Asm::new("stream-bench");
+    let buf = a.data.alloc_i32("buf", &[7, 9, 0, 0, 0, 0, 0, 0]);
+    a.li(1, buf as i32);
+    a.li(9, buf as i32 + 16);
+    let top = a.label("top");
+    a.bind(top);
+    a.lw(2, 1, 0);
+    a.lw(3, 1, 4);
+    a.add(4, 2, 3);
+    a.sw(4, 1, 8);
+    a.lw(7, 9, 0);
+    a.addi(7, 7, 1);
+    a.sw(7, 9, 0);
+    a.li(8, iters);
+    a.bne(7, 8, top);
+    a.halt();
+    a.assemble()
+}
+
+/// Streaming vs batch: (a) wall-clock of pipelined sim∥analyze against
+/// sequential materialize → batch-analyze → reshape on the same workload;
+/// (b) a streaming-only run at a scale whose materialized trace would not
+/// fit a bounded per-worker budget.
+fn bench_streaming(quick: bool) {
+    let cfg = SystemConfig::preset("c1").unwrap();
+
+    // --- (a) pipelined vs sequential on identical work -------------------
+    let cmp_iters = if quick { 120_000 } else { 450_000 }; // ~1M / ~4M instrs
+    let prog = stream_loop(cmp_iters);
+
+    // best-of-N wall clocks: a single sample on a shared machine is noise
+    let samples = if quick { 1 } else { 2 };
+    let mut seq = f64::MAX;
+    let mut committed = 0u64;
+    let mut cim_seq = None;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+        let an = analyze_batch(&trace, &cfg, LocalityRule::AnyCache);
+        let r_seq = reshape(&trace, &an.selection, &cfg);
+        seq = seq.min(t0.elapsed().as_secs_f64());
+        committed = trace.committed;
+        cim_seq = Some(r_seq.cim);
+    }
+
+    let mut piped = f64::MAX;
+    let mut peak_window = 0usize;
+    let mut cim_pipe = None;
+    for _ in 0..samples {
+        let t1 = Instant::now();
+        let (summary, outcome, deltas) = run_pipelined(
+            &prog,
+            &cfg,
+            Limits::default(),
+            LocalityRule::AnyCache,
+            DeltaSink::default(),
+            None,
+        )
+        .unwrap();
+        let r_pipe = reshape_from_deltas(&summary, &deltas, &cfg);
+        piped = piped.min(t1.elapsed().as_secs_f64());
+        assert_eq!(summary.committed, committed);
+        peak_window = outcome.peak_window;
+        cim_pipe = Some(r_pipe.cim);
+    }
+
+    assert_eq!(cim_pipe, cim_seq, "streaming must match batch");
+    println!(
+        "[perf] pipeline: sequential batch {:.0} ms -> pipelined streaming \
+         {:.0} ms ({:.2}x) on {:.1} M instrs, window {} ({:.4}% of trace)",
+        seq * 1e3,
+        piped * 1e3,
+        seq / piped.max(1e-9),
+        committed as f64 / 1e6,
+        peak_window,
+        peak_window as f64 / committed as f64 * 100.0
+    );
+    if !quick {
+        // generous margin: the real contract is "overlap never costs";
+        // typical wins are 1.2-1.5x, and CI smoke skips this entirely
+        assert!(
+            piped <= seq * 1.15,
+            "pipelined {piped:.3}s must not be slower than sequential {seq:.3}s"
+        );
+    }
+
+    // --- (b) streaming-only at batch-infeasible scale --------------------
+    let big_iters = if quick { 700_000 } else { 2_700_000 }; // ~6.3M / ~24M
+    let prog = stream_loop(big_iters);
+    let t2 = Instant::now();
+    let (summary, outcome, _) = run_pipelined(
+        &prog,
+        &cfg,
+        Limits { max_instructions: 100_000_000 },
+        LocalityRule::AnyCache,
+        DeltaSink::default(),
+        None,
+    )
+    .unwrap();
+    let secs = t2.elapsed().as_secs_f64();
+    let ciq_mb = summary.committed as f64 * 136.0 / 1e6;
+    println!(
+        "[perf] stream-scale: {:.1} M instrs in {:.1} s ({:.2} M instr/s), \
+         window {} entries vs ~{:.0} MB materialized CIQ under batch",
+        summary.committed as f64 / 1e6,
+        secs,
+        summary.committed as f64 / secs / 1e6,
+        outcome.peak_window,
+        ciq_mb
+    );
+    assert!(
+        outcome.peak_window < 256,
+        "window {} must stay O(loop body)",
+        outcome.peak_window
+    );
 }
 
 fn bench_cache_resume(quick: bool) {
@@ -129,6 +255,9 @@ fn main() {
         "[perf] reshape+native-profile: {:.1} us/design-point",
         rsecs * 1e6 / rruns as f64
     );
+
+    // --- streaming pipeline: pipelined vs batch, and at scale --------------
+    bench_streaming(quick);
 
     // --- sweep result cache: cold vs warm resume ---------------------------
     bench_cache_resume(quick);

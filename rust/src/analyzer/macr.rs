@@ -10,7 +10,7 @@ use crate::probes::{IState, MemLevel};
 use super::select::Selection;
 
 /// MACR metrics for one program/config.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Macr {
     /// total data-side memory accesses (loads + stores) in the trace
     pub total_accesses: u64,

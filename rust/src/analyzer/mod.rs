@@ -1,20 +1,31 @@
 //! The analysis stage — the cornerstone of Eva-CiM (paper §IV).
 //!
+//! * [`stream`] — the online, bounded-window analyzer (the production core)
 //! * [`rut`] — Register Usage Table + Index Hash Table (Algorithm 1 step 1)
 //! * [`idg`] — Instruction Dependency Graph construction (Algorithm 2)
 //! * [`select`] — offloading-candidate partition + locality (Alg. 1 step 3)
 //! * [`macr`] — memory-access conversion ratio (Fig 13 metric)
 //! * [`baseline`] — the compile-time classifier of [23] (Fig 12 comparator)
+//!
+//! [`analyze`] is the batch API: a thin adapter that feeds a materialized
+//! trace through the streaming core.  The legacy whole-forest
+//! implementation survives as [`analyze_batch`] — it is the independent
+//! oracle the streaming path is proven byte-identical against
+//! (`tests/streaming_equivalence.rs`).
 
 pub mod baseline;
 pub mod idg;
 pub mod macr;
 pub mod rut;
 pub mod select;
+pub mod stream;
 
 pub use idg::{build_forest, CimOp, IdgForest};
 pub use macr::Macr;
 pub use select::{select, Candidate, LocalityRule, Selection};
+pub use stream::{
+    CandidateRecord, CandidateSink, CollectCandidates, OnlineAnalyzer, StreamOutcome,
+};
 
 use crate::config::SystemConfig;
 use crate::probes::Trace;
@@ -27,8 +38,42 @@ pub struct Analysis {
     pub idg_nodes: (u64, u64),
 }
 
+/// Assemble the batch-shaped [`Analysis`] from a finished stream: sort the
+/// collected candidates into program order (the batch report order) and
+/// copy the aggregates over.
+pub fn analysis_from_stream(out: StreamOutcome, sink: CollectCandidates) -> Analysis {
+    let mut candidates = sink.candidates;
+    candidates.sort_by_key(|c| c.root_seq);
+    Analysis {
+        selection: Selection {
+            candidates,
+            rejected_locality: out.rejected_locality,
+            rejected_no_loads: out.rejected_no_loads,
+            rejected_dram: out.rejected_dram,
+        },
+        macr: out.macr,
+        idg_nodes: out.idg_nodes,
+    }
+}
+
 /// Run the complete analysis stage on a trace under `cfg`'s CiM placement.
+///
+/// Batch adapter over the streaming core: results are identical to the
+/// legacy [`analyze_batch`], but the analysis itself runs in O(window)
+/// state even though the input here is already materialized.
 pub fn analyze(trace: &Trace, cfg: &SystemConfig, rule: LocalityRule) -> Analysis {
+    let mut oa = OnlineAnalyzer::new(cfg.cim_levels, rule, CollectCandidates::default());
+    for is in &trace.ciq {
+        oa.push(is);
+    }
+    let (out, sink) = oa.finish();
+    analysis_from_stream(out, sink)
+}
+
+/// The legacy batch implementation: build the whole IDG forest, then
+/// select globally.  Kept as the equivalence oracle and reference
+/// implementation of Algorithms 1–2.
+pub fn analyze_batch(trace: &Trace, cfg: &SystemConfig, rule: LocalityRule) -> Analysis {
     let forest = build_forest(&trace.ciq);
     let eligible = forest.nodes.iter().filter(|n| n.eligible).count() as u64;
     let total = forest.nodes.len() as u64;

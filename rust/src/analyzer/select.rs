@@ -46,7 +46,7 @@ impl LocalityRule {
 }
 
 /// One offloading candidate: a connected group of CiM-suitable nodes.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Candidate {
     pub root_seq: u64,
     /// CiM-op instruction seqs removed from the CPU stream (root first)

@@ -1,0 +1,869 @@
+//! Online, bounded-window analysis — the streaming core of the analyzer.
+//!
+//! The batch pipeline (paper Algorithms 1–2) materializes the whole
+//! committed-instruction queue, builds the full IDG forest, then selects
+//! offloading candidates in one global pass.  [`OnlineAnalyzer`] produces
+//! *identical* results (see `tests/streaming_equivalence.rs`) from a
+//! single forward pass over the commit stream, retaining only the *live*
+//! instructions in a slab:
+//!
+//! * **Producer resolution is O(1) and needs no history.**  The RUT/IHT
+//!   pair exists so a consumer can find its operand's producer without
+//!   searching; online, the producer of register `r` is simply the last
+//!   committed write to `r`, tracked in a `last_write` array.  A producer
+//!   is therefore always still *live* (un-overwritten) when consumed, so
+//!   it is always still in the slab.
+//! * **A value's fate is sealed by its overwrite.**  Once the destination
+//!   register of an instruction is rewritten, nothing later in the stream
+//!   can consume it: its consumer summary is final and no future IDG node
+//!   can attach to it.  We call such an entry *closed*; closed entries
+//!   that no claim group needs are freed immediately.
+//! * **Claims only interact inside connected dependency groups.**  The
+//!   batch selector visits eligible roots deepest-first and claims
+//!   subtrees; two roots can only contend when their subtrees share an
+//!   instruction, which makes them members of the same weakly-connected
+//!   group of IDG edges.  The analyzer tracks those groups with a
+//!   union–find over slab entries and *retires* a group — running the
+//!   exact batch selection order over just its members — the moment every
+//!   member is closed.  Retired entries are freed.
+//! * **Consumer lists are summarized, not stored.**  Selection needs a
+//!   node's consumers only to count *outside* consumers and to identify a
+//!   lone absorbable store.  Consumers that can never become tree members
+//!   (stores, branches, non-CiM ops, ineligible nodes) fold into a
+//!   counter plus one sample record, so a base-pointer register consumed
+//!   by every access in a long run costs O(1), not O(trace).
+//!
+//! Peak memory is O(live dependency state): open values, plus claim
+//! groups awaiting their last overwrite.  Loop-structured programs
+//! (registers rewritten every iteration) hold a few dozen entries
+//! regardless of instruction count; the degenerate worst case is one
+//! connected eligible region spanning the whole program — exactly the
+//! case where the batch forest is irreducible too.
+//!
+//! Candidates are announced to a [`CandidateSink`] as they are finalized,
+//! carrying the per-instruction payloads reshaping needs, so downstream
+//! counters fold incrementally and nothing requires the materialized
+//! trace.
+
+use std::collections::HashSet;
+
+use crate::config::CimLevels;
+use crate::probes::{IState, InstrInfo, MemLevel};
+
+use super::idg::{cim_op_of, CimOp};
+use super::macr::Macr;
+use super::select::{Candidate, LocalityRule};
+
+/// One finalized offloading candidate plus the instruction payloads that
+/// reshaping needs (aligned with `candidate.members` / `candidate.loads`).
+pub struct CandidateRecord {
+    pub candidate: Candidate,
+    pub member_infos: Vec<InstrInfo>,
+    pub load_infos: Vec<InstrInfo>,
+    /// payload of `candidate.absorbed_store`, when present
+    pub absorbed: Option<InstrInfo>,
+}
+
+/// Receives candidates as the analyzer finalizes them.
+pub trait CandidateSink {
+    fn on_candidate(&mut self, rec: &CandidateRecord);
+}
+
+/// The adapter sink for the batch API: keep the candidates, drop the
+/// instruction payloads.
+#[derive(Default)]
+pub struct CollectCandidates {
+    pub candidates: Vec<Candidate>,
+}
+
+impl CandidateSink for CollectCandidates {
+    fn on_candidate(&mut self, rec: &CandidateRecord) {
+        self.candidates.push(rec.candidate.clone());
+    }
+}
+
+/// Aggregate analysis results of one stream (everything `analyze`
+/// reports, minus the candidate list — that went to the sink).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamOutcome {
+    pub macr: Macr,
+    /// (total IDG nodes, eligible IDG nodes)
+    pub idg_nodes: (u64, u64),
+    pub candidates: u64,
+    pub rejected_locality: u64,
+    pub rejected_no_loads: u64,
+    pub rejected_dram: u64,
+    /// maximum number of live instructions held at once (the streaming
+    /// window)
+    pub peak_window: usize,
+}
+
+/// Slab index of a live entry.
+type Slot = u32;
+
+/// IDG child edge (the streaming twin of `idg::Child`).  Node edges carry
+/// the child's eligibility so subtree walks never dereference ineligible
+/// children — those may already be freed.
+#[derive(Clone, Copy, Debug)]
+enum SChild {
+    /// immediate / absent / zero-register operand
+    Imm,
+    /// pre-trace register value — not offloadable
+    Init,
+    /// produced by a non-CiM, non-load instruction — not offloadable
+    External,
+    /// leaf load (slot of the load's live entry)
+    Load(Slot),
+    /// another CiM node
+    Node { slot: Slot, eligible: bool },
+}
+
+/// The one consumer record a node retains: the first consumer that can
+/// never become a tree member (the absorbed-store candidate).
+#[derive(Clone, Copy)]
+struct OutsideRec {
+    seq: u64,
+    /// `Some` when that consumer is a store; `data_is_this` marks the
+    /// store's *data* slot (operand 1), the absorbed-store condition.
+    store: Option<StoreUse>,
+}
+
+#[derive(Clone, Copy)]
+struct StoreUse {
+    data_is_this: bool,
+    info: InstrInfo,
+}
+
+/// IDG node payload for a CiM-supported instruction.
+struct NodeData {
+    op: CimOp,
+    children: [SChild; 2],
+    eligible: bool,
+    subtree_loads: u32,
+    /// total consumer edges (one per source slot, like the batch CSR)
+    edges_total: u32,
+    /// consumer seqs that are eligible CiM nodes — the only consumers
+    /// that may end up *inside* a candidate; bounded by the claim group
+    member_edges: Vec<u64>,
+    /// consumer edges that can never be members (stores, branches,
+    /// non-CiM ops, ineligible nodes)
+    outside_count: u32,
+    /// the first such edge — only consulted when `outside_count == 1`
+    first_outside: Option<OutsideRec>,
+}
+
+/// Per-claim-group bookkeeping, stored on the union–find root.
+struct CompData {
+    /// slots of all group members (eligible nodes + their leaf loads)
+    members: Vec<Slot>,
+    /// members whose destination register has not been overwritten yet
+    open_count: u32,
+}
+
+/// One live instruction.
+struct Entry {
+    seq: u64,
+    info: InstrInfo,
+    /// destination register not yet overwritten (value still consumable)
+    open: bool,
+    node: Option<NodeData>,
+    /// member of the claim union–find (eligible node or consumed load)
+    uf_member: bool,
+    /// union–find parent slot (self = root)
+    uf_parent: Slot,
+    /// group payload while this entry is a union–find root
+    comp: Option<Box<CompData>>,
+}
+
+/// The streaming analyzer: a [`crate::probes::TraceSink`] that performs
+/// IDG construction, candidate selection, MACR accounting and candidate
+/// emission online.
+pub struct OnlineAnalyzer<S: CandidateSink> {
+    rule: LocalityRule,
+    cim_levels: CimLevels,
+    sink: S,
+    /// slot of the last committed write per architectural register
+    last_write: [Option<Slot>; crate::isa::NUM_REGS as usize],
+    /// live entries; `None` slots are on the free list
+    slab: Vec<Option<Entry>>,
+    free: Vec<Slot>,
+    live: usize,
+    peak_window: usize,
+    started: bool,
+    next_seq: u64,
+    // aggregates
+    total_nodes: u64,
+    eligible_nodes: u64,
+    macr: Macr,
+    candidate_count: u64,
+    rejected_locality: u64,
+    rejected_no_loads: u64,
+    rejected_dram: u64,
+}
+
+impl<S: CandidateSink> OnlineAnalyzer<S> {
+    pub fn new(cim_levels: CimLevels, rule: LocalityRule, sink: S) -> Self {
+        Self {
+            rule,
+            cim_levels,
+            sink,
+            last_write: [None; crate::isa::NUM_REGS as usize],
+            slab: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            peak_window: 0,
+            started: false,
+            next_seq: 0,
+            total_nodes: 0,
+            eligible_nodes: 0,
+            macr: Macr::default(),
+            candidate_count: 0,
+            rejected_locality: 0,
+            rejected_no_loads: 0,
+            rejected_dram: 0,
+        }
+    }
+
+    #[inline]
+    fn entry(&self, s: Slot) -> &Entry {
+        self.slab[s as usize].as_ref().expect("stale slot")
+    }
+
+    #[inline]
+    fn entry_mut(&mut self, s: Slot) -> &mut Entry {
+        self.slab[s as usize].as_mut().expect("stale slot")
+    }
+
+    fn alloc(&mut self, e: Entry) -> Slot {
+        self.live += 1;
+        self.peak_window = self.peak_window.max(self.live);
+        match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = Some(e);
+                s
+            }
+            None => {
+                self.slab.push(Some(e));
+                (self.slab.len() - 1) as Slot
+            }
+        }
+    }
+
+    fn release(&mut self, s: Slot) {
+        debug_assert!(self.slab[s as usize].is_some(), "double free");
+        self.slab[s as usize] = None;
+        self.free.push(s);
+        self.live -= 1;
+    }
+
+    /// Consume one committed instruction.
+    pub fn push(&mut self, is: &IState) {
+        let seq = is.seq;
+        if self.started {
+            debug_assert_eq!(seq, self.next_seq, "commit stream must be dense");
+        }
+        self.started = true;
+        self.next_seq = seq + 1;
+        let instr = is.instr;
+        let info = InstrInfo::of(is);
+        if is.mem.is_some() {
+            self.macr.total_accesses += 1;
+        }
+        let track = !matches!(self.cim_levels, CimLevels::None);
+
+        // ---- resolve source producers (the online RUT/IHT) ---------------
+        let srcs = instr.sources();
+        let mut producers: [Option<Slot>; 2] = [None, None];
+        for slot in 0..2 {
+            if let Some(r) = srcs[slot] {
+                producers[slot] = self.last_write[r as usize];
+            }
+        }
+
+        // ---- IDG node construction (Algorithm 2, one step) ---------------
+        let mut union_targets: [Option<Slot>; 2] = [None, None];
+        let mut node_eligible = false;
+        let node = cim_op_of(instr.op).map(|op| {
+            let mut children = [SChild::Imm, SChild::Imm];
+            let mut eligible = true;
+            let mut loads = 0u32;
+            for slot in 0..2 {
+                children[slot] = match srcs[slot] {
+                    None => SChild::Imm,
+                    Some(_) => match producers[slot] {
+                        None => {
+                            eligible = false;
+                            SChild::Init
+                        }
+                        Some(p) => {
+                            let pe = self.entry(p);
+                            if pe.info.instr.op.is_load() {
+                                loads += 1;
+                                union_targets[slot] = Some(p);
+                                SChild::Load(p)
+                            } else if let Some(pn) = pe.node.as_ref() {
+                                if pn.eligible {
+                                    loads += pn.subtree_loads;
+                                    union_targets[slot] = Some(p);
+                                } else {
+                                    eligible = false;
+                                }
+                                SChild::Node { slot: p, eligible: pn.eligible }
+                            } else {
+                                eligible = false;
+                                SChild::External
+                            }
+                        }
+                    },
+                };
+            }
+            node_eligible = eligible;
+            NodeData {
+                op,
+                children,
+                eligible,
+                subtree_loads: loads,
+                edges_total: 0,
+                member_edges: Vec::new(),
+                outside_count: 0,
+                first_outside: None,
+            }
+        });
+        if node.is_some() {
+            self.total_nodes += 1;
+            if node_eligible {
+                self.eligible_nodes += 1;
+            }
+        }
+
+        // ---- record consumer edges on producer nodes ---------------------
+        // One edge per source slot, mirroring the batch CSR's duplicates.
+        // Only this instruction's member-candidacy (an *eligible* CiM
+        // node can end up inside a candidate; nothing else can) decides
+        // whether the edge is kept by seq or folded into the summary.
+        let is_member_candidate = node_eligible; // node implied eligible
+        let is_store = instr.op.is_store();
+        for (slot, p) in producers.iter().enumerate() {
+            if let Some(p) = *p {
+                let pe = self.entry_mut(p);
+                if let Some(nd) = pe.node.as_mut() {
+                    nd.edges_total += 1;
+                    if is_member_candidate {
+                        nd.member_edges.push(seq);
+                    } else {
+                        nd.outside_count += 1;
+                        if nd.first_outside.is_none() {
+                            let store = if is_store {
+                                Some(StoreUse { data_is_this: slot == 1, info })
+                            } else {
+                                None
+                            };
+                            nd.first_outside = Some(OutsideRec { seq, store });
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- allocate the live entry if anything can still need it --------
+        let open = instr.dest().is_some();
+        let keep = open || (node_eligible && track);
+        let slot = if keep {
+            Some(self.alloc(Entry {
+                seq,
+                info,
+                open,
+                node,
+                uf_member: false,
+                uf_parent: 0,
+                comp: None,
+            }))
+        } else {
+            None
+        };
+
+        // ---- claim-group wiring (eligible nodes only) ---------------------
+        // With CiM disabled entirely, selection is a no-op in the batch
+        // path too, so no groups ever form and entries die on overwrite.
+        if node_eligible && track {
+            let s = slot.expect("eligible node is always kept");
+            self.uf_add(s);
+            for t in union_targets.into_iter().flatten() {
+                self.uf_add(t);
+                self.uf_union(s, t);
+            }
+            // a value-less eligible node (dest r0, all-immediate
+            // operands) may already be complete
+            let root = self.find(s);
+            if self.entry(root).comp.as_ref().map_or(false, |c| c.open_count == 0) {
+                self.retire(root);
+            }
+        }
+
+        // ---- destination bookkeeping: overwrite closes the old value ------
+        if let Some(rd) = instr.dest() {
+            if let Some(old) = self.last_write[rd as usize] {
+                self.close(old);
+            }
+            self.last_write[rd as usize] = slot;
+        }
+    }
+
+    /// End of stream: every still-open value is dead now; close them all,
+    /// retiring the remaining groups, and hand back the aggregates.
+    pub fn finish(mut self) -> (StreamOutcome, S) {
+        for s in 0..self.slab.len() {
+            if self.slab[s].as_ref().map_or(false, |e| e.open) {
+                self.close(s as Slot);
+            }
+        }
+        debug_assert_eq!(self.live, 0, "all entries must retire at finish");
+        let outcome = StreamOutcome {
+            macr: self.macr,
+            idg_nodes: (self.total_nodes, self.eligible_nodes),
+            candidates: self.candidate_count,
+            rejected_locality: self.rejected_locality,
+            rejected_no_loads: self.rejected_no_loads,
+            rejected_dram: self.rejected_dram,
+            peak_window: self.peak_window,
+        };
+        (outcome, self.sink)
+    }
+
+    // ---- union–find over slab entries ------------------------------------
+
+    fn uf_add(&mut self, s: Slot) {
+        let e = self.entry_mut(s);
+        if !e.uf_member {
+            e.uf_member = true;
+            e.uf_parent = s;
+            let open_count = e.open as u32;
+            e.comp = Some(Box::new(CompData { members: vec![s], open_count }));
+        }
+    }
+
+    fn find(&mut self, s: Slot) -> Slot {
+        let mut root = s;
+        loop {
+            let p = self.entry(root).uf_parent;
+            if p == root {
+                break;
+            }
+            root = p;
+        }
+        // path compression
+        let mut cur = s;
+        while cur != root {
+            let next = self.entry(cur).uf_parent;
+            self.entry_mut(cur).uf_parent = root;
+            cur = next;
+        }
+        root
+    }
+
+    fn uf_union(&mut self, a: Slot, b: Slot) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return;
+        }
+        let la = self.entry(ra).comp.as_ref().map_or(0, |c| c.members.len());
+        let lb = self.entry(rb).comp.as_ref().map_or(0, |c| c.members.len());
+        let (win, lose) = if la >= lb { (ra, rb) } else { (rb, ra) };
+        let lost = self
+            .entry_mut(lose)
+            .comp
+            .take()
+            .expect("losing root without comp");
+        self.entry_mut(lose).uf_parent = win;
+        let wc = self
+            .entry_mut(win)
+            .comp
+            .as_mut()
+            .expect("winning root without comp");
+        wc.members.extend(lost.members);
+        wc.open_count += lost.open_count;
+    }
+
+    /// The destination of `s` was overwritten: its value is dead.
+    fn close(&mut self, s: Slot) {
+        let e = self.entry_mut(s);
+        debug_assert!(e.open, "closing an already-closed entry");
+        e.open = false;
+        let member = e.uf_member;
+        if member {
+            let root = self.find(s);
+            let done = {
+                let comp = self
+                    .entry_mut(root)
+                    .comp
+                    .as_mut()
+                    .expect("live group without comp data");
+                comp.open_count -= 1;
+                comp.open_count == 0
+            };
+            if done {
+                self.retire(root);
+            }
+        } else {
+            // nothing can reference a closed non-member: free it now
+            self.release(s);
+        }
+    }
+
+    // ---- group retirement: the batch selection pass, scoped ---------------
+
+    /// Every member of this group is closed: no future instruction can
+    /// consume or claim any of them, so the candidate partition of the
+    /// group is now decidable.  Visit its eligible roots deepest-first —
+    /// exactly the batch order — with claim sets scoped to the group
+    /// (claims cannot cross groups by construction), then free the
+    /// group's entries.
+    fn retire(&mut self, root: Slot) {
+        let comp = self
+            .entry_mut(root)
+            .comp
+            .take()
+            .expect("retiring a group twice");
+        let mut roots: Vec<Slot> = comp
+            .members
+            .iter()
+            .copied()
+            .filter(|&s| self.entry(s).node.as_ref().map_or(false, |n| n.eligible))
+            .collect();
+        roots.sort_unstable_by_key(|&s| std::cmp::Reverse(self.entry(s).seq));
+        let mut claimed_nodes: HashSet<u64> = HashSet::new();
+        let mut claimed_loads: HashSet<u64> = HashSet::new();
+        for r in roots {
+            self.try_candidate(r, &mut claimed_nodes, &mut claimed_loads);
+        }
+        for &m in &comp.members {
+            self.release(m);
+        }
+    }
+
+    /// One root's selection attempt — a line-for-line mirror of the batch
+    /// `select` loop body (`select.rs`), over live entries.
+    fn try_candidate(
+        &mut self,
+        root: Slot,
+        claimed_nodes: &mut HashSet<u64>,
+        claimed_loads: &mut HashSet<u64>,
+    ) {
+        let root_seq = self.entry(root).seq;
+        if claimed_nodes.contains(&root_seq) {
+            return;
+        }
+        // subtree walk in the exact batch order (LIFO, slot order)
+        let mut member_slots_all: Vec<Slot> = Vec::new();
+        let mut all_load_slots: Vec<Slot> = Vec::new();
+        let mut stack = vec![root];
+        while let Some(s) = stack.pop() {
+            member_slots_all.push(s);
+            let children = self.entry(s).node.as_ref().expect("member is a node").children;
+            for c in children {
+                match c {
+                    SChild::Load(ls) => all_load_slots.push(ls),
+                    SChild::Node { slot, eligible: true } => stack.push(slot),
+                    _ => {}
+                }
+            }
+        }
+        let mut members: Vec<u64> = Vec::with_capacity(member_slots_all.len());
+        let mut member_slots: Vec<Slot> = Vec::with_capacity(member_slots_all.len());
+        for &ms in &member_slots_all {
+            let sq = self.entry(ms).seq;
+            if !claimed_nodes.contains(&sq) {
+                members.push(sq);
+                member_slots.push(ms);
+            }
+        }
+        if members.is_empty() {
+            return;
+        }
+        if all_load_slots.is_empty() {
+            self.rejected_no_loads += 1;
+            return;
+        }
+
+        // ---- locality: where do the leaf operands live? -------------------
+        let mut levels: Vec<MemLevel> = Vec::with_capacity(all_load_slots.len());
+        let mut banks: Vec<u32> = Vec::new();
+        let mut dram = false;
+        for &ls in &all_load_slots {
+            let mem = self.entry(ls).info.mem.expect("load without access info");
+            if mem.level == MemLevel::Dram {
+                dram = true;
+            }
+            levels.push(mem.level);
+            banks.push(mem.bank);
+        }
+        if dram {
+            self.rejected_dram += 1;
+            return;
+        }
+        let deepest = if levels.iter().any(|&l| l == MemLevel::L2) {
+            MemLevel::L2
+        } else {
+            MemLevel::L1
+        };
+        let same_level = levels.iter().all(|&l| l == levels[0]);
+        let same_bank = same_level && banks.iter().all(|&b| b == banks[0]);
+        let ok = match self.rule {
+            LocalityRule::AnyCache => true,
+            LocalityRule::SameLevel => same_level,
+            LocalityRule::SameBank => same_bank,
+        };
+        if !ok {
+            self.rejected_locality += 1;
+            return;
+        }
+
+        // ---- placement: is a CiM array available at that level? -----------
+        let level = if match deepest {
+            MemLevel::L1 => self.cim_levels.l1(),
+            MemLevel::L2 => self.cim_levels.l2(),
+            MemLevel::Dram => false,
+        } {
+            deepest
+        } else if deepest == MemLevel::L2 && self.cim_levels.l1() {
+            MemLevel::L1
+        } else {
+            self.rejected_locality += 1;
+            return;
+        };
+        let exec_is_l2 = level == MemLevel::L2;
+        let moves = levels
+            .iter()
+            .filter(|&&l| (l == MemLevel::L2) != exec_is_l2)
+            .count() as u32;
+
+        // ---- store absorption & readbacks ---------------------------------
+        // `outside` of the batch loop = consumers outside this candidate:
+        // the permanently-outside summary plus any member-candidate edge
+        // whose node did not end up in `members`.
+        let is_member = |sq: u64| members.contains(&sq);
+        let mut absorbed_store: Option<u64> = None;
+        let mut absorbed_info: Option<InstrInfo> = None;
+        let mut readbacks = 0u32;
+        for (i, &ms) in member_slots.iter().enumerate() {
+            let m_seq = members[i];
+            let nd = self.entry(ms).node.as_ref().expect("member is a node");
+            if nd.edges_total == 0 {
+                continue;
+            }
+            let outside_members = nd
+                .member_edges
+                .iter()
+                .filter(|&&cs| !is_member(cs))
+                .count();
+            let total_outside = nd.outside_count as usize + outside_members;
+            let absorbable = m_seq == root_seq
+                && total_outside == 1
+                && nd.outside_count == 1
+                && nd
+                    .first_outside
+                    .as_ref()
+                    .map_or(false, |c| c.store.map_or(false, |su| su.data_is_this))
+                && absorbed_store.is_none();
+            if absorbable {
+                let c = nd.first_outside.as_ref().expect("checked above");
+                absorbed_store = Some(c.seq);
+                absorbed_info = c.store.map(|su| su.info);
+            } else if total_outside > 0 {
+                readbacks += 1;
+            }
+        }
+
+        // ---- claim ---------------------------------------------------------
+        let mut loads: Vec<u64> = Vec::new();
+        let mut load_slots: Vec<Slot> = Vec::new();
+        let mut shared: Vec<u64> = Vec::new();
+        for &ls in &all_load_slots {
+            let sq = self.entry(ls).seq;
+            if claimed_loads.contains(&sq) {
+                shared.push(sq);
+            } else {
+                claimed_loads.insert(sq);
+                loads.push(sq);
+                load_slots.push(ls);
+            }
+        }
+        for &m in &members {
+            claimed_nodes.insert(m);
+        }
+        let ops: Vec<CimOp> = member_slots
+            .iter()
+            .map(|&ms| self.entry(ms).node.as_ref().expect("member is a node").op)
+            .collect();
+
+        // ---- aggregates (the online macr::compute) -------------------------
+        self.macr.cim_ops += members.len() as u64;
+        for &ls in &load_slots {
+            self.macr.convertible += 1;
+            match self.entry(ls).info.mem.expect("load without access info").level {
+                MemLevel::L1 => self.macr.convertible_l1 += 1,
+                _ => self.macr.convertible_other += 1,
+            }
+        }
+        if let Some(info) = &absorbed_info {
+            self.macr.convertible += 1;
+            match info.mem.expect("store without access info").level {
+                MemLevel::L1 => self.macr.convertible_l1 += 1,
+                _ => self.macr.convertible_other += 1,
+            }
+        }
+        self.candidate_count += 1;
+
+        // ---- emit ----------------------------------------------------------
+        let member_infos: Vec<InstrInfo> =
+            member_slots.iter().map(|&ms| self.entry(ms).info).collect();
+        let load_infos: Vec<InstrInfo> =
+            load_slots.iter().map(|&ls| self.entry(ls).info).collect();
+        let rec = CandidateRecord {
+            candidate: Candidate {
+                root_seq,
+                members,
+                loads,
+                shared_loads: shared,
+                absorbed_store,
+                readbacks,
+                moves,
+                level,
+                ops,
+            },
+            member_infos,
+            load_infos,
+            absorbed: absorbed_info,
+        };
+        self.sink.on_candidate(&rec);
+    }
+}
+
+impl<S: CandidateSink> crate::probes::TraceSink for OnlineAnalyzer<S> {
+    fn on_commit(&mut self, is: IState) {
+        self.push(&is);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::config::SystemConfig;
+    use crate::sim::{simulate, Limits};
+
+    fn stream_all(
+        trace: &crate::probes::Trace,
+        cfg: &SystemConfig,
+        rule: LocalityRule,
+    ) -> (StreamOutcome, Vec<Candidate>) {
+        let mut oa =
+            OnlineAnalyzer::new(cfg.cim_levels, rule, CollectCandidates::default());
+        for is in &trace.ciq {
+            oa.push(is);
+        }
+        let (out, sink) = oa.finish();
+        let mut cands = sink.candidates;
+        cands.sort_by_key(|c| c.root_seq);
+        (out, cands)
+    }
+
+    #[test]
+    fn canonical_pattern_selected_online() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3, 4, 0]);
+        a.li(1, buf as i32);
+        a.lw(9, 1, 0); // warm the line
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.sw(4, 1, 8);
+        a.halt();
+        let cfg = SystemConfig::default();
+        let t = simulate(&a.assemble(), &cfg, Limits::default()).unwrap();
+        let (out, cands) = stream_all(&t, &cfg, LocalityRule::AnyCache);
+        assert_eq!(cands.len(), 1);
+        let c = &cands[0];
+        assert_eq!(c.loads.len(), 2);
+        assert!(c.absorbed_store.is_some());
+        assert_eq!(c.readbacks, 0);
+        assert_eq!(out.candidates, 1);
+        assert!(out.macr.ratio() > 0.0);
+    }
+
+    #[test]
+    fn window_stays_bounded_on_loops() {
+        // the loop counter lives in memory, so every register is
+        // rewritten each iteration and the live set must stay O(loop
+        // body) no matter how many iterations run
+        let mut a = Asm::new("loop");
+        let buf = a.data.alloc_i32("buf", &[1, 2, 0, 0, 0, 0, 0, 0]);
+        a.li(1, buf as i32);
+        a.li(9, buf as i32 + 16); // counter cell
+        let top = a.label("top");
+        a.bind(top);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.sw(4, 1, 8);
+        a.lw(7, 9, 0);
+        a.addi(7, 7, 1);
+        a.sw(7, 9, 0);
+        a.li(8, 500);
+        a.bne(7, 8, top);
+        a.halt();
+        let cfg = SystemConfig::default();
+        let t = simulate(&a.assemble(), &cfg, Limits::default()).unwrap();
+        assert!(t.committed > 4000, "committed {}", t.committed);
+        let (out, _) = stream_all(&t, &cfg, LocalityRule::AnyCache);
+        assert!(
+            out.peak_window < 64,
+            "window {} should not scale with the {}-instruction trace",
+            out.peak_window,
+            t.committed
+        );
+    }
+
+    #[test]
+    fn base_pointer_consumers_stay_o1() {
+        // a base register consumed by every access must not accumulate
+        // per-consumer state: its node folds consumers into a counter
+        let mut a = Asm::new("base");
+        let buf = a.data.alloc_i32("buf", &[0; 64]);
+        a.li(1, buf as i32);
+        for k in 0..200 {
+            a.lw(2, 1, (k % 16) * 4);
+        }
+        a.halt();
+        let cfg = SystemConfig::default();
+        let t = simulate(&a.assemble(), &cfg, Limits::default()).unwrap();
+        let (out, _) = stream_all(&t, &cfg, LocalityRule::AnyCache);
+        // live set: the li node + at most two in-flight loads
+        assert!(out.peak_window < 8, "window {}", out.peak_window);
+    }
+
+    #[test]
+    fn cim_none_emits_nothing_but_still_counts() {
+        let mut a = Asm::new("t");
+        let buf = a.data.alloc_i32("buf", &[3, 4, 0]);
+        a.li(1, buf as i32);
+        a.lw(2, 1, 0);
+        a.lw(3, 1, 4);
+        a.add(4, 2, 3);
+        a.sw(4, 1, 8);
+        a.halt();
+        let mut cfg = SystemConfig::default();
+        cfg.cim_levels = CimLevels::None;
+        let t = simulate(&a.assemble(), &cfg, Limits::default()).unwrap();
+        let (out, cands) = stream_all(&t, &cfg, LocalityRule::AnyCache);
+        assert!(cands.is_empty());
+        assert_eq!(out.candidates, 0);
+        assert_eq!(
+            out.rejected_no_loads + out.rejected_locality + out.rejected_dram,
+            0
+        );
+        assert!(out.idg_nodes.0 > 0, "node counting is placement-independent");
+        assert_eq!(out.macr.total_accesses, 3);
+    }
+}

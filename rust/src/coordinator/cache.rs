@@ -25,6 +25,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::{self, Json};
+use crate::util::lock_unpoisoned;
 
 use super::persist;
 use super::SweepRow;
@@ -107,13 +108,18 @@ impl ResultCache {
 
     /// Append one computed row. Flushed immediately so a crash loses at
     /// most the in-flight line.
+    ///
+    /// The writer lock is poison-tolerant: a worker that panicked while
+    /// appending leaves at most one truncated line, which `load` already
+    /// skips — the surviving workers must keep appending rather than
+    /// cascade the panic across the sweep pool.
     pub fn append(&self, key: &str, row: &SweepRow) -> Result<()> {
         let line = Json::obj(vec![
             ("key", key.into()),
             ("row", persist::row_to_json(row)),
         ])
         .dump();
-        let mut f = self.writer.lock().unwrap();
+        let mut f = lock_unpoisoned(&self.writer);
         writeln!(f, "{line}").context("appending to result cache")?;
         f.flush().context("flushing result cache")?;
         Ok(())
@@ -191,6 +197,25 @@ mod tests {
         let mut text = std::fs::read_to_string(&path).unwrap();
         text.push_str("{\"key\":\"k2\",\"row\":{\"bench\"");
         std::fs::write(&path, text).unwrap();
+        let rows = cache.load().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows.contains_key("k1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_survives_a_poisoned_writer_lock() {
+        let dir = tmp_dir("poison");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = std::sync::Arc::new(ResultCache::open(&dir).unwrap());
+        let c2 = std::sync::Arc::clone(&cache);
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.writer.lock().unwrap();
+            panic!("worker dies while holding the writer lock");
+        })
+        .join();
+        assert!(cache.writer.lock().is_err(), "lock should be poisoned");
+        cache.append("k1", &row("lcs")).unwrap();
         let rows = cache.load().unwrap();
         assert_eq!(rows.len(), 1);
         assert!(rows.contains_key("k1"));

@@ -3,13 +3,18 @@
 //! The coordinator is the leader of a worker pool: simulation + analysis +
 //! reshaping jobs (CPU-bound, trace-heavy) fan out across `std::thread`
 //! workers that pull deterministic point-chunks from a shared
-//! work-stealing queue ([`shard`]), traces are memoized per (benchmark,
-//! core/cache geometry) in memory and spilled to disk ([`trace_store`]) so
-//! the same trace serves every technology and CiM-placement variant across
-//! *processes*, and completed design points are persisted to an
-//! append-only JSONL result cache ([`cache`]) keyed by a stable content
-//! hash ([`key`]) of `(bench, scale, seed, SystemConfig, LocalityRule,
-//! backend)`.
+//! work-stealing queue ([`shard`]).  Each point runs the *streaming*
+//! pipeline: a simulator thread commits I-states into a bounded channel
+//! and the online analyzer folds them into reshape deltas on the fly
+//! ([`crate::pipeline`]), so peak memory per point is O(analysis window),
+//! not O(trace).  With a cache directory, traces spill to disk in chunks
+//! through the same sink interface ([`trace_store`]) and later
+//! technology/placement variants *replay* them chunk-by-chunk — across
+//! processes; without one, the legacy in-memory memo keeps materialized
+//! traces so variants still share one simulation.  Completed design
+//! points are persisted to an append-only JSONL result cache ([`cache`])
+//! keyed by a stable content hash ([`key`]) of `(bench, scale, seed,
+//! SystemConfig, LocalityRule, backend)`.
 //! A resumed sweep — or any superset of a prior sweep — recomputes only
 //! the missing points and returns rows byte-identical to a cold run
 //! ([`persist`] keeps the serialization canonical).
@@ -32,13 +37,15 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::analyzer::{analyze, LocalityRule, Macr};
+use crate::analyzer::{LocalityRule, Macr, OnlineAnalyzer, StreamOutcome};
 use crate::config::SystemConfig;
-use crate::probes::Trace;
+use crate::pipeline;
+use crate::probes::{CollectSink, Trace, TraceSummary};
 use crate::profiler::{ProfileInputs, ProfileResult};
-use crate::reshape::reshape;
+use crate::reshape::{reshape_from_deltas, DeltaSink};
 use crate::runtime::Backend;
-use crate::sim::{simulate, Limits};
+use crate::sim::Limits;
+use crate::util::lock_unpoisoned;
 use crate::workloads;
 
 use cache::ResultCache;
@@ -103,7 +110,7 @@ impl Default for SweepOptions {
     }
 }
 
-/// What a sweep actually did — the cache-effectiveness ledger.
+/// What a sweep actually did — the cache-effectiveness and scale ledger.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SweepStats {
     pub points: usize,
@@ -119,6 +126,36 @@ pub struct SweepStats {
     pub trace_disk_hits: u64,
     /// work-stealing chunks claimed by the worker pool
     pub chunks_claimed: u64,
+    /// largest online-analysis window over all staged points (instructions)
+    pub peak_window: u64,
+    /// longest trace analyzed (committed instructions)
+    pub longest_trace: u64,
+    /// process peak RSS in KiB at sweep end (0 when unavailable)
+    pub peak_rss_kb: u64,
+}
+
+/// One-line human rendering of the interesting ledger entries, shared by
+/// the `sweep` and `table` CLI paths.
+pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
+    format!(
+        "{} design points in {:.2}s ({} cached, {} computed, {} simulated, \
+         {} chunks) | scale: longest trace {} instrs, peak window {} \
+         ({:.4}% of trace), peak RSS {} MiB",
+        stats.points,
+        secs,
+        stats.rows_from_cache,
+        stats.rows_computed,
+        stats.simulator_runs,
+        stats.chunks_claimed,
+        stats.longest_trace,
+        stats.peak_window,
+        if stats.longest_trace > 0 {
+            stats.peak_window as f64 / stats.longest_trace as f64 * 100.0
+        } else {
+            0.0
+        },
+        stats.peak_rss_kb / 1024,
+    )
 }
 
 /// Shared atomic counters the worker pool updates while staging.
@@ -128,6 +165,8 @@ struct StageCounters {
     trace_mem_hits: AtomicU64,
     trace_disk_hits: AtomicU64,
     chunks_claimed: AtomicU64,
+    peak_window: AtomicU64,
+    longest_trace: AtomicU64,
 }
 
 /// The sweep driver.
@@ -206,20 +245,38 @@ impl Coordinator {
                             counters.chunks_claimed.fetch_add(1, Ordering::Relaxed);
                             for ti in range {
                                 let p = &points[todo[ti]];
-                                match Self::stage_point(
-                                    p,
-                                    opts,
-                                    &memo,
-                                    traces.as_ref(),
-                                    &counters,
-                                ) {
-                                    Ok(pair) => {
-                                        staged.lock().unwrap()[ti] = Some(pair);
+                                // A panicking design point must not take
+                                // the pool down: contain it, report it as
+                                // a sweep failure, and keep the other
+                                // workers staging (the shared mutexes are
+                                // poison-tolerant, see `lock_unpoisoned`).
+                                let result = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        Self::stage_point(
+                                            p,
+                                            opts,
+                                            &memo,
+                                            traces.as_ref(),
+                                            &counters,
+                                        )
+                                    }),
+                                );
+                                match result {
+                                    Ok(Ok(pair)) => {
+                                        lock_unpoisoned(&staged)[ti] = Some(pair);
                                     }
-                                    Err(e) => {
-                                        errors.lock().unwrap().push(format!(
+                                    Ok(Err(e)) => {
+                                        lock_unpoisoned(&errors).push(format!(
                                             "{}/{}: {e:#}",
                                             p.bench, p.config.name
+                                        ));
+                                    }
+                                    Err(payload) => {
+                                        lock_unpoisoned(&errors).push(format!(
+                                            "{}/{}: worker panicked: {}",
+                                            p.bench,
+                                            p.config.name,
+                                            panic_message(&payload)
                                         ));
                                     }
                                 }
@@ -229,13 +286,13 @@ impl Coordinator {
                 }
             });
 
-            let errors = errors.into_inner().unwrap();
+            let errors = errors.into_inner().unwrap_or_else(|p| p.into_inner());
             if !errors.is_empty() {
                 return Err(anyhow!("sweep failures: {}", errors.join("; ")));
             }
             let staged: Vec<(SweepRow, ProfileInputs)> = staged
                 .into_inner()
-                .unwrap()
+                .unwrap_or_else(|p| p.into_inner())
                 .into_iter()
                 .map(|o| o.expect("staged point missing"))
                 .collect();
@@ -267,6 +324,9 @@ impl Coordinator {
         stats.trace_mem_hits = counters.trace_mem_hits.load(Ordering::Relaxed);
         stats.trace_disk_hits = counters.trace_disk_hits.load(Ordering::Relaxed);
         stats.chunks_claimed = counters.chunks_claimed.load(Ordering::Relaxed);
+        stats.peak_window = counters.peak_window.load(Ordering::Relaxed);
+        stats.longest_trace = counters.longest_trace.load(Ordering::Relaxed);
+        stats.peak_rss_kb = crate::util::stats::peak_rss_kb();
 
         let rows = slots
             .into_iter()
@@ -275,6 +335,16 @@ impl Coordinator {
         Ok((rows, stats))
     }
 
+    /// Stage one design point through the streaming pipeline.
+    ///
+    /// Trace acquisition, cheapest first:
+    /// 1. the in-memory memo (populated only when no cache dir is set) —
+    ///    stream-analyze the materialized CIQ in place;
+    /// 2. the on-disk spill store — *replay* the trace chunk-by-chunk
+    ///    into the online analyzer, never materializing it;
+    /// 3. simulate, pipelined: the simulator runs on its own thread while
+    ///    this thread analyzes, teeing records into a chunked disk spill
+    ///    (with a cache dir) or a collect sink feeding the memo (without).
     fn stage_point(
         p: &SweepPoint,
         opts: &SweepOptions,
@@ -283,59 +353,130 @@ impl Coordinator {
         counters: &StageCounters,
     ) -> Result<(SweepRow, ProfileInputs)> {
         let tkey = key::trace_key(&p.bench, &p.config, opts);
-        let cached = memo.lock().unwrap().get(&tkey).cloned();
-        let trace = match cached {
-            Some(t) => {
-                counters.trace_mem_hits.fetch_add(1, Ordering::Relaxed);
-                t
+
+        // 1) in-memory memo
+        let cached = lock_unpoisoned(memo).get(&tkey).cloned();
+        if let Some(t) = cached {
+            counters.trace_mem_hits.fetch_add(1, Ordering::Relaxed);
+            let mut analyzer =
+                OnlineAnalyzer::new(p.config.cim_levels, p.rule, DeltaSink::default());
+            for is in &t.ciq {
+                analyzer.push(is);
             }
-            None => {
-                let t = match disk.and_then(|d| d.load(&tkey)) {
-                    Some(t) => {
-                        counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
-                        Arc::new(t)
-                    }
-                    None => {
-                        let prog = workloads::build(&p.bench, opts.scale, opts.seed)
-                            .ok_or_else(|| {
-                                anyhow!("unknown benchmark '{}'", p.bench)
-                            })?;
-                        counters.simulator_runs.fetch_add(1, Ordering::Relaxed);
-                        let t = simulate(
-                            &prog,
-                            &p.config,
-                            Limits { max_instructions: opts.max_instructions },
-                        )?;
-                        if let Some(d) = disk {
-                            // best-effort spill: a full disk must not fail
-                            // the sweep, only future reuse
-                            if let Err(e) = d.store(&tkey, &t) {
-                                eprintln!("warning: trace spill failed: {e:#}");
-                            }
-                        }
-                        Arc::new(t)
-                    }
-                };
-                memo.lock().unwrap().insert(tkey, t.clone());
-                t
+            let (outcome, deltas) = analyzer.finish();
+            return Ok(Self::assemble_point(p, &t.summary(), &outcome, &deltas, counters));
+        }
+
+        // 2) disk replay (O(chunk) memory)
+        if let Some(d) = disk {
+            let mut analyzer =
+                OnlineAnalyzer::new(p.config.cim_levels, p.rule, DeltaSink::default());
+            if let Some(summary) = d.replay(&tkey, &mut analyzer) {
+                counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
+                let (outcome, deltas) = analyzer.finish();
+                return Ok(Self::assemble_point(p, &summary, &outcome, &deltas, counters));
             }
-        };
-        let analysis = analyze(&trace, &p.config, p.rule);
-        let reshaped = reshape(&trace, &analysis.selection, &p.config);
+            // corrupt/missing spill: the analyzer may have consumed partial
+            // records — discard it and fall through to a fresh simulation
+        }
+
+        // 3) pipelined simulate + analyze
+        let prog = workloads::build(&p.bench, opts.scale, opts.seed)
+            .ok_or_else(|| anyhow!("unknown benchmark '{}'", p.bench))?;
+        counters.simulator_runs.fetch_add(1, Ordering::Relaxed);
+        let limits = Limits { max_instructions: opts.max_instructions };
+
+        if let Some(d) = disk {
+            // best-effort spill: a full disk must not fail the sweep, only
+            // future reuse
+            match d.writer(&tkey) {
+                Ok(mut spill) => {
+                    let (summary, outcome, deltas) = pipeline::run_pipelined(
+                        &prog,
+                        &p.config,
+                        limits,
+                        p.rule,
+                        DeltaSink::default(),
+                        Some(&mut spill),
+                    )?;
+                    if let Err(e) = spill.finish(&summary) {
+                        eprintln!("warning: trace spill failed: {e:#}");
+                    }
+                    Ok(Self::assemble_point(p, &summary, &outcome, &deltas, counters))
+                }
+                Err(e) => {
+                    eprintln!("warning: trace spill failed: {e:#}");
+                    let (summary, outcome, deltas) = pipeline::run_pipelined(
+                        &prog,
+                        &p.config,
+                        limits,
+                        p.rule,
+                        DeltaSink::default(),
+                        None,
+                    )?;
+                    Ok(Self::assemble_point(p, &summary, &outcome, &deltas, counters))
+                }
+            }
+        } else {
+            // no disk: materialize via a tee so the memo can serve the
+            // other tech/placement variants of this geometry (the legacy
+            // memory profile — bounded-memory sweeps want a cache dir)
+            let mut collect = CollectSink::default();
+            let (summary, outcome, deltas) = pipeline::run_pipelined(
+                &prog,
+                &p.config,
+                limits,
+                p.rule,
+                DeltaSink::default(),
+                Some(&mut collect),
+            )?;
+            let staged = Self::assemble_point(p, &summary, &outcome, &deltas, counters);
+            let trace = Arc::new(Trace::from_parts(summary, collect.ciq));
+            lock_unpoisoned(memo).insert(tkey, trace);
+            Ok(staged)
+        }
+    }
+
+    /// Fold a finished stream into the sweep row + profiler inputs.
+    fn assemble_point(
+        p: &SweepPoint,
+        summary: &TraceSummary,
+        outcome: &StreamOutcome,
+        deltas: &DeltaSink,
+        counters: &StageCounters,
+    ) -> (SweepRow, ProfileInputs) {
+        counters
+            .peak_window
+            .fetch_max(outcome.peak_window as u64, Ordering::Relaxed);
+        counters
+            .longest_trace
+            .fetch_max(summary.committed, Ordering::Relaxed);
+        let reshaped = reshape_from_deltas(summary, deltas, &p.config);
         let inputs = ProfileInputs::new(&p.config, &reshaped);
         let row = SweepRow {
             bench: p.bench.clone(),
             config_name: p.config.name.clone(),
             tech: p.config.tech,
             cim_levels: p.config.cim_levels,
-            macr: analysis.macr,
-            committed: trace.committed,
-            cycles: trace.cycles,
+            macr: outcome.macr,
+            committed: summary.committed,
+            cycles: summary.cycles,
             removed: reshaped.removed,
             cim_ops: reshaped.cim_op_count,
             result: ProfileResult::default(),
         };
-        Ok((row, inputs))
+        (row, inputs)
+    }
+}
+
+/// Best-effort rendering of a contained worker panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
     }
 }
 

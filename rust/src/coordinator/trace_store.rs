@@ -6,22 +6,45 @@
 //! the same trace serve every tech/placement variant *across processes*,
 //! not just within one coordinator's in-memory memo.
 //!
-//! Format: a versioned little-endian binary stream (no third-party
-//! serialization crates exist in this environment).  Loads are
-//! best-effort: any corruption is treated as a cache miss and the trace is
-//! re-simulated and re-written.
+//! Format (version 2, chunked): a versioned little-endian binary stream
+//! (no third-party serialization crates exist in this environment):
+//!
+//! ```text
+//! magic  version
+//! (count>0, count × I-state record)*      — committed instructions, chunked
+//! 0u32                                    — chunk terminator
+//! program cycles committed stop pipe fu mem   — the TraceSummary trailer
+//! ```
+//!
+//! The chunked layout serves the streaming pipeline on both sides: a
+//! [`SpillWriter`] is a [`TraceSink`] that writes records as the simulator
+//! commits them (the summary trailer lands in `finish`), and
+//! [`TraceStore::replay`] feeds a sink chunk-by-chunk without ever
+//! materializing the trace — both O(chunk) memory.  Loads are
+//! best-effort: any corruption (or a version-1 file from an older build)
+//! is treated as a cache miss and the trace is re-simulated and
+//! re-written.
 
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::isa::{FuncUnit, Instruction};
 use crate::probes::{
-    IState, MemAccessInfo, MemLevel, MemStats, PipeStats, StopReason, Trace,
+    CollectSink, IState, MemAccessInfo, MemLevel, MemStats, PipeStats,
+    StopReason, Trace, TraceSink, TraceSummary,
 };
 
 const MAGIC: u32 = 0x4543_5452; // "ECTR"
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// Records per chunk: bounds both writer batching and replay memory.
+const CHUNK_RECORDS: u32 = 4096;
+
+/// Upper bound accepted for on-disk chunk counts and string lengths —
+/// anything larger is corruption, not data.
+const SANITY_LIMIT: u32 = 1 << 24;
 
 /// A directory of spilled traces, addressed by content-hash key.
 pub struct TraceStore {
@@ -39,23 +62,156 @@ impl TraceStore {
         self.dir.join(format!("trace-{key}.bin"))
     }
 
-    /// Load a spilled trace; any missing/corrupt file is a miss.
-    pub fn load(&self, key: &str) -> Option<Trace> {
-        let bytes = std::fs::read(self.path_for(key)).ok()?;
-        decode(&bytes).ok()
+    /// Stream a spilled trace into `sink` chunk-by-chunk; returns the
+    /// summary trailer on success.  Any missing/corrupt/old-version file
+    /// is a miss (`None`) — note the sink may already have consumed
+    /// records by then, so treat its state as tainted on a miss.
+    pub fn replay(&self, key: &str, sink: &mut dyn TraceSink) -> Option<TraceSummary> {
+        let f = std::fs::File::open(self.path_for(key)).ok()?;
+        let mut src = FileSource { r: BufReader::new(f) };
+        decode_stream(&mut src, sink).ok()
     }
 
-    /// Spill a trace. Written to a temp file and renamed, so concurrent
-    /// processes never observe a half-written trace.
-    pub fn store(&self, key: &str, trace: &Trace) -> Result<()> {
-        let bytes = encode(trace);
+    /// Load a spilled trace, materialized; any missing/corrupt file is a
+    /// miss.
+    pub fn load(&self, key: &str) -> Option<Trace> {
+        let mut sink = CollectSink::default();
+        let summary = self.replay(key, &mut sink)?;
+        Some(Trace::from_parts(summary, sink.ciq))
+    }
+
+    /// Open a streaming spill for `key`.  Feed it as a [`TraceSink`], then
+    /// call [`SpillWriter::finish`] with the simulation summary; the trace
+    /// is written to a temp file and renamed, so concurrent processes
+    /// never observe a half-written trace.  Dropping without `finish`
+    /// discards the temp file.
+    ///
+    /// The temp name carries a per-writer token on top of the pid: two
+    /// sweep workers cold-spilling the same trace key concurrently (same
+    /// geometry, different tech variants) must not truncate each other's
+    /// in-progress file — last rename wins, both files stay intact.
+    pub fn writer(&self, key: &str) -> Result<SpillWriter> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static WRITER_TOKEN: AtomicU64 = AtomicU64::new(0);
+        let token = WRITER_TOKEN.fetch_add(1, Ordering::Relaxed);
         let tmp = self
             .dir
-            .join(format!("trace-{key}.tmp.{}", std::process::id()));
-        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
-        std::fs::rename(&tmp, self.path_for(key))
-            .with_context(|| format!("publishing trace {key}"))?;
-        Ok(())
+            .join(format!("trace-{key}.tmp.{}.{token}", std::process::id()));
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        let mut w = SpillWriter {
+            tmp,
+            final_path: self.path_for(key),
+            file: Some(BufWriter::new(file)),
+            chunk: Vec::new(),
+            pending: 0,
+            error: None,
+            finished: false,
+        };
+        let mut header = Writer { buf: Vec::with_capacity(8) };
+        header.u32(MAGIC);
+        header.u32(VERSION);
+        w.write_bytes(&header.buf);
+        Ok(w)
+    }
+
+    /// Spill a materialized trace (adapter over [`TraceStore::writer`]).
+    pub fn store(&self, key: &str, trace: &Trace) -> Result<()> {
+        let mut w = self.writer(key)?;
+        for is in &trace.ciq {
+            w.on_commit(is.clone());
+        }
+        w.finish(&trace.summary())
+    }
+}
+
+/// Streaming trace spill: a [`TraceSink`] writing chunk-framed records.
+/// IO errors are held internally (a full disk must not fail the sweep,
+/// only future reuse) and surfaced by [`SpillWriter::finish`].
+pub struct SpillWriter {
+    tmp: PathBuf,
+    final_path: PathBuf,
+    file: Option<BufWriter<std::fs::File>>,
+    chunk: Vec<u8>,
+    pending: u32,
+    error: Option<String>,
+    finished: bool,
+}
+
+impl SpillWriter {
+    fn write_bytes(&mut self, bytes: &[u8]) {
+        if self.error.is_some() {
+            return;
+        }
+        let Some(f) = self.file.as_mut() else { return };
+        if let Err(e) = f.write_all(bytes) {
+            self.error = Some(e.to_string());
+            self.file = None;
+        }
+    }
+
+    fn flush_chunk(&mut self) {
+        if self.pending == 0 {
+            return;
+        }
+        let count = self.pending.to_le_bytes();
+        let mut chunk = std::mem::take(&mut self.chunk);
+        self.pending = 0;
+        self.write_bytes(&count);
+        self.write_bytes(&chunk);
+        chunk.clear();
+        self.chunk = chunk; // reuse the allocation
+    }
+
+    /// Seal the spill with the summary trailer and publish it atomically.
+    pub fn finish(mut self, summary: &TraceSummary) -> Result<()> {
+        self.flush_chunk();
+        let mut tail = Writer { buf: Vec::with_capacity(256) };
+        tail.u32(0); // chunk terminator
+        tail.summary(summary);
+        self.write_bytes(&tail.buf);
+        if self.error.is_none() {
+            if let Some(f) = self.file.as_mut() {
+                if let Err(e) = f.flush() {
+                    self.error = Some(e.to_string());
+                }
+            }
+        }
+        self.file = None; // close before rename
+        if let Some(e) = self.error.take() {
+            // Drop removes the temp file
+            return Err(anyhow!("writing trace spill: {e}"));
+        }
+        let res = std::fs::rename(&self.tmp, &self.final_path)
+            .with_context(|| format!("publishing trace {:?}", self.final_path));
+        if res.is_ok() {
+            self.finished = true;
+        }
+        res
+    }
+}
+
+impl TraceSink for SpillWriter {
+    fn on_commit(&mut self, is: IState) {
+        if self.error.is_some() {
+            return;
+        }
+        let mut w = Writer { buf: std::mem::take(&mut self.chunk) };
+        w.istate(&is);
+        self.chunk = w.buf;
+        self.pending += 1;
+        if self.pending >= CHUNK_RECORDS {
+            self.flush_chunk();
+        }
+    }
+}
+
+impl Drop for SpillWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.file = None;
+            let _ = std::fs::remove_file(&self.tmp);
+        }
     }
 }
 
@@ -80,41 +236,230 @@ impl Writer {
         self.u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
     }
+
+    fn istate(&mut self, is: &IState) {
+        self.u64(is.seq);
+        self.u32(is.pc);
+        self.u64(is.instr.encode());
+        self.u8(is.fu as u8);
+        self.u64(is.tick_fetch);
+        self.u64(is.tick_decode);
+        self.u64(is.tick_rename);
+        self.u64(is.tick_dispatch);
+        self.u64(is.tick_issue);
+        self.u64(is.tick_complete);
+        self.u64(is.tick_commit);
+        match &is.mem {
+            None => self.u8(0),
+            Some(m) => {
+                self.u8(1);
+                self.u32(m.addr);
+                self.u8(m.size);
+                self.u8(m.is_store as u8);
+                self.u8(level_to_u8(m.level));
+                self.u32(m.bank);
+                self.u8(m.l1_hit as u8);
+                self.u8(m.l2_hit as u8);
+                self.u8(m.mshr_merged as u8);
+                self.u64(m.latency);
+                self.u64(m.issue_tick);
+            }
+        }
+    }
+
+    fn summary(&mut self, s: &TraceSummary) {
+        self.str(&s.program);
+        self.u64(s.cycles);
+        self.u64(s.committed);
+        self.u8(stop_to_u8(s.stop));
+        for x in pipe_fields(&s.pipe) {
+            self.u64(x);
+        }
+        for x in s.pipe.fu_counts {
+            self.u64(x);
+        }
+        for x in mem_fields(&s.mem) {
+            self.u64(x);
+        }
+    }
 }
 
-struct Reader<'a> {
+/// Byte source abstraction so the same decoder serves in-memory slices
+/// (tests, `decode`) and buffered files (`replay`) without materializing.
+trait ByteSource {
+    fn fill(&mut self, buf: &mut [u8]) -> Result<(), String>;
+    /// True when the source is exhausted (trailing bytes are corruption).
+    fn at_end(&mut self) -> Result<bool, String>;
+}
+
+struct SliceSource<'a> {
     b: &'a [u8],
     i: usize,
 }
 
-impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+impl ByteSource for SliceSource<'_> {
+    fn fill(&mut self, buf: &mut [u8]) -> Result<(), String> {
         let end = self
             .i
-            .checked_add(n)
+            .checked_add(buf.len())
             .filter(|&e| e <= self.b.len())
             .ok_or_else(|| format!("truncated trace at byte {}", self.i))?;
-        let s = &self.b[self.i..end];
+        buf.copy_from_slice(&self.b[self.i..end]);
         self.i = end;
-        Ok(s)
+        Ok(())
     }
 
-    fn u8(&mut self) -> Result<u8, String> {
-        Ok(self.take(1)?[0])
+    fn at_end(&mut self) -> Result<bool, String> {
+        Ok(self.i == self.b.len())
+    }
+}
+
+struct FileSource {
+    r: BufReader<std::fs::File>,
+}
+
+impl ByteSource for FileSource {
+    fn fill(&mut self, buf: &mut [u8]) -> Result<(), String> {
+        self.r.read_exact(buf).map_err(|e| format!("reading trace: {e}"))
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    fn at_end(&mut self) -> Result<bool, String> {
+        let mut probe = [0u8; 1];
+        match self.r.read(&mut probe) {
+            Ok(0) => Ok(true),
+            Ok(_) => Ok(false),
+            Err(e) => Err(format!("reading trace: {e}")),
+        }
     }
+}
 
-    fn u64(&mut self) -> Result<u64, String> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
+fn r_u8<S: ByteSource>(s: &mut S) -> Result<u8, String> {
+    let mut b = [0u8; 1];
+    s.fill(&mut b)?;
+    Ok(b[0])
+}
 
-    fn str(&mut self) -> Result<String, String> {
-        let n = self.u32()? as usize;
-        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| "bad utf8".to_string())
+fn r_u32<S: ByteSource>(s: &mut S) -> Result<u32, String> {
+    let mut b = [0u8; 4];
+    s.fill(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64<S: ByteSource>(s: &mut S) -> Result<u64, String> {
+    let mut b = [0u8; 8];
+    s.fill(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_str<S: ByteSource>(s: &mut S) -> Result<String, String> {
+    let n = r_u32(s)?;
+    if n > SANITY_LIMIT {
+        return Err(format!("implausible string length {n}"));
     }
+    let mut buf = vec![0u8; n as usize];
+    s.fill(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| "bad utf8".to_string())
+}
+
+fn r_istate<S: ByteSource>(s: &mut S) -> Result<IState, String> {
+    let seq = r_u64(s)?;
+    let pc = r_u32(s)?;
+    let instr = Instruction::decode(r_u64(s)?).ok_or("bad instruction word")?;
+    let fu_idx = r_u8(s)? as usize;
+    let fu = *FuncUnit::all()
+        .get(fu_idx)
+        .ok_or_else(|| format!("bad func unit {fu_idx}"))?;
+    let tick_fetch = r_u64(s)?;
+    let tick_decode = r_u64(s)?;
+    let tick_rename = r_u64(s)?;
+    let tick_dispatch = r_u64(s)?;
+    let tick_issue = r_u64(s)?;
+    let tick_complete = r_u64(s)?;
+    let tick_commit = r_u64(s)?;
+    let mem = match r_u8(s)? {
+        0 => None,
+        1 => Some(MemAccessInfo {
+            addr: r_u32(s)?,
+            size: r_u8(s)?,
+            is_store: r_u8(s)? != 0,
+            level: level_from_u8(r_u8(s)?)?,
+            bank: r_u32(s)?,
+            l1_hit: r_u8(s)? != 0,
+            l2_hit: r_u8(s)? != 0,
+            mshr_merged: r_u8(s)? != 0,
+            latency: r_u64(s)?,
+            issue_tick: r_u64(s)?,
+        }),
+        x => return Err(format!("bad mem flag {x}")),
+    };
+    Ok(IState {
+        seq,
+        pc,
+        instr,
+        fu,
+        tick_fetch,
+        tick_decode,
+        tick_rename,
+        tick_dispatch,
+        tick_issue,
+        tick_complete,
+        tick_commit,
+        mem,
+    })
+}
+
+/// Decode a v2 stream, feeding records into `sink`; returns the trailer.
+fn decode_stream<S: ByteSource>(
+    src: &mut S,
+    sink: &mut dyn TraceSink,
+) -> Result<TraceSummary, String> {
+    if r_u32(src)? != MAGIC {
+        return Err("bad magic".into());
+    }
+    if r_u32(src)? != VERSION {
+        return Err("unsupported trace version".into());
+    }
+    let mut records: u64 = 0;
+    loop {
+        let n = r_u32(src)?;
+        if n == 0 {
+            break;
+        }
+        if n > SANITY_LIMIT {
+            return Err(format!("implausible chunk size {n}"));
+        }
+        for _ in 0..n {
+            sink.on_commit(r_istate(src)?);
+            records += 1;
+        }
+    }
+    let program = r_str(src)?;
+    let cycles = r_u64(src)?;
+    let committed = r_u64(src)?;
+    let stop = stop_from_u8(r_u8(src)?)?;
+    let mut pf = [0u64; 16];
+    for x in pf.iter_mut() {
+        *x = r_u64(src)?;
+    }
+    let mut fu_counts = [0u64; crate::isa::func_unit::NUM_FUNC_UNITS];
+    for x in fu_counts.iter_mut() {
+        *x = r_u64(src)?;
+    }
+    let pipe = pipe_from_fields(pf, fu_counts);
+    let mut mf = [0u64; 14];
+    for x in mf.iter_mut() {
+        *x = r_u64(src)?;
+    }
+    let mem = mem_from_fields(mf);
+    if !src.at_end()? {
+        return Err("trailing bytes after trailer".into());
+    }
+    if records != committed {
+        return Err(format!(
+            "record count {records} disagrees with trailer committed {committed}"
+        ));
+    }
+    Ok(TraceSummary { program, pipe, mem, cycles, committed, stop })
 }
 
 fn level_to_u8(l: MemLevel) -> u8 {
@@ -234,136 +579,29 @@ fn mem_from_fields(f: [u64; 14]) -> MemStats {
     }
 }
 
-/// Serialize a trace to the versioned binary format.
+/// Serialize a materialized trace to the versioned binary format (the
+/// slice twin of [`SpillWriter`] — byte-identical output).
 pub fn encode(t: &Trace) -> Vec<u8> {
     let mut w = Writer { buf: Vec::with_capacity(64 + t.ciq.len() * 96) };
     w.u32(MAGIC);
     w.u32(VERSION);
-    w.str(&t.program);
-    w.u64(t.cycles);
-    w.u64(t.committed);
-    w.u8(stop_to_u8(t.stop));
-    for x in pipe_fields(&t.pipe) {
-        w.u64(x);
-    }
-    for x in t.pipe.fu_counts {
-        w.u64(x);
-    }
-    for x in mem_fields(&t.mem) {
-        w.u64(x);
-    }
-    w.u64(t.ciq.len() as u64);
-    for is in &t.ciq {
-        w.u64(is.seq);
-        w.u32(is.pc);
-        w.u64(is.instr.encode());
-        w.u8(is.fu as u8);
-        w.u64(is.tick_fetch);
-        w.u64(is.tick_decode);
-        w.u64(is.tick_rename);
-        w.u64(is.tick_dispatch);
-        w.u64(is.tick_issue);
-        w.u64(is.tick_complete);
-        w.u64(is.tick_commit);
-        match &is.mem {
-            None => w.u8(0),
-            Some(m) => {
-                w.u8(1);
-                w.u32(m.addr);
-                w.u8(m.size);
-                w.u8(m.is_store as u8);
-                w.u8(level_to_u8(m.level));
-                w.u32(m.bank);
-                w.u8(m.l1_hit as u8);
-                w.u8(m.l2_hit as u8);
-                w.u8(m.mshr_merged as u8);
-                w.u64(m.latency);
-                w.u64(m.issue_tick);
-            }
+    for chunk in t.ciq.chunks(CHUNK_RECORDS as usize) {
+        w.u32(chunk.len() as u32);
+        for is in chunk {
+            w.istate(is);
         }
     }
+    w.u32(0);
+    w.summary(&t.summary());
     w.buf
 }
 
 /// Parse a trace from the binary format; errors on any inconsistency.
 pub fn decode(bytes: &[u8]) -> Result<Trace, String> {
-    let mut r = Reader { b: bytes, i: 0 };
-    if r.u32()? != MAGIC {
-        return Err("bad magic".into());
-    }
-    if r.u32()? != VERSION {
-        return Err("unsupported trace version".into());
-    }
-    let program = r.str()?;
-    let cycles = r.u64()?;
-    let committed = r.u64()?;
-    let stop = stop_from_u8(r.u8()?)?;
-    let mut pf = [0u64; 16];
-    for x in pf.iter_mut() {
-        *x = r.u64()?;
-    }
-    let mut fu_counts = [0u64; crate::isa::func_unit::NUM_FUNC_UNITS];
-    for x in fu_counts.iter_mut() {
-        *x = r.u64()?;
-    }
-    let pipe = pipe_from_fields(pf, fu_counts);
-    let mut mf = [0u64; 14];
-    for x in mf.iter_mut() {
-        *x = r.u64()?;
-    }
-    let mem = mem_from_fields(mf);
-    let n = r.u64()? as usize;
-    let mut ciq = Vec::with_capacity(n.min(1 << 24));
-    for _ in 0..n {
-        let seq = r.u64()?;
-        let pc = r.u32()?;
-        let instr = Instruction::decode(r.u64()?).ok_or("bad instruction word")?;
-        let fu_idx = r.u8()? as usize;
-        let fu = *FuncUnit::all()
-            .get(fu_idx)
-            .ok_or_else(|| format!("bad func unit {fu_idx}"))?;
-        let tick_fetch = r.u64()?;
-        let tick_decode = r.u64()?;
-        let tick_rename = r.u64()?;
-        let tick_dispatch = r.u64()?;
-        let tick_issue = r.u64()?;
-        let tick_complete = r.u64()?;
-        let tick_commit = r.u64()?;
-        let mem_info = match r.u8()? {
-            0 => None,
-            1 => Some(MemAccessInfo {
-                addr: r.u32()?,
-                size: r.u8()?,
-                is_store: r.u8()? != 0,
-                level: level_from_u8(r.u8()?)?,
-                bank: r.u32()?,
-                l1_hit: r.u8()? != 0,
-                l2_hit: r.u8()? != 0,
-                mshr_merged: r.u8()? != 0,
-                latency: r.u64()?,
-                issue_tick: r.u64()?,
-            }),
-            x => return Err(format!("bad mem flag {x}")),
-        };
-        ciq.push(IState {
-            seq,
-            pc,
-            instr,
-            fu,
-            tick_fetch,
-            tick_decode,
-            tick_rename,
-            tick_dispatch,
-            tick_issue,
-            tick_complete,
-            tick_commit,
-            mem: mem_info,
-        });
-    }
-    if r.i != bytes.len() {
-        return Err(format!("trailing bytes at {}", r.i));
-    }
-    Ok(Trace { program, ciq, pipe, mem, cycles, committed, stop })
+    let mut src = SliceSource { b: bytes, i: 0 };
+    let mut sink = CollectSink::default();
+    let summary = decode_stream(&mut src, &mut sink)?;
+    Ok(Trace::from_parts(summary, sink.ciq))
 }
 
 #[cfg(test)]
@@ -431,6 +669,61 @@ mod tests {
         store.store("k1", &t).unwrap();
         let back = store.load("k1").unwrap();
         assert_traces_equal(&t, &back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_writer_matches_encode_and_replays_in_chunks() {
+        let dir = std::env::temp_dir().join(format!(
+            "eva-cim-trace-stream-test-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = TraceStore::open(&dir).unwrap();
+        let t = sample_trace();
+
+        // streaming spill, record by record
+        let mut w = store.writer("k2").unwrap();
+        for is in &t.ciq {
+            w.on_commit(is.clone());
+        }
+        w.finish(&t.summary()).unwrap();
+
+        // on disk: byte-identical to the slice encoder
+        let disk = std::fs::read(dir.join("trace-k2.bin")).unwrap();
+        assert_eq!(disk, encode(&t));
+
+        // replay streams the same records and trailer
+        let mut sink = CollectSink::default();
+        let summary = store.replay("k2", &mut sink).unwrap();
+        assert_traces_equal(&t, &Trace::from_parts(summary, sink.ciq));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unfinished_writer_leaves_no_published_trace() {
+        let dir = std::env::temp_dir().join(format!(
+            "eva-cim-trace-drop-test-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = TraceStore::open(&dir).unwrap();
+        let t = sample_trace();
+        {
+            let mut w = store.writer("k3").unwrap();
+            for is in t.ciq.iter().take(5) {
+                w.on_commit(is.clone());
+            }
+            // dropped without finish: simulated crash mid-spill
+        }
+        assert!(store.load("k3").is_none());
+        // the temp file was cleaned up too
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,7 +7,9 @@ use anyhow::Result;
 
 use crate::analyzer::{self, baseline, LocalityRule};
 use crate::config::{CimLevels, SystemConfig, Technology};
-use crate::coordinator::{cross, Coordinator, SweepOptions, SweepPoint, SweepRow};
+use crate::coordinator::{
+    cross, format_stats, Coordinator, SweepOptions, SweepPoint, SweepRow,
+};
 use crate::energy::{self, calib::*};
 use crate::profiler::ProfileInputs;
 use crate::reshape;
@@ -169,7 +171,12 @@ fn run_paper_sweep(
 ) -> Result<Vec<SweepRow>> {
     let benches = paper_benches();
     let points: Vec<SweepPoint> = cross(&benches, configs, LocalityRule::AnyCache);
-    Coordinator::new(opts).run_sweep(&points, backend)
+    let t0 = std::time::Instant::now();
+    let (rows, stats) =
+        Coordinator::new(opts).run_sweep_with_stats(&points, backend)?;
+    // cache-effectiveness + scale ledger for `eva-cim table <id>` runs
+    eprintln!("{}", format_stats(&stats, t0.elapsed().as_secs_f64()));
+    Ok(rows)
 }
 
 /// Fig 13: MACR per benchmark with L1/other breakdown.

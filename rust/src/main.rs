@@ -19,15 +19,27 @@
 //! (clap is unavailable in this offline environment; flags are parsed by
 //! the tiny matcher in [`cli`].)
 
+// Same deliberate style-lint set as the library crate root.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_flatten,
+    clippy::type_complexity,
+    clippy::new_without_default,
+    clippy::unnecessary_map_or
+)]
+
 use std::process::ExitCode;
 
-use eva_cim::analyzer::{analyze, LocalityRule};
+use eva_cim::analyzer::{analyze, LocalityRule, StreamOutcome};
 use eva_cim::config::{CimLevels, SystemConfig, Technology};
-use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
+use eva_cim::coordinator::{cross, format_stats, Coordinator, SweepOptions};
 use eva_cim::energy::calib;
 use eva_cim::experiments;
+use eva_cim::pipeline::run_pipelined;
+use eva_cim::probes::TraceSummary;
 use eva_cim::profiler::ProfileInputs;
-use eva_cim::reshape::reshape;
+use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink, Reshaped};
 use eva_cim::runtime::{best_backend, Backend, NativeBackend, PjrtRuntime};
 use eva_cim::sim::{simulate, Limits};
 use eva_cim::util::table::f as fnum;
@@ -183,27 +195,49 @@ fn cmd_list() -> Result<(), String> {
     Ok(())
 }
 
+/// Run the pipelined sim→analyze→reshape stack for one program.
+fn stream_single(
+    prog: &eva_cim::asm::Program,
+    cfg: &SystemConfig,
+    rule: LocalityRule,
+) -> Result<(TraceSummary, StreamOutcome, Reshaped), String> {
+    let (summary, outcome, deltas) = run_pipelined(
+        prog,
+        cfg,
+        Limits::default(),
+        rule,
+        DeltaSink::default(),
+        None,
+    )
+    .map_err(|e| e.to_string())?;
+    let reshaped = reshape_from_deltas(&summary, &deltas, cfg);
+    Ok((summary, outcome, reshaped))
+}
+
 fn report_single(
     cfg: &SystemConfig,
-    trace: &eva_cim::probes::Trace,
-    rule: LocalityRule,
+    summary: &TraceSummary,
+    outcome: &StreamOutcome,
+    reshaped: &Reshaped,
     backend: &mut dyn Backend,
 ) -> Result<(), String> {
-    let analysis = analyze(trace, cfg, rule);
-    let reshaped = reshape(trace, &analysis.selection, cfg);
-    let inputs = ProfileInputs::new(cfg, &reshaped);
+    let inputs = ProfileInputs::new(cfg, reshaped);
     let res = backend
         .evaluate_batch(&[inputs])
         .map_err(|e| format!("{e:#}"))?
         .remove(0);
 
-    println!("program          : {}", trace.program);
-    println!("committed instrs : {}", trace.committed);
-    println!("cycles           : {}  (CPI {:.2})", trace.cycles, trace.cpi());
-    println!("IDG nodes        : {} ({} eligible)", analysis.idg_nodes.0, analysis.idg_nodes.1);
-    println!("candidates       : {}", analysis.selection.candidates.len());
+    println!("program          : {}", summary.program);
+    println!("committed instrs : {}", summary.committed);
+    println!("cycles           : {}  (CPI {:.2})", summary.cycles, summary.cpi());
+    println!("IDG nodes        : {} ({} eligible)", outcome.idg_nodes.0, outcome.idg_nodes.1);
+    println!("candidates       : {}", outcome.candidates);
+    println!(
+        "analysis window  : peak {} instrs (streamed, sim ∥ analyze)",
+        outcome.peak_window
+    );
     println!("MACR             : {:.1}%  (L1 share {:.1}%)",
-             analysis.macr.ratio() * 100.0, analysis.macr.l1_share() * 100.0);
+             outcome.macr.ratio() * 100.0, outcome.macr.l1_share() * 100.0);
     println!("offloaded instrs : {}  CiM ops: {}", reshaped.removed, reshaped.cim_op_count);
     println!("backend          : {}", backend.name());
     println!();
@@ -251,8 +285,8 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
 
     let prog = workloads::build(bench, scale, seed)
         .ok_or_else(|| format!("unknown benchmark '{bench}' (see `eva-cim list`)"))?;
-    let trace = simulate(&prog, &cfg, Limits::default()).map_err(|e| e.to_string())?;
-    report_single(&cfg, &trace, rule, backend.as_mut())
+    let (summary, outcome, reshaped) = stream_single(&prog, &cfg, rule)?;
+    report_single(&cfg, &summary, &outcome, &reshaped, backend.as_mut())
 }
 
 fn cmd_asm(args: &cli::Args) -> Result<(), String> {
@@ -265,8 +299,8 @@ fn cmd_asm(args: &cli::Args) -> Result<(), String> {
     let cfg = build_config(args)?;
     let rule = parse_rule(&args.flag_or("rule", "any"))?;
     let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
-    let trace = simulate(&prog, &cfg, Limits::default()).map_err(|e| e.to_string())?;
-    report_single(&cfg, &trace, rule, backend.as_mut())
+    let (summary, outcome, reshaped) = stream_single(&prog, &cfg, rule)?;
+    report_single(&cfg, &summary, &outcome, &reshaped, backend.as_mut())
 }
 
 fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
@@ -328,16 +362,7 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
         ]);
     }
     println!("{}", t.render());
-    eprintln!(
-        "{} design points in {:.2}s ({} cached, {} computed, {} simulated, \
-         {} chunks)",
-        rows.len(),
-        dt.as_secs_f64(),
-        stats.rows_from_cache,
-        stats.rows_computed,
-        stats.simulator_runs,
-        stats.chunks_claimed,
-    );
+    eprintln!("{}", format_stats(&stats, dt.as_secs_f64()));
     if let Some(csv) = args.flag("csv") {
         std::fs::write(csv, t.to_csv()).map_err(|e| e.to_string())?;
         eprintln!("wrote {csv}");

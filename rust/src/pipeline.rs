@@ -1,0 +1,198 @@
+//! Pipelined simulate → analyze execution.
+//!
+//! The simulator and the online analyzer are both single-pass consumers of
+//! the commit stream, so they can overlap: a dedicated simulator thread
+//! commits [`IState`] batches into a *bounded* channel while the calling
+//! thread drains them into an [`OnlineAnalyzer`].  Peak memory is
+//! O(channel depth + analysis window), never O(trace), and wall-clock
+//! approaches max(sim time, analysis time) instead of their sum.
+//!
+//! [`run_streaming`] is the sequential variant (same O(window) memory, no
+//! thread) — useful where spawning is undesirable and as the fairest
+//! baseline for the `perf_hotpaths` pipelining comparison.
+
+use std::sync::mpsc;
+
+use crate::analyzer::{CandidateSink, LocalityRule, OnlineAnalyzer, StreamOutcome};
+use crate::asm::Program;
+use crate::config::SystemConfig;
+use crate::probes::{IState, TraceSink, TraceSummary};
+use crate::sim::{simulate_into, Limits, SimError};
+
+/// Instructions per channel message: large enough to amortize the channel,
+/// small enough to keep both stages busy.
+pub const BATCH: usize = 4096;
+
+/// In-flight batches before the simulator blocks (backpressure bound).
+const DEPTH: usize = 8;
+
+/// Sink that batches committed records into the channel, optionally teeing
+/// each record into a secondary sink first (disk spill, collection, ...).
+struct ChannelSink<'a> {
+    tx: mpsc::SyncSender<Vec<IState>>,
+    buf: Vec<IState>,
+    tee: Option<&'a mut (dyn TraceSink + Send)>,
+}
+
+impl ChannelSink<'_> {
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            let batch = std::mem::take(&mut self.buf);
+            // a closed channel means the consumer is gone; the simulation
+            // result will surface whatever went wrong
+            let _ = self.tx.send(batch);
+        }
+    }
+}
+
+impl TraceSink for ChannelSink<'_> {
+    fn on_commit(&mut self, is: IState) {
+        if let Some(t) = self.tee.as_mut() {
+            t.on_commit(is.clone());
+        }
+        self.buf.push(is);
+        if self.buf.len() >= BATCH {
+            let batch =
+                std::mem::replace(&mut self.buf, Vec::with_capacity(BATCH));
+            let _ = self.tx.send(batch);
+        }
+    }
+}
+
+/// Simulate `prog` with the simulator on its own thread, analyzing the
+/// commit stream concurrently.  `tee` additionally receives every record
+/// on the simulator thread (e.g. a chunked disk spill writer).
+pub fn run_pipelined<S: CandidateSink>(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+    rule: LocalityRule,
+    sink: S,
+    tee: Option<&mut (dyn TraceSink + Send)>,
+) -> Result<(TraceSummary, StreamOutcome, S), SimError> {
+    let (tx, rx) = mpsc::sync_channel::<Vec<IState>>(DEPTH);
+    let mut analyzer = OnlineAnalyzer::new(cfg.cim_levels, rule, sink);
+    let summary = std::thread::scope(|scope| {
+        // own the receiver inside the scope: if the analyzer panics while
+        // draining, unwinding drops `rx`, which unblocks a simulator
+        // thread waiting on the full channel so the scope's implicit join
+        // terminates and the panic propagates instead of deadlocking
+        let rx = rx;
+        let handle = scope.spawn(move || {
+            let mut csink =
+                ChannelSink { tx, buf: Vec::with_capacity(BATCH), tee };
+            let res = simulate_into(prog, cfg, limits, &mut csink);
+            csink.flush();
+            res
+            // csink (and with it the sender) drops here, closing the
+            // channel and ending the consumer loop below
+        });
+        for batch in rx.iter() {
+            for is in &batch {
+                analyzer.push(is);
+            }
+        }
+        handle.join().expect("simulator thread panicked")
+    })?;
+    let (outcome, sink) = analyzer.finish();
+    Ok((summary, outcome, sink))
+}
+
+/// Sequential streaming: same O(window) memory as [`run_pipelined`], on
+/// the calling thread.
+pub fn run_streaming<S: CandidateSink>(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+    rule: LocalityRule,
+    sink: S,
+) -> Result<(TraceSummary, StreamOutcome, S), SimError> {
+    let mut analyzer = OnlineAnalyzer::new(cfg.cim_levels, rule, sink);
+    let summary = simulate_into(prog, cfg, limits, &mut analyzer)?;
+    let (outcome, sink) = analyzer.finish();
+    Ok((summary, outcome, sink))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::{analyze_batch, CollectCandidates};
+    use crate::probes::CollectSink;
+    use crate::sim::simulate;
+    use crate::workloads;
+
+    #[test]
+    fn pipelined_matches_batch_and_sequential() {
+        let prog = workloads::build("lcs", 2, 7).unwrap();
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+        let batch = analyze_batch(&trace, &cfg, LocalityRule::AnyCache);
+
+        let (summary, out, sink) = run_pipelined(
+            &prog,
+            &cfg,
+            Limits::default(),
+            LocalityRule::AnyCache,
+            CollectCandidates::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(summary.committed, trace.committed);
+        assert_eq!(summary.cycles, trace.cycles);
+        let analysis = crate::analyzer::analysis_from_stream(out, sink);
+        assert_eq!(analysis.selection.candidates, batch.selection.candidates);
+        assert_eq!(analysis.macr, batch.macr);
+        assert_eq!(analysis.idg_nodes, batch.idg_nodes);
+
+        let (s2, out2, sink2) = run_streaming(
+            &prog,
+            &cfg,
+            Limits::default(),
+            LocalityRule::AnyCache,
+            CollectCandidates::default(),
+        )
+        .unwrap();
+        assert_eq!(s2.committed, summary.committed);
+        let a2 = crate::analyzer::analysis_from_stream(out2, sink2);
+        assert_eq!(a2.selection.candidates, batch.selection.candidates);
+    }
+
+    #[test]
+    fn tee_sees_the_whole_stream() {
+        let prog = workloads::build("lcs", 2, 7).unwrap();
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let mut collect = CollectSink::default();
+        let (summary, _, _) = run_pipelined(
+            &prog,
+            &cfg,
+            Limits::default(),
+            LocalityRule::AnyCache,
+            CollectCandidates::default(),
+            Some(&mut collect),
+        )
+        .unwrap();
+        assert_eq!(collect.ciq.len() as u64, summary.committed);
+        for (i, is) in collect.ciq.iter().enumerate() {
+            assert_eq!(is.seq, i as u64);
+        }
+    }
+
+    #[test]
+    fn simulator_fault_propagates_through_the_pipeline() {
+        let mut a = crate::asm::Asm::new("bad");
+        a.li(1, 0x7fff_fff0u32 as i32);
+        a.lw(2, 1, 0);
+        a.halt();
+        let prog = a.assemble();
+        let cfg = SystemConfig::default();
+        let r = run_pipelined(
+            &prog,
+            &cfg,
+            Limits::default(),
+            LocalityRule::AnyCache,
+            CollectCandidates::default(),
+            None,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -2,9 +2,13 @@
 //!
 //! The simulator (`sim/`) plays the role of GEM5-with-probes (paper Fig 2):
 //! `InstProbe`/`PipeProbe` observe the pipeline, `RequestProbe`/`AccessProbe`
-//! observe the LSQ↔memory packets.  Everything the analysis stage consumes
-//! is collected here into a [`Trace`] — one record per *committed*
-//! instruction (wrong-path work never reaches the CIQ).
+//! observe the LSQ↔memory packets.  The simulator *commits* one [`IState`]
+//! record at a time into a [`TraceSink`]; a sink may analyze the stream
+//! online with O(window) memory (`analyzer::stream`), spill it to disk in
+//! chunks (`coordinator::trace_store`), or — the legacy batch view —
+//! collect it into a materialized [`Trace`] via [`CollectSink`].  Only
+//! *committed* instructions reach a sink (wrong-path work never enters the
+//! CIQ).
 
 use crate::isa::{FuncUnit, Instruction};
 
@@ -122,7 +126,68 @@ pub enum StopReason {
     RanOffEnd,
 }
 
-/// Full output of one simulation: the modeling-stage product.
+/// The per-instruction facts downstream consumers (reshaping, MACR) need
+/// once the pipeline timeline is no longer relevant: the instruction word,
+/// its functional unit and its memory access, without the stage ticks.
+#[derive(Clone, Copy, Debug)]
+pub struct InstrInfo {
+    pub instr: Instruction,
+    pub fu: FuncUnit,
+    pub mem: Option<MemAccessInfo>,
+}
+
+impl InstrInfo {
+    pub fn of(is: &IState) -> Self {
+        Self { instr: is.instr, fu: is.fu, mem: is.mem }
+    }
+}
+
+/// Aggregate output of one simulation: everything a [`Trace`] carries
+/// *except* the committed instruction queue.  This is the O(1)-size half
+/// of the modeling product; the O(instructions) half streams through a
+/// [`TraceSink`].
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    pub program: String,
+    pub pipe: PipeStats,
+    pub mem: MemStats,
+    pub cycles: u64,
+    pub committed: u64,
+    pub stop: StopReason,
+}
+
+impl TraceSummary {
+    pub fn cpi(&self) -> f64 {
+        if self.committed == 0 {
+            0.0
+        } else {
+            self.cycles as f64 / self.committed as f64
+        }
+    }
+}
+
+/// Consumer of the committed-instruction stream.  The simulator calls
+/// [`TraceSink::on_commit`] once per committed instruction, in commit
+/// order (`seq` is dense and ascending).  Implementations must not assume
+/// the stream is ever materialized: the whole point of the sink interface
+/// is that analysis, spilling and transport all run in O(window) memory.
+pub trait TraceSink {
+    fn on_commit(&mut self, is: IState);
+}
+
+/// The trivial sink: buffer every record (the legacy batch view).
+#[derive(Default)]
+pub struct CollectSink {
+    pub ciq: Vec<IState>,
+}
+
+impl TraceSink for CollectSink {
+    fn on_commit(&mut self, is: IState) {
+        self.ciq.push(is);
+    }
+}
+
+/// Full output of one simulation: the materialized modeling-stage product.
 #[derive(Clone, Debug)]
 pub struct Trace {
     pub program: String,
@@ -136,6 +201,31 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Assemble a materialized trace from its streaming halves.
+    pub fn from_parts(summary: TraceSummary, ciq: Vec<IState>) -> Self {
+        Self {
+            program: summary.program,
+            ciq,
+            pipe: summary.pipe,
+            mem: summary.mem,
+            cycles: summary.cycles,
+            committed: summary.committed,
+            stop: summary.stop,
+        }
+    }
+
+    /// The O(1)-size aggregate view of this trace.
+    pub fn summary(&self) -> TraceSummary {
+        TraceSummary {
+            program: self.program.clone(),
+            pipe: self.pipe.clone(),
+            mem: self.mem.clone(),
+            cycles: self.cycles,
+            committed: self.committed,
+            stop: self.stop,
+        }
+    }
+
     pub fn cpi(&self) -> f64 {
         if self.committed == 0 {
             0.0
@@ -172,5 +262,26 @@ mod tests {
             stop: StopReason::Halt,
         };
         assert!((t.cpi() - 1.5).abs() < 1e-12);
+        assert!((t.summary().cpi() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_parts_summary_roundtrip() {
+        let t = Trace {
+            program: "p".into(),
+            ciq: vec![],
+            pipe: PipeStats { fetched: 7, ..Default::default() },
+            mem: MemStats { l1d_read_hits: 3, ..Default::default() },
+            cycles: 42,
+            committed: 7,
+            stop: StopReason::MaxInstructions,
+        };
+        let back = Trace::from_parts(t.summary(), t.ciq.clone());
+        assert_eq!(back.program, t.program);
+        assert_eq!(back.pipe.fetched, 7);
+        assert_eq!(back.mem.l1d_read_hits, 3);
+        assert_eq!(back.cycles, 42);
+        assert_eq!(back.committed, 7);
+        assert_eq!(back.stop, StopReason::MaxInstructions);
     }
 }

@@ -5,7 +5,7 @@
 //! this order.  `runtime_artifacts.rs` cross-checks the manifest.
 
 use crate::isa::FuncUnit;
-use crate::probes::Trace;
+use crate::probes::{MemStats, PipeStats, Trace, TraceSummary};
 
 pub const NC: usize = 43;
 
@@ -101,8 +101,16 @@ impl std::ops::IndexMut<usize> for CounterSet {
 impl CounterSet {
     /// Extract the baseline (non-CiM) counter vector from a trace.
     pub fn from_trace(t: &Trace) -> Self {
+        Self::from_stats(&t.pipe, &t.mem, t.cycles)
+    }
+
+    /// Same, from the streaming summary (no materialized CIQ needed).
+    pub fn from_summary(s: &TraceSummary) -> Self {
+        Self::from_stats(&s.pipe, &s.mem, s.cycles)
+    }
+
+    fn from_stats(p: &PipeStats, m: &MemStats, cycles: u64) -> Self {
         let mut c = CounterSet::default();
-        let p = &t.pipe;
         c[C_FETCH] = p.fetched as f64;
         c[C_DECODE] = p.decoded as f64;
         c[C_RENAME] = p.renamed as f64;
@@ -125,7 +133,6 @@ impl CounterSet {
         c[C_BPRED_MISPREDICTS] = p.bpred_mispredicts as f64;
         c[C_LSQ_READS] = p.lsq_reads as f64;
         c[C_LSQ_WRITES] = p.lsq_writes as f64;
-        let m = &t.mem;
         c[C_L1I_HITS] = m.l1i_hits as f64;
         c[C_L1I_MISSES] = m.l1i_misses as f64;
         c[C_L1D_READ_HITS] = m.l1d_read_hits as f64;
@@ -138,7 +145,7 @@ impl CounterSet {
         c[C_L2_WRITE_MISSES] = m.l2_write_misses as f64;
         c[C_DRAM_READS] = m.dram_reads as f64;
         c[C_DRAM_WRITES] = m.dram_writes as f64;
-        c[C_CYCLES] = t.cycles as f64;
+        c[C_CYCLES] = cycles as f64;
         c
     }
 

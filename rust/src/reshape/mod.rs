@@ -9,14 +9,25 @@
 //!
 //! Candidates extracted from the same IDG tree were already merged by the
 //! selection pass (post-order claim), matching the paper's combine step.
+//!
+//! Two entry points share one per-candidate application
+//! ([`apply_candidate`]):
+//!
+//! * [`reshape`] — the batch view: mutate a copy of the trace's counters.
+//! * [`DeltaSink`] + [`reshape_from_deltas`] — the streaming view: fold
+//!   each candidate into a *signed delta* vector as the online analyzer
+//!   emits it, then combine with the baseline counters once the
+//!   simulation summary exists.  Every counter mutation is a ±1.0 step on
+//!   integer-valued f64s, so the two orders produce bit-identical
+//!   results.
 
 pub mod counters;
 
 pub use counters::{CounterSet, NC};
 
-use crate::analyzer::{CimOp, Selection};
+use crate::analyzer::{CandidateRecord, CandidateSink, CimOp, Selection};
 use crate::isa::FuncUnit;
-use crate::probes::{IState, MemLevel, Trace};
+use crate::probes::{InstrInfo, MemLevel, Trace, TraceSummary};
 
 use counters::*;
 
@@ -41,26 +52,64 @@ pub struct Reshaped {
     pub cim_op_count: u64,
 }
 
-fn remove_core_events(c: &mut CounterSet, is: &IState) {
-    c.dec(C_FETCH, 1.0);
-    c.dec(C_DECODE, 1.0);
-    c.dec(C_RENAME, 1.0);
-    c.dec(C_IQ_READS, 1.0);
-    c.dec(C_IQ_WRITES, 1.0);
-    c.dec(C_ROB_READS, 1.0);
-    c.dec(C_ROB_WRITES, 1.0);
+/// Counter mutation target: the batch path mutates a [`CounterSet`]
+/// (decrements clamp at zero), the streaming path accumulates a signed
+/// delta.  All mutations are unit steps.
+trait EventAcc {
+    fn dec(&mut self, i: usize);
+    fn inc(&mut self, i: usize);
+}
+
+impl EventAcc for CounterSet {
+    fn dec(&mut self, i: usize) {
+        CounterSet::dec(self, i, 1.0);
+    }
+
+    fn inc(&mut self, i: usize) {
+        self[i] += 1.0;
+    }
+}
+
+/// Signed per-counter delta (no clamping — applied to the baseline later).
+#[derive(Clone, Debug)]
+pub struct DeltaCounters(pub [f64; NC]);
+
+impl Default for DeltaCounters {
+    fn default() -> Self {
+        Self([0.0; NC])
+    }
+}
+
+impl EventAcc for DeltaCounters {
+    fn dec(&mut self, i: usize) {
+        self.0[i] -= 1.0;
+    }
+
+    fn inc(&mut self, i: usize) {
+        self.0[i] += 1.0;
+    }
+}
+
+fn remove_core_events<A: EventAcc>(c: &mut A, is: &InstrInfo) {
+    c.dec(C_FETCH);
+    c.dec(C_DECODE);
+    c.dec(C_RENAME);
+    c.dec(C_IQ_READS);
+    c.dec(C_IQ_WRITES);
+    c.dec(C_ROB_READS);
+    c.dec(C_ROB_WRITES);
     for s in is.instr.sources().into_iter().flatten() {
         if s < crate::isa::NUM_INT_REGS {
-            c.dec(C_INT_RF_READS, 1.0);
+            c.dec(C_INT_RF_READS);
         } else {
-            c.dec(C_FP_RF_READS, 1.0);
+            c.dec(C_FP_RF_READS);
         }
     }
     if let Some(rd) = is.instr.dest() {
         if rd < crate::isa::NUM_INT_REGS {
-            c.dec(C_INT_RF_WRITES, 1.0);
+            c.dec(C_INT_RF_WRITES);
         } else {
-            c.dec(C_FP_RF_WRITES, 1.0);
+            c.dec(C_FP_RF_WRITES);
         }
     }
     let fu_counter = match is.fu {
@@ -72,42 +121,42 @@ fn remove_core_events(c: &mut CounterSet, is: &IState) {
         FuncUnit::FpDiv => C_FP_DIV,
         FuncUnit::Branch => C_BRANCH,
         FuncUnit::MemRead => {
-            c.dec(C_LSQ_READS, 1.0);
+            c.dec(C_LSQ_READS);
             C_INT_ALU // address generation ALU op folded into mem path
         }
         FuncUnit::MemWrite => {
-            c.dec(C_LSQ_WRITES, 1.0);
+            c.dec(C_LSQ_WRITES);
             C_INT_ALU
         }
     };
     if !is.instr.op.is_mem() {
-        c.dec(fu_counter, 1.0);
+        c.dec(fu_counter);
     }
 }
 
-fn remove_cache_events(c: &mut CounterSet, is: &IState) {
+fn remove_cache_events<A: EventAcc>(c: &mut A, is: &InstrInfo) {
     let Some(m) = is.mem else { return };
     if m.is_store {
         if m.l1_hit {
-            c.dec(C_L1D_WRITE_HITS, 1.0);
+            c.dec(C_L1D_WRITE_HITS);
         } else {
-            c.dec(C_L1D_WRITE_MISSES, 1.0);
+            c.dec(C_L1D_WRITE_MISSES);
             if m.l2_hit {
-                c.dec(C_L2_READ_HITS, 1.0);
+                c.dec(C_L2_READ_HITS);
             } else {
-                c.dec(C_L2_READ_MISSES, 1.0);
-                c.dec(C_DRAM_READS, 1.0);
+                c.dec(C_L2_READ_MISSES);
+                c.dec(C_DRAM_READS);
             }
         }
     } else if m.l1_hit {
-        c.dec(C_L1D_READ_HITS, 1.0);
+        c.dec(C_L1D_READ_HITS);
     } else {
-        c.dec(C_L1D_READ_MISSES, 1.0);
+        c.dec(C_L1D_READ_MISSES);
         if m.l2_hit {
-            c.dec(C_L2_READ_HITS, 1.0);
+            c.dec(C_L2_READ_HITS);
         } else {
-            c.dec(C_L2_READ_MISSES, 1.0);
-            c.dec(C_DRAM_READS, 1.0);
+            c.dec(C_L2_READ_MISSES);
+            c.dec(C_DRAM_READS);
         }
     }
 }
@@ -126,6 +175,101 @@ fn cim_counter(level: MemLevel, op: CimOp) -> usize {
     }
 }
 
+/// Fold one candidate's effect into `acc`: removals for its offloaded
+/// instructions, CiM-op appearances at its level, compensating accesses
+/// for operand moves and readbacks.
+#[allow(clippy::too_many_arguments)]
+fn apply_candidate<A: EventAcc>(
+    acc: &mut A,
+    level: MemLevel,
+    ops: &[CimOp],
+    member_infos: &[InstrInfo],
+    load_infos: &[InstrInfo],
+    absorbed: Option<&InstrInfo>,
+    moves: u32,
+    readbacks: u32,
+    cim_add: &mut [u64; 2],
+    cim_op_count: &mut u64,
+) {
+    // offloaded CiM-op instructions leave the pipeline
+    for is in member_infos {
+        remove_core_events(acc, is);
+    }
+    // claimed loads disappear (instruction + cache traffic)
+    for is in load_infos {
+        remove_core_events(acc, is);
+        remove_cache_events(acc, is);
+    }
+    // absorbed store disappears
+    if let Some(is) = absorbed {
+        remove_core_events(acc, is);
+        remove_cache_events(acc, is);
+    }
+    // CiM operations appear at the candidate's level
+    for &op in ops {
+        acc.inc(cim_counter(level, op));
+        *cim_op_count += 1;
+        if op == CimOp::Add {
+            cim_add[(level == MemLevel::L2) as usize] += 1;
+        }
+    }
+    // operand moves: read at the source level + write at the exec level
+    for _ in 0..moves {
+        match level {
+            MemLevel::L2 => {
+                acc.inc(C_L1D_READ_HITS);
+                acc.inc(C_L2_WRITE_HITS);
+            }
+            _ => {
+                acc.inc(C_L2_READ_HITS);
+                acc.inc(C_L1D_WRITE_HITS);
+            }
+        }
+    }
+    // readbacks: the CPU still needs the result in a register
+    for _ in 0..readbacks {
+        match level {
+            MemLevel::L2 => acc.inc(C_L2_READ_HITS),
+            _ => acc.inc(C_L1D_READ_HITS),
+        }
+        acc.inc(C_LSQ_READS);
+    }
+}
+
+/// Streaming accumulator: fold candidates into deltas as the online
+/// analyzer emits them.  O(1) state — nothing per-candidate is retained.
+#[derive(Default)]
+pub struct DeltaSink {
+    pub delta: DeltaCounters,
+    pub removed: u64,
+    /// CiM-ADD counts per level (L1, L2) for the speedup model
+    pub cim_add: [u64; 2],
+    pub cim_op_count: u64,
+}
+
+impl CandidateSink for DeltaSink {
+    fn on_candidate(&mut self, rec: &CandidateRecord) {
+        let c = &rec.candidate;
+        apply_candidate(
+            &mut self.delta,
+            c.level,
+            &c.ops,
+            &rec.member_infos,
+            &rec.load_infos,
+            rec.absorbed.as_ref(),
+            c.moves,
+            c.readbacks,
+            &mut self.cim_add,
+            &mut self.cim_op_count,
+        );
+        // readbacks keep one CPU-side consumer access alive; per-candidate
+        // readbacks never exceed removed_count, so folding the subtraction
+        // per candidate matches the batch running total exactly
+        self.removed += c.removed_count();
+        self.removed = self.removed.saturating_sub(c.readbacks as u64);
+    }
+}
+
 /// Extra cycles a CiM-ADD pays over a plain read at each level, from the
 /// array latency model (Fig 11) — used to scale the CiM system's cycle
 /// count so leakage tracks execution time.
@@ -140,9 +284,44 @@ fn add_latency_extra(cfg: &crate::config::SystemConfig) -> (f64, f64) {
     )
 }
 
-/// Reshape `trace` according to `sel`, producing profiler inputs.
+/// Shared tail: assemble the perf vector and the CiM cycle estimate.
+fn finish_reshape(
+    base: CounterSet,
+    mut cim: CounterSet,
+    cycles: u64,
+    committed: u64,
+    removed: u64,
+    cim_add: [u64; 2],
+    cim_op_count: u64,
+    cfg: &crate::config::SystemConfig,
+) -> Reshaped {
+    let perf = [
+        cycles as f64,
+        committed as f64,
+        removed as f64,
+        cim_add[0] as f64,
+        cim_add[1] as f64,
+        cfg.clock_ghz,
+    ];
+    // leakage tracks execution time: the CiM system's cycle counter uses
+    // the same constant-CPI estimate the speedup model applies (§V-C2)
+    let (extra_l1, extra_l2) = add_latency_extra(cfg);
+    let cpi = if committed > 0 {
+        cycles as f64 / committed as f64
+    } else {
+        1.0
+    };
+    let cycles_cim = (cycles as f64 - removed as f64 * cpi
+        + cim_add[0] as f64 * extra_l1
+        + cim_add[1] as f64 * extra_l2)
+        .max(1.0);
+    cim[counters::C_CYCLES] = cycles_cim;
+    Reshaped { base, cim, perf, removed, cim_op_count }
+}
+
+/// Reshape `trace` according to `sel`, producing profiler inputs (the
+/// batch view over a materialized trace).
 pub fn reshape(trace: &Trace, sel: &Selection, cfg: &crate::config::SystemConfig) -> Reshaped {
-    let clock_ghz = cfg.clock_ghz;
     let base = CounterSet::from_trace(trace);
     let mut cim = base.clone();
     let mut removed = 0u64;
@@ -150,79 +329,76 @@ pub fn reshape(trace: &Trace, sel: &Selection, cfg: &crate::config::SystemConfig
     let mut cim_add = [0u64; 2]; // L1, L2
 
     for cand in &sel.candidates {
-        // offloaded CiM-op instructions leave the pipeline
-        for &m in &cand.members {
-            remove_core_events(&mut cim, &trace.ciq[m as usize]);
-        }
-        // claimed loads disappear (instruction + cache traffic)
-        for &l in &cand.loads {
-            let is = &trace.ciq[l as usize];
-            remove_core_events(&mut cim, is);
-            remove_cache_events(&mut cim, is);
-        }
-        // absorbed store disappears
-        if let Some(s) = cand.absorbed_store {
-            let is = &trace.ciq[s as usize];
-            remove_core_events(&mut cim, is);
-            remove_cache_events(&mut cim, is);
-        }
-        // CiM operations appear at the candidate's level
-        for &op in &cand.ops {
-            cim[cim_counter(cand.level, op)] += 1.0;
-            cim_op_count += 1;
-            if op == CimOp::Add {
-                cim_add[(cand.level == MemLevel::L2) as usize] += 1;
-            }
-        }
-        // operand moves: read at the source level + write at the exec level
-        for _ in 0..cand.moves {
-            match cand.level {
-                MemLevel::L2 => {
-                    cim[C_L1D_READ_HITS] += 1.0;
-                    cim[C_L2_WRITE_HITS] += 1.0;
-                }
-                _ => {
-                    cim[C_L2_READ_HITS] += 1.0;
-                    cim[C_L1D_WRITE_HITS] += 1.0;
-                }
-            }
-        }
-        // readbacks: the CPU still needs the result in a register
-        for _ in 0..cand.readbacks {
-            match cand.level {
-                MemLevel::L2 => cim[C_L2_READ_HITS] += 1.0,
-                _ => cim[C_L1D_READ_HITS] += 1.0,
-            }
-            cim[C_LSQ_READS] += 1.0;
-        }
+        let member_infos: Vec<InstrInfo> = cand
+            .members
+            .iter()
+            .map(|&m| InstrInfo::of(&trace.ciq[m as usize]))
+            .collect();
+        let load_infos: Vec<InstrInfo> = cand
+            .loads
+            .iter()
+            .map(|&l| InstrInfo::of(&trace.ciq[l as usize]))
+            .collect();
+        let absorbed = cand
+            .absorbed_store
+            .map(|s| InstrInfo::of(&trace.ciq[s as usize]));
+        apply_candidate(
+            &mut cim,
+            cand.level,
+            &cand.ops,
+            &member_infos,
+            &load_infos,
+            absorbed.as_ref(),
+            cand.moves,
+            cand.readbacks,
+            &mut cim_add,
+            &mut cim_op_count,
+        );
         removed += cand.removed_count();
         // readbacks keep one CPU-side consumer access alive
         removed = removed.saturating_sub(cand.readbacks as u64);
     }
 
-    let perf = [
-        trace.cycles as f64,
-        trace.committed as f64,
-        removed as f64,
-        cim_add[0] as f64,
-        cim_add[1] as f64,
-        clock_ghz,
-    ];
-    // leakage tracks execution time: the CiM system's cycle counter uses
-    // the same constant-CPI estimate the speedup model applies (§V-C2)
-    let (extra_l1, extra_l2) = add_latency_extra(cfg);
-    let cpi = if trace.committed > 0 {
-        trace.cycles as f64 / trace.committed as f64
-    } else {
-        1.0
-    };
-    let cycles_cim = (trace.cycles as f64 - removed as f64 * cpi
-        + cim_add[0] as f64 * extra_l1
-        + cim_add[1] as f64 * extra_l2)
-        .max(1.0);
-    cim[counters::C_CYCLES] = cycles_cim;
+    finish_reshape(
+        base,
+        cim,
+        trace.cycles,
+        trace.committed,
+        removed,
+        cim_add,
+        cim_op_count,
+        cfg,
+    )
+}
 
-    Reshaped { base, cim, perf, removed, cim_op_count }
+/// Streaming counterpart of [`reshape`]: combine the baseline counters
+/// (available once the simulation summary exists) with the deltas a
+/// [`DeltaSink`] folded while candidates streamed past.  Produces results
+/// bit-identical to the batch path because every delta is an exact
+/// integer step.
+pub fn reshape_from_deltas(
+    summary: &TraceSummary,
+    d: &DeltaSink,
+    cfg: &crate::config::SystemConfig,
+) -> Reshaped {
+    let base = CounterSet::from_summary(summary);
+    let mut cim = base.clone();
+    for i in 0..NC {
+        // counts are exact integers in f64, so (base + Σ±1) equals the
+        // batch path's sequential updates; the clamp mirrors
+        // `CounterSet::dec` and never fires for a consistent trace
+        cim.0[i] = (cim.0[i] + d.delta.0[i]).max(0.0);
+    }
+    finish_reshape(
+        base,
+        cim,
+        summary.cycles,
+        summary.committed,
+        d.removed,
+        d.cim_add,
+        d.cim_op_count,
+        cfg,
+    )
 }
 
 #[cfg(test)]
@@ -304,5 +480,29 @@ mod tests {
         let r = reshape(&t, &an.selection, &cfg);
         assert_eq!(r.base, r.cim);
         assert_eq!(r.removed, 0);
+    }
+
+    #[test]
+    fn delta_path_matches_batch_path() {
+        let cfg = SystemConfig::default();
+        let t = simulate(&pattern_program(6).assemble(), &cfg, Limits::default()).unwrap();
+        let an = analyze(&t, &cfg, LocalityRule::AnyCache);
+        let batch = reshape(&t, &an.selection, &cfg);
+
+        let mut oa = crate::analyzer::OnlineAnalyzer::new(
+            cfg.cim_levels,
+            LocalityRule::AnyCache,
+            super::DeltaSink::default(),
+        );
+        for is in &t.ciq {
+            oa.push(is);
+        }
+        let (_, deltas) = oa.finish();
+        let streamed = reshape_from_deltas(&t.summary(), &deltas, &cfg);
+        assert_eq!(batch.base, streamed.base);
+        assert_eq!(batch.cim, streamed.cim);
+        assert_eq!(batch.perf, streamed.perf);
+        assert_eq!(batch.removed, streamed.removed);
+        assert_eq!(batch.cim_op_count, streamed.cim_op_count);
     }
 }

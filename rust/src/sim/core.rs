@@ -19,7 +19,9 @@
 use crate::asm::Program;
 use crate::config::SystemConfig;
 use crate::isa::{FuncUnit, Opcode, NUM_FP_REGS, NUM_INT_REGS};
-use crate::probes::{IState, PipeStats, StopReason, Trace};
+use crate::probes::{
+    CollectSink, IState, PipeStats, StopReason, Trace, TraceSink, TraceSummary,
+};
 
 use super::bpred::BranchPredictor;
 use super::cache::MemHierarchy;
@@ -203,8 +205,24 @@ impl Window {
     }
 }
 
-/// Simulate `prog` on `cfg`, producing the modeling-stage [`Trace`].
+/// Simulate `prog` on `cfg`, materializing the full [`Trace`] (the legacy
+/// batch view — a thin adapter over [`simulate_into`]).
 pub fn simulate(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Result<Trace, SimError> {
+    let mut sink = CollectSink::default();
+    let summary = simulate_into(prog, cfg, limits, &mut sink)?;
+    Ok(Trace::from_parts(summary, sink.ciq))
+}
+
+/// Simulate `prog` on `cfg`, committing each instruction's I-state into
+/// `sink` as it retires.  Peak memory is the simulator's own state plus
+/// whatever the sink retains — an online sink makes the whole
+/// sim→analysis pipeline O(window) instead of O(instructions).
+pub fn simulate_into(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+    sink: &mut dyn TraceSink,
+) -> Result<TraceSummary, SimError> {
     let mut arch = ArchState::new(prog.dmem_size.max(4096));
     for w in &prog.data {
         arch.write_u32(w.addr, w.value, 0)?;
@@ -221,7 +239,6 @@ pub fn simulate(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Result<Tr
     let mut lsq = Window::new(cfg.core.lsq_entries);
 
     let mut pipe = PipeStats::default();
-    let mut ciq: Vec<IState> = Vec::new();
 
     let width = cfg.core.width.max(1) as u64;
     let mut fetch_cycle: u64 = 0;
@@ -467,7 +484,7 @@ pub fn simulate(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Result<Tr
         rob.push(tick_commit);
         pipe.rob_reads += 1;
 
-        ciq.push(IState {
+        sink.on_commit(IState {
             seq,
             pc,
             instr,
@@ -486,11 +503,10 @@ pub fn simulate(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Result<Tr
         pc = next_pc;
     }
 
-    Ok(Trace {
+    Ok(TraceSummary {
         program: prog.name.clone(),
         cycles: last_commit.max(fetch_cycle) + 1,
         committed: seq,
-        ciq,
         pipe,
         mem: hier.stats,
         stop,

@@ -11,4 +11,4 @@ pub mod bpred;
 pub mod cache;
 pub mod core;
 
-pub use core::{simulate, Limits, SimError};
+pub use core::{simulate, simulate_into, Limits, SimError};

@@ -11,3 +11,36 @@ pub mod table;
 
 pub use rng::Rng;
 pub use table::TextTable;
+
+/// Lock a mutex, recovering the guard when a previous holder panicked.
+///
+/// The coordinator's worker pool shares result/trace/error state behind
+/// mutexes; with plain `.lock().unwrap()`, one panicking worker poisons
+/// the lock and every other worker then panics on acquisition, turning a
+/// single bad design point into a pool-wide cascade.  The data guarded
+/// here is either append-only or validated downstream, so the right
+/// recovery is to take the guard and keep going — the original panic is
+/// still reported through the pool's error channel.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 1);
+    }
+}

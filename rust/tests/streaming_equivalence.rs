@@ -1,0 +1,288 @@
+//! The streaming/batch equivalence guard.
+//!
+//! The online analyzer (`analyzer::stream`) replaces the materialize-then-
+//! batch-analyze pipeline; this suite pins the contract that makes the
+//! migration safe: on randomized programs, every `LocalityRule` and every
+//! CiM placement, the streaming path produces **byte-identical** candidate
+//! sets, rejection counters, MACR, IDG statistics and `Reshaped` counter
+//! vectors to the legacy batch path (`analyze_batch`), whether records
+//! arrive from a materialized CIQ, the sequential in-thread stream, or the
+//! pipelined simulator-thread stream.
+
+use eva_cim::analyzer::{
+    analysis_from_stream, analyze, analyze_batch, Analysis, CandidateRecord,
+    CandidateSink, CollectCandidates, LocalityRule, OnlineAnalyzer,
+};
+use eva_cim::asm::Asm;
+use eva_cim::config::{CimLevels, SystemConfig};
+use eva_cim::pipeline::{run_pipelined, run_streaming};
+use eva_cim::probes::Trace;
+use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink, Reshaped};
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::util::proptest::check;
+use eva_cim::util::Rng;
+
+/// Candidates + reshape deltas from one streaming pass.
+#[derive(Default)]
+struct BothSinks {
+    cands: CollectCandidates,
+    deltas: DeltaSink,
+}
+
+impl CandidateSink for BothSinks {
+    fn on_candidate(&mut self, rec: &CandidateRecord) {
+        self.cands.on_candidate(rec);
+        self.deltas.on_candidate(rec);
+    }
+}
+
+/// Generate a random but always-terminating program that stresses the
+/// claim structure: the canonical convertible patterns, *shared* loads
+/// (one load feeding two trees), diamonds (one node feeding two parents
+/// of one tree), eligibility breakers, and a loop wrapper so registers
+/// are rewritten across iterations.
+fn random_program(rng: &mut Rng, size: u32) -> Asm {
+    let mut a = Asm::new("equiv");
+    let words = 64 + 8 * size;
+    let init: Vec<i32> = (0..words).map(|i| i as i32 * 3 + 1).collect();
+    let buf = a.data.alloc_i32("buf", &init);
+    a.li(1, buf as i32);
+    for k in 0..4 {
+        a.lw(9, 1, k * 64); // warm a few lines into L1
+    }
+    let iters = 1 + rng.gen_range(2) as i32; // 1..=2 loop iterations
+    a.li(10, 0);
+    a.li(11, iters);
+    let top = a.label("top");
+    a.bind(top);
+    let blocks = 2 + size % 8;
+    for b in 0..blocks {
+        let off = ((b * 12) % (words - 8)) as i32 * 4;
+        match rng.gen_range(8) {
+            0 => {
+                // canonical load-load-op-store
+                a.lw(2, 1, off);
+                a.lw(3, 1, off + 4);
+                match rng.gen_range(4) {
+                    0 => a.add(4, 2, 3),
+                    1 => a.and(4, 2, 3),
+                    2 => a.or(4, 2, 3),
+                    _ => a.xor(4, 2, 3),
+                };
+                a.sw(4, 1, off + 8);
+            }
+            1 => {
+                // imm variant
+                a.lw(2, 1, off);
+                a.addi(4, 2, rng.gen_range(100) as i32);
+                a.sw(4, 1, off);
+            }
+            2 => {
+                // non-convertible mul chain
+                a.lw(2, 1, off);
+                a.mul(4, 2, 2);
+                a.sw(4, 1, off + 4);
+            }
+            3 => {
+                // chained reduction (multi-node tree)
+                a.lw(2, 1, off);
+                a.lw(3, 1, off + 4);
+                a.add(5, 2, 3);
+                a.lw(6, 1, off + 8);
+                a.add(5, 5, 6);
+                a.sw(5, 1, off + 12);
+            }
+            4 => {
+                // shared load: one load feeds two separate trees — the
+                // deeper tree must claim it, the earlier sees it shared
+                a.lw(2, 1, off);
+                a.addi(4, 2, 1);
+                a.sw(4, 1, off + 4);
+                a.addi(5, 2, 2);
+                a.sw(5, 1, off + 8);
+            }
+            5 => {
+                // diamond: one node feeds two parents of the same tree
+                a.lw(2, 1, off);
+                a.addi(3, 2, 1); // x
+                a.addi(4, 3, 2); // a = x + 2
+                a.addi(5, 3, 3); // b = x + 3
+                a.add(6, 4, 5); // root sees x twice through a and b
+                a.sw(6, 1, off + 4);
+            }
+            6 => {
+                // scalar-only block (no loads -> rejected_no_loads)
+                a.addi(7, 7, 1);
+                a.slli(8, 7, 2);
+            }
+            _ => {
+                // store of a loaded value (copy, not convertible)
+                a.lw(2, 1, off);
+                a.sw(2, 1, off + 16);
+            }
+        }
+    }
+    a.addi(10, 10, 1);
+    a.bne(10, 11, top);
+    a.halt();
+    a
+}
+
+fn stream_over(
+    trace: &Trace,
+    cfg: &SystemConfig,
+    rule: LocalityRule,
+) -> (Analysis, Reshaped) {
+    let mut oa = OnlineAnalyzer::new(cfg.cim_levels, rule, BothSinks::default());
+    for is in &trace.ciq {
+        oa.push(is);
+    }
+    let (out, sinks) = oa.finish();
+    let reshaped = reshape_from_deltas(&trace.summary(), &sinks.deltas, cfg);
+    (analysis_from_stream(out, sinks.cands), reshaped)
+}
+
+fn assert_equivalent(tag: &str, batch: &Analysis, streamed: &Analysis) -> Result<(), String> {
+    if streamed.selection.candidates != batch.selection.candidates {
+        return Err(format!(
+            "{tag}: candidates diverge\nbatch:  {:?}\nstream: {:?}",
+            batch.selection.candidates, streamed.selection.candidates
+        ));
+    }
+    if streamed.selection.rejected_locality != batch.selection.rejected_locality
+        || streamed.selection.rejected_no_loads != batch.selection.rejected_no_loads
+        || streamed.selection.rejected_dram != batch.selection.rejected_dram
+    {
+        return Err(format!(
+            "{tag}: rejection counters diverge: batch ({}, {}, {}) vs stream ({}, {}, {})",
+            batch.selection.rejected_locality,
+            batch.selection.rejected_no_loads,
+            batch.selection.rejected_dram,
+            streamed.selection.rejected_locality,
+            streamed.selection.rejected_no_loads,
+            streamed.selection.rejected_dram
+        ));
+    }
+    if streamed.macr != batch.macr {
+        return Err(format!(
+            "{tag}: macr diverges: {:?} vs {:?}",
+            batch.macr, streamed.macr
+        ));
+    }
+    if streamed.idg_nodes != batch.idg_nodes {
+        return Err(format!(
+            "{tag}: idg counts diverge: {:?} vs {:?}",
+            batch.idg_nodes, streamed.idg_nodes
+        ));
+    }
+    Ok(())
+}
+
+fn assert_reshape_equal(tag: &str, batch: &Reshaped, streamed: &Reshaped) -> Result<(), String> {
+    if streamed.base != batch.base {
+        return Err(format!("{tag}: base counters diverge"));
+    }
+    if streamed.cim != batch.cim {
+        return Err(format!(
+            "{tag}: cim counters diverge\nbatch:  {:?}\nstream: {:?}",
+            batch.cim, streamed.cim
+        ));
+    }
+    if streamed.perf != batch.perf {
+        return Err(format!(
+            "{tag}: perf vectors diverge: {:?} vs {:?}",
+            batch.perf, streamed.perf
+        ));
+    }
+    if streamed.removed != batch.removed || streamed.cim_op_count != batch.cim_op_count {
+        return Err(format!(
+            "{tag}: removed/cim_ops diverge: ({}, {}) vs ({}, {})",
+            batch.removed, batch.cim_op_count, streamed.removed, streamed.cim_op_count
+        ));
+    }
+    Ok(())
+}
+
+const RULES: [LocalityRule; 3] = [
+    LocalityRule::AnyCache,
+    LocalityRule::SameLevel,
+    LocalityRule::SameBank,
+];
+
+#[test]
+fn prop_streaming_matches_batch_on_random_programs() {
+    check(
+        "streaming-equals-batch",
+        40,
+        |rng, size| {
+            let cfg = SystemConfig::preset("c1").unwrap();
+            let prog = random_program(rng, size).assemble();
+            simulate(&prog, &cfg, Limits::default()).unwrap()
+        },
+        |trace| {
+            for cim in [
+                CimLevels::Both,
+                CimLevels::L1Only,
+                CimLevels::L2Only,
+                CimLevels::None,
+            ] {
+                let mut cfg = SystemConfig::preset("c1").unwrap();
+                cfg.cim_levels = cim;
+                for rule in RULES {
+                    let tag = format!("cim={cim:?} rule={rule:?}");
+                    let batch = analyze_batch(trace, &cfg, rule);
+                    let (streamed, r_stream) = stream_over(trace, &cfg, rule);
+                    assert_equivalent(&tag, &batch, &streamed)?;
+                    let r_batch = reshape(trace, &batch.selection, &cfg);
+                    assert_reshape_equal(&tag, &r_batch, &r_stream)?;
+                    // the public batch API must be the same adapter
+                    let public = analyze(trace, &cfg, rule);
+                    assert_equivalent(&format!("{tag} (analyze)"), &batch, &public)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pipelined_and_sequential_streams_match_batch_on_workloads() {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    for bench in ["lcs", "km", "bfs"] {
+        let prog = eva_cim::workloads::build(bench, 2, 7).unwrap();
+        let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+        for rule in RULES {
+            let batch = analyze_batch(&trace, &cfg, rule);
+            let r_batch = reshape(&trace, &batch.selection, &cfg);
+
+            let (summary, out, sinks) = run_pipelined(
+                &prog,
+                &cfg,
+                Limits::default(),
+                rule,
+                BothSinks::default(),
+                None,
+            )
+            .unwrap();
+            assert_eq!(summary.committed, trace.committed, "{bench}");
+            assert_eq!(summary.cycles, trace.cycles, "{bench}");
+            let r_pipe = reshape_from_deltas(&summary, &sinks.deltas, &cfg);
+            let piped = analysis_from_stream(out, sinks.cands);
+            assert_equivalent(&format!("{bench} pipelined"), &batch, &piped).unwrap();
+            assert_reshape_equal(&format!("{bench} pipelined"), &r_batch, &r_pipe)
+                .unwrap();
+
+            let (s2, out2, sinks2) = run_streaming(
+                &prog,
+                &cfg,
+                Limits::default(),
+                rule,
+                BothSinks::default(),
+            )
+            .unwrap();
+            assert_eq!(s2.committed, trace.committed, "{bench}");
+            let seq = analysis_from_stream(out2, sinks2.cands);
+            assert_equivalent(&format!("{bench} sequential"), &batch, &seq).unwrap();
+        }
+    }
+}
