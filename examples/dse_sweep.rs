@@ -1,14 +1,16 @@
 //! Design-space exploration: the paper's three questions answered in one
 //! sweep — is the program CiM-favorable, which cache level should host the
 //! CiM arrays, and which technology wins?  Exercises the coordinator's
-//! worker pool + PJRT batching on 17 benchmarks × 12 configurations.
+//! worker pool on 17 benchmarks across every *registered* technology
+//! (4 built-ins unless more are registered — see `eva-cim explore` and
+//! `energy::device` for the registry).
 //!
 //! Run: `cargo run --release --example dse_sweep`
 
 use eva_cim::analyzer::LocalityRule;
 use eva_cim::config::{CimLevels, SystemConfig, Technology};
 use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
-use eva_cim::runtime::{best_backend, PjrtRuntime};
+use eva_cim::runtime::{Backend, NativeBackend};
 use eva_cim::util::TextTable;
 use eva_cim::workloads;
 
@@ -30,10 +32,13 @@ fn main() -> anyhow::Result<()> {
     let points = cross(&benches, &configs, LocalityRule::AnyCache);
     println!("sweeping {} design points...", points.len());
 
-    let mut backend = best_backend(&PjrtRuntime::default_dir());
+    // registry technologies beyond SRAM/FeFET (rram, stt-mram) are outside
+    // the frozen AOT tech table, so this all-registered sweep always runs
+    // on the native mirror; see technology_explorer.rs for the PJRT path
+    let mut backend = NativeBackend;
     let t0 = std::time::Instant::now();
     let rows = Coordinator::new(SweepOptions::default())
-        .run_sweep(&points, backend.as_mut())?;
+        .run_sweep(&points, &mut backend)?;
     println!(
         "{} points in {:.1}s on backend '{}'",
         rows.len(),

@@ -3,63 +3,92 @@
 //! Mirrors the paper's experimental setup (§VI): ARM Cortex-A9-class
 //! out-of-order core at 1 GHz, 512 MB main memory, and the three cache
 //! configurations of Fig 14.  Presets are in [`SystemConfig::preset`];
-//! everything can be overridden via the TOML-subset files in `parse`.
+//! everything can be overridden via the TOML-subset files in `parse`,
+//! including user-defined device technologies (`[tech.<name>]` sections —
+//! see [`crate::energy::device`]).
 
 pub mod parse;
 
 /// Memory technology of the cache arrays (and their CiM peripherals).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Technology {
-    Sram,
-    Fefet,
-}
+///
+/// A `Technology` is an interned handle (id + name) into the process-wide
+/// device registry ([`crate::energy::device`]).  The four built-ins are
+/// available as associated constants; anything registered at runtime —
+/// from a `[tech.<name>]` TOML section or [`crate::energy::device::register`]
+/// — resolves through [`Technology::from_name`] exactly like a built-in.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Technology(u16);
 
 impl Technology {
+    /// CMOS SRAM (Table III / Fig 11 anchors). Alias: `cmos`.
+    pub const SRAM: Technology = Technology(0);
+    /// FeFET-RAM (Table III / Fig 11 anchors). Alias: `fefet-ram`.
+    pub const FEFET: Technology = Technology(1);
+    /// ReRAM preset (representative published numbers). Alias: `reram`.
+    pub const RRAM: Technology = Technology(2);
+    /// STT-MRAM preset (representative published numbers).
+    /// Aliases: `sttram`, `stt`, `mram`.
+    pub const STT_MRAM: Technology = Technology(3);
+
+    /// Construct from a raw registry id (crate-internal: ids are only
+    /// minted by the device registry).
+    pub(crate) fn from_id(id: u16) -> Technology {
+        Technology(id)
+    }
+
+    /// Registry index of this technology (row in the device table).
     pub fn index(&self) -> usize {
-        match self {
-            Technology::Sram => 0,
-            Technology::Fefet => 1,
-        }
+        self.0 as usize
     }
 
+    /// Registered (interned) name, e.g. `"sram"` or `"stt-mram"`.
     pub fn name(&self) -> &'static str {
-        match self {
-            Technology::Sram => "sram",
-            Technology::Fefet => "fefet",
-        }
+        crate::energy::device::name_of(*self)
     }
 
+    /// Resolve a registered name or alias, case-insensitively.
     pub fn from_name(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "sram" | "cmos" => Some(Technology::Sram),
-            "fefet" | "fefet-ram" => Some(Technology::Fefet),
-            _ => None,
-        }
+        crate::energy::device::lookup(s)
     }
 
-    pub fn all() -> [Technology; 2] {
-        [Technology::Sram, Technology::Fefet]
+    /// Every registered technology (built-ins first, then customs), in
+    /// registration order.
+    pub fn all() -> Vec<Technology> {
+        crate::energy::device::all()
+    }
+}
+
+impl std::fmt::Debug for Technology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Technology({})", self.name())
     }
 }
 
 /// Which cache levels have CiM-capable arrays (Fig 15 sweep).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CimLevels {
+    /// no CiM arrays — the pure baseline system
     None,
+    /// CiM peripherals in the L1 data cache only
     L1Only,
+    /// CiM peripherals in the L2 cache only
     L2Only,
+    /// CiM peripherals in both cache levels
     Both,
 }
 
 impl CimLevels {
+    /// True when the L1 data cache is CiM-capable.
     pub fn l1(&self) -> bool {
         matches!(self, CimLevels::L1Only | CimLevels::Both)
     }
 
+    /// True when the L2 cache is CiM-capable.
     pub fn l2(&self) -> bool {
         matches!(self, CimLevels::L2Only | CimLevels::Both)
     }
 
+    /// Canonical CLI/TOML name (`none`, `l1`, `l2`, `l1+l2`).
     pub fn name(&self) -> &'static str {
         match self {
             CimLevels::None => "none",
@@ -69,6 +98,7 @@ impl CimLevels {
         }
     }
 
+    /// Parse a CLI/TOML name (accepts `both` for `l1+l2`).
     pub fn from_name(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "none" => Some(CimLevels::None),
@@ -85,15 +115,21 @@ impl CimLevels {
 pub struct CoreConfig {
     /// instructions fetched/decoded/committed per cycle
     pub width: usize,
+    /// reorder-buffer entries
     pub rob_entries: usize,
+    /// issue-queue entries
     pub iq_entries: usize,
+    /// load/store-queue entries
     pub lsq_entries: usize,
     /// branch mispredict pipeline refill penalty (cycles)
     pub mispredict_penalty: u64,
     /// number of parallel integer ALUs
     pub int_alu_units: usize,
+    /// number of integer multiply/divide units
     pub int_mul_units: usize,
+    /// number of floating-point units
     pub fp_units: usize,
+    /// memory ports between the LSQ and the L1 data cache
     pub mem_ports: usize,
 }
 
@@ -116,20 +152,27 @@ impl Default for CoreConfig {
 /// One cache level.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CacheConfig {
+    /// total capacity in bytes (power of two)
     pub capacity: u32,
+    /// set associativity (ways)
     pub assoc: u32,
+    /// line size in bytes
     pub line: u32,
+    /// number of independently accessible banks
     pub banks: u32,
     /// hit latency (cycles)
     pub latency: u64,
+    /// miss-status-holding registers (outstanding misses)
     pub mshr_entries: usize,
 }
 
 impl CacheConfig {
+    /// A cache level with the default 64 B line, 4 banks and 8 MSHRs.
     pub fn new(capacity: u32, assoc: u32, latency: u64) -> Self {
         Self { capacity, assoc, line: 64, banks: 4, latency, mshr_entries: 8 }
     }
 
+    /// Number of sets implied by capacity/associativity/line size.
     pub fn sets(&self) -> u32 {
         self.capacity / (self.assoc * self.line)
     }
@@ -149,6 +192,7 @@ impl CacheConfig {
 /// Main-memory model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DramConfig {
+    /// main-memory size in bytes
     pub size: u64,
     /// access latency (cycles)
     pub latency: u64,
@@ -163,14 +207,23 @@ impl Default for DramConfig {
 /// Full system configuration: the design point of a sweep.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SystemConfig {
+    /// display name of the design point (cosmetic; part of the cache key)
     pub name: String,
+    /// out-of-order core parameters
     pub core: CoreConfig,
+    /// L1 instruction cache
     pub l1i: CacheConfig,
+    /// L1 data cache
     pub l1d: CacheConfig,
+    /// unified L2 cache
     pub l2: CacheConfig,
+    /// main-memory model
     pub dram: DramConfig,
+    /// device technology of the cache arrays
     pub tech: Technology,
+    /// which levels carry CiM-capable arrays
     pub cim_levels: CimLevels,
+    /// core clock in GHz
     pub clock_ghz: f64,
 }
 
@@ -188,7 +241,7 @@ impl SystemConfig {
             l1d: CacheConfig::new(32 * 1024, 4, 3),
             l2: CacheConfig::new(256 * 1024, 8, 10),
             dram: DramConfig::default(),
-            tech: Technology::Sram,
+            tech: Technology::SRAM,
             cim_levels: CimLevels::Both,
             clock_ghz: 1.0,
         };
@@ -220,11 +273,13 @@ impl SystemConfig {
         &["c1", "c2", "c3", "spm1mb"]
     }
 
+    /// Builder-style technology override.
     pub fn with_tech(mut self, tech: Technology) -> Self {
         self.tech = tech;
         self
     }
 
+    /// Builder-style CiM-placement override.
     pub fn with_cim(mut self, cim: CimLevels) -> Self {
         self.cim_levels = cim;
         self
@@ -311,5 +366,19 @@ mod tests {
         assert!(CimLevels::Both.l1() && CimLevels::Both.l2());
         assert!(CimLevels::L1Only.l1() && !CimLevels::L1Only.l2());
         assert!(!CimLevels::None.l1() && !CimLevels::None.l2());
+    }
+
+    #[test]
+    fn technology_handles_resolve_through_the_registry() {
+        assert_eq!(Technology::from_name("sram"), Some(Technology::SRAM));
+        assert_eq!(Technology::from_name("CMOS"), Some(Technology::SRAM));
+        assert_eq!(Technology::from_name("fefet-ram"), Some(Technology::FEFET));
+        assert_eq!(Technology::from_name("rram"), Some(Technology::RRAM));
+        assert_eq!(Technology::from_name("stt-mram"), Some(Technology::STT_MRAM));
+        assert!(Technology::from_name("bogus").is_none());
+        assert_eq!(format!("{:?}", Technology::FEFET), "Technology(fefet)");
+        let all = Technology::all();
+        assert!(all.len() >= 4);
+        assert_eq!(all[0], Technology::SRAM);
     }
 }

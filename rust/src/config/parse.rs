@@ -16,11 +16,52 @@
 //! [core]
 //! rob_entries = 64
 //! ```
+//!
+//! # Device-technology sections
+//!
+//! A `[tech.<name>]` section registers `<name>` in the process-wide device
+//! registry ([`crate::energy::device`]) before the rest of the file is
+//! interpreted, so a top-level `tech = "<name>"` may appear before or
+//! after its definition.  Coefficients default to the `base` technology
+//! (itself defaulting to `sram`); only the overridden keys need listing:
+//!
+//! ```
+//! use eva_cim::config::parse;
+//!
+//! let cfg = parse::parse(
+//!     r#"
+//!     tech = "doc-pcm"            # defined below — order doesn't matter
+//!
+//!     [tech.doc-pcm]
+//!     base = "rram"               # start from the RRAM preset
+//!     alias = "doc-pcram"
+//!     e_l1_write = 150.0          # pJ, L1 anchor geometry
+//!     lat_l2_add = 15.0           # cycles, L2 anchor geometry
+//!     "#,
+//! )
+//! .unwrap();
+//! assert_eq!(cfg.tech.name(), "doc-pcm");
+//! let model = eva_cim::energy::device::model_of(cfg.tech);
+//! assert_eq!(model.e_l1[eva_cim::energy::calib::OP_WRITE], 150.0);
+//! ```
+//!
+//! Recognized tech keys: `base`, `alias` (comma-separated),
+//! `e_{l1,l2}_{read,write,or,and,xor,add}` (pJ),
+//! `lat_{l1,l2}_{read,write,or,and,xor,add}` (cycles),
+//! `anchor_{l1,l2}_cap`, `anchor_{l1,l2}_assoc`, `anchor_banks`,
+//! `assoc_exp` (the [`crate::energy::device::ScalingRule`] fields).
+
+use crate::energy::calib::NOPS;
+use crate::energy::device::{self, DeviceModel};
 
 use super::{CimLevels, SystemConfig, Technology};
 
+/// Parse failure: line number + message, `Display`-ready.
 #[derive(Debug)]
-pub struct ConfigError(pub String);
+pub struct ConfigError(
+    /// human-readable description of what went wrong
+    pub String,
+);
 
 impl std::fmt::Display for ConfigError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -54,25 +95,183 @@ fn unquote(v: &str) -> String {
     }
 }
 
-/// Parse `text` on top of the given base configuration.
-pub fn parse_into(text: &str, mut cfg: SystemConfig) -> Result<SystemConfig, ConfigError> {
-    let mut section = String::new();
-    for (lineno, raw) in text.lines().enumerate() {
-        let line = lineno + 1;
-        let mut src = raw;
-        if let Some(p) = src.find('#') {
-            src = &src[..p];
-        }
+/// One comment-stripped, non-empty line: `(line_number, text)`.
+fn logical_lines(text: &str) -> impl Iterator<Item = (usize, &str)> {
+    text.lines().enumerate().filter_map(|(i, raw)| {
+        let src = match raw.find('#') {
+            Some(p) => &raw[..p],
+            None => raw,
+        };
         let src = src.trim();
         if src.is_empty() {
+            None
+        } else {
+            Some((i + 1, src))
+        }
+    })
+}
+
+/// TOML op-key suffixes, in `calib` column order (read..add).
+const TECH_OPS: [&str; NOPS] = ["read", "write", "or", "and", "xor", "add"];
+
+/// A collected `[tech.<name>]` section, pre-registration.
+struct TechSection {
+    header_line: usize,
+    name: String,
+    keys: Vec<(usize, String, String)>,
+}
+
+/// Collect every `[tech.<name>]` section of `text` in file order.
+fn collect_tech_sections(text: &str) -> Result<Vec<TechSection>, ConfigError> {
+    let mut sections: Vec<TechSection> = Vec::new();
+    let mut in_tech = false;
+    for (line, src) in logical_lines(text) {
+        if src.starts_with('[') {
+            if !src.ends_with(']') {
+                return Err(ConfigError(format!("line {line}: bad section header")));
+            }
+            let section = src[1..src.len() - 1].trim();
+            if section == "tech" {
+                return Err(ConfigError(format!(
+                    "line {line}: [tech] needs a name — use [tech.<name>]"
+                )));
+            }
+            if let Some(name) = section.strip_prefix("tech.") {
+                // lowercase here because registration lowercases too —
+                // [tech.PCM] and [tech.pcm] are the same table
+                let name = name.trim().to_ascii_lowercase();
+                // real TOML rejects duplicate tables; a silently-last-wins
+                // merge would drop the first section's overrides
+                if sections.iter().any(|s| s.name == name) {
+                    return Err(ConfigError(format!(
+                        "line {line}: duplicate section [tech.{name}]"
+                    )));
+                }
+                sections.push(TechSection { header_line: line, name, keys: Vec::new() });
+                in_tech = true;
+            } else {
+                in_tech = false;
+            }
             continue;
         }
+        if !in_tech {
+            continue;
+        }
+        let eq = src
+            .find('=')
+            .ok_or_else(|| ConfigError(format!("line {line}: expected key = value")))?;
+        let section = sections.last_mut().expect("in_tech implies a section");
+        section.keys.push((
+            line,
+            src[..eq].trim().to_string(),
+            src[eq + 1..].trim().to_string(),
+        ));
+    }
+    Ok(sections)
+}
+
+/// Build and register one `[tech.<name>]` section.
+fn register_tech_section(sec: &TechSection) -> Result<Technology, ConfigError> {
+    // `base` wins regardless of key order within the section
+    let mut base = Technology::SRAM;
+    for (line, key, value) in &sec.keys {
+        if key == "base" {
+            let b = unquote(value);
+            base = Technology::from_name(&b).ok_or_else(|| {
+                ConfigError(format!("line {line}: {}", device::unknown_tech_message(&b)))
+            })?;
+        }
+    }
+    let mut model = DeviceModel::based_on(base, &sec.name)
+        .map_err(|e| ConfigError(format!("line {}: {e}", sec.header_line)))?;
+    for (line, key, value) in &sec.keys {
+        let line = *line;
+        if key == "base" {
+            continue;
+        }
+        if key == "alias" || key == "aliases" {
+            model.aliases.extend(
+                unquote(value)
+                    .split(',')
+                    .map(|a| a.trim().to_ascii_lowercase())
+                    .filter(|a| !a.is_empty()),
+            );
+            continue;
+        }
+        let num = parse_num(value).ok_or_else(|| {
+            ConfigError(format!("line {line}: '{key}' needs a number"))
+        })?;
+        if let Some(slot) = tech_op_slot(&mut model, key) {
+            *slot = num;
+            continue;
+        }
+        match key.as_str() {
+            "anchor_l1_cap" => model.scaling.anchor_l1_cap = num,
+            "anchor_l2_cap" => model.scaling.anchor_l2_cap = num,
+            "anchor_l1_assoc" => model.scaling.anchor_l1_assoc = num,
+            "anchor_l2_assoc" => model.scaling.anchor_l2_assoc = num,
+            "anchor_banks" => model.scaling.anchor_banks = num,
+            "assoc_exp" => model.scaling.assoc_exp = num,
+            _ => {
+                return Err(ConfigError(format!(
+                    "line {line}: unknown key 'tech.{}.{key}'",
+                    sec.name
+                )))
+            }
+        }
+    }
+    device::register(model)
+        .map_err(|e| ConfigError(format!("line {}: {e}", sec.header_line)))
+}
+
+/// Resolve an `e_*`/`lat_*` op key to its coefficient slot.
+fn tech_op_slot<'a>(model: &'a mut DeviceModel, key: &str) -> Option<&'a mut f64> {
+    let (kind, rest) = if let Some(r) = key.strip_prefix("e_") {
+        ("e", r)
+    } else if let Some(r) = key.strip_prefix("lat_") {
+        ("lat", r)
+    } else {
+        return None;
+    };
+    let (level, op) = rest.split_once('_')?;
+    let j = TECH_OPS.iter().position(|&o| o == op)?;
+    let arr = match (kind, level) {
+        ("e", "l1") => &mut model.e_l1,
+        ("e", "l2") => &mut model.e_l2,
+        ("lat", "l1") => &mut model.lat_l1,
+        ("lat", "l2") => &mut model.lat_l2,
+        _ => return None,
+    };
+    Some(&mut arr[j])
+}
+
+/// Register every `[tech.<name>]` section of `text`, returning the handles
+/// in file order.  Lines outside tech sections are ignored — use this for
+/// standalone technology files (CLI `--tech-file`).
+pub fn register_technologies(text: &str) -> Result<Vec<Technology>, ConfigError> {
+    collect_tech_sections(text)?
+        .iter()
+        .map(register_tech_section)
+        .collect()
+}
+
+/// Parse `text` on top of the given base configuration.
+///
+/// `[tech.<name>]` sections are registered first (whole-file pass), so a
+/// `tech = "<name>"` reference may precede its definition.
+pub fn parse_into(text: &str, mut cfg: SystemConfig) -> Result<SystemConfig, ConfigError> {
+    register_technologies(text)?;
+    let mut section = String::new();
+    for (line, src) in logical_lines(text) {
         if src.starts_with('[') {
             if !src.ends_with(']') {
                 return Err(ConfigError(format!("line {line}: bad section header")));
             }
             section = src[1..src.len() - 1].trim().to_string();
             continue;
+        }
+        if section.starts_with("tech.") {
+            continue; // handled by register_technologies
         }
         let eq = src
             .find('=')
@@ -95,7 +294,7 @@ pub fn parse_into(text: &str, mut cfg: SystemConfig) -> Result<SystemConfig, Con
             ("", "tech") => {
                 let t = unquote(value);
                 cfg.tech = Technology::from_name(&t).ok_or_else(|| {
-                    ConfigError(format!("line {line}: unknown tech '{t}'"))
+                    ConfigError(format!("line {line}: {}", device::unknown_tech_message(&t)))
                 })?;
             }
             ("", "cim") => {
@@ -181,7 +380,7 @@ mod tests {
             "#,
         )
         .unwrap();
-        assert_eq!(cfg.tech, Technology::Fefet);
+        assert_eq!(cfg.tech, Technology::FEFET);
         assert_eq!(cfg.cim_levels, CimLevels::L1Only);
         assert_eq!(cfg.l1d.capacity, 64 * 1024);
         assert_eq!(cfg.l1d.assoc, 8);
@@ -208,5 +407,65 @@ mod tests {
         let cfg = parse("preset = \"c3\"\n[l2]\nlatency = 20").unwrap();
         assert_eq!(cfg.l2.capacity, 2 * 1024 * 1024);
         assert_eq!(cfg.l2.latency, 20);
+    }
+
+    #[test]
+    fn tech_section_registers_and_resolves_before_definition() {
+        let cfg = parse(
+            r#"
+            tech = "parse-test-pcm"     # forward reference
+
+            [tech.parse-test-pcm]
+            base = "stt-mram"
+            alias = "parse-test-pcram, parse-test-pcm2"
+            e_l1_read = 41.0
+            lat_l1_add = 9.0
+            anchor_banks = 8
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.tech.name(), "parse-test-pcm");
+        let m = crate::energy::device::model_of(cfg.tech);
+        assert_eq!(m.e_l1[crate::energy::calib::OP_READ], 41.0);
+        assert_eq!(m.lat_l1[crate::energy::calib::OP_ADD], 9.0);
+        assert_eq!(m.scaling.anchor_banks, 8.0);
+        // non-overridden coefficients inherit the base preset
+        let base = crate::energy::device::model_of(Technology::STT_MRAM);
+        assert_eq!(m.e_l2, base.e_l2);
+        assert_eq!(Technology::from_name("parse-test-pcram"), Some(cfg.tech));
+    }
+
+    #[test]
+    fn tech_section_errors_are_actionable() {
+        // unnamed section
+        assert!(parse("[tech]\ne_l1_read = 1").is_err());
+        // unknown base, with the registry's did-you-mean message
+        let e = parse("[tech.x]\nbase = \"sramm\"").unwrap_err();
+        assert!(e.0.contains("did you mean"), "{e}");
+        // unknown key inside a tech section
+        assert!(parse("[tech.x]\nbogus = 1").is_err());
+        // non-positive coefficient rejected by model validation
+        assert!(parse("[tech.x]\ne_l1_read = 0").is_err());
+        // redefining a built-in rejected
+        assert!(parse("[tech.sram]\ne_l1_read = 9").is_err());
+        // duplicate tables rejected (silent last-wins would drop overrides),
+        // case-insensitively — registration lowercases names
+        let e = parse("[tech.dup]\ne_l1_read = 2\n\n[tech.dup]\ne_l1_write = 3")
+            .unwrap_err();
+        assert!(e.0.contains("duplicate section"), "{e}");
+        assert!(
+            parse("[tech.DUP2]\ne_l1_read = 2\n\n[tech.dup2]\ne_l1_write = 3")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn register_technologies_ignores_non_tech_lines() {
+        let techs = register_technologies(
+            "# tech library\n[tech.parse-test-lib]\nbase = \"rram\"\n",
+        )
+        .unwrap();
+        assert_eq!(techs.len(), 1);
+        assert_eq!(techs[0].name(), "parse-test-lib");
     }
 }

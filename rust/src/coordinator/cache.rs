@@ -72,6 +72,7 @@ impl ResultCache {
         Ok(Self { dir: dir.to_path_buf(), writer: Mutex::new(writer) })
     }
 
+    /// Root directory this cache was opened at.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -152,7 +153,7 @@ mod tests {
         SweepRow {
             bench: bench.into(),
             config_name: "c1".into(),
-            tech: Technology::Sram,
+            tech: Technology::SRAM,
             cim_levels: CimLevels::Both,
             macr: Macr {
                 total_accesses: 10,

@@ -40,6 +40,16 @@ fn cache_to_json(c: &CacheConfig) -> Json {
 }
 
 /// Canonical serialization of a full [`SystemConfig`] (every field).
+///
+/// The technology is serialized as its *name plus full device-model
+/// content* (coefficients + scaling rule), not just the name: a custom
+/// `[tech.<name>]` whose parameters are edited between runs must miss the
+/// result cache, and two differently-named technologies with identical
+/// physics intentionally hash differently too (the name is part of the
+/// design-point identity, like the config name).  Adding the model
+/// content was a key-schema change: caches written by pre-registry
+/// builds miss wholesale rather than ever serving stale rows
+/// (`rust/tests/device_registry.rs` pins that behavior).
 pub fn config_to_json(cfg: &SystemConfig) -> Json {
     Json::obj(vec![
         ("name", cfg.name.as_str().into()),
@@ -68,6 +78,7 @@ pub fn config_to_json(cfg: &SystemConfig) -> Json {
             ]),
         ),
         ("tech", cfg.tech.name().into()),
+        ("tech_model", crate::energy::device::model_of(cfg.tech).content_json()),
         ("cim_levels", cfg.cim_levels.name().into()),
         ("clock_ghz", cfg.clock_ghz.into()),
     ])
@@ -99,7 +110,7 @@ pub fn point_key(p: &SweepPoint, opts: &SweepOptions, backend: &str) -> String {
 pub fn trace_key(bench: &str, cfg: &SystemConfig, opts: &SweepOptions) -> String {
     let mut sim_cfg = cfg.clone();
     sim_cfg.name = String::new();
-    sim_cfg.tech = crate::config::Technology::Sram;
+    sim_cfg.tech = crate::config::Technology::SRAM;
     sim_cfg.cim_levels = crate::config::CimLevels::Both;
     let payload = Json::obj(vec![
         ("bench", bench.into()),
@@ -157,7 +168,7 @@ mod tests {
         assert_ne!(point_key(&p, &opts(), "native"), k0);
 
         let mut p = base.clone();
-        p.config.tech = Technology::Fefet;
+        p.config.tech = Technology::FEFET;
         assert_ne!(point_key(&p, &opts(), "native"), k0);
 
         let mut p = base.clone();
@@ -179,10 +190,35 @@ mod tests {
     fn trace_key_ignores_tech_and_placement() {
         let cfg = SystemConfig::preset("c1").unwrap();
         let sram = trace_key("lcs", &cfg, &opts());
-        let fefet = trace_key("lcs", &cfg.clone().with_tech(Technology::Fefet), &opts());
+        let fefet = trace_key("lcs", &cfg.clone().with_tech(Technology::FEFET), &opts());
         assert_eq!(sram, fefet);
+        let rram = trace_key("lcs", &cfg.clone().with_tech(Technology::RRAM), &opts());
+        assert_eq!(sram, rram);
         let mut bigger = cfg.clone();
         bigger.l1d.capacity *= 2;
         assert_ne!(trace_key("lcs", &bigger, &opts()), sram);
+    }
+
+    #[test]
+    fn point_key_covers_custom_tech_parameters() {
+        use crate::energy::device::{self, DeviceModel};
+
+        let mut m =
+            DeviceModel::based_on(Technology::RRAM, "key-test-dev").unwrap();
+        let t = device::register(m.clone()).unwrap();
+        let p = point(SystemConfig::preset("c1").unwrap().with_tech(t));
+        let k0 = point_key(&p, &opts(), "native");
+
+        // same geometry + same tech name, edited coefficients: new key
+        m.e_l1[crate::energy::calib::OP_ADD] += 5.0;
+        device::register(m).unwrap();
+        let k1 = point_key(&p, &opts(), "native");
+        assert_ne!(k0, k1, "coefficient edit must invalidate the cache key");
+
+        // distinct from every built-in's key as well
+        for b in [Technology::SRAM, Technology::RRAM] {
+            let pb = point(SystemConfig::preset("c1").unwrap().with_tech(b));
+            assert_ne!(point_key(&pb, &opts(), "native"), k1);
+        }
     }
 }

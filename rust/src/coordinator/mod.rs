@@ -55,23 +55,36 @@ use trace_store::TraceStore;
 /// One design point of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
+    /// workload name (see `workloads::NAMES`)
     pub bench: String,
+    /// full system configuration (geometry, tech, placement)
     pub config: SystemConfig,
+    /// data-locality rule used during candidate selection
     pub rule: LocalityRule,
 }
 
 /// Per-point sweep output.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
+    /// workload name
     pub bench: String,
+    /// display name of the evaluated configuration
     pub config_name: String,
+    /// device technology of the evaluated configuration
     pub tech: crate::config::Technology,
+    /// CiM placement of the evaluated configuration
     pub cim_levels: crate::config::CimLevels,
+    /// memory-access conversion ratio accounting
     pub macr: Macr,
+    /// committed instructions in the simulated trace
     pub committed: u64,
+    /// simulated cycles
     pub cycles: u64,
+    /// instructions removed from the host stream by offloading
     pub removed: u64,
+    /// in-array CiM operations in the reshaped trace
     pub cim_ops: u64,
+    /// profiler output (energy/speedup/breakdowns)
     pub result: ProfileResult,
 }
 
@@ -80,8 +93,11 @@ pub struct SweepRow {
 pub struct SweepOptions {
     /// problem-size hint handed to the workload generators
     pub scale: usize,
+    /// workload input RNG seed (part of the trace identity)
     pub seed: u64,
+    /// simulator instruction budget per design point
     pub max_instructions: u64,
+    /// worker-pool size for staging
     pub workers: usize,
     /// points per work-stealing chunk (0 = auto-size from queue length)
     pub chunk: usize,
@@ -113,6 +129,7 @@ impl Default for SweepOptions {
 /// What a sweep actually did — the cache-effectiveness and scale ledger.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SweepStats {
+    /// total design points in the sweep
     pub points: usize,
     /// rows served from the on-disk result cache (no staging, no profiling)
     pub rows_from_cache: usize,
@@ -171,10 +188,12 @@ struct StageCounters {
 
 /// The sweep driver.
 pub struct Coordinator {
+    /// sizing/caching/worker-pool knobs for every sweep this driver runs
     pub opts: SweepOptions,
 }
 
 impl Coordinator {
+    /// A driver with the given options.
     pub fn new(opts: SweepOptions) -> Self {
         Self { opts }
     }
@@ -537,7 +556,7 @@ mod tests {
     fn trace_memo_dedups_same_geometry() {
         // same bench + geometry, two tech variants -> one simulation
         let mut fefet = SystemConfig::preset("c1").unwrap();
-        fefet.tech = crate::config::Technology::Fefet;
+        fefet.tech = crate::config::Technology::FEFET;
         fefet.name = "c1-fefet".into();
         let points = cross(
             &["lcs"],

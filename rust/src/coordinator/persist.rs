@@ -124,8 +124,13 @@ pub fn row_to_json(row: &SweepRow) -> Json {
 /// Parse a sweep row back from its canonical JSON form.
 pub fn row_from_json(o: &Json) -> Result<SweepRow, String> {
     let tech_name = get_str(o, "tech")?;
-    let tech = Technology::from_name(tech_name)
-        .ok_or_else(|| format!("unknown tech '{tech_name}'"))?;
+    let tech = Technology::from_name(tech_name).ok_or_else(|| {
+        format!(
+            "unknown tech '{tech_name}' (custom technologies must be \
+             registered — e.g. via --tech-file — before their cached rows \
+             can be read back)"
+        )
+    })?;
     let cim_name = get_str(o, "cim_levels")?;
     let cim_levels = CimLevels::from_name(cim_name)
         .ok_or_else(|| format!("unknown cim levels '{cim_name}'"))?;
@@ -162,7 +167,7 @@ mod tests {
         SweepRow {
             bench: "lcs".into(),
             config_name: "c1-sram".into(),
-            tech: Technology::Sram,
+            tech: Technology::SRAM,
             cim_levels: CimLevels::Both,
             macr: Macr {
                 total_accesses: 1000,

@@ -30,6 +30,7 @@ impl ChunkQueue {
         Self { len, chunk, cursor: AtomicUsize::new(0) }
     }
 
+    /// The resolved (possibly auto-sized) chunk length.
     pub fn chunk_size(&self) -> usize {
         self.chunk
     }

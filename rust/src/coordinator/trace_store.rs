@@ -52,6 +52,7 @@ pub struct TraceStore {
 }
 
 impl TraceStore {
+    /// Open (creating if needed) the spill directory.
     pub fn open(dir: &Path) -> Result<Self> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating trace store {dir:?}"))?;

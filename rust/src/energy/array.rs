@@ -1,7 +1,9 @@
 //! Native DESTINY-lite array model — the Rust mirror of the L1 Pallas
 //! kernel (`python/compile/kernels/cim_energy.py`, oracle in `ref.py`).
 //!
-//! Power-law interpolation anchored at the published Table III points:
+//! Power-law interpolation anchored at the published Table III points
+//! (shown here with the default [`ScalingRule`] constants; every constant
+//! is per-device in the registry — see [`crate::energy::device`]):
 //!
 //! ```text
 //! E(cap, assoc) = E_L1 · (cap_eff / 64 kB)^bE · (assoc / 4)^0.15
@@ -11,11 +13,16 @@
 //! ```
 //!
 //! Exactness at the anchors is tested below; the PJRT artifact is
-//! cross-checked against this mirror in `rust/tests/runtime_artifacts.rs`.
+//! cross-checked against this mirror in `rust/tests/runtime_artifacts.rs`,
+//! and the registry built-ins against the legacy `TECH_TABLE` in
+//! `rust/tests/device_registry.rs`.
+//!
+//! [`ScalingRule`]: crate::energy::device::ScalingRule
 
 use crate::config::{CacheConfig, SystemConfig, Technology};
 
 use super::calib::*;
+use super::device;
 
 /// A design-point row (what the AOT graph calls `cfg[B, NCFG]`).
 pub type CfgRow = [f64; NCFG];
@@ -38,33 +45,39 @@ pub fn cfg_rows(cfg: &SystemConfig) -> (CfgRow, CfgRow) {
 }
 
 /// Per-op energy (pJ) and latency (cycles) for one design point.
+///
+/// The technology column of the row indexes the device registry;
+/// out-of-range indices clamp to the last registered model (the legacy
+/// `min(NTECH - 1)` behavior).
 pub fn energy_latency(row: &CfgRow) -> ([f64; NOPS], [f64; NOPS]) {
     let cap = row[CFG_CAPACITY];
     let assoc = row[CFG_ASSOC].max(1.0);
     let banks = row[CFG_BANKS].max(1.0);
-    let tech = (row[CFG_TECH] as usize).min(NTECH - 1);
-    let t = &TECH_TABLE[tech];
+    let tech = row[CFG_TECH] as usize;
 
-    let ln4 = 4.0f64.ln();
-    let ln2 = 2.0f64.ln();
-    let cap_eff = cap * (ANCHOR_BANKS / banks);
-    let cap_n = (cap_eff / ANCHOR_L1_CAP).ln();
-    let assoc_f = (assoc / ANCHOR_ASSOC).powf(ASSOC_EXP);
+    device::with_model(tech, |m| {
+        let s = &m.scaling;
+        let cap_ratio_ln = (s.anchor_l2_cap / s.anchor_l1_cap).ln();
+        let assoc_ratio_ln = (s.anchor_l2_assoc / s.anchor_l1_assoc).ln();
+        let cap_eff = cap * (s.anchor_banks / banks);
+        let cap_n = (cap_eff / s.anchor_l1_cap).ln();
+        let assoc_f = (assoc / s.anchor_l1_assoc).powf(s.assoc_exp);
 
-    let mut energy = [0.0; NOPS];
-    let mut lat = [0.0; NOPS];
-    for j in 0..NOPS {
-        let e1 = t[TP_E_L1 + j];
-        let e2 = t[TP_E_L2 + j];
-        let be = ((e2 / e1).ln() - ASSOC_EXP * ln2) / ln4;
-        energy[j] = e1 * (be * cap_n).exp() * assoc_f;
+        let mut energy = [0.0; NOPS];
+        let mut lat = [0.0; NOPS];
+        for j in 0..NOPS {
+            let e1 = m.e_l1[j];
+            let e2 = m.e_l2[j];
+            let be = ((e2 / e1).ln() - s.assoc_exp * assoc_ratio_ln) / cap_ratio_ln;
+            energy[j] = e1 * (be * cap_n).exp() * assoc_f;
 
-        let l1 = t[TP_LAT_L1 + j];
-        let l2 = t[TP_LAT_L2 + j];
-        let bl = (l2 / l1).ln() / ln4;
-        lat[j] = l1 * (bl * cap_n).exp();
-    }
-    (energy, lat)
+            let l1 = m.lat_l1[j];
+            let l2 = m.lat_l2[j];
+            let bl = (l2 / l1).ln() / cap_ratio_ln;
+            lat[j] = l1 * (bl * cap_n).exp();
+        }
+        (energy, lat)
+    })
 }
 
 /// Batched version matching the AOT `energy_model` artifact signature.
@@ -105,6 +118,22 @@ mod tests {
     }
 
     #[test]
+    fn rram_and_stt_anchors_reproduce_their_presets() {
+        use crate::config::Technology;
+        for tech in [Technology::RRAM, Technology::STT_MRAM] {
+            let m = device::model_of(tech);
+            let (e1, l1) = energy_latency(&anchor_row(64.0, 4.0, tech.index()));
+            let (e2, l2) = energy_latency(&anchor_row(256.0, 8.0, tech.index()));
+            for j in 0..NOPS {
+                assert!((e1[j] - m.e_l1[j]).abs() / m.e_l1[j] < 1e-9);
+                assert!((e2[j] - m.e_l2[j]).abs() / m.e_l2[j] < 1e-9);
+                assert!((l1[j] - m.lat_l1[j]).abs() < 1e-9);
+                assert!((l2[j] - m.lat_l2[j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
     fn energy_monotone_in_capacity() {
         let caps = [16.0, 32.0, 64.0, 256.0, 2048.0];
         for tech in 0..NTECH {
@@ -124,6 +153,25 @@ mod tests {
         let (ef, _) = energy_latency(&anchor_row(64.0, 4.0, 1));
         assert!(ef[OP_READ] < es[OP_READ]);
         assert!(ef[OP_XOR] > ef[OP_OR]);
+    }
+
+    #[test]
+    fn resistive_presets_have_expensive_writes() {
+        // the structural signature of RRAM/STT-MRAM: write ≫ read
+        for tech in [2usize, 3] {
+            let (e, _) = energy_latency(&anchor_row(64.0, 4.0, tech));
+            assert!(e[OP_WRITE] > 3.0 * e[OP_READ], "tech {tech}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_tech_clamps_to_fefet_deterministically() {
+        // malformed rows resolve to the legacy min(NTECH-1) clamp, never
+        // to whatever technology happened to be registered last
+        let fefet = energy_latency(&anchor_row(64.0, 4.0, 1));
+        let mut row = anchor_row(64.0, 4.0, 1);
+        row[CFG_TECH] = 99.0;
+        assert_eq!(energy_latency(&row), fefet);
     }
 
     #[test]

@@ -4,35 +4,60 @@
 //! Fig 11 anchors feed both the AOT'd Pallas kernels and the native Rust
 //! model, and `runtime_artifacts.rs` cross-validates the two paths.
 //!
+//! The two-row [`TECH_TABLE`] is the **PJRT artifact contract**: the AOT
+//! graphs are lowered against a `[NTECH, NTECH_PARAMS]` input literal, so
+//! it stays frozen at SRAM + FeFET.  The open-ended registry of runtime
+//! technologies lives in [`crate::energy::device`]; its SRAM/FeFET
+//! built-ins are constructed *from* these rows and must stay
+//! byte-identical to them (`rust/tests/device_registry.rs`).
+//!
 //! Table VI calibration (core event energies, DRAM, leakage) lives in
 //! [`static_unit_energy`]; DESIGN.md §5 explains how the values were set.
 
-/// Per-op table columns (Table III).
+/// Table III column: non-CiM read.
 pub const OP_READ: usize = 0;
+/// Table III column: non-CiM write (interpolated in the paper's table).
 pub const OP_WRITE: usize = 1;
+/// Table III column: in-array CiM OR.
 pub const OP_OR: usize = 2;
+/// Table III column: in-array CiM AND.
 pub const OP_AND: usize = 3;
+/// Table III column: in-array CiM XOR.
 pub const OP_XOR: usize = 4;
+/// Table III column: in-array CiM 32-bit add.
 pub const OP_ADD: usize = 5;
+/// Number of per-op table columns.
 pub const NOPS: usize = 6;
+/// Display names of the op columns, in table order.
 pub const OP_NAMES: [&str; NOPS] = ["read", "write", "cim_or", "cim_and", "cim_xor", "cim_add"];
 
-/// Config row layout (one cache level).
+/// Config-row column: capacity in bytes.
 pub const CFG_CAPACITY: usize = 0;
+/// Config-row column: associativity (ways).
 pub const CFG_ASSOC: usize = 1;
+/// Config-row column: line size in bytes.
 pub const CFG_LINE: usize = 2;
+/// Config-row column: bank count.
 pub const CFG_BANKS: usize = 3;
+/// Config-row column: technology registry index.
 pub const CFG_TECH: usize = 4;
+/// Config-row column: cache level (1 or 2).
 pub const CFG_LEVEL: usize = 5;
+/// Number of config-row columns (one cache level per row).
 pub const NCFG: usize = 6;
 
+/// Technology rows in the AOT'd tech-table literal (SRAM, FeFET — frozen).
 pub const NTECH: usize = 2;
+/// Parameters per technology row: energy + latency × two levels × [`NOPS`].
 pub const NTECH_PARAMS: usize = 4 * NOPS;
 
-/// Anchor geometry of Table III: L1 = 64 kB/4-way, L2 = 256 kB/8-way, 4 banks.
+/// Anchor geometry of Table III: L1 capacity 64 kB.
 pub const ANCHOR_L1_CAP: f64 = 64.0 * 1024.0;
+/// Anchor geometry of Table III: L1 associativity (4-way).
 pub const ANCHOR_ASSOC: f64 = 4.0;
+/// Bank count both anchor rows were characterized at.
 pub const ANCHOR_BANKS: f64 = 4.0;
+/// Associativity power-law exponent of the interpolation.
 pub const ASSOC_EXP: f64 = 0.15;
 
 /// H-tree / bus transport multiplier for *hierarchy* accesses: a regular
@@ -58,9 +83,13 @@ pub const TECH_TABLE: [[f64; NTECH_PARAMS]; NTECH] = [
      5.0, 5.0, 5.0, 5.0, 5.0, 9.0],
 ];
 
+/// Offset of the L1 energy block in a tech-table row.
 pub const TP_E_L1: usize = 0;
+/// Offset of the L2 energy block in a tech-table row.
 pub const TP_E_L2: usize = NOPS;
+/// Offset of the L1 latency block in a tech-table row.
 pub const TP_LAT_L1: usize = 2 * NOPS;
+/// Offset of the L2 latency block in a tech-table row.
 pub const TP_LAT_L2: usize = 3 * NOPS;
 
 /// Flattened tech table as f32 (the PJRT input literal).
@@ -111,20 +140,30 @@ pub fn static_unit_energy() -> [f64; NC] {
     u
 }
 
+/// [`static_unit_energy`] as f32 (the PJRT input literal).
 pub fn static_unit_energy_f32() -> Vec<f32> {
     static_unit_energy().iter().map(|&x| x as f32).collect()
 }
 
-/// Component axis.
+/// Number of report components.
 pub const NCOMP: usize = 8;
+/// Component index: core (fetch/decode/execute structures).
 pub const COMP_CORE: usize = 0;
+/// Component index: L1 instruction cache.
 pub const COMP_L1I: usize = 1;
+/// Component index: L1 data cache.
 pub const COMP_L1D: usize = 2;
+/// Component index: unified L2.
 pub const COMP_L2: usize = 3;
+/// Component index: main memory.
 pub const COMP_DRAM: usize = 4;
+/// Component index: in-array CiM ops at L1.
 pub const COMP_CIM_L1: usize = 5;
+/// Component index: in-array CiM ops at L2.
 pub const COMP_CIM_L2: usize = 6;
+/// Component index: leakage.
 pub const COMP_LEAK: usize = 7;
+/// Display names of the components, in index order.
 pub const COMP_NAMES: [&str; NCOMP] =
     ["core", "l1i", "l1d", "l2", "dram", "cim_l1", "cim_l2", "leak"];
 
@@ -143,7 +182,7 @@ pub fn comp_of_counter(i: usize) -> usize {
     }
 }
 
-/// The [NC][NCOMP] one-hot grouping matrix flattened to f32 (PJRT input).
+/// The `[NC][NCOMP]` one-hot grouping matrix flattened to f32 (PJRT input).
 pub fn group_matrix_f32() -> Vec<f32> {
     let mut g = vec![0f32; NC * NCOMP];
     for i in 0..NC {

@@ -1,0 +1,643 @@
+//! Pluggable device-technology registry and parametric array model.
+//!
+//! The paper evaluates exactly two memory technologies (CMOS SRAM and
+//! FeFET-RAM, Table III / Fig 11).  This module generalizes that pair into
+//! an open, DESTINY-style analytic model: a [`DeviceModel`] carries per-op
+//! read/write/or/and/xor/add energy and latency coefficients at the two
+//! published anchor geometries plus a [`ScalingRule`] describing how they
+//! extrapolate with capacity, associativity and banking.  Models live in a
+//! process-wide registry; [`crate::config::Technology`] is an interned
+//! handle (id + name) into it.
+//!
+//! Built-ins (always present, in this id order):
+//!
+//! | id | name       | aliases                | source                     |
+//! |----|------------|------------------------|----------------------------|
+//! | 0  | `sram`     | `cmos`                 | Table III / Fig 11 anchors |
+//! | 1  | `fefet`    | `fefet-ram`            | Table III / Fig 11 anchors |
+//! | 2  | `rram`     | `reram`                | representative published   |
+//! | 3  | `stt-mram` | `sttram`, `stt`, `mram`| representative published   |
+//!
+//! The SRAM and FeFET built-ins are constructed *from* the legacy
+//! [`TECH_TABLE`] anchor rows, so every energy/latency they produce is
+//! byte-identical to the pre-registry model (`tests/device_registry.rs`
+//! is the contract).  The RRAM and STT-MRAM presets are representative
+//! values compiled from the published CiM-prototype literature (see the
+//! CiM landscape survey, arXiv 2401.14428): both are resistive
+//! technologies with cheap reads and expensive writes, RRAM with the
+//! widest read/write asymmetry, STT-MRAM with the longer write latency.
+//! They are starting points for exploration — override any coefficient
+//! from a `[tech.<name>]` TOML section (see `config::parse`).
+//!
+//! Registering a custom technology:
+//!
+//! ```
+//! use eva_cim::config::Technology;
+//! use eva_cim::energy::device::DeviceModel;
+//! use eva_cim::energy::calib::OP_WRITE;
+//!
+//! // start from the FeFET built-in, halve the write energy
+//! let mut model = DeviceModel::based_on(Technology::FEFET, "doc-ecram").unwrap();
+//! model.e_l1[OP_WRITE] /= 2.0;
+//! model.e_l2[OP_WRITE] /= 2.0;
+//! let tech = eva_cim::energy::device::register(model).unwrap();
+//!
+//! assert_eq!(tech.name(), "doc-ecram");
+//! assert_eq!(Technology::from_name("doc-ecram"), Some(tech));
+//! // the array model picks the new coefficients up immediately
+//! let row = eva_cim::energy::cfg_row(
+//!     &eva_cim::config::CacheConfig::new(64 * 1024, 4, 3),
+//!     tech,
+//!     1,
+//! );
+//! let (e, _) = eva_cim::energy::energy_latency(&row);
+//! assert!((e[OP_WRITE] - 22.0).abs() < 1e-9); // half of FeFET's 44 pJ
+//! ```
+
+use std::collections::HashMap;
+use std::sync::{OnceLock, RwLock, RwLockReadGuard};
+
+use crate::config::Technology;
+use crate::util::json::Json;
+
+use super::calib::{NOPS, NTECH_PARAMS, TECH_TABLE, TP_E_L1, TP_E_L2, TP_LAT_L1, TP_LAT_L2};
+
+/// How a device's anchor coefficients extrapolate across geometries.
+///
+/// The model is the power-law interpolation of `energy/array.rs`,
+/// generalized so every constant is per-device:
+///
+/// ```text
+/// cap_eff = cap · anchor_banks / banks
+/// E(cap, assoc) = E_L1 · (cap_eff / anchor_l1_cap)^bE
+///                      · (assoc / anchor_l1_assoc)^assoc_exp
+/// bE  = (ln(E_L2/E_L1) − assoc_exp·ln(anchor_l2_assoc/anchor_l1_assoc))
+///       / ln(anchor_l2_cap/anchor_l1_cap)
+/// lat(cap) = LAT_L1 · (cap_eff / anchor_l1_cap)^bL
+/// bL  = ln(LAT_L2/LAT_L1) / ln(anchor_l2_cap/anchor_l1_cap)
+/// ```
+///
+/// The default reproduces the legacy constants (64 kB/4-way L1 and
+/// 256 kB/8-way L2 anchors, 4 banks, associativity exponent 0.15)
+/// bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScalingRule {
+    /// capacity (bytes) of the level-1 anchor point
+    pub anchor_l1_cap: f64,
+    /// capacity (bytes) of the level-2 anchor point
+    pub anchor_l2_cap: f64,
+    /// associativity of the level-1 anchor point
+    pub anchor_l1_assoc: f64,
+    /// associativity of the level-2 anchor point
+    pub anchor_l2_assoc: f64,
+    /// bank count both anchors were characterized at
+    pub anchor_banks: f64,
+    /// associativity power-law exponent
+    pub assoc_exp: f64,
+}
+
+impl Default for ScalingRule {
+    fn default() -> Self {
+        Self {
+            anchor_l1_cap: super::calib::ANCHOR_L1_CAP,
+            anchor_l2_cap: 4.0 * super::calib::ANCHOR_L1_CAP,
+            anchor_l1_assoc: super::calib::ANCHOR_ASSOC,
+            anchor_l2_assoc: 2.0 * super::calib::ANCHOR_ASSOC,
+            anchor_banks: super::calib::ANCHOR_BANKS,
+            assoc_exp: super::calib::ASSOC_EXP,
+        }
+    }
+}
+
+/// One device technology: per-op anchor coefficients + scaling rule.
+///
+/// Energies are pJ per operation at the anchor geometries; latencies are
+/// cycles at 1 GHz.  Op order is the Table III column order of
+/// `energy/calib.rs`: read, write, or, and, xor, add.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceModel {
+    /// registry name (interned lowercase on registration)
+    pub name: String,
+    /// alternative lookup names (e.g. `cmos` for `sram`)
+    pub aliases: Vec<String>,
+    /// per-op energy (pJ) at the L1 anchor geometry
+    pub e_l1: [f64; NOPS],
+    /// per-op energy (pJ) at the L2 anchor geometry
+    pub e_l2: [f64; NOPS],
+    /// per-op latency (cycles) at the L1 anchor geometry
+    pub lat_l1: [f64; NOPS],
+    /// per-op latency (cycles) at the L2 anchor geometry
+    pub lat_l2: [f64; NOPS],
+    /// capacity/associativity/banking extrapolation rule
+    pub scaling: ScalingRule,
+}
+
+/// Error raised by [`register`] / [`DeviceModel::validate`].
+#[derive(Debug)]
+pub struct DeviceError(
+    /// what was wrong with the model or the registration
+    pub String,
+);
+
+impl std::fmt::Display for DeviceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "device model error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DeviceError {}
+
+impl DeviceModel {
+    /// A new model cloned from a registered technology's coefficients —
+    /// the usual starting point for a custom device (override a handful
+    /// of fields rather than supplying all 24 coefficients).
+    pub fn based_on(base: Technology, name: &str) -> Result<DeviceModel, DeviceError> {
+        let mut m = model_of(base);
+        m.name = name.to_ascii_lowercase();
+        m.aliases = Vec::new();
+        Ok(m)
+    }
+
+    /// Flatten to the legacy `TECH_TABLE` row layout
+    /// `[E_L1(6) | E_L2(6) | LAT_L1(6) | LAT_L2(6)]`.
+    pub fn params(&self) -> [f64; NTECH_PARAMS] {
+        let mut p = [0.0; NTECH_PARAMS];
+        p[TP_E_L1..TP_E_L1 + NOPS].copy_from_slice(&self.e_l1);
+        p[TP_E_L2..TP_E_L2 + NOPS].copy_from_slice(&self.e_l2);
+        p[TP_LAT_L1..TP_LAT_L1 + NOPS].copy_from_slice(&self.lat_l1);
+        p[TP_LAT_L2..TP_LAT_L2 + NOPS].copy_from_slice(&self.lat_l2);
+        p
+    }
+
+    /// Check the model is usable by the power-law interpolation: every
+    /// coefficient finite and positive (ratios are taken through `ln`),
+    /// anchors positive with distinct L1/L2 capacities.
+    pub fn validate(&self) -> Result<(), DeviceError> {
+        let name = &self.name;
+        if name.is_empty() || !name.bytes().all(|b| b.is_ascii_graphic()) {
+            return Err(DeviceError(format!("bad technology name '{name}'")));
+        }
+        for (what, xs) in [
+            ("e_l1", &self.e_l1),
+            ("e_l2", &self.e_l2),
+            ("lat_l1", &self.lat_l1),
+            ("lat_l2", &self.lat_l2),
+        ] {
+            for (j, &x) in xs.iter().enumerate() {
+                if !x.is_finite() || x <= 0.0 {
+                    return Err(DeviceError(format!(
+                        "{name}: {what}[{}] = {x} must be finite and positive",
+                        super::calib::OP_NAMES[j]
+                    )));
+                }
+            }
+        }
+        let s = &self.scaling;
+        for (what, x) in [
+            ("anchor_l1_cap", s.anchor_l1_cap),
+            ("anchor_l2_cap", s.anchor_l2_cap),
+            ("anchor_l1_assoc", s.anchor_l1_assoc),
+            ("anchor_l2_assoc", s.anchor_l2_assoc),
+            ("anchor_banks", s.anchor_banks),
+        ] {
+            if !x.is_finite() || x <= 0.0 {
+                return Err(DeviceError(format!(
+                    "{name}: {what} = {x} must be finite and positive"
+                )));
+            }
+        }
+        if !s.assoc_exp.is_finite() {
+            return Err(DeviceError(format!("{name}: assoc_exp must be finite")));
+        }
+        if s.anchor_l2_cap == s.anchor_l1_cap {
+            return Err(DeviceError(format!(
+                "{name}: anchor capacities must differ (the capacity exponent \
+                 is fit between them)"
+            )));
+        }
+        Ok(())
+    }
+
+    /// True when the physical content (coefficients + scaling, not the
+    /// cosmetic name/aliases) is identical.
+    pub fn same_params(&self, other: &DeviceModel) -> bool {
+        self.e_l1 == other.e_l1
+            && self.e_l2 == other.e_l2
+            && self.lat_l1 == other.lat_l1
+            && self.lat_l2 == other.lat_l2
+            && self.scaling == other.scaling
+    }
+
+    /// Canonical JSON of the physical content — the piece of a design
+    /// point's cache identity contributed by the technology.  Two
+    /// technologies with the same name but different coefficients hash
+    /// differently, so the sweep result cache can never serve stale rows
+    /// across a parameter edit.
+    pub fn content_json(&self) -> Json {
+        let arr = |xs: &[f64; NOPS]| Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect());
+        let s = &self.scaling;
+        Json::obj(vec![
+            ("e_l1", arr(&self.e_l1)),
+            ("e_l2", arr(&self.e_l2)),
+            ("lat_l1", arr(&self.lat_l1)),
+            ("lat_l2", arr(&self.lat_l2)),
+            (
+                "scaling",
+                Json::obj(vec![
+                    ("anchor_l1_cap", s.anchor_l1_cap.into()),
+                    ("anchor_l2_cap", s.anchor_l2_cap.into()),
+                    ("anchor_l1_assoc", s.anchor_l1_assoc.into()),
+                    ("anchor_l2_assoc", s.anchor_l2_assoc.into()),
+                    ("anchor_banks", s.anchor_banks.into()),
+                    ("assoc_exp", s.assoc_exp.into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+struct Entry {
+    /// interned name — `Technology::name` hands out this `&'static str`
+    name: &'static str,
+    builtin: bool,
+    model: DeviceModel,
+}
+
+struct Registry {
+    entries: Vec<Entry>,
+    /// lowercase name/alias → id
+    by_name: HashMap<String, u16>,
+}
+
+impl Registry {
+    fn insert(&mut self, model: DeviceModel, builtin: bool) -> Technology {
+        let id = self.entries.len() as u16;
+        let name: &'static str = Box::leak(model.name.clone().into_boxed_str());
+        self.by_name.insert(model.name.clone(), id);
+        for a in &model.aliases {
+            self.by_name.insert(a.to_ascii_lowercase(), id);
+        }
+        self.entries.push(Entry { name, builtin, model });
+        Technology::from_id(id)
+    }
+}
+
+fn builtin(name: &str, aliases: &[&str], table_row: &[f64; NTECH_PARAMS]) -> DeviceModel {
+    let pick = |at: usize| {
+        let mut xs = [0.0; NOPS];
+        xs.copy_from_slice(&table_row[at..at + NOPS]);
+        xs
+    };
+    DeviceModel {
+        name: name.to_string(),
+        aliases: aliases.iter().map(|s| s.to_string()).collect(),
+        e_l1: pick(TP_E_L1),
+        e_l2: pick(TP_E_L2),
+        lat_l1: pick(TP_LAT_L1),
+        lat_l2: pick(TP_LAT_L2),
+        scaling: ScalingRule::default(),
+    }
+}
+
+/// The RRAM preset: widest read/write asymmetry of the four built-ins
+/// (representative 1T1R ReRAM numbers — cheap line reads, expensive
+/// SET/RESET writes, logic ops close to reads, carry-add the priciest).
+fn rram_preset() -> DeviceModel {
+    DeviceModel {
+        name: "rram".into(),
+        aliases: vec!["reram".into()],
+        e_l1: [28.0, 190.0, 30.0, 30.0, 62.0, 68.0],
+        e_l2: [121.0, 810.0, 130.0, 130.0, 264.0, 290.0],
+        lat_l1: [2.0, 5.0, 2.0, 2.0, 3.0, 7.0],
+        lat_l2: [7.0, 16.0, 7.0, 7.0, 10.0, 14.0],
+        scaling: ScalingRule::default(),
+    }
+}
+
+/// The STT-MRAM preset: moderate read energy, high write energy with the
+/// longest write latency (spin-transfer switching time).
+fn stt_mram_preset() -> DeviceModel {
+    DeviceModel {
+        name: "stt-mram".into(),
+        aliases: vec!["sttram".into(), "stt".into(), "mram".into()],
+        e_l1: [35.0, 162.0, 38.0, 38.0, 80.0, 86.0],
+        e_l2: [148.0, 695.0, 161.0, 161.0, 330.0, 352.0],
+        lat_l1: [2.0, 6.0, 2.0, 2.0, 3.0, 7.0],
+        lat_l2: [6.0, 14.0, 6.0, 6.0, 8.0, 12.0],
+        scaling: ScalingRule::default(),
+    }
+}
+
+fn registry() -> &'static RwLock<Registry> {
+    static REG: OnceLock<RwLock<Registry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut r = Registry { entries: Vec::new(), by_name: HashMap::new() };
+        // id order is a stable contract: sram=0, fefet=1 mirror the legacy
+        // TECH_TABLE rows (and the AOT'd tech-table literal); rram=2 and
+        // stt-mram=3 extend it
+        r.insert(builtin("sram", &["cmos"], &TECH_TABLE[0]), true);
+        r.insert(builtin("fefet", &["fefet-ram"], &TECH_TABLE[1]), true);
+        r.insert(rram_preset(), true);
+        r.insert(stt_mram_preset(), true);
+        RwLock::new(r)
+    })
+}
+
+fn read() -> RwLockReadGuard<'static, Registry> {
+    registry().read().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Register (or update) a device technology and return its handle.
+///
+/// * a new name registers a new technology;
+/// * re-registering a name with identical physical content returns the
+///   existing handle (idempotent — re-parsing the same TOML is free);
+/// * re-registering a *custom* name with different content replaces the
+///   coefficients **and alias set** in place (existing [`Technology`]
+///   handles pick the new values up; sweep caches stay correct because
+///   the content hash covers the coefficients);
+/// * redefining a built-in with different content is an error.
+pub fn register(model: DeviceModel) -> Result<Technology, DeviceError> {
+    let mut model = model;
+    model.name = model.name.to_ascii_lowercase();
+    model.validate()?;
+    let mut reg = registry().write().unwrap_or_else(|p| p.into_inner());
+    if let Some(&id) = reg.by_name.get(&model.name) {
+        // snapshot the facts before mutating (the guard can't hand out
+        // disjoint field borrows across its Deref)
+        let canonical = reg.entries[id as usize].name;
+        let is_builtin = reg.entries[id as usize].builtin;
+        let same = reg.entries[id as usize].model.same_params(&model);
+        if canonical != model.name {
+            return Err(DeviceError(format!(
+                "'{}' is an alias of '{canonical}'; register under a \
+                 distinct name",
+                model.name
+            )));
+        }
+        if same {
+            return Ok(Technology::from_id(id));
+        }
+        if is_builtin {
+            return Err(DeviceError(format!(
+                "cannot redefine built-in technology '{}'",
+                model.name
+            )));
+        }
+        // validate every alias before touching any state: a late conflict
+        // must not leave half the aliases registered against stale params
+        let aliases: Vec<String> =
+            model.aliases.iter().map(|a| a.to_ascii_lowercase()).collect();
+        for a in &aliases {
+            if reg.by_name.get(a).is_some_and(|&other| other != id) {
+                return Err(DeviceError(format!(
+                    "alias '{a}' already names another technology"
+                )));
+            }
+        }
+        // drop this id's old aliases (keep its canonical name), then
+        // install the new set — lookup must mirror the current model
+        let keep = model.name.clone();
+        reg.by_name.retain(|k, v| *v != id || *k == keep);
+        for a in aliases {
+            reg.by_name.insert(a, id);
+        }
+        reg.entries[id as usize].model = model;
+        return Ok(Technology::from_id(id));
+    }
+    for a in &model.aliases {
+        if reg.by_name.contains_key(&a.to_ascii_lowercase()) {
+            return Err(DeviceError(format!(
+                "alias '{a}' already names another technology"
+            )));
+        }
+    }
+    if reg.entries.len() >= u16::MAX as usize {
+        return Err(DeviceError("technology registry full".into()));
+    }
+    Ok(reg.insert(model, false))
+}
+
+/// Resolve a name or alias (case-insensitive) to its handle.
+pub fn lookup(name: &str) -> Option<Technology> {
+    read()
+        .by_name
+        .get(&name.to_ascii_lowercase())
+        .map(|&id| Technology::from_id(id))
+}
+
+/// The interned registry name of a handle.
+pub fn name_of(tech: Technology) -> &'static str {
+    let reg = read();
+    match reg.entries.get(tech.index()) {
+        Some(e) => e.name,
+        None => "?", // unreachable through the public API
+    }
+}
+
+/// Snapshot of a technology's model (clone; the registry stays shared).
+pub fn model_of(tech: Technology) -> DeviceModel {
+    with_model(tech.index(), |m| m.clone())
+}
+
+/// Run `f` against the model at `index` under the registry read lock —
+/// the allocation-free hot path for the array model.  An index beyond
+/// every registered entry (a malformed config row) resolves to the
+/// legacy `min(NTECH - 1)` clamp — FeFET — so garbage rows produce the
+/// same deterministic numbers regardless of what else was registered.
+pub fn with_model<R>(index: usize, f: impl FnOnce(&DeviceModel) -> R) -> R {
+    let reg = read();
+    let i = if index < reg.entries.len() {
+        index
+    } else {
+        super::calib::NTECH - 1
+    };
+    f(&reg.entries[i].model)
+}
+
+/// All registered technologies, in id (registration) order.
+pub fn all() -> Vec<Technology> {
+    let n = read().entries.len() as u16;
+    (0..n).map(Technology::from_id).collect()
+}
+
+/// True for the four models the crate ships with.
+pub fn is_builtin(tech: Technology) -> bool {
+    read().entries.get(tech.index()).is_some_and(|e| e.builtin)
+}
+
+/// Diagnostic for an unrecognized `--tech`/`tech =` value: lists every
+/// registered name and suggests the nearest one by edit distance.
+pub fn unknown_tech_message(query: &str) -> String {
+    let reg = read();
+    let names: Vec<&str> = reg.entries.iter().map(|e| e.name).collect();
+    let mut candidates: Vec<&str> = reg.by_name.keys().map(|s| s.as_str()).collect();
+    candidates.sort_unstable();
+    let q = query.to_ascii_lowercase();
+    let best = candidates
+        .iter()
+        .map(|c| (levenshtein(&q, c), *c))
+        .min()
+        .filter(|&(d, _)| d <= 3);
+    let mut msg = format!(
+        "unknown technology '{query}' (registered: {})",
+        names.join(", ")
+    );
+    if let Some((_, s)) = best {
+        msg.push_str(&format!(" — did you mean '{s}'?"));
+    } else {
+        msg.push_str("; load custom technologies with --tech-file or a [tech.<name>] section");
+    }
+    msg
+}
+
+/// Classic dynamic-programming edit distance (small inputs only).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::calib::{NTECH, OP_READ, OP_WRITE};
+
+    #[test]
+    fn builtin_ids_and_names_are_stable() {
+        assert_eq!(Technology::SRAM.index(), 0);
+        assert_eq!(Technology::FEFET.index(), 1);
+        assert_eq!(Technology::RRAM.index(), 2);
+        assert_eq!(Technology::STT_MRAM.index(), 3);
+        assert_eq!(Technology::SRAM.name(), "sram");
+        assert_eq!(Technology::STT_MRAM.name(), "stt-mram");
+        assert!(all().len() >= 4);
+        for t in [Technology::SRAM, Technology::FEFET, Technology::RRAM] {
+            assert!(is_builtin(t));
+        }
+    }
+
+    #[test]
+    fn builtins_flatten_to_the_legacy_table_rows() {
+        for (i, tech) in [Technology::SRAM, Technology::FEFET].into_iter().enumerate() {
+            assert_eq!(model_of(tech).params(), TECH_TABLE[i]);
+        }
+        assert_eq!(NTECH, 2, "the AOT tech-table literal stays two rows");
+    }
+
+    #[test]
+    fn lookup_covers_names_and_aliases_case_insensitively() {
+        assert_eq!(lookup("SRAM"), Some(Technology::SRAM));
+        assert_eq!(lookup("cmos"), Some(Technology::SRAM));
+        assert_eq!(lookup("fefet-ram"), Some(Technology::FEFET));
+        assert_eq!(lookup("ReRAM"), Some(Technology::RRAM));
+        assert_eq!(lookup("mram"), Some(Technology::STT_MRAM));
+        assert_eq!(lookup("no-such-device"), None);
+    }
+
+    #[test]
+    fn register_is_idempotent_and_guards_builtins() {
+        let m = model_of(Technology::SRAM);
+        // identical content under the same name: same handle back
+        assert_eq!(register(m.clone()).unwrap(), Technology::SRAM);
+        // different content under a built-in name: rejected
+        let mut hacked = m.clone();
+        hacked.e_l1[OP_READ] *= 2.0;
+        assert!(register(hacked).is_err());
+        // an alias cannot be registered as a standalone name
+        let mut aliased = m;
+        aliased.name = "cmos".into();
+        assert!(register(aliased).is_err());
+    }
+
+    #[test]
+    fn custom_registration_roundtrips_and_updates_in_place() {
+        let mut m = DeviceModel::based_on(Technology::RRAM, "test-dev-a").unwrap();
+        m.aliases = vec!["test-dev-a-alias".into()];
+        let t = register(m.clone()).unwrap();
+        assert_eq!(t.name(), "test-dev-a");
+        assert_eq!(lookup("test-dev-a-alias"), Some(t));
+        assert!(!is_builtin(t));
+        // in-place update: same handle, new coefficients
+        m.e_l1[OP_WRITE] = 99.5;
+        let t2 = register(m.clone()).unwrap();
+        assert_eq!(t, t2);
+        assert_eq!(model_of(t).e_l1[OP_WRITE], 99.5);
+        // replacing the alias set prunes the old lookups
+        m.e_l1[OP_WRITE] = 100.0;
+        m.aliases = vec!["test-dev-a-alias2".into()];
+        register(m).unwrap();
+        assert_eq!(lookup("test-dev-a-alias"), None, "stale alias must be pruned");
+        assert_eq!(lookup("test-dev-a-alias2"), Some(t));
+        assert_eq!(lookup("test-dev-a"), Some(t), "canonical name survives");
+    }
+
+    #[test]
+    fn failed_alias_update_leaves_no_partial_state() {
+        let mut m = DeviceModel::based_on(Technology::RRAM, "test-dev-b").unwrap();
+        let t = register(m.clone()).unwrap();
+        // conflicting alias ("sram" is taken) with edited coefficients:
+        // the whole update must be rejected atomically
+        m.e_l1[OP_READ] = 55.0;
+        m.aliases = vec!["test-dev-b-fresh".into(), "sram".into()];
+        assert!(register(m).is_err());
+        assert_eq!(lookup("test-dev-b-fresh"), None, "no partial alias insert");
+        assert_ne!(model_of(t).e_l1[OP_READ], 55.0, "model must be unchanged");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_models() {
+        let mut m = DeviceModel::based_on(Technology::SRAM, "test-bad").unwrap();
+        m.e_l1[OP_READ] = 0.0;
+        assert!(m.validate().is_err());
+        let mut m = DeviceModel::based_on(Technology::SRAM, "test-bad").unwrap();
+        m.lat_l2[OP_READ] = f64::NAN;
+        assert!(m.validate().is_err());
+        let mut m = DeviceModel::based_on(Technology::SRAM, "test-bad").unwrap();
+        m.scaling.anchor_l2_cap = m.scaling.anchor_l1_cap;
+        assert!(m.validate().is_err());
+        let mut m = DeviceModel::based_on(Technology::SRAM, "test-bad").unwrap();
+        m.name = "has space".into();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn content_json_is_canonical_and_parameter_sensitive() {
+        let a = model_of(Technology::SRAM).content_json().dump();
+        let b = model_of(Technology::SRAM).content_json().dump();
+        assert_eq!(a, b);
+        let mut m = model_of(Technology::SRAM);
+        m.e_l1[OP_READ] += 1.0;
+        assert_ne!(m.content_json().dump(), a);
+        // scaling-rule edits are part of the identity too
+        let mut m = model_of(Technology::SRAM);
+        m.scaling.assoc_exp = 0.2;
+        assert_ne!(m.content_json().dump(), a);
+    }
+
+    #[test]
+    fn unknown_tech_message_suggests_nearest() {
+        let msg = unknown_tech_message("sramm");
+        assert!(msg.contains("did you mean 'sram'"), "{msg}");
+        assert!(msg.contains("fefet"), "{msg}");
+        let far = unknown_tech_message("zzzzzzzzzz");
+        assert!(!far.contains("did you mean"), "{far}");
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("sram", "sram"), 0);
+        assert_eq!(levenshtein("sram", "srm"), 1);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+    }
+}

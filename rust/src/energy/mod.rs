@@ -1,12 +1,22 @@
 //! Device/array/core energy models — the modeling-stage "CiM module model"
 //! (paper §V-B) plus the McPAT-lite per-event core model (§V-C).
 //!
+//! * [`device`] — the pluggable device-technology registry: parametric
+//!   [`device::DeviceModel`]s (built-in SRAM/FeFET/RRAM/STT-MRAM plus
+//!   anything registered from TOML) with per-device scaling rules.
+//! * [`array`] — the DESTINY-lite power-law interpolation that turns a
+//!   registered model + cache geometry into per-op energies/latencies.
+//! * [`calib`] — calibration constants shared with the Python/Pallas side
+//!   (the legacy two-row `TECH_TABLE` is the PJRT artifact contract).
+//! * [`mcpat`] — per-counter unit energies and component aggregation.
+//!
 //! Everything here is the *native mirror* of the AOT'd JAX graph; the
 //! PJRT path (`runtime/`) must agree with it to float32 tolerance
 //! (cross-checked in `rust/tests/runtime_artifacts.rs`).
 
 pub mod array;
 pub mod calib;
+pub mod device;
 pub mod mcpat;
 
 pub use array::{cfg_row, cfg_rows, energy_latency, CfgRow};

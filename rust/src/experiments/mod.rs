@@ -24,7 +24,9 @@ pub fn paper_benches() -> Vec<&'static str> {
     workloads::NAMES.to_vec()
 }
 
-/// Table III: cache energy (pJ) per operation, SRAM and FeFET, both levels.
+/// Table III: cache energy (pJ) per operation, both levels, for every
+/// *registered* technology (the paper's SRAM/FeFET rows first, then the
+/// RRAM/STT-MRAM presets and any TOML-defined customs).
 pub fn table3() -> TextTable {
     let mut t = TextTable::new(
         "Table III — cache energy (pJ) per operation",
@@ -289,7 +291,7 @@ pub fn fig15(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable>
 /// As in the paper, FeFET improvements are normalized to the *SRAM*
 /// non-CiM baseline system.
 pub fn fig16(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
-    let configs: Vec<SystemConfig> = Technology::all()
+    let configs: Vec<SystemConfig> = [Technology::SRAM, Technology::FEFET]
         .into_iter()
         .map(|tech| {
             let mut c = SystemConfig::preset("c1").unwrap().with_tech(tech);
@@ -305,10 +307,10 @@ pub fn fig16(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable>
     for b in paper_benches() {
         let sram = rows
             .iter()
-            .find(|r| r.bench == b && r.tech == Technology::Sram);
+            .find(|r| r.bench == b && r.tech == Technology::SRAM);
         let fefet = rows
             .iter()
-            .find(|r| r.bench == b && r.tech == Technology::Fefet);
+            .find(|r| r.bench == b && r.tech == Technology::FEFET);
         if let (Some(s), Some(fe)) = (sram, fefet) {
             // normalize FeFET's CiM energy to the SRAM baseline
             let fefet_norm = s.result.total_base / fe.result.total_cim.max(1e-9);
@@ -323,6 +325,101 @@ pub fn fig16(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable>
         }
     }
     Ok(t)
+}
+
+/// Output of [`explore`]: the full tech×config grid plus its Pareto
+/// frontier, per benchmark.
+pub struct ExploreOutcome {
+    /// every evaluated design point, frontier members marked `*`
+    pub grid: TextTable,
+    /// the non-dominated (energy improvement, speedup) points only
+    pub frontier: TextTable,
+    /// `(bench, tech, config)` of each frontier member, grid order
+    pub frontier_points: Vec<(String, Technology, String)>,
+}
+
+/// Cross-technology design-space exploration (the generalization of
+/// Figs 14–16): sweep `techs` × `presets` for each benchmark and rank the
+/// results by Pareto dominance on (energy improvement, speedup) — both
+/// normalized to the design point's own non-CiM baseline, so frontier
+/// membership answers "which device+geometry should I build for this
+/// workload?".  All points go through the coordinator's cached path like
+/// every other experiment.
+pub fn explore(
+    benches: &[&str],
+    techs: &[Technology],
+    presets: &[&str],
+    cim: CimLevels,
+    rule: LocalityRule,
+    opts: SweepOptions,
+    backend: &mut dyn Backend,
+) -> Result<ExploreOutcome> {
+    let mut configs = Vec::new();
+    for preset in presets {
+        let base = SystemConfig::preset(preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset}'"))?;
+        for &tech in techs {
+            let mut c = base.clone().with_tech(tech).with_cim(cim);
+            c.name = format!("{preset}-{}", tech.name());
+            configs.push(c);
+        }
+    }
+    let points: Vec<SweepPoint> = cross(benches, &configs, rule);
+    let t0 = std::time::Instant::now();
+    let (rows, sweep_stats) =
+        Coordinator::new(opts).run_sweep_with_stats(&points, backend)?;
+    eprintln!("{}", format_stats(&sweep_stats, t0.elapsed().as_secs_f64()));
+
+    let mut grid = TextTable::new(
+        &format!(
+            "explore — {} tech × {} config Pareto grid (* = frontier)",
+            techs.len(),
+            presets.len()
+        ),
+        &["bench", "tech", "config", "MACR", "E-impr", "speedup", "Pareto"],
+    );
+    let mut frontier = TextTable::new(
+        "explore — Pareto frontier (non-dominated on E-impr × speedup)",
+        &["bench", "tech", "config", "E-impr", "speedup"],
+    );
+    let mut frontier_points = Vec::new();
+    for b in benches {
+        let bench_rows: Vec<&SweepRow> =
+            rows.iter().filter(|r| r.bench == *b).collect();
+        let scores: Vec<(f64, f64)> = bench_rows
+            .iter()
+            .map(|r| (r.result.improvement, r.result.speedup))
+            .collect();
+        let on_front = stats::pareto_front(&scores);
+        for (r, &front) in bench_rows.iter().zip(&on_front) {
+            let preset = r
+                .config_name
+                .split('-')
+                .next()
+                .unwrap_or(&r.config_name)
+                .to_string();
+            grid.row(vec![
+                workloads::display_name(&r.bench).into(),
+                r.tech.name().into(),
+                preset.clone(),
+                format!("{:.1}%", r.macr.ratio() * 100.0),
+                f(r.result.improvement, 2),
+                f(r.result.speedup, 2),
+                if front { "*".into() } else { String::new() },
+            ]);
+            if front {
+                frontier.row(vec![
+                    workloads::display_name(&r.bench).into(),
+                    r.tech.name().into(),
+                    preset.clone(),
+                    f(r.result.improvement, 2),
+                    f(r.result.speedup, 2),
+                ]);
+                frontier_points.push((r.bench.clone(), r.tech, preset));
+            }
+        }
+    }
+    Ok(ExploreOutcome { grid, frontier, frontier_points })
 }
 
 #[cfg(test)]
@@ -368,6 +465,37 @@ mod tests {
     fn table6_produces_all_17_rows() {
         let t = table6(fast_opts(), &mut NativeBackend).unwrap();
         assert_eq!(t.num_rows(), 17);
+    }
+
+    #[test]
+    fn explore_covers_the_tech_config_grid_and_marks_a_frontier() {
+        let techs = [
+            Technology::SRAM,
+            Technology::FEFET,
+            Technology::RRAM,
+            Technology::STT_MRAM,
+        ];
+        let out = explore(
+            &["lcs"],
+            &techs,
+            &["c1", "c2", "c3"],
+            CimLevels::Both,
+            LocalityRule::AnyCache,
+            fast_opts(),
+            &mut NativeBackend,
+        )
+        .unwrap();
+        assert_eq!(out.grid.num_rows(), 12, "4 techs x 3 configs");
+        assert!(!out.frontier_points.is_empty());
+        assert!(out.frontier_points.len() <= 12);
+        // every frontier row names a swept tech and preset
+        for (bench, tech, preset) in &out.frontier_points {
+            assert_eq!(bench, "lcs");
+            assert!(techs.contains(tech));
+            assert!(["c1", "c2", "c3"].contains(&preset.as_str()));
+        }
+        // the frontier table mirrors frontier_points
+        assert_eq!(out.frontier.num_rows(), out.frontier_points.len());
     }
 
     #[test]

@@ -27,19 +27,32 @@
     clippy::new_without_default,
     clippy::unnecessary_map_or
 )]
+// Every public item in the evaluator core must be documented; CI enforces
+// this via `RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`.  Modules
+// still carrying the pre-documentation-pass surface opt out explicitly
+// below (`#[allow(missing_docs)]`) — shrinking that list is tracked in
+// ROADMAP.md.
+#![warn(missing_docs)]
 
+#[allow(missing_docs)]
 pub mod analyzer;
+#[allow(missing_docs)]
 pub mod asm;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod experiments;
+#[allow(missing_docs)]
 pub mod isa;
 pub mod pipeline;
 pub mod probes;
 pub mod profiler;
+#[allow(missing_docs)]
 pub mod reshape;
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod sim;
+#[allow(missing_docs)]
 pub mod util;
+#[allow(missing_docs)]
 pub mod workloads;

@@ -1,7 +1,7 @@
 //! `eva-cim` — the Eva-CiM command-line launcher (L3 leader entrypoint).
 //!
 //! ```text
-//! eva-cim list                                   benchmarks + presets
+//! eva-cim list                                   benchmarks, presets, techs
 //! eva-cim run <bench> [--config c1] [--tech sram] [--cim both]
 //!                     [--scale N] [--seed N] [--rule any|level|bank]
 //!                     [--backend auto|native|pjrt]
@@ -9,12 +9,18 @@
 //! eva-cim sweep [--benches a,b] [--configs c1,c2] [--techs sram,fefet]
 //!               [--scale N] [--jobs N] [--chunk N] [--csv out.csv]
 //!               [--cache-dir DIR] [--resume]
+//! eva-cim explore --bench <b> [--techs all] [--configs c1,c2,c3]
+//!               [--cache-dir DIR] [--resume] [--csv out.csv]
 //! eva-cim table <table3|table5|table6|fig11|fig12|fig13|fig14|fig15|fig16>
 //!               [--cache-dir DIR] [--resume] [--jobs N]
 //! eva-cim validate                               Table V + Fig 12
 //! eva-cim sensitivity <bench> [--config c1]      DSE gradient (PJRT)
 //! eva-cim calib                                  print calibration constants
 //! ```
+//!
+//! Every command additionally accepts `--tech-file <file.toml>` (repeatable)
+//! to register custom device technologies from `[tech.<name>]` sections
+//! before flags like `--tech`/`--techs` are resolved.
 //!
 //! (clap is unavailable in this offline environment; flags are parsed by
 //! the tiny matcher in [`cli`].)
@@ -35,6 +41,7 @@ use eva_cim::analyzer::{analyze, LocalityRule, StreamOutcome};
 use eva_cim::config::{CimLevels, SystemConfig, Technology};
 use eva_cim::coordinator::{cross, format_stats, Coordinator, SweepOptions};
 use eva_cim::energy::calib;
+use eva_cim::energy::device;
 use eva_cim::experiments;
 use eva_cim::pipeline::run_pipelined;
 use eva_cim::probes::TraceSummary;
@@ -101,6 +108,15 @@ mod cli {
                 .map(|(_, v)| v.as_str())
         }
 
+        /// Every occurrence of a repeatable flag, in order.
+        pub fn flag_all(&self, key: &str) -> Vec<&str> {
+            self.flags
+                .iter()
+                .filter(|(k, _)| k == key)
+                .map(|(_, v)| v.as_str())
+                .collect()
+        }
+
         pub fn flag_or(&self, key: &str, default: &str) -> String {
             self.flag(key).unwrap_or(default).to_string()
         }
@@ -127,6 +143,29 @@ fn parse_rule(s: &str) -> Result<LocalityRule, String> {
     LocalityRule::from_name(s).ok_or_else(|| format!("unknown locality rule '{s}'"))
 }
 
+/// Register every `[tech.<name>]` section of each `--tech-file` argument.
+/// Must run before `--tech`/`--techs` flags are resolved.
+fn load_tech_files(args: &cli::Args) -> Result<(), String> {
+    for path in args.flag_all("tech-file") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        let registered = eva_cim::config::parse::register_technologies(&text)
+            .map_err(|e| format!("{path}: {e}"))?;
+        if registered.is_empty() {
+            return Err(format!(
+                "{path}: no [tech.<name>] sections found in tech file"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Resolve a `--tech`-style name or fail with the registry's listing +
+/// did-you-mean diagnostic.
+fn parse_tech(name: &str) -> Result<Technology, String> {
+    Technology::from_name(name).ok_or_else(|| device::unknown_tech_message(name))
+}
+
 fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
     let mut cfg = if let Some(path) = args.flag("config-file") {
         let text = std::fs::read_to_string(path)
@@ -138,7 +177,7 @@ fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
             .ok_or_else(|| format!("unknown preset '{preset}'"))?
     };
     if let Some(t) = args.flag("tech") {
-        cfg.tech = Technology::from_name(t).ok_or_else(|| format!("unknown tech '{t}'"))?;
+        cfg.tech = parse_tech(t)?;
     }
     if let Some(c) = args.flag("cim") {
         cfg.cim_levels =
@@ -165,13 +204,36 @@ fn sweep_opts_from_args(args: &cli::Args) -> Result<SweepOptions, String> {
     })
 }
 
-fn make_backend(kind: &str) -> Result<Box<dyn Backend>, String> {
+/// Resolve `--backend`.  `techs` is every technology the command will
+/// evaluate: the AOT'd PJRT graphs only cover the frozen SRAM/FeFET
+/// table, so `auto` must resolve to the native mirror whenever a registry
+/// technology (rram, stt-mram, TOML customs) is in play, and an explicit
+/// `--backend pjrt` fails up front instead of after the simulation.
+fn make_backend(kind: &str, techs: &[Technology]) -> Result<Box<dyn Backend>, String> {
+    let outside_table =
+        techs.iter().find(|t| t.index() >= calib::NTECH).copied();
     match kind {
         "native" => Ok(Box::new(NativeBackend)),
-        "pjrt" => PjrtRuntime::load(&PjrtRuntime::default_dir())
-            .map(|rt| Box::new(rt) as Box<dyn Backend>)
-            .map_err(|e| format!("{e:#}")),
-        "auto" => Ok(best_backend(&PjrtRuntime::default_dir())),
+        "pjrt" => {
+            if let Some(t) = outside_table {
+                return Err(format!(
+                    "the pjrt backend only covers the {}-row AOT tech table \
+                     (sram/fefet); technology '{}' needs --backend native",
+                    calib::NTECH,
+                    t.name()
+                ));
+            }
+            PjrtRuntime::load(&PjrtRuntime::default_dir())
+                .map(|rt| Box::new(rt) as Box<dyn Backend>)
+                .map_err(|e| format!("{e:#}"))
+        }
+        "auto" => {
+            if outside_table.is_some() {
+                Ok(Box::new(NativeBackend))
+            } else {
+                Ok(best_backend(&PjrtRuntime::default_dir()))
+            }
+        }
         _ => Err(format!("unknown backend '{kind}'")),
     }
 }
@@ -191,7 +253,21 @@ fn cmd_list() -> Result<(), String> {
             c.l2.pretty()
         );
     }
-    println!("\ntechnologies: sram, fefet   cim levels: none, l1, l2, both");
+    println!("\ntechnologies (--tech; extend via --tech-file or [tech.<name>]):");
+    for tech in Technology::all() {
+        let m = device::model_of(tech);
+        let aliases = if m.aliases.is_empty() {
+            String::new()
+        } else {
+            format!("  aliases: {}", m.aliases.join(", "))
+        };
+        println!(
+            "  {:10} {}{aliases}",
+            tech.name(),
+            if device::is_builtin(tech) { "built-in" } else { "custom  " },
+        );
+    }
+    println!("\ncim levels: none, l1, l2, both");
     Ok(())
 }
 
@@ -281,7 +357,7 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
     let scale = args.usize_flag("scale", 0)?;
     let seed = args.usize_flag("seed", 42)? as u64;
     let rule = parse_rule(&args.flag_or("rule", "any"))?;
-    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let mut backend = make_backend(&args.flag_or("backend", "auto"), &[cfg.tech])?;
 
     let prog = workloads::build(bench, scale, seed)
         .ok_or_else(|| format!("unknown benchmark '{bench}' (see `eva-cim list`)"))?;
@@ -298,7 +374,7 @@ fn cmd_asm(args: &cli::Args) -> Result<(), String> {
     let prog = eva_cim::asm::parser::parse(path, &text).map_err(|e| e.to_string())?;
     let cfg = build_config(args)?;
     let rule = parse_rule(&args.flag_or("rule", "any"))?;
-    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let mut backend = make_backend(&args.flag_or("backend", "auto"), &[cfg.tech])?;
     let (summary, outcome, reshaped) = stream_single(&prog, &cfg, rule)?;
     report_single(&cfg, &summary, &outcome, &reshaped, backend.as_mut())
 }
@@ -315,8 +391,7 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
         let base = SystemConfig::preset(preset.trim())
             .ok_or_else(|| format!("unknown preset '{preset}'"))?;
         for tech in args.flag_or("techs", "sram").split(',') {
-            let tech = Technology::from_name(tech.trim())
-                .ok_or_else(|| format!("unknown tech '{tech}'"))?;
+            let tech = parse_tech(tech.trim())?;
             let mut c = base.clone().with_tech(tech);
             c.name = format!("{}-{}", preset.trim(), tech.name());
             if let Some(cim) = args.flag("cim") {
@@ -328,7 +403,8 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
     }
     let rule = parse_rule(&args.flag_or("rule", "any"))?;
     let opts = sweep_opts_from_args(args)?;
-    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let swept: Vec<Technology> = configs.iter().map(|c| c.tech).collect();
+    let mut backend = make_backend(&args.flag_or("backend", "auto"), &swept)?;
     let points = cross(&bench_refs, &configs, rule);
     eprintln!(
         "sweep: {} points ({} benches x {} configs), backend={}, cache={}",
@@ -370,13 +446,82 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `eva-cim explore`: sweep tech × cache-config for one or more benchmarks
+/// and print the Pareto grid + frontier (the cross-technology
+/// generalization of the paper's Figs 14–16).
+fn cmd_explore(args: &cli::Args) -> Result<(), String> {
+    let benches: Vec<String> = match (args.flag("bench"), args.flag("benches")) {
+        (Some(b), None) => vec![b.to_string()],
+        (None, Some(bs)) => bs.split(',').map(|s| s.trim().to_string()).collect(),
+        (Some(_), Some(_)) => {
+            return Err("pass either --bench or --benches, not both".into())
+        }
+        (None, None) => {
+            return Err(
+                "usage: eva-cim explore --bench <b> [--techs t1,t2] \
+                 [--configs c1,c2,c3] [--cim both] [--cache-dir DIR] [--resume]"
+                    .into(),
+            )
+        }
+    };
+    let bench_refs: Vec<&str> = benches.iter().map(|s| s.as_str()).collect();
+    let techs: Vec<Technology> = match args.flag("techs") {
+        // the advertised default: every registered technology
+        None | Some("all") => Technology::all(),
+        Some(ts) => ts
+            .split(',')
+            .map(|t| parse_tech(t.trim()))
+            .collect::<Result<_, _>>()?,
+    };
+    let presets: Vec<String> = args
+        .flag_or("configs", "c1,c2,c3")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let preset_refs: Vec<&str> = presets.iter().map(|s| s.as_str()).collect();
+    let cim = CimLevels::from_name(&args.flag_or("cim", "both"))
+        .ok_or_else(|| format!("unknown cim levels '{}'", args.flag_or("cim", "both")))?;
+    let rule = parse_rule(&args.flag_or("rule", "any"))?;
+    let opts = sweep_opts_from_args(args)?;
+    let mut backend = make_backend(&args.flag_or("backend", "auto"), &techs)?;
+    eprintln!(
+        "explore: {} benches x {} techs x {} configs = {} points, backend={}",
+        bench_refs.len(),
+        techs.len(),
+        preset_refs.len(),
+        bench_refs.len() * techs.len() * preset_refs.len(),
+        backend.name(),
+    );
+    let out = experiments::explore(
+        &bench_refs,
+        &techs,
+        &preset_refs,
+        cim,
+        rule,
+        opts,
+        backend.as_mut(),
+    )
+    .map_err(|e| format!("{e:#}"))?;
+    println!("{}", out.grid.render());
+    println!("{}", out.frontier.render());
+    if let Some(csv) = args.flag("csv") {
+        std::fs::write(csv, out.grid.to_csv()).map_err(|e| e.to_string())?;
+        eprintln!("wrote {csv}");
+    }
+    Ok(())
+}
+
 fn cmd_table(args: &cli::Args) -> Result<(), String> {
     let id = args
         .positional
         .get(1)
         .ok_or("usage: eva-cim table <id> (table3|table5|table6|fig11..fig16|calib)")?;
     let opts = sweep_opts_from_args(args)?;
-    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    // the paper tables/figures only evaluate the AOT-covered pair
+    let mut backend = make_backend(
+        &args.flag_or("backend", "auto"),
+        &[Technology::SRAM, Technology::FEFET],
+    )?;
     let err = |e: anyhow::Error| format!("{e:#}");
     let table = match id.as_str() {
         "table3" => experiments::table3(),
@@ -399,7 +544,8 @@ fn cmd_table(args: &cli::Args) -> Result<(), String> {
 }
 
 fn cmd_validate(args: &cli::Args) -> Result<(), String> {
-    let mut backend = make_backend(&args.flag_or("backend", "auto"))?;
+    let mut backend =
+        make_backend(&args.flag_or("backend", "auto"), &[Technology::SRAM])?;
     let t5 = experiments::table5(backend.as_mut(), 0).map_err(|e| format!("{e:#}"))?;
     println!("{}", t5.render());
     let t12 = experiments::fig12(20, 0).map_err(|e| format!("{e:#}"))?;
@@ -451,7 +597,7 @@ fn cmd_calib() -> Result<(), String> {
     Ok(())
 }
 
-const USAGE: &str = "usage: eva-cim <list|run|asm|sweep|table|validate|sensitivity|calib> [flags]
+const USAGE: &str = "usage: eva-cim <list|run|asm|sweep|explore|table|validate|sensitivity|calib> [flags]
 try: eva-cim list";
 
 fn main() -> ExitCode {
@@ -463,12 +609,18 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    // custom technologies first: every later flag may reference them
+    if let Err(e) = load_tech_files(&args) {
+        eprintln!("error: {e}");
+        return ExitCode::FAILURE;
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
         "list" => cmd_list(),
         "run" => cmd_run(&args),
         "asm" => cmd_asm(&args),
         "sweep" => cmd_sweep(&args),
+        "explore" => cmd_explore(&args),
         "table" => cmd_table(&args),
         "validate" => cmd_validate(&args),
         "sensitivity" => cmd_sensitivity(&args),

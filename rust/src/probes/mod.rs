@@ -15,12 +15,16 @@ use crate::isa::{FuncUnit, Instruction};
 /// Memory hierarchy level that serviced an access.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MemLevel {
+    /// serviced by the L1 data (or instruction) cache
     L1,
+    /// serviced by the unified L2
     L2,
+    /// serviced by main memory
     Dram,
 }
 
 impl MemLevel {
+    /// Display name (`"L1"`, `"L2"`, `"DRAM"`).
     pub fn name(&self) -> &'static str {
         match self {
             MemLevel::L1 => "L1",
@@ -37,13 +41,17 @@ impl MemLevel {
 pub struct MemAccessInfo {
     /// request address (virtual = physical in this substrate)
     pub addr: u32,
+    /// access width in bytes
     pub size: u8,
+    /// true for stores, false for loads
     pub is_store: bool,
     /// level whose array serviced the request (data residency)
     pub level: MemLevel,
     /// bank id within the servicing level's array
     pub bank: u32,
+    /// hit in the L1 data cache
     pub l1_hit: bool,
+    /// hit in the L2 (only meaningful when `l1_hit` is false)
     pub l2_hit: bool,
     /// request was merged into an outstanding MSHR for the same line
     pub mshr_merged: bool,
@@ -60,16 +68,23 @@ pub struct IState {
     pub seq: u64,
     /// instruction index in the program text (the "PC")
     pub pc: u32,
+    /// the decoded instruction word
     pub instr: Instruction,
+    /// functional unit that executed it
     pub fu: FuncUnit,
-    // pipeline stage ticks (Fig 7's seven stages, writeback folded into
-    // complete)
+    /// tick the instruction was fetched (Fig 7 stage 1)
     pub tick_fetch: u64,
+    /// tick it was decoded
     pub tick_decode: u64,
+    /// tick its registers were renamed
     pub tick_rename: u64,
+    /// tick it was dispatched to the issue queue
     pub tick_dispatch: u64,
+    /// tick it issued to its functional unit
     pub tick_issue: u64,
+    /// tick it completed execution (writeback folded in)
     pub tick_complete: u64,
+    /// tick it committed
     pub tick_commit: u64,
     /// memory access info for loads/stores
     pub mem: Option<MemAccessInfo>,
@@ -79,48 +94,79 @@ pub struct IState {
 /// (the McPAT-facing half of the trace).
 #[derive(Clone, Debug, Default)]
 pub struct PipeStats {
+    /// instructions fetched (wrong-path included)
     pub fetched: u64,
+    /// instructions decoded
     pub decoded: u64,
+    /// instructions renamed
     pub renamed: u64,
+    /// issue-queue read ports exercised
     pub iq_reads: u64,
+    /// issue-queue write ports exercised
     pub iq_writes: u64,
+    /// reorder-buffer reads
     pub rob_reads: u64,
+    /// reorder-buffer writes
     pub rob_writes: u64,
+    /// integer register-file reads
     pub int_rf_reads: u64,
+    /// integer register-file writes
     pub int_rf_writes: u64,
+    /// floating-point register-file reads
     pub fp_rf_reads: u64,
+    /// floating-point register-file writes
     pub fp_rf_writes: u64,
+    /// executions per functional unit
     pub fu_counts: [u64; crate::isa::func_unit::NUM_FUNC_UNITS],
+    /// branch-predictor lookups
     pub bpred_lookups: u64,
+    /// branch mispredictions
     pub bpred_mispredicts: u64,
+    /// load/store-queue reads
     pub lsq_reads: u64,
+    /// load/store-queue writes
     pub lsq_writes: u64,
 }
 
 /// AccessProbe aggregate: per-level hit/miss counters.
 #[derive(Clone, Debug, Default)]
 pub struct MemStats {
+    /// L1I fetch hits
     pub l1i_hits: u64,
+    /// L1I fetch misses
     pub l1i_misses: u64,
+    /// L1D load hits
     pub l1d_read_hits: u64,
+    /// L1D load misses
     pub l1d_read_misses: u64,
+    /// L1D store hits
     pub l1d_write_hits: u64,
+    /// L1D store misses
     pub l1d_write_misses: u64,
+    /// L2 read hits
     pub l2_read_hits: u64,
+    /// L2 read misses
     pub l2_read_misses: u64,
+    /// L2 write hits
     pub l2_write_hits: u64,
+    /// L2 write misses
     pub l2_write_misses: u64,
+    /// main-memory reads
     pub dram_reads: u64,
+    /// main-memory writes
     pub dram_writes: u64,
     /// writebacks of dirty lines (counted as writes to the lower level)
     pub writebacks: u64,
+    /// requests merged into outstanding MSHRs
     pub mshr_merges: u64,
 }
 
 /// Why the simulation stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StopReason {
+    /// the program executed its `halt`
     Halt,
+    /// the `Limits::max_instructions` budget ran out
     MaxInstructions,
     /// PC ran past the end of the text segment
     RanOffEnd,
@@ -131,12 +177,16 @@ pub enum StopReason {
 /// its functional unit and its memory access, without the stage ticks.
 #[derive(Clone, Copy, Debug)]
 pub struct InstrInfo {
+    /// the decoded instruction word
     pub instr: Instruction,
+    /// functional unit that executed it
     pub fu: FuncUnit,
+    /// memory access info for loads/stores
     pub mem: Option<MemAccessInfo>,
 }
 
 impl InstrInfo {
+    /// Project the timeline-free facts out of a full I-state record.
     pub fn of(is: &IState) -> Self {
         Self { instr: is.instr, fu: is.fu, mem: is.mem }
     }
@@ -148,15 +198,22 @@ impl InstrInfo {
 /// [`TraceSink`].
 #[derive(Clone, Debug)]
 pub struct TraceSummary {
+    /// program name
     pub program: String,
+    /// pipeline activity counters
     pub pipe: PipeStats,
+    /// memory hierarchy hit/miss counters
     pub mem: MemStats,
+    /// simulated cycles
     pub cycles: u64,
+    /// committed instructions
     pub committed: u64,
+    /// why the simulation ended
     pub stop: StopReason,
 }
 
 impl TraceSummary {
+    /// Cycles per committed instruction (0.0 for an empty run).
     pub fn cpi(&self) -> f64 {
         if self.committed == 0 {
             0.0
@@ -171,13 +228,51 @@ impl TraceSummary {
 /// order (`seq` is dense and ascending).  Implementations must not assume
 /// the stream is ever materialized: the whole point of the sink interface
 /// is that analysis, spilling and transport all run in O(window) memory.
+///
+/// Driving the simulator with a custom sink:
+///
+/// ```
+/// use eva_cim::config::SystemConfig;
+/// use eva_cim::probes::{IState, TraceSink};
+/// use eva_cim::sim::{simulate_into, Limits};
+///
+/// /// Counts committed memory instructions without retaining the stream.
+/// #[derive(Default)]
+/// struct MemOpCounter(u64);
+///
+/// impl TraceSink for MemOpCounter {
+///     fn on_commit(&mut self, is: IState) {
+///         if is.mem.is_some() {
+///             self.0 += 1;
+///         }
+///     }
+/// }
+///
+/// let mut a = eva_cim::asm::Asm::new("doc-sink");
+/// let buf = a.data.alloc_i32("buf", &[1, 2, 3, 4]);
+/// a.li(1, buf as i32);
+/// a.lw(2, 1, 0); // load
+/// a.lw(3, 1, 4); // load
+/// a.add(4, 2, 3);
+/// a.sw(4, 1, 8); // store
+/// a.halt();
+///
+/// let cfg = SystemConfig::default();
+/// let mut sink = MemOpCounter::default();
+/// let summary =
+///     simulate_into(&a.assemble(), &cfg, Limits::default(), &mut sink).unwrap();
+/// assert_eq!(sink.0, 3); // two loads + one store
+/// assert!(summary.committed >= 5);
+/// ```
 pub trait TraceSink {
+    /// Receive one committed instruction record.
     fn on_commit(&mut self, is: IState);
 }
 
 /// The trivial sink: buffer every record (the legacy batch view).
 #[derive(Default)]
 pub struct CollectSink {
+    /// the materialized committed-instruction queue
     pub ciq: Vec<IState>,
 }
 
@@ -190,13 +285,19 @@ impl TraceSink for CollectSink {
 /// Full output of one simulation: the materialized modeling-stage product.
 #[derive(Clone, Debug)]
 pub struct Trace {
+    /// program name
     pub program: String,
     /// the committed instruction queue with I-state per entry
     pub ciq: Vec<IState>,
+    /// pipeline activity counters
     pub pipe: PipeStats,
+    /// memory hierarchy hit/miss counters
     pub mem: MemStats,
+    /// simulated cycles
     pub cycles: u64,
+    /// committed instructions
     pub committed: u64,
+    /// why the simulation ended
     pub stop: StopReason,
 }
 
@@ -226,6 +327,7 @@ impl Trace {
         }
     }
 
+    /// Cycles per committed instruction (0.0 for an empty run).
     pub fn cpi(&self) -> f64 {
         if self.committed == 0 {
             0.0

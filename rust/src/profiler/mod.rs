@@ -14,14 +14,20 @@ use crate::reshape::{CounterSet, Reshaped, NPERF, P_CIM_ADD_L1, P_CIM_ADD_L2,
 /// One design point handed to the profiler backend.
 #[derive(Clone, Debug)]
 pub struct ProfileInputs {
+    /// L1 design-point row (geometry + tech + level columns)
     pub cfg_l1: CfgRow,
+    /// L2 design-point row
     pub cfg_l2: CfgRow,
+    /// event counters of the unmodified (baseline) trace
     pub counters_base: CounterSet,
+    /// event counters of the reshaped (CiM) trace
     pub counters_cim: CounterSet,
+    /// performance vector (cycles, committed, removed, CiM-add counts, …)
     pub perf: [f64; NPERF],
 }
 
 impl ProfileInputs {
+    /// Assemble the profiler inputs for one config + reshaped trace.
     pub fn new(cfg: &SystemConfig, reshaped: &Reshaped) -> Self {
         let (cfg_l1, cfg_l2) = energy::cfg_rows(cfg);
         Self {
@@ -38,9 +44,13 @@ impl ProfileInputs {
 /// graph, structured).
 #[derive(Clone, Debug, Default)]
 pub struct ProfileResult {
+    /// per-component energy (pJ) of the baseline system
     pub comps_base: [f64; NCOMP],
+    /// per-component energy (pJ) of the CiM system
     pub comps_cim: [f64; NCOMP],
+    /// baseline total energy (pJ), DRAM excluded (§VI-B scope)
     pub total_base: f64,
+    /// CiM total energy (pJ), DRAM excluded
     pub total_cim: f64,
     /// energy improvement = baseline / CiM (> 1 means CiM wins)
     pub improvement: f64,
@@ -48,10 +58,15 @@ pub struct ProfileResult {
     pub speedup: f64,
     /// share of the improvement contributed by the processor side
     pub ratio_proc: f64,
+    /// share of the improvement contributed by the caches
     pub ratio_cache: f64,
+    /// per-op L1 energies (pJ) at this design point
     pub e_l1: [f64; NOPS],
+    /// per-op L1 latencies (cycles)
     pub lat_l1: [f64; NOPS],
+    /// per-op L2 energies (pJ)
     pub e_l2: [f64; NOPS],
+    /// per-op L2 latencies (cycles)
     pub lat_l2: [f64; NOPS],
 }
 

@@ -21,7 +21,10 @@ use crate::profiler::{ProfileInputs, ProfileResult};
 
 /// Abstraction over the two profiler backends.
 pub trait Backend {
+    /// Evaluate a batch of design points (one [`ProfileResult`] each).
     fn evaluate_batch(&mut self, inputs: &[ProfileInputs]) -> Result<Vec<ProfileResult>>;
+    /// Stable backend identifier (`"native"` / `"pjrt"`) — part of the
+    /// sweep result-cache key, because the two compute in f64 vs f32.
     fn name(&self) -> &'static str;
 }
 
@@ -53,8 +56,8 @@ mod pjrt_impl {
     use anyhow::{anyhow, bail, Context, Result};
 
     use crate::energy::calib::{
-        group_matrix_f32, static_unit_energy_f32, tech_table_f32, NCFG, NCOMP,
-        NOPS, NTECH, NTECH_PARAMS,
+        group_matrix_f32, static_unit_energy_f32, tech_table_f32, CFG_TECH,
+        NCFG, NCOMP, NOPS, NTECH, NTECH_PARAMS,
     };
     use crate::profiler::{ProfileInputs, ProfileResult};
     use crate::reshape::{NC, NPERF};
@@ -101,6 +104,25 @@ mod pjrt_impl {
         cb: Vec<f32>,
         cc: Vec<f32>,
         pf: Vec<f32>,
+    }
+
+    /// The AOT'd graphs were lowered against the frozen two-row
+    /// `TECH_TABLE` literal, so registry technologies beyond SRAM/FeFET
+    /// (RRAM, STT-MRAM, TOML customs) cannot be evaluated on this
+    /// backend — reject them with a pointer to the native mirror rather
+    /// than silently clamping to the wrong device.
+    fn check_tech_in_table(rows: &[[f64; NCFG]]) -> Result<()> {
+        for r in rows {
+            let idx = r[CFG_TECH] as usize;
+            if idx >= NTECH {
+                bail!(
+                    "technology index {idx} is outside the {NTECH}-row AOT \
+                     tech table (PJRT artifacts only cover sram/fefet); \
+                     use --backend native for registry technologies"
+                );
+            }
+        }
+        Ok(())
     }
 
     fn pack_chunk(chunk: &[ProfileInputs], b: usize) -> ChunkArgs {
@@ -172,6 +194,7 @@ mod pjrt_impl {
             Ok(Self { client, profiler, energy_model, sensitivity, batch, executions: 0 })
         }
 
+        /// Name of the PJRT platform the client runs on (e.g. `"cpu"`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -191,6 +214,9 @@ mod pjrt_impl {
         }
 
         fn profile_args(&self, chunk: &[ProfileInputs]) -> Result<[xla::Literal; 8]> {
+            for inp in chunk {
+                check_tech_in_table(&[inp.cfg_l1, inp.cfg_l2])?;
+            }
             let b = self.batch;
             let a = pack_chunk(chunk, b);
             Ok([
@@ -211,6 +237,7 @@ mod pjrt_impl {
             &mut self,
             rows: &[[f64; NCFG]],
         ) -> Result<(Vec<[f64; NOPS]>, Vec<[f64; NOPS]>)> {
+            check_tech_in_table(rows)?;
             let b = self.batch;
             let mut energies = Vec::with_capacity(rows.len());
             let mut lats = Vec::with_capacity(rows.len());
@@ -364,10 +391,12 @@ mod pjrt_stub {
             );
         }
 
+        /// Stub: reports `"unavailable"`.
         pub fn platform(&self) -> String {
             "unavailable".into()
         }
 
+        /// Stub: always fails (`pjrt` feature disabled).
         pub fn energy_latency(
             &mut self,
             _rows: &[[f64; NCFG]],
@@ -375,6 +404,7 @@ mod pjrt_stub {
             bail!("pjrt feature disabled");
         }
 
+        /// Stub: always fails (`pjrt` feature disabled).
         pub fn evaluate_profile(
             &mut self,
             _inputs: &[ProfileInputs],
@@ -382,6 +412,7 @@ mod pjrt_stub {
             bail!("pjrt feature disabled");
         }
 
+        /// Stub: always fails (`pjrt` feature disabled).
         pub fn sensitivity(
             &mut self,
             _inputs: &[ProfileInputs],

@@ -95,6 +95,20 @@ pub fn time_it<F: FnMut()>(mut f: F, min_iters: u64, min_time_ms: u64) -> (u64, 
     (iters, ns)
 }
 
+/// Pareto frontier under "larger is better on both axes": `out[i]` is true
+/// iff no other point dominates point `i` (strictly better on one axis, at
+/// least as good on the other).  Duplicate points are all kept — they
+/// dominate each other only weakly.  O(n²), fine for sweep-sized inputs.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<bool> {
+    let dominates = |a: &(f64, f64), b: &(f64, f64)| {
+        a.0 >= b.0 && a.1 >= b.1 && (a.0 > b.0 || a.1 > b.1)
+    };
+    points
+        .iter()
+        .map(|p| !points.iter().any(|q| dominates(q, p)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +159,29 @@ mod tests {
         } else {
             assert_eq!(kb, 0);
         }
+    }
+
+    #[test]
+    fn pareto_front_basic() {
+        // (3,1) and (1,3) are frontier; (1,1) dominated by both; (2,2)
+        // dominated by nothing; (3,3) dominates everything
+        let pts = [(3.0, 1.0), (1.0, 3.0), (1.0, 1.0), (2.0, 2.0), (3.0, 3.0)];
+        assert_eq!(
+            pareto_front(&pts),
+            vec![false, false, false, false, true]
+        );
+        let pts = [(3.0, 1.0), (1.0, 3.0), (2.0, 2.0), (1.0, 1.0)];
+        assert_eq!(pareto_front(&pts), vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn pareto_front_keeps_duplicates_and_handles_edges() {
+        assert!(pareto_front(&[]).is_empty());
+        assert_eq!(pareto_front(&[(1.0, 1.0)]), vec![true]);
+        // exact duplicates only weakly dominate each other: both stay
+        assert_eq!(
+            pareto_front(&[(2.0, 2.0), (2.0, 2.0), (1.0, 5.0)]),
+            vec![true, true, true]
+        );
     }
 }

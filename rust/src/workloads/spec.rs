@@ -107,7 +107,7 @@ pub fn astar(scale: usize, seed: u64) -> Program {
 }
 
 /// h264ref: SAD-based motion estimation — for each candidate offset, sum
-/// |cur[i] − ref[i+off]| over a 16×16 block; keep the argmin.
+/// `|cur[i] − ref[i+off]|` over a 16×16 block; keep the argmin.
 pub fn h264ref(scale: usize, seed: u64) -> Program {
     let blocks = if scale == 0 { 24 } else { (scale * 6).max(2) };
     let bsz = 256usize; // 16x16

@@ -1,0 +1,292 @@
+//! The device-registry refactor contract:
+//!
+//! 1. the built-in SRAM/FeFET registry entries are **byte-identical** to
+//!    the legacy closed-enum model — same `TECH_TABLE` parameters, and
+//!    bit-for-bit equal `energy_latency` output across geometries (the
+//!    legacy closed-form is re-implemented here as the oracle);
+//! 2. a sweep cache written by a pre-registry build is treated as a
+//!    *miss* (the key schema now covers device-model content), never as
+//!    stale rows;
+//! 3. a TOML-defined custom technology round-trips through the result
+//!    cache under a content-hash key distinct from every built-in's.
+
+use std::path::PathBuf;
+
+use eva_cim::analyzer::LocalityRule;
+use eva_cim::config::{parse, SystemConfig, Technology};
+use eva_cim::coordinator::{cross, key, persist, Coordinator, SweepOptions};
+use eva_cim::energy::calib::*;
+use eva_cim::energy::{device, energy_latency, CfgRow};
+use eva_cim::runtime::NativeBackend;
+use eva_cim::util::json::Json;
+use eva_cim::util::rng::Rng;
+
+/// The pre-registry array model, verbatim: power-law interpolation over
+/// the hardcoded two-row `TECH_TABLE` with the global anchor constants.
+fn legacy_energy_latency(row: &CfgRow) -> ([f64; NOPS], [f64; NOPS]) {
+    let cap = row[CFG_CAPACITY];
+    let assoc = row[CFG_ASSOC].max(1.0);
+    let banks = row[CFG_BANKS].max(1.0);
+    let tech = (row[CFG_TECH] as usize).min(NTECH - 1);
+    let t = &TECH_TABLE[tech];
+
+    let ln4 = 4.0f64.ln();
+    let ln2 = 2.0f64.ln();
+    let cap_eff = cap * (ANCHOR_BANKS / banks);
+    let cap_n = (cap_eff / ANCHOR_L1_CAP).ln();
+    let assoc_f = (assoc / ANCHOR_ASSOC).powf(ASSOC_EXP);
+
+    let mut energy = [0.0; NOPS];
+    let mut lat = [0.0; NOPS];
+    for j in 0..NOPS {
+        let e1 = t[TP_E_L1 + j];
+        let e2 = t[TP_E_L2 + j];
+        let be = ((e2 / e1).ln() - ASSOC_EXP * ln2) / ln4;
+        energy[j] = e1 * (be * cap_n).exp() * assoc_f;
+
+        let l1 = t[TP_LAT_L1 + j];
+        let l2 = t[TP_LAT_L2 + j];
+        let bl = (l2 / l1).ln() / ln4;
+        lat[j] = l1 * (bl * cap_n).exp();
+    }
+    (energy, lat)
+}
+
+#[test]
+fn builtin_models_match_the_legacy_table_parameters() {
+    assert_eq!(device::model_of(Technology::SRAM).params(), TECH_TABLE[0]);
+    assert_eq!(device::model_of(Technology::FEFET).params(), TECH_TABLE[1]);
+}
+
+#[test]
+fn registry_energy_latency_is_bit_identical_to_the_legacy_model() {
+    // structured grid: every cap/assoc/banks/level corner the sweeps use
+    for tech in 0..NTECH {
+        for cap_kb in [8.0, 16.0, 32.0, 64.0, 256.0, 1024.0, 2048.0] {
+            for assoc in [1.0, 2.0, 4.0, 8.0, 16.0] {
+                for banks in [1.0, 2.0, 4.0, 8.0] {
+                    for level in [1.0, 2.0] {
+                        let row: CfgRow = [
+                            cap_kb * 1024.0,
+                            assoc,
+                            64.0,
+                            banks,
+                            tech as f64,
+                            level,
+                        ];
+                        let (e_new, l_new) = energy_latency(&row);
+                        let (e_old, l_old) = legacy_energy_latency(&row);
+                        // bit-for-bit, not approximately: the refactor
+                        // must not perturb a single ulp
+                        assert_eq!(e_new, e_old, "energy differs at {row:?}");
+                        assert_eq!(l_new, l_old, "latency differs at {row:?}");
+                    }
+                }
+            }
+        }
+    }
+    // randomized geometries on top of the grid
+    let mut rng = Rng::new(0xdecaf);
+    for _ in 0..500 {
+        let row: CfgRow = [
+            (1 << rng.range(10, 22)) as f64,
+            (1 << rng.range(0, 5)) as f64,
+            64.0,
+            (1 << rng.range(0, 4)) as f64,
+            rng.range(0, NTECH) as f64,
+            1.0 + rng.range(0, 2) as f64,
+        ];
+        assert_eq!(energy_latency(&row), legacy_energy_latency(&row));
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("eva-cim-devreg-{tag}-{}", std::process::id()))
+}
+
+fn opts(dir: PathBuf) -> SweepOptions {
+    SweepOptions {
+        scale: 4,
+        workers: 2,
+        cache_dir: Some(dir),
+        resume: true,
+        ..Default::default()
+    }
+}
+
+/// The *pre-registry* point-key serialization, verbatim: the config's
+/// technology was identified by name alone, with no device-model content.
+fn legacy_point_key(
+    bench: &str,
+    cfg: &SystemConfig,
+    rule: LocalityRule,
+    o: &SweepOptions,
+    backend: &str,
+) -> String {
+    let cache_to_json = |c: &eva_cim::config::CacheConfig| {
+        Json::obj(vec![
+            ("capacity", c.capacity.into()),
+            ("assoc", c.assoc.into()),
+            ("line", c.line.into()),
+            ("banks", c.banks.into()),
+            ("latency", c.latency.into()),
+            ("mshr_entries", c.mshr_entries.into()),
+        ])
+    };
+    let config = Json::obj(vec![
+        ("name", cfg.name.as_str().into()),
+        (
+            "core",
+            Json::obj(vec![
+                ("width", cfg.core.width.into()),
+                ("rob_entries", cfg.core.rob_entries.into()),
+                ("iq_entries", cfg.core.iq_entries.into()),
+                ("lsq_entries", cfg.core.lsq_entries.into()),
+                ("mispredict_penalty", cfg.core.mispredict_penalty.into()),
+                ("int_alu_units", cfg.core.int_alu_units.into()),
+                ("int_mul_units", cfg.core.int_mul_units.into()),
+                ("fp_units", cfg.core.fp_units.into()),
+                ("mem_ports", cfg.core.mem_ports.into()),
+            ]),
+        ),
+        ("l1i", cache_to_json(&cfg.l1i)),
+        ("l1d", cache_to_json(&cfg.l1d)),
+        ("l2", cache_to_json(&cfg.l2)),
+        (
+            "dram",
+            Json::obj(vec![
+                ("size", cfg.dram.size.into()),
+                ("latency", cfg.dram.latency.into()),
+            ]),
+        ),
+        ("tech", cfg.tech.name().into()),
+        ("cim_levels", cfg.cim_levels.name().into()),
+        ("clock_ghz", cfg.clock_ghz.into()),
+    ]);
+    let payload = Json::obj(vec![
+        ("bench", bench.into()),
+        ("scale", o.scale.into()),
+        ("seed", o.seed.into()),
+        ("max_instructions", o.max_instructions.into()),
+        ("rule", rule.name().into()),
+        ("backend", backend.into()),
+        ("config", config),
+    ])
+    .dump();
+    format!("{:016x}", key::fnv1a(payload.as_bytes()))
+}
+
+#[test]
+fn pre_refactor_cache_rows_are_misses_not_stale_hits() {
+    let dir = tmp_dir("legacy-miss");
+    std::fs::remove_dir_all(&dir).ok();
+    let points = cross(
+        &["lcs"],
+        &[SystemConfig::preset("c1").unwrap()],
+        LocalityRule::AnyCache,
+    );
+    let o = opts(dir.clone());
+
+    // compute once to obtain a structurally-valid row, then rewrite the
+    // cache as a pre-registry build would have written it: same row JSON,
+    // but filed under the *legacy* key (no tech_model in the payload)
+    let (rows, _) = Coordinator::new(o.clone())
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    let legacy_key = legacy_point_key(
+        "lcs",
+        &points[0].config,
+        LocalityRule::AnyCache,
+        &o,
+        "native",
+    );
+    let new_key = key::point_key(&points[0], &o, "native");
+    assert_ne!(legacy_key, new_key, "key schema must have changed");
+
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = eva_cim::coordinator::cache::ResultCache::open(&dir).unwrap();
+    // poison the row so any stale hit is unmissable, then file it under
+    // the legacy key only
+    let mut stale = rows[0].clone();
+    stale.result.improvement = -777.0;
+    cache.append(&legacy_key, &stale).unwrap();
+    drop(cache);
+
+    let (resumed, stats) = Coordinator::new(o)
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(stats.rows_from_cache, 0, "legacy row must not satisfy resume");
+    assert_eq!(stats.rows_computed, points.len());
+    assert!(stats.simulator_runs > 0 || stats.trace_disk_hits > 0);
+    assert_ne!(resumed[0].result.improvement, -777.0);
+    assert_eq!(
+        persist::row_to_json(&resumed[0]).dump(),
+        persist::row_to_json(&rows[0]).dump(),
+        "recomputed row must match the honestly-computed one"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn toml_custom_tech_roundtrips_the_cache_with_a_distinct_key() {
+    let dir = tmp_dir("custom-tech");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let techs = parse::register_technologies(
+        r#"
+        [tech.devreg-ecram]
+        base = "fefet"
+        e_l1_write = 22.0
+        e_l2_write = 46.0
+        "#,
+    )
+    .unwrap();
+    let custom = techs[0];
+    assert_eq!(custom.name(), "devreg-ecram");
+
+    let mut configs = Vec::new();
+    for tech in [Technology::SRAM, Technology::FEFET, custom] {
+        let mut c = SystemConfig::preset("c1").unwrap().with_tech(tech);
+        c.name = format!("c1-{}", tech.name());
+        configs.push(c);
+    }
+    let points = cross(&["lcs"], &configs, LocalityRule::AnyCache);
+    // one worker so the three same-geometry variants provably share one
+    // simulation (parallel workers may legitimately race to cold-simulate)
+    let o = SweepOptions { workers: 1, ..opts(dir.clone()) };
+
+    // the custom tech's key differs from every built-in's even though the
+    // geometry is identical
+    let keys: Vec<String> =
+        points.iter().map(|p| key::point_key(p, &o, "native")).collect();
+    assert_eq!(keys.len(), 3);
+    assert_ne!(keys[2], keys[0]);
+    assert_ne!(keys[2], keys[1]);
+
+    let (cold, cold_stats) = Coordinator::new(o.clone())
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    // one geometry, three tech variants: a single simulation serves all
+    assert_eq!(cold_stats.simulator_runs, 1);
+
+    // fully-warm resume from a fresh coordinator: byte-identical rows,
+    // nothing recomputed — the custom row comes back from disk
+    let (warm, warm_stats) = Coordinator::new(o)
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(warm_stats.rows_from_cache, 3);
+    assert_eq!(warm_stats.simulator_runs, 0);
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(
+            persist::row_to_json(c).dump(),
+            persist::row_to_json(w).dump()
+        );
+    }
+    assert_eq!(warm[2].tech, custom);
+    // cheaper writes than FeFET must show up as a real model difference
+    assert_ne!(
+        cold[2].result.total_cim, cold[1].result.total_cim,
+        "custom coefficients must change the evaluation"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

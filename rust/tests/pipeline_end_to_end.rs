@@ -52,8 +52,8 @@ fn cim_none_is_identity() {
 
 #[test]
 fn fefet_beats_sram_on_energy_for_cim_friendly_bench() {
-    let sram = SystemConfig::preset("c1").unwrap().with_tech(Technology::Sram);
-    let fefet = SystemConfig::preset("c1").unwrap().with_tech(Technology::Fefet);
+    let sram = SystemConfig::preset("c1").unwrap().with_tech(Technology::SRAM);
+    let fefet = SystemConfig::preset("c1").unwrap().with_tech(Technology::FEFET);
     let (_, rs) = pipeline("m2d", &sram);
     let (_, rf) = pipeline("m2d", &fefet);
     // Fig 16: FeFET CiM energy normalized against the SRAM baseline

@@ -27,9 +27,9 @@ fn runtime() -> Option<PjrtRuntime> {
 fn sample_inputs() -> Vec<ProfileInputs> {
     let mut out = Vec::new();
     for (bench, tech) in [
-        ("lcs", Technology::Sram),
-        ("m2d", Technology::Fefet),
-        ("bfs", Technology::Sram),
+        ("lcs", Technology::SRAM),
+        ("m2d", Technology::FEFET),
+        ("bfs", Technology::SRAM),
     ] {
         let cfg = SystemConfig::preset("c1").unwrap().with_tech(tech);
         let prog = workloads::build(bench, 2, 5).unwrap();

@@ -81,7 +81,7 @@ fn superset_resume_computes_only_the_delta() {
     std::fs::remove_dir_all(&dir).ok();
 
     let sram = SystemConfig::preset("c1").unwrap();
-    let mut fefet = SystemConfig::preset("c1").unwrap().with_tech(Technology::Fefet);
+    let mut fefet = SystemConfig::preset("c1").unwrap().with_tech(Technology::FEFET);
     fefet.name = "c1-fefet".into();
 
     // first sweep: one point
@@ -131,7 +131,7 @@ fn random_point(rng: &mut Rng) -> (SweepPoint, SweepOptions) {
     let preset = *rng.choice(&["c1", "c2", "c3", "spm1mb"]);
     let mut cfg = SystemConfig::preset(preset).unwrap();
     if rng.gen_bool(0.5) {
-        cfg.tech = Technology::Fefet;
+        cfg.tech = Technology::FEFET;
     }
     cfg.cim_levels = *rng.choice(&[
         CimLevels::None,
