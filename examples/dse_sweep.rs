@@ -1,71 +1,55 @@
 //! Design-space exploration: the paper's three questions answered in one
 //! sweep — is the program CiM-favorable, which cache level should host the
-//! CiM arrays, and which technology wins?  Exercises the coordinator's
-//! worker pool on 17 benchmarks across every *registered* technology
-//! (4 built-ins unless more are registered — see `eva-cim explore` and
-//! `energy::device` for the registry).
+//! CiM arrays, and which technology wins?  Exercises the facade's variant
+//! crossings (presets × every registered technology × CiM placements) and
+//! post-processes the raw rows into a best-point-per-benchmark table.
 //!
 //! Run: `cargo run --release --example dse_sweep`
 
-use eva_cim::analyzer::LocalityRule;
-use eva_cim::config::{CimLevels, SystemConfig, Technology};
-use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
-use eva_cim::runtime::{Backend, NativeBackend};
-use eva_cim::util::TextTable;
+use eva_cim::api::{BackendSel, Cell, Evaluation, Report, Section};
+use eva_cim::config::{CimLevels, Technology};
 use eva_cim::workloads;
 
 fn main() -> anyhow::Result<()> {
-    let mut configs = Vec::new();
-    for preset in ["c1", "c3"] {
-        for tech in Technology::all() {
-            for cim in [CimLevels::L1Only, CimLevels::Both] {
-                let mut c = SystemConfig::preset(preset)
-                    .unwrap()
-                    .with_tech(tech)
-                    .with_cim(cim);
-                c.name = format!("{preset}-{}-{}", tech.name(), cim.name());
-                configs.push(c);
-            }
-        }
-    }
-    let benches: Vec<&str> = workloads::NAMES.to_vec();
-    let points = cross(&benches, &configs, LocalityRule::AnyCache);
-    println!("sweeping {} design points...", points.len());
-
-    // registry technologies beyond SRAM/FeFET (rram, stt-mram) are outside
-    // the frozen AOT tech table, so this all-registered sweep always runs
-    // on the native mirror; see technology_explorer.rs for the PJRT path
-    let mut backend = NativeBackend;
-    let t0 = std::time::Instant::now();
-    let rows = Coordinator::new(SweepOptions::default())
-        .run_sweep(&points, &mut backend)?;
+    // c1/c3 × all registered technologies × {L1-only, L1+L2}: variant
+    // names compose as "{preset}-{tech}-{cim}".  Registry technologies
+    // beyond SRAM/FeFET are outside the frozen AOT tech table, so this
+    // all-registered sweep runs on the native mirror.
+    let ev = Evaluation::new()
+        .presets(&["c1", "c3"])
+        .techs(&Technology::all())
+        .cim_variants(&[CimLevels::L1Only, CimLevels::Both])
+        .backend(BackendSel::Native);
+    let sweep = ev.rows()?;
     println!(
         "{} points in {:.1}s on backend '{}'",
-        rows.len(),
-        t0.elapsed().as_secs_f64(),
-        backend.name()
+        sweep.rows.len(),
+        sweep.elapsed_secs,
+        sweep.backend
     );
 
     // best configuration per benchmark (max energy improvement)
-    let mut t = TextTable::new(
+    let mut s = Section::new(
         "best design point per benchmark",
         &["bench", "config", "E-impr", "speedup", "MACR"],
     );
-    for b in &benches {
-        if let Some(best) = rows
+    for b in workloads::NAMES {
+        if let Some(best) = sweep
+            .rows
             .iter()
-            .filter(|r| r.bench == *b)
+            .filter(|r| r.bench == b)
             .max_by(|x, y| x.result.improvement.total_cmp(&y.result.improvement))
         {
-            t.row(vec![
-                workloads::display_name(b).into(),
-                best.config_name.clone(),
-                format!("{:.2}", best.result.improvement),
-                format!("{:.2}", best.result.speedup),
-                format!("{:.0}%", best.macr.ratio() * 100.0),
+            s.row(vec![
+                Cell::str(workloads::display_name(b)),
+                Cell::str(best.config_name.as_str()),
+                Cell::num(best.result.improvement, 2),
+                Cell::num(best.result.speedup, 2),
+                Cell::pct(best.macr.ratio(), 0),
             ]);
         }
     }
-    println!("{}", t.render());
+    let report = Report::new("dse").with_section(s);
+    print!("{}", report.render_table());
     Ok(())
 }

@@ -1,61 +1,29 @@
-//! Quickstart: the full Eva-CiM pipeline on one benchmark, end to end —
-//! simulate → IDG analysis → trace reshaping → AOT'd profiler on PJRT
-//! (falls back to the native mirror when `make artifacts` hasn't run).
+//! Quickstart: the unified evaluation facade, end to end — one benchmark
+//! profiled through the full pipeline (sim → IDG analysis → reshape →
+//! profiler), then a small sweep, each returned as a structured `Report`
+//! that renders as text, CSV or canonical JSON from the same value.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use eva_cim::analyzer::{analyze, LocalityRule};
-use eva_cim::config::SystemConfig;
-use eva_cim::profiler::ProfileInputs;
-use eva_cim::reshape::reshape;
-use eva_cim::runtime::{best_backend, PjrtRuntime};
-use eva_cim::sim::{simulate, Limits};
-use eva_cim::workloads;
+use eva_cim::api::Evaluation;
 
 fn main() -> anyhow::Result<()> {
-    // 1. pick a system: 32kB/4-way L1 + 256kB/8-way L2, SRAM CiM in both
-    let cfg = SystemConfig::preset("c1").unwrap();
+    // 1. one benchmark on one configuration: the whole pipeline is behind
+    //    a single builder call (backend auto-selected: PJRT when the AOT
+    //    artifacts exist, the native f64 mirror otherwise)
+    let profile = Evaluation::new().bench("lcs").preset("c1").single()?;
+    print!("{}", profile.render_table());
 
-    // 2. build a workload and run it on the cycle-level simulator
-    let prog = workloads::build("lcs", 0, 42).unwrap();
-    let trace = simulate(&prog, &cfg, Limits::default())?;
-    println!(
-        "simulated {}: {} instructions, {} cycles (CPI {:.2})",
-        trace.program, trace.committed, trace.cycles, trace.cpi()
-    );
+    // 2. a benches × presets sweep through the coordinator's cached path;
+    //    add .cache_dir("...").resume(true) to make reruns warm-start
+    let sweep = Evaluation::new()
+        .benches(&["lcs", "km"])
+        .presets(&["c1", "c2"])
+        .run()?;
+    print!("{}", sweep.render_table());
 
-    // 3. mine the committed instruction queue for offloading candidates
-    let analysis = analyze(&trace, &cfg, LocalityRule::AnyCache);
-    println!(
-        "IDG: {} nodes ({} eligible) -> {} candidates, MACR {:.1}%",
-        analysis.idg_nodes.0,
-        analysis.idg_nodes.1,
-        analysis.selection.candidates.len(),
-        analysis.macr.ratio() * 100.0
-    );
-
-    // 4. reshape the trace: offloaded work leaves the CPU, CiM ops appear
-    let reshaped = reshape(&trace, &analysis.selection, &cfg);
-    println!(
-        "reshaped: {} instructions offloaded into {} CiM ops",
-        reshaped.removed, reshaped.cim_op_count
-    );
-
-    // 5. profile through the AOT'd JAX graph on the PJRT CPU client
-    let mut backend = best_backend(&PjrtRuntime::default_dir());
-    let res = backend
-        .evaluate_batch(&[ProfileInputs::new(&cfg, &reshaped)])?
-        .remove(0);
-    println!("backend: {}", backend.name());
-    println!(
-        "energy: {:.2} uJ -> {:.2} uJ  ({:.2}x improvement)",
-        res.total_base / 1e6,
-        res.total_cim / 1e6,
-        res.improvement
-    );
-    println!(
-        "speedup: {:.2}x   breakdown: processor {:.2} / caches {:.2}",
-        res.speedup, res.ratio_proc, res.ratio_cache
-    );
+    // 3. the same report value, machine-readable: canonical JSON (and
+    //    sweep.render_csv() for spreadsheets)
+    print!("{}", sweep.render_json());
     Ok(())
 }

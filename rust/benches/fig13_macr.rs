@@ -9,5 +9,11 @@ fn main() {
     let t0 = std::time::Instant::now();
     let table = experiments::fig13(SweepOptions::default()).expect("fig13");
     println!("{}", table.render());
+    if let Some(stats) = &table.stats {
+        eprintln!(
+            "{}",
+            eva_cim::coordinator::format_stats(stats, table.elapsed_secs)
+        );
+    }
     println!("[bench] fig13: {:.2}s for 17 benchmarks", t0.elapsed().as_secs_f64());
 }

@@ -13,6 +13,12 @@ fn main() {
     let table = experiments::fig14(SweepOptions::default(), backend.as_mut())
         .expect("fig14");
     println!("{}", table.render());
+    if let Some(stats) = &table.stats {
+        eprintln!(
+            "{}",
+            eva_cim::coordinator::format_stats(stats, table.elapsed_secs)
+        );
+    }
     println!("[bench] fig14: {:.2}s (51 design points, backend={})",
              t0.elapsed().as_secs_f64(), backend.name());
 }

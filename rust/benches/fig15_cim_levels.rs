@@ -12,6 +12,12 @@ fn main() {
     let table = experiments::fig15(SweepOptions::default(), backend.as_mut())
         .expect("fig15");
     println!("{}", table.render());
+    if let Some(stats) = &table.stats {
+        eprintln!(
+            "{}",
+            eva_cim::coordinator::format_stats(stats, table.elapsed_secs)
+        );
+    }
     println!("[bench] fig15: {:.2}s (backend={})",
              t0.elapsed().as_secs_f64(), backend.name());
 }

@@ -12,6 +12,12 @@ fn main() {
     let table = experiments::fig16(SweepOptions::default(), backend.as_mut())
         .expect("fig16");
     println!("{}", table.render());
+    if let Some(stats) = &table.stats {
+        eprintln!(
+            "{}",
+            eva_cim::coordinator::format_stats(stats, table.elapsed_secs)
+        );
+    }
     println!("[bench] fig16: {:.2}s (backend={})",
              t0.elapsed().as_secs_f64(), backend.name());
 }

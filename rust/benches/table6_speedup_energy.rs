@@ -15,6 +15,12 @@ fn main() {
     let table = experiments::table6(SweepOptions::default(), backend.as_mut())
         .expect("table6");
     println!("{}", table.render());
+    if let Some(stats) = &table.stats {
+        eprintln!(
+            "{}",
+            eva_cim::coordinator::format_stats(stats, table.elapsed_secs)
+        );
+    }
     println!("[bench] table6: {:.2}s (backend={})",
              t0.elapsed().as_secs_f64(), backend.name());
 }

@@ -18,14 +18,18 @@ use super::rut::build as build_tables;
 /// Access breakdown in the style of [23].
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct JainBreakdown {
+    /// memory writes (WR)
     pub writes: u64,
+    /// non-convertible reads (NC)
     pub nc_reads: u64,
+    /// CiM-convertible reads (CC)
     pub cc_reads: u64,
     /// CiM instructions created (= cc_reads / 2)
     pub cim_instructions: u64,
 }
 
 impl JainBreakdown {
+    /// All classified memory accesses (WR + NC + CC).
     pub fn total(&self) -> u64 {
         self.writes + self.nc_reads + self.cc_reads
     }

@@ -16,13 +16,19 @@ use super::rut::{build as build_tables, Iht, Rut};
 /// CiM-supported operation kinds (Table III columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CimOp {
+    /// bitwise OR on the sense amps
     Or,
+    /// bitwise AND on the sense amps
     And,
+    /// bitwise XOR on the sense amps (also the compare class, see
+    /// [`cim_op_of`])
     Xor,
+    /// word-width addition on the sense-amp adder (ADDW32)
     Add,
 }
 
 impl CimOp {
+    /// Lower-case operation name (`"or"`, `"and"`, `"xor"`, `"add"`).
     pub fn name(&self) -> &'static str {
         match self {
             CimOp::Or => "or",
@@ -71,8 +77,11 @@ pub enum Child {
 /// IDG node: one CiM-supported committed instruction.
 #[derive(Clone, Debug)]
 pub struct IdgNode {
+    /// CIQ sequence index of the instruction
     pub seq: u64,
+    /// CiM operation class of the instruction
     pub op: CimOp,
+    /// producers of the two source operands
     pub children: [Child; 2],
     /// every child is Imm / Load / eligible Node — the node can execute
     /// entirely in memory
@@ -81,6 +90,7 @@ pub struct IdgNode {
     pub subtree_loads: u32,
 }
 
+/// Sentinel in [`IdgForest::node_idx`]: the instruction is not a CiM op.
 pub const NO_NODE: u32 = u32::MAX;
 
 /// The whole forest plus consumer cross-references.
@@ -89,6 +99,7 @@ pub const NO_NODE: u32 = u32::MAX;
 /// analyzer walks millions of committed instructions per sweep and hashing
 /// dominated its profile (see EXPERIMENTS.md §Perf).
 pub struct IdgForest {
+    /// node arena, in commit order
     pub nodes: Vec<IdgNode>,
     /// seq -> node index (NO_NODE when the instruction is not a CiM op)
     pub node_idx: Vec<u32>,
@@ -96,7 +107,9 @@ pub struct IdgForest {
     /// `consumer_data[consumer_ptr[s]..consumer_ptr[s+1]]`
     consumer_ptr: Vec<u32>,
     consumer_data: Vec<u64>,
+    /// the Register Usage Table the forest was built with
     pub rut: Rut,
+    /// the Index Hash Table the forest was built with
     pub iht: Iht,
 }
 

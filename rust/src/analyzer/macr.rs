@@ -25,6 +25,7 @@ pub struct Macr {
 }
 
 impl Macr {
+    /// The MACR itself: convertible / total accesses (0 for empty traces).
     pub fn ratio(&self) -> f64 {
         if self.total_accesses == 0 {
             0.0
@@ -33,6 +34,8 @@ impl Macr {
         }
     }
 
+    /// Fraction of convertible accesses whose data sat in L1 (Fig 13
+    /// bottom).
     pub fn l1_share(&self) -> f64 {
         if self.convertible == 0 {
             0.0

@@ -32,7 +32,9 @@ use crate::probes::Trace;
 
 /// Full analysis result for one trace.
 pub struct Analysis {
+    /// offloading candidates + rejection accounting
     pub selection: Selection,
+    /// memory-access conversion ratio accounting
     pub macr: Macr,
     /// IDG statistics: (total nodes, eligible nodes)
     pub idg_nodes: (u64, u64),

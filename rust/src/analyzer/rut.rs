@@ -21,10 +21,13 @@ pub struct Rut {
 /// instruction — so `writes[r][n_i - 1]` is the producer.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct IhtEntry {
+    /// up to two `(register, n_i)` source records; `None` for unused slots
     pub sources: [Option<(RegId, u32)>; 2],
 }
 
+/// The Index Hash Table: one [`IhtEntry`] per committed instruction.
 pub struct Iht {
+    /// entries in CIQ order (indexed by sequence number)
     pub entries: Vec<IhtEntry>,
 }
 

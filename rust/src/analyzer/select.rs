@@ -48,6 +48,7 @@ impl LocalityRule {
 /// One offloading candidate: a connected group of CiM-suitable nodes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Candidate {
+    /// CIQ seq of the subtree root (the outermost consumer)
     pub root_seq: u64,
     /// CiM-op instruction seqs removed from the CPU stream (root first)
     pub members: Vec<u64>,
@@ -79,6 +80,7 @@ impl Candidate {
 /// Selection output.
 #[derive(Debug, Default)]
 pub struct Selection {
+    /// accepted offloading candidates, in program order
     pub candidates: Vec<Candidate>,
     /// eligible subtrees rejected by locality / placement constraints
     pub rejected_locality: u64,

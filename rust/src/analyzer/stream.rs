@@ -57,8 +57,11 @@ use super::select::{Candidate, LocalityRule};
 /// One finalized offloading candidate plus the instruction payloads that
 /// reshaping needs (aligned with `candidate.members` / `candidate.loads`).
 pub struct CandidateRecord {
+    /// the finalized candidate (members, loads, level, op kinds)
     pub candidate: Candidate,
+    /// instruction payloads of `candidate.members`, same order
     pub member_infos: Vec<InstrInfo>,
+    /// instruction payloads of `candidate.loads`, same order
     pub load_infos: Vec<InstrInfo>,
     /// payload of `candidate.absorbed_store`, when present
     pub absorbed: Option<InstrInfo>,
@@ -66,6 +69,7 @@ pub struct CandidateRecord {
 
 /// Receives candidates as the analyzer finalizes them.
 pub trait CandidateSink {
+    /// Called once per finalized candidate, in retirement order.
     fn on_candidate(&mut self, rec: &CandidateRecord);
 }
 
@@ -73,6 +77,7 @@ pub trait CandidateSink {
 /// instruction payloads.
 #[derive(Default)]
 pub struct CollectCandidates {
+    /// every candidate announced so far, in retirement order
     pub candidates: Vec<Candidate>,
 }
 
@@ -86,12 +91,17 @@ impl CandidateSink for CollectCandidates {
 /// reports, minus the candidate list — that went to the sink).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamOutcome {
+    /// memory-access conversion ratio accounting
     pub macr: Macr,
     /// (total IDG nodes, eligible IDG nodes)
     pub idg_nodes: (u64, u64),
+    /// accepted offloading candidates
     pub candidates: u64,
+    /// eligible subtrees rejected by locality / placement constraints
     pub rejected_locality: u64,
+    /// eligible subtrees rejected for having no load operands at all
     pub rejected_no_loads: u64,
+    /// eligible subtrees rejected because an operand lived in DRAM
     pub rejected_dram: u64,
     /// maximum number of live instructions held at once (the streaming
     /// window)
@@ -202,6 +212,8 @@ pub struct OnlineAnalyzer<S: CandidateSink> {
 }
 
 impl<S: CandidateSink> OnlineAnalyzer<S> {
+    /// An analyzer for one commit stream under the given CiM placement and
+    /// locality rule; finalized candidates are announced to `sink`.
     pub fn new(cim_levels: CimLevels, rule: LocalityRule, sink: S) -> Self {
         Self {
             rule,

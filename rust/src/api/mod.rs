@@ -1,0 +1,799 @@
+//! The unified evaluation facade — the crate's public front door.
+//!
+//! Eva-CiM's promise is "give it a program, an architecture and a CiM
+//! spec — get a system-level energy estimate" (paper §I).  [`Evaluation`]
+//! is that promise as one typed builder: pick benchmarks, configurations,
+//! technologies and sizing knobs, then ask for a structured [`Report`]:
+//!
+//! ```
+//! use eva_cim::api::Evaluation;
+//!
+//! let report = Evaluation::new()
+//!     .bench("lcs")
+//!     .preset("c1")
+//!     .scale(2)
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(report.sections[0].num_rows(), 1);
+//! println!("{}", report.render_table()); // or render_json() / render_csv()
+//! ```
+//!
+//! Everything downstream — the `eva-cim` CLI, the paper experiments in
+//! [`crate::experiments`], the examples — is a thin composition over this
+//! module.  The coordinator's shard/cache/backend wiring
+//! ([`crate::coordinator::SweepOptions`], backend selection, the worker
+//! pool) is absorbed behind the builder: callers state *what* to evaluate,
+//! not how to stage it.
+
+pub mod report;
+pub mod validate;
+
+pub use report::{Cell, Format, Report, Section};
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::analyzer::{LocalityRule, StreamOutcome};
+use crate::asm::Program;
+use crate::config::{CimLevels, SystemConfig, Technology};
+use crate::coordinator::{cross, Coordinator, SweepOptions, SweepRow, SweepStats};
+use crate::energy::calib;
+use crate::pipeline::run_pipelined;
+use crate::probes::TraceSummary;
+use crate::profiler::ProfileInputs;
+use crate::reshape::{reshape_from_deltas, DeltaSink, Reshaped};
+use crate::runtime::{best_backend, Backend, NativeBackend, PjrtRuntime};
+use crate::sim::Limits;
+use crate::util::stats;
+use crate::workloads;
+
+/// Profiler-backend selection policy.
+///
+/// The AOT'd PJRT artifacts are lowered against the frozen two-row
+/// SRAM/FeFET tech table, so `Auto` resolves to the native mirror whenever
+/// a registry technology (RRAM, STT-MRAM, TOML customs) is in play, and an
+/// explicit `Pjrt` fails up front instead of after the simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSel {
+    /// PJRT when its artifacts load *and* every technology is in the AOT
+    /// table; native mirror otherwise (the default)
+    Auto,
+    /// always the native f64 mirror
+    Native,
+    /// the PJRT runtime, or an error when unavailable/uncovered
+    Pjrt,
+}
+
+impl BackendSel {
+    /// Parse a `--backend` value.
+    pub fn from_name(s: &str) -> Option<BackendSel> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(BackendSel::Auto),
+            "native" => Some(BackendSel::Native),
+            "pjrt" => Some(BackendSel::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSel::Auto => "auto",
+            BackendSel::Native => "native",
+            BackendSel::Pjrt => "pjrt",
+        }
+    }
+
+    /// Resolve to a concrete backend for a set of technologies about to be
+    /// evaluated (see the type docs for the AOT-coverage rule).
+    pub fn resolve(&self, techs: &[Technology]) -> Result<Box<dyn Backend>> {
+        let outside_table =
+            techs.iter().find(|t| t.index() >= calib::NTECH).copied();
+        match self {
+            BackendSel::Native => Ok(Box::new(NativeBackend)),
+            BackendSel::Pjrt => {
+                if let Some(t) = outside_table {
+                    bail!(
+                        "the pjrt backend only covers the {}-row AOT tech table \
+                         (sram/fefet); technology '{}' needs the native backend",
+                        calib::NTECH,
+                        t.name()
+                    );
+                }
+                PjrtRuntime::load(&PjrtRuntime::default_dir())
+                    .map(|rt| Box::new(rt) as Box<dyn Backend>)
+            }
+            BackendSel::Auto => {
+                if outside_table.is_some() {
+                    Ok(Box::new(NativeBackend))
+                } else {
+                    Ok(best_backend(&PjrtRuntime::default_dir()))
+                }
+            }
+        }
+    }
+}
+
+/// Raw output of an [`Evaluation`] sweep: the structured rows plus the
+/// cache/scale ledger.  Most callers want [`Evaluation::run`] (a rendered
+/// [`Report`]); this is the escape hatch for custom post-processing.
+pub struct Sweep {
+    /// one row per design point, in point order
+    pub rows: Vec<SweepRow>,
+    /// what the sweep actually did (cache hits, simulator runs, windows)
+    pub stats: SweepStats,
+    /// wall-clock seconds
+    pub elapsed_secs: f64,
+    /// name of the backend that evaluated the points
+    pub backend: &'static str,
+}
+
+/// The typed evaluation builder — see the [module docs](self) for the
+/// one-paragraph tour and `README.md` § "Library usage" for a worked
+/// example.
+///
+/// Empty selections fall back to sensible defaults: all 17 paper
+/// benchmarks, the `c1` configuration, each configuration's own
+/// technology, [`BackendSel::Auto`].
+#[derive(Clone)]
+pub struct Evaluation {
+    benches: Vec<String>,
+    presets: Vec<String>,
+    explicit: Vec<SystemConfig>,
+    techs: Vec<Technology>,
+    cim_override: Option<CimLevels>,
+    cim_variants: Vec<CimLevels>,
+    rule: LocalityRule,
+    backend: BackendSel,
+    opts: SweepOptions,
+    /// explicit simulator budget; `None` = each path's own default
+    /// ([`SweepOptions`] for sweeps, [`Limits`] for single runs)
+    max_instr: Option<u64>,
+}
+
+impl Evaluation {
+    /// A builder with the defaults described on the type.
+    pub fn new() -> Self {
+        Self {
+            benches: Vec::new(),
+            presets: Vec::new(),
+            explicit: Vec::new(),
+            techs: Vec::new(),
+            cim_override: None,
+            cim_variants: Vec::new(),
+            rule: LocalityRule::AnyCache,
+            backend: BackendSel::Auto,
+            opts: SweepOptions::default(),
+            max_instr: None,
+        }
+    }
+
+    /// Add one benchmark by name (see [`workloads::NAMES`]).
+    pub fn bench(mut self, name: &str) -> Self {
+        self.benches.push(name.to_string());
+        self
+    }
+
+    /// Add several benchmarks by name.
+    pub fn benches(mut self, names: &[&str]) -> Self {
+        self.benches.extend(names.iter().map(|s| s.to_string()));
+        self
+    }
+
+    /// Add a base configuration by preset name (see
+    /// [`SystemConfig::preset`]).
+    pub fn preset(mut self, name: &str) -> Self {
+        self.presets.push(name.to_string());
+        self
+    }
+
+    /// Add several presets.
+    pub fn presets(mut self, names: &[&str]) -> Self {
+        self.presets.extend(names.iter().map(|s| s.to_string()));
+        self
+    }
+
+    /// Add an explicit base configuration (used verbatim, keeping its
+    /// name — the way to evaluate custom geometries).
+    pub fn config(mut self, cfg: SystemConfig) -> Self {
+        self.explicit.push(cfg);
+        self
+    }
+
+    /// Add several explicit base configurations.
+    pub fn configs(mut self, cfgs: &[SystemConfig]) -> Self {
+        self.explicit.extend(cfgs.iter().cloned());
+        self
+    }
+
+    /// Cross every base configuration with this technology (the variant is
+    /// named `{base}-{tech}`).  Repeatable.
+    pub fn tech(mut self, tech: Technology) -> Self {
+        self.techs.push(tech);
+        self
+    }
+
+    /// Cross every base configuration with these technologies.
+    pub fn techs(mut self, techs: &[Technology]) -> Self {
+        self.techs.extend(techs.iter().copied());
+        self
+    }
+
+    /// Force one CiM placement on every evaluated configuration (names
+    /// unchanged).
+    pub fn cim(mut self, cim: CimLevels) -> Self {
+        self.cim_override = Some(cim);
+        self
+    }
+
+    /// Cross every configuration with these CiM placements (the variant is
+    /// named `{base}-{placement}` — the Fig 15 axis).
+    pub fn cim_variants(mut self, cims: &[CimLevels]) -> Self {
+        self.cim_variants.extend(cims.iter().copied());
+        self
+    }
+
+    /// Candidate-selection locality rule (default
+    /// [`LocalityRule::AnyCache`]).
+    pub fn rule(mut self, rule: LocalityRule) -> Self {
+        self.rule = rule;
+        self
+    }
+
+    /// Backend selection policy (default [`BackendSel::Auto`]).
+    pub fn backend(mut self, sel: BackendSel) -> Self {
+        self.backend = sel;
+        self
+    }
+
+    /// Absorb a whole [`SweepOptions`] (sizing, worker pool, cache).
+    pub fn sweep(mut self, opts: SweepOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Workload problem-size hint (0 = each workload's default).
+    pub fn scale(mut self, scale: usize) -> Self {
+        self.opts.scale = scale;
+        self
+    }
+
+    /// Workload input RNG seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    /// Worker-pool size for staging.
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.opts.workers = jobs;
+        self
+    }
+
+    /// Points per work-stealing chunk (0 = auto).
+    pub fn chunk(mut self, chunk: usize) -> Self {
+        self.opts.chunk = chunk;
+        self
+    }
+
+    /// Root of the on-disk design-point + trace cache.
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.opts.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Serve previously cached rows instead of recomputing them.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.opts.resume = resume;
+        self
+    }
+
+    /// Simulator instruction budget per design point.  Unset, each path
+    /// keeps its own default: sweeps use the [`SweepOptions`] budget
+    /// (part of the cache key), single runs the larger [`Limits`] default.
+    pub fn max_instructions(mut self, n: u64) -> Self {
+        self.max_instr = Some(n);
+        self
+    }
+
+    /// The coordinator options this evaluation will sweep with (explicit
+    /// [`Evaluation::max_instructions`] applied) — for handing to the
+    /// [`crate::experiments`] adapters.
+    pub fn sweep_options(&self) -> SweepOptions {
+        let mut opts = self.opts.clone();
+        if let Some(n) = self.max_instr {
+            opts.max_instructions = n;
+        }
+        opts
+    }
+
+    /// The benchmark list this evaluation will run (defaults applied).
+    pub fn bench_list(&self) -> Vec<String> {
+        if self.benches.is_empty() {
+            workloads::NAMES.iter().map(|s| s.to_string()).collect()
+        } else {
+            self.benches.clone()
+        }
+    }
+
+    /// Expand presets/explicit configs × technologies × CiM variants into
+    /// the concrete configuration list (defaults applied).
+    pub fn config_list(&self) -> Result<Vec<SystemConfig>> {
+        if self.cim_override.is_some() && !self.cim_variants.is_empty() {
+            // the override would silently stomp the placement the variant
+            // names advertise
+            bail!("set either .cim(..) or .cim_variants(..), not both");
+        }
+        let mut bases = Vec::new();
+        for p in &self.presets {
+            bases.push(
+                SystemConfig::preset(p)
+                    .ok_or_else(|| anyhow!("unknown preset '{p}'"))?,
+            );
+        }
+        bases.extend(self.explicit.iter().cloned());
+        if bases.is_empty() {
+            bases.push(SystemConfig::preset("c1").expect("builtin preset"));
+        }
+        let mut out = bases;
+        if !self.techs.is_empty() {
+            out = out
+                .iter()
+                .flat_map(|base| {
+                    self.techs.iter().map(|&tech| {
+                        let mut c = base.clone().with_tech(tech);
+                        c.name = format!("{}-{}", base.name, tech.name());
+                        c
+                    })
+                })
+                .collect();
+        }
+        if !self.cim_variants.is_empty() {
+            out = out
+                .iter()
+                .flat_map(|base| {
+                    self.cim_variants.iter().map(|&cim| {
+                        let mut c = base.clone().with_cim(cim);
+                        c.name = format!("{}-{}", base.name, cim.name());
+                        c
+                    })
+                })
+                .collect();
+        }
+        if let Some(cim) = self.cim_override {
+            for c in &mut out {
+                c.cim_levels = cim;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Resolve the backend policy against the technologies this evaluation
+    /// will touch.
+    pub fn resolve_backend(&self) -> Result<Box<dyn Backend>> {
+        self.backend_for(&self.config_list()?)
+    }
+
+    /// [`Evaluation::resolve_backend`] for an already-expanded config list.
+    fn backend_for(&self, configs: &[SystemConfig]) -> Result<Box<dyn Backend>> {
+        let techs: Vec<Technology> = configs.iter().map(|c| c.tech).collect();
+        self.backend.resolve(&techs)
+    }
+
+    /// Run the sweep and return the raw rows + ledger.
+    pub fn rows(&self) -> Result<Sweep> {
+        let configs = self.config_list()?;
+        let mut backend = self.backend_for(&configs)?;
+        self.rows_for(&configs, backend.as_mut())
+    }
+
+    /// [`Evaluation::rows`] on a caller-provided backend.
+    pub fn rows_with(&self, backend: &mut dyn Backend) -> Result<Sweep> {
+        self.rows_for(&self.config_list()?, backend)
+    }
+
+    /// The sweep core, for an already-expanded config list.
+    fn rows_for(
+        &self,
+        configs: &[SystemConfig],
+        backend: &mut dyn Backend,
+    ) -> Result<Sweep> {
+        let benches = self.bench_list();
+        let bench_refs: Vec<&str> = benches.iter().map(|s| s.as_str()).collect();
+        let points = cross(&bench_refs, configs, self.rule);
+        let t0 = std::time::Instant::now();
+        let (rows, stats) = Coordinator::new(self.sweep_options())
+            .run_sweep_with_stats(&points, backend)?;
+        Ok(Sweep {
+            rows,
+            stats,
+            elapsed_secs: t0.elapsed().as_secs_f64(),
+            backend: backend.name(),
+        })
+    }
+
+    /// Run the sweep and report every design point (bench × config grid
+    /// with MACR/speedup/energy columns).
+    pub fn run(&self) -> Result<Report> {
+        Ok(Self::sweep_report(self.rows()?))
+    }
+
+    /// [`Evaluation::run`] on a caller-provided backend.
+    pub fn run_with(&self, backend: &mut dyn Backend) -> Result<Report> {
+        Ok(Self::sweep_report(self.rows_with(backend)?))
+    }
+
+    /// The generic per-design-point report over a finished sweep.
+    fn sweep_report(sweep: Sweep) -> Report {
+        let mut s = Section::new(
+            "sweep results",
+            &["bench", "config", "tech", "cim", "MACR", "speedup", "E-impr",
+              "proc", "caches"],
+        );
+        for r in &sweep.rows {
+            s.row(vec![
+                Cell::str(workloads::display_name(&r.bench)),
+                Cell::str(r.config_name.as_str()),
+                Cell::str(r.tech.name()),
+                Cell::str(r.cim_levels.name()),
+                Cell::pct(r.macr.ratio(), 1),
+                Cell::num(r.result.speedup, 2),
+                Cell::num(r.result.improvement, 2),
+                Cell::num(r.result.ratio_proc, 2),
+                Cell::num(r.result.ratio_cache, 2),
+            ]);
+        }
+        Report::new("sweep results")
+            .with_section(s)
+            .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend)
+    }
+
+    /// Cross-technology design-space exploration: evaluate the configured
+    /// grid and rank each benchmark's points by Pareto dominance on
+    /// (energy improvement, speedup).  The report carries the full grid
+    /// (frontier rows marked) and a frontier-only section.
+    pub fn explore(&self) -> Result<Report> {
+        self.explore_report(self.rows()?)
+    }
+
+    /// [`Evaluation::explore`] on a caller-provided backend.
+    pub fn explore_with(&self, backend: &mut dyn Backend) -> Result<Report> {
+        self.explore_report(self.rows_with(backend)?)
+    }
+
+    /// The Pareto grid/frontier report over a finished sweep.
+    fn explore_report(&self, sweep: Sweep) -> Result<Report> {
+        let mut grid = Section::new(
+            "explore — tech × config Pareto grid (* = frontier)",
+            &["bench", "tech", "config", "MACR", "E-impr", "speedup", "Pareto"],
+        );
+        let mut frontier = Section::new(
+            "explore — Pareto frontier (non-dominated on E-impr × speedup)",
+            &["bench", "tech", "config", "E-impr", "speedup"],
+        );
+        for b in self.bench_list() {
+            let bench_rows: Vec<&SweepRow> =
+                sweep.rows.iter().filter(|r| r.bench == b).collect();
+            let scores: Vec<(f64, f64)> = bench_rows
+                .iter()
+                .map(|r| (r.result.improvement, r.result.speedup))
+                .collect();
+            for (r, &front) in bench_rows.iter().zip(&stats::pareto_front(&scores)) {
+                let config = config_label(r);
+                grid.row(vec![
+                    Cell::str(workloads::display_name(&r.bench)),
+                    Cell::str(r.tech.name()),
+                    Cell::str(config.as_str()),
+                    Cell::pct(r.macr.ratio(), 1),
+                    Cell::num(r.result.improvement, 2),
+                    Cell::num(r.result.speedup, 2),
+                    Cell::Mark(front),
+                ]);
+                if front {
+                    frontier.row(vec![
+                        Cell::str(workloads::display_name(&r.bench)),
+                        Cell::str(r.tech.name()),
+                        Cell::str(config),
+                        Cell::num(r.result.improvement, 2),
+                        Cell::num(r.result.speedup, 2),
+                    ]);
+                }
+            }
+        }
+        Ok(Report::new("explore")
+            .with_section(grid)
+            .with_section(frontier)
+            .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend))
+    }
+
+    /// Evaluate exactly one benchmark on exactly one configuration through
+    /// the streaming pipeline and report the full profile (run summary,
+    /// energy/speedup, per-component breakdown).
+    pub fn single(&self) -> Result<Report> {
+        let configs = self.config_list()?;
+        let mut backend = self.backend_for(&configs)?;
+        self.single_for(&configs, backend.as_mut())
+    }
+
+    /// [`Evaluation::single`] on a caller-provided backend.
+    pub fn single_with(&self, backend: &mut dyn Backend) -> Result<Report> {
+        self.single_for(&self.config_list()?, backend)
+    }
+
+    /// The single-run core, for an already-expanded config list.
+    fn single_for(
+        &self,
+        configs: &[SystemConfig],
+        backend: &mut dyn Backend,
+    ) -> Result<Report> {
+        let benches = self.bench_list();
+        if benches.len() != 1 || configs.len() != 1 {
+            bail!(
+                "single() needs exactly one benchmark and one configuration \
+                 (got {} × {})",
+                benches.len(),
+                configs.len()
+            );
+        }
+        let prog = workloads::build(&benches[0], self.opts.scale, self.opts.seed)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown benchmark '{}' (see `eva-cim list` / \
+                     workloads::NAMES)",
+                    benches[0]
+                )
+            })?;
+        profile_program(&prog, &configs[0], self.rule, self.limits(), backend)
+    }
+
+    /// Simulator limits for the single-run paths: an explicit
+    /// [`Evaluation::max_instructions`] wins, otherwise the simulator's
+    /// own (larger) default budget — sweeps' tighter per-point budget
+    /// must not silently truncate single runs.
+    fn limits(&self) -> Limits {
+        match self.max_instr {
+            Some(n) => Limits { max_instructions: n },
+            None => Limits::default(),
+        }
+    }
+
+    /// Profile a caller-assembled [`Program`] (the `eva-cim asm` path) on
+    /// this evaluation's single configuration.
+    pub fn single_program(&self, prog: &Program) -> Result<Report> {
+        let configs = self.config_list()?;
+        if configs.len() != 1 {
+            bail!("single_program() needs exactly one configuration");
+        }
+        let mut backend = self.backend_for(&configs)?;
+        profile_program(prog, &configs[0], self.rule, self.limits(), backend.as_mut())
+    }
+}
+
+/// The `config` column of the explore grid: the row's configuration name
+/// with its `-{tech}` segment removed (the grid has a dedicated tech
+/// column).  `"c1-sram"` → `"c1"`, `"c1-sram-l1"` → `"c1-l1"`; names
+/// without a tech segment — explicit configs — pass through verbatim, so
+/// distinct design points always get distinct labels.
+fn config_label(r: &SweepRow) -> String {
+    let seg = format!("-{}", r.tech.name());
+    if let Some(base) = r.config_name.strip_suffix(&seg) {
+        return base.to_string();
+    }
+    let infix = format!("{seg}-");
+    match r.config_name.find(&infix) {
+        Some(i) => format!(
+            "{}{}",
+            &r.config_name[..i],
+            &r.config_name[i + seg.len()..]
+        ),
+        None => r.config_name.clone(),
+    }
+}
+
+/// Run one program through the pipelined sim ∥ analyze ∥ reshape stack and
+/// profile it — the shared core of [`Evaluation::single`] and the CLI's
+/// `run`/`asm` commands.
+pub fn profile_program(
+    prog: &Program,
+    cfg: &SystemConfig,
+    rule: LocalityRule,
+    limits: Limits,
+    backend: &mut dyn Backend,
+) -> Result<Report> {
+    let (summary, outcome, deltas) =
+        run_pipelined(prog, cfg, limits, rule, DeltaSink::default(), None)?;
+    let reshaped = reshape_from_deltas(&summary, &deltas, cfg);
+    let inputs = ProfileInputs::new(cfg, &reshaped);
+    let res = backend.evaluate_batch(&[inputs])?.remove(0);
+
+    let summary_section = run_summary(&summary, &outcome, &reshaped, backend.name());
+
+    let mut profile = Section::new("profile", &["metric", "baseline", "CiM", "ratio"]);
+    profile.row(vec![
+        Cell::str("energy (uJ)"),
+        Cell::num(res.total_base / 1e6, 2),
+        Cell::num(res.total_cim / 1e6, 2),
+        Cell::num(res.improvement, 2),
+    ]);
+    profile.row(vec![
+        Cell::str("speedup"),
+        Cell::num(1.0, 2),
+        Cell::num(res.speedup, 2),
+        Cell::num(res.speedup, 2),
+    ]);
+
+    let mut comps =
+        Section::new("energy breakdown (uJ)", &["component", "baseline", "CiM"]);
+    for i in 0..calib::NCOMP {
+        comps.row(vec![
+            Cell::str(calib::COMP_NAMES[i]),
+            Cell::num(res.comps_base[i] / 1e6, 3),
+            Cell::num(res.comps_cim[i] / 1e6, 3),
+        ]);
+    }
+
+    let mut split =
+        Section::new("improvement breakdown", &["component", "share"]);
+    split.row(vec![Cell::str("processor"), Cell::num(res.ratio_proc, 2)]);
+    split.row(vec![Cell::str("caches"), Cell::num(res.ratio_cache, 2)]);
+
+    Ok(Report::new(&format!("profile: {}", summary.program))
+        .with_section(summary_section)
+        .with_section(profile)
+        .with_section(comps)
+        .with_section(split))
+}
+
+/// The run-summary section (program identity, pipeline statistics, MACR).
+fn run_summary(
+    summary: &TraceSummary,
+    outcome: &StreamOutcome,
+    reshaped: &Reshaped,
+    backend: &str,
+) -> Section {
+    let mut s = Section::new("run summary", &["metric", "value"]);
+    let rows: Vec<(&str, Cell)> = vec![
+        ("program", Cell::str(summary.program.as_str())),
+        ("committed instrs", Cell::int(summary.committed)),
+        ("cycles", Cell::int(summary.cycles)),
+        ("CPI", Cell::num(summary.cpi(), 2)),
+        ("IDG nodes", Cell::int(outcome.idg_nodes.0)),
+        ("IDG eligible", Cell::int(outcome.idg_nodes.1)),
+        ("candidates", Cell::int(outcome.candidates)),
+        ("peak analysis window", Cell::int(outcome.peak_window as u64)),
+        ("MACR", Cell::pct(outcome.macr.ratio(), 1)),
+        ("MACR L1 share", Cell::pct(outcome.macr.l1_share(), 1)),
+        ("offloaded instrs", Cell::int(reshaped.removed)),
+        ("CiM ops", Cell::int(reshaped.cim_op_count)),
+        ("backend", Cell::str(backend)),
+    ];
+    for (metric, value) in rows {
+        s.row(vec![Cell::str(metric), value]);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast(ev: Evaluation) -> Evaluation {
+        ev.scale(2).jobs(2).backend(BackendSel::Native)
+    }
+
+    #[test]
+    fn defaults_cover_all_benches_on_c1() {
+        let ev = Evaluation::new();
+        assert_eq!(ev.bench_list().len(), 17);
+        let cfgs = ev.config_list().unwrap();
+        assert_eq!(cfgs.len(), 1);
+        assert_eq!(cfgs[0].name, "c1");
+    }
+
+    #[test]
+    fn tech_and_cim_crossings_name_variants() {
+        let ev = Evaluation::new()
+            .presets(&["c1", "c3"])
+            .techs(&[Technology::SRAM, Technology::FEFET])
+            .cim_variants(&[CimLevels::L1Only, CimLevels::Both]);
+        let names: Vec<String> =
+            ev.config_list().unwrap().into_iter().map(|c| c.name).collect();
+        assert_eq!(names.len(), 8);
+        assert!(names.contains(&"c1-sram-l1".to_string()));
+        assert!(names.contains(&"c3-fefet-l1+l2".to_string()));
+    }
+
+    #[test]
+    fn cim_override_keeps_names() {
+        let ev = Evaluation::new().preset("c2").cim(CimLevels::L2Only);
+        let cfgs = ev.config_list().unwrap();
+        assert_eq!(cfgs[0].name, "c2");
+        assert_eq!(cfgs[0].cim_levels, CimLevels::L2Only);
+    }
+
+    #[test]
+    fn unknown_preset_is_an_error() {
+        assert!(Evaluation::new().preset("nope").config_list().is_err());
+    }
+
+    #[test]
+    fn cim_override_conflicts_with_cim_variants() {
+        let ev = Evaluation::new()
+            .preset("c1")
+            .cim_variants(&[CimLevels::L1Only])
+            .cim(CimLevels::L2Only);
+        assert!(ev.config_list().is_err());
+    }
+
+    #[test]
+    fn explore_config_labels_drop_only_the_tech_segment() {
+        let mk = |name: &str, tech: Technology| {
+            let mut cfg = SystemConfig::preset("c1").unwrap().with_tech(tech);
+            cfg.name = name.to_string();
+            crate::coordinator::SweepRow {
+                bench: "lcs".into(),
+                config_name: cfg.name.clone(),
+                tech: cfg.tech,
+                cim_levels: cfg.cim_levels,
+                macr: Default::default(),
+                committed: 0,
+                cycles: 0,
+                removed: 0,
+                cim_ops: 0,
+                result: Default::default(),
+            }
+        };
+        assert_eq!(config_label(&mk("c1-sram", Technology::SRAM)), "c1");
+        assert_eq!(config_label(&mk("c1-sram-l1", Technology::SRAM)), "c1-l1");
+        assert_eq!(config_label(&mk("big-l2", Technology::FEFET)), "big-l2");
+    }
+
+    #[test]
+    fn run_reports_every_design_point() {
+        let report = fast(Evaluation::new().benches(&["lcs", "km"]).preset("c1"))
+            .run()
+            .unwrap();
+        let s = &report.sections[0];
+        assert_eq!(s.num_rows(), 2);
+        assert_eq!(s.columns[0], "bench");
+        assert!(report.stats.is_some());
+        // machine-readable and text forms come from the same value
+        assert!(report.render_json().contains("\"bench\":\"LCS\""));
+        assert!(report.render_table().contains("LCS"));
+    }
+
+    #[test]
+    fn single_reports_the_full_profile() {
+        let report =
+            fast(Evaluation::new().bench("lcs").preset("c1")).single().unwrap();
+        let titles: Vec<&str> =
+            report.sections.iter().map(|s| s.title.as_str()).collect();
+        assert_eq!(
+            titles,
+            ["run summary", "profile", "energy breakdown (uJ)",
+             "improvement breakdown"]
+        );
+        assert!(matches!(
+            report.sections[0].cell(0, "value"),
+            Some(Cell::Str(p)) if p.as_str() == "lcs"
+        ));
+    }
+
+    #[test]
+    fn single_rejects_grids() {
+        let ev = fast(Evaluation::new().benches(&["lcs", "km"]).preset("c1"));
+        assert!(ev.single().is_err());
+    }
+
+    #[test]
+    fn backend_policy_respects_the_aot_table() {
+        // registry technologies force the native mirror under Auto...
+        let b = BackendSel::Auto.resolve(&[Technology::RRAM]).unwrap();
+        assert_eq!(b.name(), "native");
+        // ...and are rejected outright under explicit Pjrt
+        assert!(BackendSel::Pjrt.resolve(&[Technology::RRAM]).is_err());
+        assert_eq!(BackendSel::from_name("NATIVE"), Some(BackendSel::Native));
+        assert!(BackendSel::from_name("cuda").is_none());
+    }
+}

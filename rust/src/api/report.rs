@@ -1,0 +1,497 @@
+//! Structured evaluation reports — the single source of truth for every
+//! output format.
+//!
+//! A [`Report`] is a tree of [`Section`]s; each section is a titled grid of
+//! *typed* [`Cell`]s (numbers keep their full `f64` value and only carry a
+//! display precision).  The three renderers all read the same value:
+//!
+//! * [`Report::render_table`] — aligned monospace text (via
+//!   [`crate::util::TextTable`], which is now just a renderer),
+//! * [`Report::render_csv`] — RFC-4180-ish CSV with the same formatted
+//!   cells as the table,
+//! * [`Report::render_json`] — canonical JSON with *raw* numeric values
+//!   (full precision, fractions instead of percent strings), suitable for
+//!   machine consumption.
+//!
+//! Canonical means byte-stable: object keys are sorted
+//! ([`crate::util::json`] uses a `BTreeMap`) and floats print with Rust's
+//! shortest-roundtrip formatter, so the same `Report` value always dumps
+//! to the same bytes — `rust/tests/report_golden.rs` asserts this across
+//! cold and cache-warm runs.
+//!
+//! Sweep-ledger data ([`SweepStats`] + elapsed time) rides on the report
+//! for the CLI's stderr diagnostics but is deliberately *excluded* from
+//! all three renderers: it differs between cold and cached runs and would
+//! break byte-stability.
+
+use crate::coordinator::{SweepRow, SweepStats};
+use crate::util::json::Json;
+use crate::util::table::{f as fnum, TextTable};
+use crate::workloads;
+
+/// One typed report cell.
+///
+/// Numeric variants keep the raw `f64`/`u64` and a display precision:
+/// the table/CSV renderers format, the JSON renderer emits the raw value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cell {
+    /// absent value (renders as an empty cell, JSON `null`)
+    Empty,
+    /// free-form text
+    Str(String),
+    /// exact integer count
+    Int(u64),
+    /// fixed-point number shown with `prec` decimals
+    Num {
+        /// raw value
+        v: f64,
+        /// decimals in table/CSV form
+        prec: usize,
+    },
+    /// fraction in `[0, 1]` shown as a percentage with `prec` decimals;
+    /// JSON emits the *fraction*
+    Pct {
+        /// raw fraction
+        v: f64,
+        /// decimals in table/CSV form
+        prec: usize,
+    },
+    /// number shown in signed scientific notation with `prec` decimals
+    Sci {
+        /// raw value
+        v: f64,
+        /// decimals in table/CSV form
+        prec: usize,
+    },
+    /// boolean marker shown as `*` / empty (Pareto-frontier flags)
+    Mark(bool),
+}
+
+impl Cell {
+    /// Text cell.
+    pub fn str(s: impl Into<String>) -> Cell {
+        Cell::Str(s.into())
+    }
+
+    /// Integer cell.
+    pub fn int(v: u64) -> Cell {
+        Cell::Int(v)
+    }
+
+    /// Fixed-point cell with `prec` decimals.
+    pub fn num(v: f64, prec: usize) -> Cell {
+        Cell::Num { v, prec }
+    }
+
+    /// Percentage cell: `v` is the fraction (0.5 renders as `50.0%`).
+    pub fn pct(v: f64, prec: usize) -> Cell {
+        Cell::Pct { v, prec }
+    }
+
+    /// Scientific-notation cell.
+    pub fn sci(v: f64, prec: usize) -> Cell {
+        Cell::Sci { v, prec }
+    }
+
+    /// Formatted text form — shared by the table and CSV renderers.
+    pub fn text(&self) -> String {
+        match self {
+            Cell::Empty => String::new(),
+            Cell::Str(s) => s.clone(),
+            Cell::Int(v) => format!("{v}"),
+            Cell::Num { v, prec } => fnum(*v, *prec),
+            Cell::Pct { v, prec } => format!("{:.*}%", *prec, *v * 100.0),
+            Cell::Sci { v, prec } => format!("{:+.*e}", *prec, *v),
+            Cell::Mark(m) => if *m { "*".into() } else { String::new() },
+        }
+    }
+
+    /// Raw machine-readable form for the JSON renderer.  Non-finite
+    /// numbers (NaN, ±∞ — e.g. a relative deviation against a zero
+    /// reference) map to `null`: JSON has no literal for them, and one
+    /// degenerate value must not make the whole document unparseable.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Cell::Empty => Json::Null,
+            Cell::Str(s) => Json::Str(s.clone()),
+            Cell::Int(v) => Json::Num(*v as f64),
+            Cell::Num { v, .. } | Cell::Pct { v, .. } | Cell::Sci { v, .. } => {
+                if v.is_finite() {
+                    Json::Num(*v)
+                } else {
+                    Json::Null
+                }
+            }
+            Cell::Mark(m) => Json::Bool(*m),
+        }
+    }
+}
+
+/// A titled grid of typed cells — one table/figure of a report.
+pub struct Section {
+    /// section heading (printed above the table, `title` key in JSON)
+    pub title: String,
+    /// column names; unique within the section (they key the JSON rows)
+    pub columns: Vec<String>,
+    /// row-major cell grid; every row has `columns.len()` cells
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Section {
+    /// New empty section.  Column names must be unique — they become the
+    /// per-row JSON object keys.
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        for (i, c) in columns.iter().enumerate() {
+            assert!(
+                !columns[..i].contains(c),
+                "duplicate report column '{c}' in section '{title}'"
+            );
+        }
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (width-checked against the columns).
+    pub fn row(&mut self, cells: Vec<Cell>) -> &mut Self {
+        assert_eq!(cells.len(), self.columns.len(), "report row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Cell at `row` in the column named `col`, if both exist.
+    pub fn cell(&self, row: usize, col: &str) -> Option<&Cell> {
+        let ci = self.columns.iter().position(|c| c == col)?;
+        self.rows.get(row)?.get(ci)
+    }
+
+    /// Render through the legacy [`TextTable`] (now just a view).
+    pub fn to_table(&self) -> TextTable {
+        let headers: Vec<&str> = self.columns.iter().map(|s| s.as_str()).collect();
+        let mut t = TextTable::new(&self.title, &headers);
+        for r in &self.rows {
+            t.row(r.iter().map(Cell::text).collect());
+        }
+        t
+    }
+
+    /// CSV form: header line + one line per row, formatted cells.
+    pub fn to_csv(&self) -> String {
+        self.to_table().to_csv()
+    }
+
+    /// Canonical JSON form: `{title, columns, rows: [{col: value, ...}]}`.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.columns
+                        .iter()
+                        .cloned()
+                        .zip(r.iter().map(Cell::to_json))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", self.title.as_str().into()),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| c.as_str().into()).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Output format selector shared by every CLI subcommand (`--format`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// aligned monospace tables (the default)
+    Table,
+    /// canonical machine-readable JSON
+    Json,
+    /// CSV (one block per section)
+    Csv,
+}
+
+impl Format {
+    /// Parse a `--format` value.
+    pub fn from_name(s: &str) -> Option<Format> {
+        match s.to_ascii_lowercase().as_str() {
+            "table" | "text" => Some(Format::Table),
+            "json" => Some(Format::Json),
+            "csv" => Some(Format::Csv),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::Table => "table",
+            Format::Json => "json",
+            Format::Csv => "csv",
+        }
+    }
+}
+
+/// A structured evaluation result: titled sections plus the (non-rendered)
+/// sweep ledger.  Every experiment, the sweep engine and the single-run
+/// profiler all produce this one type; the CLI formats it with
+/// [`Report::render_as`].
+pub struct Report {
+    /// report name (`title` key in JSON; not printed in table form —
+    /// sections carry their own headings)
+    pub title: String,
+    /// the section tree
+    pub sections: Vec<Section>,
+    /// sweep cache/scale ledger when a coordinator sweep ran (stderr
+    /// diagnostics only — never rendered, see module docs)
+    pub stats: Option<SweepStats>,
+    /// wall-clock seconds of the sweep behind `stats` (0 when none ran)
+    pub elapsed_secs: f64,
+    /// name of the backend that actually evaluated the sweep (`"native"`
+    /// vs `"pjrt"` matters: the auto policy may silently fall back)
+    pub backend: Option<&'static str>,
+}
+
+impl Report {
+    /// New empty report.
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            sections: Vec::new(),
+            stats: None,
+            elapsed_secs: 0.0,
+            backend: None,
+        }
+    }
+
+    /// Builder-style section append.
+    pub fn with_section(mut self, s: Section) -> Self {
+        self.sections.push(s);
+        self
+    }
+
+    /// Attach the sweep ledger (builder-style).
+    pub fn with_ledger(
+        mut self,
+        stats: SweepStats,
+        elapsed_secs: f64,
+        backend: &'static str,
+    ) -> Self {
+        self.stats = Some(stats);
+        self.elapsed_secs = elapsed_secs;
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Append another report's sections (ledger: last one wins).
+    pub fn merged(mut self, other: Report) -> Self {
+        self.sections.extend(other.sections);
+        if other.stats.is_some() {
+            self.stats = other.stats;
+            self.elapsed_secs = other.elapsed_secs;
+            self.backend = other.backend;
+        }
+        self
+    }
+
+    /// Total data rows across all sections.
+    pub fn num_rows(&self) -> usize {
+        self.sections.iter().map(Section::num_rows).sum()
+    }
+
+    /// Alias for [`Report::render_table`] (drop-in for the old
+    /// `TextTable::render` call sites).
+    pub fn render(&self) -> String {
+        self.render_table()
+    }
+
+    /// All sections as aligned monospace tables, blank-line separated.
+    pub fn render_table(&self) -> String {
+        let blocks: Vec<String> =
+            self.sections.iter().map(|s| s.to_table().render()).collect();
+        blocks.join("\n")
+    }
+
+    /// CSV: a single section renders as plain `header\nrows...` (pipeable
+    /// into any CSV reader); multiple sections are blank-line separated
+    /// blocks, each preceded by a `# <title>` comment line.
+    pub fn render_csv(&self) -> String {
+        if self.sections.len() == 1 {
+            return self.sections[0].to_csv();
+        }
+        let blocks: Vec<String> = self
+            .sections
+            .iter()
+            .map(|s| {
+                if s.title.is_empty() {
+                    s.to_csv()
+                } else {
+                    format!("# {}\n{}", s.title, s.to_csv())
+                }
+            })
+            .collect();
+        blocks.join("\n")
+    }
+
+    /// Canonical JSON document (newline-terminated).
+    pub fn render_json(&self) -> String {
+        let mut s = self.to_json().dump();
+        s.push('\n');
+        s
+    }
+
+    /// The canonical JSON value: `{schema, title, sections}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", 1u64.into()),
+            ("title", self.title.as_str().into()),
+            (
+                "sections",
+                Json::Arr(self.sections.iter().map(Section::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Render in the requested format.
+    pub fn render_as(&self, format: Format) -> String {
+        match format {
+            Format::Table => self.render_table(),
+            Format::Json => self.render_json(),
+            Format::Csv => self.render_csv(),
+        }
+    }
+}
+
+/// Pivot sweep rows into a bench × config grid: one row per entry of
+/// `benches`, one column per `(header, config_name)` pair, cell values
+/// drawn by `value` from the matching row ([`Cell::Empty`] when a point is
+/// missing).  This is the shape of the paper's Figs 14/15 tables.
+pub fn pivot(
+    title: &str,
+    benches: &[&str],
+    rows: &[SweepRow],
+    cols: &[(&str, &str)],
+    value: impl Fn(&SweepRow) -> Cell,
+) -> Section {
+    let mut headers = vec!["bench"];
+    headers.extend(cols.iter().map(|(h, _)| *h));
+    let mut s = Section::new(title, &headers);
+    for b in benches {
+        let mut cells = vec![Cell::str(workloads::display_name(b))];
+        for (_, cfg_name) in cols {
+            cells.push(
+                rows.iter()
+                    .find(|r| r.bench == *b && r.config_name == *cfg_name)
+                    .map(&value)
+                    .unwrap_or(Cell::Empty),
+            );
+        }
+        s.row(cells);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> Report {
+        let mut s = Section::new("t1", &["name", "x", "share", "front"]);
+        s.row(vec![
+            Cell::str("a"),
+            Cell::num(1.25, 2),
+            Cell::pct(0.5, 1),
+            Cell::Mark(true),
+        ]);
+        s.row(vec![Cell::str("b,c"), Cell::int(7), Cell::Empty, Cell::Mark(false)]);
+        Report::new("sample").with_section(s)
+    }
+
+    #[test]
+    fn all_three_formats_render_from_one_value() {
+        let r = sample();
+        let table = r.render_table();
+        assert!(table.contains("t1") && table.contains("1.25") && table.contains("50.0%"));
+        let csv = r.render_csv();
+        assert_eq!(csv.lines().next().unwrap(), "name,x,share,front");
+        assert!(csv.contains("\"b,c\",7,,"));
+        let j = json::parse(&r.render_json()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_u64(), Some(1));
+        let row0 = j.get("sections").unwrap().idx(0).unwrap().get("rows").unwrap().idx(0).unwrap();
+        // JSON carries raw values: the fraction, not the percent string
+        assert_eq!(row0.get("share").unwrap().as_f64(), Some(0.5));
+        assert_eq!(row0.get("front").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn json_is_canonical_and_roundtrips() {
+        let r = sample();
+        let dumped = r.to_json().dump();
+        let parsed = json::parse(&dumped).unwrap();
+        assert_eq!(parsed.dump(), dumped);
+        assert_eq!(r.render_json(), r.render_json());
+    }
+
+    #[test]
+    fn multi_section_csv_marks_sections() {
+        let r = sample().merged(sample());
+        let csv = r.render_csv();
+        assert_eq!(csv.matches("# t1").count(), 2);
+    }
+
+    #[test]
+    fn cell_text_forms() {
+        assert_eq!(Cell::pct(0.123, 1).text(), "12.3%");
+        assert_eq!(Cell::num(2.0, 2).text(), "2.00");
+        assert_eq!(Cell::int(42).text(), "42");
+        assert_eq!(Cell::sci(-1234.5, 2).text(), "-1.23e3");
+        assert_eq!(Cell::Mark(true).text(), "*");
+        assert_eq!(Cell::Empty.text(), "");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        let mut s = Section::new("nf", &["x", "y", "z"]);
+        s.row(vec![
+            Cell::num(f64::INFINITY, 2),
+            Cell::pct(f64::NAN, 1),
+            Cell::num(1.5, 1),
+        ]);
+        let r = Report::new("nf").with_section(s);
+        let doc = r.render_json();
+        let parsed = json::parse(&doc).unwrap();
+        let row = parsed.get("sections").unwrap().idx(0).unwrap()
+            .get("rows").unwrap().idx(0).unwrap();
+        assert_eq!(row.get("x"), Some(&json::Json::Null));
+        assert_eq!(row.get("y"), Some(&json::Json::Null));
+        assert_eq!(row.get("z").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn format_names() {
+        assert_eq!(Format::from_name("JSON"), Some(Format::Json));
+        assert_eq!(Format::from_name("table"), Some(Format::Table));
+        assert_eq!(Format::from_name("csv").unwrap().name(), "csv");
+        assert!(Format::from_name("yaml").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_columns_rejected() {
+        Section::new("bad", &["a", "a"]);
+    }
+}

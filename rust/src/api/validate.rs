@@ -1,0 +1,165 @@
+//! Model-validation primitives (paper §VI-A/§VI-B): the two comparisons
+//! the paper uses to establish trust in the framework, packaged as
+//! structured [`Report`]s so `eva-cim validate`, `eva-cim table
+//! table5|fig12` and the bench targets all share one implementation.
+
+use anyhow::Result;
+
+use crate::analyzer::{self, baseline, LocalityRule};
+use crate::config::SystemConfig;
+use crate::energy::{self, calib::*};
+use crate::profiler::ProfileInputs;
+use crate::reshape;
+use crate::runtime::Backend;
+use crate::sim::{simulate, Limits};
+use crate::util::stats;
+use crate::workloads;
+
+use super::{Cell, Report, Section};
+
+/// Table V: Eva-CiM vs array-level-only (DESTINY) energy on an LCS trace.
+///
+/// The paper reports ≈24% deviation for both CiM and non-CiM instructions:
+/// Eva-CiM adds the multi-level-hierarchy effects (misses, refills, core
+/// interactions) that the array-only estimate omits.
+pub fn destiny_comparison(backend: &mut dyn Backend, scale: usize) -> Result<Report> {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let prog = workloads::build("lcs", scale, 42).unwrap();
+    let trace = simulate(&prog, &cfg, Limits::default())?;
+    let analysis = analyzer::analyze(&trace, &cfg, LocalityRule::AnyCache);
+    let reshaped = reshape::reshape(&trace, &analysis.selection, &cfg);
+    let inputs = ProfileInputs::new(&cfg, &reshaped);
+    let res = backend.evaluate_batch(&[inputs.clone()])?.remove(0);
+
+    // Eva-CiM's memory-side energy split into CiM vs non-CiM portions.
+    // The CiM share includes the hierarchy's data-locality management:
+    // cross-level operand moves and result readbacks (§IV-C) — exactly the
+    // effects the array-only estimate cannot see.
+    let (e1, _) = energy::energy_latency(&inputs.cfg_l1);
+    let (e2, _) = energy::energy_latency(&inputs.cfg_l2);
+    let mut overhead = 0.0;
+    for c in &analysis.selection.candidates {
+        let (rd_src, wr_dst, rd_back) = match c.level {
+            crate::probes::MemLevel::L2 => (e1[OP_READ], e2[OP_WRITE], e2[OP_READ]),
+            _ => (e2[OP_READ], e1[OP_WRITE], e1[OP_READ]),
+        };
+        overhead += c.moves as f64 * (rd_src + wr_dst);
+        overhead += c.readbacks as f64 * rd_back;
+        // rereads of operands shared with earlier candidates
+        overhead += c.shared_loads.len() as f64 * rd_back;
+    }
+    let eva_cim = (res.comps_cim[COMP_CIM_L1] + res.comps_cim[COMP_CIM_L2]
+        + overhead) / 1000.0;
+    // compare at *array* level (÷ XBUS_FACTOR): DESTINY models the array
+    // only, so the H-tree/bus transport must be excluded on both sides —
+    // the remaining deviation is the hierarchy-event accounting (misses,
+    // refills, I-fetch traffic) that Eva-CiM adds on top of DESTINY.
+    let eva_non = (res.comps_cim[COMP_L1I] + res.comps_cim[COMP_L1D]
+        + res.comps_cim[COMP_L2]) / XBUS_FACTOR / 1000.0;
+    // array-only (DESTINY-style) estimate of the same reshaped activity
+    let (d_cim, d_non) = energy::destiny_only_estimate(
+        &inputs.counters_cim, &inputs.cfg_l1, &inputs.cfg_l2);
+    let (d_cim, d_non) = (d_cim / 1000.0, d_non / 1000.0);
+
+    let mut s = Section::new(
+        "Table V — energy (nJ) comparison: array-only (DESTINY) vs Eva-CiM (LCS trace)",
+        &["model", "CiM", "non-CiM"],
+    );
+    s.row(vec![Cell::str("DESTINY (array-only)"), Cell::num(d_cim, 2), Cell::num(d_non, 2)]);
+    s.row(vec![Cell::str("Eva-CiM"), Cell::num(eva_cim, 2), Cell::num(eva_non, 2)]);
+    s.row(vec![
+        Cell::str("Deviation"),
+        Cell::pct(stats::rel_dev(eva_cim, d_cim), 1),
+        Cell::pct(stats::rel_dev(eva_non, d_non), 1),
+    ]);
+    Ok(Report::new("table5").with_section(s))
+}
+
+/// Fig 12: CiM-supported memory-access fraction, Eva-CiM vs Jain [23],
+/// LCS over `runs` random inputs on the 1 MB SPM-like config.
+pub fn macr_comparison(runs: usize, scale: usize) -> Result<Report> {
+    let cfg = SystemConfig::preset("spm1mb").unwrap();
+    let mut eva = Vec::new();
+    let mut jain = Vec::new();
+    for r in 0..runs {
+        let prog = workloads::build("lcs", scale, 1000 + r as u64).unwrap();
+        let trace = simulate(&prog, &cfg, Limits::default())?;
+        let analysis = analyzer::analyze(&trace, &cfg, LocalityRule::AnyCache);
+        eva.push(analysis.macr.ratio());
+        jain.push(baseline::classify(&trace.ciq).cim_fraction());
+    }
+    let mut s = Section::new(
+        &format!("Fig 12 — CiM-supported memory accesses on LCS ({runs} runs, 1MB config)"),
+        &["method", "mean", "min", "max"],
+    );
+    for (name, xs) in [("Eva-CiM (IDG)", &eva), ("Jain et al. [23]", &jain)] {
+        s.row(vec![
+            Cell::str(name),
+            Cell::pct(stats::mean(xs), 1),
+            Cell::pct(stats::percentile(xs, 0.0), 1),
+            Cell::pct(stats::percentile(xs, 100.0), 1),
+        ]);
+    }
+    Ok(Report::new("fig12").with_section(s))
+}
+
+/// Per-technology, per-level device-model row at the paper's anchor
+/// geometries — the data behind Table III (energies) and Fig 11
+/// (latencies).
+pub struct DeviceRow {
+    /// technology handle
+    pub tech: crate::config::Technology,
+    /// `"L1"` or `"L2"`
+    pub level: &'static str,
+    /// geometry summary, e.g. `"4-way/64kB"`
+    pub geometry: String,
+    /// per-op energies (pJ), indexed by `OP_*`
+    pub e: [f64; NOPS],
+    /// per-op latencies (cycles), indexed by `OP_*`
+    pub lat: [f64; NOPS],
+}
+
+/// Evaluate every given technology at the Table III anchor geometries
+/// (L1 = 64 kB/4-way, L2 = 256 kB/8-way) through the device registry.
+pub fn device_grid(techs: &[crate::config::Technology]) -> Vec<DeviceRow> {
+    let mut out = Vec::new();
+    for &tech in techs {
+        for (level, cap_kb, assoc, lv) in
+            [("L1", 64.0, 4.0, 1.0), ("L2", 256.0, 8.0, 2.0)]
+        {
+            let row = [cap_kb * 1024.0, assoc, 64.0, 4.0, tech.index() as f64, lv];
+            let (e, lat) = energy::energy_latency(&row);
+            out.push(DeviceRow {
+                tech,
+                level,
+                geometry: format!("{}-way/{}kB", assoc as u32, cap_kb as u32),
+                e,
+                lat,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Technology;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn destiny_comparison_has_the_three_model_rows() {
+        let r = destiny_comparison(&mut NativeBackend, 2).unwrap();
+        let s = &r.sections[0];
+        assert_eq!(s.num_rows(), 3);
+        assert!(matches!(s.cell(2, "model"), Some(Cell::Str(m)) if m.as_str() == "Deviation"));
+    }
+
+    #[test]
+    fn device_grid_covers_levels_per_tech() {
+        let g = device_grid(&[Technology::SRAM, Technology::FEFET]);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].e[OP_READ].round(), 61.0); // Table III anchor
+        assert!(g.iter().all(|r| r.lat[OP_ADD] >= r.lat[OP_READ]));
+    }
+}

@@ -1,22 +1,22 @@
 //! Experiment harness: one function per table/figure of the paper's
-//! evaluation (§VI).  Shared by the CLI (`eva-cim table <id>`), the bench
-//! targets (`cargo bench`) and the examples — DESIGN.md §4 maps each
-//! experiment to its bench target.
+//! evaluation (§VI), shared by the CLI (`eva-cim table <id>`), the bench
+//! targets (`cargo bench`) and the examples.
+//!
+//! Since the API redesign every entry point is a thin adapter over
+//! [`crate::api::Evaluation`]: the builder owns all sim/analyze/reshape/
+//! energy wiring (and the coordinator's cached sweep path), the adapters
+//! only select the grid and pivot the resulting rows into the paper's
+//! table shapes.  Each returns a structured [`Report`], so every
+//! table/figure renders as text, CSV or canonical JSON from one value.
 
 use anyhow::Result;
 
-use crate::analyzer::{self, baseline, LocalityRule};
-use crate::config::{CimLevels, SystemConfig, Technology};
-use crate::coordinator::{
-    cross, format_stats, Coordinator, SweepOptions, SweepPoint, SweepRow,
-};
-use crate::energy::{self, calib::*};
-use crate::profiler::ProfileInputs;
-use crate::reshape;
+use crate::analyzer::LocalityRule;
+use crate::api::{report, validate, BackendSel, Cell, Evaluation, Report, Section};
+use crate::config::{CimLevels, Technology};
+use crate::coordinator::SweepOptions;
+use crate::energy::calib::{OP_ADD, OP_AND, OP_OR, OP_READ, OP_XOR};
 use crate::runtime::Backend;
-use crate::sim::{simulate, Limits};
-use crate::util::stats;
-use crate::util::table::{f, TextTable};
 use crate::workloads;
 
 /// The 17 paper benchmarks in Table VI order.
@@ -27,324 +27,181 @@ pub fn paper_benches() -> Vec<&'static str> {
 /// Table III: cache energy (pJ) per operation, both levels, for every
 /// *registered* technology (the paper's SRAM/FeFET rows first, then the
 /// RRAM/STT-MRAM presets and any TOML-defined customs).
-pub fn table3() -> TextTable {
-    let mut t = TextTable::new(
+pub fn table3() -> Report {
+    let mut s = Section::new(
         "Table III — cache energy (pJ) per operation",
         &["tech", "level", "config", "non-CiM read", "CiM-OR", "CiM-AND", "CiM-XOR", "CiM-ADDW32"],
     );
-    for tech in Technology::all() {
-        for (level, cap_kb, assoc) in [("L1", 64.0, 4.0), ("L2", 256.0, 8.0)] {
-            let row = [cap_kb * 1024.0, assoc, 64.0, 4.0, tech.index() as f64,
-                       if level == "L1" { 1.0 } else { 2.0 }];
-            let (e, _) = energy::energy_latency(&row);
-            t.row(vec![
-                tech.name().to_uppercase(),
-                level.into(),
-                format!("{}-way/{}kB", assoc as u32, cap_kb as u32),
-                f(e[OP_READ], 0),
-                f(e[OP_OR], 0),
-                f(e[OP_AND], 0),
-                f(e[OP_XOR], 0),
-                f(e[OP_ADD], 0),
-            ]);
-        }
+    for r in validate::device_grid(&Technology::all()) {
+        s.row(vec![
+            Cell::str(r.tech.name().to_uppercase()),
+            Cell::str(r.level),
+            Cell::str(r.geometry),
+            Cell::num(r.e[OP_READ], 0),
+            Cell::num(r.e[OP_OR], 0),
+            Cell::num(r.e[OP_AND], 0),
+            Cell::num(r.e[OP_XOR], 0),
+            Cell::num(r.e[OP_ADD], 0),
+        ]);
     }
-    t
+    Report::new("table3").with_section(s)
 }
 
 /// Fig 11: access latency (cycles) of non-CiM and CiM operations.
-pub fn fig11() -> TextTable {
-    let mut t = TextTable::new(
+pub fn fig11() -> Report {
+    let mut s = Section::new(
         "Fig 11 — access latency (cycles) of non-CiM and CiM operations @1GHz",
         &["tech", "level", "read", "or", "and", "xor", "add"],
     );
-    for tech in Technology::all() {
-        for (level, cap_kb, assoc, lv) in [("L1", 64.0, 4.0, 1.0), ("L2", 256.0, 8.0, 2.0)] {
-            let row = [cap_kb * 1024.0, assoc, 64.0, 4.0, tech.index() as f64, lv];
-            let (_, l) = energy::energy_latency(&row);
-            t.row(vec![
-                tech.name().to_uppercase(),
-                level.into(),
-                f(l[OP_READ], 1),
-                f(l[OP_OR], 1),
-                f(l[OP_AND], 1),
-                f(l[OP_XOR], 1),
-                f(l[OP_ADD], 1),
-            ]);
-        }
-    }
-    t
-}
-
-/// Table V: Eva-CiM vs array-level-only (DESTINY) energy on an LCS trace.
-///
-/// The paper reports ≈24% deviation for both CiM and non-CiM instructions:
-/// Eva-CiM adds the multi-level-hierarchy effects (misses, refills, core
-/// interactions) that the array-only estimate omits.
-pub fn table5(backend: &mut dyn Backend, scale: usize) -> Result<TextTable> {
-    let cfg = SystemConfig::preset("c1").unwrap();
-    let prog = workloads::build("lcs", scale, 42).unwrap();
-    let trace = simulate(&prog, &cfg, Limits::default())?;
-    let analysis = analyzer::analyze(&trace, &cfg, LocalityRule::AnyCache);
-    let reshaped = reshape::reshape(&trace, &analysis.selection, &cfg);
-    let inputs = ProfileInputs::new(&cfg, &reshaped);
-    let res = backend.evaluate_batch(&[inputs.clone()])?.remove(0);
-
-    // Eva-CiM's memory-side energy split into CiM vs non-CiM portions.
-    // The CiM share includes the hierarchy's data-locality management:
-    // cross-level operand moves and result readbacks (§IV-C) — exactly the
-    // effects the array-only estimate cannot see.
-    let (e1, _) = energy::energy_latency(&inputs.cfg_l1);
-    let (e2, _) = energy::energy_latency(&inputs.cfg_l2);
-    let mut overhead = 0.0;
-    for c in &analysis.selection.candidates {
-        let (rd_src, wr_dst, rd_back) = match c.level {
-            crate::probes::MemLevel::L2 => (e1[OP_READ], e2[OP_WRITE], e2[OP_READ]),
-            _ => (e2[OP_READ], e1[OP_WRITE], e1[OP_READ]),
-        };
-        overhead += c.moves as f64 * (rd_src + wr_dst);
-        overhead += c.readbacks as f64 * rd_back;
-        // rereads of operands shared with earlier candidates
-        overhead += c.shared_loads.len() as f64 * rd_back;
-    }
-    let eva_cim = (res.comps_cim[COMP_CIM_L1] + res.comps_cim[COMP_CIM_L2]
-        + overhead) / 1000.0;
-    // compare at *array* level (÷ XBUS_FACTOR): DESTINY models the array
-    // only, so the H-tree/bus transport must be excluded on both sides —
-    // the remaining deviation is the hierarchy-event accounting (misses,
-    // refills, I-fetch traffic) that Eva-CiM adds on top of DESTINY.
-    let eva_non = (res.comps_cim[COMP_L1I] + res.comps_cim[COMP_L1D]
-        + res.comps_cim[COMP_L2]) / XBUS_FACTOR / 1000.0;
-    // array-only (DESTINY-style) estimate of the same reshaped activity
-    let (d_cim, d_non) = energy::destiny_only_estimate(
-        &inputs.counters_cim, &inputs.cfg_l1, &inputs.cfg_l2);
-    let (d_cim, d_non) = (d_cim / 1000.0, d_non / 1000.0);
-
-    let mut t = TextTable::new(
-        "Table V — energy (nJ) comparison: array-only (DESTINY) vs Eva-CiM (LCS trace)",
-        &["model", "CiM", "non-CiM"],
-    );
-    t.row(vec!["DESTINY (array-only)".into(), f(d_cim, 2), f(d_non, 2)]);
-    t.row(vec!["Eva-CiM".into(), f(eva_cim, 2), f(eva_non, 2)]);
-    t.row(vec![
-        "Deviation".into(),
-        format!("{:.1}%", stats::rel_dev(eva_cim, d_cim) * 100.0),
-        format!("{:.1}%", stats::rel_dev(eva_non, d_non) * 100.0),
-    ]);
-    Ok(t)
-}
-
-/// Fig 12: CiM-supported memory-access fraction, Eva-CiM vs Jain [23],
-/// LCS over `runs` random inputs on the 1 MB SPM-like config.
-pub fn fig12(runs: usize, scale: usize) -> Result<TextTable> {
-    let cfg = SystemConfig::preset("spm1mb").unwrap();
-    let mut eva = Vec::new();
-    let mut jain = Vec::new();
-    for r in 0..runs {
-        let prog = workloads::build("lcs", scale, 1000 + r as u64).unwrap();
-        let trace = simulate(&prog, &cfg, Limits::default())?;
-        let analysis = analyzer::analyze(&trace, &cfg, LocalityRule::AnyCache);
-        eva.push(analysis.macr.ratio());
-        jain.push(baseline::classify(&trace.ciq).cim_fraction());
-    }
-    let mut t = TextTable::new(
-        &format!("Fig 12 — CiM-supported memory accesses on LCS ({runs} runs, 1MB config)"),
-        &["method", "mean", "min", "max"],
-    );
-    for (name, xs) in [("Eva-CiM (IDG)", &eva), ("Jain et al. [23]", &jain)] {
-        t.row(vec![
-            name.into(),
-            format!("{:.1}%", stats::mean(xs) * 100.0),
-            format!("{:.1}%", stats::percentile(xs, 0.0) * 100.0),
-            format!("{:.1}%", stats::percentile(xs, 100.0) * 100.0),
+    for r in validate::device_grid(&Technology::all()) {
+        s.row(vec![
+            Cell::str(r.tech.name().to_uppercase()),
+            Cell::str(r.level),
+            Cell::num(r.lat[OP_READ], 1),
+            Cell::num(r.lat[OP_OR], 1),
+            Cell::num(r.lat[OP_AND], 1),
+            Cell::num(r.lat[OP_XOR], 1),
+            Cell::num(r.lat[OP_ADD], 1),
         ]);
     }
-    Ok(t)
+    Report::new("fig11").with_section(s)
 }
 
-/// Shared sweep driver for Figs 13–16 / Table VI.  Every experiment goes
-/// through the coordinator's cached path: set `opts.cache_dir` (CLI:
-/// `--cache-dir`, with `--resume`) and regenerating one figure warms the
-/// result + trace caches for all the others that share design points.
-fn run_paper_sweep(
-    configs: &[SystemConfig],
-    opts: SweepOptions,
-    backend: &mut dyn Backend,
-) -> Result<Vec<SweepRow>> {
-    let benches = paper_benches();
-    let points: Vec<SweepPoint> = cross(&benches, configs, LocalityRule::AnyCache);
-    let t0 = std::time::Instant::now();
-    let (rows, stats) =
-        Coordinator::new(opts).run_sweep_with_stats(&points, backend)?;
-    // cache-effectiveness + scale ledger for `eva-cim table <id>` runs
-    eprintln!("{}", format_stats(&stats, t0.elapsed().as_secs_f64()));
-    Ok(rows)
+/// Table V: Eva-CiM vs array-level-only (DESTINY) energy on an LCS trace
+/// (adapter over [`validate::destiny_comparison`]).
+pub fn table5(backend: &mut dyn Backend, scale: usize) -> Result<Report> {
+    validate::destiny_comparison(backend, scale)
+}
+
+/// Fig 12: CiM-supported memory-access fraction, Eva-CiM vs Jain [23]
+/// (adapter over [`validate::macr_comparison`]).
+pub fn fig12(runs: usize, scale: usize) -> Result<Report> {
+    validate::macr_comparison(runs, scale)
 }
 
 /// Fig 13: MACR per benchmark with L1/other breakdown.
-pub fn fig13(opts: SweepOptions) -> Result<TextTable> {
-    let cfg = SystemConfig::preset("c1").unwrap();
-    let mut backend = crate::runtime::NativeBackend;
-    let rows = run_paper_sweep(&[cfg], opts, &mut backend)?;
-    let mut t = TextTable::new(
+pub fn fig13(opts: SweepOptions) -> Result<Report> {
+    let sweep = Evaluation::new()
+        .preset("c1")
+        .sweep(opts)
+        .backend(BackendSel::Native)
+        .rows()?;
+    let mut s = Section::new(
         "Fig 13 — MACR per benchmark (top) and L1/other breakdown (bottom)",
         &["bench", "MACR", "L1 share", "other share", "accesses", "convertible"],
     );
-    for r in &rows {
-        t.row(vec![
-            workloads::display_name(&r.bench).into(),
-            format!("{:.1}%", r.macr.ratio() * 100.0),
-            format!("{:.1}%", r.macr.l1_share() * 100.0),
-            format!("{:.1}%", (1.0 - r.macr.l1_share()) * 100.0),
-            format!("{}", r.macr.total_accesses),
-            format!("{}", r.macr.convertible),
+    for r in &sweep.rows {
+        s.row(vec![
+            Cell::str(workloads::display_name(&r.bench)),
+            Cell::pct(r.macr.ratio(), 1),
+            Cell::pct(r.macr.l1_share(), 1),
+            Cell::pct(1.0 - r.macr.l1_share(), 1),
+            Cell::int(r.macr.total_accesses),
+            Cell::int(r.macr.convertible),
         ]);
     }
-    Ok(t)
+    Ok(Report::new("fig13")
+        .with_section(s)
+        .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend))
 }
 
 /// Table VI: speedup, energy improvement, processor/cache breakdown.
-pub fn table6(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
-    let cfg = SystemConfig::preset("c1").unwrap();
-    let rows = run_paper_sweep(&[cfg], opts, backend)?;
-    let mut t = TextTable::new(
+pub fn table6(opts: SweepOptions, backend: &mut dyn Backend) -> Result<Report> {
+    let sweep = Evaluation::new().preset("c1").sweep(opts).rows_with(backend)?;
+    let mut s = Section::new(
         "Table VI — speedup, energy improvement, improvement breakdown (CiM vs non-CiM)",
         &["bench", "speedup", "energy impr.", "ratio proc", "ratio caches", "MACR"],
     );
-    for r in &rows {
-        t.row(vec![
-            workloads::display_name(&r.bench).into(),
-            f(r.result.speedup, 2),
-            f(r.result.improvement, 2),
-            f(r.result.ratio_proc, 2),
-            f(r.result.ratio_cache, 2),
-            format!("{:.1}%", r.macr.ratio() * 100.0),
+    for r in &sweep.rows {
+        s.row(vec![
+            Cell::str(workloads::display_name(&r.bench)),
+            Cell::num(r.result.speedup, 2),
+            Cell::num(r.result.improvement, 2),
+            Cell::num(r.result.ratio_proc, 2),
+            Cell::num(r.result.ratio_cache, 2),
+            Cell::pct(r.macr.ratio(), 1),
         ]);
     }
-    Ok(t)
+    Ok(Report::new("table6")
+        .with_section(s)
+        .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend))
 }
 
 /// Fig 14: energy improvement across the three cache configurations.
-pub fn fig14(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
-    let configs = [
-        SystemConfig::preset("c1").unwrap(),
-        SystemConfig::preset("c2").unwrap(),
-        SystemConfig::preset("c3").unwrap(),
-    ];
-    let rows = run_paper_sweep(&configs, opts, backend)?;
-    let mut t = TextTable::new(
+pub fn fig14(opts: SweepOptions, backend: &mut dyn Backend) -> Result<Report> {
+    let sweep = Evaluation::new()
+        .presets(&["c1", "c2", "c3"])
+        .sweep(opts)
+        .rows_with(backend)?;
+    let s = report::pivot(
         "Fig 14 — energy improvement for CiM with different cache configurations",
-        &["bench", "c1 (32k/256k)", "c2 (64k/256k)", "c3 (64k/2M)"],
+        &paper_benches(),
+        &sweep.rows,
+        &[("c1 (32k/256k)", "c1"), ("c2 (64k/256k)", "c2"), ("c3 (64k/2M)", "c3")],
+        |r| Cell::num(r.result.improvement, 2),
     );
-    for b in paper_benches() {
-        let get = |cn: &str| {
-            rows.iter()
-                .find(|r| r.bench == b && r.config_name == cn)
-                .map(|r| f(r.result.improvement, 2))
-                .unwrap_or_default()
-        };
-        t.row(vec![
-            workloads::display_name(b).into(),
-            get("c1"),
-            get("c2"),
-            get("c3"),
-        ]);
-    }
-    Ok(t)
+    Ok(Report::new("fig14")
+        .with_section(s)
+        .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend))
 }
 
 /// Fig 15: energy improvement with CiM in L1-only / L2-only / both.
-pub fn fig15(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
-    let base = SystemConfig::preset("c1").unwrap();
-    let configs: Vec<SystemConfig> = [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both]
-        .into_iter()
-        .map(|cl| {
-            let mut c = base.clone().with_cim(cl);
-            c.name = format!("c1-{}", cl.name());
-            c
-        })
-        .collect();
-    let rows = run_paper_sweep(&configs, opts, backend)?;
-    let mut t = TextTable::new(
+pub fn fig15(opts: SweepOptions, backend: &mut dyn Backend) -> Result<Report> {
+    let sweep = Evaluation::new()
+        .preset("c1")
+        .cim_variants(&[CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both])
+        .sweep(opts)
+        .rows_with(backend)?;
+    let s = report::pivot(
         "Fig 15 — energy improvement: CiM in L1 only, L2 only, both",
-        &["bench", "L1 only", "L2 only", "L1+L2"],
+        &paper_benches(),
+        &sweep.rows,
+        &[("L1 only", "c1-l1"), ("L2 only", "c1-l2"), ("L1+L2", "c1-l1+l2")],
+        |r| Cell::num(r.result.improvement, 2),
     );
-    for b in paper_benches() {
-        let get = |cn: &str| {
-            rows.iter()
-                .find(|r| r.bench == b && r.config_name == cn)
-                .map(|r| f(r.result.improvement, 2))
-                .unwrap_or_default()
-        };
-        t.row(vec![
-            workloads::display_name(b).into(),
-            get("c1-l1"),
-            get("c1-l2"),
-            get("c1-l1+l2"),
-        ]);
-    }
-    Ok(t)
+    Ok(Report::new("fig15")
+        .with_section(s)
+        .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend))
 }
 
 /// Fig 16: SRAM vs FeFET — energy improvement and speedup.
 ///
 /// As in the paper, FeFET improvements are normalized to the *SRAM*
 /// non-CiM baseline system.
-pub fn fig16(opts: SweepOptions, backend: &mut dyn Backend) -> Result<TextTable> {
-    let configs: Vec<SystemConfig> = [Technology::SRAM, Technology::FEFET]
-        .into_iter()
-        .map(|tech| {
-            let mut c = SystemConfig::preset("c1").unwrap().with_tech(tech);
-            c.name = format!("c1-{}", tech.name());
-            c
-        })
-        .collect();
-    let rows = run_paper_sweep(&configs, opts, backend)?;
-    let mut t = TextTable::new(
+pub fn fig16(opts: SweepOptions, backend: &mut dyn Backend) -> Result<Report> {
+    let sweep = Evaluation::new()
+        .preset("c1")
+        .techs(&[Technology::SRAM, Technology::FEFET])
+        .sweep(opts)
+        .rows_with(backend)?;
+    let mut s = Section::new(
         "Fig 16 — CMOS SRAM vs FeFET-RAM (energy improvement normalized to the SRAM baseline)",
         &["bench", "E-impr SRAM", "E-impr FeFET", "FeFET/SRAM", "speedup SRAM", "speedup FeFET"],
     );
     for b in paper_benches() {
-        let sram = rows
-            .iter()
-            .find(|r| r.bench == b && r.tech == Technology::SRAM);
-        let fefet = rows
-            .iter()
-            .find(|r| r.bench == b && r.tech == Technology::FEFET);
-        if let (Some(s), Some(fe)) = (sram, fefet) {
+        let find = |t: Technology| sweep.rows.iter().find(|r| r.bench == b && r.tech == t);
+        if let (Some(sr), Some(fe)) = (find(Technology::SRAM), find(Technology::FEFET)) {
             // normalize FeFET's CiM energy to the SRAM baseline
-            let fefet_norm = s.result.total_base / fe.result.total_cim.max(1e-9);
-            t.row(vec![
-                workloads::display_name(b).into(),
-                f(s.result.improvement, 2),
-                f(fefet_norm, 2),
-                f(fefet_norm / s.result.improvement.max(1e-9), 2),
-                f(s.result.speedup, 2),
-                f(fe.result.speedup, 2),
+            let fefet_norm = sr.result.total_base / fe.result.total_cim.max(1e-9);
+            s.row(vec![
+                Cell::str(workloads::display_name(b)),
+                Cell::num(sr.result.improvement, 2),
+                Cell::num(fefet_norm, 2),
+                Cell::num(fefet_norm / sr.result.improvement.max(1e-9), 2),
+                Cell::num(sr.result.speedup, 2),
+                Cell::num(fe.result.speedup, 2),
             ]);
         }
     }
-    Ok(t)
-}
-
-/// Output of [`explore`]: the full tech×config grid plus its Pareto
-/// frontier, per benchmark.
-pub struct ExploreOutcome {
-    /// every evaluated design point, frontier members marked `*`
-    pub grid: TextTable,
-    /// the non-dominated (energy improvement, speedup) points only
-    pub frontier: TextTable,
-    /// `(bench, tech, config)` of each frontier member, grid order
-    pub frontier_points: Vec<(String, Technology, String)>,
+    Ok(Report::new("fig16")
+        .with_section(s)
+        .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend))
 }
 
 /// Cross-technology design-space exploration (the generalization of
 /// Figs 14–16): sweep `techs` × `presets` for each benchmark and rank the
-/// results by Pareto dominance on (energy improvement, speedup) — both
-/// normalized to the design point's own non-CiM baseline, so frontier
-/// membership answers "which device+geometry should I build for this
-/// workload?".  All points go through the coordinator's cached path like
-/// every other experiment.
+/// results by Pareto dominance on (energy improvement, speedup) — adapter
+/// over [`Evaluation::explore`], which documents the report shape.
 pub fn explore(
     benches: &[&str],
     techs: &[Technology],
@@ -353,73 +210,15 @@ pub fn explore(
     rule: LocalityRule,
     opts: SweepOptions,
     backend: &mut dyn Backend,
-) -> Result<ExploreOutcome> {
-    let mut configs = Vec::new();
-    for preset in presets {
-        let base = SystemConfig::preset(preset)
-            .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset}'"))?;
-        for &tech in techs {
-            let mut c = base.clone().with_tech(tech).with_cim(cim);
-            c.name = format!("{preset}-{}", tech.name());
-            configs.push(c);
-        }
-    }
-    let points: Vec<SweepPoint> = cross(benches, &configs, rule);
-    let t0 = std::time::Instant::now();
-    let (rows, sweep_stats) =
-        Coordinator::new(opts).run_sweep_with_stats(&points, backend)?;
-    eprintln!("{}", format_stats(&sweep_stats, t0.elapsed().as_secs_f64()));
-
-    let mut grid = TextTable::new(
-        &format!(
-            "explore — {} tech × {} config Pareto grid (* = frontier)",
-            techs.len(),
-            presets.len()
-        ),
-        &["bench", "tech", "config", "MACR", "E-impr", "speedup", "Pareto"],
-    );
-    let mut frontier = TextTable::new(
-        "explore — Pareto frontier (non-dominated on E-impr × speedup)",
-        &["bench", "tech", "config", "E-impr", "speedup"],
-    );
-    let mut frontier_points = Vec::new();
-    for b in benches {
-        let bench_rows: Vec<&SweepRow> =
-            rows.iter().filter(|r| r.bench == *b).collect();
-        let scores: Vec<(f64, f64)> = bench_rows
-            .iter()
-            .map(|r| (r.result.improvement, r.result.speedup))
-            .collect();
-        let on_front = stats::pareto_front(&scores);
-        for (r, &front) in bench_rows.iter().zip(&on_front) {
-            let preset = r
-                .config_name
-                .split('-')
-                .next()
-                .unwrap_or(&r.config_name)
-                .to_string();
-            grid.row(vec![
-                workloads::display_name(&r.bench).into(),
-                r.tech.name().into(),
-                preset.clone(),
-                format!("{:.1}%", r.macr.ratio() * 100.0),
-                f(r.result.improvement, 2),
-                f(r.result.speedup, 2),
-                if front { "*".into() } else { String::new() },
-            ]);
-            if front {
-                frontier.row(vec![
-                    workloads::display_name(&r.bench).into(),
-                    r.tech.name().into(),
-                    preset.clone(),
-                    f(r.result.improvement, 2),
-                    f(r.result.speedup, 2),
-                ]);
-                frontier_points.push((r.bench.clone(), r.tech, preset));
-            }
-        }
-    }
-    Ok(ExploreOutcome { grid, frontier, frontier_points })
+) -> Result<Report> {
+    Evaluation::new()
+        .benches(benches)
+        .techs(techs)
+        .presets(presets)
+        .cim(cim)
+        .rule(rule)
+        .sweep(opts)
+        .explore_with(backend)
 }
 
 #[cfg(test)]
@@ -433,8 +232,7 @@ mod tests {
 
     #[test]
     fn table3_matches_published_anchor_values() {
-        let t = table3();
-        let s = t.render();
+        let s = table3().render();
         // spot-check the exact Table III numbers
         for v in ["61", "79", "314", "365", "34", "205"] {
             assert!(s.contains(v), "missing {v} in:\n{s}");
@@ -451,7 +249,7 @@ mod tests {
     #[test]
     fn fig12_eva_finds_more_than_jain() {
         let t = fig12(3, 2).unwrap();
-        let s = t.to_csv();
+        let s = t.render_csv();
         let lines: Vec<&str> = s.lines().collect();
         let parse_pct = |row: &str| -> f64 {
             row.split(',').nth(1).unwrap().trim_end_matches('%').parse().unwrap()
@@ -464,7 +262,7 @@ mod tests {
     #[test]
     fn table6_produces_all_17_rows() {
         let t = table6(fast_opts(), &mut NativeBackend).unwrap();
-        assert_eq!(t.num_rows(), 17);
+        assert_eq!(t.sections[0].num_rows(), 17);
     }
 
     #[test]
@@ -485,17 +283,29 @@ mod tests {
             &mut NativeBackend,
         )
         .unwrap();
-        assert_eq!(out.grid.num_rows(), 12, "4 techs x 3 configs");
-        assert!(!out.frontier_points.is_empty());
-        assert!(out.frontier_points.len() <= 12);
+        let (grid, frontier) = (&out.sections[0], &out.sections[1]);
+        assert_eq!(grid.num_rows(), 12, "4 techs x 3 configs");
+        assert!(frontier.num_rows() >= 1 && frontier.num_rows() <= 12);
+        // grid frontier marks agree with the frontier section
+        let marked = grid
+            .rows
+            .iter()
+            .filter(|r| matches!(r.last(), Some(crate::api::Cell::Mark(true))))
+            .count();
+        assert_eq!(marked, frontier.num_rows());
         // every frontier row names a swept tech and preset
-        for (bench, tech, preset) in &out.frontier_points {
-            assert_eq!(bench, "lcs");
-            assert!(techs.contains(tech));
+        for i in 0..frontier.num_rows() {
+            let tech = match frontier.cell(i, "tech") {
+                Some(crate::api::Cell::Str(t)) => t.clone(),
+                other => panic!("tech cell: {other:?}"),
+            };
+            assert!(techs.iter().any(|t| t.name() == tech));
+            let preset = match frontier.cell(i, "config") {
+                Some(crate::api::Cell::Str(p)) => p.clone(),
+                other => panic!("config cell: {other:?}"),
+            };
             assert!(["c1", "c2", "c3"].contains(&preset.as_str()));
         }
-        // the frontier table mirrors frontier_points
-        assert_eq!(out.frontier.num_rows(), out.frontier_points.len());
     }
 
     #[test]
@@ -510,7 +320,9 @@ mod tests {
         };
         let cold = table6(opts.clone(), &mut NativeBackend).unwrap();
         let warm = table6(opts, &mut NativeBackend).unwrap();
-        assert_eq!(cold.to_csv(), warm.to_csv());
+        // one source of truth: every rendering is byte-identical
+        assert_eq!(cold.render_json(), warm.render_json());
+        assert_eq!(cold.render_csv(), warm.render_csv());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -15,6 +15,11 @@
 //!                  or energy/ (native mirror) ──► report/
 //! ```
 //!
+//! The [`api`] module is the public front door: a typed
+//! [`api::Evaluation`] builder that composes the whole pipeline (and the
+//! coordinator's cached sweep engine) behind one call and returns a
+//! structured [`api::Report`] renderable as text, CSV or canonical JSON.
+//!
 //! See DESIGN.md for the full system inventory and experiment index.
 
 // Style lints we deliberately don't chase (correctness lints stay on —
@@ -34,8 +39,8 @@
 // ROADMAP.md.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod analyzer;
+pub mod api;
 #[allow(missing_docs)]
 pub mod asm;
 pub mod config;
@@ -54,5 +59,4 @@ pub mod runtime;
 pub mod sim;
 #[allow(missing_docs)]
 pub mod util;
-#[allow(missing_docs)]
 pub mod workloads;

@@ -18,9 +18,19 @@
 //! eva-cim calib                                  print calibration constants
 //! ```
 //!
-//! Every command additionally accepts `--tech-file <file.toml>` (repeatable)
-//! to register custom device technologies from `[tech.<name>]` sections
-//! before flags like `--tech`/`--techs` are resolved.
+//! Every command is a thin composition over [`eva_cim::api::Evaluation`]
+//! and produces a structured [`eva_cim::api::Report`], so every command
+//! additionally accepts:
+//!
+//! * `--format table|json|csv` — render the same report as aligned text
+//!   (default), canonical machine-readable JSON, or CSV;
+//! * `--csv <file>` — additionally write the CSV rendering to a file;
+//! * `--tech-file <file.toml>` (repeatable) — register custom device
+//!   technologies from `[tech.<name>]` sections before flags like
+//!   `--tech`/`--techs` are resolved.
+//!
+//! Sweep ledgers (cache effectiveness, scale) go to stderr, never stdout,
+//! so `eva-cim <cmd> --format json | jq` always sees pure JSON.
 //!
 //! (clap is unavailable in this offline environment; flags are parsed by
 //! the tiny matcher in [`cli`].)
@@ -37,20 +47,13 @@
 
 use std::process::ExitCode;
 
-use eva_cim::analyzer::{analyze, LocalityRule, StreamOutcome};
+use eva_cim::analyzer::LocalityRule;
+use eva_cim::api::{BackendSel, Cell, Evaluation, Format, Report, Section};
 use eva_cim::config::{CimLevels, SystemConfig, Technology};
-use eva_cim::coordinator::{cross, format_stats, Coordinator, SweepOptions};
-use eva_cim::energy::calib;
-use eva_cim::energy::device;
+use eva_cim::coordinator::format_stats;
+use eva_cim::energy::{calib, device};
 use eva_cim::experiments;
-use eva_cim::pipeline::run_pipelined;
-use eva_cim::probes::TraceSummary;
-use eva_cim::profiler::ProfileInputs;
-use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink, Reshaped};
-use eva_cim::runtime::{best_backend, Backend, NativeBackend, PjrtRuntime};
-use eva_cim::sim::{simulate, Limits};
-use eva_cim::util::table::f as fnum;
-use eva_cim::util::TextTable;
+use eva_cim::runtime::PjrtRuntime;
 use eva_cim::workloads;
 
 mod cli {
@@ -143,6 +146,10 @@ fn parse_rule(s: &str) -> Result<LocalityRule, String> {
     LocalityRule::from_name(s).ok_or_else(|| format!("unknown locality rule '{s}'"))
 }
 
+fn parse_backend(s: &str) -> Result<BackendSel, String> {
+    BackendSel::from_name(s).ok_or_else(|| format!("unknown backend '{s}'"))
+}
+
 /// Register every `[tech.<name>]` section of each `--tech-file` argument.
 /// Must run before `--tech`/`--techs` flags are resolved.
 fn load_tech_files(args: &cli::Args) -> Result<(), String> {
@@ -186,166 +193,98 @@ fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
     Ok(cfg)
 }
 
-/// Sweep options shared by `sweep` and `table`: sizing, the worker pool
-/// (`--jobs`, with `--workers` kept as an alias), and the on-disk cache
-/// (`--cache-dir`, `--resume`, `--chunk`).
-fn sweep_opts_from_args(args: &cli::Args) -> Result<SweepOptions, String> {
-    let defaults = SweepOptions::default();
-    let workers =
-        args.usize_flag("jobs", args.usize_flag("workers", defaults.workers)?)?;
-    Ok(SweepOptions {
-        scale: args.usize_flag("scale", 0)?,
-        seed: args.usize_flag("seed", 42)? as u64,
-        workers,
-        chunk: args.usize_flag("chunk", 0)?,
-        cache_dir: args.flag("cache-dir").map(std::path::PathBuf::from),
-        resume: args.bool_flag("resume")?,
-        ..defaults
-    })
-}
-
-/// Resolve `--backend`.  `techs` is every technology the command will
-/// evaluate: the AOT'd PJRT graphs only cover the frozen SRAM/FeFET
-/// table, so `auto` must resolve to the native mirror whenever a registry
-/// technology (rram, stt-mram, TOML customs) is in play, and an explicit
-/// `--backend pjrt` fails up front instead of after the simulation.
-fn make_backend(kind: &str, techs: &[Technology]) -> Result<Box<dyn Backend>, String> {
-    let outside_table =
-        techs.iter().find(|t| t.index() >= calib::NTECH).copied();
-    match kind {
-        "native" => Ok(Box::new(NativeBackend)),
-        "pjrt" => {
-            if let Some(t) = outside_table {
-                return Err(format!(
-                    "the pjrt backend only covers the {}-row AOT tech table \
-                     (sram/fefet); technology '{}' needs --backend native",
-                    calib::NTECH,
-                    t.name()
-                ));
-            }
-            PjrtRuntime::load(&PjrtRuntime::default_dir())
-                .map(|rt| Box::new(rt) as Box<dyn Backend>)
-                .map_err(|e| format!("{e:#}"))
-        }
-        "auto" => {
-            if outside_table.is_some() {
-                Ok(Box::new(NativeBackend))
-            } else {
-                Ok(best_backend(&PjrtRuntime::default_dir()))
-            }
-        }
-        _ => Err(format!("unknown backend '{kind}'")),
+/// Seed an [`Evaluation`] with the sizing/worker-pool/cache flags shared
+/// by every sweeping command: `--scale`, `--seed`, `--jobs` (alias
+/// `--workers`), `--chunk`, `--cache-dir`, `--resume`, `--rule`,
+/// `--backend`, `--max-instructions`.
+fn eval_from_args(args: &cli::Args) -> Result<Evaluation, String> {
+    let mut ev = Evaluation::new()
+        .scale(args.usize_flag("scale", 0)?)
+        .seed(args.usize_flag("seed", 42)? as u64)
+        .chunk(args.usize_flag("chunk", 0)?)
+        .resume(args.bool_flag("resume")?)
+        .rule(parse_rule(&args.flag_or("rule", "any"))?)
+        .backend(parse_backend(&args.flag_or("backend", "auto"))?);
+    let default_jobs = eva_cim::coordinator::SweepOptions::default().workers;
+    ev = ev.jobs(
+        args.usize_flag("jobs", args.usize_flag("workers", default_jobs)?)?,
+    );
+    if let Some(dir) = args.flag("cache-dir") {
+        ev = ev.cache_dir(dir);
     }
+    if let Some(v) = args.flag("max-instructions") {
+        let n: u64 = v
+            .parse()
+            .map_err(|_| "--max-instructions needs a number".to_string())?;
+        ev = ev.max_instructions(n);
+    }
+    Ok(ev)
 }
 
-fn cmd_list() -> Result<(), String> {
-    println!("benchmarks (Table IV):");
+/// Render a finished report: sweep ledger to stderr, the report itself to
+/// stdout in the `--format` of choice, plus the optional `--csv <file>`
+/// export (which always goes through `Report::render_csv`).
+fn emit(report: &Report, args: &cli::Args) -> Result<(), String> {
+    if let Some(stats) = &report.stats {
+        // the *resolved* backend matters: auto may have fallen back from
+        // pjrt to the native mirror
+        let backend = report
+            .backend
+            .map(|b| format!(" | backend {b}"))
+            .unwrap_or_default();
+        eprintln!("{}{backend}", format_stats(stats, report.elapsed_secs));
+    }
+    let name = args.flag_or("format", "table");
+    let format = Format::from_name(&name)
+        .ok_or_else(|| format!("unknown format '{name}' (table|json|csv)"))?;
+    print!("{}", report.render_as(format));
+    if let Some(path) = args.flag("csv") {
+        std::fs::write(path, report.render_csv()).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn err_str(e: anyhow::Error) -> String {
+    format!("{e:#}")
+}
+
+fn cmd_list(args: &cli::Args) -> Result<(), String> {
+    let mut benches = Section::new("benchmarks (Table IV)", &["key", "name"]);
     for n in workloads::NAMES {
-        println!("  {:10} {}", n, workloads::display_name(n));
+        benches.row(vec![Cell::str(n), Cell::str(workloads::display_name(n))]);
     }
-    println!("\nconfig presets:");
+    let mut presets = Section::new("config presets", &["preset", "L1", "L2"]);
     for p in SystemConfig::preset_names() {
         let c = SystemConfig::preset(p).unwrap();
-        println!(
-            "  {:8} L1 {} / L2 {}",
-            p,
-            c.l1d.pretty(),
-            c.l2.pretty()
-        );
-    }
-    println!("\ntechnologies (--tech; extend via --tech-file or [tech.<name>]):");
-    for tech in Technology::all() {
-        let m = device::model_of(tech);
-        let aliases = if m.aliases.is_empty() {
-            String::new()
-        } else {
-            format!("  aliases: {}", m.aliases.join(", "))
-        };
-        println!(
-            "  {:10} {}{aliases}",
-            tech.name(),
-            if device::is_builtin(tech) { "built-in" } else { "custom  " },
-        );
-    }
-    println!("\ncim levels: none, l1, l2, both");
-    Ok(())
-}
-
-/// Run the pipelined sim→analyze→reshape stack for one program.
-fn stream_single(
-    prog: &eva_cim::asm::Program,
-    cfg: &SystemConfig,
-    rule: LocalityRule,
-) -> Result<(TraceSummary, StreamOutcome, Reshaped), String> {
-    let (summary, outcome, deltas) = run_pipelined(
-        prog,
-        cfg,
-        Limits::default(),
-        rule,
-        DeltaSink::default(),
-        None,
-    )
-    .map_err(|e| e.to_string())?;
-    let reshaped = reshape_from_deltas(&summary, &deltas, cfg);
-    Ok((summary, outcome, reshaped))
-}
-
-fn report_single(
-    cfg: &SystemConfig,
-    summary: &TraceSummary,
-    outcome: &StreamOutcome,
-    reshaped: &Reshaped,
-    backend: &mut dyn Backend,
-) -> Result<(), String> {
-    let inputs = ProfileInputs::new(cfg, reshaped);
-    let res = backend
-        .evaluate_batch(&[inputs])
-        .map_err(|e| format!("{e:#}"))?
-        .remove(0);
-
-    println!("program          : {}", summary.program);
-    println!("committed instrs : {}", summary.committed);
-    println!("cycles           : {}  (CPI {:.2})", summary.cycles, summary.cpi());
-    println!("IDG nodes        : {} ({} eligible)", outcome.idg_nodes.0, outcome.idg_nodes.1);
-    println!("candidates       : {}", outcome.candidates);
-    println!(
-        "analysis window  : peak {} instrs (streamed, sim ∥ analyze)",
-        outcome.peak_window
-    );
-    println!("MACR             : {:.1}%  (L1 share {:.1}%)",
-             outcome.macr.ratio() * 100.0, outcome.macr.l1_share() * 100.0);
-    println!("offloaded instrs : {}  CiM ops: {}", reshaped.removed, reshaped.cim_op_count);
-    println!("backend          : {}", backend.name());
-    println!();
-    let mut t = TextTable::new("profile", &["metric", "baseline", "CiM", "ratio"]);
-    t.row(vec![
-        "energy (uJ)".into(),
-        fnum(res.total_base / 1e6, 2),
-        fnum(res.total_cim / 1e6, 2),
-        fnum(res.improvement, 2),
-    ]);
-    t.row(vec![
-        "speedup".into(),
-        "1.00".into(),
-        fnum(res.speedup, 2),
-        fnum(res.speedup, 2),
-    ]);
-    println!("{}", t.render());
-    let mut c = TextTable::new(
-        "energy breakdown (uJ)",
-        &["component", "baseline", "CiM"],
-    );
-    for i in 0..calib::NCOMP {
-        c.row(vec![
-            calib::COMP_NAMES[i].into(),
-            fnum(res.comps_base[i] / 1e6, 3),
-            fnum(res.comps_cim[i] / 1e6, 3),
+        presets.row(vec![
+            Cell::str(*p),
+            Cell::str(c.l1d.pretty()),
+            Cell::str(c.l2.pretty()),
         ]);
     }
-    println!("{}", c.render());
-    println!("improvement breakdown: processor {:.2}, caches {:.2}",
-             res.ratio_proc, res.ratio_cache);
-    Ok(())
+    let mut techs = Section::new(
+        "technologies (--tech; extend via --tech-file or [tech.<name>])",
+        &["tech", "kind", "aliases"],
+    );
+    for tech in Technology::all() {
+        let m = device::model_of(tech);
+        techs.row(vec![
+            Cell::str(tech.name()),
+            Cell::str(if device::is_builtin(tech) { "built-in" } else { "custom" }),
+            Cell::str(m.aliases.join(", ")),
+        ]);
+    }
+    let mut cims = Section::new("cim levels (--cim)", &["name"]);
+    for c in [CimLevels::None, CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both] {
+        cims.row(vec![Cell::str(c.name())]);
+    }
+    let report = Report::new("list")
+        .with_section(benches)
+        .with_section(presets)
+        .with_section(techs)
+        .with_section(cims);
+    emit(&report, args)
 }
 
 fn cmd_run(args: &cli::Args) -> Result<(), String> {
@@ -353,16 +292,12 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
         .positional
         .get(1)
         .ok_or("usage: eva-cim run <bench> [flags]")?;
-    let cfg = build_config(args)?;
-    let scale = args.usize_flag("scale", 0)?;
-    let seed = args.usize_flag("seed", 42)? as u64;
-    let rule = parse_rule(&args.flag_or("rule", "any"))?;
-    let mut backend = make_backend(&args.flag_or("backend", "auto"), &[cfg.tech])?;
-
-    let prog = workloads::build(bench, scale, seed)
-        .ok_or_else(|| format!("unknown benchmark '{bench}' (see `eva-cim list`)"))?;
-    let (summary, outcome, reshaped) = stream_single(&prog, &cfg, rule)?;
-    report_single(&cfg, &summary, &outcome, &reshaped, backend.as_mut())
+    let report = eval_from_args(args)?
+        .bench(bench)
+        .config(build_config(args)?)
+        .single()
+        .map_err(err_str)?;
+    emit(&report, args)
 }
 
 fn cmd_asm(args: &cli::Args) -> Result<(), String> {
@@ -372,11 +307,11 @@ fn cmd_asm(args: &cli::Args) -> Result<(), String> {
         .ok_or("usage: eva-cim asm <file.s> [flags]")?;
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let prog = eva_cim::asm::parser::parse(path, &text).map_err(|e| e.to_string())?;
-    let cfg = build_config(args)?;
-    let rule = parse_rule(&args.flag_or("rule", "any"))?;
-    let mut backend = make_backend(&args.flag_or("backend", "auto"), &[cfg.tech])?;
-    let (summary, outcome, reshaped) = stream_single(&prog, &cfg, rule)?;
-    report_single(&cfg, &summary, &outcome, &reshaped, backend.as_mut())
+    let report = eval_from_args(args)?
+        .config(build_config(args)?)
+        .single_program(&prog)
+        .map_err(err_str)?;
+    emit(&report, args)
 }
 
 fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
@@ -386,64 +321,37 @@ fn cmd_sweep(args: &cli::Args) -> Result<(), String> {
         .map(|s| s.trim().to_string())
         .collect();
     let bench_refs: Vec<&str> = benches.iter().map(|s| s.as_str()).collect();
-    let mut configs = Vec::new();
-    for preset in args.flag_or("configs", "c1").split(',') {
-        let base = SystemConfig::preset(preset.trim())
-            .ok_or_else(|| format!("unknown preset '{preset}'"))?;
-        for tech in args.flag_or("techs", "sram").split(',') {
-            let tech = parse_tech(tech.trim())?;
-            let mut c = base.clone().with_tech(tech);
-            c.name = format!("{}-{}", preset.trim(), tech.name());
-            if let Some(cim) = args.flag("cim") {
-                c.cim_levels = CimLevels::from_name(cim)
-                    .ok_or_else(|| format!("unknown cim levels '{cim}'"))?;
-            }
-            configs.push(c);
-        }
+    let presets: Vec<String> = args
+        .flag_or("configs", "c1")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let preset_refs: Vec<&str> = presets.iter().map(|s| s.as_str()).collect();
+    let techs: Vec<Technology> = args
+        .flag_or("techs", "sram")
+        .split(',')
+        .map(|t| parse_tech(t.trim()))
+        .collect::<Result<_, _>>()?;
+    let mut ev = eval_from_args(args)?
+        .benches(&bench_refs)
+        .presets(&preset_refs)
+        .techs(&techs);
+    if let Some(c) = args.flag("cim") {
+        ev = ev.cim(
+            CimLevels::from_name(c).ok_or_else(|| format!("unknown cim levels '{c}'"))?,
+        );
     }
-    let rule = parse_rule(&args.flag_or("rule", "any"))?;
-    let opts = sweep_opts_from_args(args)?;
-    let swept: Vec<Technology> = configs.iter().map(|c| c.tech).collect();
-    let mut backend = make_backend(&args.flag_or("backend", "auto"), &swept)?;
-    let points = cross(&bench_refs, &configs, rule);
+    // requested policy; the completion ledger names the *resolved* backend
     eprintln!(
-        "sweep: {} points ({} benches x {} configs), backend={}, cache={}",
-        points.len(),
+        "sweep: {} points ({} benches x {} configs), backend={} (requested), cache={}",
+        bench_refs.len() * preset_refs.len() * techs.len(),
         bench_refs.len(),
-        configs.len(),
-        backend.name(),
-        opts.cache_dir
-            .as_deref()
-            .map(|d| d.display().to_string())
-            .unwrap_or_else(|| "off".into()),
+        preset_refs.len() * techs.len(),
+        args.flag_or("backend", "auto"),
+        args.flag("cache-dir").unwrap_or("off"),
     );
-    let t0 = std::time::Instant::now();
-    let (rows, stats) = Coordinator::new(opts)
-        .run_sweep_with_stats(&points, backend.as_mut())
-        .map_err(|e| format!("{e:#}"))?;
-    let dt = t0.elapsed();
-    let mut t = TextTable::new(
-        "sweep results",
-        &["bench", "config", "MACR", "speedup", "E-impr", "proc", "caches"],
-    );
-    for r in &rows {
-        t.row(vec![
-            workloads::display_name(&r.bench).into(),
-            r.config_name.clone(),
-            format!("{:.1}%", r.macr.ratio() * 100.0),
-            fnum(r.result.speedup, 2),
-            fnum(r.result.improvement, 2),
-            fnum(r.result.ratio_proc, 2),
-            fnum(r.result.ratio_cache, 2),
-        ]);
-    }
-    println!("{}", t.render());
-    eprintln!("{}", format_stats(&stats, dt.as_secs_f64()));
-    if let Some(csv) = args.flag("csv") {
-        std::fs::write(csv, t.to_csv()).map_err(|e| e.to_string())?;
-        eprintln!("wrote {csv}");
-    }
-    Ok(())
+    let report = ev.run().map_err(err_str)?;
+    emit(&report, args)
 }
 
 /// `eva-cim explore`: sweep tech × cache-config for one or more benchmarks
@@ -481,34 +389,21 @@ fn cmd_explore(args: &cli::Args) -> Result<(), String> {
     let preset_refs: Vec<&str> = presets.iter().map(|s| s.as_str()).collect();
     let cim = CimLevels::from_name(&args.flag_or("cim", "both"))
         .ok_or_else(|| format!("unknown cim levels '{}'", args.flag_or("cim", "both")))?;
-    let rule = parse_rule(&args.flag_or("rule", "any"))?;
-    let opts = sweep_opts_from_args(args)?;
-    let mut backend = make_backend(&args.flag_or("backend", "auto"), &techs)?;
     eprintln!(
-        "explore: {} benches x {} techs x {} configs = {} points, backend={}",
+        "explore: {} benches x {} techs x {} configs = {} points",
         bench_refs.len(),
         techs.len(),
         preset_refs.len(),
         bench_refs.len() * techs.len() * preset_refs.len(),
-        backend.name(),
     );
-    let out = experiments::explore(
-        &bench_refs,
-        &techs,
-        &preset_refs,
-        cim,
-        rule,
-        opts,
-        backend.as_mut(),
-    )
-    .map_err(|e| format!("{e:#}"))?;
-    println!("{}", out.grid.render());
-    println!("{}", out.frontier.render());
-    if let Some(csv) = args.flag("csv") {
-        std::fs::write(csv, out.grid.to_csv()).map_err(|e| e.to_string())?;
-        eprintln!("wrote {csv}");
-    }
-    Ok(())
+    let report = eval_from_args(args)?
+        .benches(&bench_refs)
+        .techs(&techs)
+        .presets(&preset_refs)
+        .cim(cim)
+        .explore()
+        .map_err(err_str)?;
+    emit(&report, args)
 }
 
 fn cmd_table(args: &cli::Args) -> Result<(), String> {
@@ -516,41 +411,36 @@ fn cmd_table(args: &cli::Args) -> Result<(), String> {
         .positional
         .get(1)
         .ok_or("usage: eva-cim table <id> (table3|table5|table6|fig11..fig16|calib)")?;
-    let opts = sweep_opts_from_args(args)?;
+    let opts = eval_from_args(args)?.sweep_options();
     // the paper tables/figures only evaluate the AOT-covered pair
-    let mut backend = make_backend(
-        &args.flag_or("backend", "auto"),
-        &[Technology::SRAM, Technology::FEFET],
-    )?;
-    let err = |e: anyhow::Error| format!("{e:#}");
-    let table = match id.as_str() {
+    let mut backend = parse_backend(&args.flag_or("backend", "auto"))?
+        .resolve(&[Technology::SRAM, Technology::FEFET])
+        .map_err(err_str)?;
+    let report = match id.as_str() {
         "table3" => experiments::table3(),
         "fig11" => experiments::fig11(),
-        "table5" => experiments::table5(backend.as_mut(), opts.scale).map_err(err)?,
-        "fig12" => experiments::fig12(20, opts.scale).map_err(err)?,
-        "fig13" => experiments::fig13(opts).map_err(err)?,
-        "table6" => experiments::table6(opts, backend.as_mut()).map_err(err)?,
-        "fig14" => experiments::fig14(opts, backend.as_mut()).map_err(err)?,
-        "fig15" => experiments::fig15(opts, backend.as_mut()).map_err(err)?,
-        "fig16" => experiments::fig16(opts, backend.as_mut()).map_err(err)?,
+        "table5" => {
+            experiments::table5(backend.as_mut(), opts.scale).map_err(err_str)?
+        }
+        "fig12" => experiments::fig12(20, opts.scale).map_err(err_str)?,
+        "fig13" => experiments::fig13(opts).map_err(err_str)?,
+        "table6" => experiments::table6(opts, backend.as_mut()).map_err(err_str)?,
+        "fig14" => experiments::fig14(opts, backend.as_mut()).map_err(err_str)?,
+        "fig15" => experiments::fig15(opts, backend.as_mut()).map_err(err_str)?,
+        "fig16" => experiments::fig16(opts, backend.as_mut()).map_err(err_str)?,
         _ => return Err(format!("unknown table id '{id}'")),
     };
-    println!("{}", table.render());
-    if let Some(csv) = args.flag("csv") {
-        std::fs::write(csv, table.to_csv()).map_err(|e| e.to_string())?;
-        eprintln!("wrote {csv}");
-    }
-    Ok(())
+    emit(&report, args)
 }
 
 fn cmd_validate(args: &cli::Args) -> Result<(), String> {
-    let mut backend =
-        make_backend(&args.flag_or("backend", "auto"), &[Technology::SRAM])?;
-    let t5 = experiments::table5(backend.as_mut(), 0).map_err(|e| format!("{e:#}"))?;
-    println!("{}", t5.render());
-    let t12 = experiments::fig12(20, 0).map_err(|e| format!("{e:#}"))?;
-    println!("{}", t12.render());
-    Ok(())
+    let mut backend = parse_backend(&args.flag_or("backend", "auto"))?
+        .resolve(&[Technology::SRAM])
+        .map_err(err_str)?;
+    let report = Report::new("validate")
+        .merged(experiments::table5(backend.as_mut(), 0).map_err(err_str)?)
+        .merged(experiments::fig12(20, 0).map_err(err_str)?);
+    emit(&report, args)
 }
 
 fn cmd_sensitivity(args: &cli::Args) -> Result<(), String> {
@@ -564,40 +454,52 @@ fn cmd_sensitivity(args: &cli::Args) -> Result<(), String> {
         .map_err(|e| format!("sensitivity needs the PJRT artifacts: {e:#}"))?;
     let prog = workloads::build(bench, scale, 42)
         .ok_or_else(|| format!("unknown benchmark '{bench}'"))?;
-    let trace = simulate(&prog, &cfg, Limits::default()).map_err(|e| e.to_string())?;
-    let analysis = analyze(&trace, &cfg, LocalityRule::AnyCache);
-    let reshaped = reshape(&trace, &analysis.selection, &cfg);
-    let inputs = ProfileInputs::new(&cfg, &reshaped);
+    let trace = eva_cim::sim::simulate(&prog, &cfg, eva_cim::sim::Limits::default())
+        .map_err(|e| e.to_string())?;
+    let analysis =
+        eva_cim::analyzer::analyze(&trace, &cfg, LocalityRule::AnyCache);
+    let reshaped = eva_cim::reshape::reshape(&trace, &analysis.selection, &cfg);
+    let inputs = eva_cim::profiler::ProfileInputs::new(&cfg, &reshaped);
     let (g1, g2) = rt.sensitivity(&[inputs]).map_err(|e| format!("{e:#}"))?;
-    println!("d(total CiM energy)/d(cfg) for {bench} on {}:", cfg.name);
+    let mut s = Section::new(
+        &format!(
+            "d(total CiM energy)/d(cfg) for {bench} on {} (* discrete — \
+             gradient not actionable)",
+            cfg.name
+        ),
+        &["param", "dE/dp (L1)", "dE/dp (L2)"],
+    );
     let names = ["capacity(B)", "assoc", "line", "banks", "tech*", "level*"];
-    let mut t = TextTable::new("(* discrete — gradient not actionable)",
-                               &["param", "dE/dp (L1)", "dE/dp (L2)"]);
     for i in 0..names.len() {
-        t.row(vec![names[i].into(), format!("{:+.3e}", g1[0][i]), format!("{:+.3e}", g2[0][i])]);
+        s.row(vec![
+            Cell::str(names[i]),
+            Cell::sci(g1[0][i], 3),
+            Cell::sci(g2[0][i], 3),
+        ]);
     }
-    println!("{}", t.render());
-    Ok(())
+    emit(&Report::new("sensitivity").with_section(s), args)
 }
 
-fn cmd_calib() -> Result<(), String> {
-    println!("{}", experiments::table3().render());
-    println!("{}", experiments::fig11().render());
-    let u = calib::static_unit_energy();
-    let mut t = TextTable::new(
+fn cmd_calib(args: &cli::Args) -> Result<(), String> {
+    let mut unit = Section::new(
         "static per-event unit energies (pJ) — energy/calib.rs",
         &["counter", "pJ/event"],
     );
+    let u = calib::static_unit_energy();
     for (i, name) in eva_cim::reshape::counters::COUNTER_NAMES.iter().enumerate() {
         if u[i] != 0.0 {
-            t.row(vec![name.to_string(), fnum(u[i], 1)]);
+            unit.row(vec![Cell::str(*name), Cell::num(u[i], 1)]);
         }
     }
-    println!("{}", t.render());
-    Ok(())
+    let report = Report::new("calib")
+        .merged(experiments::table3())
+        .merged(experiments::fig11())
+        .with_section(unit);
+    emit(&report, args)
 }
 
 const USAGE: &str = "usage: eva-cim <list|run|asm|sweep|explore|table|validate|sensitivity|calib> [flags]
+common flags: --format table|json|csv, --csv <file>, --tech-file <file.toml>
 try: eva-cim list";
 
 fn main() -> ExitCode {
@@ -614,9 +516,16 @@ fn main() -> ExitCode {
         eprintln!("error: {e}");
         return ExitCode::FAILURE;
     }
+    // fail a typo'd --format before any (potentially minutes-long) sweep
+    if let Some(f) = args.flag("format") {
+        if Format::from_name(f).is_none() {
+            eprintln!("error: unknown format '{f}' (table|json|csv)");
+            return ExitCode::FAILURE;
+        }
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
-        "list" => cmd_list(),
+        "list" => cmd_list(&args),
         "run" => cmd_run(&args),
         "asm" => cmd_asm(&args),
         "sweep" => cmd_sweep(&args),
@@ -624,7 +533,7 @@ fn main() -> ExitCode {
         "table" => cmd_table(&args),
         "validate" => cmd_validate(&args),
         "sensitivity" => cmd_sensitivity(&args),
-        "calib" => cmd_calib(),
+        "calib" => cmd_calib(&args),
         "" | "help" | "-h" => {
             println!("{USAGE}");
             Ok(())

@@ -10,6 +10,8 @@
 use crate::asm::{Asm, Program};
 use crate::util::Rng;
 
+/// Build the M2D benchmark: inverse transform + motion compensation over
+/// `scale·24` random 8×8 blocks (scale 0 = the default 96 blocks).
 pub fn mpeg2_decode(scale: usize, seed: u64) -> Program {
     let blocks = if scale == 0 { 96 } else { (scale * 24).max(4) };
     let mut rng = Rng::new(seed ^ 0x6d3264);

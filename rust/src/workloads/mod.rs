@@ -36,6 +36,7 @@ pub const DISPLAY: [(&str, &str); 17] = [
     ("mcf", "mcf"),
 ];
 
+/// Paper display name for a benchmark key (`"?"` for unknown keys).
 pub fn display_name(key: &str) -> &'static str {
     DISPLAY
         .iter()

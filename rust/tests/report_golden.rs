@@ -1,0 +1,144 @@
+//! Golden-file contracts for the machine-readable report path
+//! (ISSUE 4 satellite): `--format json` output for `table5` and `explore`
+//! must round-trip through the JSON layer and be byte-stable across runs —
+//! including a cache-warm rerun, which must serialize byte-identically to
+//! the cold run that populated the cache.
+
+use eva_cim::analyzer::LocalityRule;
+use eva_cim::config::{CimLevels, Technology};
+use eva_cim::coordinator::SweepOptions;
+use eva_cim::experiments;
+use eva_cim::runtime::NativeBackend;
+use eva_cim::util::json;
+
+fn fast_opts() -> SweepOptions {
+    SweepOptions { scale: 2, workers: 2, ..Default::default() }
+}
+
+/// The structural golden: canonical JSON documents parse, re-dump to the
+/// same bytes, and carry the schema/section envelope.
+fn assert_canonical(doc: &str) -> json::Json {
+    let parsed = json::parse(doc.trim_end()).expect("report JSON must parse");
+    assert_eq!(
+        parsed.dump(),
+        doc.trim_end(),
+        "canonical JSON must re-dump byte-identically"
+    );
+    assert_eq!(parsed.get("schema").unwrap().as_u64(), Some(1));
+    assert!(!parsed.get("sections").unwrap().as_arr().unwrap().is_empty());
+    parsed
+}
+
+#[test]
+fn table3_json_matches_the_golden_envelope() {
+    let report = experiments::table3();
+    let doc = report.render_json();
+    let parsed = assert_canonical(&doc);
+    // golden structural facts: first section, its columns, and the exact
+    // published SRAM-L1 anchor row (Table III, paper §V-B)
+    let s0 = parsed.get("sections").unwrap().idx(0).unwrap();
+    let cols: Vec<&str> = s0
+        .get("columns")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.as_str().unwrap())
+        .collect();
+    assert_eq!(
+        cols,
+        ["tech", "level", "config", "non-CiM read", "CiM-OR", "CiM-AND",
+         "CiM-XOR", "CiM-ADDW32"]
+    );
+    let row0 = s0.get("rows").unwrap().idx(0).unwrap();
+    assert_eq!(row0.get("tech").unwrap().as_str(), Some("SRAM"));
+    assert_eq!(row0.get("level").unwrap().as_str(), Some("L1"));
+    assert_eq!(row0.get("non-CiM read").unwrap().as_f64().unwrap().round(), 61.0);
+    assert_eq!(row0.get("CiM-ADDW32").unwrap().as_f64().unwrap().round(), 79.0);
+}
+
+#[test]
+fn table5_json_roundtrips_and_is_byte_stable() {
+    let a = experiments::table5(&mut NativeBackend, 2).unwrap().render_json();
+    let b = experiments::table5(&mut NativeBackend, 2).unwrap().render_json();
+    assert_eq!(a, b, "table5 JSON must be byte-stable across runs");
+    let parsed = assert_canonical(&a);
+    // the deviation row carries raw fractions, not percent strings
+    let rows = parsed
+        .get("sections")
+        .unwrap()
+        .idx(0)
+        .unwrap()
+        .get("rows")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(rows.len(), 3);
+    assert_eq!(rows[2].get("model").unwrap().as_str(), Some("Deviation"));
+    assert!(rows[2].get("CiM").unwrap().as_f64().is_some());
+}
+
+#[test]
+fn explore_json_is_byte_identical_cold_vs_cached() {
+    let dir = std::env::temp_dir()
+        .join(format!("eva-cim-golden-cache-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let opts = SweepOptions {
+        cache_dir: Some(dir.clone()),
+        resume: true,
+        ..fast_opts()
+    };
+    let run = |opts: SweepOptions| {
+        experiments::explore(
+            &["lcs"],
+            &[Technology::SRAM, Technology::FEFET],
+            &["c1", "c2"],
+            CimLevels::Both,
+            LocalityRule::AnyCache,
+            opts,
+            &mut NativeBackend,
+        )
+        .unwrap()
+    };
+    let cold = run(opts.clone());
+    let warm = run(opts);
+    // the warm run must have served every point from the cache...
+    assert_eq!(warm.stats.as_ref().unwrap().rows_from_cache, 4);
+    assert_eq!(warm.stats.as_ref().unwrap().simulator_runs, 0);
+    // ...and still serialize byte-identically in every format
+    assert_eq!(cold.render_json(), warm.render_json());
+    assert_eq!(cold.render_csv(), warm.render_csv());
+    assert_eq!(cold.render_table(), warm.render_table());
+    let parsed = assert_canonical(&cold.render_json());
+    // grid + frontier sections; the grid carries Pareto marks as booleans
+    let sections = parsed.get("sections").unwrap().as_arr().unwrap();
+    assert_eq!(sections.len(), 2);
+    let grid_rows = sections[0].get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(grid_rows.len(), 4, "2 techs x 2 configs on 1 bench");
+    assert!(grid_rows
+        .iter()
+        .any(|r| r.get("Pareto").unwrap().as_bool() == Some(true)));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn explore_csv_goes_through_the_report_renderer() {
+    let report = experiments::explore(
+        &["lcs"],
+        &[Technology::SRAM],
+        &["c1"],
+        CimLevels::Both,
+        LocalityRule::AnyCache,
+        fast_opts(),
+        &mut NativeBackend,
+    )
+    .unwrap();
+    let csv = report.render_csv();
+    // multi-section CSV: one block per section, titled
+    assert!(csv.starts_with("# explore"));
+    let grid_header = csv.lines().nth(1).unwrap();
+    assert_eq!(grid_header, "bench,tech,config,MACR,E-impr,speedup,Pareto");
+    // single-bench single-tech single-config grid: the lone point is on
+    // the frontier by construction
+    assert!(csv.contains("LCS,sram,c1"));
+}
