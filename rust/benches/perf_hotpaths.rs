@@ -15,15 +15,16 @@
 
 use std::time::Instant;
 
-use eva_cim::analyzer::{analyze, analyze_batch, LocalityRule};
+use eva_cim::analyzer::{analyze, analyze_batch, LocalityRule, OnlineAnalyzer};
 use eva_cim::asm::Asm;
-use eva_cim::config::{SystemConfig, Technology};
+use eva_cim::config::{CimLevels, SystemConfig, Technology};
 use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
 use eva_cim::pipeline::run_pipelined;
 use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
 use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink};
 use eva_cim::runtime::{NativeBackend, PjrtRuntime};
 use eva_cim::sim::{simulate, Limits};
+use eva_cim::util::json::Json;
 use eva_cim::workloads;
 
 /// Run `body` repeatedly for `secs` (once in quick mode); returns
@@ -161,6 +162,97 @@ fn bench_streaming(quick: bool) {
     );
 }
 
+/// Stage-factored sweep vs the legacy per-point analysis loop on a
+/// T-tech × P-placement grid sharing one trace.  Emits a machine-readable
+/// `BENCH_sweep.json` (schema `BENCH_sweep/1`) with the wall-clocks and
+/// the ledger counters so CI can grep the factoring win.
+fn bench_stage_factored(quick: bool) {
+    let scale = if quick { 4 } else { 12 };
+    let placements = [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both];
+    let techs = [
+        Technology::SRAM,
+        Technology::FEFET,
+        Technology::RRAM,
+        Technology::STT_MRAM,
+    ];
+    let base = SystemConfig::preset("c1").unwrap();
+    let mut cfgs = Vec::new();
+    for tech in techs {
+        for cim in placements {
+            let mut c = base.clone().with_tech(tech).with_cim(cim);
+            c.name = format!("c1-{}-{}", tech.name(), cim.name());
+            cfgs.push(c);
+        }
+    }
+    let points = cross(&["lcs"], &cfgs, LocalityRule::AnyCache);
+    let opts = SweepOptions { scale, workers: 2, ..Default::default() };
+
+    // factored: the coordinator groups by trace, then analysis key
+    let t0 = Instant::now();
+    let (rows, stats) = Coordinator::new(opts.clone())
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    let factored = t0.elapsed().as_secs_f64();
+    assert_eq!(stats.simulator_runs, 1);
+    assert_eq!(stats.analyses_run, placements.len() as u64);
+
+    // unfactored reference: one simulation (the legacy trace memo), then
+    // one full analysis pass per design point — the old O(T*P) loop
+    let t1 = Instant::now();
+    let prog = workloads::build("lcs", scale, opts.seed).unwrap();
+    let trace = simulate(&prog, &base, Limits::default()).unwrap();
+    let mut checksum = 0.0f64;
+    for p in &points {
+        let mut oa = OnlineAnalyzer::new(
+            p.config.cim_levels,
+            p.rule,
+            DeltaSink::default(),
+        );
+        for is in &trace.ciq {
+            oa.push(is);
+        }
+        let (_, deltas) = oa.finish();
+        let r = reshape_from_deltas(&trace.summary(), &deltas, &p.config);
+        checksum += r.removed as f64;
+    }
+    let unfactored = t1.elapsed().as_secs_f64();
+    assert!(checksum >= 0.0);
+
+    println!(
+        "[perf] stage-factored sweep: {} points ({} techs x {} placements) \
+         in {:.1} ms vs {:.1} ms per-point analysis ({:.2}x) | {} analyses \
+         run, {} replays skipped",
+        points.len(),
+        techs.len(),
+        placements.len(),
+        factored * 1e3,
+        unfactored * 1e3,
+        unfactored / factored.max(1e-9),
+        stats.analyses_run,
+        stats.replays_skipped,
+    );
+    assert_eq!(rows.len(), points.len());
+
+    let doc = Json::obj(vec![
+        ("schema", "BENCH_sweep/1".into()),
+        ("points", (points.len() as u64).into()),
+        ("techs", (techs.len() as u64).into()),
+        ("placements", (placements.len() as u64).into()),
+        ("factored_ms", (factored * 1e3).into()),
+        ("unfactored_ms", (unfactored * 1e3).into()),
+        ("simulator_runs", stats.simulator_runs.into()),
+        ("analyses_run", stats.analyses_run.into()),
+        ("analyses_cached", stats.analyses_cached.into()),
+        ("replays_skipped", stats.replays_skipped.into()),
+    ])
+    .dump();
+    if let Err(e) = std::fs::write("BENCH_sweep.json", &doc) {
+        eprintln!("warning: could not write BENCH_sweep.json: {e}");
+    } else {
+        println!("[perf] stage-factored counters written to BENCH_sweep.json");
+    }
+}
+
 fn bench_cache_resume(quick: bool) {
     let dir = std::env::temp_dir()
         .join(format!("eva-cim-bench-cache-{}", std::process::id()));
@@ -258,6 +350,9 @@ fn main() {
 
     // --- streaming pipeline: pipelined vs batch, and at scale --------------
     bench_streaming(quick);
+
+    // --- stage-factored sweep: shared analysis across tech variants --------
+    bench_stage_factored(quick);
 
     // --- sweep result cache: cold vs warm resume ---------------------------
     bench_cache_resume(quick);

@@ -69,8 +69,11 @@ pub struct CandidateRecord {
 
 /// Receives candidates as the analyzer finalizes them.
 pub trait CandidateSink {
-    /// Called once per finalized candidate, in retirement order.
-    fn on_candidate(&mut self, rec: &CandidateRecord);
+    /// Called once per finalized candidate, in retirement order.  The
+    /// record is handed over *by value*: the analyzer is done with it, so
+    /// a sink that keeps (parts of) it takes ownership instead of cloning
+    /// heap payloads on the hot path.
+    fn on_candidate(&mut self, rec: CandidateRecord);
 }
 
 /// The adapter sink for the batch API: keep the candidates, drop the
@@ -82,8 +85,8 @@ pub struct CollectCandidates {
 }
 
 impl CandidateSink for CollectCandidates {
-    fn on_candidate(&mut self, rec: &CandidateRecord) {
-        self.candidates.push(rec.candidate.clone());
+    fn on_candidate(&mut self, rec: CandidateRecord) {
+        self.candidates.push(rec.candidate);
     }
 }
 
@@ -748,7 +751,7 @@ impl<S: CandidateSink> OnlineAnalyzer<S> {
             load_infos,
             absorbed: absorbed_info,
         };
-        self.sink.on_candidate(&rec);
+        self.sink.on_candidate(rec);
     }
 }
 

@@ -426,26 +426,8 @@ impl Evaluation {
 
     /// The generic per-design-point report over a finished sweep.
     fn sweep_report(sweep: Sweep) -> Report {
-        let mut s = Section::new(
-            "sweep results",
-            &["bench", "config", "tech", "cim", "MACR", "speedup", "E-impr",
-              "proc", "caches"],
-        );
-        for r in &sweep.rows {
-            s.row(vec![
-                Cell::str(workloads::display_name(&r.bench)),
-                Cell::str(r.config_name.as_str()),
-                Cell::str(r.tech.name()),
-                Cell::str(r.cim_levels.name()),
-                Cell::pct(r.macr.ratio(), 1),
-                Cell::num(r.result.speedup, 2),
-                Cell::num(r.result.improvement, 2),
-                Cell::num(r.result.ratio_proc, 2),
-                Cell::num(r.result.ratio_cache, 2),
-            ]);
-        }
         Report::new("sweep results")
-            .with_section(s)
+            .with_section(sweep_section(&sweep.rows))
             .with_ledger(sweep.stats, sweep.elapsed_secs, sweep.backend)
     }
 
@@ -570,6 +552,33 @@ impl Evaluation {
     }
 }
 
+/// The per-design-point grid section every sweep renders (bench × config
+/// with MACR/speedup/energy columns) — the single source of truth for
+/// [`Evaluation::run`]'s output, public so equivalence suites can render
+/// independently produced [`SweepRow`]s through the identical formatter
+/// and compare bytes.
+pub fn sweep_section(rows: &[SweepRow]) -> Section {
+    let mut s = Section::new(
+        "sweep results",
+        &["bench", "config", "tech", "cim", "MACR", "speedup", "E-impr",
+          "proc", "caches"],
+    );
+    for r in rows {
+        s.row(vec![
+            Cell::str(workloads::display_name(&r.bench)),
+            Cell::str(r.config_name.as_str()),
+            Cell::str(r.tech.name()),
+            Cell::str(r.cim_levels.name()),
+            Cell::pct(r.macr.ratio(), 1),
+            Cell::num(r.result.speedup, 2),
+            Cell::num(r.result.improvement, 2),
+            Cell::num(r.result.ratio_proc, 2),
+            Cell::num(r.result.ratio_cache, 2),
+        ]);
+    }
+    s
+}
+
 /// The `config` column of the explore grid: the row's configuration name
 /// with its `-{tech}` segment removed (the grid has a dedicated tech
 /// column).  `"c1-sram"` → `"c1"`, `"c1-sram-l1"` → `"c1-l1"`; names
@@ -654,7 +663,7 @@ fn run_summary(
 ) -> Section {
     let mut s = Section::new("run summary", &["metric", "value"]);
     let rows: Vec<(&str, Cell)> = vec![
-        ("program", Cell::str(summary.program.as_str())),
+        ("program", Cell::str(&*summary.program)),
         ("committed instrs", Cell::int(summary.committed)),
         ("cycles", Cell::int(summary.cycles)),
         ("CPI", Cell::num(summary.cpi(), 2)),

@@ -1,5 +1,7 @@
 //! Program container: code + initial data image + symbol table.
 
+use std::sync::Arc;
+
 use crate::isa::Instruction;
 
 /// Word-aligned data-memory image entry.
@@ -12,7 +14,9 @@ pub struct DataWord {
 /// A complete EVA32 program: the unit fed to the simulator.
 #[derive(Clone, Debug, Default)]
 pub struct Program {
-    pub name: String,
+    /// program name — a shared handle so every per-run summary can carry
+    /// it without re-allocating (sweeps clone it once per simulation)
+    pub name: Arc<str>,
     pub instrs: Vec<Instruction>,
     /// initial data-memory contents (word granularity)
     pub data: Vec<DataWord>,
@@ -24,7 +28,7 @@ pub struct Program {
 
 impl Program {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), ..Default::default() }
+        Self { name: name.into(), ..Default::default() }
     }
 
     /// Encode the text segment into 64-bit words (the "binary").
@@ -37,7 +41,7 @@ impl Program {
         let instrs: Option<Vec<_>> =
             words.iter().map(|w| Instruction::decode(*w)).collect();
         Some(Self {
-            name: name.to_string(),
+            name: name.into(),
             instrs: instrs?,
             ..Default::default()
         })

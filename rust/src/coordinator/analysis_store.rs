@@ -1,0 +1,435 @@
+//! Persistable analysis artifacts — the middle stage of the
+//! stage-factored sweep.
+//!
+//! The per-point pipeline factors into three independently keyed stages
+//! (paper Fig 2: trace capture → dependency/selection analysis → energy
+//! folding):
+//!
+//! 1. **simulate** — keyed by [`super::key::trace_key`], spilled to
+//!    `traces/` ([`super::trace_store`]);
+//! 2. **analyze** — keyed by [`super::key::analysis_key`] (trace key ×
+//!    CiM placement × locality rule × [`ANALYZER_SCHEMA`]), persisted
+//!    here;
+//! 3. **energy fold** — per technology, microseconds, never cached.
+//!
+//! An [`AnalysisArtifact`] is everything the energy fold needs: the
+//! simulation summary, the [`StreamOutcome`] aggregates and the finished
+//! reshape [`DeltaSink`].  Technology enters only in stage 3, so one
+//! artifact serves *every* technology variant of a design point — a
+//! T-tech sweep performs P analyses, not T·P.
+//!
+//! Layout under `<cache-dir>/analysis/`:
+//!
+//! ```text
+//! analysis-meta.json   {"schema": <ANALYZER_SCHEMA>} — version stamp; a
+//!                      mismatch rotates artifacts.jsonl aside (miss,
+//!                      never an error — see [`AnalysisStore::open`])
+//! artifacts.jsonl      one artifact per line:
+//!                      {"art":{...canonical json...},"key":"<16-hex fnv1a>"}
+//! ```
+//!
+//! Same append-only discipline as the point cache ([`super::cache`]):
+//! concurrent sweeps can only duplicate work, never corrupt artifacts;
+//! the loader takes the last line per key and skips truncated lines.
+//! Serialization is canonical (sorted keys, shortest-roundtrip `f64`s),
+//! so a reloaded artifact folds into byte-identical sweep rows.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::analyzer::{Macr, StreamOutcome};
+use crate::probes::TraceSummary;
+use crate::reshape::{DeltaSink, NC};
+use crate::util::json::{self, Json};
+use crate::util::lock_unpoisoned;
+
+use super::persist::{arr, get_f64_array, get_str, get_u64};
+use super::trace_store::{
+    mem_fields, mem_from_fields, pipe_fields, pipe_from_fields, stop_from_u8,
+    stop_to_u8,
+};
+
+/// Version of the online analyzer + reshape-delta contract.  Part of
+/// every [`super::key::analysis_key`] *and* the store's schema gate: any
+/// change to what the analyzer computes (selection order, rejection
+/// accounting, delta layout) must bump it so stale artifacts are
+/// unreachable by construction.
+pub const ANALYZER_SCHEMA: u64 = 1;
+
+const ARTIFACTS_FILE: &str = "artifacts.jsonl";
+const META_FILE: &str = "analysis-meta.json";
+
+/// The serializable product of one analysis pass: everything downstream
+/// of the analyzer and upstream of the (per-technology) energy fold.
+#[derive(Clone)]
+pub struct AnalysisArtifact {
+    /// simulation summary of the analyzed trace
+    pub summary: TraceSummary,
+    /// analyzer aggregates (MACR, IDG statistics, rejections, window)
+    pub outcome: StreamOutcome,
+    /// finished reshape deltas (signed counter deltas + removal totals)
+    pub deltas: DeltaSink,
+}
+
+const NUM_FU: usize = crate::isa::func_unit::NUM_FUNC_UNITS;
+
+fn u64_arr(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn get_u64_array<const N: usize>(o: &Json, key: &str) -> Result<[u64; N], String> {
+    Ok(get_f64_array::<N>(o, key)?.map(|x| x as u64))
+}
+
+/// Canonical JSON form of an artifact.
+pub fn artifact_to_json(a: &AnalysisArtifact) -> Json {
+    Json::obj(vec![
+        ("program", (&*a.summary.program).into()),
+        ("cycles", a.summary.cycles.into()),
+        ("committed", a.summary.committed.into()),
+        ("stop", (stop_to_u8(a.summary.stop) as u64).into()),
+        ("pipe", u64_arr(&pipe_fields(&a.summary.pipe))),
+        ("fu", u64_arr(&a.summary.pipe.fu_counts)),
+        ("mem", u64_arr(&mem_fields(&a.summary.mem))),
+        (
+            "macr",
+            Json::obj(vec![
+                ("total_accesses", a.outcome.macr.total_accesses.into()),
+                ("convertible", a.outcome.macr.convertible.into()),
+                ("convertible_l1", a.outcome.macr.convertible_l1.into()),
+                ("convertible_other", a.outcome.macr.convertible_other.into()),
+                ("cim_ops", a.outcome.macr.cim_ops.into()),
+            ]),
+        ),
+        ("idg_total", a.outcome.idg_nodes.0.into()),
+        ("idg_eligible", a.outcome.idg_nodes.1.into()),
+        ("candidates", a.outcome.candidates.into()),
+        ("rejected_locality", a.outcome.rejected_locality.into()),
+        ("rejected_no_loads", a.outcome.rejected_no_loads.into()),
+        ("rejected_dram", a.outcome.rejected_dram.into()),
+        ("peak_window", (a.outcome.peak_window as u64).into()),
+        ("delta", arr(&a.deltas.delta.0)),
+        ("removed", a.deltas.removed.into()),
+        ("cim_add", u64_arr(&a.deltas.cim_add)),
+        ("cim_op_count", a.deltas.cim_op_count.into()),
+    ])
+}
+
+/// Parse an artifact back from its canonical JSON form.
+pub fn artifact_from_json(o: &Json) -> Result<AnalysisArtifact, String> {
+    let macr_o = o.req("macr")?;
+    let macr = Macr {
+        total_accesses: get_u64(macr_o, "total_accesses")?,
+        convertible: get_u64(macr_o, "convertible")?,
+        convertible_l1: get_u64(macr_o, "convertible_l1")?,
+        convertible_other: get_u64(macr_o, "convertible_other")?,
+        cim_ops: get_u64(macr_o, "cim_ops")?,
+    };
+    let summary = TraceSummary {
+        program: get_str(o, "program")?.into(),
+        pipe: pipe_from_fields(
+            get_u64_array::<16>(o, "pipe")?,
+            get_u64_array::<NUM_FU>(o, "fu")?,
+        ),
+        mem: mem_from_fields(get_u64_array::<14>(o, "mem")?),
+        cycles: get_u64(o, "cycles")?,
+        committed: get_u64(o, "committed")?,
+        stop: stop_from_u8(get_u64(o, "stop")? as u8)?,
+    };
+    let outcome = StreamOutcome {
+        macr,
+        idg_nodes: (get_u64(o, "idg_total")?, get_u64(o, "idg_eligible")?),
+        candidates: get_u64(o, "candidates")?,
+        rejected_locality: get_u64(o, "rejected_locality")?,
+        rejected_no_loads: get_u64(o, "rejected_no_loads")?,
+        rejected_dram: get_u64(o, "rejected_dram")?,
+        peak_window: get_u64(o, "peak_window")? as usize,
+    };
+    let deltas = DeltaSink {
+        delta: crate::reshape::DeltaCounters(get_f64_array::<NC>(o, "delta")?),
+        removed: get_u64(o, "removed")?,
+        cim_add: get_u64_array::<2>(o, "cim_add")?,
+        cim_op_count: get_u64(o, "cim_op_count")?,
+    };
+    Ok(AnalysisArtifact { summary, outcome, deltas })
+}
+
+/// An open artifact store rooted at `<cache-dir>/analysis/`.
+pub struct AnalysisStore {
+    dir: PathBuf,
+    writer: Mutex<File>,
+}
+
+impl AnalysisStore {
+    /// Open (creating if needed) the store at `dir`.
+    ///
+    /// A schema mismatch is *not* an error: stale artifacts are already
+    /// unreachable (the analyzer schema is part of every analysis key),
+    /// so the old `artifacts.jsonl` is rotated aside and a fresh store
+    /// starts — an upgraded build must recompute, never fail the sweep.
+    /// This mirrors the trace store's miss-don't-fail discipline; the
+    /// *point* cache keeps its hard gate because its keys don't embed
+    /// its schema.
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating analysis store {dir:?}"))?;
+        let meta_path = dir.join(META_FILE);
+        let stamp_meta = || -> Result<()> {
+            let meta = Json::obj(vec![("schema", ANALYZER_SCHEMA.into())]).dump();
+            std::fs::write(&meta_path, meta)
+                .with_context(|| format!("writing {meta_path:?}"))
+        };
+        match std::fs::read_to_string(&meta_path) {
+            Ok(text) => {
+                let schema = json::parse(&text)
+                    .ok()
+                    .and_then(|m| m.get("schema").and_then(|v| v.as_u64()));
+                if schema != Some(ANALYZER_SCHEMA) {
+                    eprintln!(
+                        "warning: analysis store {dir:?} has schema \
+                         {schema:?}, this build expects {ANALYZER_SCHEMA}; \
+                         rotating the old artifacts aside"
+                    );
+                    let tag = schema
+                        .map(|s| s.to_string())
+                        .unwrap_or_else(|| "unknown".into());
+                    let _ = std::fs::rename(
+                        dir.join(ARTIFACTS_FILE),
+                        dir.join(format!("{ARTIFACTS_FILE}.schema-{tag}")),
+                    );
+                    stamp_meta()?;
+                }
+            }
+            Err(_) => stamp_meta()?,
+        }
+        let writer = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(ARTIFACTS_FILE))
+            .with_context(|| format!("opening {ARTIFACTS_FILE} in {dir:?}"))?;
+        Ok(Self { dir: dir.to_path_buf(), writer: Mutex::new(writer) })
+    }
+
+    /// Read every stored artifact (last write per key wins).  Malformed
+    /// lines are counted and skipped, like the point cache's loader.
+    pub fn load(&self) -> Result<HashMap<String, AnalysisArtifact>> {
+        self.load_filtered(None)
+    }
+
+    /// [`AnalysisStore::load`] restricted to the given keys: lines whose
+    /// trailing key is not wanted are skipped *without* parsing their
+    /// artifact payload, so a sweep pays O(wanted) deserialization even
+    /// when the store has accumulated O(history) artifacts.
+    pub fn load_wanted(
+        &self,
+        wanted: &std::collections::HashSet<String>,
+    ) -> Result<HashMap<String, AnalysisArtifact>> {
+        self.load_filtered(Some(wanted))
+    }
+
+    fn load_filtered(
+        &self,
+        wanted: Option<&std::collections::HashSet<String>>,
+    ) -> Result<HashMap<String, AnalysisArtifact>> {
+        use std::io::BufRead as _;
+
+        let path = self.dir.join(ARTIFACTS_FILE);
+        let file = match std::fs::File::open(&path) {
+            Ok(f) => f,
+            Err(_) => return Ok(HashMap::new()),
+        };
+        let mut arts = HashMap::new();
+        let mut skipped = 0usize;
+        // streamed line-by-line: peak memory is O(kept artifacts + one
+        // line), not O(file) — the store accumulates history
+        for line in std::io::BufReader::new(file).lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => {
+                    // unreadable tail (io error / bad utf8): best-effort,
+                    // like a truncated line
+                    skipped += 1;
+                    break;
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let (Some(w), Some(k)) = (wanted, line_key(&line)) {
+                if !w.contains(k) {
+                    continue; // cheap reject: payload never parsed
+                }
+            }
+            match parse_line(&line) {
+                Ok((key, art)) => {
+                    arts.insert(key, art);
+                }
+                Err(_) => skipped += 1,
+            }
+        }
+        if skipped > 0 {
+            eprintln!(
+                "warning: skipped {skipped} malformed line(s) in {path:?} \
+                 (interrupted append?)"
+            );
+        }
+        Ok(arts)
+    }
+
+    /// Append one artifact.  Flushed immediately; the writer lock is
+    /// poison-tolerant for the same reason as the point cache's.
+    pub fn append(&self, key: &str, art: &AnalysisArtifact) -> Result<()> {
+        let line = Json::obj(vec![
+            ("key", key.into()),
+            ("art", artifact_to_json(art)),
+        ])
+        .dump();
+        let mut f = lock_unpoisoned(&self.writer);
+        writeln!(f, "{line}").context("appending to analysis store")?;
+        f.flush().context("flushing analysis store")?;
+        Ok(())
+    }
+}
+
+/// Extract a line's key without parsing its artifact payload.  The
+/// canonical serialization sorts object keys, so `"key"` is the final
+/// member: `{"art":{...},"key":"<16-hex>"}`.  Lines that don't match the
+/// shape (hand-edited, corrupt) return `None` and fall through to the
+/// full parser, which decides between keep and skip.
+fn line_key(line: &str) -> Option<&str> {
+    let start = line.rfind("\"key\":\"")? + "\"key\":\"".len();
+    let rest = &line[start..];
+    let end = rest.find('"')?;
+    Some(&rest[..end])
+}
+
+fn parse_line(line: &str) -> Result<(String, AnalysisArtifact), String> {
+    let v = json::parse(line)?;
+    let key = v
+        .req("key")?
+        .as_str()
+        .ok_or_else(|| "key is not a string".to_string())?
+        .to_string();
+    let art = artifact_from_json(v.req("art")?)?;
+    Ok((key, art))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::LocalityRule;
+    use crate::config::SystemConfig;
+    use crate::pipeline::run_pipelined;
+    use crate::sim::Limits;
+    use crate::workloads;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("eva-cim-analysis-{tag}-{}", std::process::id()))
+    }
+
+    fn sample_artifact() -> AnalysisArtifact {
+        let prog = workloads::build("lcs", 2, 3).unwrap();
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let (summary, outcome, deltas) = run_pipelined(
+            &prog,
+            &cfg,
+            Limits::default(),
+            LocalityRule::AnyCache,
+            DeltaSink::default(),
+            None,
+        )
+        .unwrap();
+        AnalysisArtifact { summary, outcome, deltas }
+    }
+
+    #[test]
+    fn artifact_roundtrips_byte_identically() {
+        let art = sample_artifact();
+        let dumped = artifact_to_json(&art).dump();
+        let parsed = json::parse(&dumped).unwrap();
+        let art2 = artifact_from_json(&parsed).unwrap();
+        assert_eq!(artifact_to_json(&art2).dump(), dumped);
+        // and the parts that drive the energy fold survive exactly
+        assert_eq!(art2.summary.committed, art.summary.committed);
+        assert_eq!(art2.outcome.macr, art.outcome.macr);
+        assert_eq!(art2.deltas.delta.0, art.deltas.delta.0);
+        assert_eq!(art2.deltas.removed, art.deltas.removed);
+    }
+
+    #[test]
+    fn store_roundtrips_and_skips_truncation() {
+        let dir = tmp_dir("roundtrip");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = AnalysisStore::open(&dir).unwrap();
+        assert!(store.load().unwrap().is_empty());
+        let art = sample_artifact();
+        store.append("k1", &art).unwrap();
+        // reopen as a new process would
+        let store2 = AnalysisStore::open(&dir).unwrap();
+        let arts = store2.load().unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(
+            artifact_to_json(&arts["k1"]).dump(),
+            artifact_to_json(&art).dump()
+        );
+        // a crash mid-append must not poison future loads
+        let path = dir.join(ARTIFACTS_FILE);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"key\":\"k2\",\"art\"");
+        std::fs::write(&path, text).unwrap();
+        let arts = store2.load().unwrap();
+        assert_eq!(arts.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_wanted_filters_by_trailing_key() {
+        let dir = tmp_dir("wanted");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = AnalysisStore::open(&dir).unwrap();
+        let art = sample_artifact();
+        store.append("k1", &art).unwrap();
+        store.append("k2", &art).unwrap();
+        let line = Json::obj(vec![
+            ("key", "k1".into()),
+            ("art", artifact_to_json(&art)),
+        ])
+        .dump();
+        assert_eq!(line_key(&line), Some("k1"));
+        let wanted: std::collections::HashSet<String> =
+            ["k2".to_string()].into_iter().collect();
+        let arts = store.load_wanted(&wanted).unwrap();
+        assert_eq!(arts.len(), 1);
+        assert!(arts.contains_key("k2"));
+        // unfiltered load still sees both
+        assert_eq!(store.load().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn schema_mismatch_rotates_the_store_instead_of_failing() {
+        let dir = tmp_dir("schema");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = AnalysisStore::open(&dir).unwrap();
+        store.append("k1", &sample_artifact()).unwrap();
+        drop(store);
+        // an older/newer build stamped a different analyzer schema
+        std::fs::write(dir.join(META_FILE), "{\"schema\": 999}").unwrap();
+        let store = AnalysisStore::open(&dir).unwrap();
+        // the incompatible artifacts were rotated aside, not served
+        assert!(store.load().unwrap().is_empty());
+        assert!(dir.join(format!("{ARTIFACTS_FILE}.schema-999")).exists());
+        // and the store is fully usable again under the current schema
+        store.append("k2", &sample_artifact()).unwrap();
+        assert_eq!(store.load().unwrap().len(), 1);
+        let meta = std::fs::read_to_string(dir.join(META_FILE)).unwrap();
+        assert!(meta.contains(&format!("{ANALYZER_SCHEMA}")));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

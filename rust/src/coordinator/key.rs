@@ -123,6 +123,27 @@ pub fn trace_key(bench: &str, cfg: &SystemConfig, opts: &SweepOptions) -> String
     format!("{:016x}", fnv1a(payload.as_bytes()))
 }
 
+/// Key for the analysis-artifact store: the trace identity crossed with
+/// everything the *analyzer* (and nothing the energy fold) consumes —
+/// CiM placement, locality rule, and the analyzer schema version
+/// ([`super::analysis_store::ANALYZER_SCHEMA`]).  Technology is
+/// deliberately excluded: it only enters the per-tech energy fold, so one
+/// artifact serves every technology variant of a design point.
+pub fn analysis_key(
+    trace_key: &str,
+    cim: crate::config::CimLevels,
+    rule: crate::analyzer::LocalityRule,
+) -> String {
+    let payload = Json::obj(vec![
+        ("trace", trace_key.into()),
+        ("cim_levels", cim.name().into()),
+        ("rule", rule.name().into()),
+        ("analyzer_schema", super::analysis_store::ANALYZER_SCHEMA.into()),
+    ])
+    .dump();
+    format!("{:016x}", fnv1a(payload.as_bytes()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +205,34 @@ mod tests {
         assert_ne!(point_key(&base, &o, "native"), k0);
 
         assert_ne!(point_key(&base, &opts(), "pjrt"), k0);
+    }
+
+    #[test]
+    fn analysis_key_covers_placement_and_rule_but_not_tech() {
+        use crate::config::CimLevels;
+
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let tk = trace_key("lcs", &cfg, &opts());
+        let k0 = analysis_key(&tk, CimLevels::Both, LocalityRule::AnyCache);
+        assert_eq!(
+            k0,
+            analysis_key(&tk, CimLevels::Both, LocalityRule::AnyCache),
+            "analysis key must be deterministic"
+        );
+        assert_ne!(k0, analysis_key(&tk, CimLevels::L1Only, LocalityRule::AnyCache));
+        assert_ne!(k0, analysis_key(&tk, CimLevels::Both, LocalityRule::SameBank));
+        // tech variants share the trace key, hence the analysis key
+        let tk_fefet =
+            trace_key("lcs", &cfg.clone().with_tech(Technology::FEFET), &opts());
+        assert_eq!(
+            analysis_key(&tk_fefet, CimLevels::Both, LocalityRule::AnyCache),
+            k0
+        );
+        // a different trace is a different analysis
+        let mut bigger = cfg.clone();
+        bigger.l1d.capacity *= 2;
+        let tk2 = trace_key("lcs", &bigger, &opts());
+        assert_ne!(analysis_key(&tk2, CimLevels::Both, LocalityRule::AnyCache), k0);
     }
 
     #[test]

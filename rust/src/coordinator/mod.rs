@@ -1,22 +1,41 @@
 //! The L3 coordinator: design-space-exploration sweeps.
 //!
-//! The coordinator is the leader of a worker pool: simulation + analysis +
-//! reshaping jobs (CPU-bound, trace-heavy) fan out across `std::thread`
-//! workers that pull deterministic point-chunks from a shared
-//! work-stealing queue ([`shard`]).  Each point runs the *streaming*
-//! pipeline: a simulator thread commits I-states into a bounded channel
-//! and the online analyzer folds them into reshape deltas on the fly
-//! ([`crate::pipeline`]), so peak memory per point is O(analysis window),
-//! not O(trace).  With a cache directory, traces spill to disk in chunks
-//! through the same sink interface ([`trace_store`]) and later
-//! technology/placement variants *replay* them chunk-by-chunk — across
-//! processes; without one, the legacy in-memory memo keeps materialized
-//! traces so variants still share one simulation.  Completed design
-//! points are persisted to an append-only JSONL result cache ([`cache`])
-//! keyed by a stable content hash ([`key`]) of `(bench, scale, seed,
-//! SystemConfig, LocalityRule, backend)`.
-//! A resumed sweep — or any superset of a prior sweep — recomputes only
-//! the missing points and returns rows byte-identical to a cold run
+//! The per-point pipeline is *stage-factored* (paper Fig 2, §IV) into
+//! three independently keyed stages:
+//!
+//! 1. **simulate** — keyed by [`key::trace_key`] (workload + geometry;
+//!    technology and CiM placement excluded), spilled chunk-by-chunk to
+//!    disk ([`trace_store`]);
+//! 2. **analyze** — keyed by [`key::analysis_key`] (trace key × CiM
+//!    placement × locality rule × analyzer schema), producing a
+//!    persistable [`analysis_store::AnalysisArtifact`] (stream outcome +
+//!    reshape deltas) stored in `analysis/` and memoized in-process;
+//! 3. **energy fold** — per technology, microseconds, never cached.
+//!
+//! The scheduler exploits the factoring: design points are grouped by
+//! trace, then by analysis key, and the worker pool claims whole *trace
+//! groups* from a work-stealing queue ([`shard`]).  A group with K
+//! uncached analyses replays (or simulates) its trace **once** through a
+//! broadcast [`crate::pipeline::AnalyzerFanout`] that feeds all K online
+//! analyzers in a single pass; technology-only variants skip replay and
+//! analysis entirely and just re-fold energy from the shared artifact.
+//! A sweep over T technologies × P placements therefore runs P analyses,
+//! not T·P — and with a warm artifact store, zero.
+//!
+//! The work-stealing unit is the *trace group*, so a sweep with fewer
+//! groups than workers runs that group's K analyses on one core (the
+//! fan-out is a single sequential pass).  That is a deliberate trade:
+//! splitting the lanes across workers would cost K replays — or K
+//! *simulations* without a cache dir — to buy wall-clock only in the
+//! few-geometry corner; real DSE sweeps have benches × geometries ≫
+//! workers.  Revisiting lane-splitting for the warm-trace small-sweep
+//! case is tracked in ROADMAP.md.
+//!
+//! Completed design points are persisted to an append-only JSONL result
+//! cache ([`cache`]) keyed by a stable content hash ([`key`]) of
+//! `(bench, scale, seed, SystemConfig, LocalityRule, backend)`.  A
+//! resumed sweep — or any superset of a prior sweep — recomputes only the
+//! missing points and returns rows byte-identical to a cold run
 //! ([`persist`] keeps the serialization canonical).
 //!
 //! Surviving design points are *batched* into PJRT executions of the
@@ -24,6 +43,7 @@
 //! paper's tool-chain glue (Fig 1) turned into a runtime: one `sweep`
 //! call regenerates any of Figs 13–16 / Table VI.
 
+pub mod analysis_store;
 pub mod cache;
 pub mod key;
 pub mod persist;
@@ -37,17 +57,19 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::analyzer::{LocalityRule, Macr, OnlineAnalyzer, StreamOutcome};
-use crate::config::SystemConfig;
-use crate::pipeline;
-use crate::probes::{CollectSink, Trace, TraceSummary};
+use crate::analyzer::{LocalityRule, Macr, OnlineAnalyzer};
+use crate::config::{CimLevels, SystemConfig};
+use crate::pipeline::{self, AnalyzerFanout};
+use crate::probes::TraceSummary;
 use crate::profiler::{ProfileInputs, ProfileResult};
 use crate::reshape::{reshape_from_deltas, DeltaSink};
 use crate::runtime::Backend;
 use crate::sim::Limits;
+use crate::util::json::Json;
 use crate::util::lock_unpoisoned;
 use crate::workloads;
 
+use analysis_store::{AnalysisArtifact, AnalysisStore};
 use cache::ResultCache;
 use shard::ChunkQueue;
 use trace_store::TraceStore;
@@ -99,10 +121,11 @@ pub struct SweepOptions {
     pub max_instructions: u64,
     /// worker-pool size for staging
     pub workers: usize,
-    /// points per work-stealing chunk (0 = auto-size from queue length)
+    /// trace groups per work-stealing chunk (0 = auto-size from queue
+    /// length)
     pub chunk: usize,
-    /// root of the on-disk design-point + trace cache; `None` disables
-    /// persistence entirely
+    /// root of the on-disk design-point + trace + artifact cache; `None`
+    /// disables persistence entirely
     pub cache_dir: Option<PathBuf>,
     /// serve previously cached rows instead of recomputing them (writes
     /// happen whenever `cache_dir` is set, regardless of this flag)
@@ -137,9 +160,15 @@ pub struct SweepStats {
     pub rows_computed: usize,
     /// actual cycle-level simulator invocations
     pub simulator_runs: u64,
-    /// traces served from the in-process memo
-    pub trace_mem_hits: u64,
-    /// traces served from the on-disk spill store
+    /// online analyses actually executed (one per uncached analysis key,
+    /// *not* one per design point — the stage-factoring win)
+    pub analyses_run: u64,
+    /// analyses served from the artifact store / in-process memo
+    pub analyses_cached: u64,
+    /// staged design points that needed no trace replay or simulation of
+    /// their own (they shared another point's pass or a cached artifact)
+    pub replays_skipped: u64,
+    /// traces replayed from the on-disk spill store
     pub trace_disk_hits: u64,
     /// work-stealing chunks claimed by the worker pool
     pub chunks_claimed: u64,
@@ -156,7 +185,8 @@ pub struct SweepStats {
 pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
     format!(
         "{} design points in {:.2}s ({} cached, {} computed, {} simulated, \
-         {} chunks) | scale: longest trace {} instrs, peak window {} \
+         {} chunks) | stages: {} analyses run, {} cached, {} replays \
+         skipped | scale: longest trace {} instrs, peak window {} \
          ({:.4}% of trace), peak RSS {} MiB",
         stats.points,
         secs,
@@ -164,6 +194,9 @@ pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
         stats.rows_computed,
         stats.simulator_runs,
         stats.chunks_claimed,
+        stats.analyses_run,
+        stats.analyses_cached,
+        stats.replays_skipped,
         stats.longest_trace,
         stats.peak_window,
         if stats.longest_trace > 0 {
@@ -175,27 +208,77 @@ pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
     )
 }
 
+/// Canonical JSON rendering of the sweep ledger (stderr companion of
+/// [`format_stats`] for `--format json` runs — the report body itself
+/// stays byte-stable cold-vs-cached, so the ledger never rides on it).
+pub fn ledger_json(stats: &SweepStats, secs: f64, backend: Option<&str>) -> String {
+    Json::obj(vec![
+        ("ledger", "sweep".into()),
+        ("points", (stats.points as u64).into()),
+        ("rows_from_cache", (stats.rows_from_cache as u64).into()),
+        ("rows_computed", (stats.rows_computed as u64).into()),
+        ("simulator_runs", stats.simulator_runs.into()),
+        ("analyses_run", stats.analyses_run.into()),
+        ("analyses_cached", stats.analyses_cached.into()),
+        ("replays_skipped", stats.replays_skipped.into()),
+        ("trace_disk_hits", stats.trace_disk_hits.into()),
+        ("chunks_claimed", stats.chunks_claimed.into()),
+        ("peak_window", stats.peak_window.into()),
+        ("longest_trace", stats.longest_trace.into()),
+        ("peak_rss_kb", stats.peak_rss_kb.into()),
+        ("elapsed_secs", secs.into()),
+        ("backend", backend.unwrap_or("").into()),
+    ])
+    .dump()
+}
+
 /// Shared atomic counters the worker pool updates while staging.
 #[derive(Default)]
 struct StageCounters {
     simulator_runs: AtomicU64,
-    trace_mem_hits: AtomicU64,
+    analyses_run: AtomicU64,
+    analyses_cached: AtomicU64,
+    replays_skipped: AtomicU64,
     trace_disk_hits: AtomicU64,
     chunks_claimed: AtomicU64,
     peak_window: AtomicU64,
     longest_trace: AtomicU64,
 }
 
+/// All design points of one sweep that share one analysis artifact:
+/// same trace, same CiM placement, same locality rule — they differ only
+/// in technology (and config name), which the energy fold applies.
+struct AnalysisGroup {
+    akey: String,
+    cim: CimLevels,
+    rule: LocalityRule,
+    /// positions into the sweep's `todo` list
+    points: Vec<usize>,
+}
+
+/// All design points of one sweep that share one simulated trace.
+struct TraceGroup {
+    tkey: String,
+    /// `todo` position of a representative point (bench + geometry for
+    /// simulation and error labels)
+    rep: usize,
+    analyses: Vec<AnalysisGroup>,
+}
+
 /// The sweep driver.
 pub struct Coordinator {
     /// sizing/caching/worker-pool knobs for every sweep this driver runs
     pub opts: SweepOptions,
+    /// analysis artifacts memoized for the life of this coordinator, so
+    /// `--cache-dir`-less runs (and repeated sweeps on one driver) also
+    /// dedupe the analysis stage
+    memo: Mutex<HashMap<String, Arc<AnalysisArtifact>>>,
 }
 
 impl Coordinator {
     /// A driver with the given options.
     pub fn new(opts: SweepOptions) -> Self {
-        Self { opts }
+        Self { opts, memo: Mutex::new(HashMap::new()) }
     }
 
     /// [`Coordinator::run_sweep_with_stats`], discarding the stats.
@@ -207,9 +290,9 @@ impl Coordinator {
         Ok(self.run_sweep_with_stats(points, backend)?.0)
     }
 
-    /// Resolve every point — from the result cache where possible, else by
-    /// simulate → analyze → reshape → batched profiler evaluation — and
-    /// report what was reused vs recomputed.
+    /// Resolve every point — from the result cache where possible, else
+    /// by the stage-factored simulate → analyze → energy-fold pipeline —
+    /// and report what was reused vs recomputed.
     pub fn run_sweep_with_stats(
         &self,
         points: &[SweepPoint],
@@ -224,6 +307,10 @@ impl Coordinator {
         };
         let traces = match &opts.cache_dir {
             Some(dir) => Some(TraceStore::open(&dir.join("traces"))?),
+            None => None,
+        };
+        let artifacts = match &opts.cache_dir {
+            Some(dir) => Some(AnalysisStore::open(&dir.join("analysis"))?),
             None => None,
         };
 
@@ -251,8 +338,66 @@ impl Coordinator {
         let counters = StageCounters::default();
 
         if !todo.is_empty() {
-            let queue = ChunkQueue::new(todo.len(), opts.chunk, opts.workers);
-            let memo: Mutex<HashMap<String, Arc<Trace>>> = Mutex::new(HashMap::new());
+            // re-plan the sweep: group points by trace, then by analysis
+            // key — the scheduler's unit of work is one trace group
+            let mut groups: Vec<TraceGroup> = Vec::new();
+            {
+                let mut by_tkey: HashMap<String, usize> = HashMap::new();
+                for (ti, &pi) in todo.iter().enumerate() {
+                    let p = &points[pi];
+                    let tkey = key::trace_key(&p.bench, &p.config, opts);
+                    let akey =
+                        key::analysis_key(&tkey, p.config.cim_levels, p.rule);
+                    let gi = match by_tkey.get(&tkey) {
+                        Some(&gi) => gi,
+                        None => {
+                            by_tkey.insert(tkey.clone(), groups.len());
+                            groups.push(TraceGroup {
+                                tkey,
+                                rep: ti,
+                                analyses: Vec::new(),
+                            });
+                            groups.len() - 1
+                        }
+                    };
+                    let g = &mut groups[gi];
+                    match g.analyses.iter_mut().find(|a| a.akey == akey) {
+                        Some(a) => a.points.push(ti),
+                        None => g.analyses.push(AnalysisGroup {
+                            akey,
+                            cim: p.config.cim_levels,
+                            rule: p.rule,
+                            points: vec![ti],
+                        }),
+                    }
+                }
+            }
+
+            // warm the in-process memo from the on-disk artifact store so
+            // workers need a single lookup path.  Only this sweep's
+            // analysis keys are deserialized (the store may hold the
+            // history of many unrelated sweeps), and the file isn't
+            // touched at all when the memo already covers every key.
+            if let Some(store) = &artifacts {
+                let wanted: std::collections::HashSet<String> = {
+                    let memo = lock_unpoisoned(&self.memo);
+                    groups
+                        .iter()
+                        .flat_map(|g| g.analyses.iter())
+                        .filter(|a| !memo.contains_key(&a.akey))
+                        .map(|a| a.akey.clone())
+                        .collect()
+                };
+                if !wanted.is_empty() {
+                    let loaded = store.load_wanted(&wanted)?;
+                    let mut memo = lock_unpoisoned(&self.memo);
+                    for (k, art) in loaded {
+                        memo.entry(k).or_insert_with(|| Arc::new(art));
+                    }
+                }
+            }
+
+            let queue = ChunkQueue::new(groups.len(), opts.chunk, opts.workers);
             let staged: Mutex<Vec<Option<(SweepRow, ProfileInputs)>>> =
                 Mutex::new((0..todo.len()).map(|_| None).collect());
             let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
@@ -262,39 +407,45 @@ impl Coordinator {
                     scope.spawn(|| {
                         while let Some(range) = queue.claim() {
                             counters.chunks_claimed.fetch_add(1, Ordering::Relaxed);
-                            for ti in range {
-                                let p = &points[todo[ti]];
-                                // A panicking design point must not take
+                            for gi in range {
+                                let g = &groups[gi];
+                                let rep = &points[todo[g.rep]];
+                                // A panicking trace group must not take
                                 // the pool down: contain it, report it as
                                 // a sweep failure, and keep the other
                                 // workers staging (the shared mutexes are
                                 // poison-tolerant, see `lock_unpoisoned`).
                                 let result = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(|| {
-                                        Self::stage_point(
-                                            p,
+                                        Self::stage_group(
+                                            points,
+                                            &todo,
+                                            g,
                                             opts,
-                                            &memo,
+                                            &self.memo,
+                                            artifacts.as_ref(),
                                             traces.as_ref(),
                                             &counters,
                                         )
                                     }),
                                 );
                                 match result {
-                                    Ok(Ok(pair)) => {
-                                        lock_unpoisoned(&staged)[ti] = Some(pair);
+                                    Ok(Ok(pairs)) => {
+                                        let mut staged = lock_unpoisoned(&staged);
+                                        for (ti, pair) in pairs {
+                                            staged[ti] = Some(pair);
+                                        }
                                     }
                                     Ok(Err(e)) => {
                                         lock_unpoisoned(&errors).push(format!(
-                                            "{}/{}: {e:#}",
-                                            p.bench, p.config.name
+                                            "{}: {e:#}",
+                                            group_label(g, rep)
                                         ));
                                     }
                                     Err(payload) => {
                                         lock_unpoisoned(&errors).push(format!(
-                                            "{}/{}: worker panicked: {}",
-                                            p.bench,
-                                            p.config.name,
+                                            "{}: worker panicked: {}",
+                                            group_label(g, rep),
                                             panic_message(&payload)
                                         ));
                                     }
@@ -321,26 +472,28 @@ impl Coordinator {
                 staged.iter().map(|(_, i)| i.clone()).collect();
             let results = backend.evaluate_batch(&inputs)?;
             let mut append_warned = false;
-            for ((ti, (mut row, _)), res) in
+            for ((pi, (mut row, _)), res) in
                 todo.iter().copied().zip(staged).zip(results)
             {
                 row.result = res;
                 if let Some(c) = &result_cache {
                     // best-effort, like the trace spill: a full disk must
                     // not throw away rows that are already computed
-                    if let Err(e) = c.append(&keys[ti], &row) {
+                    if let Err(e) = c.append(&keys[pi], &row) {
                         if !append_warned {
                             eprintln!("warning: result-cache append failed: {e:#}");
                             append_warned = true;
                         }
                     }
                 }
-                slots[ti] = Some(row);
+                slots[pi] = Some(row);
             }
         }
 
         stats.simulator_runs = counters.simulator_runs.load(Ordering::Relaxed);
-        stats.trace_mem_hits = counters.trace_mem_hits.load(Ordering::Relaxed);
+        stats.analyses_run = counters.analyses_run.load(Ordering::Relaxed);
+        stats.analyses_cached = counters.analyses_cached.load(Ordering::Relaxed);
+        stats.replays_skipped = counters.replays_skipped.load(Ordering::Relaxed);
         stats.trace_disk_hits = counters.trace_disk_hits.load(Ordering::Relaxed);
         stats.chunks_claimed = counters.chunks_claimed.load(Ordering::Relaxed);
         stats.peak_window = counters.peak_window.load(Ordering::Relaxed);
@@ -354,138 +507,218 @@ impl Coordinator {
         Ok((rows, stats))
     }
 
-    /// Stage one design point through the streaming pipeline.
+    /// Stage one trace group through the factored pipeline.
     ///
-    /// Trace acquisition, cheapest first:
-    /// 1. the in-memory memo (populated only when no cache dir is set) —
-    ///    stream-analyze the materialized CIQ in place;
-    /// 2. the on-disk spill store — *replay* the trace chunk-by-chunk
-    ///    into the online analyzer, never materializing it;
+    /// Artifact acquisition, cheapest first:
+    /// 1. the in-process memo (pre-warmed from the on-disk artifact
+    ///    store) — no replay, no analysis;
+    /// 2. replay the spilled trace **once** through a broadcast fan-out
+    ///    feeding every still-missing analysis in a single pass;
     /// 3. simulate, pipelined: the simulator runs on its own thread while
-    ///    this thread analyzes, teeing records into a chunked disk spill
-    ///    (with a cache dir) or a collect sink feeding the memo (without).
-    fn stage_point(
-        p: &SweepPoint,
+    ///    this thread drives the same fan-out, teeing records into a
+    ///    chunked disk spill when a cache dir is set.
+    ///
+    /// Every point then pays only the per-technology energy fold.
+    #[allow(clippy::too_many_arguments)]
+    fn stage_group(
+        points: &[SweepPoint],
+        todo: &[usize],
+        group: &TraceGroup,
         opts: &SweepOptions,
-        memo: &Mutex<HashMap<String, Arc<Trace>>>,
+        memo: &Mutex<HashMap<String, Arc<AnalysisArtifact>>>,
+        artifacts: Option<&AnalysisStore>,
         disk: Option<&TraceStore>,
         counters: &StageCounters,
-    ) -> Result<(SweepRow, ProfileInputs)> {
-        let tkey = key::trace_key(&p.bench, &p.config, opts);
-
-        // 1) in-memory memo
-        let cached = lock_unpoisoned(memo).get(&tkey).cloned();
-        if let Some(t) = cached {
-            counters.trace_mem_hits.fetch_add(1, Ordering::Relaxed);
-            let mut analyzer =
-                OnlineAnalyzer::new(p.config.cim_levels, p.rule, DeltaSink::default());
-            for is in &t.ciq {
-                analyzer.push(is);
+    ) -> Result<Vec<(usize, (SweepRow, ProfileInputs))>> {
+        // 1) memo lookup per analysis key
+        let mut resolved: Vec<Option<Arc<AnalysisArtifact>>> =
+            Vec::with_capacity(group.analyses.len());
+        {
+            let memo = lock_unpoisoned(memo);
+            for a in &group.analyses {
+                resolved.push(memo.get(&a.akey).cloned());
             }
-            let (outcome, deltas) = analyzer.finish();
-            return Ok(Self::assemble_point(p, &t.summary(), &outcome, &deltas, counters));
         }
+        let missing: Vec<usize> = (0..group.analyses.len())
+            .filter(|&ai| resolved[ai].is_none())
+            .collect();
+        counters
+            .analyses_cached
+            .fetch_add((group.analyses.len() - missing.len()) as u64, Ordering::Relaxed);
 
-        // 2) disk replay (O(chunk) memory)
-        if let Some(d) = disk {
-            let mut analyzer =
-                OnlineAnalyzer::new(p.config.cim_levels, p.rule, DeltaSink::default());
-            if let Some(summary) = d.replay(&tkey, &mut analyzer) {
-                counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
-                let (outcome, deltas) = analyzer.finish();
-                return Ok(Self::assemble_point(p, &summary, &outcome, &deltas, counters));
+        let staged_points: u64 =
+            group.analyses.iter().map(|a| a.points.len() as u64).sum();
+        let mut passes = 0u64;
+
+        if !missing.is_empty() {
+            counters
+                .analyses_run
+                .fetch_add(missing.len() as u64, Ordering::Relaxed);
+            let rep = &points[todo[group.rep]];
+            let build_fanout = || {
+                AnalyzerFanout::new(
+                    missing
+                        .iter()
+                        .map(|&ai| {
+                            let a = &group.analyses[ai];
+                            OnlineAnalyzer::new(a.cim, a.rule, DeltaSink::default())
+                        })
+                        .collect(),
+                )
+            };
+
+            // 2) disk replay: one pass feeds every missing analysis
+            let mut replayed: Option<(TraceSummary, Vec<_>)> = None;
+            if let Some(d) = disk {
+                let mut fanout = build_fanout();
+                if let Some(summary) = d.replay(&group.tkey, &mut fanout) {
+                    counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
+                    replayed = Some((summary, fanout.finish()));
+                }
+                // corrupt/missing spill: the fan-out may have consumed
+                // partial records — discard it and simulate with a fresh
+                // one below
             }
-            // corrupt/missing spill: the analyzer may have consumed partial
-            // records — discard it and fall through to a fresh simulation
-        }
 
-        // 3) pipelined simulate + analyze
-        let prog = workloads::build(&p.bench, opts.scale, opts.seed)
-            .ok_or_else(|| anyhow!("unknown benchmark '{}'", p.bench))?;
-        counters.simulator_runs.fetch_add(1, Ordering::Relaxed);
-        let limits = Limits { max_instructions: opts.max_instructions };
-
-        if let Some(d) = disk {
-            // best-effort spill: a full disk must not fail the sweep, only
-            // future reuse
-            match d.writer(&tkey) {
-                Ok(mut spill) => {
-                    let (summary, outcome, deltas) = pipeline::run_pipelined(
+            // 3) pipelined simulate + fan-out analyze
+            let (summary, lanes) = match replayed {
+                Some(x) => x,
+                None => {
+                    let prog = workloads::build(&rep.bench, opts.scale, opts.seed)
+                        .ok_or_else(|| {
+                            anyhow!("unknown benchmark '{}'", rep.bench)
+                        })?;
+                    counters.simulator_runs.fetch_add(1, Ordering::Relaxed);
+                    let limits =
+                        Limits { max_instructions: opts.max_instructions };
+                    // best-effort spill: a full disk must not fail the
+                    // sweep, only future reuse
+                    let mut spill = match disk.map(|d| d.writer(&group.tkey)) {
+                        Some(Ok(w)) => Some(w),
+                        Some(Err(e)) => {
+                            eprintln!("warning: trace spill failed: {e:#}");
+                            None
+                        }
+                        None => None,
+                    };
+                    let (summary, lanes) = pipeline::run_pipelined_fanout(
                         &prog,
-                        &p.config,
+                        &rep.config,
                         limits,
-                        p.rule,
-                        DeltaSink::default(),
-                        Some(&mut spill),
+                        build_fanout(),
+                        spill
+                            .as_mut()
+                            .map(|s| s as &mut (dyn crate::probes::TraceSink + Send)),
                     )?;
-                    if let Err(e) = spill.finish(&summary) {
-                        eprintln!("warning: trace spill failed: {e:#}");
+                    if let Some(w) = spill {
+                        if let Err(e) = w.finish(&summary) {
+                            eprintln!("warning: trace spill failed: {e:#}");
+                        }
                     }
-                    Ok(Self::assemble_point(p, &summary, &outcome, &deltas, counters))
+                    (summary, lanes)
                 }
-                Err(e) => {
-                    eprintln!("warning: trace spill failed: {e:#}");
-                    let (summary, outcome, deltas) = pipeline::run_pipelined(
-                        &prog,
-                        &p.config,
-                        limits,
-                        p.rule,
-                        DeltaSink::default(),
-                        None,
-                    )?;
-                    Ok(Self::assemble_point(p, &summary, &outcome, &deltas, counters))
+            };
+            passes = 1;
+
+            // publish the new artifacts: disk appends (best-effort, with
+            // their own writer lock) happen BEFORE taking the memo lock,
+            // so other workers' stage-1 lookups never stall behind I/O
+            let new_arts: Vec<(usize, Arc<AnalysisArtifact>)> = missing
+                .iter()
+                .copied()
+                .zip(lanes)
+                .map(|(ai, (outcome, deltas))| {
+                    let art = Arc::new(AnalysisArtifact {
+                        summary: summary.clone(),
+                        outcome,
+                        deltas,
+                    });
+                    (ai, art)
+                })
+                .collect();
+            if let Some(store) = artifacts {
+                let mut append_warned = false;
+                for (ai, art) in &new_arts {
+                    if let Err(e) = store.append(&group.analyses[*ai].akey, art) {
+                        if !append_warned {
+                            eprintln!(
+                                "warning: analysis-store append failed: {e:#}"
+                            );
+                            append_warned = true;
+                        }
+                    }
                 }
             }
-        } else {
-            // no disk: materialize via a tee so the memo can serve the
-            // other tech/placement variants of this geometry (the legacy
-            // memory profile — bounded-memory sweeps want a cache dir)
-            let mut collect = CollectSink::default();
-            let (summary, outcome, deltas) = pipeline::run_pipelined(
-                &prog,
-                &p.config,
-                limits,
-                p.rule,
-                DeltaSink::default(),
-                Some(&mut collect),
-            )?;
-            let staged = Self::assemble_point(p, &summary, &outcome, &deltas, counters);
-            let trace = Arc::new(Trace::from_parts(summary, collect.ciq));
-            lock_unpoisoned(memo).insert(tkey, trace);
-            Ok(staged)
+            let mut memo = lock_unpoisoned(memo);
+            for (ai, art) in new_arts {
+                memo.insert(group.analyses[ai].akey.clone(), Arc::clone(&art));
+                resolved[ai] = Some(art);
+            }
         }
+        counters
+            .replays_skipped
+            .fetch_add(staged_points - passes, Ordering::Relaxed);
+
+        // 4) per-point energy fold — the only per-technology work
+        let mut out = Vec::with_capacity(staged_points as usize);
+        for (a, art) in group.analyses.iter().zip(&resolved) {
+            let art = art.as_ref().expect("artifact resolved above");
+            for &ti in &a.points {
+                let p = &points[todo[ti]];
+                out.push((ti, Self::fold_energy(p, art, counters)));
+            }
+        }
+        Ok(out)
     }
 
-    /// Fold a finished stream into the sweep row + profiler inputs.
-    fn assemble_point(
+    /// Fold a shared analysis artifact into one point's sweep row +
+    /// profiler inputs (stage 3: the per-technology energy fold).
+    fn fold_energy(
         p: &SweepPoint,
-        summary: &TraceSummary,
-        outcome: &StreamOutcome,
-        deltas: &DeltaSink,
+        art: &AnalysisArtifact,
         counters: &StageCounters,
     ) -> (SweepRow, ProfileInputs) {
         counters
             .peak_window
-            .fetch_max(outcome.peak_window as u64, Ordering::Relaxed);
+            .fetch_max(art.outcome.peak_window as u64, Ordering::Relaxed);
         counters
             .longest_trace
-            .fetch_max(summary.committed, Ordering::Relaxed);
-        let reshaped = reshape_from_deltas(summary, deltas, &p.config);
+            .fetch_max(art.summary.committed, Ordering::Relaxed);
+        let reshaped = reshape_from_deltas(&art.summary, &art.deltas, &p.config);
         let inputs = ProfileInputs::new(&p.config, &reshaped);
         let row = SweepRow {
             bench: p.bench.clone(),
             config_name: p.config.name.clone(),
             tech: p.config.tech,
             cim_levels: p.config.cim_levels,
-            macr: outcome.macr,
-            committed: summary.committed,
-            cycles: summary.cycles,
+            macr: art.outcome.macr,
+            committed: art.summary.committed,
+            cycles: art.summary.cycles,
             removed: reshaped.removed,
             cim_ops: reshaped.cim_op_count,
             result: ProfileResult::default(),
         };
         (row, inputs)
     }
+}
+
+/// Error label for a failed trace group: since one pass serves many
+/// design points, name the representative point *and* enumerate the
+/// placement/rule lanes so a failing analysis can be narrowed down
+/// without re-running points one by one.
+fn group_label(g: &TraceGroup, rep: &SweepPoint) -> String {
+    let points: usize = g.analyses.iter().map(|a| a.points.len()).sum();
+    let lanes: Vec<String> = g
+        .analyses
+        .iter()
+        .map(|a| format!("{}/{}", a.cim.name(), a.rule.name()))
+        .collect();
+    format!(
+        "{}/{} (trace group: {points} points; analyses: {})",
+        rep.bench,
+        rep.config.name,
+        lanes.join(", ")
+    )
 }
 
 /// Best-effort rendering of a contained worker panic payload.
@@ -544,17 +777,23 @@ mod tests {
             assert!(r.result.total_base > 0.0);
             assert!(r.result.improvement > 0.0);
         }
-        // no cache dir: everything computed, nothing reused from disk
+        // no cache dir: everything computed, nothing reused from disk —
+        // four distinct traces, one analysis each
         assert_eq!(stats.rows_from_cache, 0);
         assert_eq!(stats.rows_computed, 4);
         assert_eq!(stats.simulator_runs, 4);
+        assert_eq!(stats.analyses_run, 4);
+        assert_eq!(stats.analyses_cached, 0);
+        assert_eq!(stats.replays_skipped, 0);
         assert_eq!(stats.trace_disk_hits, 0);
         assert!(stats.chunks_claimed >= 1);
     }
 
     #[test]
-    fn trace_memo_dedups_same_geometry() {
-        // same bench + geometry, two tech variants -> one simulation
+    fn tech_variants_share_one_simulation_and_one_analysis() {
+        // same bench + geometry + placement, two tech variants -> one
+        // simulation AND one analysis; the second point only re-folds
+        // energy
         let mut fefet = SystemConfig::preset("c1").unwrap();
         fefet.tech = crate::config::Technology::FEFET;
         fefet.name = "c1-fefet".into();
@@ -573,7 +812,58 @@ mod tests {
             .unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(stats.simulator_runs, 1);
-        assert_eq!(stats.trace_mem_hits, 1);
+        assert_eq!(stats.analyses_run, 1);
+        assert_eq!(stats.replays_skipped, 1);
+
+        // a second sweep on the same driver hits the in-process memo even
+        // without a cache dir: no simulation, no analysis, pure fold
+        let (rows2, stats2) = coord
+            .run_sweep_with_stats(&points, &mut NativeBackend)
+            .unwrap();
+        assert_eq!(rows2.len(), 2);
+        assert_eq!(stats2.simulator_runs, 0);
+        assert_eq!(stats2.analyses_run, 0);
+        assert_eq!(stats2.analyses_cached, 1);
+        assert_eq!(stats2.replays_skipped, 2);
+        for (a, b) in rows.iter().zip(&rows2) {
+            assert_eq!(
+                persist::row_to_json(a).dump(),
+                persist::row_to_json(b).dump(),
+                "memoized artifacts must fold to identical rows"
+            );
+        }
+    }
+
+    #[test]
+    fn placement_variants_fan_out_of_one_replay() {
+        // one trace, three placements: one simulation, three analyses in
+        // a single broadcast pass
+        let base = SystemConfig::preset("c1").unwrap();
+        let cfgs: Vec<SystemConfig> = [
+            crate::config::CimLevels::L1Only,
+            crate::config::CimLevels::L2Only,
+            crate::config::CimLevels::Both,
+        ]
+        .into_iter()
+        .map(|cim| {
+            let mut c = base.clone().with_cim(cim);
+            c.name = format!("c1-{}", cim.name());
+            c
+        })
+        .collect();
+        let points = cross(&["lcs"], &cfgs, LocalityRule::AnyCache);
+        let coord = Coordinator::new(SweepOptions {
+            scale: 4,
+            workers: 2,
+            ..Default::default()
+        });
+        let (rows, stats) = coord
+            .run_sweep_with_stats(&points, &mut NativeBackend)
+            .unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(stats.simulator_runs, 1);
+        assert_eq!(stats.analyses_run, 3);
+        assert_eq!(stats.replays_skipped, 2);
     }
 
     #[test]

@@ -14,27 +14,27 @@ use crate::util::json::Json;
 
 use super::SweepRow;
 
-fn arr(xs: &[f64]) -> Json {
+pub(crate) fn arr(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
-fn get_f64(o: &Json, key: &str) -> Result<f64, String> {
+pub(crate) fn get_f64(o: &Json, key: &str) -> Result<f64, String> {
     o.req(key)?
         .as_f64()
         .ok_or_else(|| format!("key '{key}' is not a number"))
 }
 
-fn get_u64(o: &Json, key: &str) -> Result<u64, String> {
+pub(crate) fn get_u64(o: &Json, key: &str) -> Result<u64, String> {
     Ok(get_f64(o, key)? as u64)
 }
 
-fn get_str<'a>(o: &'a Json, key: &str) -> Result<&'a str, String> {
+pub(crate) fn get_str<'a>(o: &'a Json, key: &str) -> Result<&'a str, String> {
     o.req(key)?
         .as_str()
         .ok_or_else(|| format!("key '{key}' is not a string"))
 }
 
-fn get_f64_array<const N: usize>(o: &Json, key: &str) -> Result<[f64; N], String> {
+pub(crate) fn get_f64_array<const N: usize>(o: &Json, key: &str) -> Result<[f64; N], String> {
     let xs = o
         .req(key)?
         .as_arr()

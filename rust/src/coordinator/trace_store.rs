@@ -460,7 +460,7 @@ fn decode_stream<S: ByteSource>(
             "record count {records} disagrees with trailer committed {committed}"
         ));
     }
-    Ok(TraceSummary { program, pipe, mem, cycles, committed, stop })
+    Ok(TraceSummary { program: program.into(), pipe, mem, cycles, committed, stop })
 }
 
 fn level_to_u8(l: MemLevel) -> u8 {
@@ -480,7 +480,7 @@ fn level_from_u8(x: u8) -> Result<MemLevel, String> {
     }
 }
 
-fn stop_to_u8(s: StopReason) -> u8 {
+pub(crate) fn stop_to_u8(s: StopReason) -> u8 {
     match s {
         StopReason::Halt => 0,
         StopReason::MaxInstructions => 1,
@@ -488,7 +488,7 @@ fn stop_to_u8(s: StopReason) -> u8 {
     }
 }
 
-fn stop_from_u8(x: u8) -> Result<StopReason, String> {
+pub(crate) fn stop_from_u8(x: u8) -> Result<StopReason, String> {
     match x {
         0 => Ok(StopReason::Halt),
         1 => Ok(StopReason::MaxInstructions),
@@ -497,7 +497,7 @@ fn stop_from_u8(x: u8) -> Result<StopReason, String> {
     }
 }
 
-fn pipe_fields(p: &PipeStats) -> [u64; 16] {
+pub(crate) fn pipe_fields(p: &PipeStats) -> [u64; 16] {
     [
         p.fetched,
         p.decoded,
@@ -518,7 +518,7 @@ fn pipe_fields(p: &PipeStats) -> [u64; 16] {
     ]
 }
 
-fn pipe_from_fields(
+pub(crate) fn pipe_from_fields(
     f: [u64; 16],
     fu_counts: [u64; crate::isa::func_unit::NUM_FUNC_UNITS],
 ) -> PipeStats {
@@ -542,7 +542,7 @@ fn pipe_from_fields(
     }
 }
 
-fn mem_fields(m: &MemStats) -> [u64; 14] {
+pub(crate) fn mem_fields(m: &MemStats) -> [u64; 14] {
     [
         m.l1i_hits,
         m.l1i_misses,
@@ -561,7 +561,7 @@ fn mem_fields(m: &MemStats) -> [u64; 14] {
     ]
 }
 
-fn mem_from_fields(f: [u64; 14]) -> MemStats {
+pub(crate) fn mem_from_fields(f: [u64; 14]) -> MemStats {
     MemStats {
         l1i_hits: f[0],
         l1i_misses: f[1],

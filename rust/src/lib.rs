@@ -52,7 +52,6 @@ pub mod isa;
 pub mod pipeline;
 pub mod probes;
 pub mod profiler;
-#[allow(missing_docs)]
 pub mod reshape;
 pub mod runtime;
 #[allow(missing_docs)]

@@ -29,8 +29,12 @@
 //!   technologies from `[tech.<name>]` sections before flags like
 //!   `--tech`/`--techs` are resolved.
 //!
-//! Sweep ledgers (cache effectiveness, scale) go to stderr, never stdout,
-//! so `eva-cim <cmd> --format json | jq` always sees pure JSON.
+//! Sweep ledgers (cache effectiveness, stage-factoring counters, scale)
+//! go to stderr, never stdout, so `eva-cim <cmd> --format json | jq`
+//! always sees pure JSON.  Under `--format json` the ledger is *also*
+//! printed to stderr as one canonical JSON object (`"ledger":"sweep"`,
+//! with `analyses_run`/`analyses_cached`/`replays_skipped` et al.), so
+//! machine consumers get the counters without perturbing stdout.
 //!
 //! (clap is unavailable in this offline environment; flags are parsed by
 //! the tiny matcher in [`cli`].)
@@ -225,6 +229,9 @@ fn eval_from_args(args: &cli::Args) -> Result<Evaluation, String> {
 /// stdout in the `--format` of choice, plus the optional `--csv <file>`
 /// export (which always goes through `Report::render_csv`).
 fn emit(report: &Report, args: &cli::Args) -> Result<(), String> {
+    let name = args.flag_or("format", "table");
+    let format = Format::from_name(&name)
+        .ok_or_else(|| format!("unknown format '{name}' (table|json|csv)"))?;
     if let Some(stats) = &report.stats {
         // the *resolved* backend matters: auto may have fallen back from
         // pjrt to the native mirror
@@ -233,10 +240,19 @@ fn emit(report: &Report, args: &cli::Args) -> Result<(), String> {
             .map(|b| format!(" | backend {b}"))
             .unwrap_or_default();
         eprintln!("{}{backend}", format_stats(stats, report.elapsed_secs));
+        if format == Format::Json {
+            // machine-readable ledger twin — still stderr, so stdout
+            // stays canonical (and byte-stable cold-vs-cached) JSON
+            eprintln!(
+                "{}",
+                eva_cim::coordinator::ledger_json(
+                    stats,
+                    report.elapsed_secs,
+                    report.backend
+                )
+            );
+        }
     }
-    let name = args.flag_or("format", "table");
-    let format = Format::from_name(&name)
-        .ok_or_else(|| format!("unknown format '{name}' (table|json|csv)"))?;
     print!("{}", report.render_as(format));
     if let Some(path) = args.flag("csv") {
         std::fs::write(path, report.render_csv()).map_err(|e| e.to_string())?;

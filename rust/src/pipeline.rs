@@ -59,6 +59,54 @@ impl TraceSink for ChannelSink<'_> {
     }
 }
 
+/// A broadcast tee over the commit stream: one pass feeds K independent
+/// [`OnlineAnalyzer`]s (different CiM placements and/or locality rules
+/// over the *same* trace).  Each analyzer sees every record by reference,
+/// so the fan-out costs K pushes per instruction, not K stream replays —
+/// the core of the stage-factored sweep (`coordinator`): a trace is
+/// simulated or replayed once and every analysis variant rides along.
+///
+/// Also a [`TraceSink`], so [`crate::coordinator::trace_store::TraceStore::replay`]
+/// can drive it directly.
+pub struct AnalyzerFanout<S: CandidateSink> {
+    analyzers: Vec<OnlineAnalyzer<S>>,
+}
+
+impl<S: CandidateSink> AnalyzerFanout<S> {
+    /// A fan-out over the given analyzers (one lane per analyzer).
+    pub fn new(analyzers: Vec<OnlineAnalyzer<S>>) -> Self {
+        Self { analyzers }
+    }
+
+    /// Number of analysis lanes.
+    pub fn len(&self) -> usize {
+        self.analyzers.len()
+    }
+
+    /// True when there are no lanes (every push is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.analyzers.is_empty()
+    }
+
+    /// Feed one committed record to every lane.
+    pub fn push(&mut self, is: &IState) {
+        for a in &mut self.analyzers {
+            a.push(is);
+        }
+    }
+
+    /// End of stream: finish every lane, in lane order.
+    pub fn finish(self) -> Vec<(StreamOutcome, S)> {
+        self.analyzers.into_iter().map(|a| a.finish()).collect()
+    }
+}
+
+impl<S: CandidateSink> TraceSink for AnalyzerFanout<S> {
+    fn on_commit(&mut self, is: IState) {
+        self.push(&is);
+    }
+}
+
 /// Simulate `prog` with the simulator on its own thread, analyzing the
 /// commit stream concurrently.  `tee` additionally receives every record
 /// on the simulator thread (e.g. a chunked disk spill writer).
@@ -70,10 +118,25 @@ pub fn run_pipelined<S: CandidateSink>(
     sink: S,
     tee: Option<&mut (dyn TraceSink + Send)>,
 ) -> Result<(TraceSummary, StreamOutcome, S), SimError> {
+    let fanout =
+        AnalyzerFanout::new(vec![OnlineAnalyzer::new(cfg.cim_levels, rule, sink)]);
+    let (summary, mut outs) = run_pipelined_fanout(prog, cfg, limits, fanout, tee)?;
+    let (outcome, sink) = outs.pop().expect("single-lane fanout");
+    Ok((summary, outcome, sink))
+}
+
+/// [`run_pipelined`] over a multi-lane [`AnalyzerFanout`]: one simulation,
+/// K concurrent analyses.  Outcomes come back in lane order.
+pub fn run_pipelined_fanout<S: CandidateSink>(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+    mut fanout: AnalyzerFanout<S>,
+    tee: Option<&mut (dyn TraceSink + Send)>,
+) -> Result<(TraceSummary, Vec<(StreamOutcome, S)>), SimError> {
     let (tx, rx) = mpsc::sync_channel::<Vec<IState>>(DEPTH);
-    let mut analyzer = OnlineAnalyzer::new(cfg.cim_levels, rule, sink);
     let summary = std::thread::scope(|scope| {
-        // own the receiver inside the scope: if the analyzer panics while
+        // own the receiver inside the scope: if an analyzer panics while
         // draining, unwinding drops `rx`, which unblocks a simulator
         // thread waiting on the full channel so the scope's implicit join
         // terminates and the panic propagates instead of deadlocking
@@ -89,13 +152,12 @@ pub fn run_pipelined<S: CandidateSink>(
         });
         for batch in rx.iter() {
             for is in &batch {
-                analyzer.push(is);
+                fanout.push(is);
             }
         }
         handle.join().expect("simulator thread panicked")
     })?;
-    let (outcome, sink) = analyzer.finish();
-    Ok((summary, outcome, sink))
+    Ok((summary, fanout.finish()))
 }
 
 /// Sequential streaming: same O(window) memory as [`run_pipelined`], on
@@ -174,6 +236,54 @@ mod tests {
         assert_eq!(collect.ciq.len() as u64, summary.committed);
         for (i, is) in collect.ciq.iter().enumerate() {
             assert_eq!(is.seq, i as u64);
+        }
+    }
+
+    #[test]
+    fn fanout_lanes_match_individual_runs() {
+        use crate::config::CimLevels;
+        use crate::reshape::DeltaSink;
+
+        let prog = workloads::build("lcs", 2, 7).unwrap();
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let specs = [
+            (CimLevels::L1Only, LocalityRule::AnyCache),
+            (CimLevels::Both, LocalityRule::SameBank),
+            (CimLevels::L2Only, LocalityRule::SameLevel),
+        ];
+        let fanout = AnalyzerFanout::new(
+            specs
+                .iter()
+                .map(|&(cim, rule)| {
+                    OnlineAnalyzer::new(cim, rule, DeltaSink::default())
+                })
+                .collect(),
+        );
+        assert_eq!(fanout.len(), specs.len());
+        assert!(!fanout.is_empty());
+        let (summary, lanes) =
+            run_pipelined_fanout(&prog, &cfg, Limits::default(), fanout, None)
+                .unwrap();
+        assert_eq!(lanes.len(), specs.len());
+        for ((cim, rule), (out, deltas)) in specs.into_iter().zip(&lanes) {
+            let mut c2 = cfg.clone();
+            c2.cim_levels = cim;
+            let (s2, o2, d2) = run_pipelined(
+                &prog,
+                &c2,
+                Limits::default(),
+                rule,
+                DeltaSink::default(),
+                None,
+            )
+            .unwrap();
+            assert_eq!(s2.committed, summary.committed);
+            assert_eq!(o2.macr, out.macr);
+            assert_eq!(o2.candidates, out.candidates);
+            assert_eq!(o2.idg_nodes, out.idg_nodes);
+            assert_eq!(d2.delta.0, deltas.delta.0);
+            assert_eq!(d2.removed, deltas.removed);
+            assert_eq!(d2.cim_add, deltas.cim_add);
         }
     }
 

@@ -198,8 +198,9 @@ impl InstrInfo {
 /// [`TraceSink`].
 #[derive(Clone, Debug)]
 pub struct TraceSummary {
-    /// program name
-    pub program: String,
+    /// program name (shared handle — cloning a summary is allocation-free
+    /// on this field)
+    pub program: std::sync::Arc<str>,
     /// pipeline activity counters
     pub pipe: PipeStats,
     /// memory hierarchy hit/miss counters
@@ -285,8 +286,8 @@ impl TraceSink for CollectSink {
 /// Full output of one simulation: the materialized modeling-stage product.
 #[derive(Clone, Debug)]
 pub struct Trace {
-    /// program name
-    pub program: String,
+    /// program name (shared handle, see [`TraceSummary::program`])
+    pub program: std::sync::Arc<str>,
     /// the committed instruction queue with I-state per entry
     pub ciq: Vec<IState>,
     /// pipeline activity counters

@@ -7,55 +7,101 @@
 use crate::isa::FuncUnit;
 use crate::probes::{MemStats, PipeStats, Trace, TraceSummary};
 
+/// Number of performance counters (the profiler input width).
 pub const NC: usize = 43;
 
 // core events [0, 22)
+/// Counter slot: instructions fetched.
 pub const C_FETCH: usize = 0;
+/// Counter slot: instructions decoded.
 pub const C_DECODE: usize = 1;
+/// Counter slot: register-rename operations.
 pub const C_RENAME: usize = 2;
+/// Counter slot: issue-queue read ports exercised.
 pub const C_IQ_READS: usize = 3;
+/// Counter slot: issue-queue write ports exercised.
 pub const C_IQ_WRITES: usize = 4;
+/// Counter slot: reorder-buffer reads.
 pub const C_ROB_READS: usize = 5;
+/// Counter slot: reorder-buffer writes.
 pub const C_ROB_WRITES: usize = 6;
+/// Counter slot: integer register-file reads.
 pub const C_INT_RF_READS: usize = 7;
+/// Counter slot: integer register-file writes.
 pub const C_INT_RF_WRITES: usize = 8;
+/// Counter slot: floating-point register-file reads.
 pub const C_FP_RF_READS: usize = 9;
+/// Counter slot: floating-point register-file writes.
 pub const C_FP_RF_WRITES: usize = 10;
+/// Counter slot: integer-ALU executions.
 pub const C_INT_ALU: usize = 11;
+/// Counter slot: integer-multiplier executions.
 pub const C_INT_MUL: usize = 12;
+/// Counter slot: integer-divider executions.
 pub const C_INT_DIV: usize = 13;
+/// Counter slot: FP-ALU executions.
 pub const C_FP_ALU: usize = 14;
+/// Counter slot: FP-multiplier executions.
 pub const C_FP_MUL: usize = 15;
+/// Counter slot: FP-divider executions.
 pub const C_FP_DIV: usize = 16;
+/// Counter slot: branch-unit executions.
 pub const C_BRANCH: usize = 17;
+/// Counter slot: branch-predictor lookups.
 pub const C_BPRED_LOOKUPS: usize = 18;
+/// Counter slot: branch mispredictions.
 pub const C_BPRED_MISPREDICTS: usize = 19;
+/// Counter slot: load/store-queue reads.
 pub const C_LSQ_READS: usize = 20;
+/// Counter slot: load/store-queue writes.
 pub const C_LSQ_WRITES: usize = 21;
 // cache events [22, 34)
+/// Counter slot: L1I fetch hits.
 pub const C_L1I_HITS: usize = 22;
+/// Counter slot: L1I fetch misses.
 pub const C_L1I_MISSES: usize = 23;
+/// Counter slot: L1D load hits.
 pub const C_L1D_READ_HITS: usize = 24;
+/// Counter slot: L1D load misses.
 pub const C_L1D_READ_MISSES: usize = 25;
+/// Counter slot: L1D store hits.
 pub const C_L1D_WRITE_HITS: usize = 26;
+/// Counter slot: L1D store misses.
 pub const C_L1D_WRITE_MISSES: usize = 27;
+/// Counter slot: L2 read hits.
 pub const C_L2_READ_HITS: usize = 28;
+/// Counter slot: L2 read misses.
 pub const C_L2_READ_MISSES: usize = 29;
+/// Counter slot: L2 write hits.
 pub const C_L2_WRITE_HITS: usize = 30;
+/// Counter slot: L2 write misses.
 pub const C_L2_WRITE_MISSES: usize = 31;
+/// Counter slot: main-memory reads.
 pub const C_DRAM_READS: usize = 32;
+/// Counter slot: main-memory writes.
 pub const C_DRAM_WRITES: usize = 33;
 // CiM events [34, 42)
+/// Counter slot: CiM OR operations in the L1 array.
 pub const C_CIM_L1_OR: usize = 34;
+/// Counter slot: CiM AND operations in the L1 array.
 pub const C_CIM_L1_AND: usize = 35;
+/// Counter slot: CiM XOR operations in the L1 array.
 pub const C_CIM_L1_XOR: usize = 36;
+/// Counter slot: CiM ADD operations in the L1 array.
 pub const C_CIM_L1_ADD: usize = 37;
+/// Counter slot: CiM OR operations in the L2 array.
 pub const C_CIM_L2_OR: usize = 38;
+/// Counter slot: CiM AND operations in the L2 array.
 pub const C_CIM_L2_AND: usize = 39;
+/// Counter slot: CiM XOR operations in the L2 array.
 pub const C_CIM_L2_XOR: usize = 40;
+/// Counter slot: CiM ADD operations in the L2 array.
 pub const C_CIM_L2_ADD: usize = 41;
+/// Counter slot: total simulated cycles.
 pub const C_CYCLES: usize = 42;
 
+/// Counter names, slot-aligned with the `C_*` constants and the Python
+/// AOT schema (`COUNTER_NAMES` in `constants.py`).
 pub const COUNTER_NAMES: [&str; NC] = [
     "fetch_insts", "decode_insts", "rename_ops",
     "iq_reads", "iq_writes", "rob_reads", "rob_writes",
@@ -154,6 +200,7 @@ impl CounterSet {
         self.0[i] = (self.0[i] - amount).max(0.0);
     }
 
+    /// The counter vector narrowed to f32 (the PJRT artifact's dtype).
     pub fn as_f32(&self) -> [f32; NC] {
         let mut out = [0f32; NC];
         for (o, v) in out.iter_mut().zip(self.0.iter()) {
@@ -162,6 +209,7 @@ impl CounterSet {
         out
     }
 
+    /// Sum of every CiM-op counter (all levels, all op kinds).
     pub fn total_cim_ops(&self) -> f64 {
         self.0[C_CIM_L1_OR..=C_CIM_L2_ADD].iter().sum()
     }

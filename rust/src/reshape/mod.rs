@@ -31,20 +31,29 @@ use crate::probes::{InstrInfo, MemLevel, Trace, TraceSummary};
 
 use counters::*;
 
-/// Perf-vector layout (mirrors `constants.py` PERF_*).
+/// Perf-vector length (mirrors `constants.py` PERF_*).
 pub const NPERF: usize = 6;
+/// Perf-vector slot: simulated baseline cycles.
 pub const P_CYCLES: usize = 0;
+/// Perf-vector slot: committed instructions.
 pub const P_COMMITTED: usize = 1;
+/// Perf-vector slot: instructions removed from the CPU stream.
 pub const P_REMOVED: usize = 2;
+/// Perf-vector slot: CiM-ADD operations executing in the L1 array.
 pub const P_CIM_ADD_L1: usize = 3;
+/// Perf-vector slot: CiM-ADD operations executing in the L2 array.
 pub const P_CIM_ADD_L2: usize = 4;
+/// Perf-vector slot: core clock in GHz.
 pub const P_CLOCK_GHZ: usize = 5;
 
 /// The reshaped execution: both counter vectors plus the perf vector.
 #[derive(Clone, Debug)]
 pub struct Reshaped {
+    /// baseline (non-CiM) performance counters
     pub base: CounterSet,
+    /// CiM-view counters after candidate application
     pub cim: CounterSet,
+    /// speedup-model inputs (see the `P_*` slot constants)
     pub perf: [f64; NPERF],
     /// instructions removed from the CPU stream
     pub removed: u64,
@@ -237,18 +246,26 @@ fn apply_candidate<A: EventAcc>(
 }
 
 /// Streaming accumulator: fold candidates into deltas as the online
-/// analyzer emits them.  O(1) state — nothing per-candidate is retained.
-#[derive(Default)]
+/// analyzer emits them.  O(1) state — nothing per-candidate is retained,
+/// which is also what makes the finished sink a cheap, serializable
+/// analysis artifact (see `coordinator::analysis_store`).
+#[derive(Clone, Default)]
 pub struct DeltaSink {
+    /// signed counter deltas accumulated over every candidate so far
     pub delta: DeltaCounters,
+    /// instructions removed from the CPU stream so far
     pub removed: u64,
     /// CiM-ADD counts per level (L1, L2) for the speedup model
     pub cim_add: [u64; 2],
+    /// CiM operations added so far (all levels, all ops)
     pub cim_op_count: u64,
 }
 
-impl CandidateSink for DeltaSink {
-    fn on_candidate(&mut self, rec: &CandidateRecord) {
+impl DeltaSink {
+    /// Fold one candidate's effect into the running deltas.  This is the
+    /// whole sink logic, exposed by reference so tee sinks can share a
+    /// record with another consumer without cloning it.
+    pub fn fold(&mut self, rec: &CandidateRecord) {
         let c = &rec.candidate;
         apply_candidate(
             &mut self.delta,
@@ -267,6 +284,12 @@ impl CandidateSink for DeltaSink {
         // per candidate matches the batch running total exactly
         self.removed += c.removed_count();
         self.removed = self.removed.saturating_sub(c.readbacks as u64);
+    }
+}
+
+impl CandidateSink for DeltaSink {
+    fn on_candidate(&mut self, rec: CandidateRecord) {
+        self.fold(&rec);
     }
 }
 

@@ -1,0 +1,235 @@
+//! The stage-factored sweep contract (simulate / analyze / energy-fold).
+//!
+//! Pins the three properties that make the factoring safe and worth it:
+//!
+//! 1. **Row equivalence** — a grouped sweep over T technologies × P
+//!    placements produces rows *byte-identical* to the unfactored
+//!    per-point path (one pipelined simulate+analyze per point), in the
+//!    canonical row serialization and in all three report renderings
+//!    (table, CSV, JSON).
+//! 2. **Work collapse** — the same sweep runs exactly P online analyses
+//!    (one per analysis key), not T·P, and a single simulation.
+//! 3. **Artifact persistence** — a cross-process resume that still has
+//!    the `analysis/` store re-folds every row with zero simulations,
+//!    zero replays and zero analyses; with only `traces/` left, one
+//!    replay fans out into all P analyses.
+
+use std::path::PathBuf;
+
+use eva_cim::analyzer::LocalityRule;
+use eva_cim::api::{sweep_section, Report};
+use eva_cim::config::{CimLevels, SystemConfig, Technology};
+use eva_cim::coordinator::{
+    cross, persist, Coordinator, SweepOptions, SweepPoint, SweepRow,
+};
+use eva_cim::pipeline::run_pipelined;
+use eva_cim::profiler::ProfileInputs;
+use eva_cim::reshape::{reshape_from_deltas, DeltaSink};
+use eva_cim::runtime::{Backend, NativeBackend};
+use eva_cim::sim::Limits;
+use eva_cim::workloads;
+
+const PLACEMENTS: [CimLevels; 3] =
+    [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both];
+
+fn techs4() -> Vec<Technology> {
+    vec![
+        Technology::SRAM,
+        Technology::FEFET,
+        Technology::RRAM,
+        Technology::STT_MRAM,
+    ]
+}
+
+/// T = 4 technologies × P = 3 placements of one bench + geometry: twelve
+/// design points sharing a single trace, three analysis keys.
+fn grid_points() -> Vec<SweepPoint> {
+    let base = SystemConfig::preset("c1").unwrap();
+    let mut cfgs = Vec::new();
+    for tech in techs4() {
+        for cim in PLACEMENTS {
+            let mut c = base.clone().with_tech(tech).with_cim(cim);
+            c.name = format!("c1-{}-{}", tech.name(), cim.name());
+            cfgs.push(c);
+        }
+    }
+    cross(&["lcs"], &cfgs, LocalityRule::AnyCache)
+}
+
+fn opts(dir: Option<PathBuf>) -> SweepOptions {
+    SweepOptions {
+        scale: 4,
+        workers: 2,
+        cache_dir: dir,
+        resume: true,
+        ..Default::default()
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("eva-cim-factored-{tag}-{}", std::process::id()))
+}
+
+fn dump_rows(rows: &[SweepRow]) -> Vec<String> {
+    rows.iter().map(|r| persist::row_to_json(r).dump()).collect()
+}
+
+/// The unfactored reference path: one pipelined simulate + analyze +
+/// reshape per design point (what the coordinator did before the stage
+/// factoring), then one batched profiler evaluation in point order.
+fn unfactored_rows(points: &[SweepPoint], opts: &SweepOptions) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    let mut inputs = Vec::new();
+    for p in points {
+        let prog = workloads::build(&p.bench, opts.scale, opts.seed).unwrap();
+        let limits = Limits { max_instructions: opts.max_instructions };
+        let (summary, outcome, deltas) = run_pipelined(
+            &prog,
+            &p.config,
+            limits,
+            p.rule,
+            DeltaSink::default(),
+            None,
+        )
+        .unwrap();
+        let reshaped = reshape_from_deltas(&summary, &deltas, &p.config);
+        inputs.push(ProfileInputs::new(&p.config, &reshaped));
+        rows.push(SweepRow {
+            bench: p.bench.clone(),
+            config_name: p.config.name.clone(),
+            tech: p.config.tech,
+            cim_levels: p.config.cim_levels,
+            macr: outcome.macr,
+            committed: summary.committed,
+            cycles: summary.cycles,
+            removed: reshaped.removed,
+            cim_ops: reshaped.cim_op_count,
+            result: Default::default(),
+        });
+    }
+    let mut backend = NativeBackend;
+    let results = backend.evaluate_batch(&inputs).unwrap();
+    for (r, res) in rows.iter_mut().zip(results) {
+        r.result = res;
+    }
+    rows
+}
+
+#[test]
+fn t_techs_by_p_placements_run_exactly_p_analyses() {
+    let points = grid_points();
+    assert_eq!(points.len(), 12);
+    let coord = Coordinator::new(opts(None));
+    let (rows, stats) = coord
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(rows.len(), 12);
+    assert_eq!(stats.simulator_runs, 1, "one geometry, one simulation");
+    assert_eq!(
+        stats.analyses_run,
+        PLACEMENTS.len() as u64,
+        "P analyses, not T*P = {}",
+        points.len()
+    );
+    assert_eq!(stats.analyses_cached, 0);
+    assert_eq!(
+        stats.replays_skipped,
+        (points.len() - 1) as u64,
+        "every point but the pass owner skips its replay"
+    );
+}
+
+#[test]
+fn factored_rows_are_byte_identical_to_the_unfactored_path() {
+    let points = grid_points();
+    let o = opts(None);
+    let (factored, _) = Coordinator::new(o.clone())
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    let reference = unfactored_rows(&points, &o);
+
+    // canonical row serialization, point by point
+    assert_eq!(dump_rows(&factored), dump_rows(&reference));
+
+    // and every rendering of the standard sweep report
+    let a = Report::new("sweep results").with_section(sweep_section(&factored));
+    let b = Report::new("sweep results").with_section(sweep_section(&reference));
+    assert_eq!(a.render_table(), b.render_table());
+    assert_eq!(a.render_csv(), b.render_csv());
+    assert_eq!(a.render_json(), b.render_json());
+}
+
+#[test]
+fn artifact_store_serves_cross_process_resumes_without_reanalysis() {
+    let dir = tmp_dir("store");
+    std::fs::remove_dir_all(&dir).ok();
+    let points = grid_points();
+
+    // cold populate: one simulation, P analyses, all persisted
+    let (cold, s_cold) = Coordinator::new(opts(Some(dir.clone())))
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(s_cold.simulator_runs, 1);
+    assert_eq!(s_cold.analyses_run, PLACEMENTS.len() as u64);
+
+    // fully-warm resume (fresh coordinator = fresh process state): rows
+    // come straight from the result cache
+    let (warm, s_warm) = Coordinator::new(opts(Some(dir.clone())))
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(s_warm.rows_from_cache, points.len());
+    assert_eq!(s_warm.analyses_run, 0);
+    assert_eq!(dump_rows(&cold), dump_rows(&warm));
+
+    // drop the result cache, keep traces/ + analysis/: every row
+    // recomputes but the artifact store feeds the fold directly — no
+    // simulation, no replay, no analysis
+    std::fs::remove_file(dir.join("results.jsonl")).unwrap();
+    let (refolded, s3) = Coordinator::new(opts(Some(dir.clone())))
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(s3.rows_from_cache, 0);
+    assert_eq!(s3.rows_computed, points.len());
+    assert_eq!(s3.simulator_runs, 0);
+    assert_eq!(s3.trace_disk_hits, 0, "artifacts make the replay unnecessary");
+    assert_eq!(s3.analyses_run, 0);
+    assert_eq!(s3.analyses_cached, PLACEMENTS.len() as u64);
+    assert_eq!(s3.replays_skipped, points.len() as u64);
+    assert_eq!(dump_rows(&cold), dump_rows(&refolded));
+
+    // drop the artifacts too, keep only traces/: one chunked replay fans
+    // out into all P analyses — still zero simulations
+    std::fs::remove_file(dir.join("results.jsonl")).unwrap();
+    std::fs::remove_dir_all(dir.join("analysis")).unwrap();
+    let (replayed, s4) = Coordinator::new(opts(Some(dir.clone())))
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(s4.simulator_runs, 0);
+    assert_eq!(s4.trace_disk_hits, 1);
+    assert_eq!(s4.analyses_run, PLACEMENTS.len() as u64);
+    assert_eq!(dump_rows(&cold), dump_rows(&replayed));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn locality_rules_get_their_own_analyses() {
+    // same trace + placement under two locality rules must not share an
+    // artifact: 2 rules × 2 techs = 4 points, 2 analyses, 1 simulation
+    let base = SystemConfig::preset("c1").unwrap();
+    let mut cfgs = Vec::new();
+    for tech in [Technology::SRAM, Technology::FEFET] {
+        let mut c = base.clone().with_tech(tech);
+        c.name = format!("c1-{}", tech.name());
+        cfgs.push(c);
+    }
+    let mut points = cross(&["lcs"], &cfgs, LocalityRule::AnyCache);
+    points.extend(cross(&["lcs"], &cfgs, LocalityRule::SameBank));
+    let (rows, stats) = Coordinator::new(opts(None))
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(rows.len(), 4);
+    assert_eq!(stats.simulator_runs, 1);
+    assert_eq!(stats.analyses_run, 2, "each rule needs its own analysis");
+}

@@ -30,9 +30,10 @@ struct BothSinks {
 }
 
 impl CandidateSink for BothSinks {
-    fn on_candidate(&mut self, rec: &CandidateRecord) {
+    fn on_candidate(&mut self, rec: CandidateRecord) {
+        // fold by reference first, then let the collector take ownership
+        self.deltas.fold(&rec);
         self.cands.on_candidate(rec);
-        self.deltas.on_candidate(rec);
     }
 }
 

@@ -92,9 +92,10 @@ fn superset_resume_computes_only_the_delta() {
     assert_eq!(s1.simulator_runs, 1);
 
     // superset sweep: adds the FeFET variant of the *same geometry*.
-    // The new design point is a result-cache miss, but its trace comes
-    // from the spill store written by the first (separate) coordinator —
-    // zero new simulator invocations.
+    // The new design point is a result-cache miss, but tech variants
+    // share the analysis key, so the artifact written by the first
+    // (separate) coordinator serves it — zero new simulator invocations
+    // and zero replays: only the energy fold runs.
     let superset = cross(&["lcs"], &[sram, fefet], LocalityRule::AnyCache);
     let (rows, s2) = Coordinator::new(opts(Some(dir.clone()), true))
         .run_sweep_with_stats(&superset, &mut NativeBackend)
@@ -102,8 +103,10 @@ fn superset_resume_computes_only_the_delta() {
     assert_eq!(rows.len(), 2);
     assert_eq!(s2.rows_from_cache, 1);
     assert_eq!(s2.rows_computed, 1);
-    assert_eq!(s2.simulator_runs, 0, "trace must come from the disk spill");
-    assert_eq!(s2.trace_disk_hits, 1);
+    assert_eq!(s2.simulator_runs, 0, "trace must not be re-simulated");
+    assert_eq!(s2.analyses_run, 0, "artifact must come from the disk store");
+    assert_eq!(s2.analyses_cached, 1);
+    assert_eq!(s2.replays_skipped, 1);
     assert_ne!(rows[0].tech, rows[1].tech);
     std::fs::remove_dir_all(&dir).ok();
 }
