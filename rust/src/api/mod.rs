@@ -38,7 +38,7 @@ use crate::analyzer::{LocalityRule, StreamOutcome};
 use crate::asm::Program;
 use crate::config::{CimLevels, SystemConfig, Technology};
 use crate::coordinator::{cross, Coordinator, SweepOptions, SweepRow, SweepStats};
-use crate::energy::calib;
+use crate::energy::{calib, device};
 use crate::pipeline::run_pipelined;
 use crate::probes::TraceSummary;
 use crate::profiler::ProfileInputs;
@@ -399,18 +399,51 @@ impl Evaluation {
         configs: &[SystemConfig],
         backend: &mut dyn Backend,
     ) -> Result<Sweep> {
+        self.rows_for_on(&Coordinator::new(self.sweep_options()), configs, backend)
+    }
+
+    /// The sweep core on a caller-provided coordinator: the driver's
+    /// in-process analysis memo outlives this call, so repeated
+    /// evaluations on one coordinator dedupe the analysis stage even
+    /// without a cache dir.  The evaluation's own options (not the
+    /// coordinator's) size the sweep.
+    fn rows_for_on(
+        &self,
+        coord: &Coordinator,
+        configs: &[SystemConfig],
+        backend: &mut dyn Backend,
+    ) -> Result<Sweep> {
         let benches = self.bench_list();
         let bench_refs: Vec<&str> = benches.iter().map(|s| s.as_str()).collect();
         let points = cross(&bench_refs, configs, self.rule);
         let t0 = std::time::Instant::now();
-        let (rows, stats) = Coordinator::new(self.sweep_options())
-            .run_sweep_with_stats(&points, backend)?;
+        let (rows, stats) =
+            coord.run_sweep_with_stats_using(&points, &self.sweep_options(), backend)?;
         Ok(Sweep {
             rows,
             stats,
             elapsed_secs: t0.elapsed().as_secs_f64(),
             backend: backend.name(),
         })
+    }
+
+    /// [`Evaluation::rows`] on a caller-provided warm [`Coordinator`] —
+    /// the serving entry point (`eva-cim serve` keeps one coordinator for
+    /// the process lifetime and routes every request through here).
+    pub fn rows_on(&self, coord: &Coordinator) -> Result<Sweep> {
+        let configs = self.config_list()?;
+        let mut backend = self.backend_for(&configs)?;
+        self.rows_for_on(coord, &configs, backend.as_mut())
+    }
+
+    /// [`Evaluation::run`] on a caller-provided warm [`Coordinator`].
+    pub fn run_on(&self, coord: &Coordinator) -> Result<Report> {
+        Ok(Self::sweep_report(self.rows_on(coord)?))
+    }
+
+    /// [`Evaluation::explore`] on a caller-provided warm [`Coordinator`].
+    pub fn explore_on(&self, coord: &Coordinator) -> Result<Report> {
+        self.explore_report(self.rows_on(coord)?)
     }
 
     /// Run the sweep and report every design point (bench × config grid
@@ -577,6 +610,48 @@ pub fn sweep_section(rows: &[SweepRow]) -> Section {
         ]);
     }
     s
+}
+
+/// The `eva-cim list` catalog — benchmarks (Table IV), config presets,
+/// registered technologies and CiM levels — as a structured [`Report`].
+///
+/// Shared verbatim by the CLI `list` command and the service's
+/// `GET /list`, so both render byte-identical output.
+pub fn list_report() -> Report {
+    let mut benches = Section::new("benchmarks (Table IV)", &["key", "name"]);
+    for n in workloads::NAMES {
+        benches.row(vec![Cell::str(n), Cell::str(workloads::display_name(n))]);
+    }
+    let mut presets = Section::new("config presets", &["preset", "L1", "L2"]);
+    for p in SystemConfig::preset_names() {
+        let c = SystemConfig::preset(p).unwrap();
+        presets.row(vec![
+            Cell::str(*p),
+            Cell::str(c.l1d.pretty()),
+            Cell::str(c.l2.pretty()),
+        ]);
+    }
+    let mut techs = Section::new(
+        "technologies (--tech; extend via --tech-file or [tech.<name>])",
+        &["tech", "kind", "aliases"],
+    );
+    for tech in Technology::all() {
+        let m = device::model_of(tech);
+        techs.row(vec![
+            Cell::str(tech.name()),
+            Cell::str(if device::is_builtin(tech) { "built-in" } else { "custom" }),
+            Cell::str(m.aliases.join(", ")),
+        ]);
+    }
+    let mut cims = Section::new("cim levels (--cim)", &["name"]);
+    for c in [CimLevels::None, CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both] {
+        cims.row(vec![Cell::str(c.name())]);
+    }
+    Report::new("list")
+        .with_section(benches)
+        .with_section(presets)
+        .with_section(techs)
+        .with_section(cims)
 }
 
 /// The `config` column of the explore grid: the row's configuration name

@@ -11,6 +11,10 @@ use super::program::{DataBuilder, Program};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Label(usize);
 
+/// The program-under-construction: emitted instructions, labels awaiting
+/// resolution, and the data image.  One emitter method per opcode (plus
+/// the usual pseudo-instructions: `li`, `mv`, `jump`, `ret`), each
+/// returning `&mut Self` for chaining.
 #[derive(Debug)]
 pub struct Asm {
     name: String,
@@ -20,10 +24,13 @@ pub struct Asm {
     label_names: Vec<String>,
     /// (instruction index, label) pairs whose imm awaits resolution
     fixups: Vec<(usize, Label)>,
+    /// the workload's initial data-memory image (allocate via
+    /// [`DataBuilder::alloc_i32`] et al.; folded in by [`Asm::assemble`])
     pub data: DataBuilder,
 }
 
 impl Asm {
+    /// An empty program-under-construction.
     pub fn new(name: &str) -> Self {
         Self {
             name: name.to_string(),
@@ -35,10 +42,12 @@ impl Asm {
         }
     }
 
+    /// Instructions emitted so far (the next instruction's index).
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
 
+    /// No instructions emitted yet?
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
     }
@@ -71,71 +80,93 @@ impl Asm {
     }
 
     // ---- integer reg-reg ---------------------------------------------------
+    /// `rd = rs1 + rs2`
     pub fn add(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Add, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 - rs2`
     pub fn sub(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Sub, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 & rs2`
     pub fn and(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::And, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 | rs2`
     pub fn or(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Or, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 ^ rs2`
     pub fn xor(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Xor, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 << rs2` (logical)
     pub fn sll(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Sll, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 >> rs2` (logical)
     pub fn srl(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Srl, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 >> rs2` (arithmetic)
     pub fn sra(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Sra, rd, rs1, rs2, 0))
     }
+    /// `rd = (rs1 < rs2)` signed
     pub fn slt(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Slt, rd, rs1, rs2, 0))
     }
+    /// `rd = (rs1 < rs2)` unsigned
     pub fn sltu(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Sltu, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 * rs2`
     pub fn mul(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Mul, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 / rs2` (signed)
     pub fn div(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Div, rd, rs1, rs2, 0))
     }
+    /// `rd = rs1 % rs2` (signed)
     pub fn rem(&mut self, rd: RegId, rs1: RegId, rs2: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Rem, rd, rs1, rs2, 0))
     }
 
     // ---- integer reg-imm ---------------------------------------------------
+    /// `rd = rs1 + imm`
     pub fn addi(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Addi, rd, rs1, R0, imm))
     }
+    /// `rd = rs1 & imm`
     pub fn andi(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Andi, rd, rs1, R0, imm))
     }
+    /// `rd = rs1 | imm`
     pub fn ori(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Ori, rd, rs1, R0, imm))
     }
+    /// `rd = rs1 ^ imm`
     pub fn xori(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Xori, rd, rs1, R0, imm))
     }
+    /// `rd = rs1 << imm` (logical)
     pub fn slli(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Slli, rd, rs1, R0, imm))
     }
+    /// `rd = rs1 >> imm` (logical)
     pub fn srli(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Srli, rd, rs1, R0, imm))
     }
+    /// `rd = rs1 >> imm` (arithmetic)
     pub fn srai(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Srai, rd, rs1, R0, imm))
     }
+    /// `rd = (rs1 < imm)` signed
     pub fn slti(&mut self, rd: RegId, rs1: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Slti, rd, rs1, R0, imm))
     }
+    /// `rd = imm << 12` (load upper immediate)
     pub fn lui(&mut self, rd: RegId, imm: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Lui, rd, R0, R0, imm))
     }
@@ -143,57 +174,73 @@ impl Asm {
     pub fn li(&mut self, rd: RegId, value: i32) -> &mut Self {
         self.addi(rd, R0, value)
     }
+    /// `rd = rs` (register move pseudo-instruction).
     pub fn mv(&mut self, rd: RegId, rs: RegId) -> &mut Self {
         self.addi(rd, rs, 0)
     }
 
     // ---- memory --------------------------------------------------------------
+    /// `rd = mem32[base + off]`
     pub fn lw(&mut self, rd: RegId, base: RegId, off: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Lw, rd, base, R0, off))
     }
+    /// `mem32[base + off] = value`
     pub fn sw(&mut self, value: RegId, base: RegId, off: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Sw, R0, base, value, off))
     }
+    /// `rd = mem8[base + off]` (sign-extended)
     pub fn lb(&mut self, rd: RegId, base: RegId, off: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Lb, rd, base, R0, off))
     }
+    /// `mem8[base + off] = value`
     pub fn sb(&mut self, value: RegId, base: RegId, off: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Sb, R0, base, value, off))
     }
+    /// `f{fd} = mem32[base + off]` (float load; `fd` is a float index)
     pub fn flw(&mut self, fd: u8, base: RegId, off: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Flw, freg(fd), base, R0, off))
     }
+    /// `mem32[base + off] = f{fs}` (float store; `fs` is a float index)
     pub fn fsw(&mut self, fs: u8, base: RegId, off: i32) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fsw, R0, base, freg(fs), off))
     }
 
     // ---- branches (label-based) ------------------------------------------
+    /// Branch to `l` if `rs1 == rs2`.
     pub fn beq(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
         self.emit_branch(Opcode::Beq, rs1, rs2, l)
     }
+    /// Branch to `l` if `rs1 != rs2`.
     pub fn bne(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
         self.emit_branch(Opcode::Bne, rs1, rs2, l)
     }
+    /// Branch to `l` if `rs1 < rs2` (signed).
     pub fn blt(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
         self.emit_branch(Opcode::Blt, rs1, rs2, l)
     }
+    /// Branch to `l` if `rs1 >= rs2` (signed).
     pub fn bge(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
         self.emit_branch(Opcode::Bge, rs1, rs2, l)
     }
+    /// Branch to `l` if `rs1 < rs2` (unsigned).
     pub fn bltu(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
         self.emit_branch(Opcode::Bltu, rs1, rs2, l)
     }
+    /// Branch to `l` if `rs1 >= rs2` (unsigned).
     pub fn bgeu(&mut self, rs1: RegId, rs2: RegId, l: Label) -> &mut Self {
         self.emit_branch(Opcode::Bgeu, rs1, rs2, l)
     }
+    /// Unconditional jump to `l` (link discarded).
     pub fn jump(&mut self, l: Label) -> &mut Self {
         self.fixups.push((self.instrs.len(), l));
         self.emit(Instruction::new(Opcode::Jal, R0, R0, R0, 0))
     }
+    /// Jump-and-link to `l` (`rd` receives the return index).
     pub fn jal(&mut self, rd: RegId, l: Label) -> &mut Self {
         self.fixups.push((self.instrs.len(), l));
         self.emit(Instruction::new(Opcode::Jal, rd, R0, R0, 0))
     }
+    /// Indirect jump-and-link through `rs1`.
     pub fn jalr(&mut self, rd: RegId, rs1: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Jalr, rd, rs1, R0, 0))
     }
@@ -203,44 +250,57 @@ impl Asm {
     }
 
     // ---- floating point ----------------------------------------------------
+    /// `f{fd} = f{fs1} + f{fs2}`
     pub fn fadd(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fadd, freg(fd), freg(fs1), freg(fs2), 0))
     }
+    /// `f{fd} = f{fs1} - f{fs2}`
     pub fn fsub(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fsub, freg(fd), freg(fs1), freg(fs2), 0))
     }
+    /// `f{fd} = f{fs1} * f{fs2}`
     pub fn fmul(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fmul, freg(fd), freg(fs1), freg(fs2), 0))
     }
+    /// `f{fd} = f{fs1} / f{fs2}`
     pub fn fdiv(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fdiv, freg(fd), freg(fs1), freg(fs2), 0))
     }
+    /// `f{fd} = min(f{fs1}, f{fs2})`
     pub fn fmin(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fmin, freg(fd), freg(fs1), freg(fs2), 0))
     }
+    /// `f{fd} = max(f{fs1}, f{fs2})`
     pub fn fmax(&mut self, fd: u8, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fmax, freg(fd), freg(fs1), freg(fs2), 0))
     }
+    /// `rd(int) = (f{fs1} == f{fs2})`
     pub fn feq(&mut self, rd: RegId, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Feq, rd, freg(fs1), freg(fs2), 0))
     }
+    /// `rd(int) = (f{fs1} < f{fs2})`
     pub fn flt(&mut self, rd: RegId, fs1: u8, fs2: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Flt, rd, freg(fs1), freg(fs2), 0))
     }
+    /// `rd(int) = (i32) f{fs1}` (float → int convert)
     pub fn fcvt_w_s(&mut self, rd: RegId, fs1: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fcvtws, rd, freg(fs1), R0, 0))
     }
+    /// `f{fd} = (f32) rs1` (int → float convert)
     pub fn fcvt_s_w(&mut self, fd: u8, rs1: RegId) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fcvtsw, freg(fd), rs1, R0, 0))
     }
+    /// `f{fd} = f{fs1}` (float register move)
     pub fn fmv(&mut self, fd: u8, fs1: u8) -> &mut Self {
         self.emit(Instruction::new(Opcode::Fmv, freg(fd), freg(fs1), R0, 0))
     }
 
     // ---- misc ----------------------------------------------------------------
+    /// No operation.
     pub fn nop(&mut self) -> &mut Self {
         self.emit(Instruction::nop())
     }
+    /// Stop the simulated program.
     pub fn halt(&mut self) -> &mut Self {
         self.emit(Instruction::halt())
     }

@@ -17,9 +17,12 @@ use crate::isa::{Instruction, Opcode, RegId, NUM_FP_REGS, NUM_INT_REGS, R0};
 
 use super::program::Program;
 
+/// A syntax error, tagged with the 1-based source line it occurred on.
 #[derive(Debug, PartialEq)]
 pub struct ParseError {
+    /// 1-based line number in the source text
     pub line: usize,
+    /// what went wrong (`"unknown mnemonic 'bogus'"`, ...)
     pub msg: String,
 }
 

@@ -7,7 +7,9 @@ use crate::isa::Instruction;
 /// Word-aligned data-memory image entry.
 #[derive(Clone, Debug)]
 pub struct DataWord {
+    /// byte address (word-aligned)
     pub addr: u32,
+    /// initial 32-bit value (f32 values are bit-cast)
     pub value: u32,
 }
 
@@ -17,6 +19,7 @@ pub struct Program {
     /// program name — a shared handle so every per-run summary can carry
     /// it without re-allocating (sweeps clone it once per simulation)
     pub name: Arc<str>,
+    /// the text segment, indexed by absolute instruction index
     pub instrs: Vec<Instruction>,
     /// initial data-memory contents (word granularity)
     pub data: Vec<DataWord>,
@@ -27,6 +30,7 @@ pub struct Program {
 }
 
 impl Program {
+    /// An empty program with a name.
     pub fn new(name: &str) -> Self {
         Self { name: name.into(), ..Default::default() }
     }
@@ -47,6 +51,7 @@ impl Program {
         })
     }
 
+    /// Base address of a named data symbol.
     pub fn symbol(&self, name: &str) -> Option<u32> {
         self.symbols
             .iter()
@@ -73,6 +78,7 @@ pub struct DataBuilder {
 }
 
 impl DataBuilder {
+    /// An empty image starting at address 0.
     pub fn new() -> Self {
         Self::default()
     }

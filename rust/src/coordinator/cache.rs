@@ -8,6 +8,9 @@
 //!   results.jsonl      one design point per line:
 //!                      {"key":"<16-hex fnv1a>","row":{...canonical row...}}
 //!   traces/            spilled simulation traces (trace_store.rs)
+//!   analysis/          stage-2 analysis artifacts (analysis_store.rs):
+//!     analysis-meta.json   {"schema": <analyzer schema>} — version stamp
+//!     artifacts.jsonl      {"art":{...},"key":"<16-hex fnv1a>"} per line
 //! ```
 //!
 //! Appends are the only mutation, so concurrent sweeps sharing a cache

@@ -298,7 +298,24 @@ impl Coordinator {
         points: &[SweepPoint],
         backend: &mut dyn Backend,
     ) -> Result<(Vec<SweepRow>, SweepStats)> {
-        let opts = &self.opts;
+        self.run_sweep_with_stats_using(points, &self.opts, backend)
+    }
+
+    /// [`Coordinator::run_sweep_with_stats`] with per-call options.
+    ///
+    /// This is the serving seam: a process-lifetime coordinator (one
+    /// analysis memo, one set of on-disk stores) can run sweeps whose
+    /// sizing knobs differ per request — `eva-cim serve` hands every
+    /// request's options here while `self.opts` only provides the
+    /// defaults.  Sharing the memo across heterogeneous options is safe
+    /// because artifacts are looked up by [`key::analysis_key`], which
+    /// already embeds every option that affects the analysis.
+    pub fn run_sweep_with_stats_using(
+        &self,
+        points: &[SweepPoint],
+        opts: &SweepOptions,
+        backend: &mut dyn Backend,
+    ) -> Result<(Vec<SweepRow>, SweepStats)> {
         let mut stats = SweepStats { points: points.len(), ..Default::default() };
 
         let result_cache = match &opts.cache_dir {
@@ -721,8 +738,9 @@ fn group_label(g: &TraceGroup, rep: &SweepPoint) -> String {
     )
 }
 
-/// Best-effort rendering of a contained worker panic payload.
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// Best-effort rendering of a contained worker panic payload (shared with
+/// the serving layer's request-handler containment).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

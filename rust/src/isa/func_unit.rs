@@ -4,25 +4,37 @@
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum FuncUnit {
+    /// integer ALU (adds, logic, shifts, compares)
     IntAlu = 0,
+    /// integer multiplier
     IntMul,
+    /// integer divider
     IntDiv,
+    /// float ALU (add/sub, min/max, compares, converts, moves)
     FpAlu,
+    /// float multiplier
     FpMul,
+    /// float divider
     FpDiv,
+    /// branch/jump unit
     Branch,
+    /// memory-read port (address generation + cache access)
     MemRead,
+    /// memory-write port
     MemWrite,
 }
 
+/// Number of functional units (dense indices `0..NUM_FUNC_UNITS`).
 pub const NUM_FUNC_UNITS: usize = 9;
 
 impl FuncUnit {
+    /// Every unit, in index order.
     pub fn all() -> [FuncUnit; NUM_FUNC_UNITS] {
         use FuncUnit::*;
         [IntAlu, IntMul, IntDiv, FpAlu, FpMul, FpDiv, Branch, MemRead, MemWrite]
     }
 
+    /// Snake-case counter name (`"int_alu"`, `"mem_read"`, ...).
     pub fn name(&self) -> &'static str {
         use FuncUnit::*;
         match self {
@@ -38,6 +50,7 @@ impl FuncUnit {
         }
     }
 
+    /// Dense array index (the discriminant).
     pub fn index(&self) -> usize {
         *self as usize
     }

@@ -19,8 +19,11 @@ pub use func_unit::FuncUnit;
 /// `f0`..`f15` are float and live at ids 32..48.
 pub type RegId = u8;
 
+/// Number of integer registers (`r0`..`r31`).
 pub const NUM_INT_REGS: u8 = 32;
+/// Number of float registers (`f0`..`f15`).
 pub const NUM_FP_REGS: u8 = 16;
+/// Total register-file size (integer + float namespaces).
 pub const NUM_REGS: u8 = NUM_INT_REGS + NUM_FP_REGS;
 
 /// Zero register (always reads 0; writes discarded).
@@ -39,6 +42,7 @@ pub const fn freg(i: u8) -> RegId {
     NUM_INT_REGS + i
 }
 
+/// Assembly name of a register id (`"r5"`, `"f3"`).
 pub fn reg_name(r: RegId) -> String {
     if r < NUM_INT_REGS {
         format!("r{r}")
@@ -48,69 +52,118 @@ pub fn reg_name(r: RegId) -> String {
 }
 
 /// EVA32 opcodes.
+///
+/// Grouped as: integer register-register, integer register-immediate,
+/// memory, control flow (branch/jump targets are *absolute instruction
+/// indices*), f32 floating point, and misc.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum Opcode {
-    // integer register-register
+    /// `rd = rs1 + rs2`
     Add = 0,
+    /// `rd = rs1 - rs2`
     Sub,
+    /// `rd = rs1 & rs2`
     And,
+    /// `rd = rs1 | rs2`
     Or,
+    /// `rd = rs1 ^ rs2`
     Xor,
+    /// `rd = rs1 << rs2` (logical)
     Sll,
+    /// `rd = rs1 >> rs2` (logical)
     Srl,
+    /// `rd = rs1 >> rs2` (arithmetic)
     Sra,
+    /// `rd = (rs1 < rs2)` signed
     Slt,
+    /// `rd = (rs1 < rs2)` unsigned
     Sltu,
+    /// `rd = rs1 * rs2`
     Mul,
+    /// `rd = rs1 / rs2` (signed; 0-divisor yields 0)
     Div,
+    /// `rd = rs1 % rs2` (signed; 0-divisor yields rs1)
     Rem,
-    // integer register-immediate
+    /// `rd = rs1 + imm`
     Addi,
+    /// `rd = rs1 & imm`
     Andi,
+    /// `rd = rs1 | imm`
     Ori,
+    /// `rd = rs1 ^ imm`
     Xori,
+    /// `rd = rs1 << imm` (logical)
     Slli,
+    /// `rd = rs1 >> imm` (logical)
     Srli,
+    /// `rd = rs1 >> imm` (arithmetic)
     Srai,
+    /// `rd = (rs1 < imm)` signed
     Slti,
+    /// `rd = imm << 12` (load upper immediate)
     Lui,
-    // memory
+    /// `rd = mem32[rs1 + imm]`
     Lw,
+    /// `mem32[rs1 + imm] = rs2`
     Sw,
+    /// `rd = mem8[rs1 + imm]` (sign-extended)
     Lb,
+    /// `mem8[rs1 + imm] = rs2`
     Sb,
+    /// `fd = mem32[rs1 + imm]` (float load)
     Flw,
+    /// `mem32[rs1 + imm] = fs2` (float store)
     Fsw,
-    // control flow (branch targets are *instruction indices*, absolute)
+    /// branch to `imm` if `rs1 == rs2`
     Beq,
+    /// branch to `imm` if `rs1 != rs2`
     Bne,
+    /// branch to `imm` if `rs1 < rs2` (signed)
     Blt,
+    /// branch to `imm` if `rs1 >= rs2` (signed)
     Bge,
+    /// branch to `imm` if `rs1 < rs2` (unsigned)
     Bltu,
+    /// branch to `imm` if `rs1 >= rs2` (unsigned)
     Bgeu,
+    /// `rd = next index; jump imm`
     Jal,
+    /// `rd = next index; jump rs1 + imm`
     Jalr,
-    // floating point (f32)
+    /// `fd = fs1 + fs2`
     Fadd,
+    /// `fd = fs1 - fs2`
     Fsub,
+    /// `fd = fs1 * fs2`
     Fmul,
+    /// `fd = fs1 / fs2`
     Fdiv,
+    /// `fd = min(fs1, fs2)`
     Fmin,
+    /// `fd = max(fs1, fs2)`
     Fmax,
-    Feq,  // rd(int) = (fs1 == fs2)
-    Flt,  // rd(int) = (fs1 < fs2)
-    Fcvtws, // rd(int) = (i32) fs1
-    Fcvtsw, // fd = (f32) rs1
-    Fmv,    // fd = fs1
-    // misc
+    /// `rd(int) = (fs1 == fs2)`
+    Feq,
+    /// `rd(int) = (fs1 < fs2)`
+    Flt,
+    /// `rd(int) = (i32) fs1` (float → int convert)
+    Fcvtws,
+    /// `fd = (f32) rs1` (int → float convert)
+    Fcvtsw,
+    /// `fd = fs1` (float register move)
+    Fmv,
+    /// no operation
     Nop,
+    /// stop the simulated program
     Halt,
 }
 
+/// Number of opcodes (contiguous discriminants `0..NUM_OPCODES`).
 pub const NUM_OPCODES: u8 = Opcode::Halt as u8 + 1;
 
 impl Opcode {
+    /// Decode an opcode byte; `None` when out of range.
     pub fn from_u8(x: u8) -> Option<Opcode> {
         if x < NUM_OPCODES {
             // SAFETY: repr(u8), contiguous discriminants 0..NUM_OPCODES
@@ -120,6 +173,7 @@ impl Opcode {
         }
     }
 
+    /// Assembly mnemonic (`"add"`, `"fcvt.w.s"`, ...).
     pub fn mnemonic(&self) -> &'static str {
         use Opcode::*;
         match self {
@@ -175,24 +229,29 @@ impl Opcode {
         }
     }
 
+    /// Look an opcode up by its assembly mnemonic.
     pub fn from_mnemonic(s: &str) -> Option<Opcode> {
         (0..NUM_OPCODES)
             .filter_map(Opcode::from_u8)
             .find(|op| op.mnemonic() == s)
     }
 
+    /// Memory load (integer or float)?
     pub fn is_load(&self) -> bool {
         matches!(self, Opcode::Lw | Opcode::Lb | Opcode::Flw)
     }
 
+    /// Memory store (integer or float)?
     pub fn is_store(&self) -> bool {
         matches!(self, Opcode::Sw | Opcode::Sb | Opcode::Fsw)
     }
 
+    /// Any memory access (load or store)?
     pub fn is_mem(&self) -> bool {
         self.is_load() || self.is_store()
     }
 
+    /// Any control-flow instruction (conditional branch or jump)?
     pub fn is_branch(&self) -> bool {
         matches!(
             self,
@@ -220,6 +279,7 @@ impl Opcode {
         )
     }
 
+    /// Floating-point instruction (including float loads/stores)?
     pub fn is_fp(&self) -> bool {
         matches!(
             self,
@@ -294,22 +354,30 @@ impl Opcode {
 /// * jal:           `rd, imm(target)` — `jalr`: `rd, rs1, imm`
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Instruction {
+    /// operation
     pub op: Opcode,
+    /// destination register (meaning depends on the class above)
     pub rd: RegId,
+    /// first source register / address base
     pub rs1: RegId,
+    /// second source register / store data
     pub rs2: RegId,
+    /// immediate operand / memory offset / branch target index
     pub imm: i32,
 }
 
 impl Instruction {
+    /// Assemble an instruction from its raw fields.
     pub fn new(op: Opcode, rd: RegId, rs1: RegId, rs2: RegId, imm: i32) -> Self {
         Self { op, rd, rs1, rs2, imm }
     }
 
+    /// The canonical `nop`.
     pub fn nop() -> Self {
         Self::new(Opcode::Nop, R0, R0, R0, 0)
     }
 
+    /// The canonical `halt`.
     pub fn halt() -> Self {
         Self::new(Opcode::Halt, R0, R0, R0, 0)
     }

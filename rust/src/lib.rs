@@ -41,19 +41,18 @@
 
 pub mod analyzer;
 pub mod api;
-#[allow(missing_docs)]
 pub mod asm;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod experiments;
-#[allow(missing_docs)]
 pub mod isa;
 pub mod pipeline;
 pub mod probes;
 pub mod profiler;
 pub mod reshape;
 pub mod runtime;
+pub mod serve;
 #[allow(missing_docs)]
 pub mod sim;
 #[allow(missing_docs)]

@@ -11,6 +11,9 @@
 //!               [--cache-dir DIR] [--resume]
 //! eva-cim explore --bench <b> [--techs all] [--configs c1,c2,c3]
 //!               [--cache-dir DIR] [--resume] [--csv out.csv]
+//! eva-cim serve [--addr 127.0.0.1:7878] [--http-workers N] [--queue N]
+//!               [--jobs N] [--cache-dir DIR]  long-lived JSON service
+//!                                             (see docs/SERVING.md)
 //! eva-cim table <table3|table5|table6|fig11|fig12|fig13|fig14|fig15|fig16>
 //!               [--cache-dir DIR] [--resume] [--jobs N]
 //! eva-cim validate                               Table V + Fig 12
@@ -266,41 +269,37 @@ fn err_str(e: anyhow::Error) -> String {
 }
 
 fn cmd_list(args: &cli::Args) -> Result<(), String> {
-    let mut benches = Section::new("benchmarks (Table IV)", &["key", "name"]);
-    for n in workloads::NAMES {
-        benches.row(vec![Cell::str(n), Cell::str(workloads::display_name(n))]);
+    // the catalog lives in the facade so `GET /list` serves the same bytes
+    emit(&eva_cim::api::list_report(), args)
+}
+
+/// `eva-cim serve`: one warm process answering evaluate/sweep/explore/list
+/// requests over the shared caches — see `docs/SERVING.md` for the
+/// endpoint reference and `eva_cim::serve` for the machinery.
+fn cmd_serve(args: &cli::Args) -> Result<(), String> {
+    let mut base = eval_from_args(args)?;
+    if args.flag("resume").is_none() {
+        // a long-lived service wants warm starts by default; an explicit
+        // `--resume false` still wins
+        base = base.resume(true);
     }
-    let mut presets = Section::new("config presets", &["preset", "L1", "L2"]);
-    for p in SystemConfig::preset_names() {
-        let c = SystemConfig::preset(p).unwrap();
-        presets.row(vec![
-            Cell::str(*p),
-            Cell::str(c.l1d.pretty()),
-            Cell::str(c.l2.pretty()),
-        ]);
-    }
-    let mut techs = Section::new(
-        "technologies (--tech; extend via --tech-file or [tech.<name>])",
-        &["tech", "kind", "aliases"],
+    let opts = eva_cim::serve::ServeOptions {
+        addr: args.flag_or("addr", "127.0.0.1:7878"),
+        http_workers: args.usize_flag("http-workers", 4)?,
+        queue: args.usize_flag("queue", 64)?,
+        base,
+    };
+    eva_cim::serve::install_sigint_handler();
+    let server = eva_cim::serve::Server::bind(opts).map_err(err_str)?;
+    eprintln!(
+        "eva-cim serve: listening on http://{} \
+         (endpoints: /health /stats /list /evaluate /sweep /explore; \
+         Ctrl-C drains in-flight jobs and exits)",
+        server.addr()
     );
-    for tech in Technology::all() {
-        let m = device::model_of(tech);
-        techs.row(vec![
-            Cell::str(tech.name()),
-            Cell::str(if device::is_builtin(tech) { "built-in" } else { "custom" }),
-            Cell::str(m.aliases.join(", ")),
-        ]);
-    }
-    let mut cims = Section::new("cim levels (--cim)", &["name"]);
-    for c in [CimLevels::None, CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both] {
-        cims.row(vec![Cell::str(c.name())]);
-    }
-    let report = Report::new("list")
-        .with_section(benches)
-        .with_section(presets)
-        .with_section(techs)
-        .with_section(cims);
-    emit(&report, args)
+    let handle = server.spawn().map_err(err_str)?;
+    handle.join();
+    Ok(())
 }
 
 fn cmd_run(args: &cli::Args) -> Result<(), String> {
@@ -514,7 +513,7 @@ fn cmd_calib(args: &cli::Args) -> Result<(), String> {
     emit(&report, args)
 }
 
-const USAGE: &str = "usage: eva-cim <list|run|asm|sweep|explore|table|validate|sensitivity|calib> [flags]
+const USAGE: &str = "usage: eva-cim <list|run|asm|sweep|explore|serve|table|validate|sensitivity|calib> [flags]
 common flags: --format table|json|csv, --csv <file>, --tech-file <file.toml>
 try: eva-cim list";
 
@@ -546,6 +545,7 @@ fn main() -> ExitCode {
         "asm" => cmd_asm(&args),
         "sweep" => cmd_sweep(&args),
         "explore" => cmd_explore(&args),
+        "serve" => cmd_serve(&args),
         "table" => cmd_table(&args),
         "validate" => cmd_validate(&args),
         "sensitivity" => cmd_sensitivity(&args),

@@ -1,0 +1,216 @@
+//! Minimal HTTP/1.1 framing for the evaluation service.
+//!
+//! The offline build environment has no HTTP crate, and the service needs
+//! almost nothing from the protocol: a request line, a `Content-Length`
+//! header, a JSON body in, a JSON body out, `Connection: close`.  This
+//! module implements exactly that over any `Read`/`Write` pair (generic so
+//! the framing is unit-testable without sockets).  Keep-alive, chunked
+//! transfer, multipart and TLS are deliberately out of scope — every
+//! response closes the connection.
+
+use std::io::{Read, Write};
+
+/// Largest accepted request-header block (request line + headers).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Largest accepted request body.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP request: just the parts the service routes on.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// request method (`GET`, `POST`, ...), uppercased by the client
+    pub method: String,
+    /// request path with any `?query` suffix stripped
+    pub path: String,
+    /// raw request body (empty when the request carried none)
+    pub body: String,
+}
+
+/// One response about to be written: status + JSON body + the service's
+/// two observability headers.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// HTTP status code (`200`, `400`, `404`, `405`, `500`, `503`)
+    pub status: u16,
+    /// response body — canonical JSON, newline-terminated
+    pub body: String,
+    /// `X-Eva-Cache` header value (`computed` / `cached` / `shared`);
+    /// omitted on error responses
+    pub cache: Option<&'static str>,
+    /// `X-Eva-Ledger` header value: the canonical JSON sweep ledger
+    /// (single line by construction)
+    pub ledger: Option<String>,
+}
+
+/// Read and frame one HTTP request.
+///
+/// Errors are client-facing strings (the caller turns them into a `400`
+/// envelope): oversized headers/body, a malformed request line, a closed
+/// connection mid-request, or a non-UTF-8 body.
+pub fn read_request<R: Read>(stream: &mut R) -> Result<Request, String> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(i) = find_header_end(&buf) {
+            break i;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err("request headers too large".into());
+        }
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed before a full request".into());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| "non-UTF-8 request headers".to_string())?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| "empty request line".to_string())?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| "request line has no path".to_string())?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| "bad Content-Length header".to_string())?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err("request body too large".into());
+    }
+
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".into());
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body =
+        String::from_utf8(body).map_err(|_| "non-UTF-8 request body".to_string())?;
+    Ok(Request { method, path, body })
+}
+
+/// Serialize one response (status line, headers, body) and flush.
+pub fn write_response<W: Write>(stream: &mut W, r: &Response) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        r.status,
+        reason(r.status),
+        r.body.len()
+    );
+    if let Some(c) = r.cache {
+        head.push_str("X-Eva-Cache: ");
+        head.push_str(c);
+        head.push_str("\r\n");
+    }
+    if let Some(l) = &r.ledger {
+        // the ledger is a single-line canonical JSON object, so it is
+        // header-safe by construction
+        head.push_str("X-Eva-Ledger: ");
+        head.push_str(l);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(r.body.as_bytes())?;
+    stream.flush()
+}
+
+/// Canonical reason phrase for the status codes the service emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_a_post_with_body() {
+        let raw = b"POST /evaluate?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 14\r\n\r\n{\"bench\":\"lcs\"".to_vec();
+        let req = read_request(&mut raw.as_slice()).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/evaluate");
+        assert_eq!(req.body, "{\"bench\":\"lcs\"");
+    }
+
+    #[test]
+    fn frames_a_get_without_body() {
+        let raw = b"GET /health HTTP/1.1\r\n\r\n".to_vec();
+        let req = read_request(&mut raw.as_slice()).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/health");
+        assert_eq!(req.body, "");
+    }
+
+    #[test]
+    fn header_name_is_case_insensitive() {
+        let raw = b"POST /x HTTP/1.1\r\ncontent-LENGTH: 2\r\n\r\nok".to_vec();
+        assert_eq!(read_request(&mut raw.as_slice()).unwrap().body, "ok");
+    }
+
+    #[test]
+    fn truncated_requests_error_cleanly() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc".to_vec();
+        assert!(read_request(&mut raw.as_slice()).is_err());
+        let raw = b"GET /x HTTP/1.1\r\n".to_vec();
+        assert!(read_request(&mut raw.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_up_front() {
+        let raw = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        )
+        .into_bytes();
+        assert!(read_request(&mut raw.as_slice()).is_err());
+    }
+
+    #[test]
+    fn response_carries_observability_headers() {
+        let r = Response {
+            status: 200,
+            body: "{}\n".into(),
+            cache: Some("cached"),
+            ledger: Some("{\"ledger\":\"sweep\"}".into()),
+        };
+        let mut out = Vec::new();
+        write_response(&mut out, &r).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 3\r\n"));
+        assert!(text.contains("X-Eva-Cache: cached\r\n"));
+        assert!(text.contains("X-Eva-Ledger: {\"ledger\":\"sweep\"}\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}\n"));
+    }
+}

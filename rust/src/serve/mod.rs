@@ -1,0 +1,1133 @@
+//! `eva-cim serve` — a long-lived evaluation service over the shared
+//! caches.
+//!
+//! The CLI pays a cold process per query; this module keeps **one warm
+//! process** — one [`Coordinator`] with its process-lifetime analysis
+//! memo, one result/trace/artifact store, one staging pool — and answers
+//! `evaluate` / `sweep` / `explore` requests over plain HTTP/1.1 (std-only
+//! `TcpListener` + worker threads; the offline environment has no HTTP or
+//! async crates).  Responses reuse the canonical-JSON [`Report`] rendering
+//! byte-for-byte: the report **is** the wire format, so a served body is
+//! identical to the CLI's `--format json` stdout for the same query.
+//!
+//! Routes:
+//!
+//! | route            | method | body                                    |
+//! |------------------|--------|-----------------------------------------|
+//! | `/health`        | GET    | liveness probe                          |
+//! | `/stats`         | GET    | cumulative service + sweep-ledger counters |
+//! | `/list`          | GET    | the `eva-cim list` catalog              |
+//! | `/evaluate`      | POST   | one design point (`{"bench": ...}`)     |
+//! | `/sweep`         | POST   | benches × configs × techs grid          |
+//! | `/explore`       | POST   | Pareto grid + frontier                  |
+//!
+//! Observability rides on headers, never on the (byte-stable) body:
+//! `X-Eva-Cache` says whether the answer was `computed` (a simulation or
+//! analysis ran), `cached` (every stage served from the memo/stores), or
+//! `shared` (this request rode on a concurrent identical one), and
+//! `X-Eva-Ledger` carries the canonical JSON sweep ledger
+//! ([`ledger_json`]).  Errors use one JSON envelope:
+//! `{"error":{"code":N,"message":...},"schema":1}`.
+//!
+//! Concurrency model: a nonblocking accept loop feeds a **bounded** job
+//! queue (`--queue`; overflow is answered `503` immediately, applying
+//! backpressure instead of unbounded buffering) drained by a fixed pool of
+//! HTTP workers.  Identical in-flight requests are deduplicated by a
+//! canonical request key — the FNV-1a hash of the normalized request JSON
+//! ([`key::fnv1a`], the same hash family as the design-point keys) — so N
+//! concurrent identical queries run the pipeline once and N−1 riders wait
+//! on a condvar for the published bytes.  `SIGINT` (see
+//! [`install_sigint_handler`]) stops the accept loop, drains every job
+//! already queued, joins the workers and exits.  A panicking request
+//! handler is contained to a `500` envelope ([`crate::coordinator`]'s
+//! worker containment plus a `catch_unwind` here) — it never takes the
+//! pool down.
+
+pub mod http;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::analyzer::LocalityRule;
+use crate::api::{Cell, Evaluation, Report, Section};
+use crate::config::{CimLevels, SystemConfig, Technology};
+use crate::coordinator::{key, ledger_json, panic_message, Coordinator, SweepStats};
+use crate::energy::device;
+use crate::util::json::{self, Json};
+use crate::util::lock_unpoisoned;
+use crate::workloads;
+
+/// Cache-control states reported in the `X-Eva-Cache` header.
+pub const CACHE_COMPUTED: &str = "computed";
+/// See [`CACHE_COMPUTED`]: every stage was served from caches.
+pub const CACHE_CACHED: &str = "cached";
+/// See [`CACHE_COMPUTED`]: the request rode on a concurrent identical one.
+pub const CACHE_SHARED: &str = "shared";
+
+/// How to run the service: bind address, pool sizing, and the base
+/// [`Evaluation`] holding the server-wide defaults (scale, seed, staging
+/// workers, cache dir, backend policy) that every request starts from.
+pub struct ServeOptions {
+    /// bind address, e.g. `127.0.0.1:7878` (port `0` picks a free port —
+    /// the test harness's spawn idiom)
+    pub addr: String,
+    /// HTTP worker threads — the number of requests in flight at once
+    /// (each request additionally stages with the base evaluation's
+    /// `--jobs` staging workers)
+    pub http_workers: usize,
+    /// bounded job-queue capacity; accepted connections beyond it are
+    /// answered `503` immediately
+    pub queue: usize,
+    /// server-wide evaluation defaults; requests override per-field
+    pub base: Evaluation,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            http_workers: 4,
+            queue: 64,
+            base: Evaluation::new(),
+        }
+    }
+}
+
+/// request-scoped endpoint discriminator
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Evaluate,
+    Sweep,
+    Explore,
+}
+
+/// The computed answer for one deduplicated request — what the leader
+/// publishes and every rider clones.
+#[derive(Clone)]
+struct Outcome {
+    status: u16,
+    body: String,
+    ledger: Option<String>,
+    cache: Option<&'static str>,
+}
+
+/// One in-flight computation: riders wait on the condvar until the leader
+/// publishes the outcome.
+struct Slot {
+    followers: AtomicU64,
+    ready: Mutex<Option<Outcome>>,
+    cv: Condvar,
+}
+
+enum Role {
+    Leader(Arc<Slot>),
+    Follower(Arc<Slot>),
+}
+
+/// The in-flight request-dedup map, keyed by the canonical request key.
+struct Inflight {
+    map: Mutex<HashMap<u64, Arc<Slot>>>,
+}
+
+impl Inflight {
+    fn new() -> Self {
+        Self { map: Mutex::new(HashMap::new()) }
+    }
+
+    /// First caller for a key becomes the leader (and must
+    /// [`Inflight::publish`] exactly once); later callers become
+    /// followers of the leader's slot.
+    fn join(&self, key: u64) -> Role {
+        let mut map = lock_unpoisoned(&self.map);
+        match map.get(&key) {
+            Some(slot) => {
+                slot.followers.fetch_add(1, Ordering::SeqCst);
+                Role::Follower(Arc::clone(slot))
+            }
+            None => {
+                let slot = Arc::new(Slot {
+                    followers: AtomicU64::new(0),
+                    ready: Mutex::new(None),
+                    cv: Condvar::new(),
+                });
+                map.insert(key, Arc::clone(&slot));
+                Role::Leader(slot)
+            }
+        }
+    }
+
+    /// Publish the leader's outcome (waking every follower), then retire
+    /// the key so the next identical request starts fresh — which, with a
+    /// warm memo, means `cached`, not `shared`.
+    fn publish(&self, key: u64, slot: &Arc<Slot>, outcome: Outcome) {
+        *lock_unpoisoned(&slot.ready) = Some(outcome);
+        slot.cv.notify_all();
+        lock_unpoisoned(&self.map).remove(&key);
+    }
+}
+
+/// Block until the leader publishes, then clone the outcome.
+fn wait_outcome(slot: &Slot) -> Outcome {
+    let guard = lock_unpoisoned(&slot.ready);
+    let guard = slot
+        .cv
+        .wait_while(guard, |o| o.is_none())
+        .unwrap_or_else(|p| p.into_inner());
+    guard.clone().expect("leader published an outcome")
+}
+
+/// Cumulative service counters, exposed on `GET /stats` and printed as
+/// the drain summary on shutdown.  All atomics: the HTTP workers update
+/// them concurrently.
+#[derive(Default)]
+pub struct ServeStats {
+    requests: AtomicU64,
+    evaluate: AtomicU64,
+    sweep: AtomicU64,
+    explore: AtomicU64,
+    list: AtomicU64,
+    health: AtomicU64,
+    stats_reads: AtomicU64,
+    responses_ok: AtomicU64,
+    client_errors: AtomicU64,
+    server_errors: AtomicU64,
+    queue_rejected: AtomicU64,
+    served_computed: AtomicU64,
+    served_cached: AtomicU64,
+    dedup_shared: AtomicU64,
+    // cumulative sweep ledger (summed over every request's SweepStats)
+    points: AtomicU64,
+    rows_from_cache: AtomicU64,
+    rows_computed: AtomicU64,
+    simulator_runs: AtomicU64,
+    analyses_run: AtomicU64,
+    analyses_cached: AtomicU64,
+    replays_skipped: AtomicU64,
+    trace_disk_hits: AtomicU64,
+}
+
+impl ServeStats {
+    fn note_request(&self, req: &http::Request) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let per_route = match req.path.as_str() {
+            "/evaluate" => &self.evaluate,
+            "/sweep" => &self.sweep,
+            "/explore" => &self.explore,
+            "/list" => &self.list,
+            "/health" => &self.health,
+            "/stats" => &self.stats_reads,
+            _ => return,
+        };
+        per_route.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_response(&self, status: u16) {
+        let bucket = match status {
+            200..=299 => &self.responses_ok,
+            400..=499 => &self.client_errors,
+            _ => &self.server_errors,
+        };
+        bucket.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_cache(&self, cache: Option<&'static str>) {
+        match cache {
+            Some(c) if c == CACHE_COMPUTED => {
+                self.served_computed.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(c) if c == CACHE_CACHED => {
+                self.served_cached.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(c) if c == CACHE_SHARED => {
+                self.dedup_shared.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+
+    fn note_rejected(&self) {
+        self.queue_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one finished sweep's ledger into the cumulative totals.
+    fn absorb(&self, s: &SweepStats) {
+        self.points.fetch_add(s.points as u64, Ordering::Relaxed);
+        self.rows_from_cache
+            .fetch_add(s.rows_from_cache as u64, Ordering::Relaxed);
+        self.rows_computed
+            .fetch_add(s.rows_computed as u64, Ordering::Relaxed);
+        self.simulator_runs.fetch_add(s.simulator_runs, Ordering::Relaxed);
+        self.analyses_run.fetch_add(s.analyses_run, Ordering::Relaxed);
+        self.analyses_cached.fetch_add(s.analyses_cached, Ordering::Relaxed);
+        self.replays_skipped.fetch_add(s.replays_skipped, Ordering::Relaxed);
+        self.trace_disk_hits.fetch_add(s.trace_disk_hits, Ordering::Relaxed);
+    }
+
+    /// The `GET /stats` report: service counters + the cumulative sweep
+    /// ledger, as a regular [`Report`] so the wire shape matches every
+    /// other endpoint.
+    pub fn report(&self) -> Report {
+        let mut service = Section::new("service counters", &["metric", "value"]);
+        for (name, v) in [
+            ("requests", &self.requests),
+            ("evaluate", &self.evaluate),
+            ("sweep", &self.sweep),
+            ("explore", &self.explore),
+            ("list", &self.list),
+            ("health", &self.health),
+            ("stats", &self.stats_reads),
+            ("responses_ok", &self.responses_ok),
+            ("client_errors", &self.client_errors),
+            ("server_errors", &self.server_errors),
+            ("queue_rejected", &self.queue_rejected),
+            ("served_computed", &self.served_computed),
+            ("served_cached", &self.served_cached),
+            ("dedup_shared", &self.dedup_shared),
+        ] {
+            service.row(vec![Cell::str(name), Cell::int(v.load(Ordering::Relaxed))]);
+        }
+        let mut ledger =
+            Section::new("cumulative sweep ledger", &["counter", "value"]);
+        for (name, v) in [
+            ("points", &self.points),
+            ("rows_from_cache", &self.rows_from_cache),
+            ("rows_computed", &self.rows_computed),
+            ("simulator_runs", &self.simulator_runs),
+            ("analyses_run", &self.analyses_run),
+            ("analyses_cached", &self.analyses_cached),
+            ("replays_skipped", &self.replays_skipped),
+            ("trace_disk_hits", &self.trace_disk_hits),
+        ] {
+            ledger.row(vec![Cell::str(name), Cell::int(v.load(Ordering::Relaxed))]);
+        }
+        Report::new("serve stats").with_section(service).with_section(ledger)
+    }
+
+    /// One-line human drain summary (stderr, on shutdown).
+    fn summary(&self) -> String {
+        format!(
+            "{} requests ({} computed, {} cached, {} shared, {} rejected) | \
+             cumulative: {} simulator runs, {} analyses run, {} analyses cached",
+            self.requests.load(Ordering::Relaxed),
+            self.served_computed.load(Ordering::Relaxed),
+            self.served_cached.load(Ordering::Relaxed),
+            self.dedup_shared.load(Ordering::Relaxed),
+            self.queue_rejected.load(Ordering::Relaxed),
+            self.simulator_runs.load(Ordering::Relaxed),
+            self.analyses_run.load(Ordering::Relaxed),
+            self.analyses_cached.load(Ordering::Relaxed),
+        )
+    }
+}
+
+type Router = fn(&ServeState, &http::Request) -> http::Response;
+
+/// Everything the HTTP workers share: the base evaluation, the warm
+/// coordinator, the dedup map and the counters.
+pub struct ServeState {
+    base: Evaluation,
+    coord: Coordinator,
+    inflight: Inflight,
+    stats: ServeStats,
+    router: Router,
+}
+
+impl ServeState {
+    fn new(base: Evaluation, router: Router) -> Self {
+        let coord = Coordinator::new(base.sweep_options());
+        Self {
+            base,
+            coord,
+            inflight: Inflight::new(),
+            stats: ServeStats::default(),
+            router,
+        }
+    }
+
+    /// The cumulative service counters.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+}
+
+/// A bound (but not yet serving) evaluation service.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServeState>,
+    http_workers: usize,
+    queue: usize,
+}
+
+impl Server {
+    /// Bind the listen socket and build the shared state.  Serving starts
+    /// with [`Server::spawn`]; between the two, [`Server::addr`] reports
+    /// the actual address (useful with port `0`).
+    pub fn bind(opts: ServeOptions) -> Result<Server> {
+        Self::bind_with_router(opts, route)
+    }
+
+    fn bind_with_router(opts: ServeOptions, router: Router) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| anyhow!("binding {}: {e}", opts.addr))?;
+        Ok(Server {
+            listener,
+            state: Arc::new(ServeState::new(opts.base, router)),
+            http_workers: opts.http_workers.max(1),
+            queue: opts.queue.max(1),
+        })
+    }
+
+    /// The bound socket address.
+    pub fn addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Start the accept loop and the HTTP worker pool; returns
+    /// immediately with a handle for joining or shutting down.
+    ///
+    /// The accept loop polls a nonblocking listener so it can observe the
+    /// shutdown flags ([`ServerHandle::shutdown`] or `SIGINT`); on
+    /// shutdown it stops accepting, closes the bounded queue, and the
+    /// workers drain every job already accepted before exiting.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        self.listener.set_nonblocking(true)?;
+        let addr = self.listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(self.queue);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::with_capacity(self.http_workers);
+        for _ in 0..self.http_workers {
+            let rx = Arc::clone(&rx);
+            let state = Arc::clone(&self.state);
+            workers.push(std::thread::spawn(move || loop {
+                // exactly one idle worker blocks in recv (it holds the
+                // receiver lock only while waiting); a closed queue ends
+                // the loop — that is the drain-complete signal
+                let next = lock_unpoisoned(&rx).recv();
+                match next {
+                    Ok(mut stream) => handle_conn(&state, &mut stream),
+                    Err(_) => break,
+                }
+            }));
+        }
+
+        let listener = self.listener;
+        let state = Arc::clone(&self.state);
+        let stop_flag = Arc::clone(&stop);
+        let accept = std::thread::spawn(move || {
+            loop {
+                if stop_flag.load(Ordering::SeqCst) || SIGINT.load(Ordering::SeqCst)
+                {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream
+                            .set_read_timeout(Some(Duration::from_secs(30)));
+                        let _ = stream
+                            .set_write_timeout(Some(Duration::from_secs(30)));
+                        match tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(std::sync::mpsc::TrySendError::Full(mut s)) => {
+                                // bounded queue: answer 503 immediately
+                                // instead of buffering without limit
+                                state.stats.note_rejected();
+                                let _ = http::write_response(
+                                    &mut s,
+                                    &error_response(
+                                        503,
+                                        "job queue full; retry later",
+                                    ),
+                                );
+                            }
+                            Err(std::sync::mpsc::TrySendError::Disconnected(
+                                _,
+                            )) => break,
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                }
+            }
+            // graceful drain: close the queue, let the workers finish
+            // everything already accepted, then join them
+            drop(tx);
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+
+        Ok(ServerHandle { addr, stop, accept, state: self.state })
+    }
+}
+
+/// A running service: join it (blocks until `SIGINT`) or shut it down
+/// programmatically.  Either way the bounded queue is drained before the
+/// handle returns.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: std::thread::JoinHandle<()>,
+    state: Arc<ServeState>,
+}
+
+impl ServerHandle {
+    /// The bound socket address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared state (stats) — live while the server runs.
+    pub fn state(&self) -> &ServeState {
+        &self.state
+    }
+
+    /// Block until the accept loop exits (SIGINT or
+    /// [`ServerHandle::shutdown`] from another thread), with the queue
+    /// fully drained; prints the drain summary to stderr.
+    pub fn join(self) {
+        let _ = self.accept.join();
+        eprintln!("eva-cim serve: drained; {}", self.state.stats.summary());
+    }
+
+    /// Request a graceful shutdown and [`ServerHandle::join`] it.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.join();
+    }
+}
+
+/// Process-wide SIGINT flag: the accept loop polls it, so Ctrl-C drains
+/// in-flight jobs instead of killing them mid-sweep.
+static SIGINT: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_sig: i32) {
+    // only async-signal-safe work here: set the flag, nothing else
+    SIGINT.store(true, Ordering::SeqCst);
+}
+
+/// Install a `SIGINT` handler that requests a graceful drain (stop
+/// accepting, finish queued jobs, exit).  Unix-only; a no-op elsewhere.
+/// Uses the libc `signal(2)` symbol directly — the offline environment
+/// has no signal-handling crate.
+pub fn install_sigint_handler() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        // SIGINT is 2 on every unix the toolchain targets
+        let _ = unsafe { signal(2, on_sigint) };
+    }
+}
+
+/// One connection, end to end: frame the request, route it (panics
+/// contained to a 500 envelope), count it, write the response.
+fn handle_conn(state: &ServeState, stream: &mut TcpStream) {
+    let resp = match http::read_request(stream) {
+        Ok(req) => {
+            state.stats.note_request(&req);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (state.router)(state, &req)
+            }))
+            .unwrap_or_else(|p| {
+                error_response(
+                    500,
+                    &format!(
+                        "request handler panicked: {}",
+                        panic_message(p.as_ref())
+                    ),
+                )
+            })
+        }
+        Err(msg) => error_response(400, &msg),
+    };
+    state.stats.note_response(resp.status);
+    let _ = http::write_response(stream, &resp);
+}
+
+/// The service's route table.
+fn route(state: &ServeState, req: &http::Request) -> http::Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => ok_response(health_body()),
+        ("GET", "/stats") => ok_response(state.stats.report().render_json()),
+        ("GET", "/list") => ok_response(crate::api::list_report().render_json()),
+        ("POST", "/evaluate") => handle_eval(state, Kind::Evaluate, req),
+        ("POST", "/sweep") => handle_eval(state, Kind::Sweep, req),
+        ("POST", "/explore") => handle_eval(state, Kind::Explore, req),
+        (_, "/health" | "/stats" | "/list") => {
+            error_response(405, "this endpoint is GET-only")
+        }
+        (_, "/evaluate" | "/sweep" | "/explore") => {
+            error_response(405, "this endpoint takes POST with a JSON body")
+        }
+        _ => error_response(
+            404,
+            &format!(
+                "unknown route '{}' (endpoints: /health /stats /list \
+                 /evaluate /sweep /explore)",
+                req.path
+            ),
+        ),
+    }
+}
+
+/// The three evaluating endpoints share one path: parse + normalize the
+/// request, dedup identical in-flight requests, compute through the warm
+/// coordinator, and attach the cache state + ledger headers.
+fn handle_eval(state: &ServeState, kind: Kind, req: &http::Request) -> http::Response {
+    let text = if req.body.trim().is_empty() { "{}" } else { req.body.as_str() };
+    let body = match json::parse(text) {
+        Ok(b) => b,
+        Err(e) => return error_response(400, &format!("malformed JSON body: {e}")),
+    };
+    let (ev, norm) = match build_request(&state.base, kind, &body) {
+        Ok(x) => x,
+        Err(msg) => return error_response(400, &msg),
+    };
+    // the dedup key: canonical JSON of the *normalized* request (defaults
+    // applied, object keys sorted), hashed with the same FNV-1a the
+    // design-point keys use — formatting/key-order variants collapse
+    let rkey = key::fnv1a(norm.dump().as_bytes());
+
+    let outcome = match state.inflight.join(rkey) {
+        Role::Leader(slot) => {
+            // contain panics here too: a leader that dies without
+            // publishing would hang every follower forever
+            let mut o = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || compute(state, kind, &ev),
+            ))
+            .unwrap_or_else(|p| {
+                error_outcome(
+                    500,
+                    &format!(
+                        "request handler panicked: {}",
+                        panic_message(p.as_ref())
+                    ),
+                )
+            });
+            if o.cache.is_some() && slot.followers.load(Ordering::SeqCst) > 0 {
+                // riders joined while we computed: this answer was shared
+                o.cache = Some(CACHE_SHARED);
+            }
+            state.inflight.publish(rkey, &slot, o.clone());
+            o
+        }
+        Role::Follower(slot) => {
+            let mut o = wait_outcome(&slot);
+            if o.cache.is_some() {
+                o.cache = Some(CACHE_SHARED);
+            }
+            o
+        }
+    };
+    state.stats.note_cache(outcome.cache);
+    http::Response {
+        status: outcome.status,
+        body: outcome.body,
+        cache: outcome.cache,
+        ledger: outcome.ledger,
+    }
+}
+
+/// Run one request's evaluation on the warm coordinator and derive the
+/// cache state from the ledger: `cached` iff no simulation and no
+/// analysis ran (every stage came from the memo/stores), else `computed`.
+fn compute(state: &ServeState, kind: Kind, ev: &Evaluation) -> Outcome {
+    let report = match kind {
+        Kind::Explore => ev.explore_on(&state.coord),
+        Kind::Evaluate | Kind::Sweep => ev.run_on(&state.coord),
+    };
+    match report {
+        Ok(rep) => {
+            let stats = rep.stats.unwrap_or_default();
+            let cache = if stats.simulator_runs == 0 && stats.analyses_run == 0 {
+                CACHE_CACHED
+            } else {
+                CACHE_COMPUTED
+            };
+            state.stats.absorb(&stats);
+            Outcome {
+                status: 200,
+                body: rep.render_json(),
+                ledger: Some(ledger_json(&stats, rep.elapsed_secs, rep.backend)),
+                cache: Some(cache),
+            }
+        }
+        Err(e) => error_outcome(500, &format!("{e:#}")),
+    }
+}
+
+/// Build the request's [`Evaluation`] (the server base + per-field
+/// overrides) and the normalized request object that keys dedup.
+fn build_request(
+    base: &Evaluation,
+    kind: Kind,
+    body: &Json,
+) -> Result<(Evaluation, Json), String> {
+    match kind {
+        Kind::Evaluate => {
+            check_fields(
+                body,
+                &["bench", "config", "tech", "cim", "rule", "scale", "seed",
+                  "max_instructions"],
+            )?;
+            let bench = body
+                .req("bench")
+                .map_err(|_| {
+                    "evaluate needs a 'bench' field (GET /list for the catalog)"
+                        .to_string()
+                })?
+                .as_str()
+                .ok_or("'bench' must be a string")?
+                .to_string();
+            check_bench(&bench)?;
+            let config = match body.get("config") {
+                Some(v) => v
+                    .as_str()
+                    .ok_or("'config' must be a preset name")?
+                    .to_string(),
+                None => "c1".to_string(),
+            };
+            check_preset(&config)?;
+            let techs = match body.get("tech") {
+                Some(v) => {
+                    let s = v.as_str().ok_or("'tech' must be a string")?;
+                    vec![parse_tech(s)?]
+                }
+                None => Vec::new(),
+            };
+            let ev = apply_common(base.clone(), body)?
+                .bench(&bench)
+                .preset(&config)
+                .techs(&techs);
+            let benches = vec![bench];
+            let configs = vec![config];
+            Ok((ev, norm_obj("evaluate", &benches, &configs, &techs, body)))
+        }
+        Kind::Sweep => {
+            check_fields(
+                body,
+                &["benches", "configs", "techs", "cim", "rule", "scale",
+                  "seed", "max_instructions"],
+            )?;
+            let benches = match body.get("benches") {
+                Some(v) => str_list(v, "benches")?,
+                None => workloads::NAMES.iter().map(|s| s.to_string()).collect(),
+            };
+            for b in &benches {
+                check_bench(b)?;
+            }
+            let configs = match body.get("configs") {
+                Some(v) => str_list(v, "configs")?,
+                None => vec!["c1".to_string()],
+            };
+            for c in &configs {
+                check_preset(c)?;
+            }
+            // same default as `eva-cim sweep --techs sram`, so bodies match
+            // the CLI byte-for-byte
+            let techs = match body.get("techs") {
+                Some(v) => parse_techs(v)?,
+                None => vec![Technology::SRAM],
+            };
+            let bench_refs: Vec<&str> =
+                benches.iter().map(|s| s.as_str()).collect();
+            let config_refs: Vec<&str> =
+                configs.iter().map(|s| s.as_str()).collect();
+            let ev = apply_common(base.clone(), body)?
+                .benches(&bench_refs)
+                .presets(&config_refs)
+                .techs(&techs);
+            Ok((ev, norm_obj("sweep", &benches, &configs, &techs, body)))
+        }
+        Kind::Explore => {
+            check_fields(
+                body,
+                &["bench", "benches", "configs", "techs", "cim", "rule",
+                  "scale", "seed", "max_instructions"],
+            )?;
+            let benches = match (body.get("bench"), body.get("benches")) {
+                (Some(_), Some(_)) => {
+                    return Err("pass either 'bench' or 'benches', not both"
+                        .to_string())
+                }
+                (Some(v), None) => {
+                    vec![v.as_str().ok_or("'bench' must be a string")?.to_string()]
+                }
+                (None, Some(v)) => str_list(v, "benches")?,
+                (None, None) => {
+                    return Err(
+                        "explore needs 'bench' or 'benches'".to_string()
+                    )
+                }
+            };
+            for b in &benches {
+                check_bench(b)?;
+            }
+            let configs = match body.get("configs") {
+                Some(v) => str_list(v, "configs")?,
+                None => vec!["c1".to_string(), "c2".to_string(), "c3".to_string()],
+            };
+            for c in &configs {
+                check_preset(c)?;
+            }
+            // CLI default: every registered technology
+            let techs = match body.get("techs") {
+                Some(v) => parse_techs(v)?,
+                None => Technology::all(),
+            };
+            let bench_refs: Vec<&str> =
+                benches.iter().map(|s| s.as_str()).collect();
+            let config_refs: Vec<&str> =
+                configs.iter().map(|s| s.as_str()).collect();
+            let mut ev = apply_common(base.clone(), body)?;
+            if body.get("cim").is_none() {
+                // CLI default: --cim both
+                ev = ev.cim(CimLevels::Both);
+            }
+            let ev = ev.benches(&bench_refs).presets(&config_refs).techs(&techs);
+            Ok((ev, norm_obj("explore", &benches, &configs, &techs, body)))
+        }
+    }
+}
+
+/// Apply the request fields every evaluating endpoint shares.
+fn apply_common(mut ev: Evaluation, body: &Json) -> Result<Evaluation, String> {
+    if let Some(v) = body.get("scale") {
+        ev = ev.scale(v.as_usize().ok_or("'scale' must be a number")?);
+    }
+    if let Some(v) = body.get("seed") {
+        ev = ev.seed(v.as_u64().ok_or("'seed' must be a number")?);
+    }
+    if let Some(v) = body.get("max_instructions") {
+        ev = ev
+            .max_instructions(v.as_u64().ok_or("'max_instructions' must be a number")?);
+    }
+    if let Some(v) = body.get("rule") {
+        let s = v.as_str().ok_or("'rule' must be a string")?;
+        ev = ev.rule(
+            LocalityRule::from_name(s)
+                .ok_or_else(|| format!("unknown locality rule '{s}'"))?,
+        );
+    }
+    if let Some(v) = body.get("cim") {
+        let s = v.as_str().ok_or("'cim' must be a string")?;
+        ev = ev.cim(
+            CimLevels::from_name(s)
+                .ok_or_else(|| format!("unknown cim levels '{s}'"))?,
+        );
+    }
+    Ok(ev)
+}
+
+/// The normalized request object: the effective selection lists plus the
+/// raw optional fields (absent → `null`).  Its canonical dump is the
+/// dedup key's preimage, so two requests that differ only in JSON
+/// formatting or key order normalize to identical bytes.
+fn norm_obj(
+    endpoint: &str,
+    benches: &[String],
+    configs: &[String],
+    techs: &[Technology],
+    body: &Json,
+) -> Json {
+    let passthrough =
+        |k: &str| body.get(k).cloned().unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("endpoint", endpoint.into()),
+        (
+            "benches",
+            Json::Arr(benches.iter().map(|b| Json::from(b.as_str())).collect()),
+        ),
+        (
+            "configs",
+            Json::Arr(configs.iter().map(|c| Json::from(c.as_str())).collect()),
+        ),
+        (
+            "techs",
+            Json::Arr(techs.iter().map(|t| Json::from(t.name())).collect()),
+        ),
+        ("cim", passthrough("cim")),
+        ("rule", passthrough("rule")),
+        ("scale", passthrough("scale")),
+        ("seed", passthrough("seed")),
+        ("max_instructions", passthrough("max_instructions")),
+    ])
+}
+
+fn check_fields(body: &Json, allowed: &[&str]) -> Result<(), String> {
+    match body {
+        Json::Obj(m) => {
+            for k in m.keys() {
+                if !allowed.contains(&k.as_str()) {
+                    return Err(format!(
+                        "unknown field '{k}' (allowed: {})",
+                        allowed.join(", ")
+                    ));
+                }
+            }
+            Ok(())
+        }
+        _ => Err("request body must be a JSON object".to_string()),
+    }
+}
+
+fn check_bench(name: &str) -> Result<(), String> {
+    if workloads::NAMES.contains(&name) {
+        Ok(())
+    } else {
+        Err(format!("unknown benchmark '{name}' (GET /list for the catalog)"))
+    }
+}
+
+fn check_preset(name: &str) -> Result<(), String> {
+    if SystemConfig::preset(name).is_some() {
+        Ok(())
+    } else {
+        Err(format!("unknown preset '{name}' (GET /list for the catalog)"))
+    }
+}
+
+fn parse_tech(name: &str) -> Result<Technology, String> {
+    Technology::from_name(name).ok_or_else(|| device::unknown_tech_message(name))
+}
+
+fn parse_techs(v: &Json) -> Result<Vec<Technology>, String> {
+    let arr = v
+        .as_arr()
+        .ok_or("'techs' must be an array of technology names")?;
+    arr.iter()
+        .map(|x| {
+            let s = x
+                .as_str()
+                .ok_or_else(|| "'techs' must be an array of technology names"
+                    .to_string())?;
+            parse_tech(s)
+        })
+        .collect()
+}
+
+fn str_list(v: &Json, field: &str) -> Result<Vec<String>, String> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("'{field}' must be an array of strings"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("'{field}' must be an array of strings"))
+        })
+        .collect()
+}
+
+fn health_body() -> String {
+    let mut s = Json::obj(vec![
+        ("schema", 1u64.into()),
+        ("service", "eva-cim".into()),
+        ("status", "ok".into()),
+    ])
+    .dump();
+    s.push('\n');
+    s
+}
+
+/// The error envelope every non-200 response uses.
+fn error_body(status: u16, message: &str) -> String {
+    let mut s = Json::obj(vec![
+        (
+            "error",
+            Json::obj(vec![
+                ("code", (status as u64).into()),
+                ("message", message.into()),
+            ]),
+        ),
+        ("schema", 1u64.into()),
+    ])
+    .dump();
+    s.push('\n');
+    s
+}
+
+fn error_outcome(status: u16, message: &str) -> Outcome {
+    Outcome {
+        status,
+        body: error_body(status, message),
+        ledger: None,
+        cache: None,
+    }
+}
+
+fn error_response(status: u16, message: &str) -> http::Response {
+    http::Response {
+        status,
+        body: error_body(status, message),
+        cache: None,
+        ledger: None,
+    }
+}
+
+fn ok_response(body: String) -> http::Response {
+    http::Response { status: 200, body, cache: None, ledger: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::BackendSel;
+    use std::io::{Read, Write};
+
+    fn raw_request(
+        addr: &SocketAddr,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn test_opts() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            http_workers: 2,
+            queue: 8,
+            base: Evaluation::new().scale(2).jobs(1).backend(BackendSel::Native),
+        }
+    }
+
+    #[test]
+    fn inflight_followers_share_the_leaders_outcome() {
+        let inflight = Inflight::new();
+        let Role::Leader(slot) = inflight.join(7) else {
+            panic!("first join must lead")
+        };
+        let Role::Follower(fslot) = inflight.join(7) else {
+            panic!("second join must follow")
+        };
+        let waiter = std::thread::spawn(move || wait_outcome(&fslot));
+        assert_eq!(slot.followers.load(Ordering::SeqCst), 1);
+        inflight.publish(
+            7,
+            &slot,
+            Outcome {
+                status: 200,
+                body: "shared-body".into(),
+                ledger: None,
+                cache: Some(CACHE_COMPUTED),
+            },
+        );
+        let got = waiter.join().unwrap();
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, "shared-body");
+        // the key is retired: the next identical request leads again
+        assert!(matches!(inflight.join(7), Role::Leader(_)));
+    }
+
+    #[test]
+    fn request_keys_ignore_json_formatting_and_key_order() {
+        let base = Evaluation::new();
+        let a = json::parse(r#"{"bench":"lcs","scale":2}"#).unwrap();
+        let b = json::parse(r#"{ "scale" : 2, "bench" : "lcs" }"#).unwrap();
+        let (_, na) = build_request(&base, Kind::Evaluate, &a).unwrap();
+        let (_, nb) = build_request(&base, Kind::Evaluate, &b).unwrap();
+        assert_eq!(na.dump(), nb.dump());
+        // a different scale is a different key
+        let c = json::parse(r#"{"bench":"lcs","scale":3}"#).unwrap();
+        let (_, nc) = build_request(&base, Kind::Evaluate, &c).unwrap();
+        assert_ne!(na.dump(), nc.dump());
+    }
+
+    #[test]
+    fn bad_requests_are_client_errors() {
+        let base = Evaluation::new();
+        let no_bench = json::parse("{}").unwrap();
+        assert!(build_request(&base, Kind::Evaluate, &no_bench).is_err());
+        let typo = json::parse(r#"{"bench":"lcs","benchs":[]}"#).unwrap();
+        let err = build_request(&base, Kind::Evaluate, &typo).unwrap_err();
+        assert!(err.contains("unknown field 'benchs'"), "{err}");
+        let bad_bench = json::parse(r#"{"bench":"no_such"}"#).unwrap();
+        assert!(build_request(&base, Kind::Evaluate, &bad_bench)
+            .unwrap_err()
+            .contains("unknown benchmark"));
+        let bad_tech =
+            json::parse(r#"{"bench":"lcs","tech":"unobtanium"}"#).unwrap();
+        assert!(build_request(&base, Kind::Evaluate, &bad_tech).is_err());
+    }
+
+    fn panicking_router(
+        state: &ServeState,
+        req: &http::Request,
+    ) -> http::Response {
+        if req.path == "/boom" {
+            panic!("injected handler failure");
+        }
+        route(state, req)
+    }
+
+    #[test]
+    fn a_panicking_handler_returns_500_without_killing_the_server() {
+        let server =
+            Server::bind_with_router(test_opts(), panicking_router).unwrap();
+        let addr = server.addr();
+        let handle = server.spawn().unwrap();
+
+        let resp = raw_request(&addr, "GET", "/boom", "");
+        assert!(resp.starts_with("HTTP/1.1 500 "), "{resp}");
+        assert!(resp.contains("\"error\""), "{resp}");
+        assert!(resp.contains("injected handler failure"), "{resp}");
+
+        // the worker pool survived: the next request is served normally
+        let resp = raw_request(&addr, "GET", "/health", "");
+        assert!(resp.starts_with("HTTP/1.1 200 "), "{resp}");
+        assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn health_list_stats_and_routing_errors() {
+        let server = Server::bind(test_opts()).unwrap();
+        let addr = server.addr();
+        let handle = server.spawn().unwrap();
+
+        let resp = raw_request(&addr, "GET", "/health", "");
+        assert!(resp.contains("\"service\":\"eva-cim\""), "{resp}");
+
+        let resp = raw_request(&addr, "GET", "/list", "");
+        assert!(resp.starts_with("HTTP/1.1 200 "), "{resp}");
+        assert!(resp.contains("\"title\":\"list\""), "{resp}");
+
+        let resp = raw_request(&addr, "GET", "/stats", "");
+        assert!(resp.contains("\"metric\":\"requests\""), "{resp}");
+        assert!(resp.contains("\"counter\":\"simulator_runs\""), "{resp}");
+
+        let resp = raw_request(&addr, "GET", "/evaluate", "");
+        assert!(resp.starts_with("HTTP/1.1 405 "), "{resp}");
+        let resp = raw_request(&addr, "POST", "/nope", "{}");
+        assert!(resp.starts_with("HTTP/1.1 404 "), "{resp}");
+        let resp = raw_request(&addr, "POST", "/evaluate", "{not json");
+        assert!(resp.starts_with("HTTP/1.1 400 "), "{resp}");
+        assert!(resp.contains("malformed JSON"), "{resp}");
+        handle.shutdown();
+    }
+}

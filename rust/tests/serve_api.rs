@@ -1,0 +1,221 @@
+//! The serving contract (docs/SERVING.md): a served `Report` is
+//! byte-identical to CLI `--format json`, a warm server answers repeated
+//! requests from the coordinator caches with zero new simulations
+//! (ledger-verified), N concurrent identical requests share exactly one
+//! computation, and errors come back as the documented envelope without
+//! destabilising the server.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use eva_cim::api::{BackendSel, Evaluation};
+use eva_cim::config::Technology;
+use eva_cim::serve::{ServeOptions, Server, ServerHandle};
+
+/// Spawn a test server on a free port with small, fast defaults.
+fn test_server() -> ServerHandle {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        http_workers: 4,
+        queue: 16,
+        base: Evaluation::new().scale(2).jobs(2).backend(BackendSel::Native),
+    };
+    Server::bind(opts).expect("bind").spawn().expect("spawn")
+}
+
+/// One raw HTTP exchange (the server closes after each response).
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn exchange(addr: std::net::SocketAddr, request: &str) -> Reply {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(request.as_bytes()).expect("send");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("recv");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("complete response");
+    let mut lines = head.lines();
+    let status_line = lines.next().expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    let headers = lines
+        .filter_map(|l| l.split_once(": "))
+        .map(|(n, v)| (n.to_string(), v.to_string()))
+        .collect();
+    Reply { status, headers, body: body.to_string() }
+}
+
+fn get(addr: std::net::SocketAddr, path: &str) -> Reply {
+    exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> Reply {
+    exchange(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+/// Pull one `"counter":"<name>","value":N` pair out of a /stats body.
+fn stat_counter(stats_body: &str, name: &str) -> Option<u64> {
+    let tag = format!("\"counter\":\"{name}\",\"value\":");
+    let at = stats_body.find(&tag)? + tag.len();
+    let rest = &stats_body[at..];
+    let end = rest.find(|c: char| !c.is_ascii_digit())?;
+    rest[..end].parse().ok()
+}
+
+#[test]
+fn repeated_evaluate_is_served_from_cache_with_zero_new_simulations() {
+    let server = test_server();
+    let addr = server.addr();
+    let body = r#"{"bench":"lcs","config":"c1","tech":"sram"}"#;
+
+    let first = post(addr, "/evaluate", body);
+    assert_eq!(first.status, 200, "first evaluate: {}", first.body);
+    assert_eq!(first.header("X-Eva-Cache"), Some("computed"));
+    let ledger = first.header("X-Eva-Ledger").expect("ledger header");
+    assert!(
+        ledger.contains("\"simulator_runs\":1"),
+        "cold request simulates once: {ledger}"
+    );
+
+    let second = post(addr, "/evaluate", body);
+    assert_eq!(second.status, 200);
+    assert_eq!(second.header("X-Eva-Cache"), Some("cached"));
+    let ledger = second.header("X-Eva-Ledger").expect("ledger header");
+    assert!(
+        ledger.contains("\"simulator_runs\":0"),
+        "warm request simulates nothing: {ledger}"
+    );
+    assert_eq!(first.body, second.body, "cache replay is byte-identical");
+
+    // formatting / key order must not defeat the cache
+    let third = post(
+        addr,
+        "/evaluate",
+        "{ \"tech\": \"sram\", \"config\": \"c1\",\n  \"bench\": \"lcs\" }",
+    );
+    assert_eq!(third.status, 200);
+    assert_eq!(third.header("X-Eva-Cache"), Some("cached"));
+    assert_eq!(first.body, third.body);
+
+    // the cumulative /stats ledger agrees: one simulation total
+    let stats = get(addr, "/stats");
+    assert_eq!(stats.status, 200);
+    assert_eq!(stat_counter(&stats.body, "simulator_runs"), Some(1));
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_identical_requests_share_one_computation() {
+    let server = test_server();
+    let addr = server.addr();
+    let body = r#"{"bench":"km","config":"c1","tech":"sram"}"#;
+
+    let replies: Vec<Reply> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| s.spawn(move || post(addr, "/evaluate", body)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client")).collect()
+    });
+
+    let mut bodies: Vec<&str> = Vec::new();
+    for r in &replies {
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert!(r.header("X-Eva-Cache").is_some());
+        bodies.push(&r.body);
+    }
+    bodies.dedup();
+    assert_eq!(bodies.len(), 1, "all riders see the leader's bytes");
+
+    // however the four interleaved, only one simulation ever ran
+    let stats = get(addr, "/stats");
+    assert_eq!(stat_counter(&stats.body, "simulator_runs"), Some(1));
+
+    server.shutdown();
+}
+
+#[test]
+fn served_report_is_byte_identical_to_the_cli_json_format() {
+    let server = test_server();
+    let addr = server.addr();
+
+    let reply = post(
+        addr,
+        "/evaluate",
+        r#"{"bench":"lcs","config":"c1","tech":"sram","scale":2,"seed":42}"#,
+    );
+    assert_eq!(reply.status, 200, "{}", reply.body);
+
+    let direct = Evaluation::new()
+        .bench("lcs")
+        .preset("c1")
+        .tech(Technology::SRAM)
+        .scale(2)
+        .seed(42)
+        .jobs(2)
+        .backend(BackendSel::Native)
+        .run()
+        .expect("direct run")
+        .render_json();
+    assert_eq!(reply.body, direct, "the canonical Report IS the wire format");
+
+    // GET /list serves the same bytes as `eva-cim list --format json`
+    let list = get(addr, "/list");
+    assert_eq!(list.status, 200);
+    assert_eq!(list.body, eva_cim::api::list_report().render_json());
+
+    server.shutdown();
+}
+
+#[test]
+fn errors_use_the_envelope_and_leave_the_server_healthy() {
+    let server = test_server();
+    let addr = server.addr();
+
+    // unknown benchmark: 400, documented envelope, no cache header
+    let r = post(addr, "/evaluate", r#"{"bench":"nope"}"#);
+    assert_eq!(r.status, 400);
+    assert!(r.header("X-Eva-Cache").is_none());
+    assert!(r.body.starts_with("{\"error\":{\"code\":400,"), "{}", r.body);
+    assert!(r.body.contains("\"schema\":1"));
+
+    // malformed JSON: 400
+    let r = post(addr, "/evaluate", "{not json");
+    assert_eq!(r.status, 400);
+
+    // unknown field: 400 (allow-list), names the field
+    let r = post(addr, "/evaluate", r#"{"bench":"lcs","benc":"typo"}"#);
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("benc"), "{}", r.body);
+
+    // unknown route / wrong method
+    assert_eq!(get(addr, "/nope").status, 404);
+    assert_eq!(post(addr, "/health", "{}").status, 405);
+
+    // ... and none of that hurt the server
+    let health = get(addr, "/health");
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains("\"status\":\"ok\""));
+
+    server.shutdown();
+}
