@@ -1,7 +1,9 @@
 //! Perf bench (§Perf of EXPERIMENTS.md): hot-path throughputs of the three
 //! L3 stages, streaming-vs-batch pipeline wall-clock, PJRT-vs-native
-//! backend latency per batched evaluation, and the sweep result cache
-//! (warm resume must be ≥10x faster than cold).
+//! backend latency per batched evaluation, the sweep result cache
+//! (warm resume must be ≥10x faster than cold), and warm-trace replay
+//! decode (per-record reference vs zero-copy chunk decode vs pipelined
+//! multi-lane decode on the same spilled trace).
 //!
 //! Targets (DESIGN.md §8): simulator ≥ 2 M instr/s, analyzer ≥ 5 M nodes/s,
 //! pipelined sim∥analyze beats sequential materialize-then-analyze,
@@ -18,8 +20,10 @@ use std::time::Instant;
 use eva_cim::analyzer::{analyze, analyze_batch, LocalityRule, OnlineAnalyzer};
 use eva_cim::asm::Asm;
 use eva_cim::config::{CimLevels, SystemConfig, Technology};
+use eva_cim::coordinator::trace_store::TraceStore;
 use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
 use eva_cim::pipeline::run_pipelined;
+use eva_cim::probes::{IState, TraceSink};
 use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
 use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink};
 use eva_cim::runtime::{NativeBackend, PjrtRuntime};
@@ -164,9 +168,11 @@ fn bench_streaming(quick: bool) {
 
 /// Stage-factored sweep vs the legacy per-point analysis loop on a
 /// T-tech × P-placement grid sharing one trace.  Emits a machine-readable
-/// `BENCH_sweep.json` (schema `BENCH_sweep/1`) with the wall-clocks and
-/// the ledger counters so CI can grep the factoring win.
-fn bench_stage_factored(quick: bool) {
+/// `BENCH_sweep.json` (schema `BENCH_sweep/2`) with the wall-clocks and
+/// the ledger counters — plus the replay-decode entries collected by
+/// [`bench_replay`] — so CI can grep the factoring win and diff the key
+/// set against the committed snapshot at the repo root.
+fn bench_stage_factored(quick: bool, replay: Vec<(&'static str, Json)>) {
     let scale = if quick { 4 } else { 12 };
     let placements = [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both];
     let techs = [
@@ -233,8 +239,8 @@ fn bench_stage_factored(quick: bool) {
     );
     assert_eq!(rows.len(), points.len());
 
-    let doc = Json::obj(vec![
-        ("schema", "BENCH_sweep/1".into()),
+    let mut entries: Vec<(&'static str, Json)> = vec![
+        ("schema", "BENCH_sweep/2".into()),
         ("points", (points.len() as u64).into()),
         ("techs", (techs.len() as u64).into()),
         ("placements", (placements.len() as u64).into()),
@@ -244,13 +250,138 @@ fn bench_stage_factored(quick: bool) {
         ("analyses_run", stats.analyses_run.into()),
         ("analyses_cached", stats.analyses_cached.into()),
         ("replays_skipped", stats.replays_skipped.into()),
-    ])
-    .dump();
+    ];
+    entries.extend(replay);
+    let doc = Json::obj(entries).dump();
     if let Err(e) = std::fs::write("BENCH_sweep.json", &doc) {
         eprintln!("warning: could not write BENCH_sweep.json: {e}");
     } else {
         println!("[perf] stage-factored counters written to BENCH_sweep.json");
     }
+}
+
+/// Warm-trace replay decode on one spilled trace, feeding an O(1)
+/// counting sink so decode cost dominates: the per-record reference
+/// decoder vs the zero-copy chunk decoder vs pipelined 4-lane decode.
+/// Then the same decode path through the coordinator: a first sweep pass
+/// spills the trace, a second pass over fresh placements replays it with
+/// the analyzer fan-out split across idle workers — the
+/// `replay_chunks_decoded` / `replay_lanes_split` ledger counters prove
+/// the parallel path executed.  Returns the `BENCH_sweep.json` entries.
+fn bench_replay(quick: bool) -> Vec<(&'static str, Json)> {
+    struct CountSink(u64);
+    impl TraceSink for CountSink {
+        fn on_commit(&mut self, _is: IState) {
+            self.0 += 1;
+        }
+    }
+
+    let dir = std::env::temp_dir()
+        .join(format!("eva-cim-bench-replay-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = TraceStore::open(&dir).unwrap();
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let iters = if quick { 40_000 } else { 200_000 }; // ~360k / ~1.8M records
+    let prog = stream_loop(iters);
+    let trace =
+        simulate(&prog, &cfg, Limits { max_instructions: 100_000_000 })
+            .unwrap();
+    let committed = trace.committed;
+    store.store("bench", &trace).unwrap();
+    drop(trace);
+
+    // best-of-N; lanes == 0 selects the per-record reference decoder
+    let samples = if quick { 1 } else { 3 };
+    let mut time = |lanes: usize| -> (f64, u64) {
+        let mut best = f64::MAX;
+        let mut chunks = 0u64;
+        for _ in 0..samples {
+            let mut sink = CountSink(0);
+            let t0 = Instant::now();
+            if lanes == 0 {
+                store.replay_reference("bench", &mut sink).unwrap();
+            } else {
+                let (_, c) =
+                    store.replay_with("bench", &mut sink, lanes).unwrap();
+                chunks = c;
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+            assert_eq!(sink.0, committed, "replay must feed every record");
+        }
+        (best, chunks)
+    };
+    let (ref_s, _) = time(0);
+    let (zc_s, chunks) = time(1);
+    let (par_s, _) = time(4);
+    println!(
+        "[perf] replay: {:.2} M records / {} chunks: reference {:.1} ms -> \
+         zero-copy {:.1} ms ({:.2}x) -> 4-lane {:.1} ms ({:.2}x)",
+        committed as f64 / 1e6,
+        chunks,
+        ref_s * 1e3,
+        zc_s * 1e3,
+        ref_s / zc_s.max(1e-9),
+        par_s * 1e3,
+        ref_s / par_s.max(1e-9),
+    );
+    if !quick {
+        // the real contract is byte-identity at any lane count (pinned by
+        // rust/tests/replay_parallel.rs); perf-wise the 4-lane decode must
+        // at minimum beat the old per-record path it replaced
+        assert!(
+            par_s <= ref_s,
+            "4-lane replay {par_s:.3}s slower than reference {ref_s:.3}s"
+        );
+    }
+
+    // the coordinator end of the same path: pass 1 spills the trace,
+    // pass 2 stages two new placements against it — one disk replay,
+    // fan-out split across passes, multi-lane decode inside each
+    let cache = dir.join("sweep-cache");
+    let scale = if quick { 2 } else { 8 };
+    let cfg_for = |cim: CimLevels| {
+        let mut c = SystemConfig::preset("c1").unwrap().with_cim(cim);
+        c.name = format!("c1-{}", cim.name());
+        c
+    };
+    let opts = SweepOptions {
+        scale,
+        workers: 4,
+        replay_threads: 4,
+        cache_dir: Some(cache),
+        resume: true,
+        ..Default::default()
+    };
+    let cold =
+        cross(&["lcs"], &[cfg_for(CimLevels::L1Only)], LocalityRule::AnyCache);
+    Coordinator::new(opts.clone())
+        .run_sweep_with_stats(&cold, &mut NativeBackend)
+        .unwrap();
+    let warm_cfgs = [cfg_for(CimLevels::L2Only), cfg_for(CimLevels::Both)];
+    let points = cross(&["lcs"], &warm_cfgs, LocalityRule::AnyCache);
+    let (_, stats) = Coordinator::new(opts)
+        .run_sweep_with_stats(&points, &mut NativeBackend)
+        .unwrap();
+    assert_eq!(stats.simulator_runs, 0, "second pass must not simulate");
+    assert_eq!(stats.trace_disk_hits, 1);
+    assert!(stats.replay_chunks_decoded > 0, "decode counter must move");
+    assert_eq!(stats.replay_lanes_split, 2, "both analysis lanes must split");
+    println!(
+        "[perf] replay-sweep: {} chunks decoded across {} split lanes \
+         (0 simulations on the second pass)",
+        stats.replay_chunks_decoded, stats.replay_lanes_split,
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    vec![
+        ("replay_records", committed.into()),
+        ("replay_chunks", chunks.into()),
+        ("replay_reference_ms", (ref_s * 1e3).into()),
+        ("replay_zero_copy_ms", (zc_s * 1e3).into()),
+        ("replay_lanes4_ms", (par_s * 1e3).into()),
+        ("replay_chunks_decoded", stats.replay_chunks_decoded.into()),
+        ("replay_lanes_split", stats.replay_lanes_split.into()),
+    ]
 }
 
 fn bench_cache_resume(quick: bool) {
@@ -351,8 +482,11 @@ fn main() {
     // --- streaming pipeline: pipelined vs batch, and at scale --------------
     bench_streaming(quick);
 
+    // --- warm-trace replay: reference vs zero-copy vs multi-lane decode ----
+    let replay = bench_replay(quick);
+
     // --- stage-factored sweep: shared analysis across tech variants --------
-    bench_stage_factored(quick);
+    bench_stage_factored(quick, replay);
 
     // --- sweep result cache: cold vs warm resume ---------------------------
     bench_cache_resume(quick);

@@ -277,6 +277,14 @@ impl Evaluation {
         self
     }
 
+    /// Decode-lane count for warm-trace replay (0 = auto, 1 =
+    /// sequential).  A tuning knob only: every setting produces
+    /// byte-identical rows and reports.
+    pub fn replay_threads(mut self, n: usize) -> Self {
+        self.opts.replay_threads = n;
+        self
+    }
+
     /// Root of the on-disk design-point + trace cache.
     pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.opts.cache_dir = Some(dir.into());

@@ -76,6 +76,18 @@ pub struct AnalysisArtifact {
     pub deltas: DeltaSink,
 }
 
+impl AnalysisArtifact {
+    /// Assemble an artifact from one finished analysis lane (the shape
+    /// `pipeline::AnalyzerFanout::finish` hands back per lane).
+    pub fn new(
+        summary: TraceSummary,
+        outcome: StreamOutcome,
+        deltas: DeltaSink,
+    ) -> Self {
+        Self { summary, outcome, deltas }
+    }
+}
+
 const NUM_FU: usize = crate::isa::func_unit::NUM_FUNC_UNITS;
 
 fn u64_arr(xs: &[u64]) -> Json {

@@ -22,14 +22,20 @@
 //! A sweep over T technologies × P placements therefore runs P analyses,
 //! not T·P — and with a warm artifact store, zero.
 //!
-//! The work-stealing unit is the *trace group*, so a sweep with fewer
-//! groups than workers runs that group's K analyses on one core (the
-//! fan-out is a single sequential pass).  That is a deliberate trade:
-//! splitting the lanes across workers would cost K replays — or K
-//! *simulations* without a cache dir — to buy wall-clock only in the
-//! few-geometry corner; real DSE sweeps have benches × geometries ≫
-//! workers.  Revisiting lane-splitting for the warm-trace small-sweep
-//! case is tracked in ROADMAP.md.
+//! Warm-trace replay is parallel on two axes.  *Within* one replay the
+//! spill's chunk framing lets [`trace_store`] decode chunks on
+//! [`SweepOptions::replay_threads`] worker lanes (zero-copy, reassembled
+//! in commit order before the fan-out sees a record).  *Across* lanes,
+//! when idle workers exceed the remaining trace groups and the group's
+//! trace is warm on disk, the scheduler splits the group's K analysis
+//! lanes into concurrent passes — each pass replays the spill through
+//! its own fan-out subset — instead of one sequential K-lane pass (the
+//! interactive small-sweep corner; extra *replays* are cheap once the
+//! spill is warm, extra *simulations* never happen: a cold trace still
+//! simulates once through a full fan-out).  Both paths are
+//! byte-identical to sequential replay and observable in the ledger via
+//! [`SweepStats::replay_chunks_decoded`] /
+//! [`SweepStats::replay_lanes_split`].
 //!
 //! Completed design points are persisted to an append-only JSONL result
 //! cache ([`cache`]) keyed by a stable content hash ([`key`]) of
@@ -57,7 +63,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::analyzer::{LocalityRule, Macr, OnlineAnalyzer};
+use crate::analyzer::{LocalityRule, Macr, OnlineAnalyzer, StreamOutcome};
 use crate::config::{CimLevels, SystemConfig};
 use crate::pipeline::{self, AnalyzerFanout};
 use crate::probes::TraceSummary;
@@ -124,6 +130,11 @@ pub struct SweepOptions {
     /// trace groups per work-stealing chunk (0 = auto-size from queue
     /// length)
     pub chunk: usize,
+    /// decode-lane count for warm-trace replay (0 = auto: available
+    /// parallelism, capped at 8).  `1` forces the sequential zero-copy
+    /// path; any value produces byte-identical rows.  Deliberately *not*
+    /// part of any cache key ([`key::point_key`] is field-selective).
+    pub replay_threads: usize,
     /// root of the on-disk design-point + trace + artifact cache; `None`
     /// disables persistence entirely
     pub cache_dir: Option<PathBuf>,
@@ -143,6 +154,7 @@ impl Default for SweepOptions {
                 .unwrap_or(4)
                 .min(8),
             chunk: 0,
+            replay_threads: 0,
             cache_dir: None,
             resume: false,
         }
@@ -170,6 +182,13 @@ pub struct SweepStats {
     pub replays_skipped: u64,
     /// traces replayed from the on-disk spill store
     pub trace_disk_hits: u64,
+    /// spill chunks physically decoded during warm-trace replay (a
+    /// worker-split group decodes its chunks once per pass, so this
+    /// counts decode work, not unique chunks)
+    pub replay_chunks_decoded: u64,
+    /// analysis lanes that ran in worker-split replay passes instead of
+    /// one sequential fan-out pass (nonzero proves the split path ran)
+    pub replay_lanes_split: u64,
     /// work-stealing chunks claimed by the worker pool
     pub chunks_claimed: u64,
     /// largest online-analysis window over all staged points (instructions)
@@ -186,7 +205,8 @@ pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
     format!(
         "{} design points in {:.2}s ({} cached, {} computed, {} simulated, \
          {} chunks) | stages: {} analyses run, {} cached, {} replays \
-         skipped | scale: longest trace {} instrs, peak window {} \
+         skipped | replay: {} chunks decoded, {} lanes split | scale: \
+         longest trace {} instrs, peak window {} \
          ({:.4}% of trace), peak RSS {} MiB",
         stats.points,
         secs,
@@ -197,6 +217,8 @@ pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
         stats.analyses_run,
         stats.analyses_cached,
         stats.replays_skipped,
+        stats.replay_chunks_decoded,
+        stats.replay_lanes_split,
         stats.longest_trace,
         stats.peak_window,
         if stats.longest_trace > 0 {
@@ -222,6 +244,8 @@ pub fn ledger_json(stats: &SweepStats, secs: f64, backend: Option<&str>) -> Stri
         ("analyses_cached", stats.analyses_cached.into()),
         ("replays_skipped", stats.replays_skipped.into()),
         ("trace_disk_hits", stats.trace_disk_hits.into()),
+        ("replay_chunks_decoded", stats.replay_chunks_decoded.into()),
+        ("replay_lanes_split", stats.replay_lanes_split.into()),
         ("chunks_claimed", stats.chunks_claimed.into()),
         ("peak_window", stats.peak_window.into()),
         ("longest_trace", stats.longest_trace.into()),
@@ -240,6 +264,8 @@ struct StageCounters {
     analyses_cached: AtomicU64,
     replays_skipped: AtomicU64,
     trace_disk_hits: AtomicU64,
+    replay_chunks_decoded: AtomicU64,
+    replay_lanes_split: AtomicU64,
     chunks_claimed: AtomicU64,
     peak_window: AtomicU64,
     longest_trace: AtomicU64,
@@ -414,6 +440,16 @@ impl Coordinator {
                 }
             }
 
+            // when the sweep has fewer trace groups than workers, the
+            // surplus workers would idle while each group runs its K-lane
+            // fan-out sequentially — tell every group how many concurrent
+            // split passes the surplus could cover (1 = no split)
+            let split_hint = if groups.len() < opts.workers.max(1) {
+                opts.workers.max(1).div_ceil(groups.len().max(1))
+            } else {
+                1
+            };
+
             let queue = ChunkQueue::new(groups.len(), opts.chunk, opts.workers);
             let staged: Mutex<Vec<Option<(SweepRow, ProfileInputs)>>> =
                 Mutex::new((0..todo.len()).map(|_| None).collect());
@@ -439,6 +475,7 @@ impl Coordinator {
                                             &todo,
                                             g,
                                             opts,
+                                            split_hint,
                                             &self.memo,
                                             artifacts.as_ref(),
                                             traces.as_ref(),
@@ -512,6 +549,10 @@ impl Coordinator {
         stats.analyses_cached = counters.analyses_cached.load(Ordering::Relaxed);
         stats.replays_skipped = counters.replays_skipped.load(Ordering::Relaxed);
         stats.trace_disk_hits = counters.trace_disk_hits.load(Ordering::Relaxed);
+        stats.replay_chunks_decoded =
+            counters.replay_chunks_decoded.load(Ordering::Relaxed);
+        stats.replay_lanes_split =
+            counters.replay_lanes_split.load(Ordering::Relaxed);
         stats.chunks_claimed = counters.chunks_claimed.load(Ordering::Relaxed);
         stats.peak_window = counters.peak_window.load(Ordering::Relaxed);
         stats.longest_trace = counters.longest_trace.load(Ordering::Relaxed);
@@ -529,10 +570,13 @@ impl Coordinator {
     /// Artifact acquisition, cheapest first:
     /// 1. the in-process memo (pre-warmed from the on-disk artifact
     ///    store) — no replay, no analysis;
-    /// 2. replay the spilled trace **once** through a broadcast fan-out
-    ///    feeding every still-missing analysis in a single pass;
+    /// 2. replay the spilled trace through a broadcast fan-out feeding
+    ///    every still-missing analysis — as one multi-lane-decode pass,
+    ///    or (when `split > 1` says workers are idle and the spill is
+    ///    warm) as `split` concurrent passes each feeding a subset of
+    ///    the analysis lanes;
     /// 3. simulate, pipelined: the simulator runs on its own thread while
-    ///    this thread drives the same fan-out, teeing records into a
+    ///    this thread drives one full fan-out, teeing records into a
     ///    chunked disk spill when a cache dir is set.
     ///
     /// Every point then pays only the per-technology energy fold.
@@ -542,6 +586,7 @@ impl Coordinator {
         todo: &[usize],
         group: &TraceGroup,
         opts: &SweepOptions,
+        split: usize,
         memo: &Mutex<HashMap<String, Arc<AnalysisArtifact>>>,
         artifacts: Option<&AnalysisStore>,
         disk: Option<&TraceStore>,
@@ -584,17 +629,41 @@ impl Coordinator {
                 )
             };
 
-            // 2) disk replay: one pass feeds every missing analysis
+            // 2) disk replay, worker-split when the scheduler says the
+            // pool is otherwise idle and the spill is warm: each pass
+            // replays the trace through its own lane subset concurrently
+            let threads = effective_replay_threads(opts);
             let mut replayed: Option<(TraceSummary, Vec<_>)> = None;
             if let Some(d) = disk {
-                let mut fanout = build_fanout();
-                if let Some(summary) = d.replay(&group.tkey, &mut fanout) {
-                    counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
-                    replayed = Some((summary, fanout.finish()));
+                if split > 1 && missing.len() > 1 && d.contains(&group.tkey) {
+                    if let Some((summary, lanes, chunks)) =
+                        Self::replay_split(d, group, &missing, split, threads)
+                    {
+                        counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
+                        counters
+                            .replay_chunks_decoded
+                            .fetch_add(chunks, Ordering::Relaxed);
+                        counters
+                            .replay_lanes_split
+                            .fetch_add(missing.len() as u64, Ordering::Relaxed);
+                        replayed = Some((summary, lanes));
+                    }
                 }
-                // corrupt/missing spill: the fan-out may have consumed
-                // partial records — discard it and simulate with a fresh
-                // one below
+                if replayed.is_none() {
+                    let mut fanout = build_fanout();
+                    if let Some((summary, chunks)) =
+                        d.replay_with(&group.tkey, &mut fanout, threads)
+                    {
+                        counters.trace_disk_hits.fetch_add(1, Ordering::Relaxed);
+                        counters
+                            .replay_chunks_decoded
+                            .fetch_add(chunks, Ordering::Relaxed);
+                        replayed = Some((summary, fanout.finish()));
+                    }
+                    // corrupt/missing spill: the fan-out may have consumed
+                    // partial records — discard it and simulate with a
+                    // fresh one below
+                }
             }
 
             // 3) pipelined simulate + fan-out analyze
@@ -645,11 +714,11 @@ impl Coordinator {
                 .copied()
                 .zip(lanes)
                 .map(|(ai, (outcome, deltas))| {
-                    let art = Arc::new(AnalysisArtifact {
-                        summary: summary.clone(),
+                    let art = Arc::new(AnalysisArtifact::new(
+                        summary.clone(),
                         outcome,
                         deltas,
-                    });
+                    ));
                     (ai, art)
                 })
                 .collect();
@@ -688,6 +757,72 @@ impl Coordinator {
         Ok(out)
     }
 
+    /// Replay one warm spill as concurrent worker-split passes, each
+    /// feeding a contiguous subset of the group's missing analysis lanes
+    /// through its own fan-out.  Lane results come back in `missing`
+    /// order — indistinguishable from one sequential full-fan-out pass.
+    /// Returns `None` (fall back to the normal ladder) if any pass finds
+    /// the spill missing or corrupt; the decode-lane budget `threads` is
+    /// divided across the passes so the two parallelism axes compose
+    /// instead of multiplying.
+    fn replay_split(
+        disk: &TraceStore,
+        group: &TraceGroup,
+        missing: &[usize],
+        split: usize,
+        threads: usize,
+    ) -> Option<(TraceSummary, Vec<(StreamOutcome, DeltaSink)>, u64)> {
+        let passes = split.min(missing.len());
+        let per_pass = missing.len().div_ceil(passes);
+        let pass_threads = (threads / passes).max(1);
+        let results: Vec<Option<_>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = missing
+                .chunks(per_pass)
+                .map(|subset| {
+                    scope.spawn(move || {
+                        let mut fanout = AnalyzerFanout::new(
+                            subset
+                                .iter()
+                                .map(|&ai| {
+                                    let a = &group.analyses[ai];
+                                    OnlineAnalyzer::new(
+                                        a.cim,
+                                        a.rule,
+                                        DeltaSink::default(),
+                                    )
+                                })
+                                .collect(),
+                        );
+                        let (summary, chunks) = disk.replay_with(
+                            &group.tkey,
+                            &mut fanout,
+                            pass_threads,
+                        )?;
+                        Some((summary, fanout.finish(), chunks))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    // re-raise into the caller's panic containment
+                    Err(payload) => std::panic::resume_unwind(payload),
+                })
+                .collect()
+        });
+        let mut summary: Option<TraceSummary> = None;
+        let mut lanes = Vec::with_capacity(missing.len());
+        let mut chunks = 0u64;
+        for pass in results {
+            let (s, pass_lanes, pass_chunks) = pass?;
+            summary.get_or_insert(s);
+            lanes.extend(pass_lanes);
+            chunks += pass_chunks;
+        }
+        Some((summary?, lanes, chunks))
+    }
+
     /// Fold a shared analysis artifact into one point's sweep row +
     /// profiler inputs (stage 3: the per-technology energy fold).
     fn fold_energy(
@@ -716,6 +851,20 @@ impl Coordinator {
             result: ProfileResult::default(),
         };
         (row, inputs)
+    }
+}
+
+/// Resolve [`SweepOptions::replay_threads`]: an explicit setting wins,
+/// `0` mirrors the worker-pool auto-sizing (available parallelism,
+/// capped at 8).
+fn effective_replay_threads(opts: &SweepOptions) -> usize {
+    if opts.replay_threads > 0 {
+        opts.replay_threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(8)
     }
 }
 

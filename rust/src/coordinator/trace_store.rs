@@ -6,27 +6,41 @@
 //! the same trace serve every tech/placement variant *across processes*,
 //! not just within one coordinator's in-memory memo.
 //!
-//! Format (version 2, chunked): a versioned little-endian binary stream
-//! (no third-party serialization crates exist in this environment):
+//! Format (version 3, chunk-framed): a versioned little-endian binary
+//! stream (no third-party serialization crates exist in this environment):
 //!
 //! ```text
 //! magic  version
-//! (count>0, count × I-state record)*      — committed instructions, chunked
-//! 0u32                                    — chunk terminator
+//! (count>0, nbytes, nbytes × u8)*       — chunks of `count` I-state records
+//! 0u32                                  — chunk terminator
 //! program cycles committed stop pipe fu mem   — the TraceSummary trailer
 //! ```
+//!
+//! Each chunk header carries both its record count and its exact byte
+//! length, so a reader can find every chunk boundary *without decoding a
+//! single record*.  That is what makes warm replay fast and parallel:
+//! the chunk scanner slurps whole chunks into reusable buffers with one
+//! bulk read each, the records are decoded in place from the buffer
+//! (no per-field reader calls), and — because chunks are independent
+//! once their boundaries are known — [`TraceStore::replay_with`] can
+//! decode them on N worker lanes and reassemble the stream in sequence
+//! order before feeding the sink.  Corruption checks are unchanged from
+//! v2: magic, version, `SANITY_LIMIT` on counts/lengths/byte sizes,
+//! per-chunk byte-exactness, the end-of-stream probe, and the trailer
+//! record-count cross-check.
 //!
 //! The chunked layout serves the streaming pipeline on both sides: a
 //! [`SpillWriter`] is a [`TraceSink`] that writes records as the simulator
 //! commits them (the summary trailer lands in `finish`), and
 //! [`TraceStore::replay`] feeds a sink chunk-by-chunk without ever
 //! materializing the trace — both O(chunk) memory.  Loads are
-//! best-effort: any corruption (or a version-1 file from an older build)
-//! is treated as a cache miss and the trace is re-simulated and
+//! best-effort: any corruption (or a version-1/-2 file from an older
+//! build) is treated as a cache miss and the trace is re-simulated and
 //! re-written.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -35,15 +49,16 @@ use crate::probes::{
     CollectSink, IState, MemAccessInfo, MemLevel, MemStats, PipeStats,
     StopReason, Trace, TraceSink, TraceSummary,
 };
+use crate::util::lock_unpoisoned;
 
 const MAGIC: u32 = 0x4543_5452; // "ECTR"
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// Records per chunk: bounds both writer batching and replay memory.
 const CHUNK_RECORDS: u32 = 4096;
 
-/// Upper bound accepted for on-disk chunk counts and string lengths —
-/// anything larger is corruption, not data.
+/// Upper bound accepted for on-disk chunk counts, chunk byte lengths and
+/// string lengths — anything larger is corruption, not data.
 const SANITY_LIMIT: u32 = 1 << 24;
 
 /// A directory of spilled traces, addressed by content-hash key.
@@ -63,14 +78,56 @@ impl TraceStore {
         self.dir.join(format!("trace-{key}.bin"))
     }
 
+    /// True when a spill for `key` has been published.  A cheap existence
+    /// probe only — the file may still turn out corrupt on replay, so
+    /// callers must treat a later replay miss as authoritative.
+    pub fn contains(&self, key: &str) -> bool {
+        self.path_for(key).exists()
+    }
+
     /// Stream a spilled trace into `sink` chunk-by-chunk; returns the
     /// summary trailer on success.  Any missing/corrupt/old-version file
     /// is a miss (`None`) — note the sink may already have consumed
     /// records by then, so treat its state as tainted on a miss.
     pub fn replay(&self, key: &str, sink: &mut dyn TraceSink) -> Option<TraceSummary> {
+        self.replay_with(key, sink, 1).map(|(summary, _)| summary)
+    }
+
+    /// [`TraceStore::replay`] with an explicit decode-lane count; returns
+    /// the summary and the number of chunks decoded.
+    ///
+    /// `lanes <= 1` decodes on the calling thread (zero-copy chunk
+    /// decode, one bulk read per chunk).  `lanes >= 2` adds a pipelined
+    /// scanner thread plus `lanes` decode workers over bounded channels;
+    /// decoded chunks are reassembled in sequence order, so `sink` sees
+    /// records in exactly the committed order regardless of lane count.
+    pub fn replay_with(
+        &self,
+        key: &str,
+        sink: &mut dyn TraceSink,
+        lanes: usize,
+    ) -> Option<(TraceSummary, u64)> {
         let f = std::fs::File::open(self.path_for(key)).ok()?;
-        let mut src = FileSource { r: BufReader::new(f) };
-        decode_stream(&mut src, sink).ok()
+        let r = BufReader::new(f);
+        if lanes >= 2 {
+            decode_stream_parallel(r, sink, lanes).ok()
+        } else {
+            decode_stream_zero_copy(r, sink).ok()
+        }
+    }
+
+    /// Reference replay: walks records one at a time through per-field
+    /// reader calls — the pre-zero-copy decode path, kept as the
+    /// differential oracle for the chunk decoder (`rust/tests/
+    /// replay_parallel.rs`) and as the `perf_hotpaths` bench baseline.
+    pub fn replay_reference(
+        &self,
+        key: &str,
+        sink: &mut dyn TraceSink,
+    ) -> Option<TraceSummary> {
+        let f = std::fs::File::open(self.path_for(key)).ok()?;
+        let mut r = BufReader::new(f);
+        decode_stream_reference(&mut r, sink).ok()
     }
 
     /// Load a spilled trace, materialized; any missing/corrupt file is a
@@ -156,9 +213,11 @@ impl SpillWriter {
             return;
         }
         let count = self.pending.to_le_bytes();
+        let nbytes = (self.chunk.len() as u32).to_le_bytes();
         let mut chunk = std::mem::take(&mut self.chunk);
         self.pending = 0;
         self.write_bytes(&count);
+        self.write_bytes(&nbytes);
         self.write_bytes(&chunk);
         chunk.clear();
         self.chunk = chunk; // reuse the allocation
@@ -285,111 +344,77 @@ impl Writer {
     }
 }
 
-/// Byte source abstraction so the same decoder serves in-memory slices
-/// (tests, `decode`) and buffered files (`replay`) without materializing.
-trait ByteSource {
-    fn fill(&mut self, buf: &mut [u8]) -> Result<(), String>;
-    /// True when the source is exhausted (trailing bytes are corruption).
-    fn at_end(&mut self) -> Result<bool, String>;
-}
+// ---------------------------------------------------------------------------
+// Reader primitives (header/trailer + the reference per-record path).
+// `&[u8]` implements `Read`, so the same helpers serve in-memory slices
+// (tests, `decode`) and buffered files (`replay`).
 
-struct SliceSource<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl ByteSource for SliceSource<'_> {
-    fn fill(&mut self, buf: &mut [u8]) -> Result<(), String> {
-        let end = self
-            .i
-            .checked_add(buf.len())
-            .filter(|&e| e <= self.b.len())
-            .ok_or_else(|| format!("truncated trace at byte {}", self.i))?;
-        buf.copy_from_slice(&self.b[self.i..end]);
-        self.i = end;
-        Ok(())
-    }
-
-    fn at_end(&mut self) -> Result<bool, String> {
-        Ok(self.i == self.b.len())
-    }
-}
-
-struct FileSource {
-    r: BufReader<std::fs::File>,
-}
-
-impl ByteSource for FileSource {
-    fn fill(&mut self, buf: &mut [u8]) -> Result<(), String> {
-        self.r.read_exact(buf).map_err(|e| format!("reading trace: {e}"))
-    }
-
-    fn at_end(&mut self) -> Result<bool, String> {
-        let mut probe = [0u8; 1];
-        match self.r.read(&mut probe) {
-            Ok(0) => Ok(true),
-            Ok(_) => Ok(false),
-            Err(e) => Err(format!("reading trace: {e}")),
-        }
-    }
-}
-
-fn r_u8<S: ByteSource>(s: &mut S) -> Result<u8, String> {
+fn r_u8<R: Read>(r: &mut R) -> Result<u8, String> {
     let mut b = [0u8; 1];
-    s.fill(&mut b)?;
+    r.read_exact(&mut b).map_err(|e| format!("reading trace: {e}"))?;
     Ok(b[0])
 }
 
-fn r_u32<S: ByteSource>(s: &mut S) -> Result<u32, String> {
+fn r_u32<R: Read>(r: &mut R) -> Result<u32, String> {
     let mut b = [0u8; 4];
-    s.fill(&mut b)?;
+    r.read_exact(&mut b).map_err(|e| format!("reading trace: {e}"))?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn r_u64<S: ByteSource>(s: &mut S) -> Result<u64, String> {
+fn r_u64<R: Read>(r: &mut R) -> Result<u64, String> {
     let mut b = [0u8; 8];
-    s.fill(&mut b)?;
+    r.read_exact(&mut b).map_err(|e| format!("reading trace: {e}"))?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn r_str<S: ByteSource>(s: &mut S) -> Result<String, String> {
-    let n = r_u32(s)?;
+fn r_str<R: Read>(r: &mut R) -> Result<String, String> {
+    let n = r_u32(r)?;
     if n > SANITY_LIMIT {
         return Err(format!("implausible string length {n}"));
     }
     let mut buf = vec![0u8; n as usize];
-    s.fill(&mut buf)?;
+    r.read_exact(&mut buf).map_err(|e| format!("reading trace: {e}"))?;
     String::from_utf8(buf).map_err(|_| "bad utf8".to_string())
 }
 
-fn r_istate<S: ByteSource>(s: &mut S) -> Result<IState, String> {
-    let seq = r_u64(s)?;
-    let pc = r_u32(s)?;
-    let instr = Instruction::decode(r_u64(s)?).ok_or("bad instruction word")?;
-    let fu_idx = r_u8(s)? as usize;
+/// True when the source is exhausted (trailing bytes are corruption).
+fn at_end<R: Read>(r: &mut R) -> Result<bool, String> {
+    let mut probe = [0u8; 1];
+    match r.read(&mut probe) {
+        Ok(0) => Ok(true),
+        Ok(_) => Ok(false),
+        Err(e) => Err(format!("reading trace: {e}")),
+    }
+}
+
+fn r_istate<R: Read>(r: &mut R) -> Result<IState, String> {
+    let seq = r_u64(r)?;
+    let pc = r_u32(r)?;
+    let instr = Instruction::decode(r_u64(r)?).ok_or("bad instruction word")?;
+    let fu_idx = r_u8(r)? as usize;
     let fu = *FuncUnit::all()
         .get(fu_idx)
         .ok_or_else(|| format!("bad func unit {fu_idx}"))?;
-    let tick_fetch = r_u64(s)?;
-    let tick_decode = r_u64(s)?;
-    let tick_rename = r_u64(s)?;
-    let tick_dispatch = r_u64(s)?;
-    let tick_issue = r_u64(s)?;
-    let tick_complete = r_u64(s)?;
-    let tick_commit = r_u64(s)?;
-    let mem = match r_u8(s)? {
+    let tick_fetch = r_u64(r)?;
+    let tick_decode = r_u64(r)?;
+    let tick_rename = r_u64(r)?;
+    let tick_dispatch = r_u64(r)?;
+    let tick_issue = r_u64(r)?;
+    let tick_complete = r_u64(r)?;
+    let tick_commit = r_u64(r)?;
+    let mem = match r_u8(r)? {
         0 => None,
         1 => Some(MemAccessInfo {
-            addr: r_u32(s)?,
-            size: r_u8(s)?,
-            is_store: r_u8(s)? != 0,
-            level: level_from_u8(r_u8(s)?)?,
-            bank: r_u32(s)?,
-            l1_hit: r_u8(s)? != 0,
-            l2_hit: r_u8(s)? != 0,
-            mshr_merged: r_u8(s)? != 0,
-            latency: r_u64(s)?,
-            issue_tick: r_u64(s)?,
+            addr: r_u32(r)?,
+            size: r_u8(r)?,
+            is_store: r_u8(r)? != 0,
+            level: level_from_u8(r_u8(r)?)?,
+            bank: r_u32(r)?,
+            l1_hit: r_u8(r)? != 0,
+            l2_hit: r_u8(r)? != 0,
+            mshr_merged: r_u8(r)? != 0,
+            latency: r_u64(r)?,
+            issue_tick: r_u64(r)?,
         }),
         x => return Err(format!("bad mem flag {x}")),
     };
@@ -409,58 +434,388 @@ fn r_istate<S: ByteSource>(s: &mut S) -> Result<IState, String> {
     })
 }
 
-/// Decode a v2 stream, feeding records into `sink`; returns the trailer.
-fn decode_stream<S: ByteSource>(
-    src: &mut S,
+/// Parse the summary trailer (everything after the chunk terminator).
+fn read_trailer<R: Read>(r: &mut R) -> Result<TraceSummary, String> {
+    let program = r_str(r)?;
+    let cycles = r_u64(r)?;
+    let committed = r_u64(r)?;
+    let stop = stop_from_u8(r_u8(r)?)?;
+    let mut pf = [0u64; 16];
+    for x in pf.iter_mut() {
+        *x = r_u64(r)?;
+    }
+    let mut fu_counts = [0u64; crate::isa::func_unit::NUM_FUNC_UNITS];
+    for x in fu_counts.iter_mut() {
+        *x = r_u64(r)?;
+    }
+    let pipe = pipe_from_fields(pf, fu_counts);
+    let mut mf = [0u64; 14];
+    for x in mf.iter_mut() {
+        *x = r_u64(r)?;
+    }
+    let mem = mem_from_fields(mf);
+    Ok(TraceSummary { program: program.into(), pipe, mem, cycles, committed, stop })
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy chunk decode: one bulk read per chunk, records decoded in
+// place from the buffer.
+
+/// Cursor over one fully-read chunk body.
+struct Slice<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Slice<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| format!("truncated chunk at byte {}", self.i))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+}
+
+/// Decode one record in place from the chunk buffer (the slice twin of
+/// [`r_istate`] — no per-field reader calls, no intermediate copies).
+fn istate_from_slice(s: &mut Slice) -> Result<IState, String> {
+    let seq = s.u64()?;
+    let pc = s.u32()?;
+    let instr = Instruction::decode(s.u64()?).ok_or("bad instruction word")?;
+    let fu_idx = s.u8()? as usize;
+    let fu = *FuncUnit::all()
+        .get(fu_idx)
+        .ok_or_else(|| format!("bad func unit {fu_idx}"))?;
+    let tick_fetch = s.u64()?;
+    let tick_decode = s.u64()?;
+    let tick_rename = s.u64()?;
+    let tick_dispatch = s.u64()?;
+    let tick_issue = s.u64()?;
+    let tick_complete = s.u64()?;
+    let tick_commit = s.u64()?;
+    let mem = match s.u8()? {
+        0 => None,
+        1 => Some(MemAccessInfo {
+            addr: s.u32()?,
+            size: s.u8()?,
+            is_store: s.u8()? != 0,
+            level: level_from_u8(s.u8()?)?,
+            bank: s.u32()?,
+            l1_hit: s.u8()? != 0,
+            l2_hit: s.u8()? != 0,
+            mshr_merged: s.u8()? != 0,
+            latency: s.u64()?,
+            issue_tick: s.u64()?,
+        }),
+        x => return Err(format!("bad mem flag {x}")),
+    };
+    Ok(IState {
+        seq,
+        pc,
+        instr,
+        fu,
+        tick_fetch,
+        tick_decode,
+        tick_rename,
+        tick_dispatch,
+        tick_issue,
+        tick_complete,
+        tick_commit,
+        mem,
+    })
+}
+
+/// Decode exactly `count` records from a chunk buffer into `out`
+/// (cleared first; its allocation is reused across chunks).  The buffer
+/// must be consumed exactly — a leftover or shortfall means the chunk
+/// header lied about its framing.
+fn decode_chunk_into(
+    buf: &[u8],
+    count: u32,
+    out: &mut Vec<IState>,
+) -> Result<(), String> {
+    out.clear();
+    out.reserve(count as usize);
+    let mut s = Slice { b: buf, i: 0 };
+    for _ in 0..count {
+        out.push(istate_from_slice(&mut s)?);
+    }
+    if s.i != buf.len() {
+        return Err(format!(
+            "chunk framing mismatch: {} bytes left after {count} records",
+            buf.len() - s.i
+        ));
+    }
+    Ok(())
+}
+
+/// Reads chunk frames (header + whole body) from a v3 stream without
+/// decoding records — the boundary scanner that makes chunk decode
+/// independent and therefore parallelizable.
+struct ChunkScanner<R: Read> {
+    r: R,
+    /// records promised by the chunk headers so far (cross-checked
+    /// against the trailer's committed count in [`ChunkScanner::finish`])
+    records: u64,
+}
+
+impl<R: Read> ChunkScanner<R> {
+    /// Validate the stream header and position at the first chunk.
+    fn new(mut r: R) -> Result<Self, String> {
+        if r_u32(&mut r)? != MAGIC {
+            return Err("bad magic".into());
+        }
+        if r_u32(&mut r)? != VERSION {
+            return Err("unsupported trace version".into());
+        }
+        Ok(Self { r, records: 0 })
+    }
+
+    /// Read the next chunk body into `buf` (cleared and resized); returns
+    /// its record count, or `None` at the chunk terminator.
+    fn next_chunk(&mut self, buf: &mut Vec<u8>) -> Result<Option<u32>, String> {
+        let count = r_u32(&mut self.r)?;
+        if count == 0 {
+            return Ok(None);
+        }
+        if count > SANITY_LIMIT {
+            return Err(format!("implausible chunk size {count}"));
+        }
+        let nbytes = r_u32(&mut self.r)?;
+        if nbytes > SANITY_LIMIT {
+            return Err(format!("implausible chunk byte length {nbytes}"));
+        }
+        buf.clear();
+        buf.resize(nbytes as usize, 0);
+        self.r
+            .read_exact(buf)
+            .map_err(|e| format!("reading trace: {e}"))?;
+        self.records += count as u64;
+        Ok(Some(count))
+    }
+
+    /// Parse the trailer after the terminator, verify end-of-stream and
+    /// the record-count cross-check.
+    fn finish(mut self) -> Result<TraceSummary, String> {
+        let summary = read_trailer(&mut self.r)?;
+        if !at_end(&mut self.r)? {
+            return Err("trailing bytes after trailer".into());
+        }
+        if self.records != summary.committed {
+            return Err(format!(
+                "record count {} disagrees with trailer committed {}",
+                self.records, summary.committed
+            ));
+        }
+        Ok(summary)
+    }
+}
+
+/// Sequential zero-copy decode: scan chunk boundaries, bulk-read each
+/// chunk into one reusable buffer, decode records in place, feed the
+/// sink.  Returns the trailer and the number of chunks decoded.
+fn decode_stream_zero_copy<R: Read>(
+    r: R,
+    sink: &mut dyn TraceSink,
+) -> Result<(TraceSummary, u64), String> {
+    let mut scanner = ChunkScanner::new(r)?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut recs: Vec<IState> = Vec::new();
+    let mut chunks: u64 = 0;
+    while let Some(count) = scanner.next_chunk(&mut buf)? {
+        decode_chunk_into(&buf, count, &mut recs)?;
+        chunks += 1;
+        for is in recs.drain(..) {
+            sink.on_commit(is);
+        }
+    }
+    Ok((scanner.finish()?, chunks))
+}
+
+/// Pipelined multi-lane decode: a scanner thread finds chunk boundaries
+/// and ships whole chunk buffers to `lanes` decode workers over a
+/// bounded channel; the calling thread reassembles decoded chunks in
+/// sequence order and feeds the sink, so the record stream is
+/// byte-identical to the sequential path.  Buffers recycle from the
+/// workers back to the scanner, keeping memory O(lanes × chunk).
+fn decode_stream_parallel<R: Read + Send>(
+    r: R,
+    sink: &mut dyn TraceSink,
+    lanes: usize,
+) -> Result<(TraceSummary, u64), String> {
+    let lanes = lanes.max(2);
+    // scanner -> workers: (sequence number, record count, chunk bytes)
+    let (tx_work, rx_work) = mpsc::sync_channel::<(u64, u32, Vec<u8>)>(lanes * 2);
+    let rx_work = Arc::new(Mutex::new(rx_work));
+    // workers -> reassembly: (sequence number, decoded records)
+    let (tx_done, rx_done) =
+        mpsc::sync_channel::<(u64, Result<Vec<IState>, String>)>(lanes * 2 + 2);
+    // scanner -> reassembly: the trailer (or the scan error) + chunk count
+    let (tx_tail, rx_tail) =
+        mpsc::sync_channel::<Result<(TraceSummary, u64), String>>(1);
+    // workers -> scanner: spent chunk buffers for reuse
+    let (tx_free, rx_free) = mpsc::channel::<Vec<u8>>();
+
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            let scan = || -> Result<(TraceSummary, u64), String> {
+                let mut scanner = ChunkScanner::new(r)?;
+                let mut idx: u64 = 0;
+                loop {
+                    let mut buf = rx_free.try_recv().unwrap_or_default();
+                    match scanner.next_chunk(&mut buf)? {
+                        Some(count) => {
+                            if tx_work.send((idx, count, buf)).is_err() {
+                                return Err(
+                                    "replay decode lanes exited early".into()
+                                );
+                            }
+                            idx += 1;
+                        }
+                        None => break,
+                    }
+                }
+                Ok((scanner.finish()?, idx))
+            };
+            let result = scan();
+            // close the work queue so the lanes drain and exit, then
+            // publish the tail (capacity 1: the send cannot block)
+            drop(tx_work);
+            let _ = tx_tail.send(result);
+        });
+        for _ in 0..lanes {
+            let rx_work = Arc::clone(&rx_work);
+            let tx_done = tx_done.clone();
+            let tx_free = tx_free.clone();
+            scope.spawn(move || {
+                loop {
+                    // hold the lock only while waiting for one frame;
+                    // decode happens after it is released
+                    let frame = lock_unpoisoned(&rx_work).recv();
+                    let Ok((idx, count, buf)) = frame else { break };
+                    let mut recs = Vec::with_capacity(count as usize);
+                    let res =
+                        decode_chunk_into(&buf, count, &mut recs).map(|_| recs);
+                    let _ = tx_free.send(buf);
+                    if tx_done.send((idx, res)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        // only the workers may hold done/free senders, so the loops below
+        // terminate when they exit
+        drop(tx_done);
+        drop(tx_free);
+
+        // In-order reassembly on the calling thread.  This loop drains
+        // rx_done to disconnection unconditionally (even after an error),
+        // so no worker or scanner can block on a full channel while the
+        // scope waits to join them.
+        let mut pending: std::collections::HashMap<u64, Vec<IState>> =
+            std::collections::HashMap::new();
+        let mut next: u64 = 0;
+        let mut first_err: Option<String> = None;
+        for (idx, res) in rx_done.iter() {
+            match res {
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Ok(recs) => {
+                    if first_err.is_none() {
+                        pending.insert(idx, recs);
+                        while let Some(recs) = pending.remove(&next) {
+                            for is in recs {
+                                sink.on_commit(is);
+                            }
+                            next += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let tail = rx_tail
+            .recv()
+            .unwrap_or_else(|_| Err("replay scanner exited".into()));
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let (summary, chunks) = tail?;
+        if next != chunks || !pending.is_empty() {
+            return Err(format!(
+                "chunk reassembly incomplete: fed {next} of {chunks} chunks"
+            ));
+        }
+        Ok((summary, chunks))
+    })
+}
+
+/// Reference decoder: the pre-zero-copy replay path, one record at a
+/// time through per-field reader calls.  Decodes the same v3 framing
+/// (the per-chunk byte length is read and ignored), so it stays a valid
+/// differential oracle for [`decode_stream_zero_copy`] and the honest
+/// baseline for the replay bench.
+fn decode_stream_reference<R: Read>(
+    r: &mut R,
     sink: &mut dyn TraceSink,
 ) -> Result<TraceSummary, String> {
-    if r_u32(src)? != MAGIC {
+    if r_u32(r)? != MAGIC {
         return Err("bad magic".into());
     }
-    if r_u32(src)? != VERSION {
+    if r_u32(r)? != VERSION {
         return Err("unsupported trace version".into());
     }
     let mut records: u64 = 0;
     loop {
-        let n = r_u32(src)?;
+        let n = r_u32(r)?;
         if n == 0 {
             break;
         }
         if n > SANITY_LIMIT {
             return Err(format!("implausible chunk size {n}"));
         }
+        let nbytes = r_u32(r)?;
+        if nbytes > SANITY_LIMIT {
+            return Err(format!("implausible chunk byte length {nbytes}"));
+        }
         for _ in 0..n {
-            sink.on_commit(r_istate(src)?);
+            sink.on_commit(r_istate(r)?);
             records += 1;
         }
     }
-    let program = r_str(src)?;
-    let cycles = r_u64(src)?;
-    let committed = r_u64(src)?;
-    let stop = stop_from_u8(r_u8(src)?)?;
-    let mut pf = [0u64; 16];
-    for x in pf.iter_mut() {
-        *x = r_u64(src)?;
-    }
-    let mut fu_counts = [0u64; crate::isa::func_unit::NUM_FUNC_UNITS];
-    for x in fu_counts.iter_mut() {
-        *x = r_u64(src)?;
-    }
-    let pipe = pipe_from_fields(pf, fu_counts);
-    let mut mf = [0u64; 14];
-    for x in mf.iter_mut() {
-        *x = r_u64(src)?;
-    }
-    let mem = mem_from_fields(mf);
-    if !src.at_end()? {
+    let summary = read_trailer(r)?;
+    if !at_end(r)? {
         return Err("trailing bytes after trailer".into());
     }
-    if records != committed {
+    if records != summary.committed {
         return Err(format!(
-            "record count {records} disagrees with trailer committed {committed}"
+            "record count {records} disagrees with trailer committed {committed}",
+            committed = summary.committed
         ));
     }
-    Ok(TraceSummary { program: program.into(), pipe, mem, cycles, committed, stop })
+    Ok(summary)
 }
 
 fn level_to_u8(l: MemLevel) -> u8 {
@@ -586,11 +941,15 @@ pub fn encode(t: &Trace) -> Vec<u8> {
     let mut w = Writer { buf: Vec::with_capacity(64 + t.ciq.len() * 96) };
     w.u32(MAGIC);
     w.u32(VERSION);
+    let mut body = Writer { buf: Vec::new() };
     for chunk in t.ciq.chunks(CHUNK_RECORDS as usize) {
-        w.u32(chunk.len() as u32);
+        body.buf.clear();
         for is in chunk {
-            w.istate(is);
+            body.istate(is);
         }
+        w.u32(chunk.len() as u32);
+        w.u32(body.buf.len() as u32);
+        w.buf.extend_from_slice(&body.buf);
     }
     w.u32(0);
     w.summary(&t.summary());
@@ -598,10 +957,11 @@ pub fn encode(t: &Trace) -> Vec<u8> {
 }
 
 /// Parse a trace from the binary format; errors on any inconsistency.
+/// Decodes through the same chunk scanner as `replay`, so the fuzz tests
+/// exercising this path exercise the hot path.
 pub fn decode(bytes: &[u8]) -> Result<Trace, String> {
-    let mut src = SliceSource { b: bytes, i: 0 };
     let mut sink = CollectSink::default();
-    let summary = decode_stream(&mut src, &mut sink)?;
+    let (summary, _chunks) = decode_stream_zero_copy(bytes, &mut sink)?;
     Ok(Trace::from_parts(summary, sink.ciq))
 }
 
@@ -659,6 +1019,16 @@ mod tests {
     }
 
     #[test]
+    fn reference_decoder_matches_zero_copy() {
+        let t = sample_trace();
+        let bytes = encode(&t);
+        let mut sink = CollectSink::default();
+        let summary =
+            decode_stream_reference(&mut bytes.as_slice(), &mut sink).unwrap();
+        assert_traces_equal(&t, &Trace::from_parts(summary, sink.ciq));
+    }
+
+    #[test]
     fn store_roundtrip_via_disk() {
         let dir = std::env::temp_dir().join(format!(
             "eva-cim-trace-store-test-{}",
@@ -666,8 +1036,10 @@ mod tests {
         ));
         let store = TraceStore::open(&dir).unwrap();
         let t = sample_trace();
+        assert!(!store.contains("k1"));
         assert!(store.load("k1").is_none());
         store.store("k1", &t).unwrap();
+        assert!(store.contains("k1"));
         let back = store.load("k1").unwrap();
         assert_traces_equal(&t, &back);
         std::fs::remove_dir_all(&dir).ok();
@@ -697,6 +1069,19 @@ mod tests {
         // replay streams the same records and trailer
         let mut sink = CollectSink::default();
         let summary = store.replay("k2", &mut sink).unwrap();
+        assert_traces_equal(&t, &Trace::from_parts(summary, sink.ciq));
+
+        // multi-lane replay reassembles the identical stream, and the
+        // reference decoder agrees
+        for lanes in [2usize, 8] {
+            let mut sink = CollectSink::default();
+            let (summary, chunks) =
+                store.replay_with("k2", &mut sink, lanes).unwrap();
+            assert!(chunks >= 1);
+            assert_traces_equal(&t, &Trace::from_parts(summary, sink.ciq));
+        }
+        let mut sink = CollectSink::default();
+        let summary = store.replay_reference("k2", &mut sink).unwrap();
         assert_traces_equal(&t, &Trace::from_parts(summary, sink.ciq));
         std::fs::remove_dir_all(&dir).ok();
     }

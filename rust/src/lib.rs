@@ -55,6 +55,5 @@ pub mod runtime;
 pub mod serve;
 #[allow(missing_docs)]
 pub mod sim;
-#[allow(missing_docs)]
 pub mod util;
 pub mod workloads;

@@ -7,8 +7,8 @@
 //!                     [--backend auto|native|pjrt]
 //! eva-cim asm <file.s> [--config c1]             run a text-assembly file
 //! eva-cim sweep [--benches a,b] [--configs c1,c2] [--techs sram,fefet]
-//!               [--scale N] [--jobs N] [--chunk N] [--csv out.csv]
-//!               [--cache-dir DIR] [--resume]
+//!               [--scale N] [--jobs N] [--chunk N] [--replay-threads N]
+//!               [--csv out.csv] [--cache-dir DIR] [--resume]
 //! eva-cim explore --bench <b> [--techs all] [--configs c1,c2,c3]
 //!               [--cache-dir DIR] [--resume] [--csv out.csv]
 //! eva-cim serve [--addr 127.0.0.1:7878] [--http-workers N] [--queue N]
@@ -202,13 +202,14 @@ fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
 
 /// Seed an [`Evaluation`] with the sizing/worker-pool/cache flags shared
 /// by every sweeping command: `--scale`, `--seed`, `--jobs` (alias
-/// `--workers`), `--chunk`, `--cache-dir`, `--resume`, `--rule`,
-/// `--backend`, `--max-instructions`.
+/// `--workers`), `--chunk`, `--replay-threads`, `--cache-dir`,
+/// `--resume`, `--rule`, `--backend`, `--max-instructions`.
 fn eval_from_args(args: &cli::Args) -> Result<Evaluation, String> {
     let mut ev = Evaluation::new()
         .scale(args.usize_flag("scale", 0)?)
         .seed(args.usize_flag("seed", 42)? as u64)
         .chunk(args.usize_flag("chunk", 0)?)
+        .replay_threads(args.usize_flag("replay-threads", 0)?)
         .resume(args.bool_flag("resume")?)
         .rule(parse_rule(&args.flag_or("rule", "any"))?)
         .backend(parse_backend(&args.flag_or("backend", "auto"))?);

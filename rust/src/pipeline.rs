@@ -10,6 +10,12 @@
 //! [`run_streaming`] is the sequential variant (same O(window) memory, no
 //! thread) — useful where spawning is undesirable and as the fairest
 //! baseline for the `perf_hotpaths` pipelining comparison.
+//!
+//! Warm-trace replay reuses this producer∥consumer shape one level down:
+//! `coordinator::trace_store` decodes spill chunks on N worker lanes
+//! over the same kind of bounded channel, with sequence-numbered
+//! reassembly so the [`AnalyzerFanout`] still observes records in strict
+//! commit order (see [`crate::coordinator::trace_store::TraceStore::replay_with`]).
 
 use std::sync::mpsc;
 

@@ -209,6 +209,8 @@ pub struct ServeStats {
     analyses_cached: AtomicU64,
     replays_skipped: AtomicU64,
     trace_disk_hits: AtomicU64,
+    replay_chunks_decoded: AtomicU64,
+    replay_lanes_split: AtomicU64,
 }
 
 impl ServeStats {
@@ -266,6 +268,10 @@ impl ServeStats {
         self.analyses_cached.fetch_add(s.analyses_cached, Ordering::Relaxed);
         self.replays_skipped.fetch_add(s.replays_skipped, Ordering::Relaxed);
         self.trace_disk_hits.fetch_add(s.trace_disk_hits, Ordering::Relaxed);
+        self.replay_chunks_decoded
+            .fetch_add(s.replay_chunks_decoded, Ordering::Relaxed);
+        self.replay_lanes_split
+            .fetch_add(s.replay_lanes_split, Ordering::Relaxed);
     }
 
     /// The `GET /stats` report: service counters + the cumulative sweep
@@ -302,6 +308,8 @@ impl ServeStats {
             ("analyses_cached", &self.analyses_cached),
             ("replays_skipped", &self.replays_skipped),
             ("trace_disk_hits", &self.trace_disk_hits),
+            ("replay_chunks_decoded", &self.replay_chunks_decoded),
+            ("replay_lanes_split", &self.replay_lanes_split),
         ] {
             ledger.row(vec![Cell::str(name), Cell::int(v.load(Ordering::Relaxed))]);
         }
@@ -682,7 +690,7 @@ fn build_request(
             check_fields(
                 body,
                 &["bench", "config", "tech", "cim", "rule", "scale", "seed",
-                  "max_instructions"],
+                  "max_instructions", "replay_threads"],
             )?;
             let bench = body
                 .req("bench")
@@ -721,7 +729,7 @@ fn build_request(
             check_fields(
                 body,
                 &["benches", "configs", "techs", "cim", "rule", "scale",
-                  "seed", "max_instructions"],
+                  "seed", "max_instructions", "replay_threads"],
             )?;
             let benches = match body.get("benches") {
                 Some(v) => str_list(v, "benches")?,
@@ -757,7 +765,7 @@ fn build_request(
             check_fields(
                 body,
                 &["bench", "benches", "configs", "techs", "cim", "rule",
-                  "scale", "seed", "max_instructions"],
+                  "scale", "seed", "max_instructions", "replay_threads"],
             )?;
             let benches = match (body.get("bench"), body.get("benches")) {
                 (Some(_), Some(_)) => {
@@ -816,6 +824,11 @@ fn apply_common(mut ev: Evaluation, body: &Json) -> Result<Evaluation, String> {
         ev = ev
             .max_instructions(v.as_u64().ok_or("'max_instructions' must be a number")?);
     }
+    if let Some(v) = body.get("replay_threads") {
+        ev = ev.replay_threads(
+            v.as_usize().ok_or("'replay_threads' must be a number")?,
+        );
+    }
     if let Some(v) = body.get("rule") {
         let s = v.as_str().ok_or("'rule' must be a string")?;
         ev = ev.rule(
@@ -837,6 +850,9 @@ fn apply_common(mut ev: Evaluation, body: &Json) -> Result<Evaluation, String> {
 /// raw optional fields (absent → `null`).  Its canonical dump is the
 /// dedup key's preimage, so two requests that differ only in JSON
 /// formatting or key order normalize to identical bytes.
+/// `replay_threads` is deliberately absent: it never changes the response
+/// bytes (like every cache key, the dedup key ignores pure tuning knobs),
+/// so concurrent requests differing only there still share one leader.
 fn norm_obj(
     endpoint: &str,
     benches: &[String],

@@ -7,17 +7,26 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value.  Objects use a `BTreeMap`, so serialization is
+/// canonical: equal values always dump to identical bytes.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON has only f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object field lookup; `None` for non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -25,6 +34,7 @@ impl Json {
         }
     }
 
+    /// Array element lookup; `None` for non-arrays and out of range.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -32,6 +42,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -39,10 +50,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -50,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -57,10 +71,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `u64`, if this is a number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|x| x as u64)
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),

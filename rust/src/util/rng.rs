@@ -11,10 +11,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// A generator starting from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// The next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -31,6 +33,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator whose state is expanded from `seed` via [`SplitMix64`].
     pub fn new(seed: u64) -> Self {
         let mut sm = SplitMix64::new(seed);
         Self {
@@ -38,6 +41,7 @@ impl Rng {
         }
     }
 
+    /// The next 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -53,6 +57,7 @@ impl Rng {
         result
     }
 
+    /// The next 32-bit output (upper half of [`Rng::next_u64`]).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -90,6 +95,7 @@ impl Rng {
         lo + (hi - lo) * self.gen_f64()
     }
 
+    /// True with probability `p`.
     pub fn gen_bool(&mut self, p: f64) -> bool {
         self.gen_f64() < p
     }

@@ -3,7 +3,9 @@
 /// Column alignment.
 #[derive(Clone, Copy, PartialEq, Eq)]
 pub enum Align {
+    /// Pad on the right (names, labels).
     Left,
+    /// Pad on the left (numbers).
     Right,
 }
 
@@ -16,6 +18,7 @@ pub struct TextTable {
 }
 
 impl TextTable {
+    /// An empty table: first column left-aligned, the rest right-aligned.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -28,22 +31,26 @@ impl TextTable {
         }
     }
 
+    /// Override the per-column alignment (must match the header count).
     pub fn align(mut self, align: &[Align]) -> Self {
         assert_eq!(align.len(), self.headers.len());
         self.align = align.to_vec();
         self
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// [`TextTable::row`] from string slices.
     pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
         self.row(cells.iter().map(|s| s.to_string()).collect())
     }
 
+    /// Number of data rows appended so far.
     pub fn num_rows(&self) -> usize {
         self.rows.len()
     }

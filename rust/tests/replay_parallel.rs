@@ -1,0 +1,204 @@
+//! Replay-parallelism contracts (PR 7: multi-lane chunk decode +
+//! worker-split analyzer fan-out).
+//!
+//! 1. **Lane-count invariance** — replaying a spilled trace through the
+//!    analyzer fan-out at 1, 2 and 8 decode lanes produces analysis
+//!    artifacts byte-identical to each other *and* to the per-record
+//!    reference decoder, across several randomized workloads.
+//! 2. **Report invariance** — a cached sweep forced onto the warm-replay
+//!    path renders byte-identical `Report` JSON at every
+//!    `replay_threads` setting (and identical to its own cold pass).
+//! 3. **Corruption robustness** — truncated chunks, corrupted count /
+//!    byte-length framing words, bad magic and trailing garbage are
+//!    decode errors and replay misses at any lane count — never panics,
+//!    never silently-wrong data.
+
+use std::path::PathBuf;
+
+use eva_cim::analyzer::{LocalityRule, OnlineAnalyzer};
+use eva_cim::api::{BackendSel, Evaluation};
+use eva_cim::config::{CimLevels, SystemConfig};
+use eva_cim::coordinator::analysis_store::{artifact_to_json, AnalysisArtifact};
+use eva_cim::coordinator::trace_store::{decode, encode, TraceStore};
+use eva_cim::pipeline::AnalyzerFanout;
+use eva_cim::probes::CollectSink;
+use eva_cim::reshape::DeltaSink;
+use eva_cim::sim::{simulate, Limits};
+use eva_cim::workloads;
+
+const PLACEMENTS: [CimLevels; 3] =
+    [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both];
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("eva-cim-replay-par-{tag}-{}", std::process::id()))
+}
+
+/// A three-lane fan-out (one analyzer per CiM placement) — the same
+/// shape the coordinator replays into.
+fn fanout() -> AnalyzerFanout<DeltaSink> {
+    AnalyzerFanout::new(
+        PLACEMENTS
+            .iter()
+            .map(|&cim| {
+                OnlineAnalyzer::new(
+                    cim,
+                    LocalityRule::AnyCache,
+                    DeltaSink::default(),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn lane_count_never_changes_the_artifacts() {
+    let dir = tmp("lanes");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = TraceStore::open(&dir).unwrap();
+    let cfg = SystemConfig::preset("c1").unwrap();
+    for (i, (bench, scale, seed)) in
+        [("lcs", 2, 7), ("km", 2, 11), ("bfs", 3, 5)].into_iter().enumerate()
+    {
+        let prog = workloads::build(bench, scale, seed).unwrap();
+        let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+        let key = format!("t{i}");
+        store.store(&key, &trace).unwrap();
+
+        // lanes == 0 selects the per-record reference decoder
+        let mut renders: Vec<Vec<String>> = Vec::new();
+        for lanes in [0usize, 1, 2, 8] {
+            let mut f = fanout();
+            let summary = if lanes == 0 {
+                store.replay_reference(&key, &mut f).unwrap()
+            } else {
+                let (s, chunks) =
+                    store.replay_with(&key, &mut f, lanes).unwrap();
+                assert!(chunks >= 1, "{bench}: no chunks decoded");
+                s
+            };
+            assert_eq!(summary.committed, trace.committed);
+            let arts: Vec<String> = f
+                .finish()
+                .into_iter()
+                .map(|(outcome, deltas)| {
+                    let a =
+                        AnalysisArtifact::new(summary.clone(), outcome, deltas);
+                    artifact_to_json(&a).dump()
+                })
+                .collect();
+            assert_eq!(arts.len(), PLACEMENTS.len());
+            renders.push(arts);
+        }
+        for r in &renders[1..] {
+            assert_eq!(
+                r, &renders[0],
+                "{bench}: lane count changed artifact bytes"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_threads_never_change_the_report() {
+    let mut renders: Vec<String> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let dir = tmp(&format!("report-{threads}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let ev = Evaluation::new()
+            .bench("lcs")
+            .preset("c1")
+            .cim_variants(&PLACEMENTS)
+            .scale(2)
+            .jobs(4)
+            .replay_threads(threads)
+            .backend(BackendSel::Native)
+            .cache_dir(dir.clone())
+            .resume(true);
+
+        // cold pass: simulate + spill the trace
+        let cold = ev.run().unwrap().render_json();
+
+        // strip everything except traces/, so the warm pass is forced
+        // onto the replay path (split fan-out + multi-lane decode)
+        std::fs::remove_file(dir.join("results.jsonl"))
+            .expect("cached run must publish results.jsonl");
+        std::fs::remove_dir_all(dir.join("analysis"))
+            .expect("cached run must publish analysis/");
+        let warm = ev.run().unwrap().render_json();
+
+        assert_eq!(cold, warm, "warm replay changed the report bytes");
+        renders.push(cold);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    for r in &renders[1..] {
+        assert_eq!(r, &renders[0], "replay_threads changed the report bytes");
+    }
+}
+
+#[test]
+fn corrupted_spills_are_misses_not_panics() {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let prog = workloads::build("lcs", 2, 7).unwrap();
+    let trace = simulate(&prog, &cfg, Limits::default()).unwrap();
+    let bytes = encode(&trace);
+    assert!(decode(&bytes).is_ok(), "pristine bytes must decode");
+
+    // layout: magic + version (8 bytes), then the first chunk's record
+    // count at [8..12] and body byte length at [12..16]
+    let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let nbytes = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let patched = |at: usize, word: u32| {
+        let mut b = bytes.clone();
+        b[at..at + 4].copy_from_slice(&word.to_le_bytes());
+        b
+    };
+    let mut truncated = bytes.clone();
+    truncated.truncate(bytes.len() / 2);
+    let mut garbage = bytes.clone();
+    garbage.extend_from_slice(b"xx");
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("truncated mid-chunk", truncated),
+        ("insane record count", patched(8, u32::MAX)),
+        ("record count off by one", patched(8, count + 1)),
+        ("insane chunk length", patched(12, 1 << 25)),
+        ("chunk length short by one", patched(12, nbytes - 1)),
+        ("chunk length long by one", patched(12, nbytes + 1)),
+        ("wrong magic", patched(0, 0xdead_beef)),
+        ("trailing garbage", garbage),
+        ("empty file", Vec::new()),
+    ];
+
+    let dir = tmp("fuzz");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = TraceStore::open(&dir).unwrap();
+    store.store("good", &trace).unwrap();
+    assert!(store.contains("good"));
+    for (what, bad) in cases {
+        assert!(decode(&bad).is_err(), "{what}: decode must error");
+        // plant the corrupt bytes as a published spill: every replay
+        // flavor must treat it as a miss
+        std::fs::write(dir.join("trace-bad.bin"), &bad).unwrap();
+        assert!(store.contains("bad"));
+        for lanes in [1usize, 8] {
+            let mut sink = CollectSink::default();
+            assert!(
+                store.replay_with("bad", &mut sink, lanes).is_none(),
+                "{what}: replay at {lanes} lanes must miss"
+            );
+        }
+        let mut sink = CollectSink::default();
+        assert!(
+            store.replay_reference("bad", &mut sink).is_none(),
+            "{what}: reference replay must miss"
+        );
+    }
+
+    // the good spill is untouched by its corrupt neighbor
+    let mut sink = CollectSink::default();
+    let summary = store.replay("good", &mut sink).unwrap();
+    assert_eq!(summary.committed, trace.committed);
+    assert_eq!(sink.ciq.len() as u64, trace.committed);
+    std::fs::remove_dir_all(&dir).ok();
+}
