@@ -1,9 +1,11 @@
 //! Perf bench (§Perf of EXPERIMENTS.md): hot-path throughputs of the three
 //! L3 stages, streaming-vs-batch pipeline wall-clock, PJRT-vs-native
 //! backend latency per batched evaluation, the sweep result cache
-//! (warm resume must be ≥10x faster than cold), and warm-trace replay
+//! (warm resume must be ≥10x faster than cold), warm-trace replay
 //! decode (per-record reference vs zero-copy chunk decode vs pipelined
-//! multi-lane decode on the same spilled trace).
+//! multi-lane decode on the same spilled trace), and cold-path simulation
+//! (the per-commit reference interpreter vs the pre-decoded execution
+//! path on the same program).
 //!
 //! Targets (DESIGN.md §8): simulator ≥ 2 M instr/s, analyzer ≥ 5 M nodes/s,
 //! pipelined sim∥analyze beats sequential materialize-then-analyze,
@@ -27,7 +29,7 @@ use eva_cim::probes::{IState, TraceSink};
 use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
 use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink};
 use eva_cim::runtime::{NativeBackend, PjrtRuntime};
-use eva_cim::sim::{simulate, Limits};
+use eva_cim::sim::{decode, simulate, simulate_reference_into, Limits};
 use eva_cim::util::json::Json;
 use eva_cim::workloads;
 
@@ -168,11 +170,12 @@ fn bench_streaming(quick: bool) {
 
 /// Stage-factored sweep vs the legacy per-point analysis loop on a
 /// T-tech × P-placement grid sharing one trace.  Emits a machine-readable
-/// `BENCH_sweep.json` (schema `BENCH_sweep/2`) with the wall-clocks and
+/// `BENCH_sweep.json` (schema `BENCH_sweep/3`) with the wall-clocks and
 /// the ledger counters — plus the replay-decode entries collected by
-/// [`bench_replay`] — so CI can grep the factoring win and diff the key
-/// set against the committed snapshot at the repo root.
-fn bench_stage_factored(quick: bool, replay: Vec<(&'static str, Json)>) {
+/// [`bench_replay`] and the cold-path entries from [`bench_sim_decode`] —
+/// so CI can grep the factoring win and diff the key set against the
+/// committed snapshot at the repo root.
+fn bench_stage_factored(quick: bool, extra: Vec<(&'static str, Json)>) {
     let scale = if quick { 4 } else { 12 };
     let placements = [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both];
     let techs = [
@@ -240,7 +243,7 @@ fn bench_stage_factored(quick: bool, replay: Vec<(&'static str, Json)>) {
     assert_eq!(rows.len(), points.len());
 
     let mut entries: Vec<(&'static str, Json)> = vec![
-        ("schema", "BENCH_sweep/2".into()),
+        ("schema", "BENCH_sweep/3".into()),
         ("points", (points.len() as u64).into()),
         ("techs", (techs.len() as u64).into()),
         ("placements", (placements.len() as u64).into()),
@@ -251,7 +254,7 @@ fn bench_stage_factored(quick: bool, replay: Vec<(&'static str, Json)>) {
         ("analyses_cached", stats.analyses_cached.into()),
         ("replays_skipped", stats.replays_skipped.into()),
     ];
-    entries.extend(replay);
+    entries.extend(extra);
     let doc = Json::obj(entries).dump();
     if let Err(e) = std::fs::write("BENCH_sweep.json", &doc) {
         eprintln!("warning: could not write BENCH_sweep.json: {e}");
@@ -384,6 +387,61 @@ fn bench_replay(quick: bool) -> Vec<(&'static str, Json)> {
     ]
 }
 
+/// Cold-path dispatch: the per-commit reference interpreter
+/// (`simulate_reference_into`) vs the pre-decoded execution path
+/// (`decode::simulate_decoded_into`) on the same `stream_loop` program,
+/// both feeding a no-op sink so opcode dispatch and operand routing
+/// dominate the measurement.  The summaries must be equal — full
+/// byte-identity (commit streams, reports) is pinned by
+/// `rust/tests/sim_differential.rs`; here only the wall-clocks differ.
+/// Returns the `BENCH_sweep.json` entries.
+fn bench_sim_decode(quick: bool) -> Vec<(&'static str, Json)> {
+    struct NullSink;
+    impl TraceSink for NullSink {
+        fn on_commit(&mut self, _is: IState) {}
+    }
+
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let iters = if quick { 60_000 } else { 500_000 }; // ~540k / ~4.5M instrs
+    let prog = stream_loop(iters);
+    let limits = Limits { max_instructions: 100_000_000 };
+
+    let samples = if quick { 1 } else { 3 };
+    let mut time = |reference: bool| {
+        let mut best = f64::MAX;
+        let mut summary = None;
+        for _ in 0..samples {
+            let mut sink = NullSink;
+            let t0 = Instant::now();
+            let s = if reference {
+                simulate_reference_into(&prog, &cfg, limits, &mut sink)
+            } else {
+                decode::simulate_decoded_into(&prog, &cfg, limits, &mut sink)
+            }
+            .unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            summary = Some(s);
+        }
+        (best, summary.unwrap())
+    };
+    let (ref_s, ref_sum) = time(true);
+    let (dec_s, dec_sum) = time(false);
+    assert_eq!(ref_sum, dec_sum, "decoded path diverged from the reference");
+    println!(
+        "[perf] sim-decode: {:.2} M instrs: reference {:.1} ms -> \
+         pre-decoded {:.1} ms ({:.2}x)",
+        ref_sum.committed as f64 / 1e6,
+        ref_s * 1e3,
+        dec_s * 1e3,
+        ref_s / dec_s.max(1e-9),
+    );
+
+    vec![
+        ("sim_reference_ms", (ref_s * 1e3).into()),
+        ("sim_decoded_ms", (dec_s * 1e3).into()),
+    ]
+}
+
 fn bench_cache_resume(quick: bool) {
     let dir = std::env::temp_dir()
         .join(format!("eva-cim-bench-cache-{}", std::process::id()));
@@ -483,10 +541,13 @@ fn main() {
     bench_streaming(quick);
 
     // --- warm-trace replay: reference vs zero-copy vs multi-lane decode ----
-    let replay = bench_replay(quick);
+    let mut extra = bench_replay(quick);
+
+    // --- cold-path simulation: reference interpreter vs pre-decoded --------
+    extra.extend(bench_sim_decode(quick));
 
     // --- stage-factored sweep: shared analysis across tech variants --------
-    bench_stage_factored(quick, replay);
+    bench_stage_factored(quick, extra);
 
     // --- sweep result cache: cold vs warm resume ---------------------------
     bench_cache_resume(quick);

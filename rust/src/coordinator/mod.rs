@@ -37,6 +37,13 @@
 //! [`SweepStats::replay_chunks_decoded`] /
 //! [`SweepStats::replay_lanes_split`].
 //!
+//! The *cold* path — stage 1 when no spilled trace exists — runs the
+//! simulator's pre-decoded loop ([`crate::sim::decode`]) through the
+//! normal [`crate::sim::simulate_into`] dispatch.  The decoded path is
+//! byte-identical to the reference interpreter, so trace keys, spilled
+//! bytes, artifacts and ledger counters (`simulator_runs` in particular)
+//! are unchanged by it.
+//!
 //! Completed design points are persisted to an append-only JSONL result
 //! cache ([`cache`]) keyed by a stable content hash ([`key`]) of
 //! `(bench, scale, seed, SystemConfig, LocalityRule, backend)`.  A

@@ -33,10 +33,7 @@
     clippy::unnecessary_map_or
 )]
 // Every public item in the evaluator core must be documented; CI enforces
-// this via `RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`.  Modules
-// still carrying the pre-documentation-pass surface opt out explicitly
-// below (`#[allow(missing_docs)]`) — shrinking that list is tracked in
-// ROADMAP.md.
+// this via `RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`.
 #![warn(missing_docs)]
 
 pub mod analyzer;
@@ -53,7 +50,6 @@ pub mod profiler;
 pub mod reshape;
 pub mod runtime;
 pub mod serve;
-#[allow(missing_docs)]
 pub mod sim;
 pub mod util;
 pub mod workloads;

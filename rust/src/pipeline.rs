@@ -16,6 +16,12 @@
 //! over the same kind of bounded channel, with sequence-numbered
 //! reassembly so the [`AnalyzerFanout`] still observes records in strict
 //! commit order (see [`crate::coordinator::trace_store::TraceStore::replay_with`]).
+//!
+//! The simulator side of the channel runs the pre-decoded cold path
+//! ([`crate::sim::decode`]) via [`simulate_into`]'s dispatch — the commit
+//! stream entering the channel is byte-identical either way, so nothing
+//! at this layer (or below it in the cache stack) can tell the paths
+//! apart.
 
 use std::sync::mpsc;
 

@@ -37,7 +37,7 @@ impl MemLevel {
 /// AccessProbe + RequestProbe record for one memory instruction
 /// (Table I rows: "Request from master", "Memory access",
 /// "Response from slave").
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MemAccessInfo {
     /// request address (virtual = physical in this substrate)
     pub addr: u32,
@@ -62,7 +62,7 @@ pub struct MemAccessInfo {
 }
 
 /// InstProbe record: one committed instruction with its pipeline timeline.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct IState {
     /// sequence index in the committed instruction queue (CIQ)
     pub seq: u64,
@@ -92,7 +92,7 @@ pub struct IState {
 
 /// PipeProbe aggregate: functional-unit and structure activity counters
 /// (the McPAT-facing half of the trace).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PipeStats {
     /// instructions fetched (wrong-path included)
     pub fetched: u64,
@@ -129,7 +129,7 @@ pub struct PipeStats {
 }
 
 /// AccessProbe aggregate: per-level hit/miss counters.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MemStats {
     /// L1I fetch hits
     pub l1i_hits: u64,
@@ -196,7 +196,7 @@ impl InstrInfo {
 /// *except* the committed instruction queue.  This is the O(1)-size half
 /// of the modeling product; the O(instructions) half streams through a
 /// [`TraceSink`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TraceSummary {
     /// program name (shared handle — cloning a summary is allocation-free
     /// on this field)
@@ -284,7 +284,7 @@ impl TraceSink for CollectSink {
 }
 
 /// Full output of one simulation: the materialized modeling-stage product.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Trace {
     /// program name (shared handle, see [`TraceSummary::program`])
     pub program: std::sync::Arc<str>,

@@ -6,11 +6,15 @@ pub struct BranchPredictor {
     history: u32,
     history_bits: u32,
     btb: Vec<(u32, u32)>, // (pc, target)
+    /// total predictions made ([`BranchPredictor::predict`] calls)
     pub lookups: u64,
+    /// resolved-wrong predictions (direction or taken-target mismatch)
     pub mispredicts: u64,
 }
 
 impl BranchPredictor {
+    /// A predictor with `2^table_bits` counters and BTB entries (history
+    /// length capped at 12 bits).
     pub fn new(table_bits: u32) -> Self {
         Self {
             counters: vec![1u8; 1 << table_bits], // weakly not-taken

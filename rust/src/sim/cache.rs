@@ -25,6 +25,7 @@ pub struct Cache {
     ways: u32,
     line_shift: u32,
     banks: u32,
+    /// access latency of this level in cycles
     pub latency: u64,
     lines: Vec<Line>,
     use_stamp: u64,
@@ -35,14 +36,18 @@ pub struct Cache {
 /// Outcome of a single-level probe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LevelOutcome {
+    /// the line was resident in this level
     pub hit: bool,
     /// dirty line evicted (must be written back to the level below)
     pub writeback: Option<u32>,
+    /// bank the accessed line maps to
     pub bank: u32,
+    /// request was merged into an outstanding MSHR for the same line
     pub mshr_merged: bool,
 }
 
 impl Cache {
+    /// A cache level shaped by `cfg` (capacity/assoc/line/banks/latency).
     pub fn new(cfg: &CacheConfig) -> Self {
         let sets = cfg.sets();
         assert!(sets.is_power_of_two(), "sets must be a power of two");
@@ -59,6 +64,7 @@ impl Cache {
         }
     }
 
+    /// Line address (byte address with the line-offset bits dropped).
     #[inline]
     pub fn line_addr(&self, addr: u32) -> u32 {
         addr >> self.line_shift
@@ -148,6 +154,7 @@ impl Cache {
         self.lines.iter().filter(|l| l.valid).count()
     }
 
+    /// Total line slots (sets × ways).
     pub fn capacity_lines(&self) -> usize {
         self.lines.len()
     }
@@ -155,14 +162,20 @@ impl Cache {
 
 /// The full data-side hierarchy: L1D + shared L2 + DRAM.
 pub struct MemHierarchy {
+    /// L1 data cache
     pub l1d: Cache,
+    /// L1 instruction cache
     pub l1i: Cache,
+    /// unified second-level cache (data + instruction refills)
     pub l2: Cache,
+    /// main-memory access latency in cycles
     pub dram_latency: u64,
+    /// per-level hit/miss counters accumulated over the run
     pub stats: MemStats,
 }
 
 impl MemHierarchy {
+    /// A hierarchy from the three cache shapes plus the DRAM latency.
     pub fn new(l1i: &CacheConfig, l1d: &CacheConfig, l2: &CacheConfig, dram_latency: u64) -> Self {
         Self {
             l1d: Cache::new(l1d),

@@ -1,4 +1,5 @@
-//! The host-CPU model: functional EVA32 interpreter + out-of-order timing.
+//! The *reference* host-CPU model: functional EVA32 interpreter +
+//! out-of-order timing, one opcode match per dynamic instruction.
 //!
 //! Functional-first organization (the standard trace-driven style): the
 //! architectural state advances in program order, while a scoreboard-style
@@ -15,6 +16,12 @@
 //!
 //! Only *committed* instructions are recorded (wrong-path work never enters
 //! the CIQ) — exactly the view the paper's analyzer consumes.
+//!
+//! This module is the differential *oracle*: production simulation runs
+//! through the pre-decoded path in [`super::decode`], which must produce
+//! byte-identical commit streams, [`PipeStats`] and summaries
+//! (`rust/tests/sim_differential.rs` pins the contract — the same
+//! `replay_reference` discipline the warm-replay rebuild used).
 
 use crate::asm::Program;
 use crate::config::SystemConfig;
@@ -29,7 +36,9 @@ use super::cache::MemHierarchy;
 /// Simulation fault (bad memory access, bad jump target, ...).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimError {
+    /// instruction index the faulting instruction was fetched from
     pub pc: u32,
+    /// human-readable fault description
     pub msg: String,
 }
 
@@ -44,6 +53,8 @@ impl std::error::Error for SimError {}
 /// Run limits.
 #[derive(Clone, Copy, Debug)]
 pub struct Limits {
+    /// committed-instruction budget before the run stops with
+    /// [`StopReason::MaxInstructions`]
     pub max_instructions: u64,
 }
 
@@ -53,8 +64,10 @@ impl Default for Limits {
     }
 }
 
-/// Architectural state of the functional machine.
-struct ArchState {
+/// Architectural state of the functional machine (shared between the
+/// reference interpreter here and the pre-decoded path in
+/// [`super::decode`] so the two cannot diverge on memory semantics).
+pub(super) struct ArchState {
     regs: [i32; NUM_INT_REGS as usize],
     fregs: [f32; NUM_FP_REGS as usize],
     mem: Vec<u8>,
@@ -82,30 +95,30 @@ impl ArchState {
         Ok(a)
     }
 
-    fn read_u32(&self, addr: u32, pc: u32) -> Result<u32, SimError> {
+    pub(super) fn read_u32(&self, addr: u32, pc: u32) -> Result<u32, SimError> {
         let a = self.bound(addr, pc, 4)?;
         Ok(u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap()))
     }
 
-    fn write_u32(&mut self, addr: u32, v: u32, pc: u32) -> Result<(), SimError> {
+    pub(super) fn write_u32(&mut self, addr: u32, v: u32, pc: u32) -> Result<(), SimError> {
         let a = self.bound(addr, pc, 4)?;
         self.mem[a..a + 4].copy_from_slice(&v.to_le_bytes());
         Ok(())
     }
 
-    fn read_u8(&self, addr: u32, pc: u32) -> Result<u8, SimError> {
+    pub(super) fn read_u8(&self, addr: u32, pc: u32) -> Result<u8, SimError> {
         let a = self.bound(addr, pc, 1)?;
         Ok(self.mem[a])
     }
 
-    fn write_u8(&mut self, addr: u32, v: u8, pc: u32) -> Result<(), SimError> {
+    pub(super) fn write_u8(&mut self, addr: u32, v: u8, pc: u32) -> Result<(), SimError> {
         let a = self.bound(addr, pc, 1)?;
         self.mem[a] = v;
         Ok(())
     }
 
     #[inline]
-    fn r(&self, r: u8) -> i32 {
+    pub(super) fn r(&self, r: u8) -> i32 {
         if r == 0 {
             0
         } else if r < NUM_INT_REGS {
@@ -117,13 +130,13 @@ impl ArchState {
     }
 
     #[inline]
-    fn f(&self, r: u8) -> f32 {
+    pub(super) fn f(&self, r: u8) -> f32 {
         debug_assert!(r >= NUM_INT_REGS);
         self.fregs[(r - NUM_INT_REGS) as usize]
     }
 
     #[inline]
-    fn set_r(&mut self, r: u8, v: i32) {
+    pub(super) fn set_r(&mut self, r: u8, v: i32) {
         if r == 0 {
             return;
         }
@@ -135,19 +148,34 @@ impl ArchState {
     }
 
     #[inline]
-    fn set_f(&mut self, r: u8, v: f32) {
+    pub(super) fn set_f(&mut self, r: u8, v: f32) {
         debug_assert!(r >= NUM_INT_REGS);
         self.fregs[(r - NUM_INT_REGS) as usize] = v;
     }
 }
 
+/// Build the initial architectural state for `prog`: zeroed registers, the
+/// data image written into memory, and the stack pointer parked at the top
+/// of data memory (16-byte aligned).  Shared by the reference interpreter
+/// and the pre-decoded path so program setup cannot diverge.
+pub(super) fn init_arch(prog: &Program) -> Result<ArchState, SimError> {
+    let mut arch = ArchState::new(prog.dmem_size.max(4096));
+    for w in &prog.data {
+        arch.write_u32(w.addr, w.value, 0)?;
+    }
+    // stack pointer at top of memory, 16-byte aligned
+    let sp_init = (arch.mem.len() as u32 - 16) & !15;
+    arch.regs[crate::isa::SP as usize] = sp_init as i32;
+    Ok(arch)
+}
+
 /// FU pool: per-class next-free ticks.
-struct FuPools {
+pub(super) struct FuPools {
     pools: [Vec<u64>; 4], // alu(+branch), muldiv, fp, mem
 }
 
 impl FuPools {
-    fn new(cfg: &SystemConfig) -> Self {
+    pub(super) fn new(cfg: &SystemConfig) -> Self {
         Self {
             pools: [
                 vec![0; cfg.core.int_alu_units.max(1)],
@@ -158,7 +186,9 @@ impl FuPools {
         }
     }
 
-    fn class(fu: FuncUnit) -> usize {
+    /// Pool index for a functional unit (the decode pass caches this so the
+    /// hot loop indexes straight into `pools`).
+    pub(super) fn class(fu: FuncUnit) -> usize {
         match fu {
             FuncUnit::IntAlu | FuncUnit::Branch => 0,
             FuncUnit::IntMul | FuncUnit::IntDiv => 1,
@@ -170,7 +200,13 @@ impl FuPools {
     /// Earliest tick at/after `ready` when a unit is free; books the unit
     /// for `busy` cycles.
     fn acquire(&mut self, fu: FuncUnit, ready: u64, busy: u64) -> u64 {
-        let pool = &mut self.pools[Self::class(fu)];
+        self.acquire_class(Self::class(fu), ready, busy)
+    }
+
+    /// [`FuPools::acquire`] with the pool index already resolved — the
+    /// pre-decoded path carries the class in each [`super::decode::DecodedOp`].
+    pub(super) fn acquire_class(&mut self, class: usize, ready: u64, busy: u64) -> u64 {
+        let pool = &mut self.pools[class];
         let (idx, &free) = pool
             .iter()
             .enumerate()
@@ -183,53 +219,57 @@ impl FuPools {
 }
 
 /// Sliding window over the last `n` ticks (ROB/IQ/LSQ occupancy model).
-struct Window {
+pub(super) struct Window {
     ring: Vec<u64>,
     head: usize,
 }
 
 impl Window {
-    fn new(n: usize) -> Self {
+    pub(super) fn new(n: usize) -> Self {
         Self { ring: vec![0; n.max(1)], head: 0 }
     }
 
     /// Tick at which a slot frees up for a new entry.
-    fn available(&self) -> u64 {
+    pub(super) fn available(&self) -> u64 {
         self.ring[self.head]
     }
 
     /// Record the tick at which the newly inserted entry releases its slot.
-    fn push(&mut self, release_tick: u64) {
+    pub(super) fn push(&mut self, release_tick: u64) {
         self.ring[self.head] = release_tick;
         self.head = (self.head + 1) % self.ring.len();
     }
 }
 
-/// Simulate `prog` on `cfg`, materializing the full [`Trace`] (the legacy
-/// batch view — a thin adapter over [`simulate_into`]).
-pub fn simulate(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Result<Trace, SimError> {
+/// [`simulate_reference_into`], materializing the full [`Trace`] (the
+/// legacy batch view — a thin adapter).
+pub fn simulate_reference(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+) -> Result<Trace, SimError> {
     let mut sink = CollectSink::default();
-    let summary = simulate_into(prog, cfg, limits, &mut sink)?;
+    let summary = simulate_reference_into(prog, cfg, limits, &mut sink)?;
     Ok(Trace::from_parts(summary, sink.ciq))
 }
 
-/// Simulate `prog` on `cfg`, committing each instruction's I-state into
-/// `sink` as it retires.  Peak memory is the simulator's own state plus
-/// whatever the sink retains — an online sink makes the whole
-/// sim→analysis pipeline O(window) instead of O(instructions).
-pub fn simulate_into(
+/// Simulate `prog` on `cfg` with the reference interpreter, committing each
+/// instruction's I-state into `sink` as it retires.  Peak memory is the
+/// simulator's own state plus whatever the sink retains — an online sink
+/// makes the whole sim→analysis pipeline O(window) instead of
+/// O(instructions).
+///
+/// This is the differential oracle: production code calls
+/// [`super::simulate_into`], which dispatches to the pre-decoded loop in
+/// [`super::decode`].  Both paths must stay byte-identical; keep any edit
+/// here mirrored there (and covered by `rust/tests/sim_differential.rs`).
+pub fn simulate_reference_into(
     prog: &Program,
     cfg: &SystemConfig,
     limits: Limits,
     sink: &mut dyn TraceSink,
 ) -> Result<TraceSummary, SimError> {
-    let mut arch = ArchState::new(prog.dmem_size.max(4096));
-    for w in &prog.data {
-        arch.write_u32(w.addr, w.value, 0)?;
-    }
-    // stack pointer at top of memory, 16-byte aligned
-    let sp_init = (arch.mem.len() as u32 - 16) & !15;
-    arch.regs[crate::isa::SP as usize] = sp_init as i32;
+    let mut arch = init_arch(prog)?;
 
     let mut hier = MemHierarchy::new(&cfg.l1i, &cfg.l1d, &cfg.l2, cfg.dram.latency);
     let mut bpred = BranchPredictor::new(12);
@@ -521,7 +561,7 @@ mod tests {
 
     fn run(asm: Asm) -> Trace {
         let prog = asm.assemble();
-        simulate(&prog, &SystemConfig::default(), Limits::default()).unwrap()
+        simulate_reference(&prog, &SystemConfig::default(), Limits::default()).unwrap()
     }
 
     #[test]
@@ -677,7 +717,7 @@ mod tests {
         a.lw(2, 1, 0);
         a.halt();
         let prog = a.assemble();
-        let r = simulate(&prog, &SystemConfig::default(), Limits::default());
+        let r = simulate_reference(&prog, &SystemConfig::default(), Limits::default());
         assert!(r.is_err());
     }
 
@@ -689,7 +729,7 @@ mod tests {
         a.addi(1, 1, 1);
         a.jump(top);
         let prog = a.assemble();
-        let t = simulate(
+        let t = simulate_reference(
             &prog,
             &SystemConfig::default(),
             Limits { max_instructions: 1000 },

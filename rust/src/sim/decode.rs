@@ -1,0 +1,616 @@
+//! Pre-decoded execution: the production simulation loop.
+//!
+//! The reference interpreter ([`super::core`]) re-derives everything about
+//! an instruction — functional unit, execution latency, source registers,
+//! operand class — on *every dynamic execution*, walking a 49-arm opcode
+//! match per committed instruction.  The static program is tiny (hundreds
+//! of instructions) but looped over millions of times, so that per-dynamic
+//! work dominates every cold sweep.
+//!
+//! This module decodes each static instruction **once** at program load
+//! into a flat [`DecodedOp`] array: the resolved functional-unit index and
+//! pool class, execution latency, flattened source-register list with
+//! int/float read counts, destination register, and an [`Exec`] selector
+//! that collapses the 49 opcodes into ~15 execution classes (most ALU ops
+//! become a single stored `fn` pointer).  The hot loop then runs one small
+//! match per *class*, not one giant match per *opcode*, and never calls
+//! back into [`crate::isa`] metadata.
+//!
+//! **Byte-identity contract.**  [`simulate_decoded_into`] must produce
+//! exactly the commit stream, [`PipeStats`], [`crate::probes::MemStats`]
+//! and [`TraceSummary`] of [`super::simulate_reference_into`] — same
+//! values, same order, same fault points — so downstream Report JSON and
+//! every cache key are unchanged and no knob enters the dedup preimage.
+//! The loop below mirrors the reference loop statement-for-statement
+//! (branch-predictor work is folded into the branch arms, which is
+//! equivalent because nothing intervenes between the execute match and
+//! the prediction block in the reference).  `rust/tests/sim_differential.rs`
+//! pins the contract with randomized cross-checks; keep any edit here
+//! mirrored in [`super::core`].
+
+use crate::asm::Program;
+use crate::config::SystemConfig;
+use crate::isa::{FuncUnit, Instruction, Opcode, NUM_INT_REGS};
+use crate::probes::{IState, PipeStats, StopReason, TraceSink, TraceSummary};
+
+use super::bpred::BranchPredictor;
+use super::cache::MemHierarchy;
+use super::core::{init_arch, FuPools, Limits, SimError, Window};
+
+/// Sentinel in [`DecodedOp::dest`] for "writes no register".
+const NO_DEST: u8 = 0xFF;
+
+/// Load width/destination class (resolved once at decode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LoadKind {
+    /// `lw`: 32-bit load into an integer register
+    Word,
+    /// `lb`: sign-extended 8-bit load into an integer register
+    Byte,
+    /// `flw`: 32-bit load bit-cast into a float register
+    Float,
+}
+
+/// Store width/source class (resolved once at decode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StoreKind {
+    /// `sw`: 32-bit store from an integer register
+    Word,
+    /// `sb`: low-byte store from an integer register
+    Byte,
+    /// `fsw`: 32-bit store of a float register's bits
+    Float,
+}
+
+/// Execution selector: which (small) hot-loop arm runs this instruction.
+///
+/// ALU-class opcodes carry their semantics as a stored `fn` pointer, so
+/// `add`/`xor`/`div`/… all share one arm; only classes with structurally
+/// different timing or side effects (memory, control flow, converts) get
+/// their own variant.
+#[derive(Clone, Copy)]
+enum Exec {
+    /// integer reg-reg op: `rd = f(rs1, rs2)`
+    IntBin(fn(i32, i32) -> i32),
+    /// integer reg-imm op: `rd = f(rs1, imm)` (`lui` folds in as
+    /// `f(_, imm) = imm << 12`)
+    IntImm(fn(i32, i32) -> i32),
+    /// memory load (`lw`/`lb`/`flw`)
+    Load(LoadKind),
+    /// memory store (`sw`/`sb`/`fsw`)
+    Store(StoreKind),
+    /// conditional branch: taken iff `f(rs1, rs2)`
+    Cond(fn(i32, i32) -> bool),
+    /// unconditional jump-and-link to an immediate target
+    Jal,
+    /// unconditional jump-and-link to the data-dependent `rs1 + imm`
+    Jalr,
+    /// float reg-reg op: `fd = f(fs1, fs2)`
+    FpBin(fn(f32, f32) -> f32),
+    /// float compare into an integer register: `rd = f(fs1, fs2) as i32`
+    FpCmp(fn(f32, f32) -> bool),
+    /// float → int convert
+    Fcvtws,
+    /// int → float convert
+    Fcvtsw,
+    /// float register move
+    Fmv,
+    /// no operation
+    Nop,
+    /// stop the simulated program (checked at the loop top, never executed)
+    Halt,
+}
+
+/// One statically decoded instruction: everything the hot loop needs,
+/// pre-resolved so the per-dynamic-instruction work is field reads.
+#[derive(Clone, Copy)]
+pub struct DecodedOp {
+    /// the original instruction word (emitted verbatim in each [`IState`])
+    instr: Instruction,
+    /// functional unit (emitted in each [`IState`])
+    fu: FuncUnit,
+    /// `fu.index()` — the [`PipeStats::fu_counts`] slot
+    fu_idx: u8,
+    /// [`FuPools`] pool class for `fu`
+    fu_class: u8,
+    /// execution latency in cycles (`Opcode::exec_latency`)
+    exec_lat: u64,
+    /// flattened source registers (`sources()` with the `None`s removed)
+    srcs: [u8; 2],
+    /// number of valid entries in `srcs`
+    nsrcs: u8,
+    /// integer register-file reads this instruction performs
+    int_reads: u8,
+    /// float register-file reads this instruction performs
+    fp_reads: u8,
+    /// destination register, or [`NO_DEST`]
+    dest: u8,
+    /// destination is in the integer register file
+    dest_int: bool,
+    /// hot-loop execution selector
+    exec: Exec,
+}
+
+impl DecodedOp {
+    fn new(instr: Instruction) -> Self {
+        let fu = instr.op.func_unit();
+        let mut srcs = [0u8; 2];
+        let mut nsrcs = 0u8;
+        let mut int_reads = 0u8;
+        let mut fp_reads = 0u8;
+        for s in instr.sources().into_iter().flatten() {
+            srcs[nsrcs as usize] = s;
+            nsrcs += 1;
+            if s < NUM_INT_REGS {
+                int_reads += 1;
+            } else {
+                fp_reads += 1;
+            }
+        }
+        let (dest, dest_int) = match instr.dest() {
+            Some(rd) => (rd, rd < NUM_INT_REGS),
+            None => (NO_DEST, false),
+        };
+
+        use Opcode::*;
+        let exec = match instr.op {
+            Add => Exec::IntBin(|a, b| a.wrapping_add(b)),
+            Sub => Exec::IntBin(|a, b| a.wrapping_sub(b)),
+            And => Exec::IntBin(|a, b| a & b),
+            Or => Exec::IntBin(|a, b| a | b),
+            Xor => Exec::IntBin(|a, b| a ^ b),
+            Sll => Exec::IntBin(|a, b| a.wrapping_shl(b as u32 & 31)),
+            Srl => Exec::IntBin(|a, b| ((a as u32) >> (b as u32 & 31)) as i32),
+            Sra => Exec::IntBin(|a, b| a >> (b as u32 & 31)),
+            Slt => Exec::IntBin(|a, b| (a < b) as i32),
+            Sltu => Exec::IntBin(|a, b| ((a as u32) < (b as u32)) as i32),
+            Mul => Exec::IntBin(|a, b| a.wrapping_mul(b)),
+            Div => Exec::IntBin(|a, b| if b == 0 { -1 } else { a.wrapping_div(b) }),
+            Rem => Exec::IntBin(|a, b| if b == 0 { a } else { a.wrapping_rem(b) }),
+            Addi => Exec::IntImm(|a, i| a.wrapping_add(i)),
+            Andi => Exec::IntImm(|a, i| a & i),
+            Ori => Exec::IntImm(|a, i| a | i),
+            Xori => Exec::IntImm(|a, i| a ^ i),
+            Slli => Exec::IntImm(|a, i| a.wrapping_shl(i as u32 & 31)),
+            Srli => Exec::IntImm(|a, i| ((a as u32) >> (i as u32 & 31)) as i32),
+            Srai => Exec::IntImm(|a, i| a >> (i as u32 & 31)),
+            Slti => Exec::IntImm(|a, i| (a < i) as i32),
+            Lui => Exec::IntImm(|_, i| i.wrapping_shl(12)),
+            Lw => Exec::Load(LoadKind::Word),
+            Lb => Exec::Load(LoadKind::Byte),
+            Flw => Exec::Load(LoadKind::Float),
+            Sw => Exec::Store(StoreKind::Word),
+            Sb => Exec::Store(StoreKind::Byte),
+            Fsw => Exec::Store(StoreKind::Float),
+            Beq => Exec::Cond(|a, b| a == b),
+            Bne => Exec::Cond(|a, b| a != b),
+            Blt => Exec::Cond(|a, b| a < b),
+            Bge => Exec::Cond(|a, b| a >= b),
+            Bltu => Exec::Cond(|a, b| (a as u32) < (b as u32)),
+            Bgeu => Exec::Cond(|a, b| (a as u32) >= (b as u32)),
+            Jal => Exec::Jal,
+            Jalr => Exec::Jalr,
+            Fadd => Exec::FpBin(|a, b| a + b),
+            Fsub => Exec::FpBin(|a, b| a - b),
+            Fmul => Exec::FpBin(|a, b| a * b),
+            Fdiv => Exec::FpBin(|a, b| a / b),
+            Fmin => Exec::FpBin(|a, b| a.min(b)),
+            Fmax => Exec::FpBin(|a, b| a.max(b)),
+            Feq => Exec::FpCmp(|a, b| a == b),
+            Flt => Exec::FpCmp(|a, b| a < b),
+            Fcvtws => Exec::Fcvtws,
+            Fcvtsw => Exec::Fcvtsw,
+            Fmv => Exec::Fmv,
+            Nop => Exec::Nop,
+            Halt => Exec::Halt,
+        };
+
+        Self {
+            instr,
+            fu,
+            fu_idx: fu.index() as u8,
+            fu_class: FuPools::class(fu) as u8,
+            exec_lat: instr.op.exec_latency(),
+            srcs,
+            nsrcs,
+            int_reads,
+            fp_reads,
+            dest,
+            dest_int,
+            exec,
+        }
+    }
+}
+
+/// A program's text segment decoded once into flat [`DecodedOp`]s.
+///
+/// Build with [`DecodedProgram::new`] (cost: one pass over the *static*
+/// instructions) and run it any number of times via
+/// [`simulate_decoded_into`] / [`super::simulate_into`].
+pub struct DecodedProgram {
+    ops: Vec<DecodedOp>,
+}
+
+impl DecodedProgram {
+    /// Decode every instruction of `prog`'s text segment.
+    pub fn new(prog: &Program) -> Self {
+        Self { ops: prog.instrs.iter().copied().map(DecodedOp::new).collect() }
+    }
+
+    /// Number of static instructions.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True for an empty text segment.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// Simulate `prog` on `cfg` through the pre-decoded path, committing each
+/// instruction's I-state into `sink` as it retires.
+///
+/// Drop-in replacement for [`super::simulate_reference_into`]: identical
+/// commit stream, statistics, summary and fault behavior, decode-once
+/// dispatch instead of a per-dynamic-instruction opcode match.
+pub fn simulate_decoded_into(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+    sink: &mut dyn TraceSink,
+) -> Result<TraceSummary, SimError> {
+    let decoded = DecodedProgram::new(prog);
+    let ops = &decoded.ops[..];
+
+    let mut arch = init_arch(prog)?;
+
+    let mut hier = MemHierarchy::new(&cfg.l1i, &cfg.l1d, &cfg.l2, cfg.dram.latency);
+    let mut bpred = BranchPredictor::new(12);
+    let mut pools = FuPools::new(cfg);
+    let mut rob = Window::new(cfg.core.rob_entries);
+    let mut iq = Window::new(cfg.core.iq_entries);
+    let mut lsq = Window::new(cfg.core.lsq_entries);
+
+    let mut pipe = PipeStats::default();
+
+    let width = cfg.core.width.max(1) as u64;
+    let mut fetch_cycle: u64 = 0;
+    let mut fetch_slot: u64 = 0;
+    let mut last_fetch_line: u32 = u32::MAX;
+    let mut commit_cycle: u64 = 0;
+    let mut commit_slot: u64 = 0;
+    let mut last_commit: u64 = 0;
+
+    let mut pc: u32 = 0;
+    let mut reg_ready = [0u64; crate::isa::NUM_REGS as usize];
+    let mut seq: u64 = 0;
+    let stop;
+
+    loop {
+        if seq >= limits.max_instructions {
+            stop = StopReason::MaxInstructions;
+            break;
+        }
+        if pc as usize >= ops.len() {
+            stop = StopReason::RanOffEnd;
+            break;
+        }
+        let op = &ops[pc as usize];
+        let instr = op.instr;
+        if matches!(op.exec, Exec::Halt) {
+            stop = StopReason::Halt;
+            break;
+        }
+
+        // ---------------- fetch ------------------------------------------
+        // I-cache: one access per 64 B line (8 instructions) or redirect.
+        let line = pc / 8;
+        if line != last_fetch_line {
+            // text segment lives in its own half of the address space so
+            // I-fetches never alias data lines in the shared L2
+            let lat = hier.access_inst(0x8000_0000 | (pc * 8), fetch_cycle);
+            if lat > hier.l1i.latency {
+                fetch_cycle += lat - hier.l1i.latency; // miss stall
+                fetch_slot = 0;
+            }
+            last_fetch_line = line;
+        }
+        let tick_fetch = fetch_cycle;
+        fetch_slot += 1;
+        if fetch_slot >= width {
+            fetch_cycle += 1;
+            fetch_slot = 0;
+        }
+        pipe.fetched += 1;
+
+        // ---------------- decode / rename --------------------------------
+        let tick_decode = tick_fetch + 1;
+        let tick_rename = tick_decode + 1;
+        pipe.decoded += 1;
+        pipe.renamed += 1;
+
+        // ---------------- dispatch (ROB/IQ allocation) -------------------
+        let tick_dispatch = (tick_rename + 1)
+            .max(rob.available())
+            .max(iq.available());
+        pipe.rob_writes += 1;
+        pipe.iq_writes += 1;
+
+        // ---------------- register read + issue --------------------------
+        let mut ready = tick_dispatch;
+        for &s in &op.srcs[..op.nsrcs as usize] {
+            ready = ready.max(reg_ready[s as usize]);
+        }
+        pipe.int_rf_reads += op.int_reads as u64;
+        pipe.fp_rf_reads += op.fp_reads as u64;
+        pipe.fu_counts[op.fu_idx as usize] += 1;
+        pipe.iq_reads += 1;
+        let exec_lat = op.exec_lat;
+        let tick_issue = pools.acquire_class(op.fu_class as usize, ready, exec_lat);
+        iq.push(tick_issue);
+
+        // ---------------- execute (functional) + memory -------------------
+        // One match per *class*; the branch-predictor block the reference
+        // runs after its opcode match is folded into the control-flow arms
+        // (equivalent: `complete` is final before those arms and nothing
+        // intervenes in the reference).
+        let mut mem_info = None;
+        let mut next_pc = pc + 1;
+        let mut complete = tick_issue + exec_lat;
+
+        match op.exec {
+            Exec::IntBin(f) => {
+                arch.set_r(instr.rd, f(arch.r(instr.rs1), arch.r(instr.rs2)));
+            }
+            Exec::IntImm(f) => {
+                arch.set_r(instr.rd, f(arch.r(instr.rs1), instr.imm));
+            }
+            Exec::Load(kind) => {
+                let addr = arch.r(instr.rs1).wrapping_add(instr.imm) as u32;
+                let size = if kind == LoadKind::Byte { 1 } else { 4 };
+                let info = hier.access_data(addr, size, false, tick_issue);
+                pipe.lsq_reads += 1;
+                lsq.push(tick_issue + info.latency);
+                complete = tick_issue + info.latency;
+                match kind {
+                    LoadKind::Word => arch.set_r(instr.rd, arch.read_u32(addr, pc)? as i32),
+                    LoadKind::Byte => arch.set_r(instr.rd, arch.read_u8(addr, pc)? as i8 as i32),
+                    LoadKind::Float => {
+                        arch.set_f(instr.rd, f32::from_bits(arch.read_u32(addr, pc)?))
+                    }
+                }
+                mem_info = Some(info);
+            }
+            Exec::Store(kind) => {
+                let addr = arch.r(instr.rs1).wrapping_add(instr.imm) as u32;
+                let size = if kind == StoreKind::Byte { 1 } else { 4 };
+                let info = hier.access_data(addr, size, true, tick_issue);
+                pipe.lsq_writes += 1;
+                lsq.push(tick_issue + 1); // store buffer absorbs the latency
+                complete = tick_issue + 1;
+                match kind {
+                    StoreKind::Word => arch.write_u32(addr, arch.r(instr.rs2) as u32, pc)?,
+                    StoreKind::Byte => arch.write_u8(addr, arch.r(instr.rs2) as u8, pc)?,
+                    StoreKind::Float => arch.write_u32(addr, arch.f(instr.rs2).to_bits(), pc)?,
+                }
+                mem_info = Some(info);
+            }
+            Exec::Cond(f) => {
+                let taken = f(arch.r(instr.rs1), arch.r(instr.rs2));
+                let target = instr.imm as u32;
+                if taken {
+                    next_pc = target;
+                }
+                let pred = bpred.predict(pc);
+                pipe.bpred_lookups += 1;
+                let mispredicted = bpred.update(pc, taken, target, pred);
+                if mispredicted {
+                    pipe.bpred_mispredicts += 1;
+                    fetch_cycle = complete + cfg.core.mispredict_penalty;
+                    fetch_slot = 0;
+                    last_fetch_line = u32::MAX; // redirect refetches the line
+                } else if taken {
+                    // correctly-predicted taken branch still pays the BTB
+                    // redirect bubble (A9-style front end)
+                    fetch_cycle = fetch_cycle.max(tick_fetch + 2);
+                    fetch_slot = 0;
+                }
+            }
+            Exec::Jal => {
+                arch.set_r(instr.rd, (pc + 1) as i32);
+                next_pc = instr.imm as u32;
+                last_fetch_line = u32::MAX;
+            }
+            Exec::Jalr => {
+                let t = (arch.r(instr.rs1).wrapping_add(instr.imm)) as u32;
+                arch.set_r(instr.rd, (pc + 1) as i32);
+                next_pc = t;
+                // jalr targets are data-dependent — charge a redirect when
+                // the target register wasn't ready at fetch
+                if complete > tick_fetch + 2 {
+                    fetch_cycle = complete;
+                    fetch_slot = 0;
+                }
+                last_fetch_line = u32::MAX;
+            }
+            Exec::FpBin(f) => {
+                arch.set_f(instr.rd, f(arch.f(instr.rs1), arch.f(instr.rs2)));
+            }
+            Exec::FpCmp(f) => {
+                arch.set_r(instr.rd, f(arch.f(instr.rs1), arch.f(instr.rs2)) as i32);
+            }
+            Exec::Fcvtws => arch.set_r(instr.rd, arch.f(instr.rs1) as i32),
+            Exec::Fcvtsw => arch.set_f(instr.rd, arch.r(instr.rs1) as f32),
+            Exec::Fmv => {
+                let v = arch.f(instr.rs1);
+                arch.set_f(instr.rd, v);
+            }
+            Exec::Nop => {}
+            Exec::Halt => unreachable!(),
+        }
+
+        // ---------------- writeback ----------------------------------------
+        if op.dest != NO_DEST {
+            reg_ready[op.dest as usize] = complete;
+            if op.dest_int {
+                pipe.int_rf_writes += 1;
+            } else {
+                pipe.fp_rf_writes += 1;
+            }
+        }
+
+        // ---------------- commit (in order, `width` per cycle) ------------
+        let mut tick_commit = (complete + 1).max(last_commit);
+        if tick_commit > commit_cycle {
+            commit_cycle = tick_commit;
+            commit_slot = 0;
+        }
+        commit_slot += 1;
+        if commit_slot >= width {
+            commit_cycle += 1;
+            commit_slot = 0;
+        }
+        tick_commit = tick_commit.max(commit_cycle);
+        last_commit = tick_commit;
+        rob.push(tick_commit);
+        pipe.rob_reads += 1;
+
+        sink.on_commit(IState {
+            seq,
+            pc,
+            instr,
+            fu: op.fu,
+            tick_fetch,
+            tick_decode,
+            tick_rename,
+            tick_dispatch,
+            tick_issue,
+            tick_complete: complete,
+            tick_commit,
+            mem: mem_info,
+        });
+
+        seq += 1;
+        pc = next_pc;
+    }
+
+    Ok(TraceSummary {
+        program: prog.name.clone(),
+        cycles: last_commit.max(fetch_cycle) + 1,
+        committed: seq,
+        pipe,
+        mem: hier.stats,
+        stop,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::{freg, NUM_OPCODES};
+    use crate::probes::CollectSink;
+
+    /// Every opcode decodes to metadata matching the `isa` ground truth.
+    #[test]
+    fn decode_table_matches_isa_metadata() {
+        for x in 0..NUM_OPCODES {
+            let opc = Opcode::from_u8(x).unwrap();
+            // representative register choices: int dests/sources for int
+            // ops, float ids for fp ops (sources() cares about r0 only)
+            let (rd, rs1, rs2) = if opc.is_fp() && !opc.is_mem() {
+                (freg(1), freg(2), freg(3))
+            } else {
+                (5u8, 6u8, 7u8)
+            };
+            let instr = Instruction::new(opc, rd, rs1, rs2, 4);
+            let d = DecodedOp::new(instr);
+            assert_eq!(d.fu, opc.func_unit(), "{opc:?}");
+            assert_eq!(d.fu_idx as usize, opc.func_unit().index(), "{opc:?}");
+            assert_eq!(
+                d.fu_class as usize,
+                FuPools::class(opc.func_unit()),
+                "{opc:?}"
+            );
+            assert_eq!(d.exec_lat, opc.exec_latency(), "{opc:?}");
+            let flat: Vec<u8> = instr.sources().into_iter().flatten().collect();
+            assert_eq!(&d.srcs[..d.nsrcs as usize], &flat[..], "{opc:?}");
+            assert_eq!(
+                (d.int_reads + d.fp_reads) as usize,
+                flat.len(),
+                "{opc:?}"
+            );
+            match instr.dest() {
+                Some(rd) => {
+                    assert_eq!(d.dest, rd, "{opc:?}");
+                    assert_eq!(d.dest_int, rd < NUM_INT_REGS, "{opc:?}");
+                }
+                None => assert_eq!(d.dest, NO_DEST, "{opc:?}"),
+            }
+        }
+    }
+
+    /// r0 destinations and sources vanish at decode, exactly like the
+    /// reference's `dest()`/`sources()` filtering.
+    #[test]
+    fn zero_register_filtered() {
+        let d = DecodedOp::new(Instruction::new(Opcode::Add, 0, 0, 5, 0));
+        assert_eq!(d.dest, NO_DEST);
+        assert_eq!(d.nsrcs, 1);
+        assert_eq!(d.srcs[0], 5);
+    }
+
+    /// The stored fn pointers reproduce the reference's exact integer
+    /// corner-case semantics.
+    #[test]
+    fn intbin_corner_semantics() {
+        let f = |opc| match DecodedOp::new(Instruction::new(opc, 3, 4, 5, 0)).exec {
+            Exec::IntBin(f) => f,
+            _ => panic!("not IntBin"),
+        };
+        assert_eq!(f(Opcode::Div)(7, 0), -1); // divide by zero
+        assert_eq!(f(Opcode::Div)(i32::MIN, -1), i32::MIN); // overflow wraps
+        assert_eq!(f(Opcode::Rem)(7, 0), 7); // rem by zero yields rs1
+        assert_eq!(f(Opcode::Sll)(1, 33), 2); // shift amount masked & 31
+        assert_eq!(f(Opcode::Srl)(-1, 1), i32::MAX); // logical shift
+    }
+
+    /// Small end-to-end cross-check against the reference interpreter
+    /// (the full randomized suite lives in `rust/tests/sim_differential.rs`).
+    #[test]
+    fn matches_reference_on_small_program() {
+        let mut a = Asm::new("decode-smoke");
+        let buf = a.data.alloc_i32("buf", &[3, 4, 0]);
+        let top = a.label("top");
+        a.li(1, buf as i32);
+        a.lw(3, 1, 0);
+        a.lw(4, 1, 4);
+        a.li(5, 0);
+        a.li(6, 10);
+        a.bind(top);
+        a.mul(7, 3, 4);
+        a.add(5, 5, 7);
+        a.addi(3, 3, 1);
+        a.bne(3, 6, top);
+        a.sw(5, 1, 8);
+        a.halt();
+        let prog = a.assemble();
+        let cfg = SystemConfig::default();
+
+        let mut ref_sink = CollectSink::default();
+        let ref_sum = super::super::core::simulate_reference_into(
+            &prog,
+            &cfg,
+            Limits::default(),
+            &mut ref_sink,
+        )
+        .unwrap();
+        let mut dec_sink = CollectSink::default();
+        let dec_sum =
+            simulate_decoded_into(&prog, &cfg, Limits::default(), &mut dec_sink).unwrap();
+
+        assert_eq!(ref_sum, dec_sum);
+        assert_eq!(ref_sink.ciq, dec_sink.ciq);
+    }
+}

@@ -1,14 +1,79 @@
 //! The GEM5-substitute: EVA32 functional + timing simulation with probes.
 //!
-//! * [`core`] — functional interpreter + out-of-order timing model (Fig 7)
+//! * [`core`] — the *reference* interpreter: functional execution + the
+//!   out-of-order timing model (Fig 7), one opcode match per dynamic
+//!   instruction.  Kept as the differential oracle.
+//! * [`decode`] — the *production* path: each static instruction is
+//!   decoded once into a flat [`decode::DecodedOp`] array and the same
+//!   timing loop runs off pre-resolved metadata with per-class fast
+//!   paths.  Byte-identical to the reference by contract
+//!   (`rust/tests/sim_differential.rs`).
 //! * [`cache`] — L1I/L1D/L2/DRAM hierarchy with MSHRs and banks (Fig 8)
 //! * [`bpred`] — gshare branch predictor
 //!
 //! The output is a [`crate::probes::Trace`]: the committed instruction
 //! queue with per-instruction I-state plus pipeline/memory statistics.
+//! [`simulate`] / [`simulate_into`] are the entry points the rest of the
+//! system uses; they dispatch to the pre-decoded loop.  Because both
+//! paths produce identical bytes, the choice is invisible downstream:
+//! no cache key, ledger counter or report changes with the path taken.
 
 pub mod bpred;
 pub mod cache;
 pub mod core;
+pub mod decode;
 
-pub use core::{simulate, simulate_into, Limits, SimError};
+pub use core::{simulate_reference, simulate_reference_into, Limits, SimError};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::asm::Program;
+use crate::config::SystemConfig;
+use crate::probes::{CollectSink, Trace, TraceSink, TraceSummary};
+
+/// Process-global test seam: when set, [`simulate_into`] routes through
+/// the reference interpreter instead of the pre-decoded loop.
+///
+/// This exists so the differential suite can drive the *whole* stack
+/// (coordinator, caches, report rendering) over the oracle path and
+/// assert byte-identical output.  It is deliberately not a config knob:
+/// it cannot enter any cache key or dedup preimage, and production code
+/// never sets it.
+static FORCE_REFERENCE: AtomicBool = AtomicBool::new(false);
+
+/// Route [`simulate_into`] through the reference interpreter (`true`) or
+/// the pre-decoded path (`false`, the default).  Test-only seam — see
+/// [`FORCE_REFERENCE`]; tests that flip it must restore `false` and must
+/// not run concurrently with other simulations in the same process.
+pub fn force_reference_path(on: bool) {
+    FORCE_REFERENCE.store(on, Ordering::SeqCst);
+}
+
+/// Simulate `prog` on `cfg`, committing each instruction's I-state into
+/// `sink` as it retires.  Peak memory is the simulator's own state plus
+/// whatever the sink retains — an online sink makes the whole
+/// sim→analysis pipeline O(window) instead of O(instructions).
+///
+/// Runs the pre-decoded loop ([`decode::simulate_decoded_into`]) unless
+/// the [`force_reference_path`] test seam is set; both paths are
+/// byte-identical, so callers never observe the difference.
+pub fn simulate_into(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+    sink: &mut dyn TraceSink,
+) -> Result<TraceSummary, SimError> {
+    if FORCE_REFERENCE.load(Ordering::SeqCst) {
+        simulate_reference_into(prog, cfg, limits, sink)
+    } else {
+        decode::simulate_decoded_into(prog, cfg, limits, sink)
+    }
+}
+
+/// Simulate `prog` on `cfg`, materializing the full [`Trace`] (the legacy
+/// batch view — a thin adapter over [`simulate_into`]).
+pub fn simulate(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Result<Trace, SimError> {
+    let mut sink = CollectSink::default();
+    let summary = simulate_into(prog, cfg, limits, &mut sink)?;
+    Ok(Trace::from_parts(summary, sink.ciq))
+}

@@ -1,0 +1,501 @@
+//! Differential suite pinning the pre-decoded simulator path to the
+//! reference interpreter (PR 8: cold-path speed pass).
+//!
+//! 1. **Opcode coverage** — a deterministic program committing all 48
+//!    committable opcodes (every opcode but `halt`), including div/rem by
+//!    zero, `i32::MIN / -1`, shift amounts past 31, NaN-producing float
+//!    ops, byte vs word memory, all six conditional branches both taken
+//!    and not-taken, and data-dependent `jalr` targets — byte-identical
+//!    commit streams, `PipeStats`, `MemStats` and summaries on both paths.
+//! 2. **Randomized programs** — a proptest corpus of random ALU/memory/
+//!    control-flow mixes with bounded loops, run through both paths and
+//!    compared record-for-record.
+//! 3. **Fault equivalence** — out-of-bounds and unaligned accesses fault
+//!    at the same point with the same `SimError` and the same committed
+//!    prefix; `RanOffEnd` and `MaxInstructions` stops also agree.
+//! 4. **Report equivalence** — a full cold sweep re-run with the
+//!    [`force_reference_path`] seam set renders byte-identical Report
+//!    output in all three formats, proving no cache key, ledger counter
+//!    or rendered byte depends on which path simulated.
+//!
+//! The same discipline as `replay_parallel.rs` pins for the warm path:
+//! the fast path must be *invisible* except in wall-clock.
+
+use eva_cim::api::{BackendSel, Evaluation};
+use eva_cim::asm::{Asm, Program};
+use eva_cim::config::{CimLevels, SystemConfig, Technology};
+use eva_cim::isa::{Opcode, NUM_OPCODES};
+use eva_cim::probes::{CollectSink, StopReason, Trace};
+use eva_cim::sim::decode::simulate_decoded_into;
+use eva_cim::sim::{
+    force_reference_path, simulate_reference_into, Limits, SimError,
+};
+use eva_cim::util::proptest::check;
+use eva_cim::util::Rng;
+
+/// Run one program through both paths and return the two materialized
+/// traces (uses the explicit entry points, so the process-global
+/// `force_reference_path` seam cannot interfere with parallel tests).
+fn run_both(
+    prog: &Program,
+    cfg: &SystemConfig,
+    limits: Limits,
+) -> (Result<Trace, SimError>, Result<Trace, SimError>) {
+    let run = |reference: bool| {
+        let mut sink = CollectSink::default();
+        let res = if reference {
+            simulate_reference_into(prog, cfg, limits, &mut sink)
+        } else {
+            simulate_decoded_into(prog, cfg, limits, &mut sink)
+        };
+        res.map(|summary| Trace::from_parts(summary, sink.ciq))
+    };
+    (run(true), run(false))
+}
+
+/// Both paths succeed and agree on every byte of the trace.
+fn assert_identical(prog: &Program, cfg: &SystemConfig, limits: Limits) -> Trace {
+    let (reference, decoded) = run_both(prog, cfg, limits);
+    let reference = reference.expect("reference path faulted");
+    let decoded = decoded.expect("decoded path faulted");
+    assert_eq!(
+        reference.summary(),
+        decoded.summary(),
+        "summaries diverge on {}",
+        prog.name
+    );
+    assert_eq!(
+        reference.ciq, decoded.ciq,
+        "commit streams diverge on {}",
+        prog.name
+    );
+    assert_eq!(reference, decoded);
+    reference
+}
+
+/// A deterministic program committing every opcode except `halt`,
+/// deliberately hitting the integer/float corner cases the decode table
+/// must preserve exactly.
+fn all_opcode_program() -> Program {
+    let mut a = Asm::new("all-ops");
+    let buf = a.data.alloc_i32("buf", &[5, -3, 0x1234, -100, 0, 77]);
+    let fbuf = a.data.alloc_f32("fbuf", &[1.5, -2.25, 0.0, 3.75]);
+    let out = a.data.alloc_i32("out", &[0; 8]);
+
+    a.li(1, buf as i32);
+    a.li(2, fbuf as i32);
+    a.li(10, out as i32);
+
+    // loads (word, sign-extended byte, float)
+    a.lw(3, 1, 0); // 5
+    a.lw(4, 1, 4); // -3
+    a.lb(5, 1, 8); // 0x34
+    a.lb(5, 1, 7); // 0xff of -3 -> sign-extends to -1
+    a.flw(0, 2, 0); // 1.5
+    a.flw(1, 2, 4); // -2.25
+    a.flw(2, 2, 8); // 0.0
+
+    // integer reg-reg, including division corners and shift masking
+    a.add(6, 3, 4);
+    a.sub(6, 6, 3);
+    a.and(7, 3, 4);
+    a.or(7, 7, 3);
+    a.xor(7, 7, 4);
+    a.sll(8, 3, 4); // shift by -3: amount masks to 29
+    a.srl(8, 4, 3); // logical shift of a negative value
+    a.sra(8, 4, 3);
+    a.slt(9, 4, 3);
+    a.sltu(9, 3, 4); // 5 <u 0xfffffffd
+    a.mul(11, 3, 4);
+    a.lw(13, 1, 16); // 0
+    a.div(12, 3, 13); // divide by zero -> -1
+    a.rem(12, 4, 13); // rem by zero -> rs1
+    a.div(12, 3, 4);
+    a.rem(12, 3, 4);
+    a.li(15, i32::MIN);
+    a.li(16, -1);
+    a.div(17, 15, 16); // i32::MIN / -1 wraps
+    a.rem(17, 15, 16);
+
+    // integer reg-imm, including immediate shift masking
+    a.addi(18, 3, 100);
+    a.andi(18, 18, 0xff);
+    a.ori(18, 18, 0x10);
+    a.xori(18, 18, -1);
+    a.slli(19, 3, 35); // masks to 3
+    a.srli(19, 4, 1);
+    a.srai(19, 4, 1);
+    a.slti(20, 4, 7);
+    a.lui(21, 0x5a5a);
+
+    // floating point, including inf and NaN
+    a.fadd(3, 0, 1);
+    a.fsub(4, 0, 1);
+    a.fmul(5, 0, 1);
+    a.fdiv(6, 0, 2); // 1.5 / 0.0 = +inf
+    a.fdiv(7, 2, 2); // 0.0 / 0.0 = NaN
+    a.fmin(8, 0, 1);
+    a.fmax(9, 0, 1);
+    a.feq(22, 0, 0);
+    a.feq(22, 7, 7); // NaN == NaN -> 0
+    a.flt(22, 1, 0);
+    a.fcvt_w_s(23, 1); // -2.25 -> -2
+    a.fcvt_s_w(10, 4);
+    a.fmv(11, 10);
+
+    // stores (word, byte, float)
+    a.sw(6, 10, 0);
+    a.sb(5, 10, 4);
+    a.fsw(11, 10, 8);
+
+    // all six conditional branches, taken and not-taken
+    let l1 = a.label("l1");
+    a.beq(3, 3, l1); // taken
+    a.nop();
+    a.bind(l1);
+    let l2 = a.label("l2");
+    a.bne(3, 4, l2); // taken
+    a.nop();
+    a.bind(l2);
+    let l3 = a.label("l3");
+    a.blt(4, 3, l3); // taken
+    a.nop();
+    a.bind(l3);
+    let l4 = a.label("l4");
+    a.bge(4, 3, l4); // not taken: falls into the nop
+    a.nop();
+    a.bind(l4);
+    let l5 = a.label("l5");
+    a.bltu(3, 4, l5); // taken (-3 is huge unsigned)
+    a.nop();
+    a.bind(l5);
+    let l6 = a.label("l6");
+    a.bgeu(3, 4, l6); // not taken
+    a.nop();
+    a.bind(l6);
+
+    // a predictable backward loop (predictor warm-up + mispredict at exit)
+    let top = a.label("top");
+    a.li(25, 0);
+    a.li(26, 50);
+    a.bind(top);
+    a.addi(25, 25, 1);
+    a.bne(25, 26, top);
+
+    // jumps: jal with a live link, jalr with a data-dependent target,
+    // and the plain jump pseudo (jal r0)
+    let fwd = a.label("fwd");
+    a.jal(27, fwd);
+    a.nop(); // skipped
+    a.bind(fwd);
+    let t = a.len() as i32 + 3; // li, jalr, dead nop, then the target
+    a.li(28, t);
+    a.jalr(29, 28);
+    a.nop(); // skipped
+    let end = a.label("end");
+    a.jump(end);
+    a.nop(); // skipped
+    a.bind(end);
+    a.nop(); // a committed nop
+    a.halt();
+    a.assemble()
+}
+
+#[test]
+fn all_opcodes_byte_identical() {
+    let prog = all_opcode_program();
+    for preset in ["c1", "c2"] {
+        let cfg = SystemConfig::preset(preset).unwrap();
+        let t = assert_identical(&prog, &cfg, Limits::default());
+        assert_eq!(t.stop, StopReason::Halt);
+
+        // every opcode except halt commits at least once
+        let mut seen = [false; NUM_OPCODES as usize];
+        for is in &t.ciq {
+            seen[is.instr.op as u8 as usize] = true;
+        }
+        for x in 0..NUM_OPCODES {
+            let op = Opcode::from_u8(x).unwrap();
+            if op == Opcode::Halt {
+                assert!(!seen[x as usize], "halt must never commit");
+            } else {
+                assert!(seen[x as usize], "{op:?} never committed");
+            }
+        }
+        // the corner cases actually exercised the predictor and both
+        // memory classes
+        assert!(t.pipe.bpred_lookups > 50);
+        assert!(t.pipe.lsq_reads >= 7 && t.pipe.lsq_writes >= 3);
+    }
+}
+
+/// Random ALU/memory/control-flow mix.  Register discipline: r1/r2/r10
+/// hold the data/float/out base addresses and are never overwritten;
+/// r3..r9 are scratch; r14/r17 serve the jalr epilogue; r15/r16 drive the
+/// bounded loop.  All memory offsets stay inside the allocated buffers so
+/// the only faults are the ones the dedicated fault test injects.
+fn random_program(rng: &mut Rng, size: u32) -> Program {
+    let n_ops = 30 + (size as usize % 120);
+    let mut a = Asm::new("diff-rand");
+    let words: Vec<i32> =
+        (0..16).map(|_| rng.next_u32() as i32 / 7).collect();
+    let buf = a.data.alloc_i32("buf", &words);
+    let fvals: Vec<f32> =
+        (0..8).map(|_| (rng.gen_f64() * 100.0 - 50.0) as f32).collect();
+    let fbuf = a.data.alloc_f32("fbuf", &fvals);
+    let out = a.data.alloc_i32("out", &[0; 16]);
+
+    a.li(1, buf as i32);
+    a.li(2, fbuf as i32);
+    a.li(10, out as i32);
+    for r in 3..=9u8 {
+        a.lw(r, 1, ((r as i32 - 3) % 16) * 4);
+    }
+    for f in 0..6u8 {
+        a.flw(f, 2, ((f as i32) % 8) * 4);
+    }
+
+    for _ in 0..n_ops {
+        let rd = 3 + rng.gen_range(7) as u8;
+        let rs1 = 3 + rng.gen_range(7) as u8;
+        let rs2 = 3 + rng.gen_range(7) as u8;
+        match rng.gen_range(14) {
+            0 => {
+                a.add(rd, rs1, rs2);
+            }
+            1 => {
+                a.sub(rd, rs1, rs2);
+            }
+            2 => {
+                a.mul(rd, rs1, rs2);
+            }
+            3 => {
+                // random divisor values, occasionally zero
+                a.div(rd, rs1, rs2);
+            }
+            4 => {
+                a.rem(rd, rs1, rs2);
+            }
+            5 => {
+                // random shift amounts, frequently past 31
+                a.sll(rd, rs1, rs2);
+            }
+            6 => {
+                a.sra(rd, rs1, rs2);
+            }
+            7 => {
+                a.xori(rd, rs1, rng.next_u32() as i32);
+            }
+            8 => {
+                a.lw(rd, 1, (rng.gen_range(16) as i32) * 4);
+            }
+            9 => {
+                a.lb(rd, 1, rng.gen_range(64) as i32);
+            }
+            10 => {
+                a.sw(rs1, 10, (rng.gen_range(16) as i32) * 4);
+            }
+            11 => {
+                a.sb(rs1, 10, rng.gen_range(64) as i32);
+            }
+            12 => {
+                let fd = rng.gen_range(6) as u8;
+                let f1 = rng.gen_range(6) as u8;
+                let f2 = rng.gen_range(6) as u8;
+                match rng.gen_range(5) {
+                    0 => {
+                        a.fadd(fd, f1, f2);
+                    }
+                    1 => {
+                        a.fsub(fd, f1, f2);
+                    }
+                    2 => {
+                        a.fmul(fd, f1, f2);
+                    }
+                    3 => {
+                        // random operands, occasionally 0/0 -> NaN
+                        a.fdiv(fd, f1, f2);
+                    }
+                    _ => {
+                        a.fcvt_w_s(rd, f1);
+                    }
+                }
+            }
+            _ => {
+                // data-dependent forward branch over 1..=3 fillers
+                let l = a.label("skip");
+                match rng.gen_range(4) {
+                    0 => {
+                        a.beq(rs1, rs2, l);
+                    }
+                    1 => {
+                        a.bne(rs1, rs2, l);
+                    }
+                    2 => {
+                        a.blt(rs1, rs2, l);
+                    }
+                    _ => {
+                        a.bgeu(rs1, rs2, l);
+                    }
+                }
+                for _ in 0..(1 + rng.gen_range(3)) {
+                    a.addi(rd, rd, 1);
+                }
+                a.bind(l);
+            }
+        }
+    }
+
+    // bounded backward loop with mixed memory traffic
+    let top = a.label("top");
+    a.li(15, 0);
+    a.li(16, 20 + rng.gen_range(40) as i32);
+    a.bind(top);
+    a.addi(15, 15, 1);
+    a.lw(9, 1, (rng.gen_range(16) as i32) * 4);
+    a.bne(15, 16, top);
+
+    // jalr epilogue with a data-dependent target
+    let t = a.len() as i32 + 3;
+    a.li(14, t);
+    a.jalr(17, 14);
+    a.nop(); // skipped
+    a.halt();
+    a.assemble()
+}
+
+#[test]
+fn prop_random_programs_byte_identical() {
+    check(
+        "sim-differential",
+        60,
+        random_program,
+        |prog| {
+            for preset in ["c1", "c2"] {
+                let cfg = SystemConfig::preset(preset).unwrap();
+                let (reference, decoded) =
+                    run_both(prog, &cfg, Limits::default());
+                let reference = reference.map_err(|e| e.to_string())?;
+                let decoded = decoded.map_err(|e| e.to_string())?;
+                if reference.stop != StopReason::Halt {
+                    return Err(format!("unexpected stop {:?}", reference.stop));
+                }
+                if reference != decoded {
+                    // report the first diverging record for debuggability
+                    for (r, d) in reference.ciq.iter().zip(decoded.ciq.iter())
+                    {
+                        if r != d {
+                            return Err(format!(
+                                "first divergence at seq {}: {:?} vs {:?}",
+                                r.seq, r, d
+                            ));
+                        }
+                    }
+                    return Err(format!(
+                        "summaries diverge: {:?} vs {:?}",
+                        reference.summary(),
+                        decoded.summary()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn faults_and_stops_identical() {
+    let cfg = SystemConfig::default();
+
+    // out-of-bounds load faults at the same point with the same error
+    let mut a = Asm::new("oob");
+    a.li(1, 0x7fff_fff0u32 as i32);
+    a.addi(3, 0, 7);
+    a.lw(2, 1, 0);
+    a.halt();
+    let prog = a.assemble();
+    let (r, d) = run_both(&prog, &cfg, Limits::default());
+    let (re, de) = (r.unwrap_err(), d.unwrap_err());
+    assert_eq!(re, de);
+    assert_eq!(re.pc, 2);
+
+    // unaligned word access
+    let mut a = Asm::new("unaligned");
+    a.li(1, 2);
+    a.sw(1, 1, 0);
+    a.halt();
+    let prog = a.assemble();
+    let (r, d) = run_both(&prog, &cfg, Limits::default());
+    assert_eq!(r.unwrap_err(), d.unwrap_err());
+
+    // the committed prefix before a fault is identical too
+    let mut a = Asm::new("prefix");
+    let buf = a.data.alloc_i32("buf", &[1, 2, 3]);
+    a.li(1, buf as i32);
+    a.lw(3, 1, 0);
+    a.add(3, 3, 3);
+    a.li(2, 0x7fff_fff0u32 as i32);
+    a.lw(4, 2, 0); // faults
+    a.halt();
+    let prog = a.assemble();
+    let mut ref_sink = CollectSink::default();
+    let mut dec_sink = CollectSink::default();
+    let re = simulate_reference_into(&prog, &cfg, Limits::default(), &mut ref_sink)
+        .unwrap_err();
+    let de =
+        simulate_decoded_into(&prog, &cfg, Limits::default(), &mut dec_sink)
+            .unwrap_err();
+    assert_eq!(re, de);
+    assert_eq!(ref_sink.ciq.len(), 4); // li, lw, add, li committed first
+    assert_eq!(ref_sink.ciq, dec_sink.ciq);
+
+    // running off the end of the text segment
+    let mut a = Asm::new("off-end");
+    a.addi(3, 0, 1);
+    a.addi(3, 3, 1);
+    let prog = a.assemble();
+    let t = assert_identical(&prog, &cfg, Limits::default());
+    assert_eq!(t.stop, StopReason::RanOffEnd);
+
+    // instruction-budget stop
+    let mut a = Asm::new("budget");
+    let top = a.label("top");
+    a.bind(top);
+    a.addi(3, 3, 1);
+    a.jump(top);
+    let prog = a.assemble();
+    let t =
+        assert_identical(&prog, &cfg, Limits { max_instructions: 500 });
+    assert_eq!(t.stop, StopReason::MaxInstructions);
+    assert_eq!(t.committed, 500);
+}
+
+/// The whole stack — coordinator grouping, stage caches, energy fold,
+/// report rendering — produces byte-identical output whichever simulator
+/// path ran.  Uses the process-global [`force_reference_path`] seam; this
+/// is the only test in this binary that touches it, and it restores the
+/// default even on failure paths before asserting.
+#[test]
+fn cold_sweep_reports_identical_on_both_paths() {
+    let eval = || {
+        Evaluation::new()
+            .bench("lcs")
+            .preset("c1")
+            .techs(&[Technology::SRAM, Technology::FEFET])
+            .cim_variants(&[CimLevels::L1Only, CimLevels::Both])
+            .scale(2)
+            .seed(11)
+            .jobs(2)
+            .backend(BackendSel::Native)
+    };
+    let decoded = eval().run();
+    force_reference_path(true);
+    let reference = eval().run();
+    force_reference_path(false);
+
+    let decoded = decoded.expect("decoded sweep");
+    let reference = reference.expect("reference sweep");
+    assert_eq!(decoded.render_json(), reference.render_json());
+    assert_eq!(decoded.render_table(), reference.render_table());
+    assert_eq!(decoded.render_csv(), reference.render_csv());
+}

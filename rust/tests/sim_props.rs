@@ -1,8 +1,14 @@
 //! Property-based tests over the simulator: functional correctness against
-//! a plain Rust interpreter-free oracle, timing sanity, cache invariants.
+//! a plain Rust interpreter-free oracle, timing sanity, cache invariants,
+//! and front-end micro-properties (branch-predictor redirect bubbles,
+//! store-buffer completion, fetch-line refetch after redirects) replayed
+//! against shadow oracles driven by the committed-instruction queue.
 
 use eva_cim::asm::Asm;
 use eva_cim::config::SystemConfig;
+use eva_cim::isa::Opcode;
+use eva_cim::probes::Trace;
+use eva_cim::sim::bpred::BranchPredictor;
 use eva_cim::sim::{simulate, Limits};
 use eva_cim::util::proptest::check;
 use eva_cim::util::Rng;
@@ -175,6 +181,243 @@ fn prop_cache_stats_consistent_with_accesses() {
                         return Err("l1_hit but level != L1".into());
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Branch-heavy random program: forward branches over 1–3 fillers (the
+/// filler count keeps taken/not-taken distinguishable from the commit
+/// stream — a taken branch to `pc + 1` would be ambiguous), short
+/// backward loops with memory traffic, and jal/jalr redirects.  Always
+/// commits a plain `addi` after the last branch so every committed cond
+/// branch has a successor record.
+fn branchy_trace(rng: &mut Rng, size: u32) -> Trace {
+    let mut a = Asm::new("branchy");
+    let vals: Vec<i32> = (0..16).map(|_| rng.gen_range(100) as i32 - 50).collect();
+    let buf = a.data.alloc_i32("buf", &vals);
+    a.li(1, buf as i32);
+    a.lw(3, 1, 0);
+    a.lw(4, 1, 4);
+    let n = 6 + (size as usize % 24);
+    for _ in 0..n {
+        match rng.gen_range(4) {
+            0 | 1 => {
+                // data-dependent forward branch over 1..=3 fillers
+                let l = a.label("fwd");
+                match rng.gen_range(3) {
+                    0 => {
+                        a.beq(3, 4, l);
+                    }
+                    1 => {
+                        a.blt(3, 4, l);
+                    }
+                    _ => {
+                        a.bne(3, 4, l);
+                    }
+                }
+                for _ in 0..(1 + rng.gen_range(3)) {
+                    a.addi(3, 3, 1);
+                }
+                a.bind(l);
+            }
+            2 => {
+                // short backward loop: warms the predictor, mispredicts at
+                // exit, and mixes I-fetch with D-cache traffic
+                let top = a.label("top");
+                a.li(5, 0);
+                a.li(6, 2 + rng.gen_range(12) as i32);
+                a.bind(top);
+                a.addi(5, 5, 1);
+                a.lw(4, 1, (rng.gen_range(16) as i32) * 4);
+                a.bne(5, 6, top);
+            }
+            _ if rng.gen_bool(0.5) => {
+                // jal always redirects the fetch line
+                let l = a.label("j");
+                a.jal(7, l);
+                a.nop(); // skipped
+                a.bind(l);
+            }
+            _ => {
+                // jalr with a data-dependent target (li, jalr, dead nop)
+                let t = a.len() as i32 + 3;
+                a.li(8, t);
+                a.jalr(9, 8);
+                a.nop(); // skipped
+            }
+        }
+    }
+    a.addi(3, 3, 0); // successor for the last branch
+    a.halt();
+    let cfg = SystemConfig::preset("c1").unwrap();
+    simulate(&a.assemble(), &cfg, Limits::default()).unwrap()
+}
+
+/// Replay the commit stream through a shadow `BranchPredictor` (same
+/// construction as the simulator's) and check (a) the pipeline's lookup /
+/// mispredict counters match the oracle exactly, (b) every mispredicted
+/// branch is followed by the full `mispredict_penalty` refetch bubble,
+/// and (c) a *correctly* predicted taken branch still pays the 2-cycle
+/// BTB redirect bubble.
+#[test]
+fn prop_bpred_redirect_and_mispredict_bubbles() {
+    check(
+        "bpred-redirect-bubble",
+        40,
+        branchy_trace,
+        |t| {
+            let cfg = SystemConfig::preset("c1").unwrap();
+            let mut oracle = BranchPredictor::new(12);
+            let mut lookups = 0u64;
+            let mut mispredicts = 0u64;
+            for w in t.ciq.windows(2) {
+                let (b, next) = (&w[0], &w[1]);
+                if !b.instr.op.is_cond_branch() {
+                    continue;
+                }
+                lookups += 1;
+                let taken = next.pc != b.pc + 1;
+                let pred = oracle.predict(b.pc);
+                if oracle.update(b.pc, taken, b.instr.imm as u32, pred) {
+                    mispredicts += 1;
+                    let bubble = b.tick_complete + cfg.core.mispredict_penalty;
+                    if next.tick_fetch < bubble {
+                        return Err(format!(
+                            "seq {}: mispredict refetch at {} before \
+                             complete {} + penalty {}",
+                            b.seq,
+                            next.tick_fetch,
+                            b.tick_complete,
+                            cfg.core.mispredict_penalty
+                        ));
+                    }
+                } else if taken && next.tick_fetch < b.tick_fetch + 2 {
+                    return Err(format!(
+                        "seq {}: correct-taken branch skipped the BTB \
+                         redirect bubble ({} < {} + 2)",
+                        b.seq, next.tick_fetch, b.tick_fetch
+                    ));
+                }
+            }
+            if t.pipe.bpred_lookups != lookups {
+                return Err(format!(
+                    "bpred_lookups {} != committed cond branches {}",
+                    t.pipe.bpred_lookups, lookups
+                ));
+            }
+            if t.pipe.bpred_mispredicts != mispredicts {
+                return Err(format!(
+                    "bpred_mispredicts {} != shadow predictor {}",
+                    t.pipe.bpred_mispredicts, mispredicts
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Stores drain through the store buffer in exactly one cycle
+/// (`tick_complete == tick_issue + 1`), while loads pay at least the L1D
+/// hit latency — the asymmetry that makes store-heavy code cheap in the
+/// timing model.
+#[test]
+fn prop_store_buffer_single_cycle_completion() {
+    check(
+        "store-buffer-1cy",
+        40,
+        |rng, size| {
+            let n = 12 + (size as usize % 48);
+            let mut a = Asm::new("stores");
+            let buf = a.data.alloc_i32("buf", &vec![3i32; 32]);
+            a.li(1, buf as i32);
+            a.lw(2, 1, 0);
+            for _ in 0..n {
+                let off = (rng.gen_range(32) as i32) * 4;
+                match rng.gen_range(4) {
+                    0 => {
+                        a.lw(2, 1, off);
+                    }
+                    1 => {
+                        a.sb(2, 1, rng.gen_range(128) as i32);
+                    }
+                    _ => {
+                        a.sw(2, 1, off);
+                    }
+                }
+            }
+            a.halt();
+            let cfg = SystemConfig::preset("c1").unwrap();
+            simulate(&a.assemble(), &cfg, Limits::default()).unwrap()
+        },
+        |t| {
+            let cfg = SystemConfig::preset("c1").unwrap();
+            let mut stores = 0u64;
+            for i in &t.ciq {
+                if i.instr.op.is_store() {
+                    stores += 1;
+                    if i.tick_complete != i.tick_issue + 1 {
+                        return Err(format!(
+                            "seq {}: store completed at {} not issue {} + 1",
+                            i.seq, i.tick_complete, i.tick_issue
+                        ));
+                    }
+                } else if i.instr.op.is_load()
+                    && i.tick_complete < i.tick_issue + cfg.l1d.latency
+                {
+                    return Err(format!(
+                        "seq {}: load beat the L1D hit latency",
+                        i.seq
+                    ));
+                }
+            }
+            if stores == 0 {
+                return Err("generator produced no stores".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The front end fetches one I-cache line per 8 sequential instructions
+/// and refetches after every redirect (mispredicted cond branch, jal,
+/// jalr).  Replaying that automaton over the commit stream must land
+/// exactly on the L1I access count the memory hierarchy recorded.
+#[test]
+fn prop_fetch_line_refetch_after_redirect() {
+    check(
+        "fetch-line-refetch",
+        40,
+        branchy_trace,
+        |t| {
+            let mut oracle = BranchPredictor::new(12);
+            let mut last_line = u32::MAX;
+            let mut accesses = 0u64;
+            for (k, i) in t.ciq.iter().enumerate() {
+                let line = i.pc / 8;
+                if line != last_line {
+                    accesses += 1;
+                    last_line = line;
+                }
+                if i.instr.op.is_cond_branch() {
+                    let taken = match t.ciq.get(k + 1) {
+                        Some(next) => next.pc != i.pc + 1,
+                        None => false,
+                    };
+                    let pred = oracle.predict(i.pc);
+                    if oracle.update(i.pc, taken, i.instr.imm as u32, pred) {
+                        last_line = u32::MAX; // redirect refetches the line
+                    }
+                } else if matches!(i.instr.op, Opcode::Jal | Opcode::Jalr) {
+                    last_line = u32::MAX;
+                }
+            }
+            let l1i = t.mem.l1i_hits + t.mem.l1i_misses;
+            if l1i != accesses {
+                return Err(format!(
+                    "L1I accesses {l1i} != front-end line fetches {accesses}"
+                ));
             }
             Ok(())
         },
