@@ -3,9 +3,10 @@
 //! backend latency per batched evaluation, the sweep result cache
 //! (warm resume must be ≥10x faster than cold), warm-trace replay
 //! decode (per-record reference vs zero-copy chunk decode vs pipelined
-//! multi-lane decode on the same spilled trace), and cold-path simulation
+//! multi-lane decode on the same spilled trace), cold-path simulation
 //! (the per-commit reference interpreter vs the pre-decoded execution
-//! path on the same program).
+//! path on the same program), and the offload-planner stage (pricing
+//! every candidate group vs a bare delta fold on the same stream).
 //!
 //! Targets (DESIGN.md §8): simulator ≥ 2 M instr/s, analyzer ≥ 5 M nodes/s,
 //! pipelined sim∥analyze beats sequential materialize-then-analyze,
@@ -25,6 +26,7 @@ use eva_cim::config::{CimLevels, SystemConfig, Technology};
 use eva_cim::coordinator::trace_store::TraceStore;
 use eva_cim::coordinator::{cross, Coordinator, SweepOptions};
 use eva_cim::pipeline::run_pipelined;
+use eva_cim::planner::{PlanPolicy, PlanSink};
 use eva_cim::probes::{IState, TraceSink};
 use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
 use eva_cim::reshape::{reshape, reshape_from_deltas, DeltaSink};
@@ -170,11 +172,12 @@ fn bench_streaming(quick: bool) {
 
 /// Stage-factored sweep vs the legacy per-point analysis loop on a
 /// T-tech × P-placement grid sharing one trace.  Emits a machine-readable
-/// `BENCH_sweep.json` (schema `BENCH_sweep/3`) with the wall-clocks and
+/// `BENCH_sweep.json` (schema `BENCH_sweep/4`) with the wall-clocks and
 /// the ledger counters — plus the replay-decode entries collected by
-/// [`bench_replay`] and the cold-path entries from [`bench_sim_decode`] —
-/// so CI can grep the factoring win and diff the key set against the
-/// committed snapshot at the repo root.
+/// [`bench_replay`], the cold-path entries from [`bench_sim_decode`], and
+/// the planner-stage entries from [`bench_planner`] — so CI can grep the
+/// factoring win and diff the key set against the committed snapshot at
+/// the repo root.
 fn bench_stage_factored(quick: bool, extra: Vec<(&'static str, Json)>) {
     let scale = if quick { 4 } else { 12 };
     let placements = [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both];
@@ -243,7 +246,7 @@ fn bench_stage_factored(quick: bool, extra: Vec<(&'static str, Json)>) {
     assert_eq!(rows.len(), points.len());
 
     let mut entries: Vec<(&'static str, Json)> = vec![
-        ("schema", "BENCH_sweep/3".into()),
+        ("schema", "BENCH_sweep/4".into()),
         ("points", (points.len() as u64).into()),
         ("techs", (techs.len() as u64).into()),
         ("placements", (placements.len() as u64).into()),
@@ -442,6 +445,95 @@ fn bench_sim_decode(quick: bool) -> Vec<(&'static str, Json)> {
     ]
 }
 
+/// Planner-stage cost on one pipelined run: a bare `DeltaSink` fold (no
+/// planning), the accept-all `PlanSink` (must fold identical deltas and
+/// cost next to nothing on top), and the profitability `PlanSink` (prices
+/// every candidate group against the device model).  Both policies must
+/// judge the same candidate stream.  Returns the `BENCH_sweep.json`
+/// entries.
+fn bench_planner(quick: bool) -> Vec<(&'static str, Json)> {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let iters = if quick { 60_000 } else { 400_000 }; // ~540k / ~3.6M instrs
+    let prog = stream_loop(iters);
+    let limits = Limits { max_instructions: 100_000_000 };
+    let samples = if quick { 1 } else { 3 };
+
+    let mut bare = f64::MAX;
+    let mut removed_bare = 0u64;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        let (summary, _, deltas) = run_pipelined(
+            &prog,
+            &cfg,
+            limits,
+            LocalityRule::AnyCache,
+            DeltaSink::default(),
+            None,
+        )
+        .unwrap();
+        bare = bare.min(t0.elapsed().as_secs_f64());
+        removed_bare = reshape_from_deltas(&summary, &deltas, &cfg).removed;
+    }
+
+    let mut time_policy = |policy: PlanPolicy| {
+        let knobs = policy.default_knobs();
+        let mut best = f64::MAX;
+        let mut out = None;
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            let (summary, _, sink) = run_pipelined(
+                &prog,
+                &cfg,
+                limits,
+                LocalityRule::AnyCache,
+                PlanSink::new(&cfg, policy, knobs),
+                None,
+            )
+            .unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            let (plan, deltas) = sink.finish();
+            let removed = reshape_from_deltas(&summary, &deltas, &cfg).removed;
+            out = Some((plan, removed));
+        }
+        let (plan, removed) = out.unwrap();
+        (best, plan, removed)
+    };
+    let (acc_s, acc_plan, removed_acc) = time_policy(PlanPolicy::AcceptAll);
+    let (prof_s, prof_plan, _) = time_policy(PlanPolicy::Profitability);
+
+    assert_eq!(
+        removed_acc, removed_bare,
+        "accept-all must fold the same deltas as a bare sink"
+    );
+    assert_eq!(acc_plan.groups_rejected(), 0, "accept-all never rejects");
+    assert_eq!(
+        prof_plan.groups_accepted() + prof_plan.groups_rejected(),
+        acc_plan.groups_accepted(),
+        "both policies must judge the same candidate stream"
+    );
+    println!(
+        "[perf] planner: {} groups: bare fold {:.1} ms -> accept-all \
+         {:.1} ms ({:.2}x) -> profitability {:.1} ms ({:.2}x), \
+         {} rejected ({:.1} pJ declined)",
+        acc_plan.groups_accepted(),
+        bare * 1e3,
+        acc_s * 1e3,
+        acc_s / bare.max(1e-9),
+        prof_s * 1e3,
+        prof_s / bare.max(1e-9),
+        prof_plan.groups_rejected(),
+        prof_plan.rejected_energy_pj(),
+    );
+
+    vec![
+        ("plan_bare_ms", (bare * 1e3).into()),
+        ("plan_accept_all_ms", (acc_s * 1e3).into()),
+        ("plan_profitability_ms", (prof_s * 1e3).into()),
+        ("plan_groups_seen", acc_plan.groups_accepted().into()),
+        ("plan_groups_rejected", prof_plan.groups_rejected().into()),
+    ]
+}
+
 fn bench_cache_resume(quick: bool) {
     let dir = std::env::temp_dir()
         .join(format!("eva-cim-bench-cache-{}", std::process::id()));
@@ -545,6 +637,9 @@ fn main() {
 
     // --- cold-path simulation: reference interpreter vs pre-decoded --------
     extra.extend(bench_sim_decode(quick));
+
+    // --- offload planner: accept-all vs profitability pricing --------------
+    extra.extend(bench_planner(quick));
 
     // --- stage-factored sweep: shared analysis across tech variants --------
     bench_stage_factored(quick, extra);

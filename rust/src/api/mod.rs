@@ -37,9 +37,12 @@ use anyhow::{anyhow, bail, Result};
 use crate::analyzer::{LocalityRule, StreamOutcome};
 use crate::asm::Program;
 use crate::config::{CimLevels, SystemConfig, Technology};
-use crate::coordinator::{cross, Coordinator, SweepOptions, SweepRow, SweepStats};
+use crate::coordinator::{
+    cross, Coordinator, SweepOptions, SweepPoint, SweepRow, SweepStats,
+};
 use crate::energy::{calib, device};
 use crate::pipeline::run_pipelined;
+use crate::planner::{PlanKnobs, PlanPolicy};
 use crate::probes::TraceSummary;
 use crate::profiler::ProfileInputs;
 use crate::reshape::{reshape_from_deltas, DeltaSink, Reshaped};
@@ -150,6 +153,13 @@ pub struct Evaluation {
     /// explicit simulator budget; `None` = each path's own default
     /// ([`SweepOptions`] for sweeps, [`Limits`] for single runs)
     max_instr: Option<u64>,
+    /// offload-decision policy for [`Evaluation::plan`]
+    policy: PlanPolicy,
+    /// explicit planner-knob overrides; unset fields keep the policy's
+    /// [`PlanPolicy::default_knobs`]
+    min_ops: Option<u64>,
+    min_net_pj: Option<f64>,
+    plan_level: Option<CimLevels>,
 }
 
 impl Evaluation {
@@ -166,6 +176,10 @@ impl Evaluation {
             backend: BackendSel::Auto,
             opts: SweepOptions::default(),
             max_instr: None,
+            policy: PlanPolicy::AcceptAll,
+            min_ops: None,
+            min_net_pj: None,
+            plan_level: None,
         }
     }
 
@@ -303,6 +317,48 @@ impl Evaluation {
     pub fn max_instructions(mut self, n: u64) -> Self {
         self.max_instr = Some(n);
         self
+    }
+
+    /// Offload-decision policy for [`Evaluation::plan`] (default
+    /// [`PlanPolicy::AcceptAll`]).
+    pub fn policy(mut self, policy: PlanPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Planner knob: reject groups with fewer CiM ops than this.
+    pub fn min_ops(mut self, n: u64) -> Self {
+        self.min_ops = Some(n);
+        self
+    }
+
+    /// Planner knob: reject groups whose net saving (pJ) falls below this.
+    pub fn min_net_pj(mut self, pj: f64) -> Self {
+        self.min_net_pj = Some(pj);
+        self
+    }
+
+    /// Planner knob: placement filter applied at plan time.
+    pub fn plan_level(mut self, level: CimLevels) -> Self {
+        self.plan_level = Some(level);
+        self
+    }
+
+    /// The effective planner knobs: the policy's
+    /// [`PlanPolicy::default_knobs`] with this builder's explicit
+    /// overrides applied.
+    pub fn plan_knobs(&self) -> PlanKnobs {
+        let mut knobs = self.policy.default_knobs();
+        if let Some(n) = self.min_ops {
+            knobs.min_ops = n;
+        }
+        if let Some(pj) = self.min_net_pj {
+            knobs.min_net_pj = pj;
+        }
+        if let Some(level) = self.plan_level {
+            knobs.level = level;
+        }
+        knobs
     }
 
     /// The coordinator options this evaluation will sweep with (explicit
@@ -591,6 +647,107 @@ impl Evaluation {
         let mut backend = self.backend_for(&configs)?;
         profile_program(prog, &configs[0], self.rule, self.limits(), backend.as_mut())
     }
+
+    /// Run the offload planner on exactly one benchmark × configuration
+    /// and report every group's priced decision — the `eva-cim plan`
+    /// core.  The accepted groups are folded through the reshape/energy
+    /// stage, so the summary's improvement/speedup reflect *the plan*,
+    /// not the raw candidate stream.
+    pub fn plan(&self) -> Result<Report> {
+        self.plan_on(&Coordinator::new(self.sweep_options()))
+    }
+
+    /// [`Evaluation::plan`] on a caller-provided warm [`Coordinator`] —
+    /// the `POST /plan` entry point (plans share the service's trace
+    /// store and are memoized by plan key for the process lifetime).
+    pub fn plan_on(&self, coord: &Coordinator) -> Result<Report> {
+        let configs = self.config_list()?;
+        let benches = self.bench_list();
+        if benches.len() != 1 || configs.len() != 1 {
+            bail!(
+                "plan() needs exactly one benchmark and one configuration \
+                 (got {} × {})",
+                benches.len(),
+                configs.len()
+            );
+        }
+        let mut backend = self.backend_for(&configs)?;
+        let point = SweepPoint {
+            bench: benches[0].clone(),
+            config: configs[0].clone(),
+            rule: self.rule,
+        };
+        let knobs = self.plan_knobs();
+        let t0 = std::time::Instant::now();
+        let (art, stats) =
+            coord.run_plan(&point, self.policy, &knobs, &self.sweep_options())?;
+
+        // stage 4 on the plan's output: fold ONLY the accepted groups'
+        // deltas through reshape + the profiler backend
+        let reshaped = reshape_from_deltas(&art.summary, &art.deltas, &point.config);
+        let inputs = ProfileInputs::new(&point.config, &reshaped);
+        let res = backend.evaluate_batch(&[inputs])?.remove(0);
+
+        let plan = &art.plan;
+        let mut summary = Section::new("plan summary", &["metric", "value"]);
+        let rows: Vec<(&str, Cell)> = vec![
+            ("bench", Cell::str(workloads::display_name(&point.bench))),
+            ("config", Cell::str(point.config.name.as_str())),
+            ("tech", Cell::str(point.config.tech.name())),
+            ("cim", Cell::str(point.config.cim_levels.name())),
+            ("rule", Cell::str(self.rule.name())),
+            ("policy", Cell::str(plan.policy.name())),
+            ("min ops", Cell::int(plan.knobs.min_ops)),
+            ("min net (pJ)", Cell::num(plan.knobs.min_net_pj, 2)),
+            ("plan level", Cell::str(plan.knobs.level.name())),
+            ("groups seen", Cell::int(plan.decisions.len() as u64)),
+            ("groups accepted", Cell::int(plan.groups_accepted())),
+            ("groups rejected", Cell::int(plan.groups_rejected())),
+            ("accepted CiM ops", Cell::int(plan.accepted_ops())),
+            ("offloaded instrs", Cell::int(reshaped.removed)),
+            ("accepted net saving (pJ)", Cell::num(plan.accepted_net_pj(), 1)),
+            ("rejected energy (pJ)", Cell::num(plan.rejected_energy_pj(), 1)),
+            ("E-impr", Cell::num(res.improvement, 2)),
+            ("speedup", Cell::num(res.speedup, 2)),
+            ("backend", Cell::str(backend.name())),
+        ];
+        for (metric, value) in rows {
+            summary.row(vec![Cell::str(metric), value]);
+        }
+
+        let mut decisions = Section::new(
+            "offload decisions (identical groups aggregated)",
+            &["groups", "level", "ops", "removed", "moves", "readbacks",
+              "cim pJ", "marshal pJ", "readback pJ", "saved pJ", "net pJ",
+              "decision", "reason"],
+        );
+        for row in plan.rows() {
+            let d = &row.decision;
+            decisions.row(vec![
+                Cell::int(row.count),
+                Cell::str(d.level.name()),
+                Cell::int(d.ops),
+                Cell::int(d.removed),
+                Cell::int(d.moves as u64),
+                Cell::int(d.readbacks as u64),
+                Cell::num(d.ledger.cim_op_pj, 3),
+                Cell::num(d.ledger.marshal_pj, 3),
+                Cell::num(d.ledger.readback_pj, 3),
+                Cell::num(d.ledger.saved_pj(), 3),
+                Cell::num(d.ledger.net_pj(), 3),
+                Cell::str(if d.accepted() { "offload" } else { "reject" }),
+                Cell::str(match d.rejected {
+                    Some(r) => r.name(),
+                    None => "-",
+                }),
+            ]);
+        }
+
+        Ok(Report::new(&format!("offload plan: {}", point.bench))
+            .with_section(summary)
+            .with_section(decisions)
+            .with_ledger(stats, t0.elapsed().as_secs_f64(), backend.name()))
+    }
 }
 
 /// The per-design-point grid section every sweep renders (bench × config
@@ -655,11 +812,23 @@ pub fn list_report() -> Report {
     for c in [CimLevels::None, CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both] {
         cims.row(vec![Cell::str(c.name())]);
     }
+    let mut policies = Section::new(
+        "planner policies (--policy)",
+        &["policy", "description", "aliases"],
+    );
+    for p in PlanPolicy::all() {
+        policies.row(vec![
+            Cell::str(p.name()),
+            Cell::str(p.describe()),
+            Cell::str(p.aliases()),
+        ]);
+    }
     Report::new("list")
         .with_section(benches)
         .with_section(presets)
         .with_section(techs)
         .with_section(cims)
+        .with_section(policies)
 }
 
 /// The `config` column of the explore grid: the row's configuration name
@@ -876,6 +1045,61 @@ mod tests {
     fn single_rejects_grids() {
         let ev = fast(Evaluation::new().benches(&["lcs", "km"]).preset("c1"));
         assert!(ev.single().is_err());
+    }
+
+    #[test]
+    fn plan_reports_summary_and_decisions() {
+        let report = fast(Evaluation::new().bench("lcs").preset("c1"))
+            .plan()
+            .unwrap();
+        let titles: Vec<&str> =
+            report.sections.iter().map(|s| s.title.as_str()).collect();
+        assert_eq!(
+            titles,
+            ["plan summary",
+             "offload decisions (identical groups aggregated)"]
+        );
+        // default accept-all: nothing rejected, ledger counters agree
+        assert!(matches!(
+            report.sections[0].cell(11, "value"),
+            Some(Cell::Int(0))
+        ));
+        let stats = report.stats.expect("plan carries the sweep ledger");
+        assert_eq!(stats.groups_rejected, 0);
+        assert!(stats.groups_accepted > 0);
+        assert!(report.render_json().contains("\"metric\":\"groups accepted\""));
+    }
+
+    #[test]
+    fn plan_rejects_grids() {
+        let ev = fast(Evaluation::new().benches(&["lcs", "km"]).preset("c1"));
+        assert!(ev.plan().is_err());
+    }
+
+    #[test]
+    fn plan_knobs_start_from_the_policy_defaults() {
+        let ev = Evaluation::new().policy(PlanPolicy::Profitability);
+        assert_eq!(ev.plan_knobs().min_ops, 2);
+        let ev = ev.min_ops(5).min_net_pj(1.5).plan_level(CimLevels::L1Only);
+        let knobs = ev.plan_knobs();
+        assert_eq!(knobs.min_ops, 5);
+        assert_eq!(knobs.min_net_pj, 1.5);
+        assert_eq!(knobs.level, CimLevels::L1Only);
+    }
+
+    #[test]
+    fn list_report_enumerates_planner_policies() {
+        let report = list_report();
+        let s = report
+            .sections
+            .iter()
+            .find(|s| s.title == "planner policies (--policy)")
+            .expect("policies section");
+        assert_eq!(s.num_rows(), PlanPolicy::all().len());
+        assert!(matches!(
+            s.cell(0, "policy"),
+            Some(Cell::Str(p)) if p.as_str() == "accept-all"
+        ));
     }
 
     #[test]

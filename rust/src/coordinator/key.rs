@@ -144,6 +144,35 @@ pub fn analysis_key(
     format!("{:016x}", fnv1a(payload.as_bytes()))
 }
 
+/// Key for a planning pass: the analysis identity crossed with everything
+/// the *planner* consumes — the policy, every threshold knob, the planner
+/// schema version ([`crate::planner::PLANNER_SCHEMA`]), and the full
+/// config serialization.  Unlike the analysis key, the config (hence the
+/// device-model content) *is* included: profitability prices groups in
+/// pJ using the technology's registered coefficients, so editing a custom
+/// tech must invalidate its plans even though it never invalidates the
+/// analysis.  With the default `accept-all` policy this key is consulted
+/// only by the plan path itself — existing trace/analysis/result keys are
+/// untouched.
+pub fn plan_key(
+    analysis_key: &str,
+    cfg: &SystemConfig,
+    policy: crate::planner::PlanPolicy,
+    knobs: &crate::planner::PlanKnobs,
+) -> String {
+    let payload = Json::obj(vec![
+        ("analysis", analysis_key.into()),
+        ("planner_schema", crate::planner::PLANNER_SCHEMA.into()),
+        ("policy", policy.name().into()),
+        ("min_ops", knobs.min_ops.into()),
+        ("min_net_pj", knobs.min_net_pj.into()),
+        ("plan_level", knobs.level.name().into()),
+        ("config", config_to_json(cfg)),
+    ])
+    .dump();
+    format!("{:016x}", fnv1a(payload.as_bytes()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +275,40 @@ mod tests {
         let mut bigger = cfg.clone();
         bigger.l1d.capacity *= 2;
         assert_ne!(trace_key("lcs", &bigger, &opts()), sram);
+    }
+
+    #[test]
+    fn plan_key_covers_policy_knobs_and_tech() {
+        use crate::config::CimLevels;
+        use crate::planner::{PlanKnobs, PlanPolicy};
+
+        let cfg = SystemConfig::preset("c1").unwrap();
+        let tk = trace_key("lcs", &cfg, &opts());
+        let ak = analysis_key(&tk, CimLevels::Both, LocalityRule::AnyCache);
+        let knobs = PlanKnobs::default();
+        let k0 = plan_key(&ak, &cfg, PlanPolicy::AcceptAll, &knobs);
+        assert_eq!(k0, plan_key(&ak, &cfg, PlanPolicy::AcceptAll, &knobs));
+        assert_ne!(k0, plan_key(&ak, &cfg, PlanPolicy::Profitability, &knobs));
+        let k = PlanKnobs { min_ops: 3, ..knobs };
+        assert_ne!(k0, plan_key(&ak, &cfg, PlanPolicy::AcceptAll, &k));
+        let k = PlanKnobs { min_net_pj: 5.0, ..knobs };
+        assert_ne!(k0, plan_key(&ak, &cfg, PlanPolicy::AcceptAll, &k));
+        let k = PlanKnobs { level: CimLevels::L1Only, ..knobs };
+        assert_ne!(k0, plan_key(&ak, &cfg, PlanPolicy::AcceptAll, &k));
+        // unlike the analysis key, the plan key covers the technology:
+        // pricing depends on the device-model coefficients
+        let fefet = cfg.clone().with_tech(Technology::FEFET);
+        assert_ne!(k0, plan_key(&ak, &fefet, PlanPolicy::AcceptAll, &knobs));
+        // and a different analysis is a different plan
+        assert_ne!(
+            k0,
+            plan_key(
+                &analysis_key(&tk, CimLevels::L1Only, LocalityRule::AnyCache),
+                &cfg,
+                PlanPolicy::AcceptAll,
+                &knobs
+            )
+        );
     }
 
     #[test]

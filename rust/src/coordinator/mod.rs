@@ -1,7 +1,7 @@
 //! The L3 coordinator: design-space-exploration sweeps.
 //!
 //! The per-point pipeline is *stage-factored* (paper Fig 2, §IV) into
-//! three independently keyed stages:
+//! four independently keyed stages:
 //!
 //! 1. **simulate** — keyed by [`key::trace_key`] (workload + geometry;
 //!    technology and CiM placement excluded), spilled chunk-by-chunk to
@@ -10,7 +10,20 @@
 //!    placement × locality rule × analyzer schema), producing a
 //!    persistable [`analysis_store::AnalysisArtifact`] (stream outcome +
 //!    reshape deltas) stored in `analysis/` and memoized in-process;
-//! 3. **energy fold** — per technology, microseconds, never cached.
+//! 3. **plan** — keyed by [`key::plan_key`] (analysis key × policy ×
+//!    threshold knobs × planner schema × device-model content), judging
+//!    every candidate group through the offload profitability model
+//!    ([`crate::planner`]) and feeding only the *accepted* groups to the
+//!    fold.  The key's invalidation rule is stricter than the analysis
+//!    key's: the technology IS included, because profitability prices
+//!    groups with the registered device coefficients — editing a custom
+//!    tech invalidates its plans but never its analyses.  Under the
+//!    default `accept-all` policy this stage is the identity (the
+//!    analyzer's deltas pass through unchanged), so sweeps skip it
+//!    entirely and stay byte-identical to the three-stage pipeline; it
+//!    runs only on the explicit plan path ([`Coordinator::run_plan`]),
+//!    memoized in-process ([`PlanArtifact`]);
+//! 4. **energy fold** — per technology, microseconds, never cached.
 //!
 //! The scheduler exploits the factoring: design points are grouped by
 //! trace, then by analysis key, and the worker pool claims whole *trace
@@ -204,12 +217,20 @@ pub struct SweepStats {
     pub longest_trace: u64,
     /// process peak RSS in KiB at sweep end (0 when unavailable)
     pub peak_rss_kb: u64,
+    /// candidate groups the offload planner accepted (plan runs only;
+    /// sweeps don't plan and report 0)
+    pub groups_accepted: u64,
+    /// candidate groups the offload planner rejected
+    pub groups_rejected: u64,
+    /// summed offload-side energy (pJ) of the rejected groups — what the
+    /// planner declined to spend
+    pub rejected_energy_pj: f64,
 }
 
 /// One-line human rendering of the interesting ledger entries, shared by
 /// the `sweep` and `table` CLI paths.
 pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
-    format!(
+    let mut line = format!(
         "{} design points in {:.2}s ({} cached, {} computed, {} simulated, \
          {} chunks) | stages: {} analyses run, {} cached, {} replays \
          skipped | replay: {} chunks decoded, {} lanes split | scale: \
@@ -234,7 +255,18 @@ pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
             0.0
         },
         stats.peak_rss_kb / 1024,
-    )
+    );
+    // the plan segment only appears when a planner actually judged groups
+    // — sweep ledger lines are unchanged by the planner's existence
+    if stats.groups_accepted > 0 || stats.groups_rejected > 0 {
+        line.push_str(&format!(
+            " | plan: {} groups accepted, {} rejected ({:.1} pJ declined)",
+            stats.groups_accepted,
+            stats.groups_rejected,
+            stats.rejected_energy_pj,
+        ));
+    }
+    line
 }
 
 /// Canonical JSON rendering of the sweep ledger (stderr companion of
@@ -257,6 +289,9 @@ pub fn ledger_json(stats: &SweepStats, secs: f64, backend: Option<&str>) -> Stri
         ("peak_window", stats.peak_window.into()),
         ("longest_trace", stats.longest_trace.into()),
         ("peak_rss_kb", stats.peak_rss_kb.into()),
+        ("groups_accepted", stats.groups_accepted.into()),
+        ("groups_rejected", stats.groups_rejected.into()),
+        ("rejected_energy_pj", stats.rejected_energy_pj.into()),
         ("elapsed_secs", secs.into()),
         ("backend", backend.unwrap_or("").into()),
     ])
@@ -298,6 +333,21 @@ struct TraceGroup {
     analyses: Vec<AnalysisGroup>,
 }
 
+/// One planned design point — everything [`Coordinator::run_plan`]
+/// produces, memoized under its [`key::plan_key`] for the life of the
+/// coordinator (the serving layer's warm path).
+pub struct PlanArtifact {
+    /// simulated-trace summary backing the plan
+    pub summary: TraceSummary,
+    /// streaming-analyzer outcome (MACR, rejection counters, peak window)
+    pub outcome: StreamOutcome,
+    /// the typed offload plan: every group's cost ledger and decision
+    pub plan: crate::planner::OffloadPlan,
+    /// reshape deltas folded from the *accepted* groups only — what the
+    /// energy stage sees
+    pub deltas: DeltaSink,
+}
+
 /// The sweep driver.
 pub struct Coordinator {
     /// sizing/caching/worker-pool knobs for every sweep this driver runs
@@ -306,12 +356,20 @@ pub struct Coordinator {
     /// `--cache-dir`-less runs (and repeated sweeps on one driver) also
     /// dedupe the analysis stage
     memo: Mutex<HashMap<String, Arc<AnalysisArtifact>>>,
+    /// plan artifacts memoized by [`key::plan_key`] — the plan stage's
+    /// analogue of `memo` (plans are not persisted to disk: they replay
+    /// from the spilled trace in milliseconds when cold)
+    plan_memo: Mutex<HashMap<String, Arc<PlanArtifact>>>,
 }
 
 impl Coordinator {
     /// A driver with the given options.
     pub fn new(opts: SweepOptions) -> Self {
-        Self { opts, memo: Mutex::new(HashMap::new()) }
+        Self {
+            opts,
+            memo: Mutex::new(HashMap::new()),
+            plan_memo: Mutex::new(HashMap::new()),
+        }
     }
 
     /// [`Coordinator::run_sweep_with_stats`], discarding the stats.
@@ -570,6 +628,121 @@ impl Coordinator {
             .map(|o| o.expect("sweep slot missing"))
             .collect();
         Ok((rows, stats))
+    }
+
+    /// Run the plan stage for one design point: simulate (or replay the
+    /// spilled trace), stream candidates through a
+    /// [`crate::planner::PlanSink`] judging every group with `policy` ×
+    /// `knobs`, and memoize the resulting [`PlanArtifact`] under its
+    /// [`key::plan_key`].
+    ///
+    /// The acquisition ladder mirrors [`Coordinator::stage_group`]:
+    /// memo hit → warm-trace replay (multi-lane decode, same
+    /// `replay_threads` budget) → pipelined simulate with a best-effort
+    /// trace spill.  A plan run therefore *warms* the same trace store
+    /// sweeps use, and vice versa — only the analysis lane differs (a
+    /// planning sink instead of a bare delta sink).
+    pub fn run_plan(
+        &self,
+        point: &SweepPoint,
+        policy: crate::planner::PlanPolicy,
+        knobs: &crate::planner::PlanKnobs,
+        opts: &SweepOptions,
+    ) -> Result<(Arc<PlanArtifact>, SweepStats)> {
+        let mut stats = SweepStats { points: 1, ..Default::default() };
+        let tkey = key::trace_key(&point.bench, &point.config, opts);
+        let akey = key::analysis_key(&tkey, point.config.cim_levels, point.rule);
+        let pkey = key::plan_key(&akey, &point.config, policy, knobs);
+
+        if let Some(art) = lock_unpoisoned(&self.plan_memo).get(&pkey).cloned() {
+            stats.rows_from_cache = 1;
+            stats.analyses_cached = 1;
+            stats.replays_skipped = 1;
+            Self::fill_plan_stats(&mut stats, &art);
+            return Ok((art, stats));
+        }
+        stats.rows_computed = 1;
+        stats.analyses_run = 1;
+
+        let disk = match &opts.cache_dir {
+            Some(dir) => Some(TraceStore::open(&dir.join("traces"))?),
+            None => None,
+        };
+        let build_sink =
+            || crate::planner::PlanSink::new(&point.config, policy, *knobs);
+
+        // warm path: replay the spilled trace through one planning lane
+        let mut replayed = None;
+        if let Some(d) = &disk {
+            let mut fanout = AnalyzerFanout::new(vec![OnlineAnalyzer::new(
+                point.config.cim_levels,
+                point.rule,
+                build_sink(),
+            )]);
+            if let Some((summary, chunks)) =
+                d.replay_with(&tkey, &mut fanout, effective_replay_threads(opts))
+            {
+                stats.trace_disk_hits = 1;
+                stats.replay_chunks_decoded = chunks;
+                let lane = fanout.finish().pop().expect("one planning lane");
+                replayed = Some((summary, lane.0, lane.1));
+            }
+        }
+
+        // cold path: pipelined simulate + plan, teeing the trace to disk
+        let (summary, outcome, sink) = match replayed {
+            Some(x) => x,
+            None => {
+                let prog = workloads::build(&point.bench, opts.scale, opts.seed)
+                    .ok_or_else(|| {
+                        anyhow!("unknown benchmark '{}'", point.bench)
+                    })?;
+                stats.simulator_runs = 1;
+                let limits = Limits { max_instructions: opts.max_instructions };
+                // best-effort spill, same contract as `stage_group`
+                let mut spill = match disk.as_ref().map(|d| d.writer(&tkey)) {
+                    Some(Ok(w)) => Some(w),
+                    Some(Err(e)) => {
+                        eprintln!("warning: trace spill failed: {e:#}");
+                        None
+                    }
+                    None => None,
+                };
+                let (summary, outcome, sink) = pipeline::run_pipelined(
+                    &prog,
+                    &point.config,
+                    limits,
+                    point.rule,
+                    build_sink(),
+                    spill.as_mut().map(|s| {
+                        s as &mut (dyn crate::probes::TraceSink + Send)
+                    }),
+                )?;
+                if let Some(w) = spill {
+                    if let Err(e) = w.finish(&summary) {
+                        eprintln!("warning: trace spill failed: {e:#}");
+                    }
+                }
+                (summary, outcome, sink)
+            }
+        };
+
+        let (plan, deltas) = sink.finish();
+        let art = Arc::new(PlanArtifact { summary, outcome, plan, deltas });
+        Self::fill_plan_stats(&mut stats, &art);
+        lock_unpoisoned(&self.plan_memo).insert(pkey, Arc::clone(&art));
+        Ok((art, stats))
+    }
+
+    /// Plan-derived ledger fields shared by the memo-hit and computed
+    /// paths of [`Coordinator::run_plan`].
+    fn fill_plan_stats(stats: &mut SweepStats, art: &PlanArtifact) {
+        stats.groups_accepted = art.plan.groups_accepted();
+        stats.groups_rejected = art.plan.groups_rejected();
+        stats.rejected_energy_pj = art.plan.rejected_energy_pj();
+        stats.peak_window = art.outcome.peak_window as u64;
+        stats.longest_trace = art.summary.committed;
+        stats.peak_rss_kb = crate::util::stats::peak_rss_kb();
     }
 
     /// Stage one trace group through the factored pipeline.
@@ -1050,5 +1223,70 @@ mod tests {
         let coord =
             Coordinator::new(SweepOptions { workers: 1, ..Default::default() });
         assert!(coord.run_sweep(&points, &mut NativeBackend).is_err());
+    }
+
+    #[test]
+    fn run_plan_memoizes_and_matches_sweep_deltas() {
+        use crate::planner::{PlanKnobs, PlanPolicy};
+
+        let point = SweepPoint {
+            bench: "lcs".into(),
+            config: SystemConfig::preset("c1").unwrap(),
+            rule: LocalityRule::AnyCache,
+        };
+        let coord = Coordinator::new(SweepOptions {
+            scale: 4,
+            workers: 1,
+            ..Default::default()
+        });
+        let knobs = PlanKnobs::default();
+        let (art, stats) = coord
+            .run_plan(&point, PlanPolicy::AcceptAll, &knobs, &coord.opts)
+            .unwrap();
+        assert_eq!(stats.simulator_runs, 1);
+        assert_eq!(stats.analyses_run, 1);
+        assert_eq!(stats.groups_rejected, 0);
+        assert_eq!(
+            stats.groups_accepted,
+            art.plan.groups_accepted(),
+            "ledger counters mirror the plan"
+        );
+        assert!(art.summary.committed > 0);
+
+        // accept-all planning folds the same deltas a sweep's bare
+        // analysis produces — the identity contract, at the artifact level
+        let (rows, _) = coord
+            .run_sweep_with_stats(std::slice::from_ref(&point), &mut NativeBackend)
+            .unwrap();
+        assert_eq!(rows[0].removed, {
+            let reshaped = reshape_from_deltas(&art.summary, &art.deltas, &point.config);
+            reshaped.removed
+        });
+
+        // second plan: pure memo hit, counters say so
+        let (art2, stats2) = coord
+            .run_plan(&point, PlanPolicy::AcceptAll, &knobs, &coord.opts)
+            .unwrap();
+        assert_eq!(stats2.simulator_runs, 0);
+        assert_eq!(stats2.analyses_run, 0);
+        assert_eq!(stats2.rows_from_cache, 1);
+        assert!(Arc::ptr_eq(&art, &art2));
+
+        // a different policy is a different plan key — recomputed, and the
+        // profitability default knobs reject at least the 1-op groups
+        let (art3, stats3) = coord
+            .run_plan(
+                &point,
+                PlanPolicy::Profitability,
+                &PlanPolicy::Profitability.default_knobs(),
+                &coord.opts,
+            )
+            .unwrap();
+        assert_eq!(stats3.rows_computed, 1);
+        assert_eq!(
+            art3.plan.groups_accepted() + art3.plan.groups_rejected(),
+            art.plan.groups_accepted(),
+            "both plans judged the same candidate stream"
+        );
     }
 }

@@ -491,8 +491,9 @@ pub fn unknown_tech_message(query: &str) -> String {
     msg
 }
 
-/// Classic dynamic-programming edit distance (small inputs only).
-fn levenshtein(a: &str, b: &str) -> usize {
+/// Classic dynamic-programming edit distance (small inputs only).  Shared
+/// with the planner's `--policy` did-you-mean diagnostic.
+pub(crate) fn levenshtein(a: &str, b: &str) -> usize {
     let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
     let mut prev: Vec<usize> = (0..=b.len()).collect();
     let mut cur = vec![0usize; b.len() + 1];

@@ -10,7 +10,8 @@
 //! ```text
 //!  workloads/ ──► sim/ (EVA32 OoO core + caches, probes) ──► probes::Trace
 //!        Trace ──► analyzer/ (IDG, RUT/IHT, candidate selection, MACR)
-//!   candidates ──► reshape/ (CiM trace + performance counters)
+//!   candidates ──► planner/ (profitability model; accepted groups only)
+//!     accepted ──► reshape/ (CiM trace + performance counters)
 //!     counters ──► profiler/ via runtime/ (AOT'd JAX graph on PJRT)
 //!                  or energy/ (native mirror) ──► report/
 //! ```
@@ -45,6 +46,7 @@ pub mod energy;
 pub mod experiments;
 pub mod isa;
 pub mod pipeline;
+pub mod planner;
 pub mod probes;
 pub mod profiler;
 pub mod reshape;

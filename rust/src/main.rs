@@ -6,6 +6,9 @@
 //!                     [--scale N] [--seed N] [--rule any|level|bank]
 //!                     [--backend auto|native|pjrt]
 //! eva-cim asm <file.s> [--config c1]             run a text-assembly file
+//! eva-cim plan <bench> [--policy accept-all|profitability] [--config c1]
+//!               [--tech sram] [--cim both] [--min-ops N] [--min-net-pj X]
+//!               [--plan-level l1|l2|l1+l2]       price every CiM offload
 //! eva-cim sweep [--benches a,b] [--configs c1,c2] [--techs sram,fefet]
 //!               [--scale N] [--jobs N] [--chunk N] [--replay-threads N]
 //!               [--csv out.csv] [--cache-dir DIR] [--resume]
@@ -294,7 +297,7 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
     let server = eva_cim::serve::Server::bind(opts).map_err(err_str)?;
     eprintln!(
         "eva-cim serve: listening on http://{} \
-         (endpoints: /health /stats /list /evaluate /sweep /explore; \
+         (endpoints: /health /stats /list /evaluate /sweep /explore /plan; \
          Ctrl-C drains in-flight jobs and exits)",
         server.addr()
     );
@@ -313,6 +316,44 @@ fn cmd_run(args: &cli::Args) -> Result<(), String> {
         .config(build_config(args)?)
         .single()
         .map_err(err_str)?;
+    emit(&report, args)
+}
+
+/// `eva-cim plan`: run the offload planner on one benchmark ×
+/// configuration and print every candidate group's priced decision —
+/// accepted and rejected, each with its cost-term ledger and (for
+/// rejections) a machine-readable reason.
+fn cmd_plan(args: &cli::Args) -> Result<(), String> {
+    let bench = args
+        .positional
+        .get(1)
+        .ok_or("usage: eva-cim plan <bench> [--policy accept-all|profitability] [flags]")?;
+    let mut ev = eval_from_args(args)?
+        .bench(bench)
+        .config(build_config(args)?);
+    if let Some(p) = args.flag("policy") {
+        ev = ev.policy(
+            eva_cim::planner::PlanPolicy::from_name(p)
+                .ok_or_else(|| eva_cim::planner::unknown_policy_message(p))?,
+        );
+    }
+    if let Some(v) = args.flag("min-ops") {
+        let n: u64 =
+            v.parse().map_err(|_| "--min-ops needs a number".to_string())?;
+        ev = ev.min_ops(n);
+    }
+    if let Some(v) = args.flag("min-net-pj") {
+        let pj: f64 =
+            v.parse().map_err(|_| "--min-net-pj needs a number".to_string())?;
+        ev = ev.min_net_pj(pj);
+    }
+    if let Some(v) = args.flag("plan-level") {
+        ev = ev.plan_level(
+            CimLevels::from_name(v)
+                .ok_or_else(|| format!("unknown cim levels '{v}'"))?,
+        );
+    }
+    let report = ev.plan().map_err(err_str)?;
     emit(&report, args)
 }
 
@@ -514,7 +555,7 @@ fn cmd_calib(args: &cli::Args) -> Result<(), String> {
     emit(&report, args)
 }
 
-const USAGE: &str = "usage: eva-cim <list|run|asm|sweep|explore|serve|table|validate|sensitivity|calib> [flags]
+const USAGE: &str = "usage: eva-cim <list|run|asm|plan|sweep|explore|serve|table|validate|sensitivity|calib> [flags]
 common flags: --format table|json|csv, --csv <file>, --tech-file <file.toml>
 try: eva-cim list";
 
@@ -544,6 +585,7 @@ fn main() -> ExitCode {
         "list" => cmd_list(&args),
         "run" => cmd_run(&args),
         "asm" => cmd_asm(&args),
+        "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
         "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),

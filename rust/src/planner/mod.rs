@@ -1,0 +1,821 @@
+//! The offload planner: a profitability-model decision layer between the
+//! analyzer's candidate stream and the reshape/energy fold.
+//!
+//! The streaming analyzer ([`crate::analyzer::stream::OnlineAnalyzer`])
+//! finds dependency-closed candidate groups and — historically — accepted
+//! them wholesale.  This module turns that implicit select-everything
+//! pass into an explicit, auditable decision: every
+//! [`CandidateRecord`] the analyzer emits is *priced* against the
+//! registered device model and either forwarded to the reshape fold or
+//! rejected with a machine-readable reason.  The output is a typed
+//! [`OffloadPlan`]: one [`GroupDecision`] per candidate group, each with
+//! a per-group [`CostLedger`] of the cost terms behind the verdict.
+//!
+//! Two policies are registered:
+//!
+//! * [`PlanPolicy::AcceptAll`] — the default, and **byte-identical to the
+//!   pre-planner pipeline**: every group is priced (the ledger is still
+//!   reported) but none is rejected, so the [`DeltaSink`] the planner
+//!   feeds is exactly what a bare sink would have accumulated.  Existing
+//!   cache keys, golden reports and dedup preimages are untouched.
+//! * [`PlanPolicy::Profitability`] — the cost-model-driven policy: a
+//!   group is offloaded only when the energy it saves (displaced core
+//!   events + displaced hierarchy transfers) beats what the offload
+//!   costs (in-array CiM ops + operand marshalling + result readback),
+//!   subject to the [`PlanKnobs`] thresholds.
+//!
+//! The pricing model ([`Pricer`]) is a first-order mirror of the reshape
+//! fold's event accounting, expressed in pJ via the same sources the
+//! energy stage uses: per-op array energies from
+//! [`crate::energy::energy_latency`] (device-registry coefficients,
+//! geometry-scaled), core-event unit energies from
+//! [`crate::energy::calib::static_unit_energy`], and the
+//! [`XBUS_FACTOR`] H-tree/bus transport multiplier on *hierarchy*
+//! accesses — which in-array CiM ops never pay (that asymmetry is the
+//! entire CiM value proposition, and the reason the model can reject a
+//! group whose host/CiM interaction traffic outweighs it).
+//!
+//! Planning is keyed and cached like analysis: see
+//! [`crate::coordinator::key::plan_key`], which embeds
+//! [`PLANNER_SCHEMA`], the policy name, every threshold knob and the
+//! device-model content.
+
+use std::collections::HashMap;
+
+use crate::analyzer::stream::{CandidateRecord, CandidateSink};
+use crate::analyzer::CimOp;
+use crate::config::{CimLevels, SystemConfig};
+use crate::energy;
+use crate::energy::calib::{
+    static_unit_energy, NOPS, OP_ADD, OP_AND, OP_OR, OP_READ, OP_WRITE, OP_XOR,
+    XBUS_FACTOR,
+};
+use crate::probes::MemLevel;
+use crate::reshape::counters::{C_DRAM_READS, C_FETCH, C_INT_ALU, C_LSQ_READS,
+                               C_LSQ_WRITES, NC};
+use crate::reshape::DeltaSink;
+use crate::util::json::Json;
+
+/// Version stamp of the planner's decision semantics.  Bump on any change
+/// to the pricing terms, the rejection precedence or the knob set — it is
+/// embedded in every plan cache key, so stale plans become unreachable.
+pub const PLANNER_SCHEMA: u64 = 1;
+
+/// A registered offload-decision policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanPolicy {
+    /// Accept every candidate group the analyzer emits (the default;
+    /// byte-identical to the pre-planner pipeline).
+    AcceptAll,
+    /// Offload a group only when the profitability model says the saved
+    /// energy beats the offload cost, subject to [`PlanKnobs`].
+    Profitability,
+}
+
+impl PlanPolicy {
+    /// Canonical name — the single source of truth shared by the CLI
+    /// parser, `eva-cim list`, and the plan cache key.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanPolicy::AcceptAll => "accept-all",
+            PlanPolicy::Profitability => "profitability",
+        }
+    }
+
+    /// Parse a canonical name or alias.
+    pub fn from_name(s: &str) -> Option<PlanPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "accept-all" | "accept_all" | "all" => Some(PlanPolicy::AcceptAll),
+            "profitability" | "profit" | "cost-model" => {
+                Some(PlanPolicy::Profitability)
+            }
+            _ => None,
+        }
+    }
+
+    /// Every registered policy, in listing order.
+    pub fn all() -> &'static [PlanPolicy] {
+        &[PlanPolicy::AcceptAll, PlanPolicy::Profitability]
+    }
+
+    /// One-line description for `eva-cim list`.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            PlanPolicy::AcceptAll => {
+                "offload every candidate group (default; pre-planner behavior)"
+            }
+            PlanPolicy::Profitability => {
+                "offload only groups whose saved energy beats the offload cost"
+            }
+        }
+    }
+
+    /// Accepted aliases, comma-separated (for `eva-cim list`).
+    pub fn aliases(&self) -> &'static str {
+        match self {
+            PlanPolicy::AcceptAll => "accept_all, all",
+            PlanPolicy::Profitability => "profit, cost-model",
+        }
+    }
+
+    /// The threshold knobs this policy starts from (CLI flags override).
+    /// `accept-all` never consults its knobs; `profitability` skips
+    /// singleton groups by default — a lone CiM op rarely amortizes the
+    /// host-side orchestration it takes to set up.
+    pub fn default_knobs(&self) -> PlanKnobs {
+        match self {
+            PlanPolicy::AcceptAll => PlanKnobs::default(),
+            PlanPolicy::Profitability => {
+                PlanKnobs { min_ops: 2, ..PlanKnobs::default() }
+            }
+        }
+    }
+}
+
+/// Diagnostic for an unrecognized `--policy` value: lists every
+/// registered policy and suggests the nearest one by edit distance
+/// (mirrors [`crate::energy::device::unknown_tech_message`]).
+pub fn unknown_policy_message(query: &str) -> String {
+    let names: Vec<&str> = PlanPolicy::all().iter().map(|p| p.name()).collect();
+    let q = query.to_ascii_lowercase();
+    let best = names
+        .iter()
+        .map(|c| (crate::energy::device::levenshtein(&q, c), *c))
+        .min()
+        .filter(|&(d, _)| d <= 3);
+    let mut msg = format!(
+        "unknown planner policy '{query}' (registered: {})",
+        names.join(", ")
+    );
+    if let Some((_, s)) = best {
+        msg.push_str(&format!("; did you mean '{s}'?"));
+    }
+    msg
+}
+
+/// Threshold knobs of the profitability model.  Every field is part of
+/// the plan cache key ([`crate::coordinator::key::plan_key`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanKnobs {
+    /// Reject groups with fewer CiM-op members than this
+    /// (`group_below_min_ops`).
+    pub min_ops: u64,
+    /// Reject groups whose net saving (saved − cost, pJ) falls below this
+    /// (`interaction_cost_exceeds_savings`).
+    pub min_net_pj: f64,
+    /// Planner-side placement filter: groups whose owning cache level is
+    /// not enabled here are rejected (`level_mismatch`).  Defaults to
+    /// both levels — the analyzer's own placement already applied.
+    pub level: CimLevels,
+}
+
+impl Default for PlanKnobs {
+    fn default() -> Self {
+        Self { min_ops: 1, min_net_pj: 0.0, level: CimLevels::Both }
+    }
+}
+
+/// Machine-readable reason a candidate group was not offloaded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The group's owning cache level is not enabled by
+    /// [`PlanKnobs::level`].
+    LevelMismatch,
+    /// The group has fewer CiM ops than [`PlanKnobs::min_ops`].
+    GroupBelowMinOps,
+    /// The host↔CiM interaction cost (marshalling + readback) plus the
+    /// in-array op energy exceeds the displaced baseline energy by more
+    /// than [`PlanKnobs::min_net_pj`] allows.
+    InteractionCostExceedsSavings,
+}
+
+impl RejectReason {
+    /// Stable serialized name (part of the report/JSON contract).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::LevelMismatch => "level_mismatch",
+            RejectReason::GroupBelowMinOps => "group_below_min_ops",
+            RejectReason::InteractionCostExceedsSavings => {
+                "interaction_cost_exceeds_savings"
+            }
+        }
+    }
+
+    /// Every reason, in rejection-precedence order (the order
+    /// [`judge`] checks them).
+    pub fn all() -> &'static [RejectReason] {
+        &[
+            RejectReason::LevelMismatch,
+            RejectReason::GroupBelowMinOps,
+            RejectReason::InteractionCostExceedsSavings,
+        ]
+    }
+}
+
+/// Per-group cost terms behind a decision, all in pJ.  The first three
+/// are what the offload *costs*, the last two what it *saves*; see
+/// [`Pricer::price`] for where each number comes from.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostLedger {
+    /// in-array CiM op energy at the owning level (no transport)
+    pub cim_op_pj: f64,
+    /// operand marshalling: cross-level moves + rereads of operands
+    /// shared with earlier groups (hierarchy accesses, transport paid)
+    pub marshal_pj: f64,
+    /// result readback into the core: hierarchy read + LSQ slot
+    pub readback_pj: f64,
+    /// displaced core events: fetch/ALU/LSQ of the removed instructions
+    pub saved_core_pj: f64,
+    /// displaced hierarchy transfers: the removed loads' cache/DRAM
+    /// traffic and the absorbed store's write-back
+    pub saved_xfer_pj: f64,
+}
+
+impl CostLedger {
+    /// Total offload-side cost (pJ).
+    pub fn cost_pj(&self) -> f64 {
+        self.cim_op_pj + self.marshal_pj + self.readback_pj
+    }
+
+    /// Total displaced baseline energy (pJ).
+    pub fn saved_pj(&self) -> f64 {
+        self.saved_core_pj + self.saved_xfer_pj
+    }
+
+    /// Net saving (pJ): positive means the offload wins.
+    pub fn net_pj(&self) -> f64 {
+        self.saved_pj() - self.cost_pj()
+    }
+
+    /// `(term name, pJ)` pairs in stable serialization order.
+    pub fn terms(&self) -> [(&'static str, f64); 5] {
+        [
+            ("cim_op_pj", self.cim_op_pj),
+            ("marshal_pj", self.marshal_pj),
+            ("readback_pj", self.readback_pj),
+            ("saved_core_pj", self.saved_core_pj),
+            ("saved_xfer_pj", self.saved_xfer_pj),
+        ]
+    }
+
+    /// Canonical JSON object of the terms plus the derived totals.
+    pub fn to_json(&self) -> Json {
+        let mut entries: Vec<(&str, Json)> =
+            self.terms().iter().map(|&(k, v)| (k, v.into())).collect();
+        entries.push(("cost_pj", self.cost_pj().into()));
+        entries.push(("saved_pj", self.saved_pj().into()));
+        entries.push(("net_pj", self.net_pj().into()));
+        Json::obj(entries)
+    }
+}
+
+/// The planner's verdict on one candidate group.
+#[derive(Clone, Debug)]
+pub struct GroupDecision {
+    /// emission index of the group (retirement order, 0-based)
+    pub index: u64,
+    /// cache level the group's CiM ops would execute in
+    pub level: MemLevel,
+    /// CiM-op member count of the group
+    pub ops: u64,
+    /// host instructions the offload removes (members + claimed loads +
+    /// absorbed store)
+    pub removed: u64,
+    /// cross-level operand moves the offload requires
+    pub moves: u32,
+    /// result readbacks the offload requires
+    pub readbacks: u32,
+    /// the cost terms behind the verdict
+    pub ledger: CostLedger,
+    /// `None` = offloaded; `Some(reason)` = kept on the host
+    pub rejected: Option<RejectReason>,
+}
+
+impl GroupDecision {
+    /// Whether the group was offloaded.
+    pub fn accepted(&self) -> bool {
+        self.rejected.is_none()
+    }
+
+    /// Canonical JSON rendering (stable field set and order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", self.index.into()),
+            ("level", self.level.name().into()),
+            ("ops", self.ops.into()),
+            ("removed", self.removed.into()),
+            ("moves", (self.moves as u64).into()),
+            ("readbacks", (self.readbacks as u64).into()),
+            ("ledger", self.ledger.to_json()),
+            (
+                "rejected",
+                match self.rejected {
+                    Some(r) => r.name().into(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// One aggregated report row: identical decisions collapsed, with a
+/// count.  Loop-structured code emits the same group shape thousands of
+/// times; aggregation keeps plan reports bounded without losing a single
+/// distinct verdict.
+#[derive(Clone, Debug)]
+pub struct PlanRow {
+    /// how many candidate groups share this exact decision
+    pub count: u64,
+    /// representative decision (first occurrence, retirement order)
+    pub decision: GroupDecision,
+}
+
+/// The typed output of a planning pass: every group's decision, plus the
+/// policy and knobs that produced it.
+#[derive(Clone, Debug)]
+pub struct OffloadPlan {
+    /// the policy that judged the groups
+    pub policy: PlanPolicy,
+    /// the thresholds the policy ran with
+    pub knobs: PlanKnobs,
+    /// one verdict per candidate group, in retirement order
+    pub decisions: Vec<GroupDecision>,
+}
+
+impl OffloadPlan {
+    /// Number of offloaded groups.
+    pub fn groups_accepted(&self) -> u64 {
+        self.decisions.iter().filter(|d| d.accepted()).count() as u64
+    }
+
+    /// Number of rejected groups.
+    pub fn groups_rejected(&self) -> u64 {
+        self.decisions.len() as u64 - self.groups_accepted()
+    }
+
+    /// Summed offload-side energy (CiM ops + marshalling + readback, pJ)
+    /// the plan declined to spend — the ledger counter surfaced as
+    /// `rejected_energy_pj`.
+    pub fn rejected_energy_pj(&self) -> f64 {
+        self.decisions
+            .iter()
+            .filter(|d| !d.accepted())
+            .map(|d| d.ledger.cost_pj())
+            .sum()
+    }
+
+    /// Summed net saving (pJ) of the accepted groups.
+    pub fn accepted_net_pj(&self) -> f64 {
+        self.decisions
+            .iter()
+            .filter(|d| d.accepted())
+            .map(|d| d.ledger.net_pj())
+            .sum()
+    }
+
+    /// Summed CiM-op count of the accepted groups.
+    pub fn accepted_ops(&self) -> u64 {
+        self.decisions.iter().filter(|d| d.accepted()).map(|d| d.ops).sum()
+    }
+
+    /// Collapse identical decisions into [`PlanRow`]s, first-occurrence
+    /// (retirement) order — deterministic, so reports stay byte-stable.
+    pub fn rows(&self) -> Vec<PlanRow> {
+        let mut index: HashMap<(u8, u64, u64, u32, u32, [u64; 5], u8), usize> =
+            HashMap::new();
+        let mut rows: Vec<PlanRow> = Vec::new();
+        for d in &self.decisions {
+            let t = d.ledger.terms();
+            let key = (
+                match d.level {
+                    MemLevel::L1 => 0u8,
+                    MemLevel::L2 => 1,
+                    MemLevel::Dram => 2,
+                },
+                d.ops,
+                d.removed,
+                d.moves,
+                d.readbacks,
+                [
+                    t[0].1.to_bits(),
+                    t[1].1.to_bits(),
+                    t[2].1.to_bits(),
+                    t[3].1.to_bits(),
+                    t[4].1.to_bits(),
+                ],
+                match d.rejected {
+                    None => 0u8,
+                    Some(RejectReason::LevelMismatch) => 1,
+                    Some(RejectReason::GroupBelowMinOps) => 2,
+                    Some(RejectReason::InteractionCostExceedsSavings) => 3,
+                },
+            );
+            match index.get(&key) {
+                Some(&ri) => rows[ri].count += 1,
+                None => {
+                    index.insert(key, rows.len());
+                    rows.push(PlanRow { count: 1, decision: d.clone() });
+                }
+            }
+        }
+        rows
+    }
+
+    /// Canonical JSON rendering of the whole plan (stable across runs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("planner_schema", PLANNER_SCHEMA.into()),
+            ("policy", self.policy.name().into()),
+            ("min_ops", self.knobs.min_ops.into()),
+            ("min_net_pj", self.knobs.min_net_pj.into()),
+            ("level", self.knobs.level.name().into()),
+            ("groups_accepted", self.groups_accepted().into()),
+            ("groups_rejected", self.groups_rejected().into()),
+            ("rejected_energy_pj", self.rejected_energy_pj().into()),
+            (
+                "decisions",
+                Json::Arr(self.decisions.iter().map(|d| d.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Prices candidate groups against one design point's device model.
+///
+/// Construction resolves the per-op array energies at the config's
+/// geometry + technology once; pricing a record is then a handful of
+/// multiply-adds on the hot path.
+pub struct Pricer {
+    e1: [f64; NOPS],
+    e2: [f64; NOPS],
+    unit: [f64; NC],
+}
+
+impl Pricer {
+    /// A pricer for one system configuration (its technology's registered
+    /// [`crate::energy::device::DeviceModel`] supplies the coefficients).
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let (r1, r2) = energy::cfg_rows(cfg);
+        let (e1, _) = energy::energy_latency(&r1);
+        let (e2, _) = energy::energy_latency(&r2);
+        Self { e1, e2, unit: static_unit_energy() }
+    }
+
+    /// Price one candidate group: what offloading it costs vs. what it
+    /// displaces.  First-order mirror of the reshape fold's event
+    /// accounting (see the module docs for the term-by-term rationale).
+    pub fn price(&self, rec: &CandidateRecord) -> CostLedger {
+        let c = &rec.candidate;
+        let (own, other) = match c.level {
+            MemLevel::L2 => (&self.e2, &self.e1),
+            _ => (&self.e1, &self.e2),
+        };
+
+        // in-array CiM ops: array energy only, no H-tree/bus transport
+        let cim_op_pj: f64 = c.ops.iter().map(|&op| own[op_index(op)]).sum();
+
+        // operand marshalling: each cross-level move reads the source
+        // level and writes the owning level through the hierarchy; each
+        // operand shared with an earlier group is reread at the owning
+        // level
+        let marshal_pj = c.moves as f64
+            * XBUS_FACTOR
+            * (other[OP_READ] + own[OP_WRITE])
+            + c.shared_loads.len() as f64 * XBUS_FACTOR * own[OP_READ];
+
+        // result readback: the core still needs the value in a register —
+        // one hierarchy read at the owning level plus an LSQ slot
+        let readback_pj = c.readbacks as f64
+            * (XBUS_FACTOR * own[OP_READ] + self.unit[C_LSQ_READS]);
+
+        // displaced core events: every removed instruction stops being
+        // fetched; members stop occupying the ALU; claimed loads and the
+        // absorbed store free their LSQ slots
+        let removed = c.removed_count() as f64;
+        let mut saved_core_pj = removed * self.unit[C_FETCH]
+            + c.members.len() as f64 * self.unit[C_INT_ALU]
+            + c.loads.len() as f64 * self.unit[C_LSQ_READS];
+        if c.absorbed_store.is_some() {
+            saved_core_pj += self.unit[C_LSQ_WRITES];
+        }
+
+        // displaced transfers: each claimed load's hierarchy traffic at
+        // its observed hit level; the absorbed store's write-back at the
+        // owning level
+        let mut saved_xfer_pj = 0.0;
+        for li in &rec.load_infos {
+            saved_xfer_pj += match &li.mem {
+                Some(m) if m.l1_hit => XBUS_FACTOR * self.e1[OP_READ],
+                Some(m) if m.l2_hit => {
+                    XBUS_FACTOR * (self.e1[OP_READ] + self.e2[OP_READ])
+                }
+                Some(_) => {
+                    XBUS_FACTOR * (self.e1[OP_READ] + self.e2[OP_READ])
+                        + self.unit[C_DRAM_READS]
+                }
+                None => XBUS_FACTOR * self.e1[OP_READ],
+            };
+        }
+        if c.absorbed_store.is_some() {
+            saved_xfer_pj += XBUS_FACTOR * own[OP_WRITE];
+        }
+
+        CostLedger {
+            cim_op_pj,
+            marshal_pj,
+            readback_pj,
+            saved_core_pj,
+            saved_xfer_pj,
+        }
+    }
+}
+
+/// Map a CiM op kind to its per-op energy column.
+fn op_index(op: CimOp) -> usize {
+    match op {
+        CimOp::Or => OP_OR,
+        CimOp::And => OP_AND,
+        CimOp::Xor => OP_XOR,
+        CimOp::Add => OP_ADD,
+    }
+}
+
+/// Apply `policy` to one priced group.  Rejection precedence (first hit
+/// wins): level filter, then group size, then profitability.
+pub fn judge(
+    policy: PlanPolicy,
+    knobs: &PlanKnobs,
+    rec: &CandidateRecord,
+    ledger: &CostLedger,
+) -> Option<RejectReason> {
+    match policy {
+        PlanPolicy::AcceptAll => None,
+        PlanPolicy::Profitability => {
+            let level_ok = match rec.candidate.level {
+                MemLevel::L1 => knobs.level.l1(),
+                MemLevel::L2 => knobs.level.l2(),
+                MemLevel::Dram => false,
+            };
+            if !level_ok {
+                Some(RejectReason::LevelMismatch)
+            } else if (rec.candidate.ops.len() as u64) < knobs.min_ops {
+                Some(RejectReason::GroupBelowMinOps)
+            } else if ledger.net_pj() < knobs.min_net_pj {
+                Some(RejectReason::InteractionCostExceedsSavings)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// The planning [`CandidateSink`]: prices every record, records the
+/// decision, and forwards **accepted** groups (by reference, no clone) to
+/// an inner [`DeltaSink`] — which is exactly how the plan "feeds the
+/// reshape/energy stage with accepted groups only".  With
+/// [`PlanPolicy::AcceptAll`] the inner sink's final state is
+/// byte-identical to a bare `DeltaSink` fed directly
+/// (`rust/tests/planner_equivalence.rs` is the contract).
+pub struct PlanSink {
+    pricer: Pricer,
+    policy: PlanPolicy,
+    knobs: PlanKnobs,
+    /// reshape deltas of the accepted groups
+    pub deltas: DeltaSink,
+    decisions: Vec<GroupDecision>,
+}
+
+impl PlanSink {
+    /// A planning sink for one design point.
+    pub fn new(cfg: &SystemConfig, policy: PlanPolicy, knobs: PlanKnobs) -> Self {
+        Self {
+            pricer: Pricer::new(cfg),
+            policy,
+            knobs,
+            deltas: DeltaSink::default(),
+            decisions: Vec::new(),
+        }
+    }
+
+    /// Finish planning: the typed plan plus the accepted-groups deltas.
+    pub fn finish(self) -> (OffloadPlan, DeltaSink) {
+        (
+            OffloadPlan {
+                policy: self.policy,
+                knobs: self.knobs,
+                decisions: self.decisions,
+            },
+            self.deltas,
+        )
+    }
+}
+
+impl CandidateSink for PlanSink {
+    fn on_candidate(&mut self, rec: CandidateRecord) {
+        let ledger = self.pricer.price(&rec);
+        let rejected = judge(self.policy, &self.knobs, &rec, &ledger);
+        if rejected.is_none() {
+            self.deltas.fold(&rec);
+        }
+        let c = &rec.candidate;
+        self.decisions.push(GroupDecision {
+            index: self.decisions.len() as u64,
+            level: c.level,
+            ops: c.ops.len() as u64,
+            removed: c.removed_count(),
+            moves: c.moves,
+            readbacks: c.readbacks,
+            ledger,
+            rejected,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::select::Candidate;
+
+    fn record(
+        level: MemLevel,
+        ops: Vec<CimOp>,
+        readbacks: u32,
+        moves: u32,
+    ) -> CandidateRecord {
+        let members: Vec<u64> = (0..ops.len() as u64).collect();
+        CandidateRecord {
+            candidate: Candidate {
+                root_seq: 0,
+                members,
+                loads: vec![100],
+                shared_loads: vec![],
+                absorbed_store: None,
+                readbacks,
+                moves,
+                level,
+                ops,
+            },
+            member_infos: vec![],
+            load_infos: vec![],
+            absorbed: None,
+        }
+    }
+
+    fn pricer() -> Pricer {
+        Pricer::new(&SystemConfig::default())
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in PlanPolicy::all() {
+            assert_eq!(PlanPolicy::from_name(p.name()), Some(*p));
+        }
+        assert_eq!(PlanPolicy::from_name("profit"),
+                   Some(PlanPolicy::Profitability));
+        assert_eq!(PlanPolicy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn unknown_policy_suggests_nearest() {
+        let msg = unknown_policy_message("profitabilty");
+        assert!(msg.contains("accept-all"), "{msg}");
+        assert!(msg.contains("did you mean 'profitability'?"), "{msg}");
+        // hopeless queries list the registry without a suggestion
+        let msg = unknown_policy_message("zzzzzzzzzzzz");
+        assert!(!msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn every_rejection_reason_is_reachable_and_stable() {
+        let p = pricer();
+        let knobs = PlanKnobs {
+            min_ops: 2,
+            min_net_pj: 0.0,
+            level: CimLevels::L2Only,
+        };
+        // L1 group against an L2-only plan level -> level_mismatch
+        let r1 = record(MemLevel::L1, vec![CimOp::Add, CimOp::Add], 0, 0);
+        let l1 = p.price(&r1);
+        assert_eq!(
+            judge(PlanPolicy::Profitability, &knobs, &r1, &l1),
+            Some(RejectReason::LevelMismatch)
+        );
+        // singleton L2 group -> group_below_min_ops
+        let r2 = record(MemLevel::L2, vec![CimOp::Add], 0, 0);
+        let l2 = p.price(&r2);
+        assert_eq!(
+            judge(PlanPolicy::Profitability, &knobs, &r2, &l2),
+            Some(RejectReason::GroupBelowMinOps)
+        );
+        // an impossible net threshold -> interaction_cost_exceeds_savings
+        let hard = PlanKnobs { min_net_pj: 1e15, ..knobs };
+        let r3 = record(MemLevel::L2, vec![CimOp::Add, CimOp::Or], 1, 1);
+        let l3 = p.price(&r3);
+        assert_eq!(
+            judge(PlanPolicy::Profitability, &hard, &r3, &l3),
+            Some(RejectReason::InteractionCostExceedsSavings)
+        );
+        // the serialized names are the documented contract
+        let names: Vec<&str> =
+            RejectReason::all().iter().map(|r| r.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "level_mismatch",
+                "group_below_min_ops",
+                "interaction_cost_exceeds_savings"
+            ]
+        );
+        // and accept-all never rejects anything
+        for (r, l) in [(&r1, &l1), (&r2, &l2), (&r3, &l3)] {
+            assert_eq!(judge(PlanPolicy::AcceptAll, &hard, r, l), None);
+        }
+    }
+
+    #[test]
+    fn pricer_charges_interaction_and_credits_displacement() {
+        let p = pricer();
+        let free = record(MemLevel::L1, vec![CimOp::Add, CimOp::Add], 0, 0);
+        let costly = record(MemLevel::L1, vec![CimOp::Add, CimOp::Add], 3, 3);
+        let lf = p.price(&free);
+        let lc = p.price(&costly);
+        // same ops, same displacement — only the interaction terms move
+        assert_eq!(lf.cim_op_pj, lc.cim_op_pj);
+        assert_eq!(lf.saved_core_pj, lc.saved_core_pj);
+        assert!(lc.marshal_pj > lf.marshal_pj);
+        assert!(lc.readback_pj > lf.readback_pj);
+        assert!(lc.net_pj() < lf.net_pj());
+        // every term is non-negative and the totals are consistent
+        for (_, v) in lc.terms() {
+            assert!(v >= 0.0);
+        }
+        assert!((lc.cost_pj() - (lc.cim_op_pj + lc.marshal_pj + lc.readback_pj))
+            .abs() < 1e-12);
+        assert!((lc.net_pj() - (lc.saved_pj() - lc.cost_pj())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_counters_and_json_are_stable() {
+        let cfg = SystemConfig::default();
+        let mut sink = PlanSink::new(
+            &cfg,
+            PlanPolicy::Profitability,
+            PlanKnobs { min_ops: 2, ..PlanKnobs::default() },
+        );
+        // two identical accepted groups, one rejected singleton
+        sink.on_candidate(record(MemLevel::L1, vec![CimOp::Add, CimOp::Or], 0, 0));
+        sink.on_candidate(record(MemLevel::L1, vec![CimOp::Add, CimOp::Or], 0, 0));
+        sink.on_candidate(record(MemLevel::L1, vec![CimOp::Add], 1, 0));
+        let (plan, _) = sink.finish();
+        assert_eq!(plan.groups_accepted(), 2);
+        assert_eq!(plan.groups_rejected(), 1);
+        assert!(plan.rejected_energy_pj() > 0.0);
+        // identical decisions aggregate into one row, first-seen order
+        let rows = plan.rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].count, 2);
+        assert!(rows[0].decision.accepted());
+        assert_eq!(rows[1].count, 1);
+        assert_eq!(
+            rows[1].decision.rejected,
+            Some(RejectReason::GroupBelowMinOps)
+        );
+        // canonical JSON is deterministic and carries the contract fields
+        let j = plan.to_json().dump();
+        assert_eq!(j, plan.to_json().dump());
+        for needle in [
+            "\"planner_schema\":1",
+            "\"policy\":\"profitability\"",
+            "\"groups_accepted\":2",
+            "\"groups_rejected\":1",
+            "\"group_below_min_ops\"",
+            "\"cim_op_pj\"",
+        ] {
+            assert!(j.contains(needle), "missing {needle} in {j}");
+        }
+    }
+
+    #[test]
+    fn accept_all_forwards_every_group_to_the_deltas() {
+        let cfg = SystemConfig::default();
+        let mut planned = PlanSink::new(
+            &cfg,
+            PlanPolicy::AcceptAll,
+            PlanPolicy::AcceptAll.default_knobs(),
+        );
+        let mut bare = DeltaSink::default();
+        for rec in [
+            record(MemLevel::L1, vec![CimOp::Add], 1, 0),
+            record(MemLevel::L2, vec![CimOp::Or, CimOp::Xor], 0, 2),
+        ] {
+            bare.fold(&rec);
+            planned.on_candidate(rec);
+        }
+        let (plan, deltas) = planned.finish();
+        assert_eq!(plan.groups_rejected(), 0);
+        assert_eq!(deltas.removed, bare.removed);
+        assert_eq!(deltas.cim_op_count, bare.cim_op_count);
+        assert_eq!(deltas.cim_add, bare.cim_add);
+        assert_eq!(deltas.delta.0, bare.delta.0);
+    }
+}

@@ -20,6 +20,7 @@
 //! | `/evaluate`      | POST   | one design point (`{"bench": ...}`)     |
 //! | `/sweep`         | POST   | benches × configs × techs grid          |
 //! | `/explore`       | POST   | Pareto grid + frontier                  |
+//! | `/plan`          | POST   | offload plan for one design point       |
 //!
 //! Observability rides on headers, never on the (byte-stable) body:
 //! `X-Eva-Cache` says whether the answer was `computed` (a simulation or
@@ -104,6 +105,7 @@ enum Kind {
     Evaluate,
     Sweep,
     Explore,
+    Plan,
 }
 
 /// The computed answer for one deduplicated request — what the leader
@@ -190,6 +192,7 @@ pub struct ServeStats {
     evaluate: AtomicU64,
     sweep: AtomicU64,
     explore: AtomicU64,
+    plan: AtomicU64,
     list: AtomicU64,
     health: AtomicU64,
     stats_reads: AtomicU64,
@@ -211,6 +214,11 @@ pub struct ServeStats {
     trace_disk_hits: AtomicU64,
     replay_chunks_decoded: AtomicU64,
     replay_lanes_split: AtomicU64,
+    groups_accepted: AtomicU64,
+    groups_rejected: AtomicU64,
+    // summed as whole pJ (rounded per request) — an atomic integer keeps
+    // the counter lock-free like its siblings
+    rejected_energy_pj: AtomicU64,
 }
 
 impl ServeStats {
@@ -220,6 +228,7 @@ impl ServeStats {
             "/evaluate" => &self.evaluate,
             "/sweep" => &self.sweep,
             "/explore" => &self.explore,
+            "/plan" => &self.plan,
             "/list" => &self.list,
             "/health" => &self.health,
             "/stats" => &self.stats_reads,
@@ -272,6 +281,10 @@ impl ServeStats {
             .fetch_add(s.replay_chunks_decoded, Ordering::Relaxed);
         self.replay_lanes_split
             .fetch_add(s.replay_lanes_split, Ordering::Relaxed);
+        self.groups_accepted.fetch_add(s.groups_accepted, Ordering::Relaxed);
+        self.groups_rejected.fetch_add(s.groups_rejected, Ordering::Relaxed);
+        self.rejected_energy_pj
+            .fetch_add(s.rejected_energy_pj.round() as u64, Ordering::Relaxed);
     }
 
     /// The `GET /stats` report: service counters + the cumulative sweep
@@ -284,6 +297,7 @@ impl ServeStats {
             ("evaluate", &self.evaluate),
             ("sweep", &self.sweep),
             ("explore", &self.explore),
+            ("plan", &self.plan),
             ("list", &self.list),
             ("health", &self.health),
             ("stats", &self.stats_reads),
@@ -310,6 +324,9 @@ impl ServeStats {
             ("trace_disk_hits", &self.trace_disk_hits),
             ("replay_chunks_decoded", &self.replay_chunks_decoded),
             ("replay_lanes_split", &self.replay_lanes_split),
+            ("groups_accepted", &self.groups_accepted),
+            ("groups_rejected", &self.groups_rejected),
+            ("rejected_energy_pj", &self.rejected_energy_pj),
         ] {
             ledger.row(vec![Cell::str(name), Cell::int(v.load(Ordering::Relaxed))]);
         }
@@ -575,17 +592,18 @@ fn route(state: &ServeState, req: &http::Request) -> http::Response {
         ("POST", "/evaluate") => handle_eval(state, Kind::Evaluate, req),
         ("POST", "/sweep") => handle_eval(state, Kind::Sweep, req),
         ("POST", "/explore") => handle_eval(state, Kind::Explore, req),
+        ("POST", "/plan") => handle_eval(state, Kind::Plan, req),
         (_, "/health" | "/stats" | "/list") => {
             error_response(405, "this endpoint is GET-only")
         }
-        (_, "/evaluate" | "/sweep" | "/explore") => {
+        (_, "/evaluate" | "/sweep" | "/explore" | "/plan") => {
             error_response(405, "this endpoint takes POST with a JSON body")
         }
         _ => error_response(
             404,
             &format!(
                 "unknown route '{}' (endpoints: /health /stats /list \
-                 /evaluate /sweep /explore)",
+                 /evaluate /sweep /explore /plan)",
                 req.path
             ),
         ),
@@ -656,6 +674,7 @@ fn handle_eval(state: &ServeState, kind: Kind, req: &http::Request) -> http::Res
 fn compute(state: &ServeState, kind: Kind, ev: &Evaluation) -> Outcome {
     let report = match kind {
         Kind::Explore => ev.explore_on(&state.coord),
+        Kind::Plan => ev.plan_on(&state.coord),
         Kind::Evaluate | Kind::Sweep => ev.run_on(&state.coord),
     };
     match report {
@@ -808,6 +827,82 @@ fn build_request(
             }
             let ev = ev.benches(&bench_refs).presets(&config_refs).techs(&techs);
             Ok((ev, norm_obj("explore", &benches, &configs, &techs, body)))
+        }
+        Kind::Plan => {
+            check_fields(
+                body,
+                &["bench", "config", "tech", "cim", "rule", "scale", "seed",
+                  "max_instructions", "replay_threads", "policy", "min_ops",
+                  "min_net_pj", "plan_level"],
+            )?;
+            let bench = body
+                .req("bench")
+                .map_err(|_| {
+                    "plan needs a 'bench' field (GET /list for the catalog)"
+                        .to_string()
+                })?
+                .as_str()
+                .ok_or("'bench' must be a string")?
+                .to_string();
+            check_bench(&bench)?;
+            let config = match body.get("config") {
+                Some(v) => v
+                    .as_str()
+                    .ok_or("'config' must be a preset name")?
+                    .to_string(),
+                None => "c1".to_string(),
+            };
+            check_preset(&config)?;
+            let techs = match body.get("tech") {
+                Some(v) => {
+                    let s = v.as_str().ok_or("'tech' must be a string")?;
+                    vec![parse_tech(s)?]
+                }
+                None => Vec::new(),
+            };
+            let mut ev = apply_common(base.clone(), body)?
+                .bench(&bench)
+                .preset(&config)
+                .techs(&techs);
+            if let Some(v) = body.get("policy") {
+                let s = v.as_str().ok_or("'policy' must be a string")?;
+                ev = ev.policy(
+                    crate::planner::PlanPolicy::from_name(s)
+                        .ok_or_else(|| {
+                            crate::planner::unknown_policy_message(s)
+                        })?,
+                );
+            }
+            if let Some(v) = body.get("min_ops") {
+                ev = ev.min_ops(v.as_u64().ok_or("'min_ops' must be a number")?);
+            }
+            if let Some(v) = body.get("min_net_pj") {
+                ev = ev.min_net_pj(
+                    v.as_f64().ok_or("'min_net_pj' must be a number")?,
+                );
+            }
+            if let Some(v) = body.get("plan_level") {
+                let s = v.as_str().ok_or("'plan_level' must be a string")?;
+                ev = ev.plan_level(
+                    CimLevels::from_name(s)
+                        .ok_or_else(|| format!("unknown cim levels '{s}'"))?,
+                );
+            }
+            let benches = vec![bench];
+            let configs = vec![config];
+            // the evaluate-style preimage plus the planner knobs: two plan
+            // requests differing only in policy/knobs must not share a
+            // leader (the plans differ even though the analysis agrees)
+            let mut norm = norm_obj("plan", &benches, &configs, &techs, body);
+            if let Json::Obj(m) = &mut norm {
+                for k in ["policy", "min_ops", "min_net_pj", "plan_level"] {
+                    m.insert(
+                        k.to_string(),
+                        body.get(k).cloned().unwrap_or(Json::Null),
+                    );
+                }
+            }
+            Ok((ev, norm))
         }
     }
 }
@@ -1117,6 +1212,56 @@ mod tests {
         let resp = raw_request(&addr, "GET", "/health", "");
         assert!(resp.starts_with("HTTP/1.1 200 "), "{resp}");
         assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn plan_endpoint_computes_caches_and_rejects_bad_policies() {
+        let server = Server::bind(test_opts()).unwrap();
+        let addr = server.addr();
+        let handle = server.spawn().unwrap();
+
+        // cold: the leader simulates and plans — computed, with the plan
+        // counters riding on the ledger header
+        let body = r#"{"bench":"lcs"}"#;
+        let resp = raw_request(&addr, "POST", "/plan", body);
+        assert!(resp.starts_with("HTTP/1.1 200 "), "{resp}");
+        assert!(resp.contains("X-Eva-Cache: computed"), "{resp}");
+        assert!(resp.contains("\"metric\":\"groups accepted\""), "{resp}");
+        assert!(resp.contains("\"groups_accepted\""), "{resp}");
+        assert!(resp.contains("\"groups_rejected\""), "{resp}");
+
+        // warm: the identical request hits the plan memo — cached, and the
+        // body is byte-identical
+        let resp2 = raw_request(&addr, "POST", "/plan", body);
+        assert!(resp2.contains("X-Eva-Cache: cached"), "{resp2}");
+        let body_of = |r: &str| r.split("\r\n\r\n").nth(1).unwrap().to_string();
+        assert_eq!(body_of(&resp), body_of(&resp2));
+
+        // a different policy is a different plan key: computed again
+        let resp3 = raw_request(
+            &addr,
+            "POST",
+            "/plan",
+            r#"{"bench":"lcs","policy":"profitability"}"#,
+        );
+        assert!(resp3.starts_with("HTTP/1.1 200 "), "{resp3}");
+        assert!(resp3.contains("X-Eva-Cache: computed"), "{resp3}");
+
+        // the cumulative ledger on /stats carries the plan counters
+        let stats = raw_request(&addr, "GET", "/stats", "");
+        assert!(stats.contains("\"counter\":\"groups_accepted\""), "{stats}");
+        assert!(stats.contains("\"metric\":\"plan\""), "{stats}");
+
+        // unknown policy: 400 envelope with the did-you-mean diagnostic
+        let resp4 = raw_request(
+            &addr,
+            "POST",
+            "/plan",
+            r#"{"bench":"lcs","policy":"profitabilty"}"#,
+        );
+        assert!(resp4.starts_with("HTTP/1.1 400 "), "{resp4}");
+        assert!(resp4.contains("did you mean 'profitability'"), "{resp4}");
         handle.shutdown();
     }
 

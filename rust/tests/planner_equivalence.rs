@@ -1,0 +1,223 @@
+//! Offload-planner contracts (PR 9).
+//!
+//! 1. **Accept-all byte-identity** — the default planner policy is the
+//!    "off" state: feeding a pipelined run through a
+//!    `planner::PlanSink` with [`PlanPolicy::AcceptAll`] must leave the
+//!    analysis artifact (stream outcome + reshape deltas) and the
+//!    rendered Report JSON / table / CSV byte-identical to a bare
+//!    `DeltaSink`, across randomized bench × locality rule × CiM
+//!    placement × technology draws.
+//! 2. **Profitability rejects with priced reasons** — on a memory-bound
+//!    benchmark the profitability policy rejects at least one candidate
+//!    group, every rejection carries a non-empty cost ledger and one of
+//!    the three machine-readable reasons, and the same rejection is
+//!    visible through the `Evaluation::plan()` facade the CLI calls.
+//!
+//! The per-reason reachability/serialization unit tests live next to the
+//! planner (`rust/src/planner/mod.rs`); this suite pins the end-to-end
+//! pipeline contracts.
+
+use eva_cim::analyzer::LocalityRule;
+use eva_cim::api::{BackendSel, Cell, Evaluation, Report, Section};
+use eva_cim::config::{CimLevels, SystemConfig, Technology};
+use eva_cim::coordinator::analysis_store::{artifact_to_json, AnalysisArtifact};
+use eva_cim::pipeline::run_pipelined;
+use eva_cim::planner::{PlanPolicy, PlanSink, RejectReason};
+use eva_cim::profiler::{evaluate_native_batch, ProfileInputs};
+use eva_cim::reshape::{reshape_from_deltas, DeltaSink};
+use eva_cim::sim::Limits;
+use eva_cim::util::proptest::check;
+use eva_cim::workloads;
+
+const BENCHES: [&str; 3] = ["lcs", "km", "bfs"];
+const RULES: [LocalityRule; 3] =
+    [LocalityRule::AnyCache, LocalityRule::SameLevel, LocalityRule::SameBank];
+const PLACEMENTS: [CimLevels; 3] =
+    [CimLevels::L1Only, CimLevels::L2Only, CimLevels::Both];
+
+/// Fold deltas through reshape + the native energy model into a small
+/// Report — the same value path a sweep row takes, so byte-equality here
+/// means byte-equality of everything downstream of the planner.
+fn report_for(
+    cfg: &SystemConfig,
+    summary: &eva_cim::probes::TraceSummary,
+    deltas: &DeltaSink,
+) -> Report {
+    let r = reshape_from_deltas(summary, deltas, cfg);
+    let p = evaluate_native_batch(&[ProfileInputs::new(cfg, &r)]).remove(0);
+    let mut s = Section::new(
+        "planner equivalence probe",
+        &["removed", "cim ops", "E-base", "E-cim", "E-impr", "speedup"],
+    );
+    s.row(vec![
+        Cell::int(r.removed),
+        Cell::int(r.cim_op_count),
+        Cell::num(p.total_base, 6),
+        Cell::num(p.total_cim, 6),
+        Cell::num(p.improvement, 6),
+        Cell::num(p.speedup, 6),
+    ]);
+    Report::new("planner equivalence probe").with_section(s)
+}
+
+#[test]
+fn accept_all_is_byte_identical_to_the_planner_free_pipeline() {
+    check(
+        "planner-accept-all-byte-identity",
+        9,
+        |rng, _size| {
+            let bench = BENCHES[rng.gen_range(BENCHES.len() as u64) as usize];
+            let rule = RULES[rng.gen_range(RULES.len() as u64) as usize];
+            let cim =
+                PLACEMENTS[rng.gen_range(PLACEMENTS.len() as u64) as usize];
+            let techs = Technology::all();
+            let tech = techs[rng.gen_range(techs.len() as u64) as usize];
+            let seed = rng.gen_range(1000);
+            (bench, rule, cim, tech, seed)
+        },
+        |&(bench, rule, cim, tech, seed)| {
+            let cfg = SystemConfig::preset("c1")
+                .unwrap()
+                .with_tech(tech)
+                .with_cim(cim);
+            let prog = workloads::build(bench, 2, seed)
+                .ok_or_else(|| format!("unknown benchmark '{bench}'"))?;
+
+            let (sum_a, out_a, deltas_a) = run_pipelined(
+                &prog,
+                &cfg,
+                Limits::default(),
+                rule,
+                DeltaSink::default(),
+                None,
+            )
+            .map_err(|e| format!("bare run: {e:#}"))?;
+
+            let (sum_b, out_b, sink) = run_pipelined(
+                &prog,
+                &cfg,
+                Limits::default(),
+                rule,
+                PlanSink::new(
+                    &cfg,
+                    PlanPolicy::AcceptAll,
+                    PlanPolicy::AcceptAll.default_knobs(),
+                ),
+                None,
+            )
+            .map_err(|e| format!("planned run: {e:#}"))?;
+            let (plan, deltas_b) = sink.finish();
+
+            if plan.groups_rejected() != 0 {
+                return Err(format!(
+                    "accept-all rejected {} groups",
+                    plan.groups_rejected()
+                ));
+            }
+            if plan.groups_accepted() != plan.decisions.len() as u64 {
+                return Err("accepted count != decision count".into());
+            }
+
+            // artifact bytes: summary + stream outcome + reshape deltas
+            let art_a = artifact_to_json(&AnalysisArtifact::new(
+                sum_a.clone(),
+                out_a,
+                deltas_a.clone(),
+            ))
+            .dump();
+            let art_b = artifact_to_json(&AnalysisArtifact::new(
+                sum_b.clone(),
+                out_b,
+                deltas_b.clone(),
+            ))
+            .dump();
+            if art_a != art_b {
+                return Err("analysis artifact bytes diverged".into());
+            }
+
+            // rendered bytes: JSON, table and CSV of the folded report
+            let rep_a = report_for(&cfg, &sum_a, &deltas_a);
+            let rep_b = report_for(&cfg, &sum_b, &deltas_b);
+            if rep_a.render_json() != rep_b.render_json() {
+                return Err("report JSON diverged".into());
+            }
+            if rep_a.render_table() != rep_b.render_table() {
+                return Err("report table diverged".into());
+            }
+            if rep_a.render_csv() != rep_b.render_csv() {
+                return Err("report CSV diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn profitability_rejects_groups_with_priced_reasons() {
+    let cfg = SystemConfig::preset("c1").unwrap();
+    let knobs = PlanPolicy::Profitability.default_knobs();
+    let names: Vec<&str> =
+        RejectReason::all().iter().map(|r| r.name()).collect();
+
+    let mut rejecting_bench = None;
+    for bench in BENCHES {
+        let prog = workloads::build(bench, 3, 3).unwrap();
+        let (_, _, sink) = run_pipelined(
+            &prog,
+            &cfg,
+            Limits::default(),
+            LocalityRule::AnyCache,
+            PlanSink::new(&cfg, PlanPolicy::Profitability, knobs),
+            None,
+        )
+        .unwrap();
+        let (plan, _) = sink.finish();
+        for d in plan.decisions.iter().filter(|d| !d.accepted()) {
+            let reason = d.rejected.expect("rejected has a reason").name();
+            assert!(
+                names.contains(&reason),
+                "{bench}: unknown rejection reason {reason}"
+            );
+            assert!(
+                d.ledger.terms().iter().any(|&(_, v)| v != 0.0),
+                "{bench}: rejected group has an empty cost ledger"
+            );
+            // the reason round-trips through the canonical JSON
+            assert!(
+                d.to_json().dump().contains(&format!("\"rejected\":\"{reason}\"")),
+                "{bench}: reason missing from decision JSON"
+            );
+        }
+        if plan.groups_rejected() >= 1 && rejecting_bench.is_none() {
+            assert!(
+                plan.rejected_energy_pj() >= 0.0,
+                "{bench}: negative rejected energy"
+            );
+            rejecting_bench = Some(bench);
+        }
+    }
+    let bench = rejecting_bench.expect(
+        "profitability accepted every group on every memory-bound bench",
+    );
+
+    // the same rejection is visible through the facade the CLI calls
+    let report = Evaluation::new()
+        .bench(bench)
+        .preset("c1")
+        .scale(3)
+        .seed(3)
+        .jobs(2)
+        .backend(BackendSel::Native)
+        .policy(PlanPolicy::Profitability)
+        .plan()
+        .unwrap();
+    let json = report.render_json();
+    assert!(
+        json.contains("\"decision\":\"reject\""),
+        "{bench}: plan report shows no rejected group"
+    );
+    assert!(
+        names.iter().any(|n| json.contains(&format!("\"reason\":\"{n}\""))),
+        "{bench}: plan report carries no machine-readable reason"
+    );
+}
