@@ -311,6 +311,15 @@ impl Evaluation {
         self
     }
 
+    /// `fsync` the result/artifact stores after every append — the
+    /// crash-consistency policy knob (default off: losing an unsynced
+    /// tail line only costs a recompute).  A durability knob only: it
+    /// never changes any cache key or any output byte.
+    pub fn fsync(mut self, fsync: bool) -> Self {
+        self.opts.fsync = fsync;
+        self
+    }
+
     /// Simulator instruction budget per design point.  Unset, each path
     /// keeps its own default: sweeps use the [`SweepOptions`] budget
     /// (part of the cache key), single runs the larger [`Limits`] default.

@@ -30,13 +30,13 @@
 //!
 //! Same append-only discipline as the point cache ([`super::cache`]):
 //! concurrent sweeps can only duplicate work, never corrupt artifacts;
-//! the loader takes the last line per key and skips truncated lines.
+//! the loader takes the last line per key and quarantines undecodable
+//! lines to `<cache-dir>/quarantine/` (see [`crate::util::faultio`]).
 //! Serialization is canonical (sorted keys, shortest-roundtrip `f64`s),
 //! so a reloaded artifact folds into byte-identical sweep rows.
 
 use std::collections::HashMap;
-use std::fs::{File, OpenOptions};
-use std::io::Write as _;
+use std::fs::File;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -45,6 +45,7 @@ use anyhow::{Context, Result};
 use crate::analyzer::{Macr, StreamOutcome};
 use crate::probes::TraceSummary;
 use crate::reshape::{DeltaSink, NC};
+use crate::util::faultio::{self, StoreIo as _};
 use crate::util::json::{self, Json};
 use crate::util::lock_unpoisoned;
 
@@ -175,6 +176,8 @@ pub fn artifact_from_json(o: &Json) -> Result<AnalysisArtifact, String> {
 pub struct AnalysisStore {
     dir: PathBuf,
     writer: Mutex<File>,
+    /// `fsync` after every append (crash-consistency policy knob)
+    fsync: bool,
 }
 
 impl AnalysisStore {
@@ -188,15 +191,23 @@ impl AnalysisStore {
     /// *point* cache keeps its hard gate because its keys don't embed
     /// its schema.
     pub fn open(dir: &Path) -> Result<Self> {
-        std::fs::create_dir_all(dir)
+        Self::open_with(dir, false)
+    }
+
+    /// [`AnalysisStore::open`] with an explicit fsync-on-append policy.
+    pub fn open_with(dir: &Path, fsync: bool) -> Result<Self> {
+        let io = faultio::fs();
+        faultio::with_retries("creating analysis store", || io.create_dir_all(dir))
             .with_context(|| format!("creating analysis store {dir:?}"))?;
         let meta_path = dir.join(META_FILE);
         let stamp_meta = || -> Result<()> {
             let meta = Json::obj(vec![("schema", ANALYZER_SCHEMA.into())]).dump();
-            std::fs::write(&meta_path, meta)
-                .with_context(|| format!("writing {meta_path:?}"))
+            faultio::with_retries("writing analysis meta", || {
+                io.write(&meta_path, meta.as_bytes())
+            })
+            .with_context(|| format!("writing {meta_path:?}"))
         };
-        match std::fs::read_to_string(&meta_path) {
+        match io.read_to_string(&meta_path) {
             Ok(text) => {
                 let schema = json::parse(&text)
                     .ok()
@@ -210,25 +221,35 @@ impl AnalysisStore {
                     let tag = schema
                         .map(|s| s.to_string())
                         .unwrap_or_else(|| "unknown".into());
-                    let _ = std::fs::rename(
-                        dir.join(ARTIFACTS_FILE),
-                        dir.join(format!("{ARTIFACTS_FILE}.schema-{tag}")),
+                    let _ = io.rename(
+                        &dir.join(ARTIFACTS_FILE),
+                        &dir.join(format!("{ARTIFACTS_FILE}.schema-{tag}")),
                     );
                     stamp_meta()?;
                 }
             }
             Err(_) => stamp_meta()?,
         }
-        let writer = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(dir.join(ARTIFACTS_FILE))
-            .with_context(|| format!("opening {ARTIFACTS_FILE} in {dir:?}"))?;
-        Ok(Self { dir: dir.to_path_buf(), writer: Mutex::new(writer) })
+        let artifacts = dir.join(ARTIFACTS_FILE);
+        let writer = faultio::with_retries("opening analysis store", || {
+            io.open_append(&artifacts)
+        })
+        .with_context(|| format!("opening {ARTIFACTS_FILE} in {dir:?}"))?;
+        Ok(Self { dir: dir.to_path_buf(), writer: Mutex::new(writer), fsync })
     }
 
-    /// Read every stored artifact (last write per key wins).  Malformed
-    /// lines are counted and skipped, like the point cache's loader.
+    /// Quarantine directory shared with the sibling stores: the
+    /// analysis store lives at `<cache-dir>/analysis/`, so bad entries
+    /// land beside the point cache's under `<cache-dir>/quarantine/`.
+    fn quarantine_dir(&self) -> PathBuf {
+        self.dir
+            .parent()
+            .unwrap_or(&self.dir)
+            .join(super::QUARANTINE_DIR)
+    }
+
+    /// Read every stored artifact (last write per key wins).
+    /// Undecodable lines are quarantined, like the point cache's loader.
     pub fn load(&self) -> Result<HashMap<String, AnalysisArtifact>> {
         self.load_filtered(None)
     }
@@ -251,12 +272,20 @@ impl AnalysisStore {
         use std::io::BufRead as _;
 
         let path = self.dir.join(ARTIFACTS_FILE);
-        let file = match std::fs::File::open(&path) {
+        let file = match faultio::with_retries("opening analysis artifacts", || {
+            faultio::fs().open_read(&path)
+        }) {
             Ok(f) => f,
-            Err(_) => return Ok(HashMap::new()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(HashMap::new())
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("opening {path:?}"))
+            }
         };
         let mut arts = HashMap::new();
         let mut skipped = 0usize;
+        let qdir = self.quarantine_dir();
         // streamed line-by-line: peak memory is O(kept artifacts + one
         // line), not O(file) — the store accumulates history
         for line in std::io::BufReader::new(file).lines() {
@@ -281,19 +310,32 @@ impl AnalysisStore {
                 Ok((key, art)) => {
                     arts.insert(key, art);
                 }
-                Err(_) => skipped += 1,
+                Err(e) => {
+                    skipped += 1;
+                    let name = format!(
+                        "artifacts-{}.line",
+                        faultio::content_tag(line.as_bytes())
+                    );
+                    faultio::quarantine_bytes(
+                        &qdir,
+                        &name,
+                        line.as_bytes(),
+                        &format!("undecodable line in {ARTIFACTS_FILE}: {e}"),
+                    );
+                }
             }
         }
         if skipped > 0 {
             eprintln!(
                 "warning: skipped {skipped} malformed line(s) in {path:?} \
-                 (interrupted append?)"
+                 (quarantined under {qdir:?})"
             );
         }
         Ok(arts)
     }
 
-    /// Append one artifact.  Flushed immediately; the writer lock is
+    /// Append one artifact.  Flushed immediately; transient faults are
+    /// retried, torn tails are newline-healed, and the writer lock is
     /// poison-tolerant for the same reason as the point cache's.
     pub fn append(&self, key: &str, art: &AnalysisArtifact) -> Result<()> {
         let line = Json::obj(vec![
@@ -301,9 +343,22 @@ impl AnalysisStore {
             ("art", artifact_to_json(art)),
         ])
         .dump();
+        let payload = format!("{line}\n");
+        let path = self.dir.join(ARTIFACTS_FILE);
+        let io = faultio::fs();
         let mut f = lock_unpoisoned(&self.writer);
-        writeln!(f, "{line}").context("appending to analysis store")?;
-        f.flush().context("flushing analysis store")?;
+        if let Err(e) = faultio::with_retries("appending to analysis store", || {
+            io.write_all(&path, &mut f, payload.as_bytes())
+        }) {
+            // terminate any torn tail so later appends stay decodable
+            use std::io::Write as _;
+            let _ = f.write_all(b"\n");
+            return Err(e).context("appending to analysis store");
+        }
+        if self.fsync {
+            faultio::with_retries("fsyncing analysis store", || io.fsync(&path, &f))
+                .context("fsyncing analysis store")?;
+        }
         Ok(())
     }
 }

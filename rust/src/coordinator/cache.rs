@@ -15,18 +15,21 @@
 //!
 //! Appends are the only mutation, so concurrent sweeps sharing a cache
 //! directory can only ever duplicate work, never corrupt results (the
-//! loader takes the last line per key).  A truncated final line — e.g.
-//! from a killed process — is skipped with a warning rather than failing
-//! the whole sweep.
+//! loader takes the last line per key).  A truncated or garbage line —
+//! e.g. from a killed process — is quarantined to
+//! `<cache-dir>/quarantine/` with a reason file (see
+//! [`crate::util::faultio`]) rather than failing the whole sweep; every
+//! filesystem call goes through the injectable [`faultio::StoreIo`]
+//! layer with transient-fault retries.
 
 use std::collections::HashMap;
-use std::fs::{File, OpenOptions};
-use std::io::Write as _;
+use std::fs::File;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::util::faultio::{self, StoreIo as _};
 use crate::util::json::{self, Json};
 use crate::util::lock_unpoisoned;
 
@@ -41,38 +44,65 @@ const SCHEMA: u64 = 1;
 pub struct ResultCache {
     dir: PathBuf,
     writer: Mutex<File>,
+    /// `fsync` after every append (the crash-consistency policy knob —
+    /// default off: a lost tail line only costs a recompute)
+    fsync: bool,
 }
 
 impl ResultCache {
     /// Open (creating if needed) the cache at `dir`, verifying the schema.
     pub fn open(dir: &Path) -> Result<Self> {
-        std::fs::create_dir_all(dir)
+        Self::open_with(dir, false)
+    }
+
+    /// [`ResultCache::open`] with an explicit fsync-on-append policy.
+    pub fn open_with(dir: &Path, fsync: bool) -> Result<Self> {
+        let io = faultio::fs();
+        faultio::with_retries("creating cache dir", || io.create_dir_all(dir))
             .with_context(|| format!("creating cache dir {dir:?}"))?;
         let meta_path = dir.join(META_FILE);
-        match std::fs::read_to_string(&meta_path) {
-            Ok(text) => {
-                let meta = json::parse(&text)
-                    .map_err(|e| anyhow!("parsing {meta_path:?}: {e}"))?;
-                let schema = meta.get("schema").and_then(|v| v.as_u64());
-                if schema != Some(SCHEMA) {
-                    bail!(
-                        "cache {dir:?} has schema {schema:?}, this build expects \
-                         {SCHEMA}; delete the directory to rebuild it"
-                    );
+        let stamp_meta = || -> Result<()> {
+            let meta = Json::obj(vec![("schema", SCHEMA.into())]).dump();
+            faultio::with_retries("writing cache meta", || {
+                io.write(&meta_path, meta.as_bytes())
+            })
+            .with_context(|| format!("writing {meta_path:?}"))
+        };
+        match io.read_to_string(&meta_path) {
+            Ok(text) => match json::parse(&text) {
+                Ok(meta) => {
+                    let schema = meta.get("schema").and_then(|v| v.as_u64());
+                    if schema != Some(SCHEMA) {
+                        bail!(
+                            "cache {dir:?} has schema {schema:?}, this build \
+                             expects {SCHEMA}; delete the directory to \
+                             rebuild it"
+                        );
+                    }
                 }
-            }
-            Err(_) => {
-                let meta = Json::obj(vec![("schema", SCHEMA.into())]).dump();
-                std::fs::write(&meta_path, meta)
-                    .with_context(|| format!("writing {meta_path:?}"))?;
-            }
+                Err(e) => {
+                    // a torn meta stamp (crash or short write mid-open) is
+                    // not a *mismatching* schema: quarantine the fragment
+                    // and restamp, exactly as if the store were fresh
+                    faultio::quarantine_bytes(
+                        &dir.join(super::QUARANTINE_DIR),
+                        &format!(
+                            "cache-meta-{}.json",
+                            faultio::content_tag(text.as_bytes())
+                        ),
+                        text.as_bytes(),
+                        &format!("undecodable {META_FILE}: {e}"),
+                    );
+                    stamp_meta()?;
+                }
+            },
+            Err(_) => stamp_meta()?,
         }
-        let writer = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(dir.join(RESULTS_FILE))
-            .with_context(|| format!("opening {RESULTS_FILE} in {dir:?}"))?;
-        Ok(Self { dir: dir.to_path_buf(), writer: Mutex::new(writer) })
+        let results = dir.join(RESULTS_FILE);
+        let writer =
+            faultio::with_retries("opening result cache", || io.open_append(&results))
+                .with_context(|| format!("opening {RESULTS_FILE} in {dir:?}"))?;
+        Ok(Self { dir: dir.to_path_buf(), writer: Mutex::new(writer), fsync })
     }
 
     /// Root directory this cache was opened at.
@@ -80,16 +110,26 @@ impl ResultCache {
         &self.dir
     }
 
-    /// Read every cached row (last write per key wins). Malformed lines are
-    /// counted and skipped — an interrupted append must not poison resumes.
+    /// Read every cached row (last write per key wins).  A line that
+    /// fails decode — truncated append, garbage, hand-edit — is
+    /// quarantined to `<cache-dir>/quarantine/` with a reason file (and
+    /// counted in the sweep ledger), never served and never fatal.
     pub fn load(&self) -> Result<HashMap<String, SweepRow>> {
         let path = self.dir.join(RESULTS_FILE);
-        let text = match std::fs::read_to_string(&path) {
+        let text = match faultio::with_retries("reading result cache", || {
+            faultio::fs().read_to_string(&path)
+        }) {
             Ok(t) => t,
-            Err(_) => return Ok(HashMap::new()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(HashMap::new())
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {path:?}"))
+            }
         };
         let mut rows = HashMap::new();
         let mut skipped = 0usize;
+        let qdir = self.dir.join(super::QUARANTINE_DIR);
         for line in text.lines() {
             if line.trim().is_empty() {
                 continue;
@@ -98,34 +138,62 @@ impl ResultCache {
                 Ok((key, row)) => {
                     rows.insert(key, row);
                 }
-                Err(_) => skipped += 1,
+                Err(e) => {
+                    skipped += 1;
+                    let name = format!(
+                        "results-{}.line",
+                        faultio::content_tag(line.as_bytes())
+                    );
+                    faultio::quarantine_bytes(
+                        &qdir,
+                        &name,
+                        line.as_bytes(),
+                        &format!("undecodable line in {RESULTS_FILE}: {e}"),
+                    );
+                }
             }
         }
         if skipped > 0 {
             eprintln!(
                 "warning: skipped {skipped} malformed line(s) in {path:?} \
-                 (interrupted append?)"
+                 (quarantined under {qdir:?})"
             );
         }
         Ok(rows)
     }
 
     /// Append one computed row. Flushed immediately so a crash loses at
-    /// most the in-flight line.
+    /// most the in-flight line; transient write faults are retried with
+    /// backoff, and a torn write is self-healed with a newline so the
+    /// *next* append starts on a fresh line (the torn one quarantines on
+    /// the next load).
     ///
     /// The writer lock is poison-tolerant: a worker that panicked while
     /// appending leaves at most one truncated line, which `load` already
-    /// skips — the surviving workers must keep appending rather than
-    /// cascade the panic across the sweep pool.
+    /// quarantines — the surviving workers must keep appending rather
+    /// than cascade the panic across the sweep pool.
     pub fn append(&self, key: &str, row: &SweepRow) -> Result<()> {
         let line = Json::obj(vec![
             ("key", key.into()),
             ("row", persist::row_to_json(row)),
         ])
         .dump();
+        let payload = format!("{line}\n");
+        let path = self.dir.join(RESULTS_FILE);
+        let io = faultio::fs();
         let mut f = lock_unpoisoned(&self.writer);
-        writeln!(f, "{line}").context("appending to result cache")?;
-        f.flush().context("flushing result cache")?;
+        if let Err(e) = faultio::with_retries("appending to result cache", || {
+            io.write_all(&path, &mut f, payload.as_bytes())
+        }) {
+            // terminate any torn tail so later appends stay decodable
+            use std::io::Write as _;
+            let _ = f.write_all(b"\n");
+            return Err(e).context("appending to result cache");
+        }
+        if self.fsync {
+            faultio::with_retries("fsyncing result cache", || io.fsync(&path, &f))
+                .context("fsyncing result cache")?;
+        }
         Ok(())
     }
 }

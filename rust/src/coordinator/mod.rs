@@ -91,6 +91,7 @@ use crate::profiler::{ProfileInputs, ProfileResult};
 use crate::reshape::{reshape_from_deltas, DeltaSink};
 use crate::runtime::Backend;
 use crate::sim::Limits;
+use crate::util::faultio;
 use crate::util::json::Json;
 use crate::util::lock_unpoisoned;
 use crate::workloads;
@@ -99,6 +100,12 @@ use analysis_store::{AnalysisArtifact, AnalysisStore};
 use cache::ResultCache;
 use shard::ChunkQueue;
 use trace_store::TraceStore;
+
+/// Name of the quarantine directory under the cache root: store entries
+/// that fail decode are preserved here (payload + `.reason` file) by all
+/// three stores instead of being silently skipped — see
+/// [`crate::util::faultio`].
+pub const QUARANTINE_DIR: &str = "quarantine";
 
 /// One design point of a sweep.
 #[derive(Clone, Debug)]
@@ -161,6 +168,11 @@ pub struct SweepOptions {
     /// serve previously cached rows instead of recomputing them (writes
     /// happen whenever `cache_dir` is set, regardless of this flag)
     pub resume: bool,
+    /// fsync store appends / spills before relying on them (the
+    /// crash-consistency policy knob; default off — a lost tail line only
+    /// costs a recompute).  Like `replay_threads`, deliberately *not*
+    /// part of any cache key.
+    pub fsync: bool,
 }
 
 impl Default for SweepOptions {
@@ -177,6 +189,7 @@ impl Default for SweepOptions {
             replay_threads: 0,
             cache_dir: None,
             resume: false,
+            fsync: false,
         }
     }
 }
@@ -225,6 +238,15 @@ pub struct SweepStats {
     /// summed offload-side energy (pJ) of the rejected groups — what the
     /// planner declined to spend
     pub rejected_energy_pj: f64,
+    /// transient I/O operations retried (and resolved) during this run
+    pub io_retries: u64,
+    /// store entries quarantined during this run (undecodable JSONL
+    /// lines, corrupt trace spills)
+    pub entries_quarantined: u64,
+    /// true when a store was unavailable and the run fell back to the
+    /// in-memory memo only — answers are still correct, persistence is
+    /// lost until the cache dir recovers
+    pub degraded_mode: bool,
 }
 
 /// One-line human rendering of the interesting ledger entries, shared by
@@ -266,6 +288,17 @@ pub fn format_stats(stats: &SweepStats, secs: f64) -> String {
             stats.rejected_energy_pj,
         ));
     }
+    // the fault segment only appears when something actually went wrong —
+    // fault-free ledger lines are byte-identical to pre-hardening output
+    if stats.io_retries > 0 || stats.entries_quarantined > 0 || stats.degraded_mode
+    {
+        line.push_str(&format!(
+            " | faults: {} io retries, {} entries quarantined{}",
+            stats.io_retries,
+            stats.entries_quarantined,
+            if stats.degraded_mode { ", degraded (in-memory only)" } else { "" },
+        ));
+    }
     line
 }
 
@@ -292,6 +325,9 @@ pub fn ledger_json(stats: &SweepStats, secs: f64, backend: Option<&str>) -> Stri
         ("groups_accepted", stats.groups_accepted.into()),
         ("groups_rejected", stats.groups_rejected.into()),
         ("rejected_energy_pj", stats.rejected_energy_pj.into()),
+        ("io_retries", stats.io_retries.into()),
+        ("entries_quarantined", stats.entries_quarantined.into()),
+        ("degraded_mode", stats.degraded_mode.into()),
         ("elapsed_secs", secs.into()),
         ("backend", backend.unwrap_or("").into()),
     ])
@@ -311,6 +347,10 @@ struct StageCounters {
     chunks_claimed: AtomicU64,
     peak_window: AtomicU64,
     longest_trace: AtomicU64,
+    /// nonzero when a worker lost a store (spill/append failure) and the
+    /// sweep kept going from memory — folded into
+    /// [`SweepStats::degraded_mode`]
+    degraded: AtomicU64,
 }
 
 /// All design points of one sweep that share one analysis artifact:
@@ -408,17 +448,52 @@ impl Coordinator {
         backend: &mut dyn Backend,
     ) -> Result<(Vec<SweepRow>, SweepStats)> {
         let mut stats = SweepStats { points: points.len(), ..Default::default() };
+        let io_before = faultio::counters();
 
+        // A store that cannot open degrades the run to the in-memory memo
+        // (warn once, flag the ledger) instead of erroring the sweep: an
+        // unwritable cache dir must never take down a long-lived service.
+        let mut degraded = false;
+        let mut degrade = |what: &str, e: &anyhow::Error| {
+            if !degraded {
+                eprintln!(
+                    "warning: {what} unavailable, continuing without \
+                     persistence (degraded mode): {e:#}"
+                );
+            }
+            degraded = true;
+        };
         let result_cache = match &opts.cache_dir {
-            Some(dir) => Some(ResultCache::open(dir)?),
+            Some(dir) => match ResultCache::open_with(dir, opts.fsync) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    degrade("result cache", &e);
+                    None
+                }
+            },
             None => None,
         };
         let traces = match &opts.cache_dir {
-            Some(dir) => Some(TraceStore::open(&dir.join("traces"))?),
+            Some(dir) => match TraceStore::open_with(&dir.join("traces"), opts.fsync)
+            {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    degrade("trace store", &e);
+                    None
+                }
+            },
             None => None,
         };
         let artifacts = match &opts.cache_dir {
-            Some(dir) => Some(AnalysisStore::open(&dir.join("analysis"))?),
+            Some(dir) => {
+                match AnalysisStore::open_with(&dir.join("analysis"), opts.fsync) {
+                    Ok(s) => Some(s),
+                    Err(e) => {
+                        degrade("analysis store", &e);
+                        None
+                    }
+                }
+            }
             None => None,
         };
 
@@ -430,12 +505,16 @@ impl Coordinator {
 
         if opts.resume {
             if let Some(c) = &result_cache {
-                let existing = c.load()?;
-                for (slot, k) in slots.iter_mut().zip(&keys) {
-                    if let Some(row) = existing.get(k) {
-                        *slot = Some(row.clone());
-                        stats.rows_from_cache += 1;
+                match c.load() {
+                    Ok(existing) => {
+                        for (slot, k) in slots.iter_mut().zip(&keys) {
+                            if let Some(row) = existing.get(k) {
+                                *slot = Some(row.clone());
+                                stats.rows_from_cache += 1;
+                            }
+                        }
                     }
+                    Err(e) => degrade("result-cache resume", &e),
                 }
             }
         }
@@ -583,6 +662,9 @@ impl Coordinator {
                 .into_inner()
                 .unwrap_or_else(|p| p.into_inner())
                 .into_iter()
+                // safety: every staging worker fills its own slot, and a
+                // worker that failed instead pushed to `errors` — which
+                // returned above
                 .map(|o| o.expect("staged point missing"))
                 .collect();
 
@@ -603,6 +685,7 @@ impl Coordinator {
                             eprintln!("warning: result-cache append failed: {e:#}");
                             append_warned = true;
                         }
+                        degraded = true;
                     }
                 }
                 slots[pi] = Some(row);
@@ -622,9 +705,17 @@ impl Coordinator {
         stats.peak_window = counters.peak_window.load(Ordering::Relaxed);
         stats.longest_trace = counters.longest_trace.load(Ordering::Relaxed);
         stats.peak_rss_kb = crate::util::stats::peak_rss_kb();
+        stats.degraded_mode =
+            degraded || counters.degraded.load(Ordering::Relaxed) > 0;
+        let io_delta = faultio::counters().since(&io_before);
+        stats.io_retries = io_delta.retries;
+        stats.entries_quarantined = io_delta.quarantined;
 
         let rows = slots
             .into_iter()
+            // safety: resume fills cached slots and every remaining index
+            // is in `todo`, whose workers either filled the slot or pushed
+            // an error — which returned above
             .map(|o| o.expect("sweep slot missing"))
             .collect();
         Ok((rows, stats))
@@ -663,9 +754,21 @@ impl Coordinator {
         }
         stats.rows_computed = 1;
         stats.analyses_run = 1;
+        let io_before = faultio::counters();
 
         let disk = match &opts.cache_dir {
-            Some(dir) => Some(TraceStore::open(&dir.join("traces"))?),
+            Some(dir) => match TraceStore::open_with(&dir.join("traces"), opts.fsync)
+            {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    eprintln!(
+                        "warning: trace store unavailable, planning without \
+                         persistence (degraded mode): {e:#}"
+                    );
+                    stats.degraded_mode = true;
+                    None
+                }
+            },
             None => None,
         };
         let build_sink =
@@ -684,6 +787,8 @@ impl Coordinator {
             {
                 stats.trace_disk_hits = 1;
                 stats.replay_chunks_decoded = chunks;
+                // safety: the fanout above was built from exactly one
+                // sink, so finish() returns exactly one lane
                 let lane = fanout.finish().pop().expect("one planning lane");
                 replayed = Some((summary, lane.0, lane.1));
             }
@@ -704,6 +809,7 @@ impl Coordinator {
                     Some(Ok(w)) => Some(w),
                     Some(Err(e)) => {
                         eprintln!("warning: trace spill failed: {e:#}");
+                        stats.degraded_mode = true;
                         None
                     }
                     None => None,
@@ -721,6 +827,7 @@ impl Coordinator {
                 if let Some(w) = spill {
                     if let Err(e) = w.finish(&summary) {
                         eprintln!("warning: trace spill failed: {e:#}");
+                        stats.degraded_mode = true;
                     }
                 }
                 (summary, outcome, sink)
@@ -730,6 +837,9 @@ impl Coordinator {
         let (plan, deltas) = sink.finish();
         let art = Arc::new(PlanArtifact { summary, outcome, plan, deltas });
         Self::fill_plan_stats(&mut stats, &art);
+        let io_delta = faultio::counters().since(&io_before);
+        stats.io_retries = io_delta.retries;
+        stats.entries_quarantined = io_delta.quarantined;
         lock_unpoisoned(&self.plan_memo).insert(pkey, Arc::clone(&art));
         Ok((art, stats))
     }
@@ -863,6 +973,7 @@ impl Coordinator {
                         Some(Ok(w)) => Some(w),
                         Some(Err(e)) => {
                             eprintln!("warning: trace spill failed: {e:#}");
+                            counters.degraded.fetch_add(1, Ordering::Relaxed);
                             None
                         }
                         None => None,
@@ -879,6 +990,7 @@ impl Coordinator {
                     if let Some(w) = spill {
                         if let Err(e) = w.finish(&summary) {
                             eprintln!("warning: trace spill failed: {e:#}");
+                            counters.degraded.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                     (summary, lanes)
@@ -912,6 +1024,7 @@ impl Coordinator {
                             );
                             append_warned = true;
                         }
+                        counters.degraded.fetch_add(1, Ordering::Relaxed);
                     }
                 }
             }
@@ -928,6 +1041,8 @@ impl Coordinator {
         // 4) per-point energy fold — the only per-technology work
         let mut out = Vec::with_capacity(staged_points as usize);
         for (a, art) in group.analyses.iter().zip(&resolved) {
+            // safety: the resolve loop above ran every analysis index and
+            // bailed out on failure, so each entry is Some here
             let art = art.as_ref().expect("artifact resolved above");
             for &ti in &a.points {
                 let p = &points[todo[ti]];

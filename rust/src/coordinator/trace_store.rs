@@ -35,8 +35,10 @@
 //! [`TraceStore::replay`] feeds a sink chunk-by-chunk without ever
 //! materializing the trace — both O(chunk) memory.  Loads are
 //! best-effort: any corruption (or a version-1/-2 file from an older
-//! build) is treated as a cache miss and the trace is re-simulated and
-//! re-written.
+//! build) is treated as a cache miss, the corrupt spill is quarantined
+//! to `<cache-dir>/quarantine/` so it stops satisfying
+//! [`TraceStore::contains`] probes (see [`crate::util::faultio`]), and
+//! the trace is re-simulated and re-published.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
@@ -49,6 +51,7 @@ use crate::probes::{
     CollectSink, IState, MemAccessInfo, MemLevel, MemStats, PipeStats,
     StopReason, Trace, TraceSink, TraceSummary,
 };
+use crate::util::faultio::{self, IoOp, StoreIo as _};
 use crate::util::lock_unpoisoned;
 
 const MAGIC: u32 = 0x4543_5452; // "ECTR"
@@ -64,14 +67,30 @@ const SANITY_LIMIT: u32 = 1 << 24;
 /// A directory of spilled traces, addressed by content-hash key.
 pub struct TraceStore {
     dir: PathBuf,
+    /// `<cache-dir>/quarantine/` — corrupt spills are renamed here (with
+    /// a `.reason` file) so they stop satisfying existence probes
+    quarantine: PathBuf,
+    /// `fsync` spills before publishing (crash-consistency policy knob)
+    fsync: bool,
 }
 
 impl TraceStore {
     /// Open (creating if needed) the spill directory.
     pub fn open(dir: &Path) -> Result<Self> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating trace store {dir:?}"))?;
-        Ok(Self { dir: dir.to_path_buf() })
+        Self::open_with(dir, false)
+    }
+
+    /// [`TraceStore::open`] with an explicit fsync-before-publish policy.
+    pub fn open_with(dir: &Path, fsync: bool) -> Result<Self> {
+        faultio::with_retries("creating trace store", || {
+            faultio::fs().create_dir_all(dir)
+        })
+        .with_context(|| format!("creating trace store {dir:?}"))?;
+        let quarantine = dir
+            .parent()
+            .unwrap_or(dir)
+            .join(super::QUARANTINE_DIR);
+        Ok(Self { dir: dir.to_path_buf(), quarantine, fsync })
     }
 
     fn path_for(&self, key: &str) -> PathBuf {
@@ -107,12 +126,26 @@ impl TraceStore {
         sink: &mut dyn TraceSink,
         lanes: usize,
     ) -> Option<(TraceSummary, u64)> {
-        let f = std::fs::File::open(self.path_for(key)).ok()?;
+        let path = self.path_for(key);
+        let f = faultio::fs().open_read(&path).ok()?;
         let r = BufReader::new(f);
-        if lanes >= 2 {
-            decode_stream_parallel(r, sink, lanes).ok()
+        let res = if lanes >= 2 {
+            decode_stream_parallel(r, sink, lanes)
         } else {
-            decode_stream_zero_copy(r, sink).ok()
+            decode_stream_zero_copy(r, sink)
+        };
+        match res {
+            Ok(out) => Some(out),
+            Err(e) => {
+                // a corrupt spill is a miss — but it must not keep
+                // satisfying `contains` probes, so move it aside
+                faultio::quarantine_move(
+                    &self.quarantine,
+                    &path,
+                    &format!("corrupt trace spill: {e}"),
+                );
+                None
+            }
         }
     }
 
@@ -155,8 +188,10 @@ impl TraceStore {
         let tmp = self
             .dir
             .join(format!("trace-{key}.tmp.{}.{token}", std::process::id()));
-        let file = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {tmp:?}"))?;
+        let file = faultio::with_retries("creating trace spill", || {
+            faultio::fs().create(&tmp)
+        })
+        .with_context(|| format!("creating {tmp:?}"))?;
         let mut w = SpillWriter {
             tmp,
             final_path: self.path_for(key),
@@ -165,6 +200,7 @@ impl TraceStore {
             pending: 0,
             error: None,
             finished: false,
+            fsync: self.fsync,
         };
         let mut header = Writer { buf: Vec::with_capacity(8) };
         header.u32(MAGIC);
@@ -194,6 +230,7 @@ pub struct SpillWriter {
     pending: u32,
     error: Option<String>,
     finished: bool,
+    fsync: bool,
 }
 
 impl SpillWriter {
@@ -202,7 +239,12 @@ impl SpillWriter {
             return;
         }
         let Some(f) = self.file.as_mut() else { return };
-        if let Err(e) = f.write_all(bytes) {
+        // the BufWriter hides individual syscalls, so consult the fault
+        // injector explicitly — a spill write fault latches like a real one
+        if let Err(e) = faultio::fs()
+            .probe(IoOp::Write, &self.tmp)
+            .and_then(|()| f.write_all(bytes))
+        {
             self.error = Some(e.to_string());
             self.file = None;
         }
@@ -237,13 +279,25 @@ impl SpillWriter {
                 }
             }
         }
+        if self.error.is_none() && self.fsync {
+            if let Some(f) = self.file.as_ref() {
+                let res = faultio::with_retries("fsyncing trace spill", || {
+                    faultio::fs().fsync(&self.tmp, f.get_ref())
+                });
+                if let Err(e) = res {
+                    self.error = Some(e.to_string());
+                }
+            }
+        }
         self.file = None; // close before rename
         if let Some(e) = self.error.take() {
             // Drop removes the temp file
             return Err(anyhow!("writing trace spill: {e}"));
         }
-        let res = std::fs::rename(&self.tmp, &self.final_path)
-            .with_context(|| format!("publishing trace {:?}", self.final_path));
+        let res = faultio::with_retries("publishing trace spill", || {
+            faultio::fs().rename(&self.tmp, &self.final_path)
+        })
+        .with_context(|| format!("publishing trace {:?}", self.final_path));
         if res.is_ok() {
             self.finished = true;
         }

@@ -11,11 +11,12 @@
 //!               [--plan-level l1|l2|l1+l2]       price every CiM offload
 //! eva-cim sweep [--benches a,b] [--configs c1,c2] [--techs sram,fefet]
 //!               [--scale N] [--jobs N] [--chunk N] [--replay-threads N]
-//!               [--csv out.csv] [--cache-dir DIR] [--resume]
+//!               [--csv out.csv] [--cache-dir DIR] [--resume] [--fsync]
 //! eva-cim explore --bench <b> [--techs all] [--configs c1,c2,c3]
 //!               [--cache-dir DIR] [--resume] [--csv out.csv]
 //! eva-cim serve [--addr 127.0.0.1:7878] [--http-workers N] [--queue N]
-//!               [--jobs N] [--cache-dir DIR]  long-lived JSON service
+//!               [--jobs N] [--cache-dir DIR] [--request-timeout SECS]
+//!               [--socket-timeout SECS]       long-lived JSON service
 //!                                             (see docs/SERVING.md)
 //! eva-cim table <table3|table5|table6|fig11|fig12|fig13|fig14|fig15|fig16>
 //!               [--cache-dir DIR] [--resume] [--jobs N]
@@ -71,7 +72,7 @@ mod cli {
     /// explicit `--resume false` is still honored.  Every other flag
     /// requires a value, and a missing one is a hard error — a trailing
     /// `--csv` must not silently write to a file named "true".
-    const SWITCHES: &[&str] = &["resume"];
+    const SWITCHES: &[&str] = &["resume", "fsync"];
 
     const BOOL_WORDS: &[&str] =
         &["true", "false", "1", "0", "yes", "no", "on", "off"];
@@ -156,6 +157,23 @@ fn parse_rule(s: &str) -> Result<LocalityRule, String> {
     LocalityRule::from_name(s).ok_or_else(|| format!("unknown locality rule '{s}'"))
 }
 
+/// Parse a `--key SECS` duration flag (fractional seconds accepted;
+/// `0` means "disabled" to every caller).
+fn secs_flag(
+    args: &cli::Args,
+    key: &str,
+    default: &str,
+) -> Result<std::time::Duration, String> {
+    let v = args.flag_or(key, default);
+    let secs: f64 = v
+        .parse()
+        .map_err(|_| format!("--{key} needs a number of seconds"))?;
+    if !secs.is_finite() || secs < 0.0 {
+        return Err(format!("--{key} must be a non-negative number of seconds"));
+    }
+    Ok(std::time::Duration::from_secs_f64(secs))
+}
+
 fn parse_backend(s: &str) -> Result<BackendSel, String> {
     BackendSel::from_name(s).ok_or_else(|| format!("unknown backend '{s}'"))
 }
@@ -206,7 +224,7 @@ fn build_config(args: &cli::Args) -> Result<SystemConfig, String> {
 /// Seed an [`Evaluation`] with the sizing/worker-pool/cache flags shared
 /// by every sweeping command: `--scale`, `--seed`, `--jobs` (alias
 /// `--workers`), `--chunk`, `--replay-threads`, `--cache-dir`,
-/// `--resume`, `--rule`, `--backend`, `--max-instructions`.
+/// `--resume`, `--fsync`, `--rule`, `--backend`, `--max-instructions`.
 fn eval_from_args(args: &cli::Args) -> Result<Evaluation, String> {
     let mut ev = Evaluation::new()
         .scale(args.usize_flag("scale", 0)?)
@@ -214,6 +232,7 @@ fn eval_from_args(args: &cli::Args) -> Result<Evaluation, String> {
         .chunk(args.usize_flag("chunk", 0)?)
         .replay_threads(args.usize_flag("replay-threads", 0)?)
         .resume(args.bool_flag("resume")?)
+        .fsync(args.bool_flag("fsync")?)
         .rule(parse_rule(&args.flag_or("rule", "any"))?)
         .backend(parse_backend(&args.flag_or("backend", "auto"))?);
     let default_jobs = eva_cim::coordinator::SweepOptions::default().workers;
@@ -287,18 +306,27 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         // `--resume false` still wins
         base = base.resume(true);
     }
+    // 0 disables either timeout: --request-timeout 0 means no deadline,
+    // --socket-timeout 0 means no socket timeout
+    let request_timeout = secs_flag(args, "request-timeout", "0")?;
     let opts = eva_cim::serve::ServeOptions {
         addr: args.flag_or("addr", "127.0.0.1:7878"),
         http_workers: args.usize_flag("http-workers", 4)?,
         queue: args.usize_flag("queue", 64)?,
+        request_timeout: if request_timeout.is_zero() {
+            None
+        } else {
+            Some(request_timeout)
+        },
+        socket_timeout: secs_flag(args, "socket-timeout", "30")?,
         base,
     };
-    eva_cim::serve::install_sigint_handler();
+    eva_cim::serve::install_signal_handlers();
     let server = eva_cim::serve::Server::bind(opts).map_err(err_str)?;
     eprintln!(
         "eva-cim serve: listening on http://{} \
          (endpoints: /health /stats /list /evaluate /sweep /explore /plan; \
-         Ctrl-C drains in-flight jobs and exits)",
+         Ctrl-C or SIGTERM drains in-flight jobs and exits)",
         server.addr()
     );
     let handle = server.spawn().map_err(err_str)?;

@@ -30,7 +30,7 @@ pub struct Request {
 /// two observability headers.
 #[derive(Clone, Debug)]
 pub struct Response {
-    /// HTTP status code (`200`, `400`, `404`, `405`, `500`, `503`)
+    /// HTTP status code (`200`, `400`, `404`, `405`, `500`, `503`, `504`)
     pub status: u16,
     /// response body — canonical JSON, newline-terminated
     pub body: String,
@@ -142,8 +142,22 @@ pub fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
+}
+
+/// Arm a connection's socket read/write timeouts: a client that sends
+/// headers and then stalls (or never drains the response) is disconnected
+/// instead of holding an HTTP worker forever.  `Duration::ZERO` disables
+/// both timeouts.
+pub fn configure_stream(
+    stream: &std::net::TcpStream,
+    timeout: std::time::Duration,
+) -> std::io::Result<()> {
+    let t = if timeout.is_zero() { None } else { Some(timeout) };
+    stream.set_read_timeout(t)?;
+    stream.set_write_timeout(t)
 }
 
 fn find_header_end(buf: &[u8]) -> Option<usize> {

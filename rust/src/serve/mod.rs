@@ -37,12 +37,21 @@
 //! canonical request key — the FNV-1a hash of the normalized request JSON
 //! ([`key::fnv1a`], the same hash family as the design-point keys) — so N
 //! concurrent identical queries run the pipeline once and N−1 riders wait
-//! on a condvar for the published bytes.  `SIGINT` (see
-//! [`install_sigint_handler`]) stops the accept loop, drains every job
+//! on a condvar for the published bytes.  `SIGINT` or `SIGTERM` (see
+//! [`install_signal_handlers`]) stops the accept loop, drains every job
 //! already queued, joins the workers and exits.  A panicking request
 //! handler is contained to a `500` envelope ([`crate::coordinator`]'s
 //! worker containment plus a `catch_unwind` here) — it never takes the
 //! pool down.
+//!
+//! Fault domains: an optional per-request deadline (`--request-timeout`)
+//! answers `504` when an evaluating endpoint runs long — the computation
+//! finishes on a detached thread and warms the caches for a retry — and
+//! per-socket read/write timeouts (`--socket-timeout`) disconnect a
+//! client that stalls mid-request or never drains its response, so a
+//! slow peer cannot hold an HTTP worker hostage.  Sweep-level I/O faults
+//! surface on the cumulative ledger (`io_retries`,
+//! `entries_quarantined`, `degraded_mode` on `GET /stats`).
 
 pub mod http;
 
@@ -84,6 +93,15 @@ pub struct ServeOptions {
     /// bounded job-queue capacity; accepted connections beyond it are
     /// answered `503` immediately
     pub queue: usize,
+    /// per-request wall-clock deadline for the evaluating endpoints: a
+    /// leader still computing when it expires is answered `504` while the
+    /// computation finishes in the background (warming the caches for a
+    /// retry); `None` — the default — disables the deadline
+    pub request_timeout: Option<Duration>,
+    /// socket read/write timeout for accepted connections — a client that
+    /// stalls mid-request or never drains its response is disconnected
+    /// instead of holding an HTTP worker; `Duration::ZERO` disables it
+    pub socket_timeout: Duration,
     /// server-wide evaluation defaults; requests override per-field
     pub base: Evaluation,
 }
@@ -94,6 +112,8 @@ impl Default for ServeOptions {
             addr: "127.0.0.1:7878".into(),
             http_workers: 4,
             queue: 64,
+            request_timeout: None,
+            socket_timeout: Duration::from_secs(30),
             base: Evaluation::new(),
         }
     }
@@ -180,6 +200,8 @@ fn wait_outcome(slot: &Slot) -> Outcome {
         .cv
         .wait_while(guard, |o| o.is_none())
         .unwrap_or_else(|p| p.into_inner());
+    // safety: wait_while only returns once the slot holds Some, and
+    // leaders always publish (panics are converted to 500 outcomes)
     guard.clone().expect("leader published an outcome")
 }
 
@@ -219,6 +241,11 @@ pub struct ServeStats {
     // summed as whole pJ (rounded per request) — an atomic integer keeps
     // the counter lock-free like its siblings
     rejected_energy_pj: AtomicU64,
+    // fault-domain counters: cumulative transient-I/O retries and
+    // quarantined store entries, plus a sticky degraded-mode flag (0/1)
+    io_retries: AtomicU64,
+    entries_quarantined: AtomicU64,
+    degraded: AtomicU64,
 }
 
 impl ServeStats {
@@ -285,6 +312,14 @@ impl ServeStats {
         self.groups_rejected.fetch_add(s.groups_rejected, Ordering::Relaxed);
         self.rejected_energy_pj
             .fetch_add(s.rejected_energy_pj.round() as u64, Ordering::Relaxed);
+        self.io_retries.fetch_add(s.io_retries, Ordering::Relaxed);
+        self.entries_quarantined
+            .fetch_add(s.entries_quarantined, Ordering::Relaxed);
+        if s.degraded_mode {
+            // sticky: once any request ran degraded, /stats says so until
+            // the process restarts (an operator signal, not a rate)
+            self.degraded.store(1, Ordering::Relaxed);
+        }
     }
 
     /// The `GET /stats` report: service counters + the cumulative sweep
@@ -327,6 +362,9 @@ impl ServeStats {
             ("groups_accepted", &self.groups_accepted),
             ("groups_rejected", &self.groups_rejected),
             ("rejected_energy_pj", &self.rejected_energy_pj),
+            ("io_retries", &self.io_retries),
+            ("entries_quarantined", &self.entries_quarantined),
+            ("degraded_mode", &self.degraded),
         ] {
             ledger.row(vec![Cell::str(name), Cell::int(v.load(Ordering::Relaxed))]);
         }
@@ -350,7 +388,9 @@ impl ServeStats {
     }
 }
 
-type Router = fn(&ServeState, &http::Request) -> http::Response;
+// routers take the state by `&Arc` (not plain `&`) so a handler can hand
+// a clone to a detached deadline thread that outlives the request
+type Router = fn(&Arc<ServeState>, &http::Request) -> http::Response;
 
 /// Everything the HTTP workers share: the base evaluation, the warm
 /// coordinator, the dedup map and the counters.
@@ -360,10 +400,15 @@ pub struct ServeState {
     inflight: Inflight,
     stats: ServeStats,
     router: Router,
+    request_timeout: Option<Duration>,
 }
 
 impl ServeState {
-    fn new(base: Evaluation, router: Router) -> Self {
+    fn new(
+        base: Evaluation,
+        router: Router,
+        request_timeout: Option<Duration>,
+    ) -> Self {
         let coord = Coordinator::new(base.sweep_options());
         Self {
             base,
@@ -371,6 +416,7 @@ impl ServeState {
             inflight: Inflight::new(),
             stats: ServeStats::default(),
             router,
+            request_timeout,
         }
     }
 
@@ -386,6 +432,7 @@ pub struct Server {
     state: Arc<ServeState>,
     http_workers: usize,
     queue: usize,
+    socket_timeout: Duration,
 }
 
 impl Server {
@@ -401,14 +448,21 @@ impl Server {
             .map_err(|e| anyhow!("binding {}: {e}", opts.addr))?;
         Ok(Server {
             listener,
-            state: Arc::new(ServeState::new(opts.base, router)),
+            state: Arc::new(ServeState::new(
+                opts.base,
+                router,
+                opts.request_timeout,
+            )),
             http_workers: opts.http_workers.max(1),
             queue: opts.queue.max(1),
+            socket_timeout: opts.socket_timeout,
         })
     }
 
     /// The bound socket address.
     pub fn addr(&self) -> SocketAddr {
+        // safety: `bind` already succeeded, and a bound TCP listener
+        // always has a local address
         self.listener.local_addr().expect("bound listener has an address")
     }
 
@@ -445,19 +499,18 @@ impl Server {
         let listener = self.listener;
         let state = Arc::clone(&self.state);
         let stop_flag = Arc::clone(&stop);
+        let socket_timeout = self.socket_timeout;
         let accept = std::thread::spawn(move || {
             loop {
-                if stop_flag.load(Ordering::SeqCst) || SIGINT.load(Ordering::SeqCst)
+                if stop_flag.load(Ordering::SeqCst)
+                    || SHUTDOWN.load(Ordering::SeqCst)
                 {
                     break;
                 }
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let _ = stream.set_nonblocking(false);
-                        let _ = stream
-                            .set_read_timeout(Some(Duration::from_secs(30)));
-                        let _ = stream
-                            .set_write_timeout(Some(Duration::from_secs(30)));
+                        let _ = http::configure_stream(&stream, socket_timeout);
                         match tx.try_send(stream) {
                             Ok(()) => {}
                             Err(std::sync::mpsc::TrySendError::Full(mut s)) => {
@@ -533,34 +586,38 @@ impl ServerHandle {
     }
 }
 
-/// Process-wide SIGINT flag: the accept loop polls it, so Ctrl-C drains
-/// in-flight jobs instead of killing them mid-sweep.
-static SIGINT: AtomicBool = AtomicBool::new(false);
+/// Process-wide shutdown flag, set by `SIGINT` or `SIGTERM`: the accept
+/// loop polls it, so either signal drains in-flight jobs instead of
+/// killing them mid-sweep.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
 
 #[cfg(unix)]
-extern "C" fn on_sigint(_sig: i32) {
+extern "C" fn on_shutdown(_sig: i32) {
     // only async-signal-safe work here: set the flag, nothing else
-    SIGINT.store(true, Ordering::SeqCst);
+    SHUTDOWN.store(true, Ordering::SeqCst);
 }
 
-/// Install a `SIGINT` handler that requests a graceful drain (stop
-/// accepting, finish queued jobs, exit).  Unix-only; a no-op elsewhere.
-/// Uses the libc `signal(2)` symbol directly — the offline environment
-/// has no signal-handling crate.
-pub fn install_sigint_handler() {
+/// Install `SIGINT` and `SIGTERM` handlers that request a graceful drain
+/// (stop accepting, finish queued jobs, exit) — Ctrl-C and a
+/// supervisor's plain `kill` terminate identically.  Unix-only; a no-op
+/// elsewhere.  Uses the libc `signal(2)` symbol directly — the offline
+/// environment has no signal-handling crate.
+pub fn install_signal_handlers() {
     #[cfg(unix)]
     {
         extern "C" {
             fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
         }
-        // SIGINT is 2 on every unix the toolchain targets
-        let _ = unsafe { signal(2, on_sigint) };
+        // SIGINT is 2 and SIGTERM is 15 on every unix the toolchain
+        // targets
+        let _ = unsafe { signal(2, on_shutdown) };
+        let _ = unsafe { signal(15, on_shutdown) };
     }
 }
 
 /// One connection, end to end: frame the request, route it (panics
 /// contained to a 500 envelope), count it, write the response.
-fn handle_conn(state: &ServeState, stream: &mut TcpStream) {
+fn handle_conn(state: &Arc<ServeState>, stream: &mut TcpStream) {
     let resp = match http::read_request(stream) {
         Ok(req) => {
             state.stats.note_request(&req);
@@ -584,7 +641,7 @@ fn handle_conn(state: &ServeState, stream: &mut TcpStream) {
 }
 
 /// The service's route table.
-fn route(state: &ServeState, req: &http::Request) -> http::Response {
+fn route(state: &Arc<ServeState>, req: &http::Request) -> http::Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => ok_response(health_body()),
         ("GET", "/stats") => ok_response(state.stats.report().render_json()),
@@ -613,7 +670,11 @@ fn route(state: &ServeState, req: &http::Request) -> http::Response {
 /// The three evaluating endpoints share one path: parse + normalize the
 /// request, dedup identical in-flight requests, compute through the warm
 /// coordinator, and attach the cache state + ledger headers.
-fn handle_eval(state: &ServeState, kind: Kind, req: &http::Request) -> http::Response {
+fn handle_eval(
+    state: &Arc<ServeState>,
+    kind: Kind,
+    req: &http::Request,
+) -> http::Response {
     let text = if req.body.trim().is_empty() { "{}" } else { req.body.as_str() };
     let body = match json::parse(text) {
         Ok(b) => b,
@@ -632,18 +693,23 @@ fn handle_eval(state: &ServeState, kind: Kind, req: &http::Request) -> http::Res
         Role::Leader(slot) => {
             // contain panics here too: a leader that dies without
             // publishing would hang every follower forever
-            let mut o = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                || compute(state, kind, &ev),
-            ))
-            .unwrap_or_else(|p| {
-                error_outcome(
-                    500,
-                    &format!(
-                        "request handler panicked: {}",
-                        panic_message(p.as_ref())
-                    ),
-                )
-            });
+            let mut o = match state.request_timeout {
+                Some(deadline) => {
+                    compute_with_deadline(state, kind, &ev, deadline)
+                }
+                None => std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || compute(state, kind, &ev),
+                ))
+                .unwrap_or_else(|p| {
+                    error_outcome(
+                        500,
+                        &format!(
+                            "request handler panicked: {}",
+                            panic_message(p.as_ref())
+                        ),
+                    )
+                }),
+            };
             if o.cache.is_some() && slot.followers.load(Ordering::SeqCst) > 0 {
                 // riders joined while we computed: this answer was shared
                 o.cache = Some(CACHE_SHARED);
@@ -665,6 +731,67 @@ fn handle_eval(state: &ServeState, kind: Kind, req: &http::Request) -> http::Res
         body: outcome.body,
         cache: outcome.cache,
         ledger: outcome.ledger,
+    }
+}
+
+/// Run the leader's computation on a detached thread and wait at most
+/// `deadline` for its outcome.  On expiry the caller gets a `504`
+/// envelope immediately — freeing the HTTP worker — while the thread
+/// runs to completion in the background: its response bytes are
+/// discarded, but every store and memo it warms makes the retried
+/// request fast (often `cached`).  A panic on the detached thread is
+/// contained to a `500` the same way the inline path contains it.
+fn compute_with_deadline(
+    state: &Arc<ServeState>,
+    kind: Kind,
+    ev: &Evaluation,
+    deadline: Duration,
+) -> Outcome {
+    let (tx, rx) = std::sync::mpsc::channel::<Outcome>();
+    let thread_state = Arc::clone(state);
+    let thread_ev = ev.clone();
+    let spawned = std::thread::Builder::new()
+        .name("eva-serve-deadline".into())
+        .spawn(move || {
+            let o = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || compute(&thread_state, kind, &thread_ev),
+            ))
+            .unwrap_or_else(|p| {
+                error_outcome(
+                    500,
+                    &format!(
+                        "request handler panicked: {}",
+                        panic_message(p.as_ref())
+                    ),
+                )
+            });
+            // after a deadline expiry the receiver is gone; that's fine —
+            // the send result is deliberately ignored
+            let _ = tx.send(o);
+        });
+    match spawned {
+        Ok(_detached) => rx.recv_timeout(deadline).unwrap_or_else(|_| {
+            error_outcome(
+                504,
+                "request exceeded the server's --request-timeout deadline; \
+                 the computation continues in the background and will warm \
+                 the caches for a retry",
+            )
+        }),
+        // spawn failure (thread-resource exhaustion): degrade to the
+        // inline path — slower and undeadlined, but never a lost request
+        Err(_) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            compute(state, kind, ev)
+        }))
+        .unwrap_or_else(|p| {
+            error_outcome(
+                500,
+                &format!(
+                    "request handler panicked: {}",
+                    panic_message(p.as_ref())
+                ),
+            )
+        }),
     }
 }
 
@@ -1124,6 +1251,7 @@ mod tests {
             http_workers: 2,
             queue: 8,
             base: Evaluation::new().scale(2).jobs(1).backend(BackendSel::Native),
+            ..ServeOptions::default()
         }
     }
 
@@ -1187,7 +1315,7 @@ mod tests {
     }
 
     fn panicking_router(
-        state: &ServeState,
+        state: &Arc<ServeState>,
         req: &http::Request,
     ) -> http::Response {
         if req.path == "/boom" {

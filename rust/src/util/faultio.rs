@@ -1,0 +1,675 @@
+//! Deterministic, injectable I/O fault layer for the on-disk stores.
+//!
+//! Every fallible filesystem operation the sweep caches perform —
+//! open/read/write/fsync/rename — goes through the [`StoreIo`] trait
+//! instead of calling `std::fs` directly.  In production the trait is a
+//! zero-cost pass-through; under test a process-global injector
+//! ([`inject`]) makes the *same* code paths fail on a deterministic
+//! schedule (fail the Nth matching operation, short-write, return
+//! `EINTR`/`EAGAIN`/`ENOSPC`), so every recovery path is exercised
+//! repeatably — the same oracle idea as `replay_reference` /
+//! `simulate_reference`, applied to the fault domain.
+//!
+//! The module also owns the two store-agnostic recovery primitives:
+//!
+//! - [`with_retries`]: capped exponential backoff with deterministic
+//!   jitter for *transient* errors (`EINTR`, `EAGAIN`); every retry is
+//!   counted into the process-wide telemetry ([`counters`]) which the
+//!   sweep ledger snapshots as `io_retries`.
+//! - [`quarantine_bytes`] / [`quarantine_move`]: a store entry that
+//!   fails decode is preserved under `<cache-dir>/quarantine/` next to a
+//!   `.reason` file instead of being silently skipped, and counted as
+//!   `entries_quarantined`.  Quarantine writes use raw `std::fs` (never
+//!   injected, never retried): recording a fault must not itself fault
+//!   recursively, and a quarantine that cannot be written degrades to
+//!   the old skip-with-warning behavior.
+
+use std::collections::hash_map::DefaultHasher;
+use std::fs::{File, OpenOptions};
+use std::hash::{Hash as _, Hasher as _};
+use std::io::{self, Read as _, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::lock_unpoisoned;
+
+/// The operation classes the injector can match on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoOp {
+    /// opening a file (append-mode writer, read handle, or create)
+    Open,
+    /// reading file contents
+    Read,
+    /// writing bytes (appends, spill chunks, whole-file writes)
+    Write,
+    /// flushing file contents to stable storage
+    Fsync,
+    /// atomically publishing a temp file over its final name
+    Rename,
+    /// creating a store directory
+    CreateDir,
+    /// removing a file (temp-spill cleanup)
+    Remove,
+}
+
+/// What an injected fault does to the matched operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// transient `EINTR`: [`with_retries`] recovers from a burst of these
+    Eintr,
+    /// transient `EAGAIN`/`EWOULDBLOCK`: also retried
+    Eagain,
+    /// hard `ENOSPC` (disk full): not transient, surfaces to the caller
+    Enospc,
+    /// hard `EACCES` (permission denied): the degraded-mode trigger
+    Eacces,
+    /// write half the buffer for real, then fail — a torn append/spill
+    ShortWrite,
+}
+
+impl FaultKind {
+    fn to_error(self) -> io::Error {
+        match self {
+            FaultKind::Eintr => {
+                io::Error::new(io::ErrorKind::Interrupted, "injected EINTR")
+            }
+            FaultKind::Eagain => {
+                io::Error::new(io::ErrorKind::WouldBlock, "injected EAGAIN")
+            }
+            FaultKind::Enospc => io::Error::other("injected ENOSPC (disk full)"),
+            FaultKind::Eacces => io::Error::new(
+                io::ErrorKind::PermissionDenied,
+                "injected EACCES",
+            ),
+            FaultKind::ShortWrite => io::Error::other("injected short write"),
+        }
+    }
+}
+
+/// One injection rule: which operations it matches and what it does.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// match only this operation class (`None` = any)
+    pub op: Option<IoOp>,
+    /// match only paths whose display form contains this substring
+    /// (`None` = any path) — confines a test's faults to its own dirs
+    pub path_contains: Option<String>,
+    /// 1-based index among *matching* operations to fail (`0` = every
+    /// matching operation)
+    pub nth: u64,
+    /// the failure to inject
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    /// A spec that fails every matching operation.
+    pub fn every(op: Option<IoOp>, path_contains: &str, kind: FaultKind) -> Self {
+        Self {
+            op,
+            path_contains: Some(path_contains.to_string()),
+            nth: 0,
+            kind,
+        }
+    }
+
+    /// A spec that fails only the `nth` matching operation (1-based).
+    pub fn nth(op: Option<IoOp>, path_contains: &str, nth: u64, kind: FaultKind) -> Self {
+        Self {
+            op,
+            path_contains: Some(path_contains.to_string()),
+            nth,
+            kind,
+        }
+    }
+}
+
+/// A deterministic fault schedule: explicit rules plus an optional
+/// seeded `EINTR` storm (every operation whose sequence number hashes to
+/// `0 mod period` under `seed` fails transiently — same seed, same ops,
+/// same faults).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<(FaultSpec, u64)>, // (rule, matched-so-far)
+    storm: Option<(u64, u64, u64)>, // (seed, period, ops-seen)
+    storm_path: Option<String>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults until rules are added).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one injection rule.
+    pub fn with(mut self, spec: FaultSpec) -> Self {
+        self.specs.push((spec, 0));
+        self
+    }
+
+    /// Add a seeded transient-fault storm: roughly one in `period`
+    /// matching operations fails with `EINTR`, chosen by hashing the
+    /// operation sequence number with `seed`.
+    pub fn with_eintr_storm(mut self, seed: u64, period: u64, path_contains: &str) -> Self {
+        self.storm = Some((seed, period.max(1), 0));
+        self.storm_path = Some(path_contains.to_string());
+        self
+    }
+
+    fn decide(&mut self, op: IoOp, path: &Path) -> Option<FaultKind> {
+        let shown = path.display().to_string();
+        for (spec, matched) in &mut self.specs {
+            if let Some(want) = spec.op {
+                if want != op {
+                    continue;
+                }
+            }
+            if let Some(sub) = &spec.path_contains {
+                if !shown.contains(sub.as_str()) {
+                    continue;
+                }
+            }
+            *matched += 1;
+            if spec.nth == 0 || *matched == spec.nth {
+                return Some(spec.kind);
+            }
+        }
+        if let Some((seed, period, seen)) = &mut self.storm {
+            let in_scope = self
+                .storm_path
+                .as_ref()
+                .is_none_or(|sub| shown.contains(sub.as_str()));
+            if in_scope {
+                *seen += 1;
+                if mix(*seed, *seen) % *period == 0 {
+                    return Some(FaultKind::Eintr);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Stable 64-bit mix (FNV-1a over the two words) — the storm schedule
+/// must be identical across runs and platforms.
+fn mix(seed: u64, n: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in seed.to_le_bytes().into_iter().chain(n.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// 16-hex content tag for quarantine file names (FNV-1a 64, same family
+/// as the store keys so quarantined entries are content-addressed too).
+pub fn content_tag(bytes: &[u8]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static INJECTOR: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Arm the process-global fault injector with a schedule.  Test-only by
+/// convention: production code never calls this, and the fast path costs
+/// one relaxed atomic load while disarmed.
+pub fn inject(plan: FaultPlan) {
+    *lock_unpoisoned(&INJECTOR) = Some(plan);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm the injector (idempotent).  Tests pair every [`inject`] with a
+/// `clear`, typically via a drop guard.
+pub fn clear() {
+    ARMED.store(false, Ordering::SeqCst);
+    *lock_unpoisoned(&INJECTOR) = None;
+}
+
+fn fault_for(op: IoOp, path: &Path) -> Option<FaultKind> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    lock_unpoisoned(&INJECTOR).as_mut().and_then(|p| p.decide(op, path))
+}
+
+fn gate(op: IoOp, path: &Path) -> io::Result<()> {
+    match fault_for(op, path) {
+        Some(k) => Err(k.to_error()),
+        None => Ok(()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// process-wide fault telemetry, snapshotted into the sweep ledger
+// ---------------------------------------------------------------------
+
+static IO_RETRIES: AtomicU64 = AtomicU64::new(0);
+static QUARANTINED: AtomicU64 = AtomicU64::new(0);
+
+/// A snapshot of the process-wide fault telemetry.  Sweeps take a
+/// snapshot at entry and report the delta as `io_retries` /
+/// `entries_quarantined` in their ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoCounters {
+    /// transient I/O operations retried (and eventually resolved)
+    pub retries: u64,
+    /// store entries moved/copied into `<cache-dir>/quarantine/`
+    pub quarantined: u64,
+}
+
+impl IoCounters {
+    /// Counter-wise difference since an earlier snapshot (saturating:
+    /// concurrent sweeps in one process share the counters).
+    pub fn since(&self, earlier: &IoCounters) -> IoCounters {
+        IoCounters {
+            retries: self.retries.saturating_sub(earlier.retries),
+            quarantined: self.quarantined.saturating_sub(earlier.quarantined),
+        }
+    }
+}
+
+/// Current process-wide fault telemetry.
+pub fn counters() -> IoCounters {
+    IoCounters {
+        retries: IO_RETRIES.load(Ordering::Relaxed),
+        quarantined: QUARANTINED.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------
+// retry with capped exponential backoff + deterministic jitter
+// ---------------------------------------------------------------------
+
+/// True for errors worth retrying: interrupted syscalls and
+/// would-block/lock-contention conditions.  Hard faults (`ENOSPC`,
+/// `EACCES`, corruption) are *not* transient and surface immediately.
+pub fn is_transient(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock
+    )
+}
+
+/// Run `f`, retrying transient failures with capped exponential backoff
+/// plus deterministic jitter (hashed from `what` and the attempt number,
+/// so two contending writers don't thundering-herd in lockstep).  At most
+/// 5 attempts; every retry bumps the `io_retries` telemetry.
+pub fn with_retries<T>(
+    what: &str,
+    mut f: impl FnMut() -> io::Result<T>,
+) -> io::Result<T> {
+    const MAX_ATTEMPTS: u32 = 5;
+    let mut attempt = 0u32;
+    loop {
+        match f() {
+            Err(e) if attempt + 1 < MAX_ATTEMPTS && is_transient(&e) => {
+                attempt += 1;
+                IO_RETRIES.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(backoff(what, attempt));
+            }
+            other => return other,
+        }
+    }
+}
+
+fn backoff(what: &str, attempt: u32) -> Duration {
+    // 1, 2, 4, 8 ms base, capped — transient faults clear in microseconds,
+    // this only has to break lockstep, not pace a congestion controller
+    let base_ms = 1u64 << (attempt - 1).min(3);
+    let mut h = DefaultHasher::new();
+    what.hash(&mut h);
+    attempt.hash(&mut h);
+    let jitter_ms = h.finish() % (base_ms + 1);
+    Duration::from_millis(base_ms + jitter_ms)
+}
+
+// ---------------------------------------------------------------------
+// the StoreIo trait: every store filesystem call goes through here
+// ---------------------------------------------------------------------
+
+/// Thin trait over the filesystem operations the stores perform.  The
+/// production implementation ([`fs`]) consults the fault injector first,
+/// then delegates to `std::fs` — so injected schedules exercise exactly
+/// the code paths real faults would take.
+pub trait StoreIo: Sync {
+    /// Check the injector without performing any I/O — for call sites
+    /// that buffer writes internally (the spill writer's chunk path).
+    fn probe(&self, op: IoOp, path: &Path) -> io::Result<()>;
+    /// `std::fs::create_dir_all`.
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()>;
+    /// Open `path` append-mode, creating it if missing.
+    fn open_append(&self, path: &Path) -> io::Result<File>;
+    /// Create/truncate `path` for writing.
+    fn create(&self, path: &Path) -> io::Result<File>;
+    /// Open `path` read-only.
+    fn open_read(&self, path: &Path) -> io::Result<File>;
+    /// Read `path` to a string.
+    fn read_to_string(&self, path: &Path) -> io::Result<String>;
+    /// Write a whole file (`std::fs::write`).
+    fn write(&self, path: &Path, contents: &[u8]) -> io::Result<()>;
+    /// Write `buf` to an already-open `file` (`path` is for fault
+    /// matching and error context only).
+    fn write_all(&self, path: &Path, file: &mut File, buf: &[u8]) -> io::Result<()>;
+    /// Flush `file` to stable storage (`File::sync_data`).
+    fn fsync(&self, path: &Path, file: &File) -> io::Result<()>;
+    /// `std::fs::rename`.
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// `std::fs::remove_file`.
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
+}
+
+struct InjectedIo;
+
+impl StoreIo for InjectedIo {
+    fn probe(&self, op: IoOp, path: &Path) -> io::Result<()> {
+        gate(op, path)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        gate(IoOp::CreateDir, dir)?;
+        std::fs::create_dir_all(dir)
+    }
+
+    fn open_append(&self, path: &Path) -> io::Result<File> {
+        gate(IoOp::Open, path)?;
+        OpenOptions::new().create(true).append(true).open(path)
+    }
+
+    fn create(&self, path: &Path) -> io::Result<File> {
+        gate(IoOp::Open, path)?;
+        File::create(path)
+    }
+
+    fn open_read(&self, path: &Path) -> io::Result<File> {
+        gate(IoOp::Open, path)?;
+        File::open(path)
+    }
+
+    fn read_to_string(&self, path: &Path) -> io::Result<String> {
+        gate(IoOp::Read, path)?;
+        let mut f = File::open(path)?;
+        let mut s = String::new();
+        f.read_to_string(&mut s)?;
+        Ok(s)
+    }
+
+    fn write(&self, path: &Path, contents: &[u8]) -> io::Result<()> {
+        match fault_for(IoOp::Write, path) {
+            Some(FaultKind::ShortWrite) => {
+                // a torn whole-file write: half the bytes land, then fail
+                let mut f = File::create(path)?;
+                f.write_all(&contents[..contents.len() / 2])?;
+                Err(FaultKind::ShortWrite.to_error())
+            }
+            Some(k) => Err(k.to_error()),
+            None => std::fs::write(path, contents),
+        }
+    }
+
+    fn write_all(&self, path: &Path, file: &mut File, buf: &[u8]) -> io::Result<()> {
+        match fault_for(IoOp::Write, path) {
+            Some(FaultKind::ShortWrite) => {
+                file.write_all(&buf[..buf.len() / 2])?;
+                Err(FaultKind::ShortWrite.to_error())
+            }
+            Some(k) => Err(k.to_error()),
+            None => file.write_all(buf),
+        }
+    }
+
+    fn fsync(&self, path: &Path, file: &File) -> io::Result<()> {
+        gate(IoOp::Fsync, path)?;
+        file.sync_data()
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        gate(IoOp::Rename, from)?;
+        std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        gate(IoOp::Remove, path)?;
+        std::fs::remove_file(path)
+    }
+}
+
+static FS: InjectedIo = InjectedIo;
+
+/// The process-wide [`StoreIo`] the stores use.  Disarmed, it is a
+/// pass-through to `std::fs` behind one relaxed atomic load.
+pub fn fs() -> &'static dyn StoreIo {
+    &FS
+}
+
+// ---------------------------------------------------------------------
+// quarantine: preserve entries that fail decode instead of hiding them
+// ---------------------------------------------------------------------
+
+/// Preserve a store entry (one JSONL line, typically) that failed decode:
+/// write the payload to `<qdir>/<name>` and the human-readable cause to
+/// `<qdir>/<name>.reason`, then count it.  Content-addressed names make
+/// this idempotent — an already-quarantined entry is **not** re-counted
+/// on the next load, so a bad line warns once, not once per sweep.
+/// Returns `true` when the entry was newly quarantined.  Best-effort by
+/// design: if the quarantine dir itself is unwritable this degrades to
+/// the old skip-with-warning behavior and returns `false`.
+pub fn quarantine_bytes(qdir: &Path, name: &str, payload: &[u8], reason: &str) -> bool {
+    if std::fs::create_dir_all(qdir).is_err() {
+        return false;
+    }
+    let path = qdir.join(name);
+    // create_new atomically claims the name: concurrent loaders (and
+    // later re-loads) of the same bad entry collapse to one record
+    let mut f = match OpenOptions::new().write(true).create_new(true).open(&path) {
+        Ok(f) => f,
+        Err(_) => return false,
+    };
+    let _ = f.write_all(payload);
+    let _ = std::fs::write(qdir.join(format!("{name}.reason")), reason.as_bytes());
+    QUARANTINED.fetch_add(1, Ordering::Relaxed);
+    eprintln!("warning: quarantined store entry to {path:?} ({reason})");
+    true
+}
+
+/// Move a whole corrupt store file (a trace spill, typically) into the
+/// quarantine dir with a `.reason` file.  The move is a rename, so the
+/// corrupt file stops satisfying existence probes immediately — a
+/// quarantined entry can never re-poison a warm resume.  Best-effort:
+/// on failure the file is left in place (callers already treat it as a
+/// miss) and `false` is returned.
+pub fn quarantine_move(qdir: &Path, src: &Path, reason: &str) -> Option<PathBuf> {
+    let name = src.file_name()?.to_string_lossy().into_owned();
+    if std::fs::create_dir_all(qdir).is_err() {
+        return None;
+    }
+    let dst = qdir.join(&name);
+    if std::fs::rename(src, &dst).is_err() {
+        return None;
+    }
+    let _ = std::fs::write(qdir.join(format!("{name}.reason")), reason.as_bytes());
+    QUARANTINED.fetch_add(1, Ordering::Relaxed);
+    eprintln!("warning: quarantined corrupt store file to {dst:?} ({reason})");
+    Some(dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The injector is process-global; unit tests here and the chaos
+    /// suite each serialize around their own lock, and every test clears
+    /// on exit.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    struct Armed;
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            clear();
+        }
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("eva-cim-faultio-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn disarmed_io_is_a_passthrough() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let dir = tmp("pass");
+        std::fs::remove_dir_all(&dir).ok();
+        fs().create_dir_all(&dir).unwrap();
+        let p = dir.join("x.txt");
+        fs().write(&p, b"hello").unwrap();
+        assert_eq!(fs().read_to_string(&p).unwrap(), "hello");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nth_spec_fails_exactly_the_nth_matching_op() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let dir = tmp("nth");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let guard = Armed;
+        inject(FaultPlan::new().with(FaultSpec::nth(
+            Some(IoOp::Write),
+            "eva-cim-faultio-nth",
+            2,
+            FaultKind::Enospc,
+        )));
+        let p = dir.join("x.txt");
+        assert!(fs().write(&p, b"one").is_ok());
+        let err = fs().write(&p, b"two").unwrap_err();
+        assert!(err.to_string().contains("ENOSPC"));
+        assert!(fs().write(&p, b"three").is_ok());
+        drop(guard);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn short_write_tears_the_payload() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let dir = tmp("short");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let guard = Armed;
+        inject(FaultPlan::new().with(FaultSpec::nth(
+            Some(IoOp::Write),
+            "eva-cim-faultio-short",
+            1,
+            FaultKind::ShortWrite,
+        )));
+        let p = dir.join("x.txt");
+        assert!(fs().write(&p, b"0123456789").is_err());
+        drop(guard);
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "01234");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retries_recover_transient_faults_and_count_them() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let dir = tmp("retry");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let guard = Armed;
+        inject(
+            FaultPlan::new()
+                .with(FaultSpec::nth(
+                    Some(IoOp::Write),
+                    "eva-cim-faultio-retry",
+                    1,
+                    FaultKind::Eintr,
+                ))
+                .with(FaultSpec::nth(
+                    Some(IoOp::Write),
+                    "eva-cim-faultio-retry",
+                    2,
+                    FaultKind::Eagain,
+                )),
+        );
+        let before = counters();
+        let p = dir.join("x.txt");
+        with_retries("test write", || fs().write(&p, b"ok")).unwrap();
+        let delta = counters().since(&before);
+        assert_eq!(delta.retries, 2, "both transient faults were retried");
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "ok");
+        drop(guard);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hard_faults_are_not_retried() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let dir = tmp("hard");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let guard = Armed;
+        inject(FaultPlan::new().with(FaultSpec::every(
+            Some(IoOp::Write),
+            "eva-cim-faultio-hard",
+            FaultKind::Enospc,
+        )));
+        let before = counters();
+        let p = dir.join("x.txt");
+        assert!(with_retries("test write", || fs().write(&p, b"x")).is_err());
+        assert_eq!(counters().since(&before).retries, 0);
+        drop(guard);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eintr_storm_is_deterministic_per_seed() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let schedule = |seed: u64| -> Vec<bool> {
+            let mut plan = FaultPlan::new().with_eintr_storm(seed, 3, "storm");
+            (0..32)
+                .map(|_| plan.decide(IoOp::Write, Path::new("storm/x")).is_some())
+                .collect()
+        };
+        assert_eq!(schedule(7), schedule(7), "same seed, same schedule");
+        assert_ne!(schedule(7), schedule(8), "different seed, different walk");
+        assert!(schedule(7).iter().any(|&b| b), "a storm injects something");
+        assert!(!schedule(7).iter().all(|&b| b), "but not everything");
+    }
+
+    #[test]
+    fn quarantine_is_idempotent_per_content() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let dir = tmp("quarantine");
+        std::fs::remove_dir_all(&dir).ok();
+        let before = counters();
+        let name = format!("bad-{}.line", content_tag(b"garbage"));
+        assert!(quarantine_bytes(&dir, &name, b"garbage", "parse error"));
+        assert!(
+            !quarantine_bytes(&dir, &name, b"garbage", "parse error"),
+            "second sighting of the same entry is not re-quarantined"
+        );
+        assert_eq!(counters().since(&before).quarantined, 1);
+        assert_eq!(std::fs::read_to_string(dir.join(&name)).unwrap(), "garbage");
+        assert!(dir.join(format!("{name}.reason")).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_move_relocates_the_corrupt_file() {
+        let _g = lock_unpoisoned(&TEST_LOCK);
+        let dir = tmp("qmove");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(dir.join("traces")).unwrap();
+        let src = dir.join("traces/trace-abc.bin");
+        std::fs::write(&src, b"not a trace").unwrap();
+        let qdir = dir.join("quarantine");
+        let dst = quarantine_move(&qdir, &src, "bad magic").unwrap();
+        assert!(!src.exists(), "the corrupt file no longer satisfies probes");
+        assert_eq!(std::fs::read_to_string(dst).unwrap(), "not a trace");
+        assert!(qdir.join("trace-abc.bin.reason").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

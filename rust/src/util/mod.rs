@@ -3,6 +3,7 @@
 //! Everything here exists because the offline build environment provides no
 //! third-party crates beyond the `xla` closure — see DESIGN.md §3.
 
+pub mod faultio;
 pub mod json;
 pub mod proptest;
 pub mod rng;

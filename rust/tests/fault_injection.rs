@@ -1,0 +1,401 @@
+//! The chaos suite: deterministic I/O fault schedules against the sweep
+//! stores (PR "fault-domain hardening" acceptance harness).
+//!
+//! Contract under test — for every seeded fault schedule, a sweep either
+//! completes **byte-identical** to the fault-free run or fails with a
+//! typed error; never a panic, never a wedge, never a wrong cached row.
+//! Transient faults (`EINTR`/`EAGAIN`) are absorbed by retries and
+//! surface only as ledger counters; hard faults on cache writes degrade
+//! the sweep to in-memory operation (`degraded_mode`) without changing
+//! any result byte; corrupt store entries are quarantined exactly once
+//! and can never re-poison a warm resume.
+//!
+//! The injector ([`eva_cim::util::faultio`]) is process-global, so every
+//! test here serializes on one lock and disarms via a drop guard — the
+//! same discipline as the faultio unit tests.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use eva_cim::analyzer::LocalityRule;
+use eva_cim::config::SystemConfig;
+use eva_cim::coordinator::{
+    cross, persist, Coordinator, SweepOptions, SweepPoint, SweepRow, SweepStats,
+};
+use eva_cim::runtime::NativeBackend;
+use eva_cim::util::faultio::{self, FaultKind, FaultPlan, FaultSpec, IoOp};
+use eva_cim::util::lock_unpoisoned;
+
+/// Serializes every test in this binary around the process-global
+/// injector (and the process-global fault telemetry the ledger samples).
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Disarms the injector even when an assertion panics mid-test.
+struct Armed;
+impl Drop for Armed {
+    fn drop(&mut self) {
+        faultio::clear();
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("eva-cim-chaos-{tag}-{}", std::process::id()))
+}
+
+fn opts(dir: Option<PathBuf>, workers: usize) -> SweepOptions {
+    SweepOptions {
+        scale: 2,
+        workers,
+        cache_dir: dir,
+        resume: true,
+        ..Default::default()
+    }
+}
+
+fn points() -> Vec<SweepPoint> {
+    cross(
+        &["lcs", "km"],
+        &[SystemConfig::preset("c1").unwrap()],
+        LocalityRule::AnyCache,
+    )
+}
+
+fn run(o: SweepOptions) -> (Vec<SweepRow>, SweepStats) {
+    Coordinator::new(o)
+        .run_sweep_with_stats(&points(), &mut NativeBackend)
+        .expect("sweep completed")
+}
+
+fn dump_rows(rows: &[SweepRow]) -> Vec<String> {
+    rows.iter().map(|r| persist::row_to_json(r).dump()).collect()
+}
+
+/// The fault-free reference rows (no cache directory at all).
+fn plain_rows() -> Vec<String> {
+    dump_rows(&run(opts(None, 1)).0)
+}
+
+fn clean(dir: &Path) {
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn fault_free_sweeps_are_byte_identical_with_a_clean_fault_ledger() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let dir = tmp_dir("clean");
+    clean(&dir);
+    let plain = plain_rows();
+
+    let (cold, cold_stats) = run(opts(Some(dir.clone()), 2));
+    assert_eq!(dump_rows(&cold), plain);
+    assert_eq!(cold_stats.io_retries, 0, "fault-free runs never retry");
+    assert_eq!(cold_stats.entries_quarantined, 0);
+    assert!(!cold_stats.degraded_mode);
+
+    let (warm, warm_stats) = run(opts(Some(dir.clone()), 2));
+    assert_eq!(dump_rows(&warm), plain);
+    assert_eq!(warm_stats.simulator_runs, 0, "warm resume simulates nothing");
+    assert_eq!(warm_stats.io_retries, 0);
+    assert_eq!(warm_stats.entries_quarantined, 0);
+    assert!(!warm_stats.degraded_mode);
+    assert!(
+        !dir.join("quarantine").exists(),
+        "a clean run must not create the quarantine dir"
+    );
+    clean(&dir);
+}
+
+#[test]
+fn transient_faults_are_retried_to_a_byte_identical_result() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let dir = tmp_dir("transient");
+    clean(&dir);
+    let plain = plain_rows();
+
+    let results = dir.join("results.jsonl").display().to_string();
+    let artifacts = dir.join("analysis/artifacts.jsonl").display().to_string();
+    let guard = Armed;
+    faultio::inject(
+        FaultPlan::new()
+            // results.jsonl sees (at least) open, load-read, two appends;
+            // fault the first three, one transient kind each
+            .with(FaultSpec::nth(None, &results, 1, FaultKind::Eintr))
+            .with(FaultSpec::nth(None, &results, 2, FaultKind::Eagain))
+            .with(FaultSpec::nth(None, &results, 3, FaultKind::Eintr))
+            .with(FaultSpec::nth(None, &artifacts, 1, FaultKind::Eintr)),
+    );
+    let (rows, stats) = run(opts(Some(dir.clone()), 1));
+    drop(guard);
+
+    assert_eq!(dump_rows(&rows), plain, "retried faults change no byte");
+    assert_eq!(stats.io_retries, 4, "each injected transient = one retry");
+    assert_eq!(stats.entries_quarantined, 0);
+    assert!(!stats.degraded_mode, "recovered faults do not degrade");
+
+    // and the cache the faulted run wrote is a perfectly good warm cache
+    let (warm, warm_stats) = run(opts(Some(dir.clone()), 1));
+    assert_eq!(dump_rows(&warm), plain);
+    assert_eq!(warm_stats.simulator_runs, 0);
+    assert_eq!(warm_stats.io_retries, 0);
+    clean(&dir);
+}
+
+#[test]
+fn disk_full_on_result_appends_degrades_without_changing_results() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let dir = tmp_dir("enospc");
+    clean(&dir);
+    let plain = plain_rows();
+
+    let results = dir.join("results.jsonl").display().to_string();
+    let guard = Armed;
+    faultio::inject(FaultPlan::new().with(FaultSpec::every(
+        Some(IoOp::Write),
+        &results,
+        FaultKind::Enospc,
+    )));
+    let (rows, stats) = run(opts(Some(dir.clone()), 2));
+    drop(guard);
+
+    assert_eq!(dump_rows(&rows), plain, "a full disk loses no result");
+    assert!(stats.degraded_mode, "unappendable cache flags degraded mode");
+    assert_eq!(stats.io_retries, 0, "ENOSPC is hard, never retried");
+
+    // recovery: with the fault gone the same directory works again
+    let (rows2, stats2) = run(opts(Some(dir.clone()), 2));
+    assert_eq!(dump_rows(&rows2), plain);
+    assert!(!stats2.degraded_mode);
+    clean(&dir);
+}
+
+#[test]
+fn every_seeded_fault_position_is_identical_or_typed_error_never_panic() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let plain = plain_rows();
+
+    // walk a hard fault across the first N store operations of the sweep,
+    // for each hard kind: whatever lands, the run must either produce the
+    // reference bytes or a typed error — and after clearing the fault the
+    // same directory must always recover to the reference bytes
+    for kind in [FaultKind::Enospc, FaultKind::ShortWrite, FaultKind::Eacces] {
+        for n in 1..=12u64 {
+            let dir = tmp_dir(&format!("walk-{kind:?}-{n}"));
+            clean(&dir);
+            let marker = dir.display().to_string();
+            let guard = Armed;
+            faultio::inject(
+                FaultPlan::new().with(FaultSpec::nth(None, &marker, n, kind)),
+            );
+            let outcome = Coordinator::new(opts(Some(dir.clone()), 1))
+                .run_sweep_with_stats(&points(), &mut NativeBackend);
+            drop(guard);
+            match outcome {
+                Ok((rows, _)) => assert_eq!(
+                    dump_rows(&rows),
+                    plain,
+                    "fault {kind:?} at op {n}: completed runs must be \
+                     byte-identical"
+                ),
+                Err(e) => {
+                    // a typed error is acceptable; a panic would have
+                    // aborted the test before this formats
+                    let _ = format!("{e:#}");
+                }
+            }
+            // recovery on the possibly-torn directory: always clean
+            let (rows, stats) = run(opts(Some(dir.clone()), 1));
+            assert_eq!(
+                dump_rows(&rows),
+                plain,
+                "fault {kind:?} at op {n}: recovery must be byte-identical"
+            );
+            assert!(
+                !stats.degraded_mode,
+                "fault {kind:?} at op {n}: recovery run must not degrade"
+            );
+            clean(&dir);
+        }
+    }
+}
+
+#[test]
+fn corrupt_result_lines_quarantine_once_at_every_job_count() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let dir = tmp_dir("corrupt-results");
+    clean(&dir);
+    let plain = plain_rows();
+    run(opts(Some(dir.clone()), 1)); // cold populate
+
+    // three flavors of poison: raw garbage, a torn append, a line whose
+    // row payload has the wrong shape
+    let path = dir.join("results.jsonl");
+    let mut text = std::fs::read_to_string(&path).unwrap();
+    text.push_str("garbage not json\n");
+    text.push_str("{\"key\":\"k-torn\",\"row\":{\"bench\"\n");
+    text.push_str("{\"key\":\"zzzz\",\"row\":42}\n");
+    std::fs::write(&path, text).unwrap();
+
+    for (i, jobs) in [1usize, 2, 4].into_iter().enumerate() {
+        let (rows, stats) = run(opts(Some(dir.clone()), jobs));
+        assert_eq!(dump_rows(&rows), plain, "jobs={jobs}");
+        assert_eq!(stats.simulator_runs, 0, "good rows still serve warm");
+        if i == 0 {
+            assert_eq!(
+                stats.entries_quarantined, 3,
+                "first sighting quarantines each bad line once"
+            );
+        } else {
+            assert_eq!(
+                stats.entries_quarantined, 0,
+                "jobs={jobs}: already-quarantined lines are not re-counted"
+            );
+        }
+    }
+    let qdir = dir.join("quarantine");
+    let quarantined: Vec<_> = std::fs::read_dir(&qdir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    assert_eq!(
+        quarantined.iter().filter(|n| n.ends_with(".reason")).count(),
+        3,
+        "every quarantined line has a reason file: {quarantined:?}"
+    );
+    clean(&dir);
+}
+
+#[test]
+fn corrupt_artifact_lines_quarantine_and_never_panic() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let dir = tmp_dir("corrupt-artifacts");
+    clean(&dir);
+    let plain = plain_rows();
+    run(opts(Some(dir.clone()), 1)); // cold populate
+
+    // poison a *live* artifact key (a random key would be filtered out
+    // before parsing): reuse the last line's key with a wrong-shape body
+    let path = dir.join("analysis/artifacts.jsonl");
+    let mut text = std::fs::read_to_string(&path).unwrap();
+    let last = text.lines().last().unwrap();
+    let tail = &last[last.rfind("\"key\":\"").unwrap() + 7..];
+    let key = &tail[..tail.find('"').unwrap()];
+    text.push_str(&format!("{{\"art\":12,\"key\":\"{key}\"}}\n"));
+    std::fs::write(&path, text).unwrap();
+    // force the stage-factored artifact path: recompute rows from traces
+    std::fs::remove_file(dir.join("results.jsonl")).unwrap();
+
+    let (rows, stats) = run(opts(Some(dir.clone()), 2));
+    assert_eq!(dump_rows(&rows), plain, "poisoned artifacts change no byte");
+    assert_eq!(stats.entries_quarantined, 1);
+
+    // the second pass sees the same bad line but never re-counts it
+    std::fs::remove_file(dir.join("results.jsonl")).unwrap();
+    let (rows2, stats2) = run(opts(Some(dir.clone()), 2));
+    assert_eq!(dump_rows(&rows2), plain);
+    assert_eq!(stats2.entries_quarantined, 0);
+    clean(&dir);
+}
+
+#[test]
+fn corrupt_trace_spills_quarantine_resimulate_and_republish() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let dir = tmp_dir("corrupt-trace");
+    clean(&dir);
+    let plain = plain_rows();
+    run(opts(Some(dir.clone()), 1)); // cold populate
+
+    let traces = dir.join("traces");
+    let spills: Vec<PathBuf> = std::fs::read_dir(&traces)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+        .collect();
+    assert!(!spills.is_empty(), "the cold sweep spilled traces");
+    for p in &spills {
+        std::fs::write(p, b"definitely not a v3 trace stream").unwrap();
+    }
+    // force the replay path: drop rows and artifacts, keep (bad) traces
+    std::fs::remove_file(dir.join("results.jsonl")).unwrap();
+    std::fs::remove_dir_all(dir.join("analysis")).unwrap();
+
+    let (rows, stats) = run(opts(Some(dir.clone()), 1));
+    assert_eq!(dump_rows(&rows), plain, "corrupt spills are misses, not lies");
+    assert!(stats.simulator_runs > 0, "the miss re-simulates");
+    assert!(stats.entries_quarantined as usize >= spills.len());
+    let qdir = dir.join("quarantine");
+    assert!(
+        std::fs::read_dir(&qdir).unwrap().any(|e| {
+            e.unwrap().file_name().to_string_lossy().starts_with("trace-")
+        }),
+        "the corrupt spill was preserved under quarantine/"
+    );
+
+    // the re-simulated traces were re-published: a second stage-factored
+    // pass replays from disk without a single simulator run
+    std::fs::remove_file(dir.join("results.jsonl")).unwrap();
+    std::fs::remove_dir_all(dir.join("analysis")).unwrap();
+    let (rows2, stats2) = run(opts(Some(dir.clone()), 1));
+    assert_eq!(dump_rows(&rows2), plain);
+    assert_eq!(
+        stats2.simulator_runs, 0,
+        "quarantined spills never re-poison a warm resume"
+    );
+    assert!(stats2.trace_disk_hits > 0, "replay served from the republished spill");
+    assert_eq!(stats2.entries_quarantined, 0);
+    clean(&dir);
+}
+
+#[test]
+fn short_writes_on_spills_degrade_and_never_publish_torn_traces() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    let dir = tmp_dir("short-spill");
+    clean(&dir);
+    let plain = plain_rows();
+
+    let guard = Armed;
+    // the spill tmp + final paths both contain "trace-"; results.jsonl
+    // and artifacts.jsonl do not, so only spill writes tear
+    faultio::inject(FaultPlan::new().with(FaultSpec::every(
+        Some(IoOp::Write),
+        "trace-",
+        FaultKind::ShortWrite,
+    )));
+    let (rows, stats) = run(opts(Some(dir.clone()), 1));
+    drop(guard);
+
+    assert_eq!(dump_rows(&rows), plain, "torn spills change no result byte");
+    assert!(stats.degraded_mode, "failed spill finalization flags degraded");
+    let published: Vec<_> = std::fs::read_dir(dir.join("traces"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+        .collect();
+    assert!(
+        published.is_empty(),
+        "a torn spill must never be atomically published: {published:?}"
+    );
+
+    // results.jsonl was unaffected: the warm resume is clean and full
+    let (rows2, stats2) = run(opts(Some(dir.clone()), 1));
+    assert_eq!(dump_rows(&rows2), plain);
+    assert_eq!(stats2.simulator_runs, 0);
+    assert!(!stats2.degraded_mode);
+    clean(&dir);
+}
+
+#[test]
+fn unwritable_cache_root_degrades_to_in_memory_and_still_answers() {
+    let _g = lock_unpoisoned(&FAULT_LOCK);
+    // a regular *file* where the cache dir should be: create_dir_all
+    // fails even for root (unlike chmod, which root ignores)
+    let dir = tmp_dir("notadir");
+    clean(&dir);
+    std::fs::write(&dir, b"i am a file, not a directory").unwrap();
+    let plain = plain_rows();
+
+    let (rows, stats) = run(opts(Some(dir.clone()), 2));
+    assert_eq!(dump_rows(&rows), plain, "degraded mode serves full results");
+    assert!(stats.degraded_mode, "unusable cache root flags degraded mode");
+    assert_eq!(stats.rows_computed, points().len());
+    std::fs::remove_file(&dir).ok();
+}

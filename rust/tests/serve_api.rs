@@ -3,10 +3,15 @@
 //! requests from the coordinator caches with zero new simulations
 //! (ledger-verified), N concurrent identical requests share exactly one
 //! computation, and errors come back as the documented envelope without
-//! destabilising the server.
+//! destabilising the server.  The fault-domain probes at the bottom pin
+//! the hardening contract: a request past `--request-timeout` gets a
+//! `504` and frees its worker, a stalled client is shed by the socket
+//! timeout without holding a slot, and a poisoned cache surfaces its
+//! quarantine counters through the ledger header and `/stats`.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use eva_cim::api::{BackendSel, Evaluation};
 use eva_cim::config::Technology;
@@ -19,6 +24,7 @@ fn test_server() -> ServerHandle {
         http_workers: 4,
         queue: 16,
         base: Evaluation::new().scale(2).jobs(2).backend(BackendSel::Native),
+        ..ServeOptions::default()
     };
     Server::bind(opts).expect("bind").spawn().expect("spawn")
 }
@@ -218,4 +224,123 @@ fn errors_use_the_envelope_and_leave_the_server_healthy() {
     assert!(health.body.contains("\"status\":\"ok\""));
 
     server.shutdown();
+}
+
+#[test]
+fn a_request_past_the_deadline_gets_a_504_and_the_worker_is_freed() {
+    // one worker and a deadline no computation can beat: the 504 path
+    // must hand the worker back while the evaluation finishes detached
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        http_workers: 1,
+        queue: 16,
+        request_timeout: Some(Duration::from_nanos(1)),
+        base: Evaluation::new().scale(2).jobs(2).backend(BackendSel::Native),
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(opts).expect("bind").spawn().expect("spawn");
+    let addr = server.addr();
+
+    let r = post(addr, "/evaluate", r#"{"bench":"lcs","config":"c1","tech":"sram"}"#);
+    assert_eq!(r.status, 504, "{}", r.body);
+    assert!(r.body.starts_with("{\"error\":{\"code\":504,"), "{}", r.body);
+    assert!(r.body.contains("request-timeout"), "{}", r.body);
+
+    // the lone worker is free again — non-evaluating routes answer at
+    // once (they never go through the deadline path)
+    let health = get(addr, "/health");
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains("\"status\":\"ok\""));
+    assert_eq!(get(addr, "/stats").status, 200);
+
+    server.shutdown();
+}
+
+#[test]
+fn a_stalled_client_is_disconnected_without_holding_the_worker_slot() {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        http_workers: 1,
+        queue: 16,
+        socket_timeout: Duration::from_millis(200),
+        base: Evaluation::new().scale(2).jobs(2).backend(BackendSel::Native),
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(opts).expect("bind").spawn().expect("spawn");
+    let addr = server.addr();
+
+    // half a request, then silence: the lone worker blocks reading it
+    let mut stalled = TcpStream::connect(addr).expect("connect");
+    stalled.write_all(b"POST /evaluate HTTP/1.1\r\n").expect("send partial");
+    std::thread::sleep(Duration::from_millis(50));
+
+    // the socket timeout must shed the stalled client so this is served
+    let health = get(addr, "/health");
+    assert_eq!(health.status, 200, "{}", health.body);
+
+    // and the server closed the stalled connection (a 400 envelope may
+    // arrive first; what matters is reaching EOF, not what precedes it)
+    stalled
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .expect("read timeout");
+    let mut drained = Vec::new();
+    stalled
+        .read_to_end(&mut drained)
+        .expect("server closes the stalled connection");
+
+    server.shutdown();
+}
+
+#[test]
+fn a_poisoned_cache_surfaces_quarantine_counters_through_stats() {
+    let dir = std::env::temp_dir().join(format!(
+        "eva-cim-serve-quarantine-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("results.jsonl"), "garbage not json\n").unwrap();
+
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        http_workers: 2,
+        queue: 16,
+        base: Evaluation::new()
+            .scale(2)
+            .jobs(2)
+            .backend(BackendSel::Native)
+            .cache_dir(&dir)
+            .resume(true),
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(opts).expect("bind").spawn().expect("spawn");
+    let addr = server.addr();
+
+    // the poisoned line quarantines on the resume load; the request
+    // still answers 200 and its ledger reports the quarantine
+    let r = post(addr, "/evaluate", r#"{"bench":"lcs","config":"c1","tech":"sram"}"#);
+    assert_eq!(r.status, 200, "{}", r.body);
+    let ledger = r.header("X-Eva-Ledger").expect("ledger header");
+    assert!(
+        ledger.contains("\"entries_quarantined\":1"),
+        "quarantine surfaces in the ledger: {ledger}"
+    );
+    assert!(ledger.contains("\"degraded_mode\":false"), "{ledger}");
+
+    // quarantine is content-addressed, so a second load of the same
+    // poisoned file counts nothing new
+    let r2 = post(addr, "/evaluate", r#"{"bench":"km","config":"c1","tech":"sram"}"#);
+    assert_eq!(r2.status, 200, "{}", r2.body);
+    let ledger2 = r2.header("X-Eva-Ledger").expect("ledger header");
+    assert!(ledger2.contains("\"entries_quarantined\":0"), "{ledger2}");
+
+    // ... and the cumulative /stats ledger carries the fault counters
+    let stats = get(addr, "/stats");
+    assert_eq!(stats.status, 200);
+    assert_eq!(stat_counter(&stats.body, "entries_quarantined"), Some(1));
+    assert_eq!(stat_counter(&stats.body, "io_retries"), Some(0));
+    assert_eq!(stat_counter(&stats.body, "degraded_mode"), Some(0));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
 }
